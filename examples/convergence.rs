@@ -1,0 +1,27 @@
+//! Convergence of the randomized policies (Figure 11): fairness index as
+//! a function of the number of batches, for MMF and FASTPF on a four
+//! tenant Sales workload. The paper observes convergence at ~15-25
+//! batches.
+//!
+//! Run: `cargo run --release --example convergence`
+
+use robus::experiments::runner::{convergence_series, run_experiment};
+use robus::experiments::setups;
+
+fn main() {
+    let setup = setups::convergence(); // 4 tenants, 50 batches
+    println!("=== Figure 11: fairness index vs batches (4 tenants, 50 batches) ===\n");
+    let out = run_experiment(&setup);
+    let baseline = &out.runs[0];
+    let mmf = out.run_for("MMF").unwrap();
+    let pf = out.run_for("FASTPF").unwrap();
+    let s_mmf = convergence_series(mmf, baseline, 2);
+    let s_pf = convergence_series(pf, baseline, 2);
+    println!("{:>8} {:>8} {:>8}", "batches", "MMF", "FASTPF");
+    for ((b, jm), (_, jp)) in s_mmf.iter().zip(&s_pf) {
+        let bar = "*".repeat((jp * 40.0) as usize);
+        println!("{b:>8} {jm:>8.3} {jp:>8.3}  {bar}");
+    }
+    let last = s_pf.last().unwrap().1;
+    println!("\nfinal FASTPF fairness index: {last:.3}");
+}

@@ -1,0 +1,28 @@
+//! Domain scenario: the effect of data sharing among tenants
+//! (§5.3.1, Figures 5/6, Tables 15-22) at reduced scale.
+//!
+//! Run: `cargo run --release --example data_sharing [-- --full]`
+
+use robus::experiments::report::appendix_table;
+use robus::experiments::runner::run_experiment;
+use robus::experiments::setups;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    println!("=== Effect of data sharing (Sales workload, G1..G4) ===\n");
+    for setup in setups::data_sharing_sales() {
+        let setup = if full { setup } else { setup.quick(10) };
+        let out = run_experiment(&setup);
+        println!("{}", appendix_table(&out));
+    }
+    println!("=== Effect of data sharing (mixed TPC-H + Sales, G1..G4) ===\n");
+    for setup in setups::data_sharing_mixed() {
+        let setup = if full { setup } else { setup.quick(10) };
+        let out = run_experiment(&setup);
+        println!("{}", appendix_table(&out));
+    }
+    println!("Expected shape (paper Figures 5/6): throughput falls with");
+    println!("access heterogeneity; STATIC trails on every metric; OPTP");
+    println!("tops throughput but drops fairness as sharing increases;");
+    println!("MMF/FASTPF hold both.");
+}

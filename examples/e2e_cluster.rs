@@ -1,0 +1,86 @@
+//! End-to-end driver (the DESIGN.md §4 validation run): the full system
+//! on a real small workload — mixed TPC-H + Sales tenants, batched ROBUS
+//! coordination, all four §5.3 policies plus the compiled
+//! (JAX/Pallas → HLO → PJRT) FASTPF solver if artifacts are present —
+//! reporting the paper's headline metrics (throughput + fairness index)
+//! and the per-batch solve latencies. Results are recorded in
+//! EXPERIMENTS.md.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_cluster`
+
+use robus::alloc::{Policy, PolicyKind};
+use robus::coordinator::metrics::MetricsSummary;
+use robus::experiments::runner::run_with_policies;
+use robus::experiments::{setups, ExperimentSetup};
+use robus::runtime::solvers::{AcceleratedFastPf, CompiledSolvers};
+
+fn main() {
+    // Mixed G3: two TPC-H tenants + two Sales tenants with distinct
+    // skews — the contention-heavy cell of Table 8.
+    let setup: ExperimentSetup = setups::data_sharing_mixed().remove(2);
+    println!("=== ROBUS end-to-end: {} ===", setup.name);
+    println!(
+        "{} tenants, {} batches x {}s, 38 candidate views, 6 GB cache\n",
+        setup.tenant_specs.len(),
+        setup.n_batches,
+        setup.batch_secs
+    );
+
+    let mut policies: Vec<Box<dyn Policy>> = vec![
+        PolicyKind::Static.build(),
+        PolicyKind::Mmf.build(),
+        PolicyKind::FastPf.build(),
+        PolicyKind::Optp.build(),
+    ];
+    match CompiledSolvers::open_default() {
+        Ok(s) => {
+            println!("(artifacts found: including the compiled FASTPF-XLA solver)\n");
+            policies.push(Box::new(AcceleratedFastPf(s)));
+        }
+        Err(e) => println!("(no artifacts — native solvers only: {e})\n"),
+    }
+
+    let out = run_with_policies(&setup, &policies);
+
+    println!("{}", MetricsSummary::header());
+    for s in &out.summaries {
+        println!("{}", s.row());
+    }
+
+    println!("\nper-policy view-selection latency (host wall-clock):");
+    for run in &out.runs {
+        let solves: Vec<f64> = run.batches.iter().map(|b| b.solve_secs * 1e3).collect();
+        let mean = solves.iter().sum::<f64>() / solves.len().max(1) as f64;
+        let max = solves.iter().cloned().fold(0.0, f64::max);
+        println!("  {:<12} mean {:>8.2} ms   max {:>8.2} ms", run.policy, mean, max);
+    }
+
+    println!("\nqueueing metrics (§5.2):");
+    for run in &out.runs {
+        println!(
+            "  {:<12} mean wait {:>8.1} s   mean flow {:>8.1} s   wait-fairness {:.2}",
+            run.policy,
+            run.mean_wait(),
+            robus::coordinator::metrics::mean_flow_time(run),
+            robus::coordinator::metrics::wait_time_fairness(run),
+        );
+    }
+
+    println!("\nper-tenant mean speedups vs STATIC:");
+    for run in out.runs.iter().skip(1) {
+        let x = robus::coordinator::metrics::per_tenant_speedups(run, &out.runs[0]);
+        let xs: Vec<String> = x.iter().map(|v| format!("{v:.2}")).collect();
+        println!("  {:<12} [{}]", run.policy, xs.join(", "));
+    }
+
+    // Sanity gates for the recorded run (EXPERIMENTS.md).
+    let stat = &out.summaries[0];
+    let pf = out
+        .summaries
+        .iter()
+        .find(|s| s.policy == "FASTPF")
+        .unwrap();
+    assert!(pf.throughput_per_min > stat.throughput_per_min, "FASTPF must beat STATIC");
+    assert!(pf.hit_ratio > stat.hit_ratio);
+    println!("\nOK: shared fair policies dominate STATIC end-to-end.");
+}

@@ -1,0 +1,48 @@
+use robus::alloc::config_space::ConfigSpace;
+use robus::alloc::fastpf::FastPf;
+use robus::alloc::mmf::MaxMinFair;
+use robus::domain::tenant::TenantSet;
+use robus::domain::utility::BatchUtilities;
+use robus::solver::gradient::GradientConfig;
+use robus::util::rng::Pcg64;
+use robus::workload::generator::WorkloadGenerator;
+use robus::workload::spec::{AccessSpec, TenantSpec, WindowSpec};
+use robus::workload::universe::Universe;
+use std::time::Instant;
+
+fn main() {
+    let u = Universe::mixed();
+    let specs = vec![
+        TenantSpec::new(AccessSpec::h1(), 20.0),
+        TenantSpec::new(AccessSpec::h1(), 20.0),
+        TenantSpec::new(AccessSpec::g(1), 20.0).with_window(WindowSpec { mean_secs: 120.0, std_secs: 30.0, candidates: 8 }),
+        TenantSpec::new(AccessSpec::g(2), 20.0).with_window(WindowSpec { mean_secs: 120.0, std_secs: 30.0, candidates: 8 }),
+    ];
+    let mut gen = WorkloadGenerator::new(specs, &u, 42);
+    let ts = TenantSet::equal(4);
+    // accumulate several batches to find a slow one
+    let mut prev = 0.0;
+    for b in 1..=12 {
+        let t_end = b as f64 * 40.0;
+        let queries = gen.generate_until(t_end, &u);
+        let _ = prev; prev = t_end;
+        if queries.is_empty() { continue; }
+        let t0 = Instant::now();
+        let batch = BatchUtilities::build(&ts, &u.views, 6.0 * (1u64<<30) as f64, &queries, None);
+        let t_build = t0.elapsed();
+        let t1 = Instant::now();
+        let mut rng = Pcg64::new(7);
+        let space = ConfigSpace::pruned(&batch, 50, &mut rng);
+        let t_prune = t1.elapsed();
+        let t2 = Instant::now();
+        let _x = FastPf::solve_over(&space, &batch, &GradientConfig::default());
+        let t_pf = t2.elapsed();
+        let t3 = Instant::now();
+        let _m = MaxMinFair::solve_over(&space, &batch);
+        let t_mmf = t3.elapsed();
+        println!(
+            "batch {b:>2}: q={:<3} classes={:<3} space={:<3} build={:>8.2?} prune={:>8.2?} pf={:>8.2?} mmf={:>8.2?}",
+            queries.len(), batch.classes.len(), space.len(), t_build, t_prune, t_pf, t_mmf
+        );
+    }
+}

@@ -1,0 +1,7 @@
+"""Build-time compile path for ROBUS (never imported at runtime).
+
+Layer 2 (JAX solver graphs) lives in :mod:`compile.model`; Layer 1
+(Pallas kernels) in :mod:`compile.kernels`; AOT lowering to HLO text in
+:mod:`compile.aot`. The Rust coordinator loads the emitted
+``artifacts/*.hlo.txt`` via PJRT and never touches Python.
+"""

@@ -1,0 +1,88 @@
+"""AOT lowering: jit → StableHLO → XlaComputation → **HLO text**.
+
+HLO text (NOT ``lowered.compiler_ir("hlo").as_serialized_hlo_module_proto()``)
+is the interchange format: jax ≥ 0.5 emits protos with 64-bit instruction
+ids which the runtime's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+Emits one ``<entry>.hlo.txt`` per entry point plus a ``manifest.json``
+recording shapes so the Rust runtime can validate its marshalling.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax lowering to XLA HLO text via StableHLO."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(name: str):
+    fn = model.ENTRY_POINTS[name]
+    args = model.example_args()[name]
+    return jax.jit(fn).lower(*args)
+
+
+def emit(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"entries": {}}
+    for name in model.ENTRY_POINTS:
+        lowered = lower_entry(name)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        args = model.example_args()[name]
+        manifest["entries"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [list(a.shape) for a in args],
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+            "bytes": len(text),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+    manifest["shapes"] = {
+        "NT": 16,
+        "NC": 64,
+        "NQ": 128,
+        "NV": 64,
+        "LS": 8,
+        "PF_ITERS": model.PF_ITERS,
+        "MMF_ITERS": model.MMF_ITERS,
+        "MMF_EPS": model.MMF_EPS,
+    }
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {mpath}")
+    return manifest
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument(
+        "--out", default=None, help="legacy single-file alias (ignored name, uses dir)"
+    )
+    args = parser.parse_args()
+    out_dir = args.out_dir
+    if args.out is not None:
+        out_dir = os.path.dirname(args.out) or "."
+    emit(out_dir)
+
+
+if __name__ == "__main__":
+    main()

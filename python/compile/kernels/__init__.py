@@ -1,0 +1,21 @@
+"""Layer-1 Pallas kernels (interpret=True for CPU-PJRT execution).
+
+Fixed padded shapes shared by every kernel, the L2 graphs, and the Rust
+runtime marshalling code (rust/src/runtime/):
+
+- ``NT`` = 16 tenants,
+- ``NC`` = 64 candidate configurations (the pruned space of 4.3),
+- ``NQ`` = 128 aggregated query classes,
+- ``NV`` = 64 candidate views,
+- ``LS`` = 8 geometric line-search step candidates per PF iteration,
+- ``KW`` = 64 batched weight vectors for welfare scoring.
+"""
+
+NT = 16
+NC = 64
+NQ = 128
+NV = 64
+LS = 8
+KW = 64
+
+EPS = 1e-9

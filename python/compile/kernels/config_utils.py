@@ -1,0 +1,52 @@
+"""Pallas kernel: batched evaluation of the scaled-utility matrix
+V[i, S] for a whole batch of query classes x candidate configurations —
+the all-or-nothing utility model of §5.1/[9] as two MXU matmuls:
+
+  sat = (needs @ configs == need_count)   # [NQ, NC] coverage test
+  U   = qtenant @ (sat * qutil)           # [NT, NC] tenant aggregation
+  V   = U / U*                            # scaled
+
+This is the utility-estimation hot spot of Figure 2 step 2: one kernel
+call evaluates every (tenant, configuration) pair at once, replacing the
+nested per-config loops a host implementation would run.
+
+VMEM footprint: needs (128x64x4 B = 32 KiB) + configs (16 KiB) +
+intermediates — comfortably below the ~16 MiB VMEM budget in one tile,
+so a single BlockSpec-less invocation is the right schedule; the two
+matmuls are (128x64)x(64x64) and (16x128)x(128x64) MXU contractions.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import EPS, NC, NQ, NT, NV
+
+
+def _config_utils_kernel(
+    needs_ref, count_ref, qutil_ref, qtenant_ref, configs_ref, ustar_ref, out_ref
+):
+    needs = needs_ref[...]      # [NQ, NV]
+    count = count_ref[...]      # [NQ]
+    qutil = qutil_ref[...]      # [NQ]
+    qtenant = qtenant_ref[...]  # [NT, NQ]
+    configs = configs_ref[...]  # [NV, NC]
+    ustar = ustar_ref[...]      # [NT]
+
+    covered = needs @ configs   # [NQ, NC] — MXU matmul 1
+    sat = (covered >= count[:, None] - 0.5).astype(jnp.float32)
+    valued = sat * qutil[:, None]
+    u = qtenant @ valued        # [NT, NC] — MXU matmul 2
+    out_ref[...] = u / jnp.maximum(ustar, EPS)[:, None]
+
+
+@jax.jit
+def config_utils(needs, need_count, qutil, qtenant, configs, ustar):
+    """Scaled utility matrix V[NT, NC]; see module docs for shapes."""
+    assert needs.shape == (NQ, NV) and configs.shape == (NV, NC)
+    assert qtenant.shape == (NT, NQ)
+    return pl.pallas_call(
+        _config_utils_kernel,
+        out_shape=jax.ShapeDtypeStruct((NT, NC), jnp.float32),
+        interpret=True,
+    )(needs, need_count, qutil, qtenant, configs, ustar)

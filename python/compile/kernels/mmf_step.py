@@ -1,0 +1,49 @@
+"""Pallas kernel: one fused SIMPLEMMF (Algorithm 2) iteration over the
+pruned configuration space.
+
+The restricted WELFARE step is the matvec w @ V followed by a masked
+argmax; the multiplicative update re-weights tenants by exp(-eps*V_i(S)).
+Everything is VMEM-resident (V is 4 KiB); one kernel invocation per MW
+iteration, iterated by `lax.fori_loop` in the L2 graph.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import EPS, NC, NT
+
+
+def _mmf_step_kernel(w_ref, v_ref, tmask_ref, eps_ref, w_out_ref, pick_ref):
+    w = w_ref[...]          # [NT]
+    v = v_ref[...]          # [NT, NC]
+    tmask = tmask_ref[...]  # [NT]
+    eps_mw = eps_ref[0]
+
+    scores = w @ v          # [NC] — restricted WELFARE(w)
+    best = jnp.argmax(scores)
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, (NC,), 0) == best).astype(
+        jnp.float32
+    )
+    vi = v[:, best]
+    w_next = w * jnp.exp(-eps_mw * vi) * tmask
+    norm = jnp.sum(w_next)
+    w_next = jnp.where(norm > 0.0, w_next / jnp.maximum(norm, EPS), w)
+
+    w_out_ref[...] = w_next
+    pick_ref[...] = onehot
+
+
+@jax.jit
+def mmf_step(w, v, tmask, eps_mw):
+    """One MW iteration; returns (w_next, one-hot config pick)."""
+    assert w.shape == (NT,) and v.shape == (NT, NC) and tmask.shape == (NT,)
+    eps_arr = jnp.asarray([eps_mw], jnp.float32)
+    return pl.pallas_call(
+        _mmf_step_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((NT,), jnp.float32),
+            jax.ShapeDtypeStruct((NC,), jnp.float32),
+        ),
+        interpret=True,
+    )(w, v, tmask, eps_arr)

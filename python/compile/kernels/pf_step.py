@@ -1,0 +1,60 @@
+"""Pallas kernel: one fused FASTPF projected-gradient step.
+
+The whole solver state — V (16x64 f32 = 4 KiB), the allocation vector,
+the gradient, and the LS x NC candidate block — fits in a single VMEM
+tile, so the kernel uses one BlockSpec covering each operand (no grid).
+The line-search evaluation is shaped as a (LS, NC) x (NC, NT) matmul so
+it feeds the MXU as one batched contraction instead of LS sequential
+matvecs; the gradient is the dual contraction (NT,) x (NT, NC).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the paper's solver is
+host-side CPU code; here the entire per-batch solve becomes one
+VMEM-resident kernel iterated by `lax.fori_loop` in the L2 graph, so the
+Rust hot path makes exactly one PJRT call per batch.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import EPS, LS, NC, NT
+
+
+def _pf_step_kernel(x_ref, v_ref, wl_ref, cmask_ref, steps_ref, out_ref):
+    x = x_ref[...]          # [NC]
+    v = v_ref[...]          # [NT, NC]
+    wl = wl_ref[...]        # [NT]
+    cmask = cmask_ref[...]  # [NC]
+    steps = steps_ref[...]  # [LS]
+    total_w = jnp.sum(wl)
+
+    # Gradient of g at x: (wl / (V x)) @ V - total_w.
+    u = v @ x
+    ratio = jnp.where(wl > 0.0, wl / jnp.maximum(u, EPS), 0.0)
+    grad = ratio @ v - total_w
+
+    # Geometric line search, evaluated as one batched contraction.
+    cands = jnp.maximum(x[None, :] + steps[:, None] * grad[None, :], 0.0)
+    cands = cands * cmask[None, :]
+    u_cand = cands @ v.T  # [LS, NT] — MXU matmul
+    logs = jnp.where(wl[None, :] > 0.0,
+                     jnp.log(jnp.maximum(u_cand, EPS)), 0.0)
+    objs = logs @ wl - total_w * jnp.sum(cands, axis=1)  # [LS]
+
+    best = jnp.argmax(objs)
+    out_ref[...] = cands[best]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def pf_step(x, v, wl, cmask, steps):
+    """One PF gradient step (see `_pf_step_kernel`). Shapes fixed to the
+    padded NT/NC/LS constants."""
+    assert x.shape == (NC,) and v.shape == (NT, NC)
+    assert wl.shape == (NT,) and cmask.shape == (NC,) and steps.shape == (LS,)
+    return pl.pallas_call(
+        _pf_step_kernel,
+        out_shape=jax.ShapeDtypeStruct((NC,), jnp.float32),
+        interpret=True,  # CPU-PJRT executable; Mosaic lowering is TPU-only
+    )(x, v, wl, cmask, steps)

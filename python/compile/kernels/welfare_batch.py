@@ -1,0 +1,39 @@
+"""Pallas kernel: batched restricted WELFARE scoring — K dual weight
+vectors scored against the scaled-utility matrix in one MXU matmul,
+with a masked per-row argmax returning one-hot configuration picks.
+
+This is the §4.3 configuration-pruning inner product (and the scoring
+step of any restricted MW iteration) evaluated for a whole sweep of
+weight vectors at once: scores = W @ V is a (KW x NT)(NT x NC)
+contraction; dead configurations are excluded via cmask before the
+argmax.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import KW, NC, NT
+
+
+def _welfare_batch_kernel(w_ref, v_ref, cmask_ref, out_ref):
+    w = w_ref[...]          # [KW, NT]
+    v = v_ref[...]          # [NT, NC]
+    cmask = cmask_ref[...]  # [NC]
+
+    scores = w @ v          # [KW, NC] — MXU matmul
+    scores = scores - (1.0 - cmask)[None, :] * 1e9
+    best = jnp.argmax(scores, axis=1)  # [KW]
+    cols = jax.lax.broadcasted_iota(jnp.int32, (KW, NC), 1)
+    out_ref[...] = (cols == best[:, None]).astype(jnp.float32)
+
+
+@jax.jit
+def welfare_batch(w, v, cmask):
+    """One-hot winning configuration per weight vector row."""
+    assert w.shape == (KW, NT) and v.shape == (NT, NC) and cmask.shape == (NC,)
+    return pl.pallas_call(
+        _welfare_batch_kernel,
+        out_shape=jax.ShapeDtypeStruct((KW, NC), jnp.float32),
+        interpret=True,
+    )(w, v, cmask)

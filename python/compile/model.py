@@ -1,0 +1,127 @@
+"""Layer 2: the per-batch solver graphs, built from the Layer-1 kernels
+and lowered once by :mod:`compile.aot` into self-contained HLO modules.
+
+Three entry points (all fixed-shape, mask-driven):
+
+- :func:`pf_solve` — the full FASTPF solve: ``PF_ITERS`` fused
+  gradient-step kernel invocations inside one ``lax.fori_loop``, then a
+  final normalization to ``||x|| = 1``. One PJRT call per batch.
+- :func:`mmf_mw` — SIMPLEMMF (Algorithm 2) restricted to the pruned
+  space: ``MMF_ITERS`` kernel steps accumulating the config histogram.
+- :func:`config_utils_model` — the scaled-utility matrix evaluation.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import EPS, KW, LS, NC, NQ, NT, NV
+from .kernels.config_utils import config_utils
+from .kernels.mmf_step import mmf_step
+from .kernels.pf_step import pf_step
+from .kernels.welfare_batch import welfare_batch
+
+# Iteration counts baked into the artifacts (one compiled executable per
+# variant; see DESIGN.md §Hardware-Adaptation on solver-in-one-artifact).
+PF_ITERS = 192
+MMF_ITERS = 256
+MMF_EPS = 0.2
+
+# Geometric line-search ladder: steps[0] = 0 ("stay"), then step0·decay^j.
+PF_STEP0 = 2.0
+PF_DECAY = 0.35
+
+
+def pf_line_search_steps():
+    """The fixed LS-long step ladder, first entry 0 (keep current x)."""
+    geo = PF_STEP0 * (PF_DECAY ** jnp.arange(LS - 1, dtype=jnp.float32))
+    return jnp.concatenate([jnp.zeros((1,), jnp.float32), geo])
+
+
+def pf_solve(v, wl, cmask):
+    """FASTPF over a pruned space.
+
+    Args:
+      v: f32[NT, NC] scaled utilities (zero rows/cols for padding).
+      wl: f32[NT] tenant weights; 0 disables a tenant.
+      cmask: f32[NC] 1 for live configurations.
+
+    Returns:
+      x: f32[NC] the PF allocation, normalized to sum 1 over live
+        configs (all-zero input degenerates to uniform-over-live).
+    """
+    steps = pf_line_search_steps()
+    live = jnp.maximum(jnp.sum(cmask), 1.0)
+    x0 = cmask / live
+
+    def body(_, x):
+        return pf_step(x, v, wl, cmask, steps)
+
+    x = jax.lax.fori_loop(0, PF_ITERS, body, x0)
+    norm = jnp.sum(x)
+    return jnp.where(norm > EPS, x / jnp.maximum(norm, EPS), x0)
+
+
+def mmf_mw(v, tmask, cmask):
+    """SIMPLEMMF over a pruned space (Algorithm 2).
+
+    Args:
+      v: f32[NT, NC] scaled utilities.
+      tmask: f32[NT] active-tenant mask.
+      cmask: f32[NC] live-config mask.
+
+    Returns:
+      x: f32[NC] the averaged MW allocation (sums to 1 over live
+        configs).
+    """
+    n_active = jnp.maximum(jnp.sum(tmask), 1.0)
+    w0 = tmask / n_active
+    # Dead configs must never win the argmax: mask V's columns hard.
+    v_masked = v * cmask[None, :] - (1.0 - cmask)[None, :] * 1e9
+
+    def body(_, carry):
+        w, x = carry
+        w_next, pick = mmf_step(w, v_masked, tmask, MMF_EPS)
+        return w_next, x + pick / MMF_ITERS
+
+    _, x = jax.lax.fori_loop(
+        0, MMF_ITERS, body, (w0, jnp.zeros((NC,), jnp.float32))
+    )
+    return x
+
+
+def config_utils_model(needs, need_count, qutil, qtenant, configs, ustar):
+    """Scaled-utility matrix V[NT, NC] (thin wrapper over the kernel)."""
+    return config_utils(needs, need_count, qutil, qtenant, configs, ustar)
+
+
+def welfare_batch_model(w, v, cmask):
+    """Batched restricted WELFARE: one-hot winning config per weight row
+    (the §4.3 pruning sweep as a single MXU contraction)."""
+    return welfare_batch(w, v, cmask)
+
+
+def example_args():
+    """ShapeDtypeStructs for AOT lowering of each entry point."""
+    f32 = jnp.float32
+    s = jax.ShapeDtypeStruct
+    return {
+        "pf_solve": (s((NT, NC), f32), s((NT,), f32), s((NC,), f32)),
+        "mmf_mw": (s((NT, NC), f32), s((NT,), f32), s((NC,), f32)),
+        "config_utils": (
+            s((NQ, NV), f32),
+            s((NQ,), f32),
+            s((NQ,), f32),
+            s((NT, NQ), f32),
+            s((NV, NC), f32),
+            s((NT,), f32),
+        ),
+        "welfare_batch": (s((KW, NT), f32), s((NT, NC), f32), s((NC,), f32)),
+    }
+
+
+ENTRY_POINTS = {
+    "pf_solve": pf_solve,
+    "mmf_mw": mmf_mw,
+    "config_utils": config_utils_model,
+    "welfare_batch": welfare_batch_model,
+}

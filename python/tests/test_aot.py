@@ -1,0 +1,60 @@
+"""AOT pipeline: every entry point lowers to parseable HLO text with the
+expected parameter arity, and the manifest matches."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    manifest = aot.emit(str(out))
+    return str(out), manifest
+
+
+def test_all_entries_emitted(artifacts):
+    out, manifest = artifacts
+    for name in model.ENTRY_POINTS:
+        path = os.path.join(out, f"{name}.hlo.txt")
+        assert os.path.exists(path), name
+        text = open(path).read()
+        assert text.startswith("HloModule"), text[:40]
+        assert "ENTRY" in text
+        assert manifest["entries"][name]["bytes"] == len(text)
+
+
+def test_parameter_arity_matches_examples(artifacts):
+    out, _ = artifacts
+    for name, args in model.example_args().items():
+        text = open(os.path.join(out, f"{name}.hlo.txt")).read()
+        # The entry computation takes exactly len(args) parameters.
+        entry = text[text.index("ENTRY"):]
+        first_line = entry.splitlines()[0]
+        n_params = first_line.count("parameter_count") or first_line.count("f32[")
+        # Parameter declarations appear as %Arg_k or parameter(k); count
+        # the distinct parameter(k) instructions in the entry computation.
+        param_ids = {
+            line.split("parameter(")[1].split(")")[0]
+            for line in entry.splitlines()
+            if "parameter(" in line
+        }
+        assert len(param_ids) == len(args), (name, param_ids, n_params)
+
+
+def test_manifest_round_trips(artifacts):
+    out, manifest = artifacts
+    loaded = json.load(open(os.path.join(out, "manifest.json")))
+    assert loaded == manifest
+    shapes = loaded["shapes"]
+    assert shapes["NT"] == 16 and shapes["NC"] == 64
+    assert shapes["PF_ITERS"] == model.PF_ITERS
+
+
+def test_lowering_is_deterministic():
+    a = aot.to_hlo_text(aot.lower_entry("config_utils"))
+    b = aot.to_hlo_text(aot.lower_entry("config_utils"))
+    assert a == b

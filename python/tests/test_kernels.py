@@ -1,0 +1,170 @@
+"""Kernel vs pure-jnp-reference correctness (the CORE L1 signal), with
+hypothesis sweeping input values over the fixed padded shapes."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import LS, NC, NQ, NT, NV
+from compile.kernels.config_utils import config_utils
+from compile.kernels.mmf_step import mmf_step
+from compile.kernels.pf_step import pf_step
+from compile.kernels.ref import config_utils_ref, mmf_step_ref, pf_step_ref
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+def random_pf_inputs(seed, n_active=4, n_configs=10):
+    r = rng(seed)
+    v = np.zeros((NT, NC), np.float32)
+    v[:n_active, :n_configs] = r.uniform(0.0, 1.0, (n_active, n_configs))
+    wl = np.zeros(NT, np.float32)
+    wl[:n_active] = 1.0
+    cmask = np.zeros(NC, np.float32)
+    cmask[:n_configs] = 1.0
+    x = np.zeros(NC, np.float32)
+    x[:n_configs] = r.uniform(0.0, 0.3, n_configs)
+    steps = np.concatenate(
+        [[0.0], 2.0 * 0.35 ** np.arange(LS - 1)]
+    ).astype(np.float32)
+    return x, v, wl, cmask, steps
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n_active=st.integers(1, NT),
+    n_configs=st.integers(1, NC),
+)
+def test_pf_step_matches_ref(seed, n_active, n_configs):
+    x, v, wl, cmask, steps = random_pf_inputs(seed, n_active, n_configs)
+    got = np.asarray(pf_step(x, v, wl, cmask, steps))
+    want = np.asarray(pf_step_ref(
+        jnp.asarray(x), jnp.asarray(v), jnp.asarray(wl),
+        jnp.asarray(cmask), jnp.asarray(steps)))
+    assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+    # Projected and masked.
+    assert (got >= 0).all()
+    assert (got[cmask == 0.0] == 0).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n_active=st.integers(1, NT))
+def test_mmf_step_matches_ref(seed, n_active):
+    r = rng(seed)
+    v = np.zeros((NT, NC), np.float32)
+    v[:n_active, :12] = r.uniform(0.0, 1.0, (n_active, 12))
+    tmask = np.zeros(NT, np.float32)
+    tmask[:n_active] = 1.0
+    w = tmask / n_active
+    got_w, got_pick = mmf_step(w, v, tmask, 0.2)
+    want_w, want_pick = mmf_step_ref(
+        jnp.asarray(w), jnp.asarray(v), jnp.asarray(tmask), 0.2)
+    assert_allclose(np.asarray(got_w), np.asarray(want_w), rtol=1e-5, atol=1e-7)
+    assert_allclose(np.asarray(got_pick), np.asarray(want_pick))
+    # One-hot pick; weights stay a distribution over active tenants.
+    assert np.asarray(got_pick).sum() == 1.0
+    assert abs(np.asarray(got_w).sum() - 1.0) < 1e-5
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_config_utils_matches_ref(seed):
+    r = rng(seed)
+    nq, nv, nt, ncfg = 20, 10, 4, 8
+    needs = np.zeros((NQ, NV), np.float32)
+    needs[:nq, :nv] = (r.uniform(size=(nq, nv)) < 0.25)
+    # Ensure non-empty requirement rows.
+    for q in range(nq):
+        if needs[q].sum() == 0:
+            needs[q, r.integers(nv)] = 1.0
+    count = needs.sum(axis=1).astype(np.float32)
+    qutil = np.zeros(NQ, np.float32)
+    qutil[:nq] = r.uniform(0.5, 5.0, nq)
+    qtenant = np.zeros((NT, NQ), np.float32)
+    for q in range(nq):
+        qtenant[r.integers(nt), q] = 1.0
+    configs = np.zeros((NV, NC), np.float32)
+    configs[:nv, :ncfg] = (r.uniform(size=(nv, ncfg)) < 0.5)
+    ustar = np.zeros(NT, np.float32)
+    ustar[:nt] = r.uniform(1.0, 10.0, nt)
+
+    got = np.asarray(config_utils(needs, count, qutil, qtenant, configs, ustar))
+    want = np.asarray(config_utils_ref(
+        *(jnp.asarray(a) for a in (needs, count, qutil, qtenant, configs, ustar))))
+    assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_config_utils_all_or_nothing_semantics():
+    """A query needing two views gets utility only when both are cached."""
+    needs = np.zeros((NQ, NV), np.float32)
+    needs[0, 0] = needs[0, 1] = 1.0
+    count = needs.sum(axis=1).astype(np.float32)
+    qutil = np.zeros(NQ, np.float32)
+    qutil[0] = 7.0
+    qtenant = np.zeros((NT, NQ), np.float32)
+    qtenant[0, 0] = 1.0
+    configs = np.zeros((NV, NC), np.float32)
+    configs[0, 0] = 1.0                      # config 0: only view 0
+    configs[0, 1] = configs[1, 1] = 1.0      # config 1: both views
+    ustar = np.zeros(NT, np.float32)
+    ustar[0] = 7.0
+    v = np.asarray(config_utils(needs, count, qutil, qtenant, configs, ustar))
+    assert v[0, 0] == 0.0
+    assert v[0, 1] == pytest.approx(1.0)
+
+
+def test_pf_step_improves_objective():
+    """A gradient step from a suboptimal point must not decrease g."""
+    x, v, wl, cmask, steps = random_pf_inputs(7)
+
+    def g(xv):
+        u = v @ xv
+        act = wl > 0
+        return float((wl[act] * np.log(np.maximum(u[act], 1e-9))).sum()
+                     - wl.sum() * xv.sum())
+
+    x1 = np.asarray(pf_step(x, v, wl, cmask, steps))
+    assert g(x1) >= g(x) - 1e-6
+
+
+def test_mmf_step_downweights_satisfied_tenant():
+    v = np.zeros((NT, NC), np.float32)
+    v[0, 0] = 1.0   # tenant 0 fully satisfied by config 0
+    v[1, 1] = 1.0
+    tmask = np.zeros(NT, np.float32)
+    tmask[:2] = 1.0
+    w = np.asarray([0.9, 0.1] + [0.0] * (NT - 2), np.float32)
+    w1, pick = mmf_step(w, v, tmask, 0.5)
+    w1 = np.asarray(w1)
+    assert np.asarray(pick)[0] == 1.0   # config 0 wins for w
+    # Tenant 0 (satisfied) loses relative weight: ratio 9 → ·exp(−0.5) ≈ 5.46.
+    assert w1[0] / w1[1] < w[0] / w[1]
+    assert w1[0] / w1[1] == pytest.approx(9.0 * np.exp(-0.5), rel=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n_active=st.integers(1, NT))
+def test_welfare_batch_matches_ref(seed, n_active):
+    from compile.kernels import KW
+    from compile.kernels.welfare_batch import welfare_batch
+    from compile.kernels.ref import welfare_batch_ref
+
+    r = rng(seed)
+    v = np.zeros((NT, NC), np.float32)
+    v[:n_active, :16] = r.uniform(0.0, 1.0, (n_active, 16))
+    cmask = np.zeros(NC, np.float32)
+    cmask[:16] = 1.0
+    w = np.zeros((KW, NT), np.float32)
+    w[:, :n_active] = r.uniform(0.0, 1.0, (KW, n_active))
+    got = np.asarray(welfare_batch(w, v, cmask))
+    want = np.asarray(welfare_batch_ref(
+        jnp.asarray(w), jnp.asarray(v), jnp.asarray(cmask)))
+    assert_allclose(got, want)
+    # One pick per row, always a live config.
+    assert (got.sum(axis=1) == 1.0).all()
+    assert (got[:, 16:] == 0).all()

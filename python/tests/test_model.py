@@ -1,0 +1,96 @@
+"""L2 solver graphs: behaviour on the paper's canonical instances
+(Tables 2/4/5) embedded into the padded shapes."""
+
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile.kernels import NC, NT
+from compile.model import mmf_mw, pf_solve
+
+
+def embed(v_small):
+    """Place a small [n, m] utility matrix into the padded [NT, NC]."""
+    n, m = len(v_small), len(v_small[0])
+    v = np.zeros((NT, NC), np.float32)
+    v[:n, :m] = np.asarray(v_small, np.float32)
+    wl = np.zeros(NT, np.float32)
+    wl[:n] = 1.0
+    cmask = np.zeros(NC, np.float32)
+    cmask[:m] = 1.0
+    return v, wl, cmask
+
+
+def expected_v(v, x):
+    return v @ x
+
+
+def test_pf_solve_table2():
+    """Three tenants each wanting a different unit view → x = 1/3 each."""
+    v, wl, cmask = embed([[1, 0, 0], [0, 1, 0], [0, 0, 1]])
+    x = np.asarray(pf_solve(v, wl, cmask))
+    assert x.sum() == pytest.approx(1.0, abs=1e-5)
+    assert_allclose(x[:3], [1 / 3] * 3, atol=5e-3)
+    assert (x[3:] == 0).all()
+
+
+def test_pf_solve_table4_core():
+    """N−1 tenants want R, one wants S → x_R = (N−1)/N (the core point;
+    §3.3). With N = 4: x = (0.75, 0.25)."""
+    v, wl, cmask = embed([[1, 0], [1, 0], [1, 0], [0, 1]])
+    x = np.asarray(pf_solve(v, wl, cmask))
+    assert x[0] == pytest.approx(0.75, abs=5e-3)
+    assert x[1] == pytest.approx(0.25, abs=5e-3)
+
+
+def test_pf_solve_table5():
+    """Exact PF optimum x_S = 1/1.98 ≈ 0.50505 (see rust fastpf tests)."""
+    v, wl, cmask = embed([[0, 1], [1, 0.01]])
+    x = np.asarray(pf_solve(v, wl, cmask))
+    assert x[1] == pytest.approx(0.50505, abs=5e-3)
+
+
+def test_pf_solve_weighted():
+    """Doubling a tenant's weight doubles its share in the two-tenant
+    disjoint-views instance (weighted PF: x_i ∝ λ_i)."""
+    v, wl, cmask = embed([[1, 0], [0, 1]])
+    wl[0] = 2.0
+    x = np.asarray(pf_solve(v, wl, cmask))
+    assert x[0] == pytest.approx(2 / 3, abs=5e-3)
+    assert x[1] == pytest.approx(1 / 3, abs=5e-3)
+
+
+def test_pf_solve_degenerate_no_tenants():
+    v = np.zeros((NT, NC), np.float32)
+    wl = np.zeros(NT, np.float32)
+    cmask = np.zeros(NC, np.float32)
+    cmask[:4] = 1.0
+    x = np.asarray(pf_solve(v, wl, cmask))
+    assert np.isfinite(x).all()
+    assert x.sum() == pytest.approx(1.0, abs=1e-4)
+
+
+def test_mmf_mw_table4_half_half():
+    """SIMPLEMMF equalizes: min-rate ≈ 1/2 on Table 4 (N = 4)."""
+    v, wl, cmask = embed([[1, 0], [1, 0], [1, 0], [0, 1]])
+    x = np.asarray(mmf_mw(v, wl, cmask))
+    rates = expected_v(v, x)
+    assert x.sum() == pytest.approx(1.0, abs=1e-4)
+    assert rates[:4].min() >= 0.5 * 0.85, rates[:4]
+
+
+def test_mmf_mw_table2():
+    v, wl, cmask = embed([[1, 0, 0], [0, 1, 0], [0, 0, 1]])
+    x = np.asarray(mmf_mw(v, wl, cmask))
+    rates = expected_v(v, x)
+    assert rates[:3].min() >= (1 / 3) * 0.85, rates[:3]
+
+
+def test_mmf_mw_ignores_dead_configs():
+    """Padded (masked-out) configs must receive zero mass even if their
+    (padding) utility columns were nonzero garbage."""
+    v, wl, cmask = embed([[1, 0], [0, 1]])
+    v[0, 5] = 99.0  # garbage outside the mask
+    x = np.asarray(mmf_mw(v, wl, cmask))
+    assert x[5] == 0.0
+    assert x[:2].sum() == pytest.approx(1.0, abs=1e-4)

@@ -1,0 +1,113 @@
+//! Solver microbenchmarks (`cargo bench --bench solver_bench`):
+//! the per-batch allocation hot path, solver by solver — the numbers
+//! behind the paper's §5.4 claim that view-selection wait times are
+//! "of the order of tens of milliseconds".
+//!
+//! Uses the in-repo criterion-style harness (util::bench); the offline
+//! registry has no criterion crate.
+
+use robus::alloc::config_space::ConfigSpace;
+use robus::alloc::fastpf::FastPf;
+use robus::alloc::mmf::MaxMinFair;
+use robus::alloc::mmf_mw::SimpleMmfMw;
+use robus::alloc::pf_mw::PfMw;
+use robus::alloc::rsd::RandomSerialDictatorship;
+use robus::alloc::{Policy, PolicyKind};
+use robus::experiments::analysis::random_sales_batch;
+use robus::runtime::solvers::{AcceleratedFastPf, CompiledSolvers};
+use robus::solver::gradient::GradientConfig;
+use robus::util::bench::BenchSuite;
+use robus::util::rng::Pcg64;
+
+fn main() {
+    let mut suite = BenchSuite::new("solver microbenchmarks");
+    let mut rng = Pcg64::new(99);
+    let batch4 = random_sales_batch(4, &mut rng);
+    let batch8 = random_sales_batch(8, &mut rng);
+
+    // WELFARE oracle (exact knapsack) — the inner loop of everything.
+    suite.bench("welfare_exact_knapsack_n4", || {
+        batch4
+            .welfare_problem(&[1.0, 0.5, 0.25, 0.125])
+            .solve_exact()
+            .value
+    });
+    suite.bench("welfare_greedy_n4", || {
+        batch4
+            .welfare_problem(&[1.0, 0.5, 0.25, 0.125])
+            .solve_greedy()
+            .value
+    });
+
+    // Configuration pruning (50 random weight vectors, §4.3).
+    suite.bench("config_pruning_50vec_n4", || {
+        let mut r = Pcg64::new(5);
+        ConfigSpace::pruned(&batch4, 50, &mut r).len()
+    });
+
+    // Solver cores over a fixed pruned space.
+    let space = ConfigSpace::pruned(&batch4, 50, &mut Pcg64::new(5));
+    suite.bench("fastpf_gradient_solve_only", || {
+        FastPf::solve_over(&space, &batch4, &GradientConfig::default())
+    });
+    suite.bench("mmf_lexicographic_lp_only", || {
+        MaxMinFair::solve_over(&space, &batch4)
+    });
+
+    // Full per-batch allocations, policy by policy.
+    for kind in [
+        PolicyKind::Static,
+        PolicyKind::Optp,
+        PolicyKind::Mmf,
+        PolicyKind::FastPf,
+    ] {
+        let policy = kind.build();
+        let name = format!("policy_allocate_{}_n4", kind.name());
+        suite.bench(&name, || {
+            let mut r = Pcg64::new(7);
+            policy.allocate(&batch4, &mut r).configs.len()
+        });
+    }
+
+    // RSD: exact permutation enumeration at n=4, sampling at n=8.
+    let rsd = RandomSerialDictatorship::default();
+    suite.bench("rsd_exact_n4", || {
+        let mut r = Pcg64::new(8);
+        rsd.allocate(&batch4, &mut r).configs.len()
+    });
+    let rsd_sampled = RandomSerialDictatorship {
+        exact_up_to: 0,
+        samples: 64,
+    };
+    suite.bench("rsd_sampled64_n8", || {
+        let mut r = Pcg64::new(8);
+        rsd_sampled.allocate(&batch8, &mut r).configs.len()
+    });
+
+    // Provably-good MW algorithms (capped iteration budgets).
+    let mmf_mw = SimpleMmfMw::default();
+    suite.bench("simplemmf_mw_n4", || mmf_mw.solve(&batch4).len());
+    let pf_mw = PfMw {
+        epsilon: 0.2,
+        max_iters: 120,
+        search_steps: 6,
+    };
+    suite.bench("pf_mw_feasibility_search_n4", || pf_mw.solve(&batch4).len());
+
+    // Compiled (PJRT) FASTPF — one execute per batch, including padding
+    // and marshalling. Executable cache warmed outside the timed region.
+    match CompiledSolvers::open_default() {
+        Ok(solvers) => {
+            let accel = AcceleratedFastPf(solvers);
+            let mut r = Pcg64::new(9);
+            let _ = accel.allocate(&batch4, &mut r);
+            suite.bench("fastpf_compiled_pjrt_n4", || {
+                let mut r = Pcg64::new(9);
+                accel.allocate(&batch4, &mut r).configs.len()
+            });
+        }
+        Err(e) => eprintln!("skipping compiled-solver bench: {e}"),
+    }
+
+    println!("\n{}", suite.markdown());
+}

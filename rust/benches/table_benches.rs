@@ -1,0 +1,55 @@
+//! End-to-end benches (`cargo bench --bench table_benches`): one bench
+//! per paper table/figure group, timing the full pipeline (workload
+//! generation → batched coordinator → policy solve → simulated
+//! execution → metrics) at reduced batch counts, plus the analysis
+//! experiments (§4.3 pruning error, Lemma 1).
+//!
+//! These double as regeneration smoke tests: each bench runs the exact
+//! code path `robus experiment <name>` uses for the corresponding table.
+
+use robus::experiments::runner::run_experiment;
+use robus::experiments::{analysis, setups};
+use robus::util::bench::BenchSuite;
+
+fn main() {
+    let mut suite = BenchSuite::new("table/figure regeneration (6-batch runs)");
+
+    let bench_setup = |suite: &mut BenchSuite, name: &str, setup: setups::ExperimentSetup| {
+        let setup = setup.quick(6);
+        suite.bench(name, || {
+            let out = run_experiment(&setup);
+            out.summaries.len()
+        });
+    };
+
+    // Fig 5 / Tables 15-18 (one representative cell per group).
+    bench_setup(&mut suite, "fig5_tables15_18_mixed_G2", setups::data_sharing_mixed().remove(1));
+    // Fig 6 / Tables 19-22.
+    bench_setup(&mut suite, "fig6_tables19_22_sales_G2", setups::data_sharing_sales().remove(1));
+    // Fig 8 / Tables 23-25.
+    bench_setup(&mut suite, "fig8_tables23_25_arrival_high", setups::arrival_rates().remove(2));
+    // Fig 10 / Tables 26-28.
+    bench_setup(&mut suite, "fig10_tables26_28_tenants_8", setups::tenant_scaling().remove(2));
+    // Fig 11.
+    bench_setup(&mut suite, "fig11_convergence", setups::convergence());
+    // Fig 12 (one stateful cell).
+    let (batch_setup, _) = setups::batch_size_sweep().remove(3);
+    bench_setup(&mut suite, "fig12_batch40_stateful", batch_setup);
+
+    // §4.3 pruning-error sweep (scaled down).
+    suite.bench("sec4_3_pruning_error_m25", || {
+        analysis::pruning_error(25, 10, 3)
+    });
+
+    // Lemma 1 grouped-instance comparison.
+    suite.bench("lemma1_grouped_totals", || {
+        analysis::grouped_instance_totals(&[3, 2, 1])
+    });
+
+    // Figure 3 catalog generation.
+    suite.bench("fig3_sales_catalog", || {
+        analysis::figure3_view_sizes_mb().len()
+    });
+
+    println!("\n{}", suite.markdown());
+}

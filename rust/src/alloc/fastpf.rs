@@ -1,0 +1,228 @@
+//! FASTPF (§4.3, Algorithm 3): proportional fairness over the pruned
+//! configuration space via projected gradient ascent on the equivalent
+//! unconstrained program (Program 2):
+//!
+//!   max g(x) = Σ_i λ_i log V_i(x) − Λ·‖x‖   s.t. x ≥ 0,  Λ = Σ_i λ_i
+//!
+//! (the dual variable of ‖x‖ ≤ 1 equals Λ at the PF optimum — Theorem 2's
+//! d = N generalized to weights per §3.4). The optimum has ‖x‖ = 1; we
+//! renormalize the numeric solution.
+//!
+//! The allocation satisfies the randomized core in expectation
+//! (Theorem 2), hence also SI and PE.
+
+use crate::alloc::config_space::ConfigSpace;
+use crate::alloc::{Allocation, Policy};
+use crate::domain::utility::BatchUtilities;
+use crate::solver::gradient::{maximize, GradientConfig, Objective};
+use crate::util::rng::Pcg64;
+
+/// Floor on V_i(x) inside the log to keep gradients finite; tenants with
+/// zero utility dominate the gradient direction as intended.
+const V_FLOOR: f64 = 1e-9;
+
+#[derive(Debug)]
+pub struct FastPf {
+    pub prune_vectors: usize,
+    pub gradient: GradientConfig,
+}
+
+impl Default for FastPf {
+    fn default() -> Self {
+        Self {
+            prune_vectors: 50,
+            gradient: GradientConfig {
+                max_iters: 500,
+                ..Default::default()
+            },
+        }
+    }
+}
+
+/// The PF objective over a fixed configuration space.
+pub struct PfObjective<'a> {
+    space: &'a ConfigSpace,
+    /// Active tenants and their weights.
+    tenants: Vec<(usize, f64)>,
+    total_weight: f64,
+}
+
+impl<'a> PfObjective<'a> {
+    pub fn new(space: &'a ConfigSpace, batch: &BatchUtilities) -> Self {
+        let tenants: Vec<(usize, f64)> = batch
+            .active_tenants()
+            .into_iter()
+            .map(|i| (i, batch.weights[i]))
+            .collect();
+        let total_weight = tenants.iter().map(|(_, w)| w).sum();
+        Self {
+            space,
+            tenants,
+            total_weight,
+        }
+    }
+}
+
+impl Objective for PfObjective<'_> {
+    fn value(&self, x: &[f64]) -> f64 {
+        let norm: f64 = x.iter().sum();
+        let mut g = -self.total_weight * norm;
+        for &(i, w) in &self.tenants {
+            g += w * self.space.scaled_utility(i, x).max(V_FLOOR).ln();
+        }
+        g
+    }
+
+    fn gradient(&self, x: &[f64], out: &mut [f64]) {
+        // ∂g/∂x_S = Σ_i λ_i V_i(S)/V_i(x) − Λ.
+        for o in out.iter_mut() {
+            *o = -self.total_weight;
+        }
+        for &(i, w) in &self.tenants {
+            let vi = self.space.scaled_utility(i, x).max(V_FLOOR);
+            let f = w / vi;
+            for (s, o) in out.iter_mut().enumerate() {
+                *o += f * self.space.v[s][i];
+            }
+        }
+    }
+}
+
+impl FastPf {
+    /// Solve PF over an explicit space; returns the (normalized)
+    /// allocation vector. Exposed for reuse by tests, the pruning-error
+    /// experiment, and cross-validation against the compiled L2 artifact.
+    pub fn solve_over(
+        space: &ConfigSpace,
+        batch: &BatchUtilities,
+        cfg: &GradientConfig,
+    ) -> Vec<f64> {
+        let m = space.len();
+        if m == 0 || batch.active_tenants().is_empty() {
+            return vec![0.0; m.max(1)];
+        }
+        let obj = PfObjective::new(space, batch);
+        let x0 = vec![1.0 / m as f64; m];
+        let mut result = maximize(&obj, &x0, cfg);
+        let norm: f64 = result.x.iter().sum();
+        if norm > 0.0 {
+            for xi in result.x.iter_mut() {
+                *xi /= norm;
+            }
+        }
+        result.x
+    }
+}
+
+impl Policy for FastPf {
+    fn name(&self) -> &'static str {
+        "FASTPF"
+    }
+
+    fn allocate(&self, batch: &BatchUtilities, rng: &mut Pcg64) -> Allocation {
+        let space = ConfigSpace::pruned(batch, self.prune_vectors, rng);
+        let x = Self::solve_over(&space, batch, &self.gradient);
+        if x.iter().sum::<f64>() <= 0.0 {
+            return Allocation::deterministic(vec![false; batch.n_views()]);
+        }
+        Allocation::from_weighted(
+            space
+                .configs
+                .iter()
+                .cloned()
+                .zip(x.iter().copied())
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::testing::{table2, table4, table5};
+
+    fn pf_alloc(b: &BatchUtilities, seed: u64) -> Allocation {
+        FastPf::default().allocate(b, &mut Pcg64::new(seed))
+    }
+
+    #[test]
+    fn table2_equal_thirds() {
+        let b = table2();
+        let a = pf_alloc(&b, 1);
+        let v = a.expected_scaled_utilities(&b);
+        for vi in &v {
+            assert!((vi - 1.0 / 3.0).abs() < 1e-3, "v={v:?}");
+        }
+    }
+
+    #[test]
+    fn table4_core_allocation() {
+        // Paper (§3.3): the core allocation for Table 4 with N tenants is
+        // x_R = (N−1)/N, x_S = 1/N — PF must find it (MMF picks ½/½).
+        let n = 4;
+        let b = table4(n);
+        let a = pf_alloc(&b, 2);
+        let v = a.expected_scaled_utilities(&b);
+        // First N−1 tenants get (N−1)/N, the last gets 1/N.
+        for vi in v.iter().take(n - 1) {
+            assert!((vi - (n as f64 - 1.0) / n as f64).abs() < 5e-3, "v={v:?}");
+        }
+        assert!((v[n - 1] - 1.0 / n as f64).abs() < 5e-3, "v={v:?}");
+    }
+
+    #[test]
+    fn table5_core_allocation() {
+        // The paper notes x = ⟨½, ½⟩ lies in the core for Table 5; the
+        // exact PF optimum is x_S = 0.50505 (stationarity of
+        // log x_S + log(0.99·x_R + 0.01)), so V_A = 0.50505.
+        let b = table5();
+        let a = pf_alloc(&b, 3);
+        let v = a.expected_scaled_utilities(&b);
+        assert!((v[0] - 0.50505).abs() < 5e-3, "v={v:?}");
+        assert!((v[1] - 0.49999).abs() < 5e-3, "v={v:?}");
+    }
+
+    #[test]
+    fn pf_is_sharing_incentive() {
+        for (b, n) in [(table2(), 3), (table4(5), 5), (table5(), 2)] {
+            let a = pf_alloc(&b, 7);
+            let v = a.expected_scaled_utilities(&b);
+            for (i, vi) in v.iter().enumerate() {
+                assert!(
+                    *vi >= 1.0 / n as f64 - 5e-3,
+                    "tenant {i} V={vi} < 1/{n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn allocation_is_normalized() {
+        let b = table4(4);
+        let a = pf_alloc(&b, 8);
+        assert!((a.total_probability() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn grouped_instance_proportional_split() {
+        // Lemma 1's grouped instance: k=3 unit views, groups of sizes
+        // 3,2,1 → PF rates x_i = N_i/N = 1/2, 1/3, 1/6.
+        use crate::alloc::testing::matrix_instance;
+        let rows: Vec<Vec<u64>> = vec![
+            vec![1, 0, 0],
+            vec![1, 0, 0],
+            vec![1, 0, 0],
+            vec![0, 1, 0],
+            vec![0, 1, 0],
+            vec![0, 0, 1],
+        ];
+        let refs: Vec<&[u64]> = rows.iter().map(|r| r.as_slice()).collect();
+        let b = matrix_instance(&refs, 1.0);
+        let a = pf_alloc(&b, 9);
+        let v = a.expected_scaled_utilities(&b);
+        let expect = [0.5, 0.5, 0.5, 1.0 / 3.0, 1.0 / 3.0, 1.0 / 6.0];
+        for (vi, e) in v.iter().zip(expect) {
+            assert!((vi - e).abs() < 6e-3, "v={v:?}");
+        }
+    }
+}

@@ -1,0 +1,267 @@
+//! MMF (§4.3): lexicographic max-min fairness over the pruned
+//! configuration space, solved with the restricted linear program
+//! (Program 3) and iterative saturation exactly as in paper ref 28:
+//! maximize the minimum scaled utility; freeze tenants that cannot do
+//! better; repeat until all tenants are saturated.
+//!
+//! Weighted tenants are handled by max-minning V_i(x)/w̃_i where w̃ is the
+//! weight normalized to mean 1, reducing to the unweighted definition
+//! for equal weights.
+
+use crate::alloc::config_space::ConfigSpace;
+use crate::alloc::{Allocation, Policy};
+use crate::domain::utility::BatchUtilities;
+use crate::solver::simplex::{Cmp, Lp, LpResult};
+use crate::util::rng::Pcg64;
+
+#[derive(Debug)]
+pub struct MaxMinFair {
+    /// Number of random weight vectors for configuration pruning (§4.3;
+    /// the paper's sweep shows 50 gives 0.6% error).
+    pub prune_vectors: usize,
+}
+
+impl Default for MaxMinFair {
+    fn default() -> Self {
+        Self { prune_vectors: 50 }
+    }
+}
+
+impl MaxMinFair {
+    /// Lexicographic max-min over an explicit config space. Exposed so
+    /// tests and the accelerated runtime path can reuse it.
+    pub fn solve_over(
+        space: &ConfigSpace,
+        batch: &BatchUtilities,
+    ) -> (Vec<f64>, Vec<f64>) {
+        let active = batch.active_tenants();
+        let m = space.len();
+        if active.is_empty() || m == 0 {
+            return (vec![0.0; m.max(1)], vec![0.0; batch.n_tenants]);
+        }
+        // Normalized weights w̃ (mean 1 over active tenants).
+        let wsum: f64 = active.iter().map(|&i| batch.weights[i]).sum();
+        let wnorm: Vec<f64> = (0..batch.n_tenants)
+            .map(|i| batch.weights[i] * active.len() as f64 / wsum)
+            .collect();
+
+        // Saturated tenants and their frozen rates (of V_i/w̃_i).
+        let mut saturated: Vec<Option<f64>> = vec![None; batch.n_tenants];
+        let mut final_x = vec![0.0; m];
+
+        // Effective rate of tenant i in the LP: Σ_S x_S V_i(S) / w̃_i.
+        let rate_row = |i: usize| -> Vec<f64> {
+            let mut row: Vec<f64> = (0..m).map(|s| space.v[s][i] / wnorm[i]).collect();
+            row.push(0.0); // λ column, filled by caller
+            row
+        };
+
+        for _round in 0..active.len() {
+            let unsat: Vec<usize> = active
+                .iter()
+                .copied()
+                .filter(|&i| saturated[i].is_none())
+                .collect();
+            if unsat.is_empty() {
+                break;
+            }
+            // Vars: x_0..x_{m-1}, λ. Maximize λ.
+            let mut obj = vec![0.0; m + 1];
+            obj[m] = 1.0;
+            let mut lp = Lp::new(obj);
+            for &i in &unsat {
+                let mut row = rate_row(i);
+                row[m] = -1.0;
+                lp.constrain(row, Cmp::Ge, 0.0);
+            }
+            for &i in &active {
+                if let Some(r) = saturated[i] {
+                    let row = rate_row(i);
+                    lp.constrain(row, Cmp::Ge, r - 1e-9);
+                }
+            }
+            let mut norm = vec![1.0; m];
+            norm.push(0.0);
+            lp.constrain(norm, Cmp::Le, 1.0);
+
+            let LpResult::Optimal { value: lambda, x } = lp.solve() else {
+                // Numerically infeasible round: keep the last solution.
+                break;
+            };
+            final_x = x[..m].to_vec();
+
+            // Saturation test per unsaturated tenant: can its rate exceed
+            // λ while everyone else stays ≥ their bound?
+            let mut any_unsaturated_left = false;
+            for &i in &unsat {
+                let mut obj_i = rate_row(i);
+                obj_i[m] = 0.0;
+                let mut lp2 = Lp::new(obj_i);
+                for &j in &unsat {
+                    if j != i {
+                        let mut row = rate_row(j);
+                        row[m] = 0.0;
+                        lp2.constrain(row, Cmp::Ge, lambda - 1e-9);
+                    }
+                }
+                for &j in &active {
+                    if let Some(r) = saturated[j] {
+                        let mut row = rate_row(j);
+                        row[m] = 0.0;
+                        lp2.constrain(row, Cmp::Ge, r - 1e-9);
+                    }
+                }
+                let mut norm = vec![1.0; m];
+                norm.push(0.0);
+                lp2.constrain(norm, Cmp::Le, 1.0);
+                match lp2.solve() {
+                    LpResult::Optimal { value, .. } if value > lambda + 1e-7 => {
+                        any_unsaturated_left = true;
+                    }
+                    _ => {
+                        saturated[i] = Some(lambda);
+                    }
+                }
+            }
+            if !any_unsaturated_left {
+                // Everyone still unsaturated is now pinned at λ.
+                for &i in &unsat {
+                    saturated[i].get_or_insert(lambda);
+                }
+            }
+        }
+
+        let rates: Vec<f64> = (0..batch.n_tenants)
+            .map(|i| space.scaled_utility(i, &final_x))
+            .collect();
+        (final_x, rates)
+    }
+}
+
+impl Policy for MaxMinFair {
+    fn name(&self) -> &'static str {
+        "MMF"
+    }
+
+    fn allocate(&self, batch: &BatchUtilities, rng: &mut Pcg64) -> Allocation {
+        let space = ConfigSpace::pruned(batch, self.prune_vectors, rng);
+        let (x, _) = Self::solve_over(&space, batch);
+        if x.iter().sum::<f64>() <= 0.0 {
+            return Allocation::deterministic(vec![false; batch.n_views()]);
+        }
+        Allocation::from_weighted(
+            space
+                .configs
+                .iter()
+                .cloned()
+                .zip(x.iter().copied())
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::testing::{matrix_instance, table2, table4, table5};
+
+    fn mmf_alloc(b: &BatchUtilities, seed: u64) -> Allocation {
+        MaxMinFair::default().allocate(b, &mut Pcg64::new(seed))
+    }
+
+    #[test]
+    fn table2_equal_thirds() {
+        let b = table2();
+        let a = mmf_alloc(&b, 1);
+        let v = a.expected_scaled_utilities(&b);
+        for vi in &v {
+            assert!((vi - 1.0 / 3.0).abs() < 1e-6, "v={v:?}");
+        }
+    }
+
+    #[test]
+    fn table4_half_half() {
+        // Paper: MMF value is 1/2 via x_R = x_S = 1/2 (N = 4).
+        let b = table4(4);
+        let a = mmf_alloc(&b, 2);
+        let v = a.expected_scaled_utilities(&b);
+        for vi in &v {
+            assert!((vi - 0.5).abs() < 1e-6, "v={v:?}");
+        }
+    }
+
+    #[test]
+    fn table5_half_half() {
+        // The paper notes ⟨x_R = ½, x_S = ½⟩ lies in the core; the exact
+        // max-min optimum equalizes V_A = x_S and V_B = 0.99·x_R + 0.01 at
+        // x_S = 1/1.99 ⇒ both rates = 0.50251.
+        let b = table5();
+        let a = mmf_alloc(&b, 3);
+        let v = a.expected_scaled_utilities(&b);
+        assert!((v[0] - 0.50251).abs() < 1e-4, "v={v:?}");
+        assert!((v[1] - 0.50251).abs() < 1e-4, "v={v:?}");
+    }
+
+    #[test]
+    fn mmf_is_si_and_lexicographic() {
+        // Lexicographic behaviour: tenant 0 can reach 1.0 without hurting
+        // the min. Utilities: t0 wants v0 (only); t1 and t2 both want v1.
+        // Budget 2 of 3 unit views → cache v0 and v1: everyone at 1.0.
+        let b = matrix_instance(&[&[4, 0, 0], &[0, 3, 0], &[0, 3, 0]], 2.0);
+        let a = mmf_alloc(&b, 4);
+        let v = a.expected_scaled_utilities(&b);
+        for vi in &v {
+            assert!((vi - 1.0).abs() < 1e-6, "v={v:?}");
+        }
+    }
+
+    #[test]
+    fn weighted_mmf_favours_heavy_tenant() {
+        use crate::domain::dataset::DatasetCatalog;
+        use crate::domain::query::{Query, QueryId};
+        use crate::domain::tenant::{TenantId, TenantSet};
+        use crate::domain::view::{ViewCatalog, ViewId, ViewKind};
+
+        let mut ds = DatasetCatalog::new();
+        let mut vc = ViewCatalog::new();
+        for v in 0..2 {
+            let d = ds.add(&format!("d{v}"), 100);
+            vc.add(&format!("v{v}"), d, ViewKind::BaseTable, 100, 100);
+        }
+        let mut ts = TenantSet::new();
+        let a = ts.add("light", 1.0);
+        let bq = ts.add("heavy", 3.0);
+        let queries = vec![
+            Query {
+                id: QueryId(1),
+                tenant: a,
+                arrival: 0.0,
+                template: "x".into(),
+                required_views: vec![ViewId(0)],
+                bytes_read: 10,
+                compute_cost: 0.0,
+            },
+            Query {
+                id: QueryId(2),
+                tenant: bq,
+                arrival: 0.0,
+                template: "y".into(),
+                required_views: vec![ViewId(1)],
+                bytes_read: 10,
+                compute_cost: 0.0,
+            },
+        ];
+        let b = crate::domain::utility::BatchUtilities::build(&ts, &vc, 100.0, &queries, None);
+        let alloc = mmf_alloc(&b, 5);
+        let v = alloc.expected_scaled_utilities(&b);
+        // Weight-proportional split: heavy tenant ≈ 3× the light one.
+        assert!((v[1] / v[0] - 3.0).abs() < 0.05, "v={v:?}");
+    }
+
+    #[test]
+    fn empty_batch_is_graceful() {
+        let b = matrix_instance(&[&[0], &[0]], 1.0);
+        let a = mmf_alloc(&b, 6);
+        assert!((a.total_probability() - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,336 @@
+//! View-selection (cache-allocation) policies — the paper's §3/§4.
+//!
+//! A policy maps a per-batch [`BatchUtilities`] problem to a randomized
+//! [`Allocation`]: a probability distribution over cache configurations
+//! (Definition 2). The coordinator samples one configuration per batch;
+//! fairness holds in expectation per batch and deterministically over
+//! the workload horizon (§3.1).
+
+pub mod config_space;
+pub mod fastpf;
+pub mod lru;
+pub mod mmf;
+pub mod mmf_mw;
+pub mod mw;
+pub mod optp;
+pub mod pf_mw;
+pub mod rsd;
+pub mod static_part;
+
+pub use config_space::ConfigSpace;
+
+use crate::domain::utility::BatchUtilities;
+use crate::util::rng::Pcg64;
+
+/// A randomized allocation: configurations with probabilities summing
+/// to 1 (Definition 2). Configurations are explicit view-selection masks.
+#[derive(Debug, Clone)]
+pub struct Allocation {
+    pub configs: Vec<Vec<bool>>,
+    pub probs: Vec<f64>,
+}
+
+impl Allocation {
+    /// A deterministic allocation (one configuration with probability 1).
+    pub fn deterministic(config: Vec<bool>) -> Self {
+        Self {
+            configs: vec![config],
+            probs: vec![1.0],
+        }
+    }
+
+    /// Build from (config, weight) pairs, normalizing and dropping
+    /// negligible-probability entries. Duplicate configurations are
+    /// merged. Panics if total weight is not positive.
+    pub fn from_weighted(pairs: Vec<(Vec<bool>, f64)>) -> Self {
+        use std::collections::BTreeMap;
+        let mut merged: BTreeMap<Vec<bool>, f64> = BTreeMap::new();
+        for (c, w) in pairs {
+            // LP/gradient solvers can emit O(1e-9) negative residuals;
+            // clamp those, reject anything materially negative.
+            assert!(w >= -1e-6, "negative probability {w}");
+            if w > 0.0 {
+                *merged.entry(c).or_insert(0.0) += w;
+            }
+        }
+        let total: f64 = merged.values().sum();
+        assert!(total > 0.0, "allocation has zero total probability");
+        let (configs, probs): (Vec<_>, Vec<_>) = merged
+            .into_iter()
+            .filter(|(_, w)| *w / total > 1e-9)
+            .unzip();
+        let renorm: f64 = probs.iter().sum();
+        Self {
+            configs,
+            probs: probs.into_iter().map(|p| p / renorm).collect(),
+        }
+    }
+
+    /// ‖x‖ (should be 1; exposed for invariant tests).
+    pub fn total_probability(&self) -> f64 {
+        self.probs.iter().sum()
+    }
+
+    /// Sample one configuration.
+    pub fn sample(&self, rng: &mut Pcg64) -> &Vec<bool> {
+        &self.configs[rng.weighted_index(&self.probs)]
+    }
+
+    /// Expected scaled utilities V_i(x) = Σ_S x_S V_i(S).
+    pub fn expected_scaled_utilities(&self, batch: &BatchUtilities) -> Vec<f64> {
+        let mut v = vec![0.0; batch.n_tenants];
+        for (c, p) in self.configs.iter().zip(&self.probs) {
+            for (i, s) in batch.scaled_utilities(c).iter().enumerate() {
+                v[i] += p * s;
+            }
+        }
+        v
+    }
+
+    /// Expected raw utilities U_i(x).
+    pub fn expected_utilities(&self, batch: &BatchUtilities) -> Vec<f64> {
+        let mut u = vec![0.0; batch.n_tenants];
+        for (c, p) in self.configs.iter().zip(&self.probs) {
+            for (i, s) in batch.utilities(c).iter().enumerate() {
+                u[i] += p * s;
+            }
+        }
+        u
+    }
+
+    /// Expected cache bytes used.
+    pub fn expected_cache_bytes(&self, batch: &BatchUtilities) -> f64 {
+        self.configs
+            .iter()
+            .zip(&self.probs)
+            .map(|(c, p)| p * batch.size_of(c))
+            .sum()
+    }
+}
+
+impl BatchUtilities {
+    /// Total cached size of a configuration (helper shared by policies).
+    pub fn size_of(&self, selected: &[bool]) -> f64 {
+        self.view_sizes
+            .iter()
+            .zip(selected)
+            .filter(|(_, &s)| s)
+            .map(|(sz, _)| *sz)
+            .sum()
+    }
+}
+
+/// A view-selection policy.
+pub trait Policy {
+    fn name(&self) -> &'static str;
+
+    /// Compute the per-batch allocation. `rng` drives any internal
+    /// randomization (random weight vectors, permutations).
+    fn allocate(&self, batch: &BatchUtilities, rng: &mut Pcg64) -> Allocation;
+}
+
+/// The policies compared in §5.3 plus the provably-good MW variants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    Static,
+    Lru,
+    Rsd,
+    Optp,
+    Mmf,
+    FastPf,
+    MmfMw,
+    PfMw,
+}
+
+impl PolicyKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::Static => "STATIC",
+            PolicyKind::Lru => "LRU",
+            PolicyKind::Rsd => "RSD",
+            PolicyKind::Optp => "OPTP",
+            PolicyKind::Mmf => "MMF",
+            PolicyKind::FastPf => "FASTPF",
+            PolicyKind::MmfMw => "MMF-MW",
+            PolicyKind::PfMw => "PF-MW",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PolicyKind> {
+        match s.to_ascii_uppercase().as_str() {
+            "STATIC" => Some(PolicyKind::Static),
+            "LRU" => Some(PolicyKind::Lru),
+            "RSD" => Some(PolicyKind::Rsd),
+            "OPTP" => Some(PolicyKind::Optp),
+            "MMF" => Some(PolicyKind::Mmf),
+            "FASTPF" => Some(PolicyKind::FastPf),
+            "MMF-MW" | "MMFMW" => Some(PolicyKind::MmfMw),
+            "PF-MW" | "PFMW" => Some(PolicyKind::PfMw),
+            _ => None,
+        }
+    }
+
+    /// Instantiate with default parameters.
+    pub fn build(&self) -> Box<dyn Policy> {
+        match self {
+            PolicyKind::Static => Box::new(static_part::StaticPartition),
+            PolicyKind::Lru => Box::new(lru::LeastRecentlyUsed::default()),
+            PolicyKind::Rsd => Box::new(rsd::RandomSerialDictatorship::default()),
+            PolicyKind::Optp => Box::new(optp::UtilityMax),
+            PolicyKind::Mmf => Box::new(mmf::MaxMinFair::default()),
+            PolicyKind::FastPf => Box::new(fastpf::FastPf::default()),
+            PolicyKind::MmfMw => Box::new(mmf_mw::SimpleMmfMw::default()),
+            PolicyKind::PfMw => Box::new(pf_mw::PfMw::default()),
+        }
+    }
+}
+
+pub mod instances {
+    //! Instance builders for the paper's canonical examples (Tables 2–5)
+    //! — shared by tests, benches, the fairness audit example, and the
+    //! Lemma 1/2 analyses.
+
+    use crate::domain::dataset::DatasetCatalog;
+    use crate::domain::query::{Query, QueryId};
+    use crate::domain::tenant::{TenantId, TenantSet};
+    use crate::domain::utility::BatchUtilities;
+    use crate::domain::view::{ViewCatalog, ViewId, ViewKind};
+
+    /// Build a unit-size-views instance from a utility matrix
+    /// `util[tenant][view]` with cache budget `budget` (in view units).
+    pub fn matrix_instance(util: &[&[u64]], budget: f64) -> BatchUtilities {
+        let n_tenants = util.len();
+        let n_views = util[0].len();
+        let mut ds = DatasetCatalog::new();
+        let mut vc = ViewCatalog::new();
+        for v in 0..n_views {
+            let d = ds.add(&format!("d{v}"), 100);
+            vc.add(&format!("v{v}"), d, ViewKind::BaseTable, 100, 100);
+        }
+        let ts = TenantSet::equal(n_tenants);
+        let mut queries = Vec::new();
+        let mut qid = 0u64;
+        for (t, row) in util.iter().enumerate() {
+            for (v, &u) in row.iter().enumerate() {
+                if u > 0 {
+                    qid += 1;
+                    queries.push(Query {
+                        id: QueryId(qid),
+                        tenant: TenantId(t),
+                        arrival: 0.0,
+                        template: format!("t{t}v{v}"),
+                        required_views: vec![ViewId(v)],
+                        bytes_read: u,
+                        compute_cost: 0.0,
+                    });
+                }
+            }
+        }
+        BatchUtilities::build(&ts, &vc, budget * 100.0, &queries, None)
+    }
+
+    /// Table 2: three tenants each wanting a different unit view.
+    pub fn table2() -> BatchUtilities {
+        matrix_instance(&[&[1, 0, 0], &[0, 1, 0], &[0, 0, 1]], 1.0)
+    }
+
+    /// Table 3: shared secondary preference.
+    pub fn table3() -> BatchUtilities {
+        matrix_instance(&[&[2, 1, 0], &[0, 1, 0], &[0, 1, 2]], 1.0)
+    }
+
+    /// Table 4: N−1 tenants want R, one wants S (here N = 4).
+    pub fn table4(n: usize) -> BatchUtilities {
+        let rows: Vec<Vec<u64>> = (0..n)
+            .map(|i| if i < n - 1 { vec![1, 0] } else { vec![0, 1] })
+            .collect();
+        let refs: Vec<&[u64]> = rows.iter().map(|r| r.as_slice()).collect();
+        matrix_instance(&refs, 1.0)
+    }
+
+    /// Table 5: the envy counterexample.
+    pub fn table5() -> BatchUtilities {
+        matrix_instance(&[&[0, 1], &[100, 1]], 1.0)
+    }
+}
+
+#[cfg(test)]
+pub(crate) use instances as testing;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocation_normalization_and_merge() {
+        let a = Allocation::from_weighted(vec![
+            (vec![true, false], 1.0),
+            (vec![false, true], 2.0),
+            (vec![true, false], 1.0),
+        ]);
+        assert_eq!(a.configs.len(), 2);
+        assert!((a.total_probability() - 1.0).abs() < 1e-12);
+        let p_r = a
+            .configs
+            .iter()
+            .zip(&a.probs)
+            .find(|(c, _)| c[0])
+            .unwrap()
+            .1;
+        assert!((p_r - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_weight_allocation_panics() {
+        Allocation::from_weighted(vec![(vec![true], 0.0)]);
+    }
+
+    #[test]
+    fn expected_utilities_table2() {
+        let b = testing::table2();
+        let a = Allocation::from_weighted(vec![
+            (vec![true, false, false], 1.0),
+            (vec![false, true, false], 1.0),
+            (vec![false, false, true], 1.0),
+        ]);
+        let v = a.expected_scaled_utilities(&b);
+        for vi in v {
+            assert!((vi - 1.0 / 3.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn sampling_respects_distribution() {
+        let a = Allocation::from_weighted(vec![
+            (vec![true, false], 3.0),
+            (vec![false, true], 1.0),
+        ]);
+        let mut rng = Pcg64::new(5);
+        let mut count_r = 0;
+        for _ in 0..20_000 {
+            if a.sample(&mut rng)[0] {
+                count_r += 1;
+            }
+        }
+        let frac = count_r as f64 / 20_000.0;
+        assert!((frac - 0.75).abs() < 0.02, "frac={frac}");
+    }
+
+    #[test]
+    fn policy_kind_parse_roundtrip() {
+        for k in [
+            PolicyKind::Static,
+            PolicyKind::Lru,
+            PolicyKind::Rsd,
+            PolicyKind::Optp,
+            PolicyKind::Mmf,
+            PolicyKind::FastPf,
+            PolicyKind::MmfMw,
+            PolicyKind::PfMw,
+        ] {
+            assert_eq!(PolicyKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(PolicyKind::parse("nope"), None);
+    }
+}

@@ -1,0 +1,195 @@
+//! The Arora–Hazan–Kale multiplicative-weights procedure (Algorithm 1):
+//! decide feasibility of `Ax ≥ b, x ∈ P` to additive precision δ using an
+//! ORACLE that maximizes `yᵀAx` over `P` for dual weights `y`.
+//!
+//! The matrix A is implicit: the caller provides the oracle, which
+//! returns both a point's identifier and its per-constraint slacks
+//! `a_i·x − b_i`. Theorem 3's guarantee: if the system is feasible, the
+//! averaged iterate satisfies every constraint up to additive δ.
+
+/// Outcome of an AHK run.
+#[derive(Debug, Clone)]
+pub enum AhkOutcome<X> {
+    /// The averaged iterates (uniform weight over `points`).
+    Feasible { points: Vec<X> },
+    /// A dual certificate was found: `yᵀAx < yᵀb` for all x ∈ P.
+    Infeasible,
+}
+
+/// Parameters for the AHK loop. `rho` is the width
+/// ρ = max_i max_{x∈P} |a_i·x − b_i|; `delta` the additive precision.
+#[derive(Debug, Clone)]
+pub struct AhkParams {
+    pub rho: f64,
+    pub delta: f64,
+    /// Hard cap on iterations (the theory needs 4ρ²ln(r)/δ², which can be
+    /// large; experiments cap it and accept the weaker guarantee).
+    pub max_iters: usize,
+}
+
+impl AhkParams {
+    /// The theoretical iteration count K = 4ρ² ln(r) / δ², capped.
+    pub fn iterations(&self, r: usize) -> usize {
+        let k = (4.0 * self.rho * self.rho * (r.max(2) as f64).ln()
+            / (self.delta * self.delta))
+            .ceil() as usize;
+        k.clamp(1, self.max_iters)
+    }
+}
+
+/// One oracle response: an abstract point, its oracle value `yᵀAx`, and
+/// the slack vector `a_i·x − b_i` for every constraint.
+pub struct OracleResponse<X> {
+    pub point: X,
+    pub value: f64,
+    pub slacks: Vec<f64>,
+}
+
+/// Run AHK over `r` constraints. `y_dot_b` computes `yᵀb` for the current
+/// duals; `oracle` returns the best point for the duals.
+pub fn ahk<X, F>(r: usize, params: &AhkParams, y_dot_b: impl Fn(&[f64]) -> f64, mut oracle: F) -> AhkOutcome<X>
+where
+    F: FnMut(&[f64]) -> OracleResponse<X>,
+{
+    let iters = params.iterations(r);
+    let mut y = vec![1.0 / r as f64; r];
+    let mut points = Vec::with_capacity(iters);
+    for _t in 0..iters {
+        let resp = oracle(&y);
+        debug_assert_eq!(resp.slacks.len(), r);
+        if resp.value < y_dot_b(&y) - 1e-12 {
+            return AhkOutcome::Infeasible;
+        }
+        // Multiplicative update (Algorithm 1 lines 7-12): constraints
+        // with positive slack get down-weighted, violated constraints
+        // up-weighted.
+        for i in 0..r {
+            let m = (resp.slacks[i] / params.rho).clamp(-1.0, 1.0);
+            if m >= 0.0 {
+                y[i] *= (1.0 - params.delta).powf(m);
+            } else {
+                y[i] *= (1.0 + params.delta).powf(-m);
+            }
+        }
+        let norm: f64 = y.iter().sum();
+        if norm > 0.0 {
+            for yi in y.iter_mut() {
+                *yi /= norm;
+            }
+        }
+        points.push(resp.point);
+    }
+    AhkOutcome::Feasible { points }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Feasibility of x ∈ [0,1]², x₁ ≥ 0.3, x₂ ≥ 0.4 — trivially feasible;
+    /// the oracle maximizes y·x over the box (corner x = (1,1)).
+    #[test]
+    fn feasible_box_system() {
+        let params = AhkParams {
+            rho: 1.0,
+            delta: 0.05,
+            max_iters: 5000,
+        };
+        let b = [0.3, 0.4];
+        let outcome = ahk(
+            2,
+            &params,
+            |y| y[0] * b[0] + y[1] * b[1],
+            |_y| OracleResponse {
+                point: (1.0f64, 1.0f64),
+                value: 1.0,
+                slacks: vec![1.0 - b[0], 1.0 - b[1]],
+            },
+        );
+        match outcome {
+            AhkOutcome::Feasible { points } => assert!(!points.is_empty()),
+            _ => panic!("expected feasible"),
+        }
+    }
+
+    /// Infeasible: x ∈ [0,1], need x ≥ 0.6 and 1−x ≥ 0.6. For ANY duals,
+    /// max_x yᵀAx = max_x (y₁x + y₂(1−x)) = max(y₁, y₂) < 0.6 = yᵀb
+    /// whenever min(y₁,y₂) large... actually max(y₁,y₂) ≥ 1/2 ≥ ... use
+    /// tighter: need x ≥ 0.9 and 1−x ≥ 0.9: yᵀb = 0.9, oracle max =
+    /// max(y₁, y₂) ≤ 1 but with y₁=y₂=0.5 oracle = 0.5 < 0.9 → infeasible
+    /// detected at the first iteration.
+    #[test]
+    fn infeasible_interval_system() {
+        let params = AhkParams {
+            rho: 1.0,
+            delta: 0.1,
+            max_iters: 100,
+        };
+        let outcome = ahk(
+            2,
+            &params,
+            |y| 0.9 * (y[0] + y[1]),
+            |y| {
+                // maximize y₁x + y₂(1−x) over [0,1]: pick x = 1 if y₁≥y₂.
+                let x = if y[0] >= y[1] { 1.0 } else { 0.0 };
+                OracleResponse {
+                    point: x,
+                    value: y[0] * x + y[1] * (1.0 - x),
+                    slacks: vec![x - 0.9, (1.0 - x) - 0.9],
+                }
+            },
+        );
+        assert!(matches!(outcome, AhkOutcome::Infeasible));
+    }
+
+    /// Averaged iterates approximately satisfy a genuinely mixing system:
+    /// x ∈ {(1,0),(0,1)} (vertices), constraints x₁ ≥ 0.45, x₂ ≥ 0.45.
+    /// Only the *average* (½,½) satisfies them — classic MW behaviour.
+    #[test]
+    fn averaging_mixes_vertices() {
+        let params = AhkParams {
+            rho: 1.0,
+            delta: 0.02,
+            max_iters: 20_000,
+        };
+        let outcome = ahk(
+            2,
+            &params,
+            |y| 0.45 * (y[0] + y[1]),
+            |y: &[f64]| {
+                let pick0 = y[0] >= y[1];
+                let (x1, x2) = if pick0 { (1.0, 0.0) } else { (0.0, 1.0) };
+                OracleResponse {
+                    point: (x1, x2),
+                    value: y[0] * x1 + y[1] * x2,
+                    slacks: vec![x1 - 0.45, x2 - 0.45],
+                }
+            },
+        );
+        let AhkOutcome::Feasible { points } = outcome else {
+            panic!("expected feasible");
+        };
+        let n = points.len() as f64;
+        let avg1: f64 = points.iter().map(|p| p.0).sum::<f64>() / n;
+        let avg2: f64 = points.iter().map(|p| p.1).sum::<f64>() / n;
+        assert!(avg1 >= 0.45 - 0.05, "avg1={avg1}");
+        assert!(avg2 >= 0.45 - 0.05, "avg2={avg2}");
+    }
+
+    #[test]
+    fn iteration_formula() {
+        let p = AhkParams {
+            rho: 1.0,
+            delta: 0.1,
+            max_iters: 1_000_000,
+        };
+        // 4·ln(4)/0.01 ≈ 555.
+        let k = p.iterations(4);
+        assert!((500..600).contains(&k), "k={k}");
+        let capped = AhkParams {
+            max_iters: 10,
+            ..p
+        };
+        assert_eq!(capped.iterations(4), 10);
+    }
+}

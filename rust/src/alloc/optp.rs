@@ -1,0 +1,58 @@
+//! OPTP (§5.3): pure utility maximization — treat the whole batch as one
+//! tenant and cache the configuration with the highest total raw utility
+//! (I/O savings). Pareto-efficient but not Sharing Incentive: tenants
+//! who contribute little to total utility can be starved (§3.2,
+//! Figure 9's empirical demonstration).
+
+use crate::alloc::{Allocation, Policy};
+use crate::domain::utility::BatchUtilities;
+use crate::util::rng::Pcg64;
+
+#[derive(Debug, Default)]
+pub struct UtilityMax;
+
+impl Policy for UtilityMax {
+    fn name(&self) -> &'static str {
+        "OPTP"
+    }
+
+    fn allocate(&self, batch: &BatchUtilities, _rng: &mut Pcg64) -> Allocation {
+        let sol = batch.total_utility_problem().solve_exact();
+        Allocation::deterministic(sol.selected)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::testing::{matrix_instance, table3, table5};
+
+    #[test]
+    fn picks_highest_total_utility() {
+        // Table 3 raw utilities: R→2, S→3, P→2; OPTP caches S.
+        let b = table3();
+        let a = UtilityMax.allocate(&b, &mut Pcg64::new(0));
+        assert_eq!(a.configs[0], vec![false, true, false]);
+    }
+
+    #[test]
+    fn starves_minority_tenant() {
+        // Table 5: R is worth 100 to B; S worth 1+1. OPTP caches R,
+        // giving tenant A nothing → not SI.
+        let b = table5();
+        let a = UtilityMax.allocate(&b, &mut Pcg64::new(0));
+        assert_eq!(a.configs[0], vec![true, false]);
+        let v = a.expected_scaled_utilities(&b);
+        assert_eq!(v[0], 0.0);
+    }
+
+    #[test]
+    fn uses_budget_for_multiple_views() {
+        let b = matrix_instance(&[&[5, 3, 1], &[0, 2, 4]], 2.0);
+        let a = UtilityMax.allocate(&b, &mut Pcg64::new(0));
+        // Best pair: views {0,1} = 5+3+2 = 10 vs {0,2} = 5+1+4 = 10 vs
+        // {1,2} = 3+2+1+4 = 10 — all tie at 10; any 2-view answer is
+        // optimal.
+        assert_eq!(a.configs[0].iter().filter(|&&s| s).count(), 2);
+    }
+}

@@ -1,0 +1,231 @@
+//! PF-MW (§4.1, Theorem 4): the provably-good additive-ε approximation of
+//! proportional fairness via PFFEAS(Q) feasibility checks inside a binary
+//! search over Q ∈ [−N·log N, 0].
+//!
+//! PFFEAS(Q) (Definition 6) decides feasibility of
+//!   (F)  Σ_S x_S·V_i(S) − γ_i ≥ 0  ∀i
+//! over (P1) ‖x‖ ≤ 1, x ≥ 0 and (P2) Σ_i log γ_i ≥ Q, γ_i ∈ [1/N, 1]
+//! with the AHK procedure. The oracle decouples (virtual-welfare style):
+//!   · the x part is WELFARE(y) — put all mass on the best configuration;
+//!   · the γ part minimizes Σ y_i·γ_i over (P2) by the Lagrangian
+//!     parametric search γ_i(L) = clamp(L/y_i, 1/N, 1) with L chosen so
+//!     Σ log γ_i(L) = Q.
+
+use crate::alloc::mw::{ahk, AhkOutcome, AhkParams, OracleResponse};
+use crate::alloc::{Allocation, Policy};
+use crate::domain::utility::BatchUtilities;
+use crate::util::rng::Pcg64;
+
+#[derive(Debug)]
+pub struct PfMw {
+    /// Additive approximation target ε.
+    pub epsilon: f64,
+    /// Cap on AHK iterations per feasibility check (theory: 4N⁴logN/ε²).
+    pub max_iters: usize,
+    /// Binary-search iterations over Q.
+    pub search_steps: usize,
+}
+
+impl Default for PfMw {
+    fn default() -> Self {
+        Self {
+            epsilon: 0.1,
+            max_iters: 600,
+            search_steps: 12,
+        }
+    }
+}
+
+/// Minimize Σ y_i γ_i subject to Σ log γ_i ≥ Q, γ_i ∈ [1/N, 1]:
+/// parametric search over the Lagrange multiplier L (γ is non-decreasing
+/// in L, so bisect L until the log-sum constraint is tight).
+fn min_gamma(y: &[f64], q: f64, n: usize) -> Vec<f64> {
+    let lo_g = 1.0 / n as f64;
+    let gamma_at = |l: f64| -> Vec<f64> {
+        y.iter()
+            .map(|&yi| {
+                if yi <= 1e-15 {
+                    // Zero dual weight: γ free; push to upper bound to help
+                    // feasibility of Σ log γ ≥ Q at no cost.
+                    1.0
+                } else {
+                    (l / yi).clamp(lo_g, 1.0)
+                }
+            })
+            .collect()
+    };
+    let logsum = |g: &[f64]| -> f64 { g.iter().map(|x| x.ln()).sum() };
+
+    // If even γ = 1 everywhere misses Q (q > 0) the constraint is
+    // trivially tight at γ = 1; if γ = 1/N satisfies it, take the minimum.
+    if logsum(&gamma_at(0.0)) >= q {
+        return gamma_at(0.0);
+    }
+    let mut lo = 0.0f64;
+    let mut hi = y.iter().cloned().fold(0.0, f64::max).max(1e-9); // γ all 1 at L ≥ max y
+    for _ in 0..80 {
+        let mid = 0.5 * (lo + hi);
+        if logsum(&gamma_at(mid)) >= q {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    gamma_at(hi)
+}
+
+impl PfMw {
+    /// One PFFEAS(Q) check over active tenants. Returns the configuration
+    /// sequence of the feasible run (to be averaged) or None.
+    fn pf_feas(
+        &self,
+        batch: &BatchUtilities,
+        active: &[usize],
+        q: f64,
+    ) -> Option<Vec<Vec<bool>>> {
+        let n = active.len();
+        let params = AhkParams {
+            rho: 1.0,
+            delta: (self.epsilon / (n * n) as f64).max(1e-3),
+            max_iters: self.max_iters,
+        };
+        let outcome = ahk(
+            n,
+            &params,
+            |_y| 0.0, // b = 0
+            |y: &[f64]| {
+                // x part: WELFARE(y) over the full configuration space.
+                let mut full_w = vec![0.0; batch.n_tenants];
+                for (j, &i) in active.iter().enumerate() {
+                    full_w[i] = y[j];
+                }
+                let sol = batch.welfare_problem(&full_w).solve_exact();
+                let v = batch.scaled_utilities(&sol.selected);
+                // γ part: minimize Σ y_i γ_i over (P2).
+                let gamma = min_gamma(y, q, n);
+                let value: f64 = active
+                    .iter()
+                    .enumerate()
+                    .map(|(j, &i)| y[j] * (v[i] - gamma[j]))
+                    .sum();
+                let slacks: Vec<f64> = active
+                    .iter()
+                    .enumerate()
+                    .map(|(j, &i)| v[i] - gamma[j])
+                    .collect();
+                OracleResponse {
+                    point: sol.selected,
+                    value,
+                    slacks,
+                }
+            },
+        );
+        match outcome {
+            AhkOutcome::Feasible { points } => Some(points),
+            AhkOutcome::Infeasible => None,
+        }
+    }
+
+    /// Binary search for the largest feasible Q; returns the allocation
+    /// from the last feasible run.
+    pub fn solve(&self, batch: &BatchUtilities) -> Vec<(Vec<bool>, f64)> {
+        let active = batch.active_tenants();
+        let n = active.len();
+        if n == 0 {
+            return vec![(vec![false; batch.n_views()], 1.0)];
+        }
+        let mut lo = -(n as f64) * (n as f64).ln() - 1e-9; // Q of all-SI floor
+        let mut hi = 0.0;
+        // Q = lo is always feasible (the SI allocation exists: RSD's).
+        let mut best = self.pf_feas(batch, &active, lo);
+        if best.is_none() {
+            // Extremely degenerate batch; fall back to empty config.
+            return vec![(vec![false; batch.n_views()], 1.0)];
+        }
+        for _ in 0..self.search_steps {
+            let mid = 0.5 * (lo + hi);
+            match self.pf_feas(batch, &active, mid) {
+                Some(points) => {
+                    best = Some(points);
+                    lo = mid;
+                }
+                None => {
+                    hi = mid;
+                }
+            }
+        }
+        let points = best.unwrap();
+        let w = 1.0 / points.len() as f64;
+        points.into_iter().map(|p| (p, w)).collect()
+    }
+}
+
+impl Policy for PfMw {
+    fn name(&self) -> &'static str {
+        "PF-MW"
+    }
+
+    fn allocate(&self, batch: &BatchUtilities, _rng: &mut Pcg64) -> Allocation {
+        Allocation::from_weighted(self.solve(batch))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::testing::{table2, table4, table5};
+
+    #[test]
+    fn min_gamma_respects_bounds_and_constraint() {
+        let y = [0.5, 0.3, 0.2];
+        let n = 3;
+        let q = -1.5;
+        let g = min_gamma(&y, q, n);
+        for &gi in &g {
+            assert!((1.0 / 3.0 - 1e-9..=1.0 + 1e-9).contains(&gi), "g={g:?}");
+        }
+        let logsum: f64 = g.iter().map(|x| x.ln()).sum();
+        assert!(logsum >= q - 1e-6, "logsum={logsum} q={q}");
+    }
+
+    #[test]
+    fn min_gamma_zero_q_all_ones() {
+        let g = min_gamma(&[0.5, 0.5], 0.0, 2);
+        assert!(g.iter().all(|&x| (x - 1.0).abs() < 1e-9));
+    }
+
+    #[test]
+    fn table2_near_equal_split() {
+        let b = table2();
+        let a = PfMw::default().allocate(&b, &mut Pcg64::new(0));
+        let v = a.expected_scaled_utilities(&b);
+        // PF optimum: 1/3 each. The capped-iteration MW run should be in
+        // the right neighbourhood.
+        for vi in &v {
+            assert!((0.2..0.5).contains(vi), "v={v:?}");
+        }
+    }
+
+    #[test]
+    fn table4_biases_toward_shared_view() {
+        // PF: x_R = 3/4 for N = 4 — the MW approximation should put more
+        // mass on R than on S (unlike MMF's ½/½).
+        let b = table4(4);
+        let a = PfMw::default().allocate(&b, &mut Pcg64::new(0));
+        let v = a.expected_scaled_utilities(&b);
+        // Majority tenants should clear 0.6 (ideal 0.75).
+        assert!(v[0] > 0.6, "v={v:?}");
+        // The minority tenant keeps a positive share (ideal 0.25).
+        assert!(v[3] > 0.1, "v={v:?}");
+    }
+
+    #[test]
+    fn table5_si_floor_respected() {
+        let b = table5();
+        let a = PfMw::default().allocate(&b, &mut Pcg64::new(0));
+        let v = a.expected_scaled_utilities(&b);
+        for vi in &v {
+            assert!(*vi >= 0.5 - 0.12, "v={v:?}");
+        }
+    }
+}

@@ -1,0 +1,82 @@
+//! STATIC (§5.3): the cache is partitioned across tenants in proportion
+//! to their weights; each tenant independently caches its best views
+//! within its own partition. Deterministic, trivially "fair" in cache
+//! bytes, but Pareto-dominated whenever preferred views exceed the
+//! partition size (§1 Scenario 1, §3.2).
+
+use crate::alloc::{Allocation, Policy};
+use crate::domain::utility::BatchUtilities;
+use crate::util::rng::Pcg64;
+
+#[derive(Debug, Default)]
+pub struct StaticPartition;
+
+impl Policy for StaticPartition {
+    fn name(&self) -> &'static str {
+        "STATIC"
+    }
+
+    fn allocate(&self, batch: &BatchUtilities, _rng: &mut Pcg64) -> Allocation {
+        let total_weight: f64 = batch.weights.iter().sum();
+        let mut selected = vec![false; batch.n_views()];
+        for tenant in 0..batch.n_tenants {
+            let share = batch.budget * batch.weights[tenant] / total_weight;
+            // The tenant's solo knapsack within its partition.
+            let mut problem = batch.welfare_problem(&unit(batch.n_tenants, tenant));
+            problem.budget = share;
+            let sol = problem.solve_exact();
+            // Views selected by multiple tenants occupy one copy; STATIC
+            // still charges each partition, so the union is feasible in
+            // the real (shared) cache.
+            for (v, &s) in sol.selected.iter().enumerate() {
+                selected[v] |= s;
+            }
+        }
+        debug_assert!(batch.size_of(&selected) <= batch.budget * (1.0 + 1e-9) + 1.0);
+        Allocation::deterministic(selected)
+    }
+}
+
+fn unit(n: usize, i: usize) -> Vec<f64> {
+    let mut w = vec![0.0; n];
+    w[i] = 1.0;
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::testing::{matrix_instance, table2};
+
+    #[test]
+    fn nothing_fits_in_partitions() {
+        // Table 2 with cache = 1 view and 3 tenants: each partition is
+        // 1/3 view — nothing fits (§1 Scenario 1).
+        let b = table2();
+        let a = StaticPartition.allocate(&b, &mut Pcg64::new(0));
+        assert_eq!(a.configs.len(), 1);
+        assert!(a.configs[0].iter().all(|&s| !s));
+        let v = a.expected_scaled_utilities(&b);
+        assert!(v.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn partitions_cache_small_views() {
+        // Two tenants, budget 2 units → each gets 1 unit and caches its
+        // preferred view.
+        let b = matrix_instance(&[&[5, 0], &[0, 3]], 2.0);
+        let a = StaticPartition.allocate(&b, &mut Pcg64::new(0));
+        assert_eq!(a.configs[0], vec![true, true]);
+        let v = a.expected_scaled_utilities(&b);
+        assert_eq!(v, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn shared_views_not_double_cached() {
+        // Both tenants want the same unit view; partitions of 1 each.
+        let b = matrix_instance(&[&[7], &[9]], 2.0);
+        let a = StaticPartition.allocate(&b, &mut Pcg64::new(0));
+        assert_eq!(a.configs[0], vec![true]);
+        assert!(b.size_of(&a.configs[0]) <= b.budget);
+    }
+}

@@ -1,0 +1,191 @@
+//! The cache manager: tracks which candidate views are materialized,
+//! applies per-batch configuration updates (lazily — Spark materializes
+//! a marked view when the first query touches it, §5.1), and produces
+//! the stateful utility boost of §5.4 (already-cached views get their
+//! estimated benefit multiplied by γ > 1, making them likelier to stay).
+
+/// Views loaded/evicted by one update.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CacheDelta {
+    pub loaded: Vec<usize>,
+    pub evicted: Vec<usize>,
+}
+
+/// Cache state across batches.
+#[derive(Debug, Clone)]
+pub struct CacheManager {
+    /// Usable cache budget in bytes.
+    budget: u64,
+    /// Cached size per candidate view.
+    sizes: Vec<u64>,
+    /// Current contents.
+    cached: Vec<bool>,
+    /// Marked-for-caching but not yet materialized (first access pays
+    /// the disk read + materialization penalty).
+    pending_load: Vec<bool>,
+}
+
+impl CacheManager {
+    pub fn new(budget: u64, sizes: Vec<u64>) -> Self {
+        let n = sizes.len();
+        Self {
+            budget,
+            sizes,
+            cached: vec![false; n],
+            pending_load: vec![false; n],
+        }
+    }
+
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    pub fn n_views(&self) -> usize {
+        self.sizes.len()
+    }
+
+    pub fn cached(&self) -> &[bool] {
+        &self.cached
+    }
+
+    pub fn is_cached(&self, view: usize) -> bool {
+        self.cached[view]
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.sizes
+            .iter()
+            .zip(&self.cached)
+            .filter(|(_, &c)| c)
+            .map(|(s, _)| *s)
+            .sum()
+    }
+
+    /// Fraction of the budget occupied.
+    pub fn utilization(&self) -> f64 {
+        if self.budget == 0 {
+            return 0.0;
+        }
+        self.used_bytes() as f64 / self.budget as f64
+    }
+
+    /// Apply a target configuration (Figure 2 step 3): evict views
+    /// leaving the config, mark entering views for lazy materialization.
+    /// Panics if the target exceeds the budget — policies must produce
+    /// feasible configurations.
+    pub fn update(&mut self, target: &[bool]) -> CacheDelta {
+        assert_eq!(target.len(), self.sizes.len());
+        let target_bytes: u64 = self
+            .sizes
+            .iter()
+            .zip(target)
+            .filter(|(_, &t)| t)
+            .map(|(s, _)| *s)
+            .sum();
+        assert!(
+            target_bytes <= self.budget,
+            "target config {target_bytes}B exceeds budget {}B",
+            self.budget
+        );
+        let mut delta = CacheDelta {
+            loaded: Vec::new(),
+            evicted: Vec::new(),
+        };
+        for v in 0..self.sizes.len() {
+            match (self.cached[v], target[v]) {
+                (false, true) => {
+                    self.cached[v] = true;
+                    self.pending_load[v] = true;
+                    delta.loaded.push(v);
+                }
+                (true, false) => {
+                    self.cached[v] = false;
+                    self.pending_load[v] = false;
+                    delta.evicted.push(v);
+                }
+                _ => {}
+            }
+        }
+        delta
+    }
+
+    /// True exactly once per loaded view: the first accessor materializes
+    /// it (pays disk bandwidth + penalty); later accesses hit memory.
+    pub fn consume_materialization(&mut self, view: usize) -> bool {
+        if self.cached[view] && self.pending_load[view] {
+            self.pending_load[view] = false;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// The §5.4 stateful boost vector: γ for currently cached views,
+    /// 1.0 otherwise. Feed to [`crate::domain::BatchUtilities::build`].
+    pub fn boost_vector(&self, gamma: f64) -> Vec<f64> {
+        self.cached
+            .iter()
+            .map(|&c| if c { gamma } else { 1.0 })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn update_loads_and_evicts() {
+        let mut cm = CacheManager::new(100, vec![40, 50, 30]);
+        let d1 = cm.update(&[true, true, false]);
+        assert_eq!(d1.loaded, vec![0, 1]);
+        assert!(d1.evicted.is_empty());
+        assert_eq!(cm.used_bytes(), 90);
+        assert!((cm.utilization() - 0.9).abs() < 1e-12);
+
+        let d2 = cm.update(&[true, false, true]);
+        assert_eq!(d2.loaded, vec![2]);
+        assert_eq!(d2.evicted, vec![1]);
+        assert_eq!(cm.used_bytes(), 70);
+    }
+
+    #[test]
+    #[should_panic]
+    fn over_budget_rejected() {
+        let mut cm = CacheManager::new(100, vec![60, 60]);
+        cm.update(&[true, true]);
+    }
+
+    #[test]
+    fn lazy_materialization_consumed_once() {
+        let mut cm = CacheManager::new(100, vec![50]);
+        cm.update(&[true]);
+        assert!(cm.consume_materialization(0));
+        assert!(!cm.consume_materialization(0));
+        // Re-loading after eviction resets the flag.
+        cm.update(&[false]);
+        cm.update(&[true]);
+        assert!(cm.consume_materialization(0));
+    }
+
+    #[test]
+    fn eviction_clears_pending() {
+        let mut cm = CacheManager::new(100, vec![50]);
+        cm.update(&[true]);
+        cm.update(&[false]);
+        assert!(!cm.consume_materialization(0));
+    }
+
+    #[test]
+    fn boost_vector_gamma() {
+        let mut cm = CacheManager::new(100, vec![40, 50]);
+        cm.update(&[true, false]);
+        assert_eq!(cm.boost_vector(2.0), vec![2.0, 1.0]);
+    }
+
+    #[test]
+    fn zero_budget_utilization() {
+        let cm = CacheManager::new(0, vec![]);
+        assert_eq!(cm.utilization(), 0.0);
+    }
+}

@@ -1,0 +1,5 @@
+//! Cache state management (Figure 2 step 3 and the §5.4 stateful mode).
+
+pub mod manager;
+
+pub use manager::{CacheDelta, CacheManager};

@@ -1,0 +1,254 @@
+//! The performance metrics of §5.2: throughput (Eq. 4), the speedup-based
+//! fairness index relative to the STATIC baseline (Eq. 5), cache
+//! utilization, hit ratio, plus the convergence series of Figure 11.
+
+use crate::coordinator::loop_::RunResult;
+use crate::util::stats;
+
+/// Per-tenant mean speedups X_i of a policy run relative to a baseline
+/// run over the *same* workload (queries joined by id): the speedup of a
+/// query is baseline execution time / policy execution time; X_i is the
+/// mean over tenant i's queries. Queries missing from either run are
+/// skipped.
+pub fn per_tenant_speedups(policy: &RunResult, baseline: &RunResult) -> Vec<f64> {
+    let base = baseline.exec_times_by_id();
+    let mut sums = vec![0.0; policy.n_tenants];
+    let mut counts = vec![0usize; policy.n_tenants];
+    for o in &policy.outcomes {
+        if let Some(&(tenant, base_t)) = base.get(&o.id) {
+            debug_assert_eq!(tenant, o.tenant);
+            let exec = o.execution_time().max(1e-9);
+            sums[o.tenant] += base_t / exec;
+            counts[o.tenant] += 1;
+        }
+    }
+    sums.iter()
+        .zip(&counts)
+        .map(|(s, &c)| if c > 0 { s / c as f64 } else { 0.0 })
+        .collect()
+}
+
+/// Equation 5: Jain's index over weight-normalized mean speedups
+/// X_i/λ_i. Tenants with no queries in either run are excluded.
+pub fn fairness_index(policy: &RunResult, baseline: &RunResult) -> f64 {
+    let x = per_tenant_speedups(policy, baseline);
+    let normalized: Vec<f64> = x
+        .iter()
+        .zip(&policy.weights)
+        .filter(|(xi, _)| **xi > 0.0)
+        .map(|(xi, l)| xi / l)
+        .collect();
+    stats::jain_index(&normalized)
+}
+
+/// Fairness index computed over only the first `n_batches` batches'
+/// queries — the Figure 11 convergence series.
+pub fn fairness_index_prefix(
+    policy: &RunResult,
+    baseline: &RunResult,
+    n_batches: usize,
+) -> f64 {
+    let cutoff = policy
+        .batches
+        .get(n_batches.saturating_sub(1))
+        .map(|b| b.window_end)
+        .unwrap_or(f64::INFINITY);
+    let truncate = |r: &RunResult| -> RunResult {
+        let mut t = r.clone();
+        t.outcomes.retain(|o| o.arrival < cutoff);
+        t
+    };
+    fairness_index(&truncate(policy), &truncate(baseline))
+}
+
+/// Mean wait time per tenant (arrival → first task launch).
+pub fn mean_wait_by_tenant(run: &RunResult) -> Vec<f64> {
+    let mut sums = vec![0.0; run.n_tenants];
+    let mut counts = vec![0usize; run.n_tenants];
+    for o in &run.outcomes {
+        sums[o.tenant] += o.wait_time();
+        counts[o.tenant] += 1;
+    }
+    sums.iter()
+        .zip(&counts)
+        .map(|(s, &c)| if c > 0 { s / c as f64 } else { 0.0 })
+        .collect()
+}
+
+/// The §5.2 "wait time fairness index": Jain's index over per-tenant
+/// inverse weighted wait times (smaller wait = better; we invert so the
+/// index rewards equal service, mirroring Equation 5's structure).
+pub fn wait_time_fairness(run: &RunResult) -> f64 {
+    let waits = mean_wait_by_tenant(run);
+    let inv: Vec<f64> = waits
+        .iter()
+        .zip(&run.weights)
+        .filter(|(w, _)| **w > 0.0)
+        .map(|(w, l)| 1.0 / (w * l).max(1e-9))
+        .collect();
+    stats::jain_index(&inv)
+}
+
+/// Mean flow time (arrival → completion) across all queries.
+pub fn mean_flow_time(run: &RunResult) -> f64 {
+    if run.outcomes.is_empty() {
+        return 0.0;
+    }
+    run.outcomes.iter().map(|o| o.flow_time()).sum::<f64>()
+        / run.outcomes.len() as f64
+}
+
+/// One row of the appendix tables (Tables 15-28).
+#[derive(Debug, Clone)]
+pub struct MetricsSummary {
+    pub policy: &'static str,
+    pub throughput_per_min: f64,
+    pub avg_cache_utilization: f64,
+    pub hit_ratio: f64,
+    pub fairness_index: f64,
+}
+
+impl MetricsSummary {
+    pub fn compute(policy: &RunResult, baseline: &RunResult) -> Self {
+        Self {
+            policy: policy.policy,
+            throughput_per_min: policy.throughput_per_min(),
+            avg_cache_utilization: policy.avg_cache_utilization(),
+            hit_ratio: policy.hit_ratio(),
+            fairness_index: fairness_index(policy, baseline),
+        }
+    }
+
+    pub fn header() -> String {
+        format!(
+            "{:<22} {:>14} {:>16} {:>10} {:>15}",
+            "Metric", "Throughput/min", "Avg cache util.", "Hit ratio", "Fairness index"
+        )
+    }
+
+    pub fn row(&self) -> String {
+        format!(
+            "{:<22} {:>14.2} {:>16.2} {:>10.2} {:>15.2}",
+            self.policy,
+            self.throughput_per_min,
+            self.avg_cache_utilization,
+            self.hit_ratio,
+            self.fairness_index
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::loop_::{BatchRecord, RunResult};
+    use crate::domain::query::QueryId;
+    use crate::sim::engine::QueryOutcome;
+
+    fn outcome(id: u64, tenant: usize, exec: f64) -> QueryOutcome {
+        QueryOutcome {
+            id: QueryId(id),
+            tenant,
+            arrival: 0.0,
+            start: 0.0,
+            finish: exec,
+            from_cache: false,
+            bytes: 0,
+        }
+    }
+
+    fn run_with(outcomes: Vec<QueryOutcome>, n_tenants: usize) -> RunResult {
+        RunResult {
+            policy: "TEST",
+            outcomes,
+            batches: vec![BatchRecord {
+                index: 0,
+                n_queries: 0,
+                config: vec![],
+                cache_utilization: 0.5,
+                window_end: 40.0,
+                exec_start: 40.0,
+                exec_end: 50.0,
+                solve_secs: 0.01,
+            }],
+            end_time: 60.0,
+            n_tenants,
+            weights: vec![1.0; n_tenants],
+        }
+    }
+
+    #[test]
+    fn speedups_join_by_id() {
+        let baseline = run_with(vec![outcome(1, 0, 10.0), outcome(2, 1, 10.0)], 2);
+        let policy = run_with(vec![outcome(1, 0, 2.0), outcome(2, 1, 10.0)], 2);
+        let x = per_tenant_speedups(&policy, &baseline);
+        assert!((x[0] - 5.0).abs() < 1e-9);
+        assert!((x[1] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fairness_index_equal_speedups_is_one() {
+        let baseline = run_with(vec![outcome(1, 0, 10.0), outcome(2, 1, 8.0)], 2);
+        let policy = run_with(vec![outcome(1, 0, 5.0), outcome(2, 1, 4.0)], 2);
+        let j = fairness_index(&policy, &baseline);
+        assert!((j - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fairness_index_skewed_speedups_below_one() {
+        let baseline = run_with(vec![outcome(1, 0, 10.0), outcome(2, 1, 10.0)], 2);
+        let policy = run_with(vec![outcome(1, 0, 1.0), outcome(2, 1, 10.0)], 2);
+        let j = fairness_index(&policy, &baseline);
+        // Speedups (10, 1): J = 121/(2·101) ≈ 0.599.
+        assert!((j - 0.599).abs() < 0.001, "j={j}");
+    }
+
+    #[test]
+    fn weights_normalize_speedups() {
+        let baseline = run_with(vec![outcome(1, 0, 10.0), outcome(2, 1, 10.0)], 2);
+        let mut policy = run_with(vec![outcome(1, 0, 5.0), outcome(2, 1, 2.5)], 2);
+        // Tenant 1 has double weight and double speedup → perfectly fair.
+        policy.weights = vec![1.0, 2.0];
+        let j = fairness_index(&policy, &baseline);
+        assert!((j - 1.0).abs() < 1e-9, "j={j}");
+    }
+
+    #[test]
+    fn tenants_without_queries_excluded() {
+        let baseline = run_with(vec![outcome(1, 0, 10.0)], 3);
+        let policy = run_with(vec![outcome(1, 0, 5.0)], 3);
+        let j = fairness_index(&policy, &baseline);
+        assert!((j - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn wait_and_flow_metrics() {
+        let mut o1 = outcome(1, 0, 5.0);
+        o1.start = 2.0; // waited 2s, finished at 5s (exec 3s)
+        let mut o2 = outcome(2, 1, 9.0);
+        o2.start = 4.0;
+        let run = run_with(vec![o1, o2], 2);
+        let waits = mean_wait_by_tenant(&run);
+        assert_eq!(waits, vec![2.0, 4.0]);
+        // flow = finish − arrival = 5 and 9 → mean 7.
+        assert!((mean_flow_time(&run) - 7.0).abs() < 1e-12);
+        let j = wait_time_fairness(&run);
+        assert!((0.0..=1.0).contains(&j));
+        // Equal waits → perfectly fair.
+        let mut e1 = outcome(3, 0, 5.0);
+        e1.start = 3.0;
+        let mut e2 = outcome(4, 1, 6.0);
+        e2.start = 3.0;
+        let eq = run_with(vec![e1, e2], 2);
+        assert!((wait_time_fairness(&eq) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_row_format() {
+        let baseline = run_with(vec![outcome(1, 0, 10.0)], 1);
+        let policy = run_with(vec![outcome(1, 0, 5.0)], 1);
+        let s = MetricsSummary::compute(&policy, &baseline);
+        assert!(s.row().contains("TEST"));
+        assert!(MetricsSummary::header().contains("Throughput"));
+    }
+}

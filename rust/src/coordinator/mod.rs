@@ -1,0 +1,8 @@
+//! The ROBUS coordinator (Figure 2): the five-step batched loop plus the
+//! performance metrics of §5.2.
+
+pub mod loop_;
+pub mod metrics;
+
+pub use loop_::{Coordinator, CoordinatorConfig, RunResult};
+pub use metrics::{fairness_index, per_tenant_speedups, MetricsSummary};

@@ -1,0 +1,84 @@
+//! On-disk datasets: the raw inputs queries scan. A dataset is identified
+//! by an index into a [`DatasetCatalog`]; candidate *views* over datasets
+//! (base tables or vertical projections) live in [`crate::domain::view`].
+
+pub const KB: u64 = 1 << 10;
+pub const MB: u64 = 1 << 20;
+pub const GB: u64 = 1 << 30;
+
+/// Index of a dataset within its catalog.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct DatasetId(pub usize);
+
+/// One on-disk dataset.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub id: DatasetId,
+    pub name: String,
+    /// Bytes on disk (what a full scan reads when uncached).
+    pub disk_bytes: u64,
+}
+
+/// An ordered collection of datasets.
+#[derive(Debug, Clone, Default)]
+pub struct DatasetCatalog {
+    datasets: Vec<Dataset>,
+}
+
+impl DatasetCatalog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, name: &str, disk_bytes: u64) -> DatasetId {
+        let id = DatasetId(self.datasets.len());
+        self.datasets.push(Dataset {
+            id,
+            name: name.to_string(),
+            disk_bytes,
+        });
+        id
+    }
+
+    pub fn get(&self, id: DatasetId) -> &Dataset {
+        &self.datasets[id.0]
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&Dataset> {
+        self.datasets.iter().find(|d| d.name == name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.datasets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.datasets.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Dataset> {
+        self.datasets.iter()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.datasets.iter().map(|d| d.disk_bytes).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_basics() {
+        let mut cat = DatasetCatalog::new();
+        let a = cat.add("store_sales_01", 20 * GB);
+        let b = cat.add("web_sales_01", 5 * GB);
+        assert_eq!(cat.len(), 2);
+        assert_eq!(cat.get(a).name, "store_sales_01");
+        assert_eq!(cat.get(b).disk_bytes, 5 * GB);
+        assert_eq!(cat.by_name("web_sales_01").unwrap().id, b);
+        assert!(cat.by_name("nope").is_none());
+        assert_eq!(cat.total_bytes(), 25 * GB);
+    }
+}

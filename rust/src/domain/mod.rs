@@ -1,0 +1,16 @@
+//! Domain model: datasets, cacheable views, query classes, tenants, and
+//! the tenant-utility estimation model of §2/§5.1.
+
+pub mod dataset;
+pub mod query;
+pub mod sales;
+pub mod tenant;
+pub mod tpch;
+pub mod utility;
+pub mod view;
+
+pub use dataset::{Dataset, DatasetCatalog, DatasetId, GB, MB};
+pub use query::{Query, QueryId};
+pub use tenant::{Tenant, TenantId, TenantSet};
+pub use utility::{BatchUtilities, UtilityModel};
+pub use view::{View, ViewCatalog, ViewId, ViewKind};

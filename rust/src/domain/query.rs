@@ -1,0 +1,59 @@
+//! Queries: one submitted unit of work. A query belongs to a tenant,
+//! arrives at a point in (simulated) time, reads a set of datasets, and —
+//! per the candidate-view generation — can be answered off a set of
+//! candidate views if they are all cached (§5.1's all-or-nothing model).
+
+use crate::domain::tenant::TenantId;
+use crate::domain::view::ViewId;
+
+/// Globally unique query identifier within a run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct QueryId(pub u64);
+
+/// One query instance.
+#[derive(Debug, Clone)]
+pub struct Query {
+    pub id: QueryId,
+    pub tenant: TenantId,
+    /// Simulated submission time (seconds).
+    pub arrival: f64,
+    /// Template/label for reporting (e.g. "tpch-q5", "sales-scan-12").
+    pub template: String,
+    /// Candidate views that must ALL be cached for this query to benefit.
+    pub required_views: Vec<ViewId>,
+    /// Bytes of disk I/O the query performs when nothing is cached — the
+    /// utility it receives when its views are cached (I/O savings, §2).
+    pub bytes_read: u64,
+    /// Non-I/O compute cost in core-seconds (aggregation, joins); gives
+    /// TPC-H queries their heavier-than-scan execution profile in the
+    /// simulator.
+    pub compute_cost: f64,
+}
+
+impl Query {
+    /// True if `cached` (indexed by ViewId) covers all required views.
+    pub fn satisfied_by(&self, cached: &[bool]) -> bool {
+        self.required_views.iter().all(|v| cached[v.0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn satisfaction_is_all_or_nothing() {
+        let q = Query {
+            id: QueryId(1),
+            tenant: TenantId(0),
+            arrival: 0.0,
+            template: "t".into(),
+            required_views: vec![ViewId(0), ViewId(2)],
+            bytes_read: 100,
+            compute_cost: 1.0,
+        };
+        assert!(q.satisfied_by(&[true, false, true]));
+        assert!(!q.satisfied_by(&[true, true, false]));
+        assert!(!q.satisfied_by(&[false, false, true]));
+    }
+}

@@ -1,0 +1,114 @@
+//! The synthetic "Sales" catalog of §5.1: 30 datasets matching the
+//! TPC-DS sales-table schemas (store_sales / catalog_sales / web_sales),
+//! totalling ~600 GB on disk, each with one vertical-projection candidate
+//! view over its most frequently accessed columns. Cached view sizes
+//! range from 118 MB to 3.6 GB, matching Figure 3's profile.
+
+use crate::domain::dataset::{DatasetCatalog, DatasetId, GB, MB};
+use crate::domain::view::{ViewCatalog, ViewId, ViewKind};
+
+/// Number of Sales datasets (per §5.1).
+pub const NUM_SALES_DATASETS: usize = 30;
+/// Smallest and largest candidate-view cache footprints (Figure 3).
+pub const MIN_VIEW_BYTES: u64 = 118 * MB;
+pub const MAX_VIEW_BYTES: u64 = 3686 * MB; // 3.6 GB
+
+/// The generated Sales catalog: datasets plus one projection view each.
+#[derive(Debug, Clone)]
+pub struct SalesCatalog {
+    pub datasets: DatasetCatalog,
+    pub views: ViewCatalog,
+    /// `views[i]` materializes `datasets[i]`.
+    pub view_of_dataset: Vec<ViewId>,
+}
+
+impl SalesCatalog {
+    /// Build the deterministic catalog. View cache sizes are log-spaced
+    /// from `MAX_VIEW_BYTES` down to `MIN_VIEW_BYTES` (dataset 0 is the
+    /// largest — workload Zipf permutations decide which dataset is
+    /// *popular*, so fixing the size order loses no generality). Disk
+    /// sizes scale the projections back up so the catalog totals ~600 GB,
+    /// mirroring "views on the most frequently accessed columns" being a
+    /// small fraction of the raw fact data.
+    pub fn build() -> Self {
+        let mut datasets = DatasetCatalog::new();
+        let mut views = ViewCatalog::new();
+        let mut view_of_dataset = Vec::with_capacity(NUM_SALES_DATASETS);
+
+        let n = NUM_SALES_DATASETS;
+        let ratio = MAX_VIEW_BYTES as f64 / MIN_VIEW_BYTES as f64;
+        // Projection cache sizes, log-spaced.
+        let view_sizes: Vec<u64> = (0..n)
+            .map(|i| {
+                let frac = i as f64 / (n - 1) as f64;
+                (MAX_VIEW_BYTES as f64 / ratio.powf(frac)).round() as u64
+            })
+            .collect();
+        let view_total: f64 = view_sizes.iter().map(|&b| b as f64).sum();
+        // Scale disk sizes so the catalog totals 600 GB.
+        let disk_scale = (600.0 * GB as f64) / view_total;
+
+        // Schema names cycle through the three TPC-DS sales tables.
+        const SCHEMAS: [&str; 3] = ["store_sales", "catalog_sales", "web_sales"];
+        for (i, &vbytes) in view_sizes.iter().enumerate() {
+            let name = format!("{}_{:02}", SCHEMAS[i % 3], i);
+            let disk = (vbytes as f64 * disk_scale).round() as u64;
+            let d = datasets.add(&name, disk);
+            let v = views.add(
+                &format!("{name}_proj"),
+                d,
+                ViewKind::VerticalProjection,
+                vbytes,
+                vbytes, // projected columns on disk ≈ cached footprint
+            );
+            view_of_dataset.push(v);
+        }
+
+        Self {
+            datasets,
+            views,
+            view_of_dataset,
+        }
+    }
+
+    /// The projection view over dataset `d`.
+    pub fn view_for(&self, d: DatasetId) -> ViewId {
+        self.view_of_dataset[d.0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure3_profile() {
+        let cat = SalesCatalog::build();
+        assert_eq!(cat.datasets.len(), 30);
+        assert_eq!(cat.views.len(), 30);
+        let sizes: Vec<u64> = cat.views.iter().map(|v| v.cached_bytes).collect();
+        assert_eq!(*sizes.iter().max().unwrap(), MAX_VIEW_BYTES);
+        assert_eq!(*sizes.iter().min().unwrap(), MIN_VIEW_BYTES);
+        // Monotone decreasing (dataset 0 is largest).
+        for w in sizes.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+    }
+
+    #[test]
+    fn disk_total_is_600gb() {
+        let cat = SalesCatalog::build();
+        let total = cat.datasets.total_bytes() as f64 / GB as f64;
+        assert!((total - 600.0).abs() < 1.0, "total={total} GB");
+    }
+
+    #[test]
+    fn views_map_to_datasets() {
+        let cat = SalesCatalog::build();
+        for d in cat.datasets.iter() {
+            let v = cat.views.get(cat.view_for(d.id));
+            assert_eq!(v.dataset, d.id);
+            assert!(v.cached_bytes < d.disk_bytes);
+        }
+    }
+}

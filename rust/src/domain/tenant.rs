@@ -1,0 +1,108 @@
+//! Tenants: each tenant submits queries to a designated queue with a
+//! weight indicating its fair share of system resources (§2). Weights
+//! enter the fairness definitions per §3.4 (weighted core) and the
+//! fairness index per Equation 5.
+
+/// Index of a tenant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TenantId(pub usize);
+
+/// One tenant (queue).
+#[derive(Debug, Clone)]
+pub struct Tenant {
+    pub id: TenantId,
+    pub name: String,
+    /// Fair-share weight λ_i (> 0); equal weights are the common case.
+    pub weight: f64,
+}
+
+/// The fixed set of tenants for a run.
+#[derive(Debug, Clone, Default)]
+pub struct TenantSet {
+    tenants: Vec<Tenant>,
+}
+
+impl TenantSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// N equally weighted tenants named tenant-0..N-1.
+    pub fn equal(n: usize) -> Self {
+        let mut s = Self::new();
+        for i in 0..n {
+            s.add(&format!("tenant-{i}"), 1.0);
+        }
+        s
+    }
+
+    pub fn add(&mut self, name: &str, weight: f64) -> TenantId {
+        assert!(weight > 0.0, "tenant weight must be positive");
+        let id = TenantId(self.tenants.len());
+        self.tenants.push(Tenant {
+            id,
+            name: name.to_string(),
+            weight,
+        });
+        id
+    }
+
+    pub fn get(&self, id: TenantId) -> &Tenant {
+        &self.tenants[id.0]
+    }
+
+    pub fn len(&self) -> usize {
+        self.tenants.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tenants.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Tenant> {
+        self.tenants.iter()
+    }
+
+    pub fn weights(&self) -> Vec<f64> {
+        self.tenants.iter().map(|t| t.weight).collect()
+    }
+
+    pub fn total_weight(&self) -> f64 {
+        self.tenants.iter().map(|t| t.weight).sum()
+    }
+
+    /// Tenant i's entitled share λ_i / Σλ (the rate endowment of §3.3 in
+    /// the weighted extension of §3.4).
+    pub fn share(&self, id: TenantId) -> f64 {
+        self.get(id).weight / self.total_weight()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn equal_tenants() {
+        let ts = TenantSet::equal(4);
+        assert_eq!(ts.len(), 4);
+        assert_eq!(ts.total_weight(), 4.0);
+        assert!((ts.share(TenantId(2)) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weighted_shares() {
+        // §1 Scenario 3: Analyst/Engineer/VP at 1:1:1.5.
+        let mut ts = TenantSet::new();
+        ts.add("Analyst", 1.0);
+        ts.add("Engineer", 1.0);
+        let vp = ts.add("VP", 1.5);
+        assert!((ts.share(vp) - 1.5 / 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_weight_rejected() {
+        TenantSet::new().add("bad", 0.0);
+    }
+}

@@ -1,0 +1,156 @@
+//! TPC-H at scale factor 5 (§5.1's second data category): the 8 base
+//! tables with standard size ratios, plus the 15 benchmark query
+//! templates used by the evaluation's h₁ workload mix. Candidate views
+//! for TPC-H queries are the base tables they access (ROBUS's default
+//! candidate generation, §2) — notably every template reads `lineitem`
+//! (~3.7 GB at SF 5), which is why STATIC cannot cache anything useful
+//! in a 4-way-partitioned 6 GB budget (§5.3.1).
+
+use crate::domain::dataset::{DatasetCatalog, DatasetId, KB, MB};
+use crate::domain::view::{ViewCatalog, ViewId, ViewKind};
+
+/// Scale factor used in the paper's evaluation.
+pub const SCALE_FACTOR: u64 = 5;
+
+/// TPC-H table flat-file sizes at SF 1, in bytes (standard dbgen output).
+const SF1_SIZES: [(&str, u64); 8] = [
+    ("lineitem", 759 * MB),
+    ("orders", 171 * MB),
+    ("partsupp", 118 * MB),
+    ("part", 24 * MB),
+    ("customer", 24 * MB),
+    ("supplier", 1417 * KB),
+    ("nation", 2 * KB),
+    ("region", 1 * KB),
+];
+
+/// A TPC-H query template: name, accessed tables, and a relative compute
+/// weight (joins/aggregations beyond the scan; arbitrary units of
+/// core-seconds per GB scanned, heavier for many-way joins).
+#[derive(Debug, Clone)]
+pub struct TpchTemplate {
+    pub name: &'static str,
+    pub tables: &'static [&'static str],
+    pub compute_weight: f64,
+}
+
+/// The 15 templates of the h₁ workload (all include `lineitem`).
+pub const TEMPLATES: [TpchTemplate; 15] = [
+    TpchTemplate { name: "q1", tables: &["lineitem"], compute_weight: 1.0 },
+    TpchTemplate { name: "q3", tables: &["customer", "orders", "lineitem"], compute_weight: 1.6 },
+    TpchTemplate { name: "q4", tables: &["orders", "lineitem"], compute_weight: 1.3 },
+    TpchTemplate { name: "q5", tables: &["customer", "orders", "lineitem", "supplier", "nation", "region"], compute_weight: 2.2 },
+    TpchTemplate { name: "q6", tables: &["lineitem"], compute_weight: 0.8 },
+    TpchTemplate { name: "q7", tables: &["supplier", "lineitem", "orders", "customer", "nation"], compute_weight: 2.0 },
+    TpchTemplate { name: "q8", tables: &["part", "supplier", "lineitem", "orders", "customer", "nation", "region"], compute_weight: 2.4 },
+    TpchTemplate { name: "q9", tables: &["part", "supplier", "lineitem", "partsupp", "orders", "nation"], compute_weight: 2.6 },
+    TpchTemplate { name: "q10", tables: &["customer", "orders", "lineitem", "nation"], compute_weight: 1.8 },
+    TpchTemplate { name: "q12", tables: &["orders", "lineitem"], compute_weight: 1.2 },
+    TpchTemplate { name: "q14", tables: &["lineitem", "part"], compute_weight: 1.1 },
+    TpchTemplate { name: "q17", tables: &["lineitem", "part"], compute_weight: 1.5 },
+    TpchTemplate { name: "q18", tables: &["customer", "orders", "lineitem"], compute_weight: 2.0 },
+    TpchTemplate { name: "q19", tables: &["lineitem", "part"], compute_weight: 1.4 },
+    TpchTemplate { name: "q21", tables: &["supplier", "lineitem", "orders", "nation"], compute_weight: 2.3 },
+];
+
+/// The TPC-H catalog: 8 datasets, one base-table candidate view each.
+#[derive(Debug, Clone)]
+pub struct TpchCatalog {
+    pub datasets: DatasetCatalog,
+    pub views: ViewCatalog,
+    pub view_of_dataset: Vec<ViewId>,
+}
+
+impl TpchCatalog {
+    pub fn build() -> Self {
+        let mut datasets = DatasetCatalog::new();
+        let mut views = ViewCatalog::new();
+        let mut view_of_dataset = Vec::new();
+        for (name, sf1) in SF1_SIZES {
+            let bytes = sf1 * SCALE_FACTOR;
+            let d = datasets.add(name, bytes);
+            // Base-table views: in-memory footprint ≈ on-disk scan bytes.
+            let v = views.add(name, d, ViewKind::BaseTable, bytes, bytes);
+            view_of_dataset.push(v);
+        }
+        Self {
+            datasets,
+            views,
+            view_of_dataset,
+        }
+    }
+
+    pub fn dataset(&self, name: &str) -> DatasetId {
+        self.datasets
+            .by_name(name)
+            .unwrap_or_else(|| panic!("unknown tpch table {name}"))
+            .id
+    }
+
+    pub fn view(&self, name: &str) -> ViewId {
+        self.views
+            .by_name(name)
+            .unwrap_or_else(|| panic!("unknown tpch view {name}"))
+            .id
+    }
+
+    /// Required views + total bytes + compute cost for a template.
+    pub fn template_footprint(&self, t: &TpchTemplate) -> (Vec<ViewId>, u64, f64) {
+        let views: Vec<ViewId> = t.tables.iter().map(|n| self.view(n)).collect();
+        let bytes: u64 = views
+            .iter()
+            .map(|&v| self.views.get(v).scan_bytes)
+            .sum();
+        // Join/aggregation compute: ~10 core-seconds per compute-weighted
+        // GiB (TPC-H plans are less row-bound than the Sales aggregations).
+        let compute = 10.0 * t.compute_weight * (bytes as f64 / (1u64 << 30) as f64);
+        (views, bytes, compute)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::domain::dataset::GB;
+
+    #[test]
+    fn lineitem_is_about_3_7_gb() {
+        let cat = TpchCatalog::build();
+        let li = cat.datasets.by_name("lineitem").unwrap();
+        let gb = li.disk_bytes as f64 / GB as f64;
+        assert!((3.5..4.0).contains(&gb), "lineitem={gb} GB");
+    }
+
+    #[test]
+    fn every_template_reads_lineitem() {
+        for t in &TEMPLATES {
+            assert!(t.tables.contains(&"lineitem"), "{} misses lineitem", t.name);
+        }
+        assert_eq!(TEMPLATES.len(), 15);
+    }
+
+    #[test]
+    fn template_footprints() {
+        let cat = TpchCatalog::build();
+        let q1 = &TEMPLATES[0];
+        let (views, bytes, compute) = cat.template_footprint(q1);
+        assert_eq!(views.len(), 1);
+        assert_eq!(bytes, 759 * MB * SCALE_FACTOR);
+        assert!(compute > 0.0);
+        // q8 reads 7 tables.
+        let q8 = TEMPLATES.iter().find(|t| t.name == "q8").unwrap();
+        let (views8, bytes8, _) = cat.template_footprint(q8);
+        assert_eq!(views8.len(), 7);
+        assert!(bytes8 > bytes);
+    }
+
+    #[test]
+    fn all_template_tables_resolve() {
+        let cat = TpchCatalog::build();
+        for t in &TEMPLATES {
+            for table in t.tables {
+                let _ = cat.view(table);
+            }
+        }
+    }
+}

@@ -1,0 +1,369 @@
+//! The tenant-utility estimation model (§2, §5.1): a query's utility
+//! under a cache configuration is its disk-I/O savings — the bytes it
+//! reads — iff *all* datasets it needs are cached, else zero (the
+//! all-or-nothing observation of PACMan, paper ref 9). Tenant utility is the sum
+//! over the tenant's queries in the batch; U_i* is the best utility the
+//! tenant could get with the whole cache to itself (Definition of scaled
+//! utility, §3.1).
+//!
+//! [`BatchUtilities`] is the *batch problem*: everything a view-selection
+//! policy needs — candidate view sizes, the cache budget, aggregated
+//! per-tenant query classes, and U_i*. It converts to WELFARE-oracle
+//! instances (Definition 5) for arbitrary dual weight vectors and
+//! evaluates U_i(S) / V_i(S) for explicit configurations.
+
+use crate::domain::query::Query;
+use crate::domain::tenant::TenantSet;
+use crate::domain::view::ViewCatalog;
+use crate::solver::knapsack::{ValuedQuery, WelfareProblem, WelfareSolution};
+
+/// Utility model configuration.
+#[derive(Debug, Clone)]
+pub struct UtilityModel {
+    /// Multiplier applied to the estimated benefit of views already in
+    /// cache (stateful mode, §5.4; γ > 1 biases toward keeping them).
+    pub stateful_gamma: f64,
+}
+
+impl Default for UtilityModel {
+    fn default() -> Self {
+        Self { stateful_gamma: 1.0 }
+    }
+}
+
+/// One aggregated query class: all queries of `tenant` requiring exactly
+/// the same view set, with summed utility.
+#[derive(Debug, Clone)]
+pub struct QueryClass {
+    pub tenant: usize,
+    /// Sorted required view indices.
+    pub views: Vec<usize>,
+    /// Summed I/O-savings utility (bytes) of the class.
+    pub utility: f64,
+    /// Number of query instances aggregated.
+    pub count: usize,
+}
+
+/// The per-batch allocation problem.
+#[derive(Debug, Clone)]
+pub struct BatchUtilities {
+    pub n_tenants: usize,
+    /// Tenant weights λ_i.
+    pub weights: Vec<f64>,
+    /// Cached size of each candidate view.
+    pub view_sizes: Vec<f64>,
+    /// Cache budget.
+    pub budget: f64,
+    /// Aggregated query classes.
+    pub classes: Vec<QueryClass>,
+    /// U_i*: best achievable utility per tenant alone in the system
+    /// (0.0 for tenants with no queries in the batch).
+    pub u_star: Vec<f64>,
+}
+
+impl BatchUtilities {
+    /// Build the batch problem from raw queries. `boost` is an optional
+    /// per-view multiplier vector (stateful cache boost; `None` for the
+    /// stateless default).
+    pub fn build(
+        tenants: &TenantSet,
+        views: &ViewCatalog,
+        budget: f64,
+        queries: &[Query],
+        boost: Option<&[f64]>,
+    ) -> Self {
+        let n_tenants = tenants.len();
+        let view_sizes = views.cached_sizes();
+
+        // Aggregate queries into classes keyed by (tenant, view set).
+        use std::collections::BTreeMap;
+        let mut agg: BTreeMap<(usize, Vec<usize>), (f64, usize)> = BTreeMap::new();
+        for q in queries {
+            let mut vs: Vec<usize> = q.required_views.iter().map(|v| v.0).collect();
+            vs.sort_unstable();
+            vs.dedup();
+            // A query's utility can be boosted per-view (stateful mode):
+            // apply the mean boost of its views to its I/O savings.
+            let base = q.bytes_read as f64;
+            let util = match boost {
+                None => base,
+                Some(b) => {
+                    let m = vs.iter().map(|&v| b[v]).sum::<f64>() / vs.len().max(1) as f64;
+                    base * m
+                }
+            };
+            let e = agg.entry((q.tenant.0, vs)).or_insert((0.0, 0));
+            e.0 += util;
+            e.1 += 1;
+        }
+        let classes: Vec<QueryClass> = agg
+            .into_iter()
+            .map(|((tenant, views), (utility, count))| QueryClass {
+                tenant,
+                views,
+                utility,
+                count,
+            })
+            .collect();
+
+        let mut this = Self {
+            n_tenants,
+            weights: tenants.weights(),
+            view_sizes,
+            budget,
+            classes,
+            u_star: vec![0.0; n_tenants],
+        };
+        this.u_star = (0..n_tenants).map(|i| this.solo_optimum(i).value).collect();
+        this
+    }
+
+    /// Tenants that submitted at least one query this batch.
+    pub fn active_tenants(&self) -> Vec<usize> {
+        (0..self.n_tenants)
+            .filter(|&i| self.u_star[i] > 0.0)
+            .collect()
+    }
+
+    /// U_i(S): tenant i's utility under configuration `selected`.
+    pub fn tenant_utility(&self, tenant: usize, selected: &[bool]) -> f64 {
+        self.classes
+            .iter()
+            .filter(|c| c.tenant == tenant && c.views.iter().all(|&v| selected[v]))
+            .map(|c| c.utility)
+            .sum()
+    }
+
+    /// U(S) for all tenants.
+    pub fn utilities(&self, selected: &[bool]) -> Vec<f64> {
+        let mut u = vec![0.0; self.n_tenants];
+        for c in &self.classes {
+            if c.views.iter().all(|&v| selected[v]) {
+                u[c.tenant] += c.utility;
+            }
+        }
+        u
+    }
+
+    /// V_i(S) = U_i(S)/U_i* for all tenants (1.0 for inactive tenants —
+    /// a tenant with no queries is trivially fully satisfied).
+    pub fn scaled_utilities(&self, selected: &[bool]) -> Vec<f64> {
+        self.utilities(selected)
+            .iter()
+            .enumerate()
+            .map(|(i, &u)| if self.u_star[i] > 0.0 { u / self.u_star[i] } else { 1.0 })
+            .collect()
+    }
+
+    /// The single-tenant optimum configuration (defines U_i*).
+    pub fn solo_optimum(&self, tenant: usize) -> WelfareSolution {
+        let queries: Vec<ValuedQuery> = self
+            .classes
+            .iter()
+            .filter(|c| c.tenant == tenant)
+            .map(|c| ValuedQuery {
+                value: c.utility,
+                views: c.views.clone(),
+            })
+            .collect();
+        WelfareProblem {
+            view_sizes: self.view_sizes.clone(),
+            budget: self.budget,
+            queries,
+        }
+        .solve_exact()
+    }
+
+    /// WELFARE(w) instance (Definition 5): maximize Σ_i w_i·V_i(S) —
+    /// each query class contributes w_t · utility / U_t* when satisfied.
+    pub fn welfare_problem(&self, w: &[f64]) -> WelfareProblem {
+        assert_eq!(w.len(), self.n_tenants);
+        let queries: Vec<ValuedQuery> = self
+            .classes
+            .iter()
+            .filter(|c| self.u_star[c.tenant] > 0.0)
+            .map(|c| ValuedQuery {
+                value: w[c.tenant] * c.utility / self.u_star[c.tenant],
+                views: c.views.clone(),
+            })
+            .collect();
+        WelfareProblem {
+            view_sizes: self.view_sizes.clone(),
+            budget: self.budget,
+            queries,
+        }
+    }
+
+    /// Total (unscaled, unweighted) utility — OPTP's objective.
+    pub fn total_utility_problem(&self) -> WelfareProblem {
+        let queries: Vec<ValuedQuery> = self
+            .classes
+            .iter()
+            .map(|c| ValuedQuery {
+                value: c.utility,
+                views: c.views.clone(),
+            })
+            .collect();
+        WelfareProblem {
+            view_sizes: self.view_sizes.clone(),
+            budget: self.budget,
+            queries,
+        }
+    }
+
+    pub fn n_views(&self) -> usize {
+        self.view_sizes.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::domain::dataset::DatasetCatalog;
+    use crate::domain::query::{Query, QueryId};
+    use crate::domain::tenant::{TenantId, TenantSet};
+    use crate::domain::view::{ViewCatalog, ViewId, ViewKind};
+
+    /// The SpaceBook instance of Table 1: views R,S,P of unit size M,
+    /// cache M; Analyst/Engineer utilities 2,1,0 and VP 0,1,2.
+    pub fn spacebook() -> (TenantSet, ViewCatalog, Vec<Query>) {
+        let mut ds = DatasetCatalog::new();
+        let mut vc = ViewCatalog::new();
+        for name in ["R", "S", "P"] {
+            let d = ds.add(name, 100);
+            vc.add(name, d, ViewKind::BaseTable, 100, 100);
+        }
+        let mut ts = TenantSet::new();
+        let analyst = ts.add("Analyst", 1.0);
+        let engineer = ts.add("Engineer", 1.0);
+        let vp = ts.add("VP", 1.0);
+        let mut queries = Vec::new();
+        let mut qid = 0u64;
+        let mut push = |t: TenantId, v: usize, util: u64, queries: &mut Vec<Query>| {
+            queries.push(Query {
+                id: QueryId({ qid += 1; qid }),
+                tenant: t,
+                arrival: 0.0,
+                template: "spacebook".into(),
+                required_views: vec![ViewId(v)],
+                bytes_read: util,
+                compute_cost: 0.0,
+            });
+        };
+        // Utilities per Table 1 (2 units = two queries of 1 byte... use
+        // bytes directly as utility units).
+        push(analyst, 0, 2, &mut queries);
+        push(analyst, 1, 1, &mut queries);
+        push(engineer, 0, 2, &mut queries);
+        push(engineer, 1, 1, &mut queries);
+        push(vp, 1, 1, &mut queries);
+        push(vp, 2, 2, &mut queries);
+        (ts, vc, queries)
+    }
+
+    #[test]
+    fn spacebook_u_star_and_utilities() {
+        let (ts, vc, queries) = spacebook();
+        let b = BatchUtilities::build(&ts, &vc, 100.0, &queries, None);
+        // Alone with cache M each tenant caches its best single view.
+        assert_eq!(b.u_star, vec![2.0, 2.0, 2.0]);
+        // Config {R}: utilities (2,2,0); scaled (1,1,0).
+        let s_r = [true, false, false];
+        assert_eq!(b.utilities(&s_r), vec![2.0, 2.0, 0.0]);
+        assert_eq!(b.scaled_utilities(&s_r), vec![1.0, 1.0, 0.0]);
+        // Config {S}: everyone gets 1 → scaled 0.5.
+        let s_s = [false, true, false];
+        assert_eq!(b.scaled_utilities(&s_s), vec![0.5, 0.5, 0.5]);
+        assert_eq!(b.active_tenants(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn welfare_with_uniform_weights_picks_r() {
+        let (ts, vc, queries) = spacebook();
+        let b = BatchUtilities::build(&ts, &vc, 100.0, &queries, None);
+        // Equal weights: scaled welfare of {R} = 2, {S} = 1.5, {P} = 1.
+        let w = vec![1.0, 1.0, 1.0];
+        let sol = b.welfare_problem(&w).solve_exact();
+        assert_eq!(sol.selected, vec![true, false, false]);
+        assert!((sol.value - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn welfare_weights_steer_selection() {
+        let (ts, vc, queries) = spacebook();
+        let b = BatchUtilities::build(&ts, &vc, 100.0, &queries, None);
+        // Heavy weight on VP: {P} wins (value 5·(2/2) = 5 > others).
+        let sol = b.welfare_problem(&[0.1, 0.1, 5.0]).solve_exact();
+        assert_eq!(sol.selected, vec![false, false, true]);
+    }
+
+    #[test]
+    fn scenario4_doubled_cache_weighted() {
+        // §1 Scenario 4: weights 1:1:1.5, cache 2M → utility-max caches
+        // {R,S} (weighted raw utility 7.5).
+        let (mut ts, vc, queries) = spacebook();
+        ts = {
+            let mut t = TenantSet::new();
+            t.add("Analyst", 1.0);
+            t.add("Engineer", 1.0);
+            t.add("VP", 1.5);
+            t
+        };
+        let b = BatchUtilities::build(&ts, &vc, 200.0, &queries, None);
+        // Raw weighted utility-max (not scaled): emulate via welfare with
+        // weights w_i = λ_i · U_i* (undo the 1/U* scaling).
+        let w: Vec<f64> = b
+            .weights
+            .iter()
+            .zip(&b.u_star)
+            .map(|(l, u)| l * u)
+            .collect();
+        let sol = b.welfare_problem(&w).solve_exact();
+        assert_eq!(sol.selected, vec![true, true, false]);
+    }
+
+    #[test]
+    fn inactive_tenant_masked() {
+        let (ts, vc, mut queries) = spacebook();
+        queries.retain(|q| q.tenant.0 != 2); // VP submits nothing
+        let b = BatchUtilities::build(&ts, &vc, 100.0, &queries, None);
+        assert_eq!(b.u_star[2], 0.0);
+        assert_eq!(b.active_tenants(), vec![0, 1]);
+        // Scaled utility of inactive tenant reported as 1.0 (satisfied).
+        assert_eq!(b.scaled_utilities(&[true, false, false])[2], 1.0);
+        // Welfare problem ignores the inactive tenant regardless of w.
+        let p = b.welfare_problem(&[1.0, 1.0, 100.0]);
+        assert!(p.queries.iter().all(|q| q.value.is_finite()));
+    }
+
+    #[test]
+    fn class_aggregation_merges_duplicates() {
+        let (ts, vc, mut queries) = spacebook();
+        let extra = queries[0].clone();
+        queries.push(Query {
+            id: QueryId(99),
+            ..extra
+        });
+        let b = BatchUtilities::build(&ts, &vc, 100.0, &queries, None);
+        let class = b
+            .classes
+            .iter()
+            .find(|c| c.tenant == 0 && c.views == vec![0])
+            .unwrap();
+        assert_eq!(class.count, 2);
+        assert_eq!(class.utility, 4.0);
+    }
+
+    #[test]
+    fn stateful_boost_raises_cached_view_value() {
+        let (ts, vc, queries) = spacebook();
+        let boost = vec![2.0, 1.0, 1.0]; // view R already cached, γ=2
+        let b = BatchUtilities::build(&ts, &vc, 100.0, &queries, Some(&boost));
+        let plain = BatchUtilities::build(&ts, &vc, 100.0, &queries, None);
+        assert!(b.tenant_utility(0, &[true, false, false]) > plain.tenant_utility(0, &[true, false, false]));
+        assert_eq!(
+            b.tenant_utility(0, &[false, true, false]),
+            plain.tenant_utility(0, &[false, true, false])
+        );
+    }
+}

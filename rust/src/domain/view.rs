@@ -1,0 +1,123 @@
+//! Cacheable candidate views (§2): anything that can be materialized in
+//! the in-memory cache for a performance benefit. ROBUS's default
+//! candidate generation uses the base tables a query accesses; the Sales
+//! workload additionally uses vertical projections of input tables
+//! (§5.1), which is the pluggable candidate-selection hook the paper
+//! exercises.
+
+use crate::domain::dataset::DatasetId;
+
+/// Index of a view within its catalog.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ViewId(pub usize);
+
+/// What kind of materialization a view is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ViewKind {
+    /// The base table/dataset itself, loaded into cache.
+    BaseTable,
+    /// A vertical projection onto frequently accessed columns.
+    VerticalProjection,
+}
+
+/// One candidate view.
+#[derive(Debug, Clone)]
+pub struct View {
+    pub id: ViewId,
+    pub name: String,
+    /// Source dataset this view materializes (projections have one).
+    pub dataset: DatasetId,
+    pub kind: ViewKind,
+    /// Bytes occupied when loaded into the cache.
+    pub cached_bytes: u64,
+    /// Bytes of disk reading this view saves per query scan that uses it.
+    /// For base tables this equals the dataset's disk size; for a
+    /// projection it is the disk bytes of the projected columns.
+    pub scan_bytes: u64,
+}
+
+/// Ordered collection of candidate views.
+#[derive(Debug, Clone, Default)]
+pub struct ViewCatalog {
+    views: Vec<View>,
+}
+
+impl ViewCatalog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(
+        &mut self,
+        name: &str,
+        dataset: DatasetId,
+        kind: ViewKind,
+        cached_bytes: u64,
+        scan_bytes: u64,
+    ) -> ViewId {
+        let id = ViewId(self.views.len());
+        self.views.push(View {
+            id,
+            name: name.to_string(),
+            dataset,
+            kind,
+            cached_bytes,
+            scan_bytes,
+        });
+        id
+    }
+
+    pub fn get(&self, id: ViewId) -> &View {
+        &self.views[id.0]
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&View> {
+        self.views.iter().find(|v| v.name == name)
+    }
+
+    /// The view materializing a given dataset, if any.
+    pub fn for_dataset(&self, d: DatasetId) -> Option<&View> {
+        self.views.iter().find(|v| v.dataset == d)
+    }
+
+    pub fn len(&self) -> usize {
+        self.views.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.views.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &View> {
+        self.views.iter()
+    }
+
+    /// Cached sizes as f64s indexed by ViewId — the `view_sizes` input of
+    /// the WELFARE knapsack and the L1 utility kernel.
+    pub fn cached_sizes(&self) -> Vec<f64> {
+        self.views.iter().map(|v| v.cached_bytes as f64).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::domain::dataset::{DatasetCatalog, GB, MB};
+
+    #[test]
+    fn catalog_and_lookup() {
+        let mut ds = DatasetCatalog::new();
+        let d0 = ds.add("sales_0", 20 * GB);
+        let d1 = ds.add("sales_1", 10 * GB);
+        let mut vc = ViewCatalog::new();
+        let v0 = vc.add("sales_0_proj", d0, ViewKind::VerticalProjection, 800 * MB, 2 * GB);
+        let v1 = vc.add("sales_1_base", d1, ViewKind::BaseTable, 10 * GB, 10 * GB);
+        assert_eq!(vc.len(), 2);
+        assert_eq!(vc.get(v0).kind, ViewKind::VerticalProjection);
+        assert_eq!(vc.for_dataset(d1).unwrap().id, v1);
+        assert_eq!(vc.by_name("sales_0_proj").unwrap().cached_bytes, 800 * MB);
+        let sizes = vc.cached_sizes();
+        assert_eq!(sizes.len(), 2);
+        assert_eq!(sizes[0], (800 * MB) as f64);
+    }
+}

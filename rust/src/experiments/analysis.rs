@@ -1,0 +1,234 @@
+//! Non-simulation analyses: the §4.3 pruning-error sweep, the Lemma 1/2
+//! utility comparisons, the Table 6 property audit, and the Figure 3/7
+//! data series.
+
+use crate::alloc::config_space::ConfigSpace;
+use crate::alloc::fastpf::FastPf;
+use crate::alloc::mmf::MaxMinFair;
+use crate::alloc::mmf_mw::SimpleMmfMw;
+use crate::domain::query::{Query, QueryId};
+use crate::domain::sales::SalesCatalog;
+use crate::domain::tenant::{TenantId, TenantSet};
+use crate::domain::utility::BatchUtilities;
+use crate::domain::view::ViewId;
+use crate::solver::gradient::GradientConfig;
+use crate::solver::simplex::{Cmp, Lp, LpResult};
+use crate::util::rng::{Pcg64, Zipf};
+
+/// A random batch problem mimicking a Sales batch: `n_tenants` tenants,
+/// Zipf access over the 30-view catalog, Poisson-ish query counts.
+pub fn random_sales_batch(n_tenants: usize, rng: &mut Pcg64) -> BatchUtilities {
+    let catalog = SalesCatalog::build();
+    let tenants = TenantSet::equal(n_tenants);
+    let zipfs: Vec<Zipf> = (0..n_tenants)
+        .map(|_| Zipf::randomized(30, 1.0, rng))
+        .collect();
+    let mut queries = Vec::new();
+    let mut qid = 0u64;
+    for t in 0..n_tenants {
+        let n_queries = 1 + rng.poisson(2.0) as usize;
+        for _ in 0..n_queries {
+            let d = zipfs[t].sample(rng);
+            let view = catalog.view_of_dataset[d];
+            qid += 1;
+            queries.push(Query {
+                id: QueryId(qid),
+                tenant: TenantId(t),
+                arrival: 0.0,
+                template: format!("scan-{d}"),
+                required_views: vec![ViewId(view.0)],
+                bytes_read: catalog.views.get(view).scan_bytes,
+                compute_cost: 0.0,
+            });
+        }
+    }
+    let budget = 6.0 * (1u64 << 30) as f64;
+    BatchUtilities::build(&tenants, &catalog.views, budget, &queries, None)
+}
+
+/// Max-min objective of the restricted LP (Program 3) over a space.
+pub fn restricted_maxmin_value(space: &ConfigSpace, batch: &BatchUtilities) -> f64 {
+    let active = batch.active_tenants();
+    if active.is_empty() || space.is_empty() {
+        return 0.0;
+    }
+    let m = space.len();
+    let mut obj = vec![0.0; m + 1];
+    obj[m] = 1.0;
+    let mut lp = Lp::new(obj);
+    for &i in &active {
+        let mut row: Vec<f64> = (0..m).map(|s| space.v[s][i]).collect();
+        row.push(-1.0);
+        lp.constrain(row, Cmp::Ge, 0.0);
+    }
+    let mut norm = vec![1.0; m];
+    norm.push(0.0);
+    lp.constrain(norm, Cmp::Le, 1.0);
+    match lp.solve() {
+        LpResult::Optimal { value, .. } => value,
+        _ => 0.0,
+    }
+}
+
+/// The §4.3 approximation-error experiment: over `n_batches` random
+/// 5-tenant batches, the mean relative error of the restricted-LP
+/// SIMPLEMMF objective using `m` random weight vectors vs Algorithm 2's
+/// objective. The paper reports 10.4% / 1.4% / 0.6% for m = 5 / 25 / 50.
+pub fn pruning_error(m_vectors: usize, n_batches: usize, seed: u64) -> f64 {
+    let mut rng = Pcg64::new(seed);
+    let reference = SimpleMmfMw {
+        epsilon: 0.1,
+        max_iters: 800,
+    };
+    let mut total_err = 0.0;
+    let mut counted = 0usize;
+    for _ in 0..n_batches {
+        let batch = random_sales_batch(5, &mut rng);
+        if batch.active_tenants().len() < 2 {
+            continue;
+        }
+        // Reference objective: Algorithm 2's achieved min rate.
+        let ref_alloc = crate::alloc::Allocation::from_weighted(reference.solve(&batch));
+        let v_ref = ref_alloc.expected_scaled_utilities(&batch);
+        let ref_min = batch
+            .active_tenants()
+            .iter()
+            .map(|&i| v_ref[i])
+            .fold(f64::INFINITY, f64::min);
+        if ref_min <= 1e-9 {
+            continue;
+        }
+        // Restricted LP on a pruned space WITHOUT the per-tenant solo
+        // optima shortcut (pure random vectors, as in the paper's sweep).
+        let mut space = ConfigSpace::from_configs(&batch, vec![vec![false; batch.n_views()]]);
+        for _ in 0..m_vectors {
+            let w = rng.unit_weight_vector(batch.n_tenants);
+            let sol = batch.welfare_problem(&w).solve_exact();
+            space.push(&batch, sol.selected);
+        }
+        let lp_min = restricted_maxmin_value(&space, &batch);
+        let err = ((ref_min - lp_min) / ref_min).max(0.0);
+        total_err += err;
+        counted += 1;
+    }
+    if counted == 0 {
+        0.0
+    } else {
+        total_err / counted as f64
+    }
+}
+
+/// Lemma 1: on a grouped instance with group sizes `n_i`, total utility
+/// of PF (= Σ n_i²/N) vs MMF (= N/k). Returns (pf_total, mmf_total),
+/// both computed by the actual solvers (not the closed forms).
+pub fn grouped_instance_totals(group_sizes: &[usize]) -> (f64, f64) {
+    let k = group_sizes.len();
+    let rows: Vec<Vec<u64>> = group_sizes
+        .iter()
+        .enumerate()
+        .flat_map(|(g, &n)| {
+            std::iter::repeat_with(move || {
+                let mut r = vec![0u64; k];
+                r[g] = 1;
+                r
+            })
+            .take(n)
+        })
+        .collect();
+    let refs: Vec<&[u64]> = rows.iter().map(|r| r.as_slice()).collect();
+    let batch = crate::alloc::instances::matrix_instance(&refs, 1.0);
+    let mut rng = Pcg64::new(7);
+    let space = ConfigSpace::pruned(&batch, 50, &mut rng);
+    let x_pf = FastPf::solve_over(&space, &batch, &GradientConfig::default());
+    let (x_mmf, _) = MaxMinFair::solve_over(&space, &batch);
+    let total = |x: &[f64]| -> f64 {
+        (0..batch.n_tenants)
+            .map(|i| space.scaled_utility(i, x))
+            .sum()
+    };
+    (total(&x_pf), total(&x_mmf))
+}
+
+/// Figure 3 series: the 30 candidate Sales view sizes in MB, descending.
+pub fn figure3_view_sizes_mb() -> Vec<(String, f64)> {
+    let catalog = SalesCatalog::build();
+    catalog
+        .views
+        .iter()
+        .map(|v| (v.name.clone(), v.cached_bytes as f64 / (1u64 << 20) as f64))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pruning_error_decreases_with_more_vectors() {
+        // Scaled-down version of the paper's 5/25/50 sweep.
+        let e5 = pruning_error(5, 25, 11);
+        let e25 = pruning_error(25, 25, 11);
+        let e50 = pruning_error(50, 25, 11);
+        assert!(e5 >= e25 - 0.02, "e5={e5} e25={e25}");
+        assert!(e25 >= e50 - 0.01, "e25={e25} e50={e50}");
+        assert!(e50 < 0.05, "e50={e50}");
+        assert!(e5 < 0.5, "e5={e5}");
+    }
+
+    #[test]
+    fn lemma1_pf_dominates_mmf_on_grouped() {
+        // k = 3 groups of sizes 3, 2, 1 (N = 6): PF total = Σn²/N = 14/6,
+        // MMF total = N/k = 2.
+        let (pf, mmf) = grouped_instance_totals(&[3, 2, 1]);
+        assert!(pf >= mmf - 1e-3, "pf={pf} mmf={mmf}");
+        assert!((mmf - 2.0).abs() < 0.05, "mmf={mmf}");
+        assert!((pf - 14.0 / 6.0).abs() < 0.05, "pf={pf}");
+    }
+
+    #[test]
+    fn lemma2_two_tenants_random_instances() {
+        use crate::util::proptest::{check, no_shrink};
+        check(
+            20,
+            |rng| {
+                let rows: Vec<Vec<u64>> = (0..2)
+                    .map(|_| (0..3).map(|_| rng.below(5)).collect())
+                    .collect();
+                rows
+            },
+            no_shrink,
+            |rows| {
+                if rows.iter().all(|r| r.iter().all(|&u| u == 0)) {
+                    return Ok(());
+                }
+                let refs: Vec<&[u64]> = rows.iter().map(|r| r.as_slice()).collect();
+                let batch = crate::alloc::instances::matrix_instance(&refs, 1.0);
+                if batch.active_tenants().len() < 2 {
+                    return Ok(());
+                }
+                let mut rng = Pcg64::new(3);
+                let space = ConfigSpace::pruned(&batch, 60, &mut rng);
+                let x_pf = FastPf::solve_over(&space, &batch, &GradientConfig::default());
+                let (x_mmf, _) = MaxMinFair::solve_over(&space, &batch);
+                let total = |x: &[f64]| -> f64 {
+                    (0..2).map(|i| space.scaled_utility(i, x)).sum()
+                };
+                let (pf, mmf) = (total(&x_pf), total(&x_mmf));
+                if pf + 5e-3 < mmf {
+                    return Err(format!("Lemma 2 violated: pf={pf} mmf={mmf}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn figure3_range() {
+        let sizes = figure3_view_sizes_mb();
+        assert_eq!(sizes.len(), 30);
+        let max = sizes.iter().map(|(_, s)| *s).fold(0.0, f64::max);
+        let min = sizes.iter().map(|(_, s)| *s).fold(f64::INFINITY, f64::min);
+        assert!((max - 3686.0).abs() < 1.0);
+        assert!((min - 118.0).abs() < 1.0);
+    }
+}

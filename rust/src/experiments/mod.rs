@@ -1,0 +1,11 @@
+//! Experiment definitions and runners regenerating every table and
+//! figure of the paper's evaluation (§5, Appendix A). See DESIGN.md §4
+//! for the experiment index.
+
+pub mod analysis;
+pub mod report;
+pub mod runner;
+pub mod setups;
+
+pub use runner::{run_experiment, ExperimentOutput};
+pub use setups::{ExperimentSetup, UniverseKind};

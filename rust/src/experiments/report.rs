@@ -1,0 +1,124 @@
+//! Report formatting: paper-style text tables and machine-readable JSON
+//! for EXPERIMENTS.md and the results/ directory.
+
+use crate::coordinator::metrics::MetricsSummary;
+use crate::experiments::runner::ExperimentOutput;
+use crate::util::json::Json;
+
+/// Paper-style appendix table (e.g. Table 15) for one experiment: rows
+/// are metrics, columns are policies.
+pub fn appendix_table(out: &ExperimentOutput) -> String {
+    let mut s = format!("## {}\n\n", out.setup.name);
+    s.push_str(&format!(
+        "| Metric | {} |\n",
+        out.summaries
+            .iter()
+            .map(|m| m.policy)
+            .collect::<Vec<_>>()
+            .join(" | ")
+    ));
+    s.push_str(&format!(
+        "|---|{}\n",
+        "---|".repeat(out.summaries.len())
+    ));
+    let row = |name: &str, f: &dyn Fn(&MetricsSummary) -> f64| -> String {
+        format!(
+            "| {} | {} |\n",
+            name,
+            out.summaries
+                .iter()
+                .map(|m| format!("{:.2}", f(m)))
+                .collect::<Vec<_>>()
+                .join(" | ")
+        )
+    };
+    s.push_str(&row("Throughput(/min)", &|m| m.throughput_per_min));
+    s.push_str(&row("Avg cache util.", &|m| m.avg_cache_utilization));
+    s.push_str(&row("Hit ratio", &|m| m.hit_ratio));
+    s.push_str(&row("Fairness index", &|m| m.fairness_index));
+    s
+}
+
+/// JSON record of one experiment (all summaries + per-batch series).
+pub fn to_json(out: &ExperimentOutput) -> Json {
+    let summaries = Json::Array(
+        out.summaries
+            .iter()
+            .map(|m| {
+                Json::from_pairs(vec![
+                    ("policy", Json::String(m.policy.to_string())),
+                    ("throughput_per_min", Json::Number(m.throughput_per_min)),
+                    ("avg_cache_util", Json::Number(m.avg_cache_utilization)),
+                    ("hit_ratio", Json::Number(m.hit_ratio)),
+                    ("fairness_index", Json::Number(m.fairness_index)),
+                ])
+            })
+            .collect(),
+    );
+    let runs = Json::Array(
+        out.runs
+            .iter()
+            .map(|r| {
+                Json::from_pairs(vec![
+                    ("policy", Json::String(r.policy.to_string())),
+                    ("queries", Json::Number(r.outcomes.len() as f64)),
+                    ("end_time", Json::Number(r.end_time)),
+                    ("mean_wait", Json::Number(r.mean_wait())),
+                    (
+                        "mean_solve_ms",
+                        Json::Number(
+                            1e3 * r
+                                .batches
+                                .iter()
+                                .map(|b| b.solve_secs)
+                                .sum::<f64>()
+                                / r.batches.len().max(1) as f64,
+                        ),
+                    ),
+                ])
+            })
+            .collect(),
+    );
+    Json::from_pairs(vec![
+        ("experiment", Json::String(out.setup.name.clone())),
+        ("batches", Json::Number(out.setup.n_batches as f64)),
+        ("batch_secs", Json::Number(out.setup.batch_secs)),
+        ("seed", Json::Number(out.setup.seed as f64)),
+        ("summaries", summaries),
+        ("runs", runs),
+    ])
+}
+
+/// Write a JSON report under `dir` (created if needed).
+pub fn write_json(out: &ExperimentOutput, dir: &str) -> std::io::Result<String> {
+    std::fs::create_dir_all(dir)?;
+    let path = format!("{dir}/{}.json", out.setup.name);
+    std::fs::write(&path, to_json(out).to_string_pretty())?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::runner::run_experiment;
+    use crate::experiments::setups;
+
+    #[test]
+    fn table_and_json_render() {
+        let setup = setups::tenant_scaling()[0].clone().quick(4);
+        let out = run_experiment(&setup);
+        let table = appendix_table(&out);
+        assert!(table.contains("Throughput(/min)"));
+        assert!(table.contains("STATIC"));
+        assert!(table.contains("FASTPF"));
+        let json = to_json(&out);
+        assert_eq!(
+            json.get("experiment").unwrap().as_str().unwrap(),
+            "tenants-2"
+        );
+        assert_eq!(json.get("summaries").unwrap().as_array().unwrap().len(), 4);
+        // Round-trips through the parser.
+        let text = json.to_string_pretty();
+        assert_eq!(Json::parse(&text).unwrap(), json);
+    }
+}

@@ -1,0 +1,171 @@
+//! Experiment execution: run one setup under every compared policy on
+//! an identical workload (same generator seed), compute the §5.2 metrics
+//! against the STATIC baseline, and return table-ready rows.
+
+use crate::alloc::{Policy, PolicyKind};
+use crate::coordinator::loop_::{Coordinator, CoordinatorConfig, RunResult};
+use crate::coordinator::metrics::{fairness_index, MetricsSummary};
+use crate::domain::tenant::TenantSet;
+use crate::experiments::setups::{ExperimentSetup, UniverseKind};
+use crate::sim::cluster::ClusterConfig;
+use crate::sim::engine::SimEngine;
+use crate::workload::generator::WorkloadGenerator;
+use crate::workload::universe::Universe;
+
+/// The four policies compared throughout §5.3.
+pub fn default_policies() -> Vec<PolicyKind> {
+    vec![
+        PolicyKind::Static,
+        PolicyKind::Mmf,
+        PolicyKind::FastPf,
+        PolicyKind::Optp,
+    ]
+}
+
+/// All runs of one experiment plus derived summaries.
+pub struct ExperimentOutput {
+    pub setup: ExperimentSetup,
+    pub runs: Vec<RunResult>,
+    pub summaries: Vec<MetricsSummary>,
+}
+
+impl ExperimentOutput {
+    pub fn run_for(&self, policy: &str) -> Option<&RunResult> {
+        self.runs.iter().find(|r| r.policy == policy)
+    }
+}
+
+pub fn build_universe(kind: UniverseKind) -> Universe {
+    match kind {
+        UniverseKind::Mixed => Universe::mixed(),
+        UniverseKind::SalesOnly => Universe::sales_only(),
+    }
+}
+
+/// Run a setup under explicit policies; the first run is the fairness
+/// baseline (pass STATIC first for the paper's Equation 5 semantics).
+pub fn run_with_policies(
+    setup: &ExperimentSetup,
+    policies: &[Box<dyn Policy>],
+) -> ExperimentOutput {
+    let universe = build_universe(setup.universe);
+    let mut tenants = TenantSet::new();
+    for (i, w) in setup.weights.iter().enumerate() {
+        tenants.add(&format!("tenant-{i}"), *w);
+    }
+    let engine = SimEngine::new(ClusterConfig::default());
+    let config = CoordinatorConfig {
+        batch_secs: setup.batch_secs,
+        n_batches: setup.n_batches,
+        stateful_gamma: setup.stateful_gamma,
+        seed: setup.seed,
+    };
+    let coordinator = Coordinator::new(&universe, tenants, engine, config);
+
+    let runs: Vec<RunResult> = policies
+        .iter()
+        .map(|p| {
+            // Fresh generator with the same seed → identical workload.
+            let mut gen = WorkloadGenerator::new(
+                setup.tenant_specs.clone(),
+                &universe,
+                setup.seed,
+            );
+            coordinator.run(&mut gen, p.as_ref())
+        })
+        .collect();
+
+    let baseline = &runs[0];
+    let summaries = runs
+        .iter()
+        .map(|r| MetricsSummary::compute(r, baseline))
+        .collect();
+
+    ExperimentOutput {
+        setup: setup.clone(),
+        runs,
+        summaries,
+    }
+}
+
+/// Run with the default §5.3 policy set.
+pub fn run_experiment(setup: &ExperimentSetup) -> ExperimentOutput {
+    let policies: Vec<Box<dyn Policy>> = default_policies()
+        .into_iter()
+        .map(|k| k.build())
+        .collect();
+    run_with_policies(setup, &policies)
+}
+
+/// Figure 11 series: fairness index as a function of batch count for one
+/// policy (computed on prefixes of the run).
+pub fn convergence_series(
+    policy_run: &RunResult,
+    baseline: &RunResult,
+    every: usize,
+) -> Vec<(usize, f64)> {
+    let n = policy_run.batches.len();
+    let mut series = Vec::new();
+    let mut b = every.max(1);
+    while b <= n {
+        series.push((
+            b,
+            crate::coordinator::metrics::fairness_index_prefix(policy_run, baseline, b),
+        ));
+        b += every.max(1);
+    }
+    series
+}
+
+/// Convenience wrapper used by tests: fairness of run vs baseline.
+pub fn fairness_of(output: &ExperimentOutput, policy: &str) -> f64 {
+    let run = output.run_for(policy).expect("policy present");
+    fairness_index(run, &output.runs[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::setups;
+
+    /// One quick Sales G1 run exercising the full stack; checks the
+    /// paper's qualitative shape: shared policies beat STATIC on
+    /// throughput, cache utilization, and hit ratio.
+    #[test]
+    fn sales_g1_shape_holds() {
+        let setup = setups::data_sharing_sales()[0].clone().quick(8);
+        let out = run_experiment(&setup);
+        assert_eq!(out.summaries.len(), 4);
+        let by_name = |n: &str| {
+            out.summaries
+                .iter()
+                .find(|s| s.policy == n)
+                .unwrap()
+                .clone()
+        };
+        let stat = by_name("STATIC");
+        let pf = by_name("FASTPF");
+        let optp = by_name("OPTP");
+        assert!(
+            pf.throughput_per_min >= stat.throughput_per_min,
+            "FASTPF {} < STATIC {}",
+            pf.throughput_per_min,
+            stat.throughput_per_min
+        );
+        assert!(pf.hit_ratio > stat.hit_ratio);
+        assert!(pf.avg_cache_utilization > stat.avg_cache_utilization);
+        assert!(optp.hit_ratio > stat.hit_ratio);
+        // STATIC is the fairness baseline → index 1 by definition.
+        assert!((stat.fairness_index - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn convergence_series_monotone_length() {
+        let setup = setups::convergence().quick(10);
+        let out = run_experiment(&setup);
+        let pf = out.run_for("FASTPF").unwrap();
+        let series = convergence_series(pf, &out.runs[0], 2);
+        assert_eq!(series.len(), 5);
+        assert!(series.iter().all(|(_, j)| (0.0..=1.0 + 1e-9).contains(j)));
+    }
+}

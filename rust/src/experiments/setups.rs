@@ -1,0 +1,279 @@
+//! The evaluation setups of §5.3 (Tables 8–14), expressed declaratively.
+
+use crate::workload::spec::{AccessSpec, TenantSpec, WindowSpec};
+
+/// Sales tenants use the §5.1 hot/cold local-window mechanism: every
+/// ~2 simulated minutes a tenant drills into a small candidate subset
+/// drawn from its global Zipf (the [31]/[53] re-access pattern). This is
+/// what creates per-batch cache contention between tenants.
+fn sales_tenant(g: usize, mean_interarrival: f64) -> TenantSpec {
+    TenantSpec::new(AccessSpec::g(g), mean_interarrival).with_window(WindowSpec {
+        mean_secs: 120.0,
+        std_secs: 30.0,
+        // Wide enough that one tenant's working set (~5 GB) exceeds its
+        // STATIC partition and the tenants' combined demand exceeds the
+        // 6 GB budget — the contention regime the paper evaluates.
+        candidates: 8,
+    })
+}
+
+/// Which data universe a setup runs on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UniverseKind {
+    Mixed,
+    SalesOnly,
+}
+
+/// One experiment configuration.
+#[derive(Debug, Clone)]
+pub struct ExperimentSetup {
+    pub name: String,
+    pub universe: UniverseKind,
+    pub tenant_specs: Vec<TenantSpec>,
+    /// Tenant weights (equal in all §5.3 experiments).
+    pub weights: Vec<f64>,
+    pub batch_secs: f64,
+    pub n_batches: usize,
+    pub stateful_gamma: Option<f64>,
+    pub seed: u64,
+}
+
+impl ExperimentSetup {
+    fn new(
+        name: &str,
+        universe: UniverseKind,
+        specs: Vec<TenantSpec>,
+        batch_secs: f64,
+        n_batches: usize,
+    ) -> Self {
+        let n = specs.len();
+        Self {
+            name: name.to_string(),
+            universe,
+            tenant_specs: specs,
+            weights: vec![1.0; n],
+            batch_secs,
+            n_batches,
+            stateful_gamma: None,
+            seed: 42,
+        }
+    }
+
+    /// Scale batches down for quick runs/tests.
+    pub fn quick(mut self, n_batches: usize) -> Self {
+        self.n_batches = n_batches;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+/// Table 8: mixed-workload data-sharing setups 𝒢₁–𝒢₄ (4 tenants, batch
+/// 40 s, Poisson(20), 30 batches).
+pub fn data_sharing_mixed() -> Vec<ExperimentSetup> {
+    let dist_sets: [Vec<AccessSpec>; 4] = [
+        vec![AccessSpec::h1(), AccessSpec::h1(), AccessSpec::h1(), AccessSpec::h1()],
+        vec![AccessSpec::h1(), AccessSpec::h1(), AccessSpec::h1(), AccessSpec::g(1)],
+        vec![AccessSpec::h1(), AccessSpec::h1(), AccessSpec::g(1), AccessSpec::g(2)],
+        vec![AccessSpec::h1(), AccessSpec::g(1), AccessSpec::g(2), AccessSpec::g(3)],
+    ];
+    dist_sets
+        .into_iter()
+        .enumerate()
+        .map(|(i, dists)| {
+            let specs = dists
+                .into_iter()
+                .map(|d| match d {
+                    AccessSpec::SalesZipf { skew_seed, .. } => {
+                        sales_tenant((skew_seed - 1000) as usize, 20.0)
+                    }
+                    h => TenantSpec::new(h, 20.0),
+                })
+                .collect();
+            ExperimentSetup::new(
+                &format!("mixed-G{}", i + 1),
+                UniverseKind::Mixed,
+                specs,
+                40.0,
+                30,
+            )
+        })
+        .collect()
+}
+
+/// Table 9/10: Sales-only data-sharing setups 𝒢₁–𝒢₄.
+pub fn data_sharing_sales() -> Vec<ExperimentSetup> {
+    let dist_sets: [[usize; 4]; 4] = [
+        [1, 1, 1, 1],
+        [1, 1, 1, 2],
+        [1, 1, 2, 3],
+        [1, 2, 3, 4],
+    ];
+    dist_sets
+        .into_iter()
+        .enumerate()
+        .map(|(i, gs)| {
+            let specs = gs.into_iter().map(|g| sales_tenant(g, 20.0)).collect();
+            ExperimentSetup::new(
+                &format!("sales-G{}", i + 1),
+                UniverseKind::SalesOnly,
+                specs,
+                40.0,
+                30,
+            )
+        })
+        .collect()
+}
+
+/// Tables 11/12: arrival-rate variance setups low/mid/high (2 tenants,
+/// {g₁, g₂}, batch 72 s, 30 batches).
+pub fn arrival_rates() -> Vec<ExperimentSetup> {
+    [("low", 12.0, 12.0), ("mid", 18.0, 8.0), ("high", 24.0, 6.0)]
+        .into_iter()
+        .map(|(name, l1, l2)| {
+            let specs = vec![sales_tenant(1, l1), sales_tenant(2, l2)];
+            ExperimentSetup::new(
+                &format!("arrival-{name}"),
+                UniverseKind::SalesOnly,
+                specs,
+                72.0,
+                30,
+            )
+        })
+        .collect()
+}
+
+/// Tables 13/14: tenant-count scaling (2/4/8 tenants, all g₁, arrival
+/// rate scaled to keep per-batch query count constant, batch 40 s).
+pub fn tenant_scaling() -> Vec<ExperimentSetup> {
+    [(2usize, 10.0), (4, 20.0), (8, 40.0)]
+        .into_iter()
+        .map(|(n, mean)| {
+            let specs = (0..n).map(|_| sales_tenant(1, mean)).collect();
+            ExperimentSetup::new(
+                &format!("tenants-{n}"),
+                UniverseKind::SalesOnly,
+                specs,
+                40.0,
+                30,
+            )
+        })
+        .collect()
+}
+
+/// Ablation (DESIGN.md §Calibration): sweep the hot/cold window width.
+/// Narrow windows fit inside STATIC's partitions (no contention); wide
+/// windows exceed the shared budget — the regime where fair shared
+/// allocation matters. Validates the candidates=8 calibration choice.
+pub fn window_ablation() -> Vec<(usize, ExperimentSetup)> {
+    [2usize, 4, 8, 16]
+        .into_iter()
+        .map(|cands| {
+            let specs: Vec<TenantSpec> = (1..=4)
+                .map(|g| {
+                    TenantSpec::new(AccessSpec::g(g), 20.0).with_window(WindowSpec {
+                        mean_secs: 120.0,
+                        std_secs: 30.0,
+                        candidates: cands,
+                    })
+                })
+                .collect();
+            (
+                cands,
+                ExperimentSetup::new(
+                    &format!("window-{cands}"),
+                    UniverseKind::SalesOnly,
+                    specs,
+                    40.0,
+                    30,
+                ),
+            )
+        })
+        .collect()
+}
+
+/// Figure 11: convergence run (4 tenants, 50 batches).
+pub fn convergence() -> ExperimentSetup {
+    let specs = (1..=4).map(|g| sales_tenant(g, 20.0)).collect();
+    ExperimentSetup::new("convergence", UniverseKind::SalesOnly, specs, 40.0, 50)
+}
+
+/// Figure 12: batch-size × cache-state sweep (4 equi-paced tenants).
+pub fn batch_size_sweep() -> Vec<(ExperimentSetup, Option<f64>)> {
+    let mut out = Vec::new();
+    for &batch in &[20.0, 40.0, 80.0, 160.0] {
+        for &gamma in &[None, Some(2.0)] {
+            let specs: Vec<TenantSpec> =
+                (1..=4).map(|g| sales_tenant(g, 20.0)).collect();
+            let mut s = ExperimentSetup::new(
+                &format!(
+                    "batch-{}s-{}",
+                    batch,
+                    if gamma.is_some() { "stateful" } else { "stateless" }
+                ),
+                UniverseKind::SalesOnly,
+                specs,
+                batch,
+                30,
+            );
+            s.stateful_gamma = gamma;
+            out.push((s, gamma));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table8_shapes() {
+        let setups = data_sharing_mixed();
+        assert_eq!(setups.len(), 4);
+        for s in &setups {
+            assert_eq!(s.tenant_specs.len(), 4);
+            assert_eq!(s.batch_secs, 40.0);
+            assert_eq!(s.n_batches, 30);
+        }
+        // G1 is all-TPC-H; G4 has one TPC-H + three distinct Sales skews.
+        assert!(setups[0]
+            .tenant_specs
+            .iter()
+            .all(|t| t.access == AccessSpec::h1()));
+        let g4: Vec<_> = setups[3].tenant_specs.iter().map(|t| &t.access).collect();
+        assert_eq!(g4[0], &AccessSpec::h1());
+        assert_ne!(g4[1], g4[2]);
+    }
+
+    #[test]
+    fn arrival_setups_match_table11() {
+        let setups = arrival_rates();
+        assert_eq!(setups.len(), 3);
+        assert_eq!(setups[2].tenant_specs[0].mean_interarrival, 24.0);
+        assert_eq!(setups[2].tenant_specs[1].mean_interarrival, 6.0);
+        assert!(setups.iter().all(|s| s.batch_secs == 72.0));
+    }
+
+    #[test]
+    fn tenant_scaling_keeps_batch_load_constant() {
+        for s in tenant_scaling() {
+            let rate: f64 = s
+                .tenant_specs
+                .iter()
+                .map(|t| 1.0 / t.mean_interarrival)
+                .sum();
+            assert!((rate - 0.2).abs() < 1e-12, "{}: rate={rate}", s.name);
+        }
+    }
+
+    #[test]
+    fn batch_sweep_has_eight_cells() {
+        let cells = batch_size_sweep();
+        assert_eq!(cells.len(), 8);
+        assert!(cells.iter().any(|(s, g)| s.batch_secs == 160.0 && g.is_some()));
+    }
+}

@@ -1,0 +1,9 @@
+//! Empirical fairness-property verification (Table 6): Sharing
+//! Incentive, Pareto Efficiency, and the randomized core (Definition 3).
+
+pub mod properties;
+
+pub use properties::{
+    find_blocking_coalition, find_pareto_improvement, sharing_incentive_violations,
+    PropertyReport,
+};

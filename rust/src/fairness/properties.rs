@@ -1,0 +1,241 @@
+//! Checkers for the fairness desiderata of §3. All checks are relative
+//! to an explicit configuration space (LP-searchable deviations): a
+//! violation found is a real violation; absence of a violation certifies
+//! the property *within the given space* (use a richly pruned space).
+//!
+//! - **SI** (§3.2): V_i(x) ≥ λ_i/Σλ for every active tenant.
+//! - **PE** (§3.2): no allocation y over the space with U_i(y) ≥ U_i(x)
+//!   for all i and > for one — found via LP maximizing total utility
+//!   subject to no-tenant-worse.
+//! - **Core** (Definition 3): no coalition T and allocation y with
+//!   ‖y‖ = Σ_{i∈T} λ_i / Σλ improving every member (one strictly) —
+//!   searched by LP over all 2^N−1 coalitions.
+
+use crate::alloc::config_space::ConfigSpace;
+use crate::alloc::Allocation;
+use crate::domain::utility::BatchUtilities;
+use crate::solver::simplex::{Cmp, Lp, LpResult};
+
+/// Outcome summary for Table 6-style reporting.
+#[derive(Debug, Clone)]
+pub struct PropertyReport {
+    pub sharing_incentive: bool,
+    pub pareto_efficient: bool,
+    pub core: bool,
+}
+
+/// Tenants whose expected scaled utility falls below their entitled
+/// share (active tenants only). Empty ⇒ SI holds.
+pub fn sharing_incentive_violations(
+    alloc: &Allocation,
+    batch: &BatchUtilities,
+    tol: f64,
+) -> Vec<(usize, f64, f64)> {
+    let v = alloc.expected_scaled_utilities(batch);
+    let total_w: f64 = batch.weights.iter().sum();
+    batch
+        .active_tenants()
+        .into_iter()
+        .filter_map(|i| {
+            let entitled = batch.weights[i] / total_w;
+            if v[i] + tol < entitled {
+                Some((i, v[i], entitled))
+            } else {
+                None
+            }
+        })
+        .collect()
+}
+
+/// Search the space for a Pareto improvement on `alloc`. Returns the
+/// improving allocation vector (over `space`) if one exists.
+///
+/// LP: max Σ_i V_i(y) s.t. V_i(y) ≥ V_i(x) ∀ active i, ‖y‖ ≤ 1, y ≥ 0.
+/// An optimum exceeding Σ_i V_i(x) by more than `tol` implies some tenant
+/// strictly improved with none hurt.
+pub fn find_pareto_improvement(
+    alloc: &Allocation,
+    batch: &BatchUtilities,
+    space: &ConfigSpace,
+    tol: f64,
+) -> Option<Vec<f64>> {
+    let active = batch.active_tenants();
+    if active.is_empty() || space.is_empty() {
+        return None;
+    }
+    let current = alloc.expected_scaled_utilities(batch);
+    let m = space.len();
+    let mut obj = vec![0.0; m];
+    for &i in &active {
+        for (s, o) in obj.iter_mut().enumerate() {
+            *o += space.v[s][i];
+        }
+    }
+    let mut lp = Lp::new(obj);
+    for &i in &active {
+        let row: Vec<f64> = (0..m).map(|s| space.v[s][i]).collect();
+        lp.constrain(row, Cmp::Ge, current[i]);
+    }
+    lp.constrain(vec![1.0; m], Cmp::Le, 1.0);
+    match lp.solve() {
+        LpResult::Optimal { value, x } => {
+            let base: f64 = active.iter().map(|&i| current[i]).sum();
+            if value > base + tol {
+                Some(x)
+            } else {
+                None
+            }
+        }
+        _ => None,
+    }
+}
+
+/// Search all coalitions for a blocking deviation (Definition 3 with the
+/// §3.4 weighted endowments). Returns the first blocking coalition and
+/// its deviation allocation.
+pub fn find_blocking_coalition(
+    alloc: &Allocation,
+    batch: &BatchUtilities,
+    space: &ConfigSpace,
+    tol: f64,
+) -> Option<(Vec<usize>, Vec<f64>)> {
+    let active = batch.active_tenants();
+    let n = active.len();
+    if n == 0 || n > 16 || space.is_empty() {
+        return None;
+    }
+    let current = alloc.expected_scaled_utilities(batch);
+    let total_w: f64 = batch.weights.iter().sum();
+    let m = space.len();
+
+    for mask in 1u32..(1 << n) {
+        let coalition: Vec<usize> = (0..n)
+            .filter(|j| mask & (1 << j) != 0)
+            .map(|j| active[j])
+            .collect();
+        let endowment: f64 =
+            coalition.iter().map(|&i| batch.weights[i]).sum::<f64>() / total_w;
+
+        // LP: max Σ_{i∈T} V_i(y) s.t. V_i(y) ≥ V_i(x) ∀ i∈T,
+        //     ‖y‖ ≤ endowment, y ≥ 0.
+        let mut obj = vec![0.0; m];
+        for &i in &coalition {
+            for (s, o) in obj.iter_mut().enumerate() {
+                *o += space.v[s][i];
+            }
+        }
+        let mut lp = Lp::new(obj);
+        for &i in &coalition {
+            let row: Vec<f64> = (0..m).map(|s| space.v[s][i]).collect();
+            lp.constrain(row, Cmp::Ge, current[i]);
+        }
+        lp.constrain(vec![1.0; m], Cmp::Le, endowment);
+        if let LpResult::Optimal { value, x } = lp.solve() {
+            let base: f64 = coalition.iter().map(|&i| current[i]).sum();
+            if value > base + tol {
+                return Some((coalition, x));
+            }
+        }
+    }
+    None
+}
+
+/// Full Table 6-style property report for an allocation.
+pub fn property_report(
+    alloc: &Allocation,
+    batch: &BatchUtilities,
+    space: &ConfigSpace,
+    tol: f64,
+) -> PropertyReport {
+    PropertyReport {
+        sharing_incentive: sharing_incentive_violations(alloc, batch, tol).is_empty(),
+        pareto_efficient: find_pareto_improvement(alloc, batch, space, tol).is_none(),
+        core: find_blocking_coalition(alloc, batch, space, tol).is_none(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::testing::{table3, table4, table5};
+    use crate::alloc::{
+        fastpf::FastPf, mmf::MaxMinFair, optp::UtilityMax, rsd::RandomSerialDictatorship,
+        Policy,
+    };
+    use crate::util::rng::Pcg64;
+
+    const TOL: f64 = 1e-4;
+
+    fn rich_space(batch: &BatchUtilities) -> ConfigSpace {
+        ConfigSpace::pruned(batch, 100, &mut Pcg64::new(12345))
+    }
+
+    #[test]
+    fn rsd_si_but_not_pe_on_table3() {
+        // Table 6 row 1: RSD is SI; Table 3 shows it is not PE (caching S
+        // with probability 1 dominates).
+        let b = table3();
+        let a = RandomSerialDictatorship::default().allocate(&b, &mut Pcg64::new(0));
+        let space = rich_space(&b);
+        assert!(sharing_incentive_violations(&a, &b, TOL).is_empty());
+        assert!(
+            find_pareto_improvement(&a, &b, &space, TOL).is_some(),
+            "RSD on Table 3 must admit a Pareto improvement"
+        );
+    }
+
+    #[test]
+    fn optp_pe_but_not_si_on_table5() {
+        // Table 6 row 2: utility maximization is PE but not SI.
+        let b = table5();
+        let a = UtilityMax.allocate(&b, &mut Pcg64::new(0));
+        let space = rich_space(&b);
+        let viol = sharing_incentive_violations(&a, &b, TOL);
+        assert!(!viol.is_empty(), "OPTP must violate SI on Table 5");
+        assert!(find_pareto_improvement(&a, &b, &space, TOL).is_none());
+    }
+
+    #[test]
+    fn mmf_si_pe_but_not_core_on_table4() {
+        // Table 6 row 3: MMF is SI+PE; §3.3 shows its Table 4 allocation
+        // (½R, ½S) is outside the core — the N−1 R-tenants can pool their
+        // (N−1)/N endowment and all get (N−1)/N > ½.
+        let b = table4(4);
+        let a = MaxMinFair::default().allocate(&b, &mut Pcg64::new(0));
+        let space = rich_space(&b);
+        assert!(sharing_incentive_violations(&a, &b, TOL).is_empty());
+        assert!(find_pareto_improvement(&a, &b, &space, TOL).is_none());
+        let blocking = find_blocking_coalition(&a, &b, &space, 1e-3);
+        assert!(blocking.is_some(), "MMF on Table 4 must be blocked");
+        let (coalition, _) = blocking.unwrap();
+        // The blocking coalition is (a subset of) the R-tenants {0,1,2}.
+        assert!(coalition.iter().all(|&i| i < 3), "coalition={coalition:?}");
+        assert!(coalition.len() >= 2);
+    }
+
+    #[test]
+    fn fastpf_satisfies_all_three() {
+        // Table 6 row 4: PF is SI + PE + core (Theorem 2).
+        for b in [table3(), table4(4), table5()] {
+            let a = FastPf::default().allocate(&b, &mut Pcg64::new(0));
+            let space = rich_space(&b);
+            let report = property_report(&a, &b, &space, 2e-3);
+            assert!(report.sharing_incentive, "PF must be SI");
+            assert!(report.pareto_efficient, "PF must be PE");
+            assert!(report.core, "PF must be in the core");
+        }
+    }
+
+    #[test]
+    fn core_implies_si_and_pe_relationships() {
+        // Singleton coalitions encode SI; the grand coalition encodes PE.
+        // An allocation violating SI must therefore be blocked.
+        let b = table5();
+        let a = UtilityMax.allocate(&b, &mut Pcg64::new(0));
+        let space = rich_space(&b);
+        let blocked = find_blocking_coalition(&a, &b, &space, TOL);
+        assert!(blocked.is_some());
+        let (coalition, _) = blocked.unwrap();
+        assert_eq!(coalition, vec![0], "tenant A alone blocks OPTP");
+    }
+}

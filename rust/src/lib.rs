@@ -1,0 +1,44 @@
+//! # ROBUS — Fair Cache Allocation for Multi-tenant Data-parallel Workloads
+//!
+//! A from-scratch reproduction of Kunjir, Fain, Munagala & Babu,
+//! *"ROBUS: Fair Cache Allocation for Multi-tenant Data-parallel
+//! Workloads"* (SIGMOD 2017) as a Rust coordinator + JAX/Pallas solver
+//! stack (three-layer rust_pallas architecture; see DESIGN.md).
+//!
+//! The crate provides:
+//! - [`alloc`] — the paper's view-selection policies (STATIC, RSD, OPTP,
+//!   MMF, FASTPF and the provably-good multiplicative-weights algorithms);
+//! - [`coordinator`] — the batched five-step ROBUS loop of Figure 2;
+//! - [`sim`] — a discrete-event Spark-like cluster simulator standing in
+//!   for the paper's 10-node EC2 testbed;
+//! - [`domain`] / [`workload`] — TPC-H + Sales catalogs, utility model,
+//!   and the Poisson/Zipf workload generators of §5.1;
+//! - [`solver`] — LP (simplex), knapsack (WELFARE oracle), and projected
+//!   gradient substrates;
+//! - [`runtime`] — PJRT loading/execution of the AOT-compiled JAX/Pallas
+//!   solver artifacts (`artifacts/*.hlo.txt`);
+//! - [`fairness`] — empirical SI / PE / core property checkers;
+//! - [`experiments`] — configurations and runners regenerating every
+//!   table and figure of the paper's evaluation.
+
+pub mod util;
+
+pub mod solver;
+
+pub mod domain;
+
+pub mod workload;
+
+pub mod alloc;
+
+pub mod fairness;
+
+pub mod cache;
+
+pub mod sim;
+
+pub mod coordinator;
+
+pub mod runtime;
+
+pub mod experiments;

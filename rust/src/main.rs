@@ -1,0 +1,346 @@
+//! `robus` — the leader entrypoint / CLI launcher.
+//!
+//! Subcommands:
+//!   run              one coordinator run with explicit knobs
+//!   experiment NAME  regenerate a paper table/figure (see `list`)
+//!   list             list available experiments
+//!   audit            Table 6 fairness-property audit
+//!   fig3             candidate Sales view sizes (Figure 3)
+//!   pruning-error    §4.3 random-weight-vector approximation sweep
+
+use robus::alloc::PolicyKind;
+use robus::coordinator::metrics::MetricsSummary;
+use robus::experiments::report::{appendix_table, write_json};
+use robus::experiments::runner::{
+    convergence_series, run_experiment, run_with_policies,
+};
+use robus::experiments::{analysis, setups};
+use robus::util::cli::{render_help, Args, OptSpec};
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match args.subcommand.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("experiment") => cmd_experiment(&args),
+        Some("list") => {
+            print_experiment_list();
+            0
+        }
+        Some("audit") => cmd_audit(),
+        Some("fig3") => cmd_fig3(),
+        Some("pruning-error") => cmd_pruning_error(&args),
+        _ => {
+            print!(
+                "{}",
+                render_help(
+                    "robus",
+                    "fair cache allocation for multi-tenant data-parallel workloads (SIGMOD'17 reproduction)",
+                    &[
+                        ("run", "one coordinator run (see --policy/--tenants/...)"),
+                        ("experiment <name>", "regenerate a paper table/figure"),
+                        ("list", "list available experiments"),
+                        ("audit", "Table 6 fairness-property audit"),
+                        ("fig3", "candidate Sales view sizes"),
+                        ("pruning-error", "§4.3 approximation-error sweep"),
+                    ],
+                    &[
+                        OptSpec { name: "policy", help: "STATIC|RSD|OPTP|MMF|FASTPF|MMF-MW|PF-MW", default: Some("FASTPF") },
+                        OptSpec { name: "tenants", help: "number of tenants", default: Some("4") },
+                        OptSpec { name: "batches", help: "number of batches", default: Some("30") },
+                        OptSpec { name: "batch-secs", help: "batch interval (sim seconds)", default: Some("40") },
+                        OptSpec { name: "seed", help: "rng seed", default: Some("42") },
+                        OptSpec { name: "gamma", help: "stateful cache boost γ (omit = stateless)", default: None },
+                        OptSpec { name: "quick", help: "cut batches down for a fast smoke run", default: None },
+                        OptSpec { name: "out-dir", help: "write JSON reports here", default: Some("results") },
+                    ],
+                )
+            );
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+fn cmd_run(args: &Args) -> i32 {
+    let policy_name = args.opt_or("policy", "FASTPF");
+    let Some(kind) = PolicyKind::parse(policy_name) else {
+        eprintln!("unknown policy {policy_name}");
+        return 2;
+    };
+    let n_tenants = args.opt_usize("tenants", 4).unwrap_or(4);
+    let batches = args.opt_usize("batches", 30).unwrap_or(30);
+    let batch_secs = args.opt_f64("batch-secs", 40.0).unwrap_or(40.0);
+    let seed = args.opt_u64("seed", 42).unwrap_or(42);
+    let gamma = args.opt("gamma").and_then(|g| g.parse::<f64>().ok());
+
+    use robus::workload::spec::{AccessSpec, TenantSpec};
+    let specs: Vec<TenantSpec> = (0..n_tenants)
+        .map(|i| TenantSpec::new(AccessSpec::g(1 + i % 4), 20.0))
+        .collect();
+    let mut setup = robus::experiments::ExperimentSetup {
+        name: format!("run-{policy_name}"),
+        universe: robus::experiments::UniverseKind::SalesOnly,
+        tenant_specs: specs,
+        weights: vec![1.0; n_tenants],
+        batch_secs,
+        n_batches: batches,
+        stateful_gamma: gamma,
+        seed,
+    };
+    if args.flag("quick") {
+        setup.n_batches = setup.n_batches.min(6);
+    }
+    let policies: Vec<Box<dyn robus::alloc::Policy>> =
+        vec![PolicyKind::Static.build(), kind.build()];
+    let out = run_with_policies(&setup, &policies);
+    println!("{}", MetricsSummary::header());
+    for s in &out.summaries {
+        println!("{}", s.row());
+    }
+    0
+}
+
+fn print_experiment_list() {
+    println!("experiments (use: robus experiment <name> [--quick]):");
+    for (name, what) in [
+        ("data-sharing-mixed", "Fig 5 + Tables 15-18 (mixed G1-G4)"),
+        ("data-sharing-sales", "Fig 6 + Tables 19-22 (Sales G1-G4)"),
+        ("fig7", "Fig 7 (popular-view cache-time fractions, Sales G2)"),
+        ("arrival-rates", "Fig 8 + Tables 23-25 (low/mid/high)"),
+        ("fig9", "Fig 9 (per-tenant speedups, setup high)"),
+        ("tenant-scaling", "Fig 10 + Tables 26-28 (2/4/8 tenants)"),
+        ("convergence", "Fig 11 (fairness index vs batches)"),
+        ("batch-size", "Fig 12 (batch size × stateful/stateless)"),
+        ("ablation-windows", "calibration ablation: hot/cold window width"),
+    ] {
+        println!("  {name:<22} {what}");
+    }
+}
+
+fn cmd_experiment(args: &Args) -> i32 {
+    let Some(name) = args.positional.first().map(|s| s.as_str()) else {
+        eprintln!("usage: robus experiment <name> [--quick] [--out-dir DIR]");
+        print_experiment_list();
+        return 2;
+    };
+    let quick = args.flag("quick");
+    let out_dir = args.opt_or("out-dir", "results").to_string();
+    let scale = |s: setups::ExperimentSetup| if quick { s.quick(6) } else { s };
+
+    let run_group = |list: Vec<setups::ExperimentSetup>| -> i32 {
+        for setup in list {
+            let setup = scale(setup);
+            let out = run_experiment(&setup);
+            println!("{}", appendix_table(&out));
+            match write_json(&out, &out_dir) {
+                Ok(p) => println!("(wrote {p})\n"),
+                Err(e) => eprintln!("warn: could not write report: {e}"),
+            }
+        }
+        0
+    };
+
+    match name {
+        "data-sharing-mixed" => run_group(setups::data_sharing_mixed()),
+        "data-sharing-sales" => run_group(setups::data_sharing_sales()),
+        "arrival-rates" => run_group(setups::arrival_rates()),
+        "tenant-scaling" => run_group(setups::tenant_scaling()),
+        "fig7" => cmd_fig7(quick),
+        "fig9" => cmd_fig9(quick),
+        "convergence" => cmd_convergence(quick),
+        "batch-size" => cmd_batch_size(quick),
+        "ablation-windows" => cmd_window_ablation(quick),
+        other => {
+            eprintln!("unknown experiment {other}");
+            print_experiment_list();
+            2
+        }
+    }
+}
+
+fn cmd_fig7(quick: bool) -> i32 {
+    // Setup G2 of the Sales sweep: three tenants on g1, one on g2.
+    let mut setup = setups::data_sharing_sales()[1].clone();
+    if quick {
+        setup = setup.quick(6);
+    }
+    let out = run_experiment(&setup);
+    let universe = robus::workload::Universe::sales_only();
+    // Top-3 views of g1 and g2 by construction of the seeded Zipfs.
+    use robus::util::rng::{Pcg64, Zipf};
+    let top = |skew_seed: u64| -> Vec<usize> {
+        let mut rng = Pcg64::with_stream(skew_seed, 7);
+        let z = Zipf::randomized(30, 1.0, &mut rng);
+        z.items_by_rank()[..3].to_vec()
+    };
+    println!(
+        "## fig7: fraction of batches the popular views were cached ({})",
+        setup.name
+    );
+    println!("\n| policy | g1#1 | g1#2 | g1#3 | g2#1 | g2#2 | g2#3 |");
+    println!("|---|---|---|---|---|---|---|");
+    for run in &out.runs {
+        let frac = run.view_cache_fraction(universe.n_views());
+        let mut row = format!("| {} |", run.policy);
+        for seed in [1001u64, 1002] {
+            for &d in &top(seed) {
+                let v = universe.sales_views[d].0;
+                row.push_str(&format!(" {:.2} |", frac[v]));
+            }
+        }
+        println!("{row}");
+    }
+    0
+}
+
+fn cmd_fig9(quick: bool) -> i32 {
+    let mut setup = setups::arrival_rates()[2].clone(); // high
+    if quick {
+        setup = setup.quick(6);
+    }
+    let out = run_experiment(&setup);
+    println!("## fig9: per-tenant mean speedups over STATIC (setup high)\n");
+    println!("| policy | tenant-1 | tenant-2 |");
+    println!("|---|---|---|");
+    for run in out.runs.iter().skip(1) {
+        let x = robus::coordinator::metrics::per_tenant_speedups(run, &out.runs[0]);
+        println!("| {} | {:.2} | {:.2} |", run.policy, x[0], x[1]);
+    }
+    0
+}
+
+fn cmd_convergence(quick: bool) -> i32 {
+    let mut setup = setups::convergence();
+    if quick {
+        setup = setup.quick(12);
+    }
+    let out = run_experiment(&setup);
+    println!("## fig11: fairness index vs number of batches\n");
+    println!("| batches | MMF | FASTPF |");
+    println!("|---|---|---|");
+    let mmf = out.run_for("MMF").unwrap();
+    let pf = out.run_for("FASTPF").unwrap();
+    let s_mmf = convergence_series(mmf, &out.runs[0], 2);
+    let s_pf = convergence_series(pf, &out.runs[0], 2);
+    for ((b, jm), (_, jp)) in s_mmf.iter().zip(&s_pf) {
+        println!("| {b} | {jm:.3} | {jp:.3} |");
+    }
+    0
+}
+
+fn cmd_batch_size(quick: bool) -> i32 {
+    println!("## fig12: batch size × cache state (MMF / FASTPF, γ=2)\n");
+    println!("| batch | policy | state | throughput/min | fairness |");
+    println!("|---|---|---|---|---|");
+    for (setup, gamma) in setups::batch_size_sweep() {
+        let setup = if quick { setup.quick(6) } else { setup };
+        let policies: Vec<Box<dyn robus::alloc::Policy>> = vec![
+            PolicyKind::Static.build(),
+            PolicyKind::Mmf.build(),
+            PolicyKind::FastPf.build(),
+        ];
+        let out = run_with_policies(&setup, &policies);
+        for s in out.summaries.iter().skip(1) {
+            println!(
+                "| {}s | {} | {} | {:.2} | {:.2} |",
+                setup.batch_secs,
+                s.policy,
+                if gamma.is_some() { "stateful" } else { "stateless" },
+                s.throughput_per_min,
+                s.fairness_index
+            );
+        }
+    }
+    0
+}
+
+fn cmd_window_ablation(quick: bool) -> i32 {
+    println!("## ablation: hot/cold window width (working-set size vs contention)\n");
+    println!("| candidates | STATIC util | FASTPF util | STATIC hit | FASTPF hit |");
+    println!("|---|---|---|---|---|");
+    for (cands, setup) in setups::window_ablation() {
+        let setup = if quick { setup.quick(6) } else { setup };
+        let policies: Vec<Box<dyn robus::alloc::Policy>> =
+            vec![PolicyKind::Static.build(), PolicyKind::FastPf.build()];
+        let out = run_with_policies(&setup, &policies);
+        let s = &out.summaries[0];
+        let f = &out.summaries[1];
+        println!(
+            "| {} | {:.2} | {:.2} | {:.2} | {:.2} |",
+            cands, s.avg_cache_utilization, f.avg_cache_utilization, s.hit_ratio, f.hit_ratio
+        );
+    }
+    println!("\nWider windows → larger working sets → STATIC's partitions cover");
+    println!("less of them while the shared policies keep adapting.");
+    0
+}
+
+fn cmd_audit() -> i32 {
+    use robus::alloc::instances::{table2, table3, table4, table5};
+    use robus::alloc::ConfigSpace;
+    use robus::fairness::properties::property_report;
+    use robus::util::rng::Pcg64;
+
+    println!("## Table 6: fairness properties of mechanisms\n");
+    println!("| Algorithm | SI | PE | CORE |");
+    println!("|---|---|---|---|");
+    for kind in [
+        PolicyKind::Lru,
+        PolicyKind::Rsd,
+        PolicyKind::Optp,
+        PolicyKind::Mmf,
+        PolicyKind::FastPf,
+    ] {
+        let policy = kind.build();
+        let mut si = true;
+        let mut pe = true;
+        let mut core = true;
+        for batch in [table2(), table3(), table4(4), table5()] {
+            let mut rng = Pcg64::new(0);
+            let alloc = policy.allocate(&batch, &mut rng);
+            let space = ConfigSpace::pruned(&batch, 100, &mut Pcg64::new(1));
+            let rep = property_report(&alloc, &batch, &space, 2e-3);
+            si &= rep.sharing_incentive;
+            pe &= rep.pareto_efficient;
+            core &= rep.core;
+        }
+        let mark = |b: bool| if b { "yes" } else { "-" };
+        println!(
+            "| {} | {} | {} | {} |",
+            kind.name(),
+            mark(si),
+            mark(pe),
+            mark(core)
+        );
+    }
+    0
+}
+
+fn cmd_fig3() -> i32 {
+    println!("## fig3: cache size estimates of candidate Sales views (MB)\n");
+    for (name, mb) in analysis::figure3_view_sizes_mb() {
+        let bar = "#".repeat((mb / 60.0).ceil() as usize);
+        println!("{name:<22} {mb:>8.0}  {bar}");
+    }
+    0
+}
+
+fn cmd_pruning_error(args: &Args) -> i32 {
+    let batches = args.opt_usize("batches", 200).unwrap_or(200);
+    let seed = args.opt_u64("seed", 11).unwrap_or(11);
+    println!("## §4.3 pruning approximation error ({batches} batches, 5 tenants)\n");
+    println!("| random vectors | mean error |");
+    println!("|---|---|");
+    for m in [5usize, 25, 50] {
+        let err = analysis::pruning_error(m, batches, seed);
+        println!("| {m} | {:.1}% |", err * 100.0);
+    }
+    println!("\n(paper: 10.4% / 1.4% / 0.6%)");
+    0
+}

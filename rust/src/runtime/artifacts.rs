@@ -1,0 +1,200 @@
+//! Artifact loading and executable caching.
+//!
+//! Interchange is HLO *text* (see python/compile/aot.py and
+//! /opt/xla-example/README.md): `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `PjRtClient::compile`. Executables are
+//! compiled once per process and cached; one `execute` call per batch
+//! solve.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+/// The padded shapes every artifact was lowered with — must match
+/// python/compile/kernels/__init__.py (validated via manifest.json).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PaddedShapes {
+    pub nt: usize,
+    pub nc: usize,
+    pub nq: usize,
+    pub nv: usize,
+}
+
+pub const SHAPES: PaddedShapes = PaddedShapes {
+    nt: 16,
+    nc: 64,
+    nq: 128,
+    nv: 64,
+};
+
+/// Lazily compiled artifact registry over one PJRT CPU client.
+pub struct ArtifactRegistry {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    executables: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl ArtifactRegistry {
+    /// Open the registry rooted at an artifacts directory. Fails if the
+    /// directory does not exist (run `make artifacts`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        if !dir.is_dir() {
+            return Err(anyhow!(
+                "artifacts directory {} not found — run `make artifacts`",
+                dir.display()
+            ));
+        }
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Self {
+            client,
+            dir,
+            executables: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Locate the default artifacts directory: $ROBUS_ARTIFACTS or
+    /// ./artifacts (walking up from the current directory helps tests
+    /// run from target subdirs).
+    pub fn default_dir() -> PathBuf {
+        if let Ok(p) = std::env::var("ROBUS_ARTIFACTS") {
+            return PathBuf::from(p);
+        }
+        let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+        loop {
+            let candidate = cur.join("artifacts");
+            if candidate.is_dir() {
+                return candidate;
+            }
+            if !cur.pop() {
+                return PathBuf::from("artifacts");
+            }
+        }
+    }
+
+    /// Open at the default location.
+    pub fn open_default() -> Result<Self> {
+        Self::open(Self::default_dir())
+    }
+
+    /// Compile (or fetch the cached) executable for an entry point.
+    pub fn executable(
+        &self,
+        name: &str,
+    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        let mut cache = self.executables.lock().unwrap();
+        if let Some(exe) = cache.get(name) {
+            return Ok(exe.clone());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .with_context(|| format!("parse HLO text {path_str}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compile artifact {name}"))?,
+        );
+        cache.insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an entry point on f32 input buffers (each a flat vector
+    /// with its dimensions). Returns the flat f32 outputs of the result
+    /// tuple.
+    pub fn run_f32(
+        &self,
+        name: &str,
+        inputs: &[(&[f32], &[i64])],
+    ) -> Result<Vec<Vec<f32>>> {
+        let exe = self.executable(name)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| -> Result<xla::Literal> {
+                Ok(xla::Literal::vec1(data).reshape(dims)?)
+            })
+            .collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .context("fetch result")?;
+        // aot.py lowers with return_tuple=True: unpack the tuple.
+        let elements = result.to_tuple()?;
+        elements
+            .into_iter()
+            .map(|lit| {
+                lit.to_vec::<f32>()
+                    .context("read f32 output")
+            })
+            .collect()
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn registry() -> ArtifactRegistry {
+        ArtifactRegistry::open_default().expect("artifacts present (make artifacts)")
+    }
+
+    #[test]
+    fn missing_dir_is_an_error() {
+        assert!(ArtifactRegistry::open("/nonexistent/robus").is_err());
+    }
+
+    #[test]
+    fn compile_cache_reuses_executable() {
+        let reg = registry();
+        let a = reg.executable("config_utils").unwrap();
+        let b = reg.executable("config_utils").unwrap();
+        assert!(std::sync::Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn config_utils_round_trip() {
+        let reg = registry();
+        let (nt, nc, nq, nv) = (SHAPES.nt, SHAPES.nc, SHAPES.nq, SHAPES.nv);
+        let mut needs = vec![0f32; nq * nv];
+        needs[0] = 1.0; // query 0 needs view 0
+        let mut count = vec![0f32; nq];
+        count[0] = 1.0;
+        let mut qutil = vec![0f32; nq];
+        qutil[0] = 5.0;
+        let mut qtenant = vec![0f32; nt * nq];
+        qtenant[0] = 1.0; // tenant 0 owns query 0
+        let mut configs = vec![0f32; nv * nc];
+        configs[0] = 1.0; // config 0 caches view 0
+        let mut ustar = vec![0f32; nt];
+        ustar[0] = 5.0;
+
+        let outs = reg
+            .run_f32(
+                "config_utils",
+                &[
+                    (&needs, &[nq as i64, nv as i64]),
+                    (&count, &[nq as i64]),
+                    (&qutil, &[nq as i64]),
+                    (&qtenant, &[nt as i64, nq as i64]),
+                    (&configs, &[nv as i64, nc as i64]),
+                    (&ustar, &[nt as i64]),
+                ],
+            )
+            .unwrap();
+        assert_eq!(outs.len(), 1);
+        let v = &outs[0];
+        assert_eq!(v.len(), nt * nc);
+        // V[0, 0] = 1.0 (tenant 0 fully satisfied by config 0).
+        assert!((v[0] - 1.0).abs() < 1e-6, "v00={}", v[0]);
+        // All other live entries zero.
+        assert!(v[1..].iter().all(|&x| x.abs() < 1e-6));
+    }
+}

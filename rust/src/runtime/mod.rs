@@ -1,0 +1,9 @@
+//! PJRT runtime: load the AOT-compiled solver artifacts
+//! (`artifacts/*.hlo.txt`, produced once by `make artifacts`) and execute
+//! them from the L3 hot path. Python never runs at request time.
+
+pub mod artifacts;
+pub mod solvers;
+
+pub use artifacts::{ArtifactRegistry, PaddedShapes};
+pub use solvers::{AcceleratedFastPf, AcceleratedSimpleMmf, CompiledSolvers};

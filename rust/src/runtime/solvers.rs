@@ -1,0 +1,305 @@
+//! Compiled-solver policies: FASTPF and SIMPLEMMF backed by the
+//! AOT-compiled JAX/Pallas artifacts. Configuration pruning (the exact
+//! WELFARE knapsacks) stays on the Rust side; the per-batch convex solve
+//! — the numeric hot loop — is one PJRT `execute` of a fori_loop'd
+//! kernel (see python/compile/model.py).
+//!
+//! The native implementations in `alloc::fastpf` / `alloc::mmf_mw`
+//! remain the correctness oracles: integration tests assert that the
+//! compiled allocations match them within tolerance.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::alloc::config_space::ConfigSpace;
+use crate::alloc::{Allocation, Policy};
+use crate::domain::utility::BatchUtilities;
+use crate::runtime::artifacts::{ArtifactRegistry, SHAPES};
+use crate::util::rng::Pcg64;
+
+/// Shared handle to the registry plus pruning parameters.
+#[derive(Clone)]
+pub struct CompiledSolvers {
+    registry: Arc<ArtifactRegistry>,
+    /// Random weight vectors for pruning (≤ NC − a few, so the space
+    /// fits the padded artifact shape).
+    pub prune_vectors: usize,
+}
+
+impl CompiledSolvers {
+    pub fn new(registry: Arc<ArtifactRegistry>) -> Self {
+        Self {
+            registry,
+            prune_vectors: 40,
+        }
+    }
+
+    pub fn open_default() -> Result<Self> {
+        Ok(Self::new(Arc::new(ArtifactRegistry::open_default()?)))
+    }
+
+    /// Build the pruned space and the padded V matrix (+ masks). Spaces
+    /// larger than NC are truncated to the NC highest-uniform-welfare
+    /// configurations (keeping the per-tenant optima first).
+    fn padded_problem(
+        &self,
+        batch: &BatchUtilities,
+        rng: &mut Pcg64,
+    ) -> (ConfigSpace, Vec<f32>, Vec<f32>, Vec<f32>) {
+        assert!(
+            batch.n_tenants <= SHAPES.nt,
+            "batch has {} tenants > padded {}",
+            batch.n_tenants,
+            SHAPES.nt
+        );
+        let mut space = ConfigSpace::pruned(batch, self.prune_vectors, rng);
+        if space.len() > SHAPES.nc {
+            // Rank configs by total scaled utility, keep the best NC.
+            let mut idx: Vec<usize> = (0..space.len()).collect();
+            idx.sort_by(|&a, &b| {
+                let sa: f64 = space.v[a].iter().sum();
+                let sb: f64 = space.v[b].iter().sum();
+                sb.partial_cmp(&sa).unwrap()
+            });
+            idx.truncate(SHAPES.nc);
+            let configs: Vec<Vec<bool>> =
+                idx.iter().map(|&i| space.configs[i].clone()).collect();
+            space = ConfigSpace::from_configs(batch, configs);
+        }
+
+        let mut v = vec![0f32; SHAPES.nt * SHAPES.nc];
+        for (s, vs) in space.v.iter().enumerate() {
+            for (i, &vi) in vs.iter().enumerate() {
+                // Inactive tenants have V ≡ 1 in scaled_utilities; mask
+                // them to 0 here (weights are 0 anyway).
+                let val = if batch.u_star[i] > 0.0 { vi } else { 0.0 };
+                v[i * SHAPES.nc + s] = val as f32;
+            }
+        }
+        let mut wl = vec![0f32; SHAPES.nt];
+        for i in 0..batch.n_tenants {
+            if batch.u_star[i] > 0.0 {
+                wl[i] = batch.weights[i] as f32;
+            }
+        }
+        let mut cmask = vec![0f32; SHAPES.nc];
+        for c in cmask.iter_mut().take(space.len()) {
+            *c = 1.0;
+        }
+        (space, v, wl, cmask)
+    }
+
+    /// Execute one of the two solver artifacts and return the allocation
+    /// vector over the space.
+    fn run_solver(
+        &self,
+        entry: &str,
+        v: &[f32],
+        wl: &[f32],
+        cmask: &[f32],
+    ) -> Result<Vec<f64>> {
+        let outs = self.registry.run_f32(
+            entry,
+            &[
+                (v, &[SHAPES.nt as i64, SHAPES.nc as i64]),
+                (wl, &[SHAPES.nt as i64]),
+                (cmask, &[SHAPES.nc as i64]),
+            ],
+        )?;
+        Ok(outs[0].iter().map(|&x| x as f64).collect())
+    }
+
+    fn allocate_with(
+        &self,
+        entry: &str,
+        batch: &BatchUtilities,
+        rng: &mut Pcg64,
+    ) -> Allocation {
+        if batch.active_tenants().is_empty() {
+            return Allocation::deterministic(vec![false; batch.n_views()]);
+        }
+        let (space, v, wl, cmask) = self.padded_problem(batch, rng);
+        let x = self
+            .run_solver(entry, &v, &wl, &cmask)
+            .expect("compiled solver execution failed");
+        let pairs: Vec<(Vec<bool>, f64)> = space
+            .configs
+            .iter()
+            .cloned()
+            .zip(x.iter().copied())
+            .collect();
+        if pairs.iter().map(|(_, p)| p).sum::<f64>() <= 0.0 {
+            return Allocation::deterministic(vec![false; batch.n_views()]);
+        }
+        Allocation::from_weighted(pairs)
+    }
+}
+
+impl CompiledSolvers {
+    /// Batched restricted WELFARE via the compiled `welfare_batch`
+    /// artifact: for each weight vector row, the index (within `space`)
+    /// of the winning configuration. Cross-validated against
+    /// [`ConfigSpace::restricted_welfare`] in tests.
+    pub fn welfare_batch_picks(
+        &self,
+        space: &ConfigSpace,
+        batch: &BatchUtilities,
+        weights: &[Vec<f64>],
+    ) -> Result<Vec<usize>> {
+        const KW: usize = 64;
+        assert!(weights.len() <= KW, "at most {KW} weight vectors per call");
+        assert!(space.len() <= SHAPES.nc);
+        let mut v = vec![0f32; SHAPES.nt * SHAPES.nc];
+        for (s_idx, vs) in space.v.iter().enumerate() {
+            for (i, &vi) in vs.iter().enumerate() {
+                let val = if batch.u_star[i] > 0.0 { vi } else { 0.0 };
+                v[i * SHAPES.nc + s_idx] = val as f32;
+            }
+        }
+        let mut w = vec![0f32; KW * SHAPES.nt];
+        for (k, row) in weights.iter().enumerate() {
+            for (i, &wi) in row.iter().enumerate() {
+                w[k * SHAPES.nt + i] = wi as f32;
+            }
+        }
+        let mut cmask = vec![0f32; SHAPES.nc];
+        for c in cmask.iter_mut().take(space.len()) {
+            *c = 1.0;
+        }
+        let outs = self.registry.run_f32(
+            "welfare_batch",
+            &[
+                (&w, &[KW as i64, SHAPES.nt as i64]),
+                (&v, &[SHAPES.nt as i64, SHAPES.nc as i64]),
+                (&cmask, &[SHAPES.nc as i64]),
+            ],
+        )?;
+        let onehot = &outs[0];
+        Ok(weights
+            .iter()
+            .enumerate()
+            .map(|(k, _)| {
+                onehot[k * SHAPES.nc..(k + 1) * SHAPES.nc]
+                    .iter()
+                    .position(|&x| x > 0.5)
+                    .unwrap_or(0)
+            })
+            .collect())
+    }
+}
+
+/// FASTPF via the compiled `pf_solve` artifact.
+pub struct AcceleratedFastPf(pub CompiledSolvers);
+
+impl Policy for AcceleratedFastPf {
+    fn name(&self) -> &'static str {
+        "FASTPF-XLA"
+    }
+
+    fn allocate(&self, batch: &BatchUtilities, rng: &mut Pcg64) -> Allocation {
+        self.0.allocate_with("pf_solve", batch, rng)
+    }
+}
+
+/// SIMPLEMMF via the compiled `mmf_mw` artifact.
+pub struct AcceleratedSimpleMmf(pub CompiledSolvers);
+
+impl Policy for AcceleratedSimpleMmf {
+    fn name(&self) -> &'static str {
+        "MMF-XLA"
+    }
+
+    fn allocate(&self, batch: &BatchUtilities, rng: &mut Pcg64) -> Allocation {
+        self.0.allocate_with("mmf_mw", batch, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::config_space::ConfigSpace as CS;
+    use crate::alloc::fastpf::FastPf;
+    use crate::alloc::testing::{table2, table4, table5};
+    use crate::alloc::Policy;
+
+    fn solvers() -> CompiledSolvers {
+        CompiledSolvers::open_default().expect("artifacts present")
+    }
+
+    #[test]
+    fn compiled_pf_matches_native_on_tables() {
+        let s = solvers();
+        let native = FastPf::default();
+        for (name, b) in [
+            ("table2", table2()),
+            ("table4", table4(4)),
+            ("table5", table5()),
+        ] {
+            let a_c = AcceleratedFastPf(s.clone()).allocate(&b, &mut Pcg64::new(1));
+            let a_n = native.allocate(&b, &mut Pcg64::new(1));
+            let vc = a_c.expected_scaled_utilities(&b);
+            let vn = a_n.expected_scaled_utilities(&b);
+            for (i, (c, n)) in vc.iter().zip(&vn).enumerate() {
+                assert!(
+                    (c - n).abs() < 2e-2,
+                    "{name} tenant {i}: compiled {c} vs native {n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn compiled_mmf_reaches_maxmin_floor() {
+        let s = solvers();
+        let b = table4(4);
+        let a = AcceleratedSimpleMmf(s).allocate(&b, &mut Pcg64::new(2));
+        let v = a.expected_scaled_utilities(&b);
+        let min = v.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(min >= 0.5 * 0.8, "v={v:?}");
+    }
+
+    #[test]
+    fn welfare_batch_matches_native_argmax() {
+        let s = solvers();
+        let b = table4(4);
+        let mut rng = Pcg64::new(4);
+        let space = CS::pruned(&b, 20, &mut rng);
+        let weights: Vec<Vec<f64>> = (0..10)
+            .map(|_| rng.unit_weight_vector(b.n_tenants))
+            .collect();
+        let picks = s.welfare_batch_picks(&space, &b, &weights).unwrap();
+        for (w, &pick) in weights.iter().zip(&picks) {
+            let native = space.restricted_welfare(w);
+            // Scores can tie; require equal score rather than equal index.
+            let score = |s_idx: usize| -> f64 {
+                w.iter()
+                    .zip(&space.v[s_idx])
+                    .map(|(wi, vi)| wi * vi)
+                    .sum()
+            };
+            assert!(
+                (score(pick) - score(native)).abs() < 1e-5,
+                "pick {pick} score {} vs native {native} score {}",
+                score(pick),
+                score(native)
+            );
+        }
+    }
+
+    #[test]
+    fn compiled_allocations_are_normalized_and_feasible() {
+        let s = solvers();
+        let b = table2();
+        for policy in [
+            &AcceleratedFastPf(s.clone()) as &dyn Policy,
+            &AcceleratedSimpleMmf(s.clone()) as &dyn Policy,
+        ] {
+            let a = policy.allocate(&b, &mut Pcg64::new(3));
+            assert!((a.total_probability() - 1.0).abs() < 1e-6);
+            for c in &a.configs {
+                assert!(b.size_of(c) <= b.budget + 1e-6);
+            }
+        }
+    }
+}

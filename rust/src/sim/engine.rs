@@ -1,0 +1,345 @@
+//! The discrete-event execution engine: runs one batch of queries on the
+//! simulated cluster (Figure 2 step 5). Each query is a wave of
+//! data-parallel tasks; task service time is its partition's scan time
+//! (cache or disk bandwidth, with a one-time materialization penalty for
+//! freshly cached views) plus its share of the query's compute cost.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::cache::CacheManager;
+use crate::domain::query::{Query, QueryId};
+use crate::sim::cluster::ClusterConfig;
+use crate::sim::scheduler::{FairScheduler, Task};
+
+/// Total-ordering wrapper for event times.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct OrdF64(f64);
+
+impl Eq for OrdF64 {}
+
+impl PartialOrd for OrdF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for OrdF64 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+/// Result for one executed query.
+#[derive(Debug, Clone)]
+pub struct QueryOutcome {
+    pub id: QueryId,
+    pub tenant: usize,
+    pub arrival: f64,
+    /// First task launch time.
+    pub start: f64,
+    /// Last task completion time.
+    pub finish: f64,
+    /// True iff all required views were cached (the hit-ratio event).
+    pub from_cache: bool,
+    pub bytes: u64,
+}
+
+impl QueryOutcome {
+    pub fn wait_time(&self) -> f64 {
+        self.start - self.arrival
+    }
+
+    pub fn execution_time(&self) -> f64 {
+        self.finish - self.start
+    }
+
+    pub fn flow_time(&self) -> f64 {
+        self.finish - self.arrival
+    }
+}
+
+/// Result of one batch execution.
+#[derive(Debug, Clone)]
+pub struct BatchExecution {
+    pub outcomes: Vec<QueryOutcome>,
+    /// Time the last task of the batch finished (== batch makespan end).
+    pub end_time: f64,
+}
+
+/// The engine: stateless besides the cluster config.
+#[derive(Debug, Clone, Default)]
+pub struct SimEngine {
+    pub config: ClusterConfig,
+}
+
+impl SimEngine {
+    pub fn new(config: ClusterConfig) -> Self {
+        Self { config }
+    }
+
+    /// Service time (core-seconds) to read view `v`'s scan bytes given
+    /// the cache state; consumes the materialization flag when this is
+    /// the first touch of a freshly cached view.
+    fn view_io_secs(&self, scan_bytes: u64, cached: bool, materialize: bool) -> f64 {
+        if !cached {
+            self.config.disk_secs(scan_bytes)
+        } else if materialize {
+            self.config.disk_secs(scan_bytes) * self.config.materialize_penalty
+        } else {
+            self.config.cache_secs(scan_bytes)
+        }
+    }
+
+    /// Execute a batch starting at `start_time`. `view_scan_bytes` maps
+    /// ViewId → per-query scan bytes; `cache` is consulted and its
+    /// pending materializations are consumed; `weights` drives the fair
+    /// scheduler pools.
+    pub fn execute_batch(
+        &self,
+        start_time: f64,
+        queries: &[Query],
+        view_scan_bytes: &[u64],
+        cache: &mut CacheManager,
+        weights: &[f64],
+    ) -> BatchExecution {
+        if queries.is_empty() {
+            return BatchExecution {
+                outcomes: Vec::new(),
+                end_time: start_time,
+            };
+        }
+
+        // Build per-query task lists.
+        struct QState {
+            remaining: usize,
+            started: Option<f64>,
+            finish: f64,
+            from_cache: bool,
+        }
+        let mut states: Vec<QState> = Vec::with_capacity(queries.len());
+        let mut scheduler = FairScheduler::new(weights);
+
+        for (qi, q) in queries.iter().enumerate() {
+            // Total I/O time (core-seconds) across the query's views.
+            let mut io_secs = 0.0;
+            let mut all_cached = true;
+            for v in &q.required_views {
+                let cached = cache.is_cached(v.0);
+                all_cached &= cached;
+                let materialize = cached && cache.consume_materialization(v.0);
+                io_secs += self.view_io_secs(view_scan_bytes[v.0], cached, materialize);
+            }
+            let n_tasks = (q.bytes_read.div_ceil(self.config.partition_bytes)).max(1) as usize;
+            let per_task =
+                io_secs / n_tasks as f64 + q.compute_cost / n_tasks as f64 + self.config.task_overhead;
+            for _ in 0..n_tasks {
+                scheduler.submit(Task {
+                    query: qi,
+                    tenant: q.tenant.0,
+                    duration: per_task,
+                });
+            }
+            states.push(QState {
+                remaining: n_tasks,
+                started: None,
+                finish: start_time,
+                from_cache: all_cached,
+            });
+        }
+
+        // Event loop: (completion_time, query, tenant) on a min-heap;
+        // free cores launch tasks immediately.
+        let cores = self.config.total_cores();
+        let mut heap: BinaryHeap<Reverse<(OrdF64, usize, usize)>> = BinaryHeap::new();
+        let mut now = start_time;
+        let mut free = cores;
+
+        let mut launch = |now: f64,
+                          free: &mut usize,
+                          scheduler: &mut FairScheduler,
+                          states: &mut Vec<QState>,
+                          heap: &mut BinaryHeap<Reverse<(OrdF64, usize, usize)>>| {
+            while *free > 0 {
+                let Some(task) = scheduler.next_task() else {
+                    break;
+                };
+                *free -= 1;
+                let st = &mut states[task.query];
+                st.started.get_or_insert(now);
+                heap.push(Reverse((OrdF64(now + task.duration), task.query, task.tenant)));
+            }
+        };
+
+        launch(now, &mut free, &mut scheduler, &mut states, &mut heap);
+        while let Some(Reverse((OrdF64(t), qi, tenant))) = heap.pop() {
+            now = t;
+            free += 1;
+            scheduler.task_done(tenant);
+            let st = &mut states[qi];
+            st.remaining -= 1;
+            if st.remaining == 0 {
+                st.finish = now;
+            }
+            launch(now, &mut free, &mut scheduler, &mut states, &mut heap);
+        }
+
+        let outcomes: Vec<QueryOutcome> = queries
+            .iter()
+            .zip(states.iter())
+            .map(|(q, st)| QueryOutcome {
+                id: q.id,
+                tenant: q.tenant.0,
+                arrival: q.arrival,
+                start: st.started.unwrap_or(start_time),
+                finish: st.finish,
+                from_cache: st.from_cache,
+                bytes: q.bytes_read,
+            })
+            .collect();
+        let end_time = outcomes
+            .iter()
+            .map(|o| o.finish)
+            .fold(start_time, f64::max);
+        BatchExecution { outcomes, end_time }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::domain::dataset::{GB, MB};
+    use crate::domain::tenant::TenantId;
+    use crate::domain::view::ViewId;
+
+    fn query(id: u64, tenant: usize, views: Vec<usize>, bytes: u64) -> Query {
+        Query {
+            id: QueryId(id),
+            tenant: TenantId(tenant),
+            arrival: 0.0,
+            template: "t".into(),
+            required_views: views.into_iter().map(ViewId).collect(),
+            bytes_read: bytes,
+            compute_cost: 0.0,
+        }
+    }
+
+    fn setup(cache_views: &[bool], sizes: &[u64]) -> CacheManager {
+        let mut cm = CacheManager::new(100 * GB, sizes.to_vec());
+        cm.update(cache_views);
+        // Drain materialization flags so tests measure steady-state
+        // cache reads unless they opt in.
+        for v in 0..sizes.len() {
+            cm.consume_materialization(v);
+        }
+        cm
+    }
+
+    #[test]
+    fn cached_queries_run_much_faster() {
+        let engine = SimEngine::default();
+        let sizes = [2 * GB];
+        let q = vec![query(1, 0, vec![0], 2 * GB)];
+
+        let mut cold = setup(&[false], &sizes);
+        let cold_exec = engine.execute_batch(0.0, &q, &sizes, &mut cold, &[1.0]);
+
+        let mut warm = setup(&[true], &sizes);
+        let warm_exec = engine.execute_batch(0.0, &q, &sizes, &mut warm, &[1.0]);
+
+        let cold_t = cold_exec.outcomes[0].execution_time();
+        let warm_t = warm_exec.outcomes[0].execution_time();
+        assert!(
+            cold_t > 5.0 * warm_t,
+            "cold={cold_t} warm={warm_t} (expect ≫)"
+        );
+        assert!(cold_exec.outcomes[0].from_cache == false);
+        assert!(warm_exec.outcomes[0].from_cache);
+    }
+
+    #[test]
+    fn materialization_penalty_applies_once() {
+        let engine = SimEngine::default();
+        let sizes = [GB];
+        let mut cm = CacheManager::new(100 * GB, sizes.to_vec());
+        cm.update(&[true]); // freshly marked, not yet materialized
+
+        let q1 = vec![query(1, 0, vec![0], GB)];
+        let first = engine.execute_batch(0.0, &q1, &sizes, &mut cm, &[1.0]);
+        let q2 = vec![query(2, 0, vec![0], GB)];
+        let second = engine.execute_batch(first.end_time, &q2, &sizes, &mut cm, &[1.0]);
+        // First access ≈ disk speed × penalty; second ≈ cache speed.
+        assert!(
+            first.outcomes[0].execution_time() > 5.0 * second.outcomes[0].execution_time()
+        );
+    }
+
+    #[test]
+    fn partial_cache_is_a_miss_for_hit_ratio() {
+        let engine = SimEngine::default();
+        let sizes = [GB, GB];
+        let mut cm = setup(&[true, false], &sizes);
+        let q = vec![query(1, 0, vec![0, 1], 2 * GB)];
+        let exec = engine.execute_batch(0.0, &q, &sizes, &mut cm, &[1.0]);
+        assert!(!exec.outcomes[0].from_cache);
+        // But it still reads view 0 from memory: faster than all-disk.
+        let mut cold = setup(&[false, false], &sizes);
+        let cold_exec = engine.execute_batch(0.0, &q, &sizes, &mut cold, &[1.0]);
+        assert!(
+            exec.outcomes[0].execution_time() < cold_exec.outcomes[0].execution_time()
+        );
+    }
+
+    #[test]
+    fn parallelism_bounded_by_cores() {
+        // One giant query: 80 cores on 10×8 config; 160 partitions ⇒ two
+        // full waves. Makespan ≈ 2 × per-task time.
+        let engine = SimEngine::default();
+        let bytes = 160 * 128 * MB;
+        let sizes = [bytes];
+        let mut cm = setup(&[true], &sizes);
+        let q = vec![query(1, 0, vec![0], bytes)];
+        let exec = engine.execute_batch(0.0, &q, &sizes, &mut cm, &[1.0]);
+        let per_task = engine.config.cache_secs(bytes) / 160.0 + engine.config.task_overhead;
+        let expect = 2.0 * per_task;
+        let got = exec.outcomes[0].execution_time();
+        assert!((got - expect).abs() < 0.2 * expect, "got={got} expect={expect}");
+    }
+
+    #[test]
+    fn fair_sharing_between_tenants() {
+        // Two tenants with identical single-query workloads: finish times
+        // should be close (interleaved waves), not serial.
+        let engine = SimEngine::default();
+        let bytes = 80 * 128 * MB; // one full wave each
+        let sizes = [bytes, bytes];
+        let mut cm = setup(&[true, true], &sizes);
+        let qs = vec![query(1, 0, vec![0], bytes), query(2, 1, vec![1], bytes)];
+        let exec = engine.execute_batch(0.0, &qs, &sizes, &mut cm, &[1.0, 1.0]);
+        let f0 = exec.outcomes[0].finish;
+        let f1 = exec.outcomes[1].finish;
+        assert!((f0 - f1).abs() < 0.3 * f0.max(f1), "f0={f0} f1={f1}");
+    }
+
+    #[test]
+    fn empty_batch() {
+        let engine = SimEngine::default();
+        let mut cm = CacheManager::new(GB, vec![]);
+        let exec = engine.execute_batch(5.0, &[], &[], &mut cm, &[1.0]);
+        assert_eq!(exec.end_time, 5.0);
+        assert!(exec.outcomes.is_empty());
+    }
+
+    #[test]
+    fn wait_and_flow_times() {
+        let engine = SimEngine::default();
+        let sizes = [GB];
+        let mut cm = setup(&[true], &sizes);
+        let mut q = query(1, 0, vec![0], GB);
+        q.arrival = 2.0;
+        let exec = engine.execute_batch(10.0, &[q], &sizes, &mut cm, &[1.0]);
+        let o = &exec.outcomes[0];
+        assert!((o.wait_time() - 8.0).abs() < 1e-9);
+        assert!(o.flow_time() > o.wait_time());
+    }
+}

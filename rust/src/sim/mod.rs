@@ -1,0 +1,13 @@
+//! A discrete-event Spark-like cluster simulator — the stand-in for the
+//! paper's 10-node EC2 testbed (Table 7). Queries become waves of
+//! data-parallel tasks; a weighted fair scheduler assigns tasks to cores
+//! per tenant pool; task service times are I/O-bound reads at disk or
+//! cache bandwidth plus a compute term. See DESIGN.md §1 for why this
+//! substitution preserves the paper's metrics.
+
+pub mod cluster;
+pub mod engine;
+pub mod scheduler;
+
+pub use cluster::ClusterConfig;
+pub use engine::{BatchExecution, QueryOutcome, SimEngine};

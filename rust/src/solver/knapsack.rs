@@ -1,0 +1,579 @@
+//! The WELFARE oracle (Definition 5): given per-query values (already
+//! weighted by the dual weights w and scaled by 1/U_i*), choose the
+//! configuration S — a set of views whose total size fits the cache
+//! budget — maximizing the total value of *fully satisfied* queries
+//! (all-or-nothing utility model, §5.1/\[9\]).
+//!
+//! With multi-view queries this is a budgeted coverage-style problem
+//! (NP-hard); sizes here are small (≤ ~64 candidate views per batch), so
+//! we solve it exactly with branch-and-bound over views:
+//!
+//! - order views by "value density", where each query's value is spread
+//!   over its required views proportionally to size;
+//! - admissible upper bound: for any remaining budget, the fractional
+//!   knapsack over those per-view value shares — for every feasible S,
+//!   value(S) = Σ_q v_q·1[R(q) ⊆ S] ≤ Σ_{v∈S} d_v because each satisfied
+//!   query contributes its full share on every one of its views;
+//! - greedy incumbent first, so pruning is effective immediately.
+//!
+//! A pure greedy entry point is exposed for use as a fast heuristic.
+
+/// One query class: a non-negative value obtained iff *all* views in
+/// `views` are cached.
+#[derive(Debug, Clone)]
+pub struct ValuedQuery {
+    pub value: f64,
+    pub views: Vec<usize>,
+}
+
+/// A welfare-maximization instance over candidate views.
+#[derive(Debug, Clone)]
+pub struct WelfareProblem {
+    /// Size of each candidate view (bytes, or any consistent unit).
+    pub view_sizes: Vec<f64>,
+    /// Cache budget in the same unit.
+    pub budget: f64,
+    /// Query classes with values and required view sets.
+    pub queries: Vec<ValuedQuery>,
+}
+
+/// A solved configuration: which views to cache and the attained value.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WelfareSolution {
+    pub selected: Vec<bool>,
+    pub value: f64,
+}
+
+impl WelfareProblem {
+    /// Total value of fully satisfied queries under a selection.
+    pub fn value_of(&self, selected: &[bool]) -> f64 {
+        self.queries
+            .iter()
+            .filter(|q| q.views.iter().all(|&v| selected[v]))
+            .map(|q| q.value)
+            .sum()
+    }
+
+    /// Total size of a selection.
+    pub fn size_of(&self, selected: &[bool]) -> f64 {
+        self.view_sizes
+            .iter()
+            .zip(selected)
+            .filter(|(_, &s)| s)
+            .map(|(sz, _)| *sz)
+            .sum()
+    }
+
+    fn feasible(&self, selected: &[bool]) -> bool {
+        self.size_of(selected) <= self.budget + 1e-9
+    }
+
+    /// Per-view value density shares d_v (see module docs).
+    fn density_shares(&self) -> Vec<f64> {
+        let mut d = vec![0.0; self.view_sizes.len()];
+        for q in &self.queries {
+            if q.value <= 0.0 {
+                continue;
+            }
+            let total: f64 = q.views.iter().map(|&v| self.view_sizes[v]).sum();
+            if total <= 0.0 {
+                // Zero-size requirement: value is free; spread evenly to
+                // keep the bound admissible (they cost nothing to include).
+                continue;
+            }
+            for &v in &q.views {
+                d[v] += q.value * self.view_sizes[v] / total;
+            }
+        }
+        d
+    }
+
+    /// Greedy heuristic: repeatedly add the query class with the highest
+    /// value per byte of *missing* views that still fits.
+    pub fn solve_greedy(&self) -> WelfareSolution {
+        let nv = self.view_sizes.len();
+        let mut selected = vec![false; nv];
+        // Include all zero-size views for free (and anything ≤ 0 size).
+        for (v, &sz) in self.view_sizes.iter().enumerate() {
+            if sz <= 0.0 {
+                selected[v] = true;
+            }
+        }
+        let mut used: f64 = self.size_of(&selected);
+        let mut remaining: Vec<usize> = (0..self.queries.len())
+            .filter(|&q| self.queries[q].value > 0.0)
+            .collect();
+        loop {
+            let mut best: Option<(usize, f64, f64)> = None; // (query, miss_size, density)
+            for &qi in &remaining {
+                let q = &self.queries[qi];
+                if q.views.iter().all(|&v| selected[v]) {
+                    continue;
+                }
+                let miss: f64 = q
+                    .views
+                    .iter()
+                    .filter(|&&v| !selected[v])
+                    .map(|&v| self.view_sizes[v])
+                    .sum();
+                if used + miss > self.budget + 1e-9 {
+                    continue;
+                }
+                let density = if miss > 0.0 { q.value / miss } else { f64::INFINITY };
+                if best.map(|(_, _, d)| density > d).unwrap_or(true) {
+                    best = Some((qi, miss, density));
+                }
+            }
+            match best {
+                None => break,
+                Some((qi, miss, _)) => {
+                    for &v in &self.queries[qi].views {
+                        selected[v] = true;
+                    }
+                    used += miss;
+                    remaining.retain(|&r| r != qi);
+                }
+            }
+        }
+        let value = self.value_of(&selected);
+        WelfareSolution { selected, value }
+    }
+
+    /// Exact branch-and-bound solve with a default node budget that is
+    /// effectively unlimited for the instance sizes ROBUS produces but
+    /// guards against pathological blowup (falls back to the best
+    /// incumbent found — still feasible, ≥ greedy).
+    pub fn solve_exact(&self) -> WelfareSolution {
+        self.solve_exact_budgeted(5_000_000)
+    }
+
+    /// Exact branch-and-bound with an explicit node budget.
+    pub fn solve_exact_budgeted(&self, node_budget: u64) -> WelfareSolution {
+        let nv = self.view_sizes.len();
+        if nv == 0 {
+            return WelfareSolution {
+                selected: vec![],
+                value: self.value_of(&[]),
+            };
+        }
+
+        // Order views by density share per byte, descending; zero-size
+        // views first (free). Views carrying no value share (they appear
+        // in no positive-value query) can never help: excluding them from
+        // the branching order is what keeps the tree small — without
+        // this, subtrees differing only in worthless views blow up
+        // exponentially (see EXPERIMENTS.md §Perf).
+        let shares = self.density_shares();
+        let mut order: Vec<usize> = (0..nv)
+            .filter(|&v| shares[v] > 0.0 || self.view_sizes[v] <= 0.0)
+            .collect();
+        order.sort_by(|&a, &b| {
+            let da = if self.view_sizes[a] > 0.0 {
+                shares[a] / self.view_sizes[a]
+            } else {
+                f64::INFINITY
+            };
+            let db = if self.view_sizes[b] > 0.0 {
+                shares[b] / self.view_sizes[b]
+            } else {
+                f64::INFINITY
+            };
+            db.partial_cmp(&da).unwrap()
+        });
+
+        let incumbent = self.solve_greedy();
+        let mut best = incumbent;
+
+        let mut selected = vec![false; nv];
+        // Pre-select free views.
+        for v in 0..nv {
+            if self.view_sizes[v] <= 0.0 {
+                selected[v] = true;
+            }
+        }
+
+        // Fractional-knapsack upper bound over views order[pos..] given
+        // remaining budget, added to the (admissible) share value of the
+        // already-selected views.
+        let bound_tail = |pos: usize, budget_left: f64| -> f64 {
+            let mut b = 0.0;
+            let mut left = budget_left;
+            for &v in &order[pos..] {
+                let sz = self.view_sizes[v];
+                if sz <= 0.0 {
+                    b += shares[v];
+                    continue;
+                }
+                if left <= 0.0 {
+                    break;
+                }
+                if sz <= left {
+                    b += shares[v];
+                    left -= sz;
+                } else {
+                    b += shares[v] * left / sz;
+                    left = 0.0;
+                }
+            }
+            b
+        };
+
+        // DFS with incremental satisfaction counting (perf pass, see
+        // EXPERIMENTS.md §Perf): instead of re-scanning every query class
+        // at each leaf (O(q·v)), per-query missing-view counters are
+        // updated when a view enters/leaves the selection, and the
+        // current value is maintained incrementally. The incumbent is
+        // also updated at every node (any partial selection is feasible),
+        // which tightens pruning substantially.
+        let mut view_queries: Vec<Vec<usize>> = vec![Vec::new(); nv];
+        for (qi, q) in self.queries.iter().enumerate() {
+            for &v in &q.views {
+                view_queries[v].push(qi);
+            }
+        }
+        let mut missing: Vec<u32> = self
+            .queries
+            .iter()
+            .map(|q| q.views.iter().filter(|&&v| !selected[v]).count() as u32)
+            .collect();
+        let mut cur_value: f64 = self
+            .queries
+            .iter()
+            .zip(&missing)
+            .filter(|(_, &m)| m == 0)
+            .map(|(q, _)| q.value)
+            .sum();
+
+        struct Ctx<'a> {
+            p: &'a WelfareProblem,
+            order: &'a [usize],
+            shares: &'a [f64],
+            view_queries: &'a [Vec<usize>],
+        }
+
+        #[allow(clippy::too_many_arguments)]
+        fn include(
+            ctx: &Ctx,
+            v: usize,
+            selected: &mut [bool],
+            missing: &mut [u32],
+            cur_value: &mut f64,
+        ) {
+            selected[v] = true;
+            for &qi in &ctx.view_queries[v] {
+                missing[qi] -= 1;
+                if missing[qi] == 0 {
+                    *cur_value += ctx.p.queries[qi].value;
+                }
+            }
+        }
+
+        fn exclude(
+            ctx: &Ctx,
+            v: usize,
+            selected: &mut [bool],
+            missing: &mut [u32],
+            cur_value: &mut f64,
+        ) {
+            selected[v] = false;
+            for &qi in &ctx.view_queries[v] {
+                if missing[qi] == 0 {
+                    *cur_value -= ctx.p.queries[qi].value;
+                }
+                missing[qi] += 1;
+            }
+        }
+
+        #[allow(clippy::too_many_arguments)]
+        fn dfs(
+            ctx: &Ctx,
+            pos: usize,
+            selected: &mut Vec<bool>,
+            missing: &mut Vec<u32>,
+            cur_value: &mut f64,
+            used: f64,
+            shares_in: f64,
+            best: &mut WelfareSolution,
+            bound_tail: &dyn Fn(usize, f64) -> f64,
+            nodes_left: &mut u64,
+        ) {
+            if *nodes_left == 0 {
+                return;
+            }
+            *nodes_left -= 1;
+            // Any node's selection is feasible: update the incumbent now
+            // so the bound prunes aggressively.
+            if *cur_value > best.value + 1e-12 {
+                *best = WelfareSolution {
+                    selected: selected.clone(),
+                    value: *cur_value,
+                };
+            }
+            if pos == ctx.order.len() {
+                return;
+            }
+            // Admissible bound: value(S_final) ≤ Σ_{v∈S_final} d_v
+            //                  ≤ shares_in + fractional tail bound.
+            // Relative tolerance: once the bound cannot beat the
+            // incumbent by a meaningful margin, stop — otherwise ties
+            // (common when the whole batch fits in cache) are explored
+            // exponentially.
+            let ub = shares_in + bound_tail(pos, ctx.p.budget - used);
+            if ub <= best.value + 1e-7 * best.value.abs() + 1e-9 {
+                return;
+            }
+            let v = ctx.order[pos];
+            let sz = ctx.p.view_sizes[v];
+            if selected[v] {
+                // Pre-selected free view.
+                dfs(
+                    ctx,
+                    pos + 1,
+                    selected,
+                    missing,
+                    cur_value,
+                    used,
+                    shares_in + ctx.shares[v],
+                    best,
+                    bound_tail,
+                    nodes_left,
+                );
+                return;
+            }
+            // Branch 1: include (if feasible).
+            if used + sz <= ctx.p.budget + 1e-9 {
+                include(ctx, v, selected, missing, cur_value);
+                dfs(
+                    ctx,
+                    pos + 1,
+                    selected,
+                    missing,
+                    cur_value,
+                    used + sz,
+                    shares_in + ctx.shares[v],
+                    best,
+                    bound_tail,
+                    nodes_left,
+                );
+                exclude(ctx, v, selected, missing, cur_value);
+            }
+            // Branch 2: exclude.
+            dfs(
+                ctx,
+                pos + 1,
+                selected,
+                missing,
+                cur_value,
+                used,
+                shares_in,
+                best,
+                bound_tail,
+                nodes_left,
+            );
+        }
+
+        let initial_used = self.size_of(&selected);
+        let mut nodes_left = node_budget;
+        let ctx = Ctx {
+            p: self,
+            order: &order,
+            shares: &shares,
+            view_queries: &view_queries,
+        };
+        dfs(
+            &ctx,
+            0,
+            &mut selected,
+            &mut missing,
+            &mut cur_value,
+            initial_used,
+            0.0,
+            &mut best,
+            &bound_tail,
+            &mut nodes_left,
+        );
+        debug_assert!(self.feasible(&best.selected));
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, no_shrink};
+    use crate::util::rng::Pcg64;
+
+    fn brute_force(p: &WelfareProblem) -> f64 {
+        let nv = p.view_sizes.len();
+        assert!(nv <= 20);
+        let mut best = 0.0f64;
+        for mask in 0u32..(1 << nv) {
+            let selected: Vec<bool> = (0..nv).map(|v| mask & (1 << v) != 0).collect();
+            if p.size_of(&selected) <= p.budget + 1e-9 {
+                best = best.max(p.value_of(&selected));
+            }
+        }
+        best
+    }
+
+    #[test]
+    fn single_view_queries_are_knapsack() {
+        // Classic knapsack: sizes 2,3,4,5 values 3,4,5,6, budget 5 → 7.
+        let p = WelfareProblem {
+            view_sizes: vec![2.0, 3.0, 4.0, 5.0],
+            budget: 5.0,
+            queries: vec![
+                ValuedQuery { value: 3.0, views: vec![0] },
+                ValuedQuery { value: 4.0, views: vec![1] },
+                ValuedQuery { value: 5.0, views: vec![2] },
+                ValuedQuery { value: 6.0, views: vec![3] },
+            ],
+        };
+        let s = p.solve_exact();
+        assert!((s.value - 7.0).abs() < 1e-9);
+        assert_eq!(s.selected, vec![true, true, false, false]);
+    }
+
+    #[test]
+    fn multi_view_all_or_nothing() {
+        // Query worth 10 needs views {0,1} (sizes 1+1); query worth 6
+        // needs view {2} (size 2). Budget 2 → take the pair (value 10).
+        let p = WelfareProblem {
+            view_sizes: vec![1.0, 1.0, 2.0],
+            budget: 2.0,
+            queries: vec![
+                ValuedQuery { value: 10.0, views: vec![0, 1] },
+                ValuedQuery { value: 6.0, views: vec![2] },
+            ],
+        };
+        let s = p.solve_exact();
+        assert!((s.value - 10.0).abs() < 1e-9);
+        assert_eq!(s.selected, vec![true, true, false]);
+    }
+
+    #[test]
+    fn shared_views_counted_once() {
+        // Two queries share view 0: caching {0,1,2} satisfies both.
+        let p = WelfareProblem {
+            view_sizes: vec![2.0, 1.0, 1.0, 4.0],
+            budget: 4.0,
+            queries: vec![
+                ValuedQuery { value: 5.0, views: vec![0, 1] },
+                ValuedQuery { value: 5.0, views: vec![0, 2] },
+                ValuedQuery { value: 9.0, views: vec![3] },
+            ],
+        };
+        let s = p.solve_exact();
+        assert!((s.value - 10.0).abs() < 1e-9, "value={}", s.value);
+    }
+
+    #[test]
+    fn spacebook_scenario3() {
+        // §1 Scenario 3: views R,S,P each size M=1, cache 1. Weighted
+        // query values: R→4, S→3.5, P→3 (weights folded into values).
+        // Utility max caches R.
+        let p = WelfareProblem {
+            view_sizes: vec![1.0, 1.0, 1.0],
+            budget: 1.0,
+            queries: vec![
+                ValuedQuery { value: 4.0, views: vec![0] },
+                ValuedQuery { value: 3.5, views: vec![1] },
+                ValuedQuery { value: 3.0, views: vec![2] },
+            ],
+        };
+        let s = p.solve_exact();
+        assert_eq!(s.selected, vec![true, false, false]);
+        // Scenario 4: cache 2M → caches R and S (weighted utility 7.5).
+        let p2 = WelfareProblem { budget: 2.0, ..p };
+        let s2 = p2.solve_exact();
+        assert_eq!(s2.selected, vec![true, true, false]);
+        assert!((s2.value - 7.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_problem() {
+        let p = WelfareProblem {
+            view_sizes: vec![],
+            budget: 1.0,
+            queries: vec![],
+        };
+        assert_eq!(p.solve_exact().value, 0.0);
+    }
+
+    #[test]
+    fn zero_budget_selects_nothing_costly() {
+        let p = WelfareProblem {
+            view_sizes: vec![1.0, 0.0],
+            budget: 0.0,
+            queries: vec![
+                ValuedQuery { value: 5.0, views: vec![0] },
+                ValuedQuery { value: 2.0, views: vec![1] },
+            ],
+        };
+        let s = p.solve_exact();
+        // Zero-size view is free → its query is satisfied.
+        assert!((s.value - 2.0).abs() < 1e-9);
+        assert!(!s.selected[0]);
+    }
+
+    #[test]
+    fn greedy_is_feasible_and_dominated_by_exact() {
+        let mut rng = Pcg64::new(77);
+        for _ in 0..50 {
+            let nv = 1 + rng.index(10);
+            let p = random_problem(&mut rng, nv);
+            let g = p.solve_greedy();
+            let e = p.solve_exact();
+            assert!(p.size_of(&g.selected) <= p.budget + 1e-9);
+            assert!(g.value <= e.value + 1e-9);
+            assert!((g.value - p.value_of(&g.selected)).abs() < 1e-9);
+        }
+    }
+
+    fn random_problem(rng: &mut Pcg64, nv: usize) -> WelfareProblem {
+        let view_sizes: Vec<f64> = (0..nv).map(|_| rng.range_f64(0.5, 4.0)).collect();
+        let total: f64 = view_sizes.iter().sum();
+        let budget = rng.range_f64(0.0, total);
+        let nq = 1 + rng.index(12);
+        let queries = (0..nq)
+            .map(|_| {
+                let k = 1 + rng.index(3.min(nv));
+                let mut views: Vec<usize> = (0..nv).collect();
+                rng.shuffle(&mut views);
+                views.truncate(k);
+                ValuedQuery {
+                    value: rng.range_f64(0.0, 10.0),
+                    views,
+                }
+            })
+            .collect();
+        WelfareProblem {
+            view_sizes,
+            budget,
+            queries,
+        }
+    }
+
+    #[test]
+    fn exact_matches_brute_force_on_random_instances() {
+        check(
+            120,
+            |rng| {
+                let nv = 1 + rng.index(9);
+                random_problem(rng, nv)
+            },
+            no_shrink,
+            |p| {
+                let e = p.solve_exact();
+                let bf = brute_force(p);
+                if (e.value - bf).abs() > 1e-6 {
+                    return Err(format!("exact {} != brute {}", e.value, bf));
+                }
+                if p.size_of(&e.selected) > p.budget + 1e-9 {
+                    return Err("exact solution over budget".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

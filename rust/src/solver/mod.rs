@@ -1,0 +1,8 @@
+//! Numeric substrates used by the allocation policies: a dense two-phase
+//! simplex LP solver (replaces the paper's `lpsolve`), the exact WELFARE
+//! knapsack oracle of Definition 5, and projected gradient ascent for the
+//! proportional-fairness program.
+
+pub mod gradient;
+pub mod knapsack;
+pub mod simplex;

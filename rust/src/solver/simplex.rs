@@ -1,0 +1,530 @@
+//! A dense two-phase primal simplex LP solver.
+//!
+//! The paper's MMF heuristic (§4.3, Program 3) solves
+//! `max { λ | Σ_S V_i(S)·x_S ≥ λ ∀i, Σ_S x_S ≤ 1, x ≥ 0 }` with the
+//! open-source `lpsolve` package; the lexicographic max-min allocation
+//! then pins saturated tenants with equality constraints and re-solves.
+//! The offline registry has no LP crate, so this module implements the
+//! solver from scratch: standard-form conversion (slack / surplus /
+//! artificial variables), phase-1 artificial minimization, phase-2
+//! objective maximization, Bland's rule for anti-cycling.
+//!
+//! Problem sizes here are tiny (tens of variables/constraints), so a
+//! dense tableau is the right tool.
+
+/// Constraint sense.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cmp {
+    Le,
+    Ge,
+    Eq,
+}
+
+/// One linear constraint `coeffs · x (cmp) rhs`.
+#[derive(Debug, Clone)]
+pub struct Constraint {
+    pub coeffs: Vec<f64>,
+    pub cmp: Cmp,
+    pub rhs: f64,
+}
+
+/// A linear program: maximize `objective · x` subject to `constraints`,
+/// with all variables non-negative.
+#[derive(Debug, Clone)]
+pub struct Lp {
+    pub objective: Vec<f64>,
+    pub constraints: Vec<Constraint>,
+}
+
+/// Solver outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LpResult {
+    /// Optimal objective value and primal solution.
+    Optimal { value: f64, x: Vec<f64> },
+    Infeasible,
+    Unbounded,
+}
+
+impl LpResult {
+    pub fn optimal(&self) -> Option<(f64, &[f64])> {
+        match self {
+            LpResult::Optimal { value, x } => Some((*value, x)),
+            _ => None,
+        }
+    }
+}
+
+const EPS: f64 = 1e-9;
+
+impl Lp {
+    pub fn new(objective: Vec<f64>) -> Self {
+        Self {
+            objective,
+            constraints: Vec::new(),
+        }
+    }
+
+    pub fn constrain(&mut self, coeffs: Vec<f64>, cmp: Cmp, rhs: f64) -> &mut Self {
+        assert_eq!(
+            coeffs.len(),
+            self.objective.len(),
+            "constraint arity must match objective arity"
+        );
+        self.constraints.push(Constraint { coeffs, cmp, rhs });
+        self
+    }
+
+    /// Solve with two-phase simplex.
+    pub fn solve(&self) -> LpResult {
+        let n = self.objective.len();
+        let m = self.constraints.len();
+        if n == 0 {
+            return LpResult::Optimal {
+                value: 0.0,
+                x: vec![],
+            };
+        }
+
+        // Normalize rows to non-negative rhs (flip sense when negating).
+        let mut rows: Vec<Constraint> = self.constraints.clone();
+        for r in rows.iter_mut() {
+            if r.rhs < 0.0 {
+                for c in r.coeffs.iter_mut() {
+                    *c = -*c;
+                }
+                r.rhs = -r.rhs;
+                r.cmp = match r.cmp {
+                    Cmp::Le => Cmp::Ge,
+                    Cmp::Ge => Cmp::Le,
+                    Cmp::Eq => Cmp::Eq,
+                };
+            }
+        }
+
+        // Column layout: [structural n][slack/surplus][artificial]
+        let n_slack = rows
+            .iter()
+            .filter(|r| matches!(r.cmp, Cmp::Le | Cmp::Ge))
+            .count();
+        let n_art = rows
+            .iter()
+            .filter(|r| matches!(r.cmp, Cmp::Ge | Cmp::Eq))
+            .count();
+        let total = n + n_slack + n_art;
+
+        // Tableau: m rows × (total + 1 rhs column).
+        let mut t = vec![vec![0.0f64; total + 1]; m];
+        let mut basis = vec![0usize; m];
+        let mut slack_i = 0;
+        let mut art_i = 0;
+        for (i, r) in rows.iter().enumerate() {
+            t[i][..n].copy_from_slice(&r.coeffs);
+            t[i][total] = r.rhs;
+            match r.cmp {
+                Cmp::Le => {
+                    t[i][n + slack_i] = 1.0;
+                    basis[i] = n + slack_i;
+                    slack_i += 1;
+                }
+                Cmp::Ge => {
+                    t[i][n + slack_i] = -1.0; // surplus
+                    t[i][n + n_slack + art_i] = 1.0;
+                    basis[i] = n + n_slack + art_i;
+                    slack_i += 1;
+                    art_i += 1;
+                }
+                Cmp::Eq => {
+                    t[i][n + n_slack + art_i] = 1.0;
+                    basis[i] = n + n_slack + art_i;
+                    art_i += 1;
+                }
+            }
+        }
+
+        // --- Phase 1: minimize sum of artificials (maximize −Σ art). ---
+        if n_art > 0 {
+            let mut obj = vec![0.0f64; total];
+            for j in (n + n_slack)..total {
+                obj[j] = -1.0;
+            }
+            let status = simplex_core(&mut t, &mut basis, &obj, total);
+            if status == CoreStatus::Unbounded {
+                // Phase 1 objective is bounded by 0; unbounded means a bug.
+                unreachable!("phase-1 cannot be unbounded");
+            }
+            // Objective value = −Σ artificials at optimum.
+            let phase1: f64 = basis
+                .iter()
+                .enumerate()
+                .filter(|(_, &b)| b >= n + n_slack)
+                .map(|(i, _)| t[i][total])
+                .sum();
+            if phase1 > 1e-7 {
+                return LpResult::Infeasible;
+            }
+            // Drive remaining (degenerate, zero-valued) artificials out of
+            // the basis where possible.
+            for i in 0..m {
+                if basis[i] >= n + n_slack {
+                    if let Some(j) = (0..n + n_slack).find(|&j| t[i][j].abs() > EPS) {
+                        pivot(&mut t, &mut basis, i, j, total);
+                    }
+                }
+            }
+        }
+
+        // --- Phase 2: maximize the real objective. ---
+        // Zero out the artificial columns so they never re-enter.
+        for row in t.iter_mut() {
+            for j in (n + n_slack)..total {
+                row[j] = 0.0;
+            }
+        }
+        let mut obj = vec![0.0f64; total];
+        obj[..n].copy_from_slice(&self.objective);
+        let status = simplex_core(&mut t, &mut basis, &obj, total);
+        if status == CoreStatus::Unbounded {
+            return LpResult::Unbounded;
+        }
+
+        let mut x = vec![0.0f64; n];
+        for (i, &b) in basis.iter().enumerate() {
+            if b < n {
+                x[b] = t[i][total];
+            }
+        }
+        let value: f64 = x
+            .iter()
+            .zip(self.objective.iter())
+            .map(|(xi, ci)| xi * ci)
+            .sum();
+        LpResult::Optimal { value, x }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum CoreStatus {
+    Optimal,
+    Unbounded,
+}
+
+/// Run primal simplex on tableau `t` with basis `basis`, maximizing `obj`.
+/// Dantzig's rule with a Bland fallback after a stall budget (anti-cycle).
+fn simplex_core(
+    t: &mut [Vec<f64>],
+    basis: &mut [usize],
+    obj: &[f64],
+    total: usize,
+) -> CoreStatus {
+    let m = t.len();
+    let mut iters = 0usize;
+    let max_iters = 50 * (total + m).max(100);
+    loop {
+        iters += 1;
+        let bland = iters > max_iters / 2;
+        // Reduced costs: c_j − c_B · B⁻¹ A_j (computed from the tableau).
+        let mut entering: Option<usize> = None;
+        let mut best = EPS;
+        for j in 0..total {
+            if basis.contains(&j) {
+                continue;
+            }
+            let mut red = obj[j];
+            for i in 0..m {
+                red -= obj[basis[i]] * t[i][j];
+            }
+            if red > EPS {
+                if bland {
+                    entering = Some(j);
+                    break;
+                }
+                if red > best {
+                    best = red;
+                    entering = Some(j);
+                }
+            }
+        }
+        let Some(e) = entering else {
+            return CoreStatus::Optimal;
+        };
+
+        // Ratio test (Bland tie-break on row basis index).
+        let mut leaving: Option<usize> = None;
+        let mut best_ratio = f64::INFINITY;
+        for i in 0..m {
+            if t[i][e] > EPS {
+                let ratio = t[i][total] / t[i][e];
+                if ratio < best_ratio - EPS
+                    || (ratio < best_ratio + EPS
+                        && leaving.map(|l| basis[i] < basis[l]).unwrap_or(false))
+                {
+                    best_ratio = ratio;
+                    leaving = Some(i);
+                }
+            }
+        }
+        let Some(l) = leaving else {
+            return CoreStatus::Unbounded;
+        };
+        pivot(t, basis, l, e, total);
+        if iters > max_iters {
+            // Degenerate stall guard; with Bland's rule this should not
+            // trigger, but return the current (feasible) point if it does.
+            return CoreStatus::Optimal;
+        }
+    }
+}
+
+fn pivot(t: &mut [Vec<f64>], basis: &mut [usize], row: usize, col: usize, total: usize) {
+    let m = t.len();
+    let p = t[row][col];
+    debug_assert!(p.abs() > EPS);
+    for j in 0..=total {
+        t[row][j] /= p;
+    }
+    for i in 0..m {
+        if i != row && t[i][col].abs() > EPS {
+            let f = t[i][col];
+            for j in 0..=total {
+                t[i][j] -= f * t[row][j];
+            }
+        }
+    }
+    basis[row] = col;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn solve(obj: Vec<f64>, cons: Vec<(Vec<f64>, Cmp, f64)>) -> LpResult {
+        let mut lp = Lp::new(obj);
+        for (c, s, r) in cons {
+            lp.constrain(c, s, r);
+        }
+        lp.solve()
+    }
+
+    #[test]
+    fn textbook_max() {
+        // max 3x + 5y, x ≤ 4, 2y ≤ 12, 3x + 2y ≤ 18 → x=2, y=6, z=36.
+        let r = solve(
+            vec![3.0, 5.0],
+            vec![
+                (vec![1.0, 0.0], Cmp::Le, 4.0),
+                (vec![0.0, 2.0], Cmp::Le, 12.0),
+                (vec![3.0, 2.0], Cmp::Le, 18.0),
+            ],
+        );
+        let (v, x) = r.optimal().unwrap();
+        assert!((v - 36.0).abs() < 1e-7);
+        assert!((x[0] - 2.0).abs() < 1e-7);
+        assert!((x[1] - 6.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn ge_and_eq_constraints() {
+        // max x + y, x + y = 10, x ≥ 3, y ≥ 2 → value 10.
+        let r = solve(
+            vec![1.0, 1.0],
+            vec![
+                (vec![1.0, 1.0], Cmp::Eq, 10.0),
+                (vec![1.0, 0.0], Cmp::Ge, 3.0),
+                (vec![0.0, 1.0], Cmp::Ge, 2.0),
+            ],
+        );
+        let (v, x) = r.optimal().unwrap();
+        assert!((v - 10.0).abs() < 1e-7);
+        assert!(x[0] >= 3.0 - 1e-7 && x[1] >= 2.0 - 1e-7);
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        let r = solve(
+            vec![1.0],
+            vec![
+                (vec![1.0], Cmp::Ge, 5.0),
+                (vec![1.0], Cmp::Le, 3.0),
+            ],
+        );
+        assert_eq!(r, LpResult::Infeasible);
+    }
+
+    #[test]
+    fn unbounded_detected() {
+        let r = solve(vec![1.0, 0.0], vec![(vec![0.0, 1.0], Cmp::Le, 1.0)]);
+        assert_eq!(r, LpResult::Unbounded);
+    }
+
+    #[test]
+    fn negative_rhs_normalization() {
+        // max −x s.t. −x ≤ −2  (i.e. x ≥ 2) → x = 2, value −2.
+        let r = solve(vec![-1.0], vec![(vec![-1.0], Cmp::Le, -2.0)]);
+        let (v, x) = r.optimal().unwrap();
+        assert!((x[0] - 2.0).abs() < 1e-7);
+        assert!((v + 2.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn degenerate_lp_terminates() {
+        // Klee-Minty-flavoured degenerate instance; just require optimality.
+        let r = solve(
+            vec![100.0, 10.0, 1.0],
+            vec![
+                (vec![1.0, 0.0, 0.0], Cmp::Le, 1.0),
+                (vec![20.0, 1.0, 0.0], Cmp::Le, 100.0),
+                (vec![200.0, 20.0, 1.0], Cmp::Le, 10000.0),
+            ],
+        );
+        let (v, _) = r.optimal().unwrap();
+        assert!((v - 10000.0).abs() < 1e-4, "v={v}");
+    }
+
+    #[test]
+    fn mmf_shaped_lp() {
+        // The paper's Program 3 on Table 4's instance restricted to two
+        // configurations {R}, {S}: V = [[1,0],[1,0],[0,1]] →
+        // max λ s.t. x_R ≥ λ (twice), x_S ≥ λ, x_R + x_S ≤ 1 → λ = 1/2.
+        let r = solve(
+            vec![0.0, 0.0, 1.0], // vars: x_R, x_S, λ
+            vec![
+                (vec![1.0, 0.0, -1.0], Cmp::Ge, 0.0),
+                (vec![1.0, 0.0, -1.0], Cmp::Ge, 0.0),
+                (vec![0.0, 1.0, -1.0], Cmp::Ge, 0.0),
+                (vec![1.0, 1.0, 0.0], Cmp::Le, 1.0),
+            ],
+        );
+        let (v, x) = r.optimal().unwrap();
+        assert!((v - 0.5).abs() < 1e-7, "λ={v} x={x:?}");
+    }
+
+    #[test]
+    fn zero_variable_lp() {
+        let r = Lp::new(vec![]).solve();
+        assert_eq!(r.optimal().unwrap().0, 0.0);
+    }
+
+    /// Randomized cross-check against brute-force vertex enumeration on
+    /// small dense ≤-form LPs (n=2..3, m=2..4).
+    #[test]
+    fn random_lps_match_vertex_enumeration() {
+        use crate::util::proptest::{check, no_shrink};
+        use crate::util::rng::Pcg64;
+
+        #[derive(Debug)]
+        struct Inst {
+            obj: Vec<f64>,
+            rows: Vec<(Vec<f64>, f64)>,
+        }
+
+        fn gen(rng: &mut Pcg64) -> Inst {
+            let n = 2 + rng.index(2);
+            let m = 2 + rng.index(3);
+            let obj: Vec<f64> = (0..n).map(|_| rng.range_f64(-2.0, 4.0)).collect();
+            // Positive row coefficients + positive rhs ⇒ bounded, feasible.
+            let rows: Vec<(Vec<f64>, f64)> = (0..m)
+                .map(|_| {
+                    let coeffs: Vec<f64> =
+                        (0..n).map(|_| rng.range_f64(0.2, 3.0)).collect();
+                    (coeffs, rng.range_f64(1.0, 8.0))
+                })
+                .collect();
+            Inst { obj, rows }
+        }
+
+        // Brute force: enumerate all intersections of n active constraints
+        // (from rows + axes), keep feasible points, maximize objective.
+        fn brute(inst: &Inst) -> f64 {
+            let n = inst.obj.len();
+            // Build full constraint list: rows (a·x ≤ b) and axes (x_i ≥ 0).
+            let mut planes: Vec<(Vec<f64>, f64)> = inst.rows.clone();
+            for i in 0..n {
+                let mut a = vec![0.0; n];
+                a[i] = -1.0;
+                planes.push((a, 0.0));
+            }
+            let k = planes.len();
+            let mut best = f64::NEG_INFINITY;
+            // Choose n planes to be active; solve the n×n system by
+            // Gaussian elimination.
+            let mut combo = vec![0usize; n];
+            fn rec(
+                planes: &[(Vec<f64>, f64)],
+                obj: &[f64],
+                combo: &mut Vec<usize>,
+                start: usize,
+                depth: usize,
+                best: &mut f64,
+            ) {
+                let n = obj.len();
+                if depth == n {
+                    // Solve active system.
+                    let mut a = vec![vec![0.0; n + 1]; n];
+                    for (r, &pi) in combo.iter().enumerate() {
+                        a[r][..n].copy_from_slice(&planes[pi].0);
+                        a[r][n] = planes[pi].1;
+                    }
+                    // Gaussian elimination with partial pivoting.
+                    for col in 0..n {
+                        let piv = (col..n)
+                            .max_by(|&i, &j| {
+                                a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap()
+                            })
+                            .unwrap();
+                        if a[piv][col].abs() < 1e-10 {
+                            return;
+                        }
+                        a.swap(col, piv);
+                        for i in 0..n {
+                            if i != col {
+                                let f = a[i][col] / a[col][col];
+                                for j in col..=n {
+                                    a[i][j] -= f * a[col][j];
+                                }
+                            }
+                        }
+                    }
+                    let x: Vec<f64> = (0..n).map(|i| a[i][n] / a[i][i]).collect();
+                    // Feasibility w.r.t. every plane.
+                    for (coeffs, rhs) in planes {
+                        let lhs: f64 =
+                            coeffs.iter().zip(&x).map(|(c, xi)| c * xi).sum();
+                        if lhs > rhs + 1e-6 {
+                            return;
+                        }
+                    }
+                    let v: f64 = obj.iter().zip(&x).map(|(c, xi)| c * xi).sum();
+                    if v > *best {
+                        *best = v;
+                    }
+                    return;
+                }
+                for p in start..planes.len() {
+                    combo[depth] = p;
+                    rec(planes, obj, combo, p + 1, depth + 1, best);
+                }
+            }
+            rec(&planes, &inst.obj, &mut combo, 0, 0, &mut best);
+            assert_ne!(k, 0);
+            best
+        }
+
+        check(
+            60,
+            gen,
+            no_shrink,
+            |inst| {
+                let mut lp = Lp::new(inst.obj.clone());
+                for (c, r) in &inst.rows {
+                    lp.constrain(c.clone(), Cmp::Le, *r);
+                }
+                let (v, _) = lp.solve().optimal().ok_or("expected optimal")?;
+                let bf = brute(inst);
+                if (v - bf).abs() > 1e-5 * (1.0 + bf.abs()) {
+                    return Err(format!("simplex {v} != brute {bf}"));
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,225 @@
+//! A criterion-style micro-benchmark harness (the offline registry has no
+//! `criterion`). Used by the `harness = false` bench targets under
+//! `rust/benches/`.
+//!
+//! Each benchmark runs a closure repeatedly: a warmup phase sizes the
+//! per-sample iteration count so one sample takes ~`sample_target`, then
+//! `samples` timed samples are collected and summarized (mean / p50 /
+//! p95 / min / max, iterations per second).
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+use crate::util::stats;
+
+/// Re-export of `std::hint::black_box` so benches don't need to import it.
+pub fn bb<T>(x: T) -> T {
+    black_box(x)
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    /// Wall-clock budget for the warmup phase.
+    pub warmup: Duration,
+    /// Number of timed samples.
+    pub samples: usize,
+    /// Target wall-clock duration of one sample.
+    pub sample_target: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(300),
+            samples: 20,
+            sample_target: Duration::from_millis(50),
+        }
+    }
+}
+
+/// Quick preset for expensive end-to-end benches.
+impl BenchConfig {
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(50),
+            samples: 5,
+            sample_target: Duration::from_millis(100),
+        }
+    }
+}
+
+/// Summary of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Nanoseconds per iteration for each sample.
+    pub samples_ns: Vec<f64>,
+    pub iters_per_sample: u64,
+}
+
+impl BenchResult {
+    pub fn mean_ns(&self) -> f64 {
+        stats::mean(&self.samples_ns)
+    }
+
+    pub fn p50_ns(&self) -> f64 {
+        stats::percentile(&self.samples_ns, 50.0)
+    }
+
+    pub fn p95_ns(&self) -> f64 {
+        stats::percentile(&self.samples_ns, 95.0)
+    }
+
+    pub fn min_ns(&self) -> f64 {
+        self.samples_ns
+            .iter()
+            .cloned()
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn throughput_per_sec(&self) -> f64 {
+        1e9 / self.mean_ns()
+    }
+
+    /// One human-readable report line.
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<44} {:>12}/iter  p50 {:>12}  p95 {:>12}  ({:.1} iters/s)",
+            self.name,
+            fmt_ns(self.mean_ns()),
+            fmt_ns(self.p50_ns()),
+            fmt_ns(self.p95_ns()),
+            self.throughput_per_sec(),
+        )
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// A named collection of benchmark results with a markdown report.
+pub struct BenchSuite {
+    pub name: String,
+    pub config: BenchConfig,
+    pub results: Vec<BenchResult>,
+}
+
+impl BenchSuite {
+    pub fn new(name: &str) -> Self {
+        let config = if std::env::var("ROBUS_BENCH_QUICK").is_ok() {
+            BenchConfig::quick()
+        } else {
+            BenchConfig::default()
+        };
+        Self {
+            name: name.to_string(),
+            config,
+            results: Vec::new(),
+        }
+    }
+
+    /// Run one benchmark. The closure should perform one logical iteration
+    /// and return a value (passed through `black_box` to defeat DCE).
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) {
+        // Warmup + calibration: find iters such that a sample hits target.
+        let warmup_start = Instant::now();
+        let mut iters_done: u64 = 0;
+        while warmup_start.elapsed() < self.config.warmup || iters_done == 0 {
+            black_box(f());
+            iters_done += 1;
+        }
+        let per_iter = warmup_start.elapsed().as_nanos() as f64 / iters_done as f64;
+        let iters_per_sample =
+            ((self.config.sample_target.as_nanos() as f64 / per_iter).ceil() as u64).max(1);
+
+        let mut samples_ns = Vec::with_capacity(self.config.samples);
+        for _ in 0..self.config.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters_per_sample {
+                black_box(f());
+            }
+            let elapsed = t0.elapsed().as_nanos() as f64;
+            samples_ns.push(elapsed / iters_per_sample as f64);
+        }
+
+        let result = BenchResult {
+            name: name.to_string(),
+            samples_ns,
+            iters_per_sample,
+        };
+        println!("{}", result.report_line());
+        self.results.push(result);
+    }
+
+    /// Markdown table of all results.
+    pub fn markdown(&self) -> String {
+        let mut out = format!("### {}\n\n", self.name);
+        out.push_str("| benchmark | mean/iter | p50 | p95 | iters/s |\n");
+        out.push_str("|---|---|---|---|---|\n");
+        for r in &self.results {
+            out.push_str(&format!(
+                "| {} | {} | {} | {} | {:.1} |\n",
+                r.name,
+                fmt_ns(r.mean_ns()),
+                fmt_ns(r.p50_ns()),
+                fmt_ns(r.p95_ns()),
+                r.throughput_per_sec()
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_timings() {
+        let mut suite = BenchSuite::new("unit");
+        suite.config = BenchConfig {
+            warmup: Duration::from_millis(5),
+            samples: 5,
+            sample_target: Duration::from_millis(2),
+        };
+        suite.bench("sum", || (0..1000u64).sum::<u64>());
+        let r = &suite.results[0];
+        assert_eq!(r.samples_ns.len(), 5);
+        assert!(r.mean_ns() > 0.0);
+        assert!(r.iters_per_sample >= 1);
+        assert!(r.p95_ns() >= r.p50_ns() * 0.5);
+    }
+
+    #[test]
+    fn markdown_report_contains_rows() {
+        let mut suite = BenchSuite::new("unit");
+        suite.config = BenchConfig {
+            warmup: Duration::from_millis(2),
+            samples: 3,
+            sample_target: Duration::from_millis(1),
+        };
+        suite.bench("a", || 1 + 1);
+        suite.bench("b", || 2 + 2);
+        let md = suite.markdown();
+        assert!(md.contains("| a |"));
+        assert!(md.contains("| b |"));
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2_500_000.0), "2.50 ms");
+        assert_eq!(fmt_ns(3_000_000_000.0), "3.000 s");
+    }
+}

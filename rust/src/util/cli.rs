@@ -1,0 +1,203 @@
+//! A small command-line argument parser (the offline registry has no
+//! `clap`). Supports subcommands, `--flag`, `--key value`, `--key=value`,
+//! and positional arguments, with typed accessors and generated help.
+
+use std::collections::BTreeMap;
+
+/// Declarative description of one option for help output.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments: subcommand, options, flags, positionals.
+///
+/// Note: without an option spec, `--name value` is always parsed as an
+/// option with a value; a boolean flag is a `--name` that is last or
+/// followed by another `--option`. Put positionals before flags.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw arguments (without `argv[0]`). The first non-dashed token
+    /// becomes the subcommand; later non-dashed tokens are positional.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` terminator: everything after is positional.
+                    args.positional.extend(iter);
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|next| !next.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    args.opts.insert(body.to_string(), v);
+                } else {
+                    args.flags.push(body.to_string());
+                }
+            } else if tok.starts_with('-') && tok.len() > 1 {
+                return Err(format!("short options not supported: {tok}"));
+            } else if args.subcommand.is_none() && args.positional.is_empty() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| format!("--{name} expects an integer, got '{s}'")),
+        }
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        self.opt_u64(name, default as u64).map(|v| v as usize)
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| format!("--{name} expects a number, got '{s}'")),
+        }
+    }
+
+    /// Reject any option/flag name not in `known` (catches typos early).
+    pub fn check_known(&self, known: &[&str]) -> Result<(), String> {
+        for k in self.opts.keys().map(|s| s.as_str()).chain(self.flags.iter().map(|s| s.as_str()))
+        {
+            if !known.contains(&k) {
+                return Err(format!("unknown option --{k}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Render a help block for a subcommand.
+pub fn render_help(program: &str, about: &str, subcommands: &[(&str, &str)], opts: &[OptSpec]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("{program} — {about}\n\nUSAGE:\n  {program} <command> [options]\n"));
+    if !subcommands.is_empty() {
+        out.push_str("\nCOMMANDS:\n");
+        for (name, help) in subcommands {
+            out.push_str(&format!("  {name:<22} {help}\n"));
+        }
+    }
+    if !opts.is_empty() {
+        out.push_str("\nOPTIONS:\n");
+        for o in opts {
+            let default = o
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            out.push_str(&format!("  --{:<20} {}{}\n", o.name, o.help, default));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(tokens: &[&str]) -> Args {
+        Args::parse(tokens.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["experiment", "fig5", "--seed", "7", "--policy=FASTPF", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("experiment"));
+        assert_eq!(a.opt("seed"), Some("7"));
+        assert_eq!(a.opt("policy"), Some("FASTPF"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["fig5"]);
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse(&["run", "--batches", "30", "--gamma", "2.5"]);
+        assert_eq!(a.opt_u64("batches", 0).unwrap(), 30);
+        assert_eq!(a.opt_f64("gamma", 1.0).unwrap(), 2.5);
+        assert_eq!(a.opt_u64("missing", 9).unwrap(), 9);
+        assert!(parse(&["run", "--batches", "x"]).opt_u64("batches", 0).is_err());
+    }
+
+    #[test]
+    fn trailing_flag_is_flag() {
+        let a = parse(&["run", "--stateful"]);
+        assert!(a.flag("stateful"));
+        assert_eq!(a.opt("stateful"), None);
+    }
+
+    #[test]
+    fn double_dash_terminator() {
+        let a = parse(&["run", "--", "--not-a-flag"]);
+        assert_eq!(a.positional, vec!["--not-a-flag"]);
+        assert!(!a.flag("not-a-flag"));
+    }
+
+    #[test]
+    fn unknown_option_detection() {
+        let a = parse(&["run", "--seed", "1", "--oops"]);
+        assert!(a.check_known(&["seed"]).is_err());
+        assert!(a.check_known(&["seed", "oops"]).is_ok());
+    }
+
+    #[test]
+    fn short_options_rejected() {
+        assert!(Args::parse(vec!["-x".to_string()]).is_err());
+    }
+
+    #[test]
+    fn help_renders() {
+        let help = render_help(
+            "robus",
+            "fair cache allocation",
+            &[("run", "run a workload")],
+            &[OptSpec { name: "seed", help: "rng seed", default: Some("42") }],
+        );
+        assert!(help.contains("robus"));
+        assert!(help.contains("--seed"));
+        assert!(help.contains("[default: 42]"));
+    }
+}

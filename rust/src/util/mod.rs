@@ -1,0 +1,11 @@
+//! Self-built substrates: the offline crate registry contains only the
+//! `xla` crate's dependency closure, so random number generation, JSON,
+//! CLI parsing, statistics, benchmarking, and property testing are all
+//! implemented here from scratch (see DESIGN.md §1).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

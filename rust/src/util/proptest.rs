@@ -1,0 +1,130 @@
+//! A small property-based testing driver (the offline registry has no
+//! `proptest`). Tests express a property over randomly generated inputs;
+//! the driver runs many seeded cases and, on failure, retries the failing
+//! case with progressively "smaller" inputs via a user-supplied shrink
+//! function to report a minimal counterexample.
+//!
+//! Usage:
+//! ```ignore
+//! check(200, gen_instance, shrink_instance, |inst| prop_holds(inst));
+//! ```
+
+use crate::util::rng::Pcg64;
+
+/// Outcome of a property check, carrying the minimal counterexample text.
+#[derive(Debug)]
+pub struct PropFailure {
+    pub case_index: usize,
+    pub seed: u64,
+    pub description: String,
+}
+
+impl std::fmt::Display for PropFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "property failed on case #{} (seed {}): {}",
+            self.case_index, self.seed, self.description
+        )
+    }
+}
+
+/// Run `cases` random cases of a property. `gen` builds an input from an
+/// RNG; `shrink` proposes simpler variants of a failing input (return an
+/// empty vec to stop); `prop` returns `Ok(())` or a failure message.
+///
+/// Panics with a formatted report (including the driving seed so the case
+/// is reproducible) if any case fails after shrinking.
+pub fn check<T, G, S, P>(cases: usize, mut gen: G, shrink: S, prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Pcg64) -> T,
+    S: Fn(&T) -> Vec<T>,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let base_seed = std::env::var("ROBUS_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xc0ffee_u64);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let mut rng = Pcg64::with_stream(seed, 999);
+        let input = gen(&mut rng);
+        if let Err(first_msg) = prop(&input) {
+            // Shrink loop: greedily accept the first simpler failing variant.
+            let mut current = input;
+            let mut msg = first_msg;
+            let mut budget = 1000;
+            'outer: while budget > 0 {
+                for candidate in shrink(&current) {
+                    budget -= 1;
+                    if let Err(m) = prop(&candidate) {
+                        current = candidate;
+                        msg = m;
+                        continue 'outer;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "{}",
+                PropFailure {
+                    case_index: case,
+                    seed,
+                    description: format!("{msg}\nminimal counterexample: {current:#?}"),
+                }
+            );
+        }
+    }
+}
+
+/// Convenience: no shrinking.
+pub fn no_shrink<T>(_: &T) -> Vec<T> {
+    Vec::new()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            100,
+            |rng| rng.index(1000) as i64,
+            no_shrink,
+            |&x| {
+                if x >= 0 {
+                    Ok(())
+                } else {
+                    Err("negative".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimal() {
+        let result = std::panic::catch_unwind(|| {
+            check(
+                100,
+                |rng| 10 + rng.index(1000) as i64,
+                |&x| if x > 0 { vec![x / 2, x - 1] } else { vec![] },
+                |&x| {
+                    if x < 7 {
+                        Ok(())
+                    } else {
+                        Err(format!("{x} >= 7"))
+                    }
+                },
+            );
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        // Greedy shrink must land exactly on the boundary value 7.
+        assert!(msg.contains("counterexample: 7"), "msg={msg}");
+    }
+}

@@ -1,0 +1,441 @@
+//! Deterministic pseudo-random number generation and the sampling
+//! distributions used by the workload generators and randomized policies.
+//!
+//! The offline build environment has no `rand` crate, so we implement a
+//! small, well-tested PCG64 (XSL-RR 128/64) generator from scratch plus
+//! the distributions the paper's evaluation requires: uniform, normal
+//! (Box–Muller), exponential, Poisson (Knuth / PTRD-lite), and Zipf
+//! (rejection-free inverse-CDF over a finite support, which is exactly
+//! what "Zipf distribution over 30 datasets" in §5.1 needs).
+
+/// PCG-XSL-RR-128/64: 128-bit LCG state, 64-bit xorshift-rotate output.
+///
+/// Reference: O'Neill, "PCG: A Family of Simple Fast Space-Efficient
+/// Statistically Good Algorithms for Random Number Generation" (2014).
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Create a generator from a 64-bit seed with a fixed stream.
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xda3e_39cb_94b9_5bdb)
+    }
+
+    /// Create a generator with an explicit stream selector so independent
+    /// subsystems (arrival process, access process, policy sampling) can
+    /// share a seed without sharing a sequence.
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let inc = ((stream as u128) << 1) | 1;
+        let mut rng = Self { state: 0, inc };
+        rng.step();
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.step();
+        rng
+    }
+
+    #[inline]
+    fn step(&mut self) {
+        self.state = self
+            .state
+            .wrapping_mul(PCG_MULT)
+            .wrapping_add(self.inc);
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.step();
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        let rot = (self.state >> 122) as u32;
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        // 53 random mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f64 in (0, 1] — safe as a log() argument.
+    #[inline]
+    pub fn next_f64_open(&mut self) -> f64 {
+        1.0 - self.next_f64()
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire's method).
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "below(0) is undefined");
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut lo = m as u64;
+        if lo < n {
+            let threshold = n.wrapping_neg() % n;
+            while lo < threshold {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                lo = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform usize in [0, n).
+    #[inline]
+    pub fn index(&mut self, n: usize) -> usize {
+        self.below(n as u64) as usize
+    }
+
+    /// Uniform f64 in [lo, hi).
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Standard normal via Box–Muller (polar-free variant; we accept the
+    /// two-transcendental cost, this is not on the hot path).
+    pub fn normal(&mut self, mean: f64, std_dev: f64) -> f64 {
+        let u1 = self.next_f64_open();
+        let u2 = self.next_f64();
+        let z = (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+        mean + std_dev * z
+    }
+
+    /// Exponential with the given rate (mean = 1/rate). Used for Poisson
+    /// inter-arrival gaps.
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        assert!(rate > 0.0);
+        -self.next_f64_open().ln() / rate
+    }
+
+    /// Poisson-distributed count with the given mean. Knuth's product
+    /// method for small means; normal approximation above 30 (the paper's
+    /// per-batch query counts keep means well below that, the fallback is
+    /// for generality).
+    pub fn poisson(&mut self, mean: f64) -> u64 {
+        assert!(mean >= 0.0);
+        if mean == 0.0 {
+            return 0;
+        }
+        if mean < 30.0 {
+            let l = (-mean).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= self.next_f64_open();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        } else {
+            let x = self.normal(mean, mean.sqrt());
+            if x < 0.0 {
+                0
+            } else {
+                x.round() as u64
+            }
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, items: &mut [T]) {
+        for i in (1..items.len()).rev() {
+            let j = self.index(i + 1);
+            items.swap(i, j);
+        }
+    }
+
+    /// A random permutation of 0..n (used by Random Serial Dictatorship).
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut p: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut p);
+        p
+    }
+
+    /// Sample an index from an explicit (unnormalized, non-negative)
+    /// weight vector. Panics if all weights are zero.
+    pub fn weighted_index(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        assert!(
+            total > 0.0 && total.is_finite(),
+            "weighted_index needs positive finite total, got {total}"
+        );
+        let mut target = self.next_f64() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            debug_assert!(w >= 0.0);
+            if target < w {
+                return i;
+            }
+            target -= w;
+        }
+        // Floating-point slack: return the last positive-weight index.
+        weights
+            .iter()
+            .rposition(|&w| w > 0.0)
+            .expect("at least one positive weight")
+    }
+
+    /// A random point on the unit L2 sphere in `dim` dimensions with
+    /// non-negative coordinates — the random weight vectors of the
+    /// configuration-pruning heuristic (§4.3).
+    pub fn unit_weight_vector(&mut self, dim: usize) -> Vec<f64> {
+        assert!(dim > 0);
+        loop {
+            let v: Vec<f64> = (0..dim).map(|_| self.normal(0.0, 1.0).abs()).collect();
+            let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if norm > 1e-12 {
+                return v.into_iter().map(|x| x / norm).collect();
+            }
+        }
+    }
+}
+
+/// A finite Zipf distribution over ranks 0..n with exponent `s`:
+/// P(rank k) ∝ 1/(k+1)^s. Precomputes the CDF for O(log n) sampling.
+/// This matches the paper's "Zipf distribution over 30 Sales datasets"
+/// (§5.1) where a permutation maps ranks to datasets so each of g1..g4
+/// can be "skewed towards a different subset of datasets".
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+    /// rank -> item index
+    perm: Vec<usize>,
+}
+
+impl Zipf {
+    /// Identity-permuted Zipf over n items.
+    pub fn new(n: usize, exponent: f64) -> Self {
+        Self::with_permutation(n, exponent, (0..n).collect())
+    }
+
+    /// Zipf with rank r mapped to item `perm[r]`.
+    pub fn with_permutation(n: usize, exponent: f64, perm: Vec<usize>) -> Self {
+        assert!(n > 0);
+        assert_eq!(perm.len(), n);
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 0..n {
+            acc += 1.0 / ((k + 1) as f64).powf(exponent);
+            cdf.push(acc);
+        }
+        let total = *cdf.last().unwrap();
+        for c in cdf.iter_mut() {
+            *c /= total;
+        }
+        Self { cdf, perm }
+    }
+
+    /// Zipf whose rank→item mapping is a random permutation drawn from
+    /// `rng` — the mechanism for generating distinct g1..g4 skews.
+    pub fn randomized(n: usize, exponent: f64, rng: &mut Pcg64) -> Self {
+        Self::with_permutation(n, exponent, rng.permutation(n))
+    }
+
+    pub fn len(&self) -> usize {
+        self.cdf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cdf.is_empty()
+    }
+
+    /// Sample an item index.
+    pub fn sample(&self, rng: &mut Pcg64) -> usize {
+        let u = rng.next_f64();
+        let rank = match self
+            .cdf
+            .binary_search_by(|c| c.partial_cmp(&u).unwrap())
+        {
+            Ok(i) => i,
+            Err(i) => i,
+        };
+        self.perm[rank.min(self.cdf.len() - 1)]
+    }
+
+    /// Probability mass assigned to item `item`.
+    pub fn pmf(&self, item: usize) -> f64 {
+        let rank = self
+            .perm
+            .iter()
+            .position(|&p| p == item)
+            .expect("item not in support");
+        let lo = if rank == 0 { 0.0 } else { self.cdf[rank - 1] };
+        self.cdf[rank] - lo
+    }
+
+    /// Items ordered by decreasing probability (rank order).
+    pub fn items_by_rank(&self) -> &[usize] {
+        &self.perm
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pcg_is_deterministic_per_seed() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Pcg64::new(43);
+        let first: Vec<u64> = (0..8).map(|_| c.next_u64()).collect();
+        let mut a2 = Pcg64::new(42);
+        let other: Vec<u64> = (0..8).map(|_| a2.next_u64()).collect();
+        assert_ne!(first, other);
+    }
+
+    #[test]
+    fn streams_are_independent_sequences() {
+        let mut a = Pcg64::with_stream(7, 1);
+        let mut b = Pcg64::with_stream(7, 2);
+        let va: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_ne!(va, vb);
+    }
+
+    #[test]
+    fn uniform_mean_is_half() {
+        let mut rng = Pcg64::new(1);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| rng.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn below_is_in_range_and_roughly_uniform() {
+        let mut rng = Pcg64::new(2);
+        let mut counts = [0u32; 7];
+        for _ in 0..70_000 {
+            let v = rng.below(7) as usize;
+            counts[v] += 1;
+        }
+        for &c in &counts {
+            assert!((c as i64 - 10_000).abs() < 600, "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::new(3);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal(5.0, 2.0)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!((mean - 5.0).abs() < 0.03, "mean={mean}");
+        assert!((var - 4.0).abs() < 0.1, "var={var}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut rng = Pcg64::new(4);
+        let n = 200_000;
+        let mean: f64 = (0..n).map(|_| rng.exponential(0.5)).sum::<f64>() / n as f64;
+        assert!((mean - 2.0).abs() < 0.03, "mean={mean}");
+    }
+
+    #[test]
+    fn poisson_mean_and_variance() {
+        let mut rng = Pcg64::new(5);
+        for &lambda in &[0.5, 3.0, 20.0, 60.0] {
+            let n = 50_000;
+            let xs: Vec<f64> = (0..n).map(|_| rng.poisson(lambda) as f64).collect();
+            let mean = xs.iter().sum::<f64>() / n as f64;
+            let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+            assert!((mean - lambda).abs() < lambda.max(1.0) * 0.05, "λ={lambda} mean={mean}");
+            assert!((var - lambda).abs() < lambda.max(1.0) * 0.12, "λ={lambda} var={var}");
+        }
+    }
+
+    #[test]
+    fn poisson_zero_mean() {
+        let mut rng = Pcg64::new(6);
+        assert_eq!(rng.poisson(0.0), 0);
+    }
+
+    #[test]
+    fn permutation_is_a_permutation() {
+        let mut rng = Pcg64::new(7);
+        let p = rng.permutation(50);
+        let mut sorted = p.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn weighted_index_respects_weights() {
+        let mut rng = Pcg64::new(8);
+        let w = [1.0, 0.0, 3.0];
+        let mut counts = [0u32; 3];
+        for _ in 0..40_000 {
+            counts[rng.weighted_index(&w)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        let ratio = counts[2] as f64 / counts[0] as f64;
+        assert!((ratio - 3.0).abs() < 0.2, "ratio={ratio}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn weighted_index_all_zero_panics() {
+        let mut rng = Pcg64::new(9);
+        rng.weighted_index(&[0.0, 0.0]);
+    }
+
+    #[test]
+    fn unit_weight_vector_is_unit_and_nonnegative() {
+        let mut rng = Pcg64::new(10);
+        for dim in [1, 2, 5, 16] {
+            let v = rng.unit_weight_vector(dim);
+            assert_eq!(v.len(), dim);
+            let norm: f64 = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+            assert!((norm - 1.0).abs() < 1e-9);
+            assert!(v.iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn zipf_is_skewed_and_normalized() {
+        let z = Zipf::new(30, 1.0);
+        let total: f64 = (0..30).map(|i| z.pmf(i)).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+        assert!(z.pmf(0) > z.pmf(1));
+        assert!(z.pmf(1) > z.pmf(10));
+        // Head heaviness: rank-0 mass for s=1, n=30 is 1/H_30 ≈ 0.2503.
+        assert!((z.pmf(0) - 0.2503).abs() < 0.001);
+    }
+
+    #[test]
+    fn zipf_sampling_matches_pmf() {
+        let mut rng = Pcg64::new(11);
+        let z = Zipf::new(10, 1.2);
+        let n = 200_000;
+        let mut counts = vec![0u32; 10];
+        for _ in 0..n {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        for i in 0..10 {
+            let emp = counts[i] as f64 / n as f64;
+            assert!((emp - z.pmf(i)).abs() < 0.01, "i={i} emp={emp} pmf={}", z.pmf(i));
+        }
+    }
+
+    #[test]
+    fn zipf_permutation_reskews() {
+        let mut rng = Pcg64::new(12);
+        let z1 = Zipf::randomized(30, 1.0, &mut rng);
+        let z2 = Zipf::randomized(30, 1.0, &mut rng);
+        // Same shape, (almost surely) different favourite item.
+        assert_ne!(z1.items_by_rank()[..5], z2.items_by_rank()[..5]);
+        let top1 = z1.items_by_rank()[0];
+        assert!((z1.pmf(top1) - 0.2503).abs() < 0.001);
+    }
+}

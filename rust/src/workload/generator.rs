@@ -1,0 +1,330 @@
+//! The workload generator of Figure 4: per tenant, a Poisson arrival
+//! process paired with a data-access process (uniform TPC-H template
+//! choice or Zipf Sales dataset choice, optionally routed through
+//! hot/cold local windows).
+
+use crate::domain::query::{Query, QueryId};
+use crate::domain::tenant::TenantId;
+use crate::util::rng::{Pcg64, Zipf};
+use crate::workload::spec::{AccessSpec, TenantSpec, WindowSpec};
+use crate::workload::universe::Universe;
+
+/// Sales scan+aggregate compute cost per GiB scanned (core-seconds).
+/// Calibrated to Spark 1.x SQL row-processing rates (~3 MB/s/core), which
+/// dominate cached-query service times on the paper's testbed.
+const SALES_COMPUTE_PER_GB: f64 = 150.0;
+
+/// Per-tenant generator state.
+pub struct TenantGenerator {
+    tenant: TenantId,
+    spec: TenantSpec,
+    rng: Pcg64,
+    /// Next arrival time (absolute simulated seconds).
+    next_arrival: f64,
+    /// Zipf over Sales datasets (None for TPC-H tenants).
+    zipf: Option<Zipf>,
+    /// Active hot/cold window: (end_time, candidate datasets).
+    window: Option<(f64, Vec<usize>)>,
+}
+
+impl TenantGenerator {
+    pub fn new(tenant: TenantId, spec: TenantSpec, universe: &Universe, seed: u64) -> Self {
+        // Derive independent streams: arrivals+choices from (seed, tenant);
+        // the Zipf permutation from the spec's skew_seed only, so g₁ means
+        // the same skew for every tenant using it (as in Table 9's G₁).
+        let mut rng = Pcg64::with_stream(seed ^ 0x9e37_79b9_7f4a_7c15, tenant.0 as u64 + 1);
+        let zipf = match &spec.access {
+            AccessSpec::SalesZipf { exponent, skew_seed } => {
+                assert!(
+                    !universe.sales_views.is_empty(),
+                    "SalesZipf tenant in a universe without Sales data"
+                );
+                let mut perm_rng = Pcg64::with_stream(*skew_seed, 7);
+                Some(Zipf::randomized(
+                    universe.sales_views.len(),
+                    *exponent,
+                    &mut perm_rng,
+                ))
+            }
+            AccessSpec::TpchUniform => {
+                assert!(
+                    !universe.tpch_templates.is_empty(),
+                    "TpchUniform tenant in a universe without TPC-H data"
+                );
+                None
+            }
+        };
+        let first_gap = rng.exponential(1.0 / spec.mean_interarrival);
+        Self {
+            tenant,
+            spec,
+            rng,
+            next_arrival: first_gap,
+            zipf,
+            window: None,
+        }
+    }
+
+    /// The Zipf access distribution (None for TPC-H tenants) — used by
+    /// metrics to identify globally popular views (Figure 7).
+    pub fn zipf(&self) -> Option<&Zipf> {
+        self.zipf.as_ref()
+    }
+
+    /// Pick the Sales dataset for a query arriving at `now`, honouring
+    /// the hot/cold window mechanism.
+    fn pick_sales_dataset(&mut self, now: f64) -> usize {
+        let zipf = self.zipf.as_ref().expect("sales tenant");
+        match &self.spec.window {
+            None => zipf.sample(&mut self.rng),
+            Some(w) => {
+                let refresh = match &self.window {
+                    None => true,
+                    Some((end, _)) => now >= *end,
+                };
+                if refresh {
+                    self.window = Some(new_window(w, zipf, now, &mut self.rng));
+                }
+                let (_, candidates) = self.window.as_ref().unwrap();
+                candidates[self.rng.index(candidates.len())]
+            }
+        }
+    }
+
+    /// Generate all queries arriving strictly before `t_end`, advancing
+    /// internal state. Query ids are assigned by the caller's counter.
+    pub fn generate_until(
+        &mut self,
+        t_end: f64,
+        universe: &Universe,
+        next_id: &mut u64,
+    ) -> Vec<Query> {
+        let mut out = Vec::new();
+        while self.next_arrival < t_end {
+            let arrival = self.next_arrival;
+            let q = match self.spec.access.clone() {
+                AccessSpec::TpchUniform => {
+                    let t = &universe.tpch_templates
+                        [self.rng.index(universe.tpch_templates.len())];
+                    Query {
+                        id: QueryId(*next_id),
+                        tenant: self.tenant,
+                        arrival,
+                        template: format!("tpch-{}", t.name),
+                        required_views: t.views.clone(),
+                        bytes_read: t.bytes,
+                        compute_cost: t.compute,
+                    }
+                }
+                AccessSpec::SalesZipf { .. } => {
+                    let d = self.pick_sales_dataset(arrival);
+                    let view = universe.sales_views[d];
+                    let v = universe.views.get(view);
+                    let gb = v.scan_bytes as f64 / (1u64 << 30) as f64;
+                    Query {
+                        id: QueryId(*next_id),
+                        tenant: self.tenant,
+                        arrival,
+                        template: format!("sales-scan-{d:02}"),
+                        required_views: vec![view],
+                        bytes_read: v.scan_bytes,
+                        compute_cost: gb * SALES_COMPUTE_PER_GB,
+                    }
+                }
+            };
+            *next_id += 1;
+            out.push(q);
+            let gap = self.rng.exponential(1.0 / self.spec.mean_interarrival);
+            self.next_arrival = arrival + gap;
+        }
+        out
+    }
+}
+
+fn new_window(
+    w: &WindowSpec,
+    zipf: &Zipf,
+    now: f64,
+    rng: &mut Pcg64,
+) -> (f64, Vec<usize>) {
+    let len = rng.normal(w.mean_secs, w.std_secs).max(1.0);
+    let mut candidates = Vec::with_capacity(w.candidates);
+    // Draw (mostly distinct) candidates from the global Zipf.
+    let mut guard = 0;
+    while candidates.len() < w.candidates && guard < 200 {
+        let d = zipf.sample(rng);
+        if !candidates.contains(&d) {
+            candidates.push(d);
+        }
+        guard += 1;
+    }
+    if candidates.is_empty() {
+        candidates.push(zipf.sample(rng));
+    }
+    (now + len, candidates)
+}
+
+/// All tenants' generators plus the shared query-id counter.
+pub struct WorkloadGenerator {
+    pub generators: Vec<TenantGenerator>,
+    next_id: u64,
+}
+
+impl WorkloadGenerator {
+    pub fn new(specs: Vec<TenantSpec>, universe: &Universe, seed: u64) -> Self {
+        let generators = specs
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| TenantGenerator::new(TenantId(i), s, universe, seed))
+            .collect();
+        Self {
+            generators,
+            next_id: 0,
+        }
+    }
+
+    /// Queries from all tenants arriving before `t_end`, sorted by
+    /// arrival time.
+    pub fn generate_until(&mut self, t_end: f64, universe: &Universe) -> Vec<Query> {
+        let mut all = Vec::new();
+        for g in self.generators.iter_mut() {
+            all.extend(g.generate_until(t_end, universe, &mut self.next_id));
+        }
+        all.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        all
+    }
+
+    pub fn n_tenants(&self) -> usize {
+        self.generators.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sales_spec(mean: f64) -> TenantSpec {
+        TenantSpec::new(AccessSpec::g(1), mean)
+    }
+
+    #[test]
+    fn arrival_counts_match_rate() {
+        let u = Universe::sales_only();
+        let mut gen = WorkloadGenerator::new(vec![sales_spec(20.0)], &u, 42);
+        let qs = gen.generate_until(20.0 * 1000.0, &u);
+        // Expect ~1000 arrivals; Poisson std is ~32.
+        assert!((850..1150).contains(&qs.len()), "n={}", qs.len());
+        // Arrivals sorted, in range.
+        for w in qs.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
+        assert!(qs.iter().all(|q| q.arrival < 20000.0));
+    }
+
+    #[test]
+    fn generation_is_deterministic_per_seed() {
+        let u = Universe::sales_only();
+        let mut g1 = WorkloadGenerator::new(vec![sales_spec(10.0)], &u, 7);
+        let mut g2 = WorkloadGenerator::new(vec![sales_spec(10.0)], &u, 7);
+        let a = g1.generate_until(500.0, &u);
+        let b = g2.generate_until(500.0, &u);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.template, y.template);
+            assert_eq!(x.arrival, y.arrival);
+        }
+        let mut g3 = WorkloadGenerator::new(vec![sales_spec(10.0)], &u, 8);
+        let c = g3.generate_until(500.0, &u);
+        assert!(
+            a.len() != c.len()
+                || a.iter().zip(&c).any(|(x, y)| x.arrival != y.arrival)
+        );
+    }
+
+    #[test]
+    fn zipf_access_is_skewed() {
+        let u = Universe::sales_only();
+        let mut gen = WorkloadGenerator::new(vec![sales_spec(1.0)], &u, 3);
+        let qs = gen.generate_until(20_000.0, &u);
+        let mut counts = vec![0u32; 30];
+        for q in &qs {
+            let d: usize = q.template.strip_prefix("sales-scan-").unwrap().parse().unwrap();
+            counts[d] += 1;
+        }
+        let max = *counts.iter().max().unwrap() as f64;
+        let total: u32 = counts.iter().sum();
+        // Top dataset takes ~18% of accesses (Zipf s=0.8, n=30:
+        // 1/sum k^-0.8 over 30 items ~ 0.178) -- far above uniform 3.3%.
+        let frac = max / total as f64;
+        assert!((0.13..0.30).contains(&frac), "frac={frac}");
+    }
+
+    #[test]
+    fn same_skew_seed_same_favourite_across_tenants() {
+        let u = Universe::sales_only();
+        let specs = vec![sales_spec(1.0), sales_spec(1.0)];
+        let mut gen = WorkloadGenerator::new(specs, &u, 5);
+        let favs: Vec<usize> = gen
+            .generators
+            .iter()
+            .map(|g| g.zipf().unwrap().items_by_rank()[0])
+            .collect();
+        assert_eq!(favs[0], favs[1]);
+        // Different g → different favourite (with overwhelming probability).
+        let specs2 = vec![
+            TenantSpec::new(AccessSpec::g(1), 1.0),
+            TenantSpec::new(AccessSpec::g(2), 1.0),
+        ];
+        let gen2 = WorkloadGenerator::new(specs2, &u, 5);
+        let f0 = gen2.generators[0].zipf().unwrap().items_by_rank()[0];
+        let f1 = gen2.generators[1].zipf().unwrap().items_by_rank()[0];
+        assert_ne!(f0, f1);
+    }
+
+    #[test]
+    fn tpch_tenant_uses_templates() {
+        let u = Universe::mixed();
+        let spec = TenantSpec::new(AccessSpec::h1(), 5.0);
+        let mut gen = WorkloadGenerator::new(vec![spec], &u, 1);
+        let qs = gen.generate_until(2000.0, &u);
+        assert!(!qs.is_empty());
+        let li = u.views.by_name("lineitem").unwrap().id;
+        for q in &qs {
+            assert!(q.template.starts_with("tpch-q"));
+            assert!(q.required_views.contains(&li));
+            assert!(q.bytes_read >= 3 * (1 << 30));
+        }
+        // Roughly uniform over 15 templates.
+        let mut seen = std::collections::HashSet::new();
+        for q in &qs {
+            seen.insert(q.template.clone());
+        }
+        assert!(seen.len() >= 12, "templates seen: {}", seen.len());
+    }
+
+    #[test]
+    fn hot_cold_window_concentrates_access() {
+        let u = Universe::sales_only();
+        let windowed = TenantSpec::new(AccessSpec::g(1), 1.0).with_window(WindowSpec {
+            mean_secs: 300.0,
+            std_secs: 10.0,
+            candidates: 3,
+        });
+        let mut gen = WorkloadGenerator::new(vec![windowed], &u, 9);
+        let qs = gen.generate_until(300.0, &u);
+        // Within ~one window only ~3 distinct datasets appear.
+        let mut seen = std::collections::HashSet::new();
+        for q in &qs {
+            seen.insert(q.template.clone());
+        }
+        assert!(seen.len() <= 4, "distinct datasets {}", seen.len());
+        assert!(qs.len() > 100);
+    }
+
+    #[test]
+    #[should_panic]
+    fn sales_tenant_needs_sales_universe() {
+        let u = Universe::tpch_only();
+        let _ = WorkloadGenerator::new(vec![sales_spec(1.0)], &u, 0);
+    }
+}

@@ -1,0 +1,12 @@
+//! Workload generation (§5.1, Figure 4): Poisson query arrivals, Zipf
+//! data access with optional hot/cold local windows, the TPC-H h₁ query
+//! mix, and trace record/replay.
+
+pub mod generator;
+pub mod spec;
+pub mod trace;
+pub mod universe;
+
+pub use generator::{TenantGenerator, WorkloadGenerator};
+pub use spec::{AccessSpec, TenantSpec, WindowSpec};
+pub use universe::Universe;

@@ -1,0 +1,101 @@
+//! Declarative workload specifications — the knobs Tables 8–14 vary.
+
+/// How a tenant picks what data each query touches.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AccessSpec {
+    /// h₁ of §5.3.1: queries drawn uniformly at random over the 15 TPC-H
+    /// templates.
+    TpchUniform,
+    /// g_k of §5.3.1: scan-and-aggregate queries over the 30 Sales
+    /// datasets drawn from a Zipf distribution. Distinct `skew_seed`s
+    /// produce distributions "skewed towards a different subset of
+    /// datasets" (the rank→dataset permutation is seeded).
+    SalesZipf { exponent: f64, skew_seed: u64 },
+}
+
+impl AccessSpec {
+    /// The canonical g₁..g₄ distributions used across the evaluation.
+    pub fn g(k: usize) -> AccessSpec {
+        // Exponent 0.8: a long-tailed but not head-dominated skew, per
+        // the (paper ref 31)/(paper ref 53) "small number of popular datasets plus a long
+        // tail" characterization.
+        AccessSpec::SalesZipf {
+            exponent: 0.8,
+            skew_seed: 1000 + k as u64,
+        }
+    }
+
+    /// The canonical h₁ distribution.
+    pub fn h1() -> AccessSpec {
+        AccessSpec::TpchUniform
+    }
+}
+
+/// Hot/cold local-window behaviour (§5.1, after (paper ref 31)/(paper ref 53)): every window
+/// (length ~ Normal) a small candidate subset is drawn from the global
+/// Zipf; within the window queries pick uniformly from the subset, so
+/// recently accessed data is re-accessed while the global distribution
+/// stays Zipf.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WindowSpec {
+    pub mean_secs: f64,
+    pub std_secs: f64,
+    /// Size of the per-window candidate subset.
+    pub candidates: usize,
+}
+
+impl Default for WindowSpec {
+    fn default() -> Self {
+        Self {
+            mean_secs: 120.0,
+            std_secs: 30.0,
+            candidates: 4,
+        }
+    }
+}
+
+/// Full per-tenant workload description.
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    pub access: AccessSpec,
+    /// Mean inter-arrival time in seconds (Poisson process ⇒ exponential
+    /// gaps with this mean). Table 11's "Poisson mean λ" is this value.
+    pub mean_interarrival: f64,
+    /// Optional hot/cold window; `None` samples the global distribution
+    /// at all times (the paper's default for most experiments).
+    pub window: Option<WindowSpec>,
+}
+
+impl TenantSpec {
+    pub fn new(access: AccessSpec, mean_interarrival: f64) -> Self {
+        Self {
+            access,
+            mean_interarrival,
+            window: None,
+        }
+    }
+
+    pub fn with_window(mut self, w: WindowSpec) -> Self {
+        self.window = Some(w);
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_distributions_distinct() {
+        assert_ne!(AccessSpec::g(1), AccessSpec::g(2));
+        assert_eq!(AccessSpec::g(1), AccessSpec::g(1));
+        assert_eq!(AccessSpec::h1(), AccessSpec::TpchUniform);
+    }
+
+    #[test]
+    fn builder() {
+        let t = TenantSpec::new(AccessSpec::g(1), 20.0).with_window(WindowSpec::default());
+        assert_eq!(t.mean_interarrival, 20.0);
+        assert!(t.window.is_some());
+    }
+}

@@ -1,0 +1,137 @@
+//! Workload trace record/replay: serialize a generated query stream to
+//! JSON so experiments can be re-run bit-identically (and so regression
+//! tests can pin a workload).
+
+use crate::domain::query::{Query, QueryId};
+use crate::domain::tenant::TenantId;
+use crate::domain::view::ViewId;
+use crate::util::json::Json;
+
+/// Serialize queries to a JSON array.
+pub fn to_json(queries: &[Query]) -> Json {
+    Json::Array(
+        queries
+            .iter()
+            .map(|q| {
+                Json::from_pairs(vec![
+                    ("id", Json::Number(q.id.0 as f64)),
+                    ("tenant", Json::Number(q.tenant.0 as f64)),
+                    ("arrival", Json::Number(q.arrival)),
+                    ("template", Json::String(q.template.clone())),
+                    (
+                        "views",
+                        Json::Array(
+                            q.required_views
+                                .iter()
+                                .map(|v| Json::Number(v.0 as f64))
+                                .collect(),
+                        ),
+                    ),
+                    ("bytes", Json::Number(q.bytes_read as f64)),
+                    ("compute", Json::Number(q.compute_cost)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Deserialize queries from the JSON produced by [`to_json`].
+pub fn from_json(json: &Json) -> Result<Vec<Query>, String> {
+    let arr = json.as_array().ok_or("trace must be a JSON array")?;
+    arr.iter()
+        .map(|item| {
+            let get_num = |key: &str| -> Result<f64, String> {
+                item.get(key)
+                    .and_then(|v| v.as_f64())
+                    .ok_or_else(|| format!("missing/invalid field '{key}'"))
+            };
+            let views = item
+                .get("views")
+                .and_then(|v| v.as_array())
+                .ok_or("missing views")?
+                .iter()
+                .map(|v| {
+                    v.as_u64()
+                        .map(|i| ViewId(i as usize))
+                        .ok_or_else(|| "bad view id".to_string())
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+            Ok(Query {
+                id: QueryId(get_num("id")? as u64),
+                tenant: TenantId(get_num("tenant")? as usize),
+                arrival: get_num("arrival")?,
+                template: item
+                    .get("template")
+                    .and_then(|v| v.as_str())
+                    .ok_or("missing template")?
+                    .to_string(),
+                required_views: views,
+                bytes_read: get_num("bytes")? as u64,
+                compute_cost: get_num("compute")?,
+            })
+        })
+        .collect()
+}
+
+/// Write a trace file.
+pub fn save(path: &str, queries: &[Query]) -> std::io::Result<()> {
+    std::fs::write(path, to_json(queries).to_string_compact())
+}
+
+/// Read a trace file.
+pub fn load(path: &str) -> Result<Vec<Query>, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+    let json = Json::parse(&text).map_err(|e| e.to_string())?;
+    from_json(&json)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::generator::WorkloadGenerator;
+    use crate::workload::spec::{AccessSpec, TenantSpec};
+    use crate::workload::universe::Universe;
+
+    #[test]
+    fn roundtrip() {
+        let u = Universe::mixed();
+        let specs = vec![
+            TenantSpec::new(AccessSpec::h1(), 10.0),
+            TenantSpec::new(AccessSpec::g(1), 10.0),
+        ];
+        let mut gen = WorkloadGenerator::new(specs, &u, 42);
+        let qs = gen.generate_until(300.0, &u);
+        assert!(!qs.is_empty());
+        let json = to_json(&qs);
+        let back = from_json(&json).unwrap();
+        assert_eq!(qs.len(), back.len());
+        for (a, b) in qs.iter().zip(&back) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tenant, b.tenant);
+            assert_eq!(a.template, b.template);
+            assert_eq!(a.required_views, b.required_views);
+            assert_eq!(a.bytes_read, b.bytes_read);
+            assert!((a.arrival - b.arrival).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let u = Universe::sales_only();
+        let mut gen =
+            WorkloadGenerator::new(vec![TenantSpec::new(AccessSpec::g(2), 5.0)], &u, 1);
+        let qs = gen.generate_until(100.0, &u);
+        let path = "/tmp/robus_trace_test.json";
+        save(path, &qs).unwrap();
+        let back = load(path).unwrap();
+        assert_eq!(qs.len(), back.len());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn malformed_trace_rejected() {
+        assert!(from_json(&Json::Number(3.0)).is_err());
+        let bad = Json::parse(r#"[{"id": 1}]"#).unwrap();
+        assert!(from_json(&bad).is_err());
+    }
+}

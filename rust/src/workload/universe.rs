@@ -1,0 +1,148 @@
+//! The data universe of a run: the union of the Sales and TPC-H catalogs
+//! with one shared view index space, so mixed workloads (§5.3.1, Table 8)
+//! can be described by a single candidate-view vector.
+
+use crate::domain::dataset::DatasetCatalog;
+use crate::domain::sales::SalesCatalog;
+use crate::domain::tpch::{TpchCatalog, TpchTemplate, TEMPLATES};
+use crate::domain::view::{ViewCatalog, ViewId};
+
+/// A resolved TPC-H template: required views in the universe's index
+/// space, total scan bytes, compute cost.
+#[derive(Debug, Clone)]
+pub struct ResolvedTemplate {
+    pub name: &'static str,
+    pub views: Vec<ViewId>,
+    pub bytes: u64,
+    pub compute: f64,
+}
+
+/// The combined catalogs.
+#[derive(Debug, Clone)]
+pub struct Universe {
+    pub datasets: DatasetCatalog,
+    pub views: ViewCatalog,
+    /// Projection view for Sales dataset k (index into `views`); empty if
+    /// the universe has no Sales data.
+    pub sales_views: Vec<ViewId>,
+    /// Resolved TPC-H templates; empty if the universe has no TPC-H data.
+    pub tpch_templates: Vec<ResolvedTemplate>,
+}
+
+impl Universe {
+    /// Sales catalog only (Tables 9/10 experiments).
+    pub fn sales_only() -> Self {
+        let sales = SalesCatalog::build();
+        Self {
+            sales_views: sales.view_of_dataset.clone(),
+            datasets: sales.datasets,
+            views: sales.views,
+            tpch_templates: Vec::new(),
+        }
+    }
+
+    /// TPC-H catalog only.
+    pub fn tpch_only() -> Self {
+        let tpch = TpchCatalog::build();
+        let templates = resolve_templates(&tpch, 0);
+        Self {
+            datasets: tpch.datasets,
+            views: tpch.views,
+            sales_views: Vec::new(),
+            tpch_templates: templates,
+        }
+    }
+
+    /// Mixed universe: TPC-H tables first, then the 30 Sales datasets
+    /// (Table 8 experiments).
+    pub fn mixed() -> Self {
+        let tpch = TpchCatalog::build();
+        let sales = SalesCatalog::build();
+        let mut datasets = DatasetCatalog::new();
+        let mut views = ViewCatalog::new();
+
+        // TPC-H first (view ids 0..8).
+        for d in tpch.datasets.iter() {
+            let nd = datasets.add(&d.name, d.disk_bytes);
+            let v = tpch.views.for_dataset(d.id).unwrap();
+            views.add(&v.name, nd, v.kind, v.cached_bytes, v.scan_bytes);
+        }
+        let templates = resolve_templates(&tpch, 0);
+
+        // Sales second.
+        let mut sales_views = Vec::new();
+        for d in sales.datasets.iter() {
+            let nd = datasets.add(&d.name, d.disk_bytes);
+            let v = sales.views.for_dataset(d.id).unwrap();
+            let nv = views.add(&v.name, nd, v.kind, v.cached_bytes, v.scan_bytes);
+            sales_views.push(nv);
+        }
+
+        Self {
+            datasets,
+            views,
+            sales_views,
+            tpch_templates: templates,
+        }
+    }
+
+    pub fn n_views(&self) -> usize {
+        self.views.len()
+    }
+}
+
+fn resolve_templates(tpch: &TpchCatalog, offset: usize) -> Vec<ResolvedTemplate> {
+    TEMPLATES
+        .iter()
+        .map(|t: &TpchTemplate| {
+            let (views, bytes, compute) = tpch.template_footprint(t);
+            ResolvedTemplate {
+                name: t.name,
+                views: views.into_iter().map(|v| ViewId(v.0 + offset)).collect(),
+                bytes,
+                compute,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sales_only_shape() {
+        let u = Universe::sales_only();
+        assert_eq!(u.n_views(), 30);
+        assert_eq!(u.sales_views.len(), 30);
+        assert!(u.tpch_templates.is_empty());
+    }
+
+    #[test]
+    fn mixed_shape_and_offsets() {
+        let u = Universe::mixed();
+        assert_eq!(u.n_views(), 38);
+        assert_eq!(u.tpch_templates.len(), 15);
+        // Sales views come after the 8 TPC-H views.
+        assert!(u.sales_views.iter().all(|v| v.0 >= 8));
+        // Template views stay in the TPC-H range.
+        for t in &u.tpch_templates {
+            assert!(t.views.iter().all(|v| v.0 < 8), "{:?}", t);
+        }
+        // lineitem view resolves and is ~3.7 GB.
+        let li = u.views.by_name("lineitem").unwrap();
+        assert!(li.cached_bytes > 3 * (1 << 30));
+    }
+
+    #[test]
+    fn view_dataset_consistency() {
+        let u = Universe::mixed();
+        for v in u.views.iter() {
+            assert_eq!(u.datasets.get(v.dataset).name.as_str(), {
+                // Projection names are "<dataset>_proj".
+                let n = v.name.strip_suffix("_proj").unwrap_or(&v.name);
+                n
+            });
+        }
+    }
+}

@@ -1,0 +1,91 @@
+//! Cross-validation of the compiled (JAX/Pallas → HLO → PJRT) solvers
+//! against the native Rust implementations on randomized batches — the
+//! end-to-end guarantee that the three-layer stack computes the same
+//! allocations as the reference algorithms.
+//!
+//! Requires `artifacts/` (make artifacts); the registry open fails with
+//! a clear message otherwise.
+
+use robus::alloc::fastpf::FastPf;
+use robus::alloc::{Policy, PolicyKind};
+use robus::experiments::analysis::random_sales_batch;
+use robus::fairness::properties::sharing_incentive_violations;
+use robus::runtime::solvers::{AcceleratedFastPf, AcceleratedSimpleMmf, CompiledSolvers};
+use robus::util::rng::Pcg64;
+
+fn solvers() -> CompiledSolvers {
+    CompiledSolvers::open_default().expect("run `make artifacts` first")
+}
+
+#[test]
+fn compiled_pf_tracks_native_on_random_batches() {
+    let s = solvers();
+    let accel = AcceleratedFastPf(s);
+    let native = FastPf::default();
+    let mut rng = Pcg64::new(31);
+    for case in 0..10 {
+        let batch = random_sales_batch(2 + case % 4, &mut rng);
+        if batch.active_tenants().is_empty() {
+            continue;
+        }
+        let va = accel
+            .allocate(&batch, &mut Pcg64::new(case as u64))
+            .expected_scaled_utilities(&batch);
+        let vn = native
+            .allocate(&batch, &mut Pcg64::new(case as u64))
+            .expected_scaled_utilities(&batch);
+        for (i, (a, n)) in va.iter().zip(&vn).enumerate() {
+            assert!(
+                (a - n).abs() < 0.05,
+                "case {case} tenant {i}: compiled {a} vs native {n}"
+            );
+        }
+    }
+}
+
+#[test]
+fn compiled_solvers_are_sharing_incentive() {
+    let s = solvers();
+    let mut rng = Pcg64::new(32);
+    for case in 0..6 {
+        let batch = random_sales_batch(3, &mut rng);
+        if batch.active_tenants().len() < 2 {
+            continue;
+        }
+        for policy in [
+            &AcceleratedFastPf(s.clone()) as &dyn Policy,
+            &AcceleratedSimpleMmf(s.clone()) as &dyn Policy,
+        ] {
+            let alloc = policy.allocate(&batch, &mut Pcg64::new(case));
+            let viol = sharing_incentive_violations(&alloc, &batch, 0.05);
+            assert!(
+                viol.is_empty(),
+                "{} case {case}: SI violations {viol:?}",
+                policy.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn compiled_pf_beats_static_minimum() {
+    let s = solvers();
+    let accel = AcceleratedFastPf(s);
+    let static_p = PolicyKind::Static.build();
+    let mut rng = Pcg64::new(33);
+    let batch = random_sales_batch(4, &mut rng);
+    let active = batch.active_tenants();
+    let min_of = |v: &[f64]| active.iter().map(|&i| v[i]).fold(f64::INFINITY, f64::min);
+    let v_accel = accel
+        .allocate(&batch, &mut Pcg64::new(1))
+        .expected_scaled_utilities(&batch);
+    let v_static = static_p
+        .allocate(&batch, &mut Pcg64::new(1))
+        .expected_scaled_utilities(&batch);
+    assert!(
+        min_of(&v_accel) >= min_of(&v_static) - 0.05,
+        "compiled PF min {} < STATIC min {}",
+        min_of(&v_accel),
+        min_of(&v_static)
+    );
+}

@@ -1,0 +1,147 @@
+//! Integration tests over the full pipeline: workload generation →
+//! batched coordinator → policy → cache → simulated execution →
+//! metrics. These check cross-module invariants no unit test sees.
+
+use robus::alloc::PolicyKind;
+use robus::coordinator::loop_::{Coordinator, CoordinatorConfig, RunResult};
+use robus::domain::tenant::TenantSet;
+use robus::sim::cluster::ClusterConfig;
+use robus::sim::engine::SimEngine;
+use robus::workload::generator::WorkloadGenerator;
+use robus::workload::spec::{AccessSpec, TenantSpec, WindowSpec};
+use robus::workload::universe::Universe;
+
+fn run(kind: PolicyKind, universe: &Universe, specs: Vec<TenantSpec>, batches: usize, seed: u64) -> RunResult {
+    let tenants = TenantSet::equal(specs.len());
+    let engine = SimEngine::new(ClusterConfig::default());
+    let config = CoordinatorConfig {
+        batch_secs: 40.0,
+        n_batches: batches,
+        stateful_gamma: None,
+        seed,
+    };
+    let coord = Coordinator::new(universe, tenants, engine, config);
+    let mut gen = WorkloadGenerator::new(specs, universe, seed);
+    let policy = kind.build();
+    coord.run(&mut gen, policy.as_ref())
+}
+
+fn sales_specs(n: usize) -> Vec<TenantSpec> {
+    (0..n)
+        .map(|i| {
+            TenantSpec::new(AccessSpec::g(1 + i % 4), 15.0)
+                .with_window(WindowSpec::default())
+        })
+        .collect()
+}
+
+/// Every generated query appears exactly once in the outcomes, with
+/// causally consistent timestamps.
+#[test]
+fn query_conservation_and_causality() {
+    let universe = Universe::sales_only();
+    for kind in [PolicyKind::Static, PolicyKind::FastPf, PolicyKind::Optp] {
+        let r = run(kind, &universe, sales_specs(3), 8, 21);
+        let mut ids: Vec<u64> = r.outcomes.iter().map(|o| o.id.0).collect();
+        let n = ids.len();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), n, "{}: duplicate query outcomes", kind.name());
+        let batch_total: usize = r.batches.iter().map(|b| b.n_queries).sum();
+        assert_eq!(batch_total, n, "{}: lost queries", kind.name());
+        for o in &r.outcomes {
+            assert!(o.start >= o.arrival - 1e-9, "started before arrival");
+            assert!(o.finish >= o.start, "finished before start");
+        }
+        // Batches execute in order; execution starts after window close.
+        for b in &r.batches {
+            assert!(b.exec_start >= b.window_end - 1e-9);
+            assert!(b.exec_end >= b.exec_start);
+        }
+        for w in r.batches.windows(2) {
+            assert!(w[1].exec_start >= w[0].exec_end - 1e-9);
+        }
+    }
+}
+
+/// The cache never exceeds its budget in any batch, under any policy.
+#[test]
+fn cache_budget_never_exceeded() {
+    let universe = Universe::mixed();
+    let budget = ClusterConfig::default().cache_budget;
+    let sizes: Vec<u64> = universe.views.iter().map(|v| v.cached_bytes).collect();
+    let specs = vec![
+        TenantSpec::new(AccessSpec::h1(), 15.0),
+        TenantSpec::new(AccessSpec::g(1), 15.0),
+    ];
+    for kind in [PolicyKind::Static, PolicyKind::Mmf, PolicyKind::FastPf, PolicyKind::Optp] {
+        let r = run(kind, &universe, specs.clone(), 6, 3);
+        for b in &r.batches {
+            let used: u64 = b
+                .config
+                .iter()
+                .zip(&sizes)
+                .filter(|(&c, _)| c)
+                .map(|(_, &s)| s)
+                .sum();
+            assert!(
+                used <= budget,
+                "{}: batch {} used {used} > budget {budget}",
+                kind.name(),
+                b.index
+            );
+        }
+    }
+}
+
+/// Identical seeds produce bit-identical runs (full determinism).
+#[test]
+fn end_to_end_determinism() {
+    let universe = Universe::sales_only();
+    let a = run(PolicyKind::FastPf, &universe, sales_specs(2), 6, 77);
+    let b = run(PolicyKind::FastPf, &universe, sales_specs(2), 6, 77);
+    assert_eq!(a.outcomes.len(), b.outcomes.len());
+    for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.finish, y.finish);
+        assert_eq!(x.from_cache, y.from_cache);
+    }
+    for (x, y) in a.batches.iter().zip(&b.batches) {
+        assert_eq!(x.config, y.config);
+    }
+}
+
+/// A tenant that submits nothing must not break any policy.
+#[test]
+fn idle_tenant_is_harmless() {
+    let universe = Universe::sales_only();
+    // Tenant 1 has a huge inter-arrival time: often empty batches.
+    let specs = vec![
+        TenantSpec::new(AccessSpec::g(1), 10.0),
+        TenantSpec::new(AccessSpec::g(2), 100_000.0),
+    ];
+    for kind in [PolicyKind::Mmf, PolicyKind::FastPf, PolicyKind::Rsd] {
+        let r = run(kind, &universe, specs.clone(), 5, 13);
+        assert!(!r.outcomes.is_empty());
+    }
+}
+
+/// Zero-query workloads produce clean empty runs.
+#[test]
+fn empty_workload_run() {
+    let universe = Universe::sales_only();
+    let specs = vec![TenantSpec::new(AccessSpec::g(1), 1e9)];
+    let r = run(PolicyKind::FastPf, &universe, specs, 4, 1);
+    assert!(r.outcomes.is_empty());
+    assert_eq!(r.batches.len(), 4);
+    assert_eq!(r.hit_ratio(), 0.0);
+}
+
+/// Throughput accounting matches raw outcome counts.
+#[test]
+fn throughput_formula() {
+    let universe = Universe::sales_only();
+    let r = run(PolicyKind::Optp, &universe, sales_specs(2), 6, 5);
+    let expect = r.outcomes.len() as f64 / (r.end_time / 60.0);
+    assert!((r.throughput_per_min() - expect).abs() < 1e-9);
+}

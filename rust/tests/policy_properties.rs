@@ -1,0 +1,165 @@
+//! Property-based integration tests: fairness invariants of the
+//! policies over randomized batch problems (beyond the canonical
+//! Tables 2-5 instances the unit tests pin down).
+
+use robus::alloc::config_space::ConfigSpace;
+use robus::alloc::{Policy, PolicyKind};
+use robus::experiments::analysis::random_sales_batch;
+use robus::fairness::properties::{
+    find_blocking_coalition, find_pareto_improvement, sharing_incentive_violations,
+};
+use robus::util::proptest::{check, no_shrink};
+use robus::util::rng::Pcg64;
+
+/// All policies produce normalized, budget-feasible allocations on
+/// random Sales batches.
+#[test]
+fn allocations_normalized_and_feasible() {
+    check(
+        25,
+        |rng| random_sales_batch(2 + rng.index(5), rng),
+        no_shrink,
+        |batch| {
+            for kind in [
+                PolicyKind::Static,
+                PolicyKind::Rsd,
+                PolicyKind::Optp,
+                PolicyKind::Mmf,
+                PolicyKind::FastPf,
+            ] {
+                let policy = kind.build();
+                let alloc = policy.allocate(batch, &mut Pcg64::new(1));
+                if (alloc.total_probability() - 1.0).abs() > 1e-6 {
+                    return Err(format!(
+                        "{}: ||x|| = {}",
+                        kind.name(),
+                        alloc.total_probability()
+                    ));
+                }
+                for c in &alloc.configs {
+                    if batch.size_of(c) > batch.budget + 1e-6 {
+                        return Err(format!("{}: config over budget", kind.name()));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// RSD, MMF and FASTPF are Sharing Incentive on random instances
+/// (Table 6 rows 1/3/4).
+#[test]
+fn si_policies_meet_entitlements() {
+    check(
+        20,
+        |rng| random_sales_batch(2 + rng.index(4), rng),
+        no_shrink,
+        |batch| {
+            for kind in [PolicyKind::Rsd, PolicyKind::Mmf, PolicyKind::FastPf] {
+                let policy = kind.build();
+                let alloc = policy.allocate(batch, &mut Pcg64::new(2));
+                let viol = sharing_incentive_violations(&alloc, batch, 5e-3);
+                if !viol.is_empty() {
+                    return Err(format!("{}: SI violations {viol:?}", kind.name()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// FASTPF allocations admit no Pareto improvement and no blocking
+/// coalition within a rich pruned space (the randomized core,
+/// Theorem 2) on random instances.
+#[test]
+fn fastpf_core_on_random_instances() {
+    check(
+        12,
+        |rng| random_sales_batch(2 + rng.index(3), rng),
+        no_shrink,
+        |batch| {
+            let policy = PolicyKind::FastPf.build();
+            let alloc = policy.allocate(batch, &mut Pcg64::new(3));
+            let space = ConfigSpace::pruned(batch, 80, &mut Pcg64::new(4));
+            if let Some(_imp) = find_pareto_improvement(&alloc, batch, &space, 5e-3) {
+                return Err("PF allocation Pareto-dominated".into());
+            }
+            if let Some((coalition, _)) =
+                find_blocking_coalition(&alloc, batch, &space, 5e-3)
+            {
+                return Err(format!("PF blocked by coalition {coalition:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// OPTP weakly dominates every policy on total raw utility (it is the
+/// utilitarian optimum) — a cross-policy sanity relation.
+#[test]
+fn optp_maximizes_total_utility() {
+    check(
+        20,
+        |rng| random_sales_batch(2 + rng.index(4), rng),
+        no_shrink,
+        |batch| {
+            let optp = PolicyKind::Optp.build();
+            let u_opt: f64 = optp
+                .allocate(batch, &mut Pcg64::new(5))
+                .expected_utilities(batch)
+                .iter()
+                .sum();
+            for kind in [PolicyKind::Static, PolicyKind::Mmf, PolicyKind::FastPf] {
+                let policy = kind.build();
+                let u: f64 = policy
+                    .allocate(batch, &mut Pcg64::new(5))
+                    .expected_utilities(batch)
+                    .iter()
+                    .sum();
+                if u > u_opt + 1e-6 {
+                    return Err(format!(
+                        "{} total utility {u} > OPTP {u_opt}",
+                        kind.name()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// MMF maximizes the minimum scaled utility within its own config
+/// space: no other tested policy achieves a strictly higher minimum.
+#[test]
+fn mmf_has_highest_minimum_rate() {
+    check(
+        15,
+        |rng| random_sales_batch(2 + rng.index(3), rng),
+        no_shrink,
+        |batch| {
+            let active = batch.active_tenants();
+            if active.len() < 2 {
+                return Ok(());
+            }
+            let min_rate = |kind: PolicyKind| -> f64 {
+                let policy = kind.build();
+                let v = policy
+                    .allocate(batch, &mut Pcg64::new(6))
+                    .expected_scaled_utilities(batch);
+                active.iter().map(|&i| v[i]).fold(f64::INFINITY, f64::min)
+            };
+            let mmf = min_rate(PolicyKind::Mmf);
+            for kind in [PolicyKind::Static, PolicyKind::Optp] {
+                let other = min_rate(kind);
+                if other > mmf + 0.02 {
+                    return Err(format!(
+                        "{} min rate {other} > MMF {mmf}",
+                        kind.name()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,119 @@
+//! Weighted-tenant end-to-end behaviour (§3.4): weights scale the SI
+//! entitlement, the PF objective, the fair scheduler's slot shares, and
+//! the Equation-5 fairness normalization.
+
+use robus::alloc::{Policy, PolicyKind};
+use robus::coordinator::loop_::{Coordinator, CoordinatorConfig};
+use robus::coordinator::metrics::fairness_index;
+use robus::domain::tenant::TenantSet;
+use robus::sim::cluster::ClusterConfig;
+use robus::sim::engine::SimEngine;
+use robus::workload::generator::WorkloadGenerator;
+use robus::workload::spec::{AccessSpec, TenantSpec, WindowSpec};
+use robus::workload::universe::Universe;
+
+fn weighted_run(kind: PolicyKind, weights: &[f64], seed: u64) -> robus::coordinator::loop_::RunResult {
+    let universe = Universe::sales_only();
+    let mut tenants = TenantSet::new();
+    for (i, &w) in weights.iter().enumerate() {
+        tenants.add(&format!("t{i}"), w);
+    }
+    let engine = SimEngine::new(ClusterConfig::default());
+    let config = CoordinatorConfig {
+        batch_secs: 40.0,
+        n_batches: 10,
+        stateful_gamma: None,
+        seed,
+    };
+    let coord = Coordinator::new(&universe, tenants, engine, config);
+    let specs: Vec<TenantSpec> = (0..weights.len())
+        .map(|i| {
+            TenantSpec::new(AccessSpec::g(1 + i), 15.0).with_window(WindowSpec {
+                mean_secs: 120.0,
+                std_secs: 30.0,
+                candidates: 8,
+            })
+        })
+        .collect();
+    let mut gen = WorkloadGenerator::new(specs, &universe, seed);
+    let policy = kind.build();
+    coord.run(&mut gen, policy.as_ref())
+}
+
+/// Weighted runs complete and produce weight-aware fairness indices in
+/// [0, 1] for every policy.
+#[test]
+fn weighted_runs_complete_for_all_policies() {
+    let weights = [1.0, 1.0, 1.5];
+    let baseline = weighted_run(PolicyKind::Static, &weights, 7);
+    for kind in [PolicyKind::Mmf, PolicyKind::FastPf, PolicyKind::Optp] {
+        let run = weighted_run(kind, &weights, 7);
+        assert_eq!(run.weights, weights.to_vec());
+        let j = fairness_index(&run, &baseline);
+        assert!(
+            (0.0..=1.0 + 1e-9).contains(&j),
+            "{}: fairness {j}",
+            kind.name()
+        );
+        assert!(!run.outcomes.is_empty());
+    }
+}
+
+/// In the per-batch allocation, a heavier tenant's SI entitlement
+/// (λ_i/Σλ) is respected by the weighted-fair policies.
+#[test]
+fn weighted_si_entitlements() {
+    use robus::domain::dataset::DatasetCatalog;
+    use robus::domain::query::{Query, QueryId};
+    use robus::domain::tenant::TenantId;
+    use robus::domain::utility::BatchUtilities;
+    use robus::domain::view::{ViewCatalog, ViewId, ViewKind};
+    use robus::fairness::properties::sharing_incentive_violations;
+    use robus::util::rng::Pcg64;
+
+    // Two tenants, disjoint unit views, cache 1; weights 3:1.
+    let mut ds = DatasetCatalog::new();
+    let mut vc = ViewCatalog::new();
+    for v in 0..2 {
+        let d = ds.add(&format!("d{v}"), 100);
+        vc.add(&format!("v{v}"), d, ViewKind::BaseTable, 100, 100);
+    }
+    let mut ts = TenantSet::new();
+    let heavy = ts.add("heavy", 3.0);
+    let light = ts.add("light", 1.0);
+    let queries = vec![
+        Query {
+            id: QueryId(1),
+            tenant: heavy,
+            arrival: 0.0,
+            template: "h".into(),
+            required_views: vec![ViewId(0)],
+            bytes_read: 10,
+            compute_cost: 0.0,
+        },
+        Query {
+            id: QueryId(2),
+            tenant: light,
+            arrival: 0.0,
+            template: "l".into(),
+            required_views: vec![ViewId(1)],
+            bytes_read: 10,
+            compute_cost: 0.0,
+        },
+    ];
+    let batch = BatchUtilities::build(&ts, &vc, 100.0, &queries, None);
+    for kind in [PolicyKind::Mmf, PolicyKind::FastPf] {
+        let policy = kind.build();
+        let alloc = policy.allocate(&batch, &mut Pcg64::new(1));
+        let viol = sharing_incentive_violations(&alloc, &batch, 5e-3);
+        assert!(viol.is_empty(), "{}: {viol:?}", kind.name());
+        let v = alloc.expected_scaled_utilities(&batch);
+        // Heavy tenant's view gets ~3/4 of the probability.
+        assert!(
+            (v[0] - 0.75).abs() < 0.02,
+            "{}: heavy V = {} (expect ≈0.75)",
+            kind.name(),
+            v[0]
+        );
+    }
+}
