@@ -68,9 +68,9 @@ fn show(policy: &dyn Policy, batch: &BatchUtilities, names: &[&str]) {
     for (config, p) in alloc.configs.iter().zip(&alloc.probs) {
         let views: String = ["R", "S", "P"]
             .iter()
-            .zip(config)
-            .filter(|(_, &s)| s)
-            .map(|(n, _)| *n)
+            .enumerate()
+            .filter(|&(i, _)| config.get(i))
+            .map(|(_, n)| *n)
             .collect();
         print!(
             " P[{{{}}}]={:.2}",

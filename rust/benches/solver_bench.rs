@@ -4,7 +4,10 @@
 //! "of the order of tens of milliseconds".
 //!
 //! Uses the in-repo criterion-style harness (util::bench); the offline
-//! registry has no criterion crate.
+//! registry has no criterion crate. Results are also written to
+//! `BENCH_solver.json` (ns/iter for configuration-space pruning, the MW
+//! solves, and a full coordinator batch) so successive PRs can track the
+//! performance trajectory mechanically.
 
 use robus::alloc::config_space::ConfigSpace;
 use robus::alloc::fastpf::FastPf;
@@ -13,11 +16,18 @@ use robus::alloc::mmf_mw::SimpleMmfMw;
 use robus::alloc::pf_mw::PfMw;
 use robus::alloc::rsd::RandomSerialDictatorship;
 use robus::alloc::{Policy, PolicyKind};
+use robus::coordinator::loop_::{Coordinator, CoordinatorConfig};
+use robus::domain::tenant::TenantSet;
 use robus::experiments::analysis::random_sales_batch;
 use robus::runtime::solvers::{AcceleratedFastPf, CompiledSolvers};
+use robus::sim::cluster::ClusterConfig;
+use robus::sim::engine::SimEngine;
 use robus::solver::gradient::GradientConfig;
 use robus::util::bench::BenchSuite;
 use robus::util::rng::Pcg64;
+use robus::workload::generator::WorkloadGenerator;
+use robus::workload::spec::{AccessSpec, TenantSpec, WindowSpec};
+use robus::workload::universe::Universe;
 
 fn main() {
     let mut suite = BenchSuite::new("solver microbenchmarks");
@@ -37,6 +47,18 @@ fn main() {
             .welfare_problem(&[1.0, 0.5, 0.25, 0.125])
             .solve_greedy()
             .value
+    });
+    // Template path: values rewritten in place, skeleton reused.
+    let mut template = batch4.welfare_template();
+    suite.bench("welfare_template_solve_n4", || {
+        template.solve(&[1.0, 0.5, 0.25, 0.125]).value
+    });
+
+    // Mask-based utility evaluation (BatchIndex subset tests).
+    let all_views = vec![true; batch4.n_views()];
+    let full_mask = robus::alloc::ConfigMask::from_bools(&all_views);
+    suite.bench("scaled_utilities_mask_n4", || {
+        batch4.scaled_utilities(&full_mask).len()
     });
 
     // Configuration pruning (50 random weight vectors, §4.3).
@@ -94,6 +116,32 @@ fn main() {
     };
     suite.bench("pf_mw_feasibility_search_n4", || pf_mw.solve(&batch4).len());
 
+    // One full coordinator batch: workload generation → batch-problem
+    // build → FASTPF solve → cache update → simulated execution.
+    let universe = Universe::sales_only();
+    let tenants = TenantSet::equal(4);
+    let engine = SimEngine::new(ClusterConfig::default());
+    let coord_cfg = CoordinatorConfig {
+        batch_secs: 40.0,
+        n_batches: 1,
+        stateful_gamma: None,
+        seed: 7,
+    };
+    let coordinator = Coordinator::new(&universe, tenants, engine, coord_cfg);
+    let window = WindowSpec {
+        mean_secs: 120.0,
+        std_secs: 30.0,
+        candidates: 8,
+    };
+    let specs: Vec<TenantSpec> = (1..=4)
+        .map(|g| TenantSpec::new(AccessSpec::g(g), 20.0).with_window(window.clone()))
+        .collect();
+    let fastpf = PolicyKind::FastPf.build();
+    suite.bench("coordinator_full_batch_fastpf_n4", || {
+        let mut gen = WorkloadGenerator::new(specs.clone(), &universe, 7);
+        coordinator.run(&mut gen, fastpf.as_ref()).outcomes.len()
+    });
+
     // Compiled (PJRT) FASTPF — one execute per batch, including padding
     // and marshalling. Executable cache warmed outside the timed region.
     match CompiledSolvers::open_default() {
@@ -110,4 +158,8 @@ fn main() {
     }
 
     println!("\n{}", suite.markdown());
+    match suite.write_json("BENCH_solver.json") {
+        Ok(()) => println!("(wrote BENCH_solver.json)"),
+        Err(e) => eprintln!("warn: could not write BENCH_solver.json: {e}"),
+    }
 }

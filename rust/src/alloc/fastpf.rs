@@ -12,7 +12,7 @@
 //! (Theorem 2), hence also SI and PE.
 
 use crate::alloc::config_space::ConfigSpace;
-use crate::alloc::{Allocation, Policy};
+use crate::alloc::{Allocation, ConfigMask, Policy};
 use crate::domain::utility::BatchUtilities;
 use crate::solver::gradient::{maximize, GradientConfig, Objective};
 use crate::util::rng::Pcg64;
@@ -81,8 +81,8 @@ impl Objective for PfObjective<'_> {
         for &(i, w) in &self.tenants {
             let vi = self.space.scaled_utility(i, x).max(V_FLOOR);
             let f = w / vi;
-            for (s, o) in out.iter_mut().enumerate() {
-                *o += f * self.space.v[s][i];
+            for (o, row) in out.iter_mut().zip(self.space.rows()) {
+                *o += f * row[i];
             }
         }
     }
@@ -123,11 +123,11 @@ impl Policy for FastPf {
         let space = ConfigSpace::pruned(batch, self.prune_vectors, rng);
         let x = Self::solve_over(&space, batch, &self.gradient);
         if x.iter().sum::<f64>() <= 0.0 {
-            return Allocation::deterministic(vec![false; batch.n_views()]);
+            return Allocation::deterministic(ConfigMask::empty(batch.n_views()));
         }
         Allocation::from_weighted(
             space
-                .configs
+                .masks()
                 .iter()
                 .cloned()
                 .zip(x.iter().copied())

@@ -9,9 +9,9 @@
 //! cached while the analysts hammer `R`). Included as a baseline for
 //! the fairness audit and ablations.
 
-use std::cell::RefCell;
+use std::sync::Mutex;
 
-use crate::alloc::{Allocation, Policy};
+use crate::alloc::{Allocation, ConfigMask, Policy};
 use crate::domain::utility::BatchUtilities;
 use crate::util::rng::Pcg64;
 
@@ -23,10 +23,13 @@ struct LruState {
     last_used: Vec<u64>,
 }
 
-/// Batched LRU view selection.
+/// Batched LRU view selection. Recency state lives behind a `Mutex`
+/// (rather than a `RefCell`) so the policy is `Sync` and can run inside
+/// the parallel experiment grid; each run owns its policy instance, so
+/// the lock is never contended.
 #[derive(Debug, Default)]
 pub struct LeastRecentlyUsed {
-    state: RefCell<LruState>,
+    state: Mutex<LruState>,
 }
 
 impl Policy for LeastRecentlyUsed {
@@ -36,7 +39,7 @@ impl Policy for LeastRecentlyUsed {
 
     fn allocate(&self, batch: &BatchUtilities, _rng: &mut Pcg64) -> Allocation {
         let nv = batch.n_views();
-        let mut state = self.state.borrow_mut();
+        let mut state = self.state.lock().unwrap();
         if state.last_used.len() != nv {
             // Fresh run (or a different universe): reset.
             state.last_used = vec![0; nv];
@@ -71,12 +74,12 @@ impl Policy for LeastRecentlyUsed {
                 )
         });
 
-        let mut selected = vec![false; nv];
+        let mut selected = ConfigMask::empty(nv);
         let mut used = 0.0;
         for v in order {
             let sz = batch.view_sizes[v];
             if used + sz <= batch.budget + 1e-9 {
-                selected[v] = true;
+                selected.insert(v);
                 used += sz;
             }
         }
@@ -97,7 +100,7 @@ mod tests {
         let b = matrix_instance(&[&[2, 0], &[2, 0], &[0, 1]], 1.0);
         let lru = LeastRecentlyUsed::default();
         let a = lru.allocate(&b, &mut Pcg64::new(0));
-        assert_eq!(a.configs[0], vec![true, false]);
+        assert_eq!(a.configs[0], ConfigMask::from_bools(&[true, false]));
         let v = a.expected_scaled_utilities(&b);
         assert_eq!(v[2], 0.0, "VP starved, as in Scenario 2");
     }
@@ -108,11 +111,11 @@ mod tests {
         // Batch 1: only view 0 demanded.
         let b1 = matrix_instance(&[&[5, 0]], 1.0);
         let a1 = lru.allocate(&b1, &mut Pcg64::new(0));
-        assert_eq!(a1.configs[0], vec![true, false]);
+        assert_eq!(a1.configs[0], ConfigMask::from_bools(&[true, false]));
         // Batch 2: only view 1 demanded → it evicts view 0.
         let b2 = matrix_instance(&[&[0, 1]], 1.0);
         let a2 = lru.allocate(&b2, &mut Pcg64::new(0));
-        assert_eq!(a2.configs[0], vec![false, true]);
+        assert_eq!(a2.configs[0], ConfigMask::from_bools(&[false, true]));
     }
 
     #[test]
@@ -121,7 +124,7 @@ mod tests {
         let lru = LeastRecentlyUsed::default();
         let a = lru.allocate(&b, &mut Pcg64::new(0));
         assert!(b.size_of(&a.configs[0]) <= b.budget + 1e-9);
-        assert_eq!(a.configs[0].iter().filter(|&&s| s).count(), 2);
+        assert_eq!(a.configs[0].count_ones(), 2);
     }
 
     #[test]

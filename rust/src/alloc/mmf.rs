@@ -9,7 +9,7 @@
 //! for equal weights.
 
 use crate::alloc::config_space::ConfigSpace;
-use crate::alloc::{Allocation, Policy};
+use crate::alloc::{Allocation, ConfigMask, Policy};
 use crate::domain::utility::BatchUtilities;
 use crate::solver::simplex::{Cmp, Lp, LpResult};
 use crate::util::rng::Pcg64;
@@ -51,7 +51,7 @@ impl MaxMinFair {
 
         // Effective rate of tenant i in the LP: Σ_S x_S V_i(S) / w̃_i.
         let rate_row = |i: usize| -> Vec<f64> {
-            let mut row: Vec<f64> = (0..m).map(|s| space.v[s][i] / wnorm[i]).collect();
+            let mut row: Vec<f64> = space.rows().map(|r| r[i] / wnorm[i]).collect();
             row.push(0.0); // λ column, filled by caller
             row
         };
@@ -147,11 +147,11 @@ impl Policy for MaxMinFair {
         let space = ConfigSpace::pruned(batch, self.prune_vectors, rng);
         let (x, _) = Self::solve_over(&space, batch);
         if x.iter().sum::<f64>() <= 0.0 {
-            return Allocation::deterministic(vec![false; batch.n_views()]);
+            return Allocation::deterministic(ConfigMask::empty(batch.n_views()));
         }
         Allocation::from_weighted(
             space
-                .configs
+                .masks()
                 .iter()
                 .cloned()
                 .zip(x.iter().copied())

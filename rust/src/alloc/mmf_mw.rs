@@ -10,8 +10,12 @@
 //! This is both a usable policy (the max-min step of lexicographic MMF)
 //! and the provably-good reference that the §4.3 pruning heuristic is
 //! validated against (the 5/25/50-vector error sweep).
+//!
+//! The oracle instance is built once as a [`WelfareTemplate`] and only
+//! its values are rewritten per iteration — the skeleton (view sets,
+//! sizes, budget) never changes across the T solves.
 
-use crate::alloc::{Allocation, Policy};
+use crate::alloc::{Allocation, ConfigMask, Policy};
 use crate::domain::utility::BatchUtilities;
 use crate::util::rng::Pcg64;
 
@@ -42,25 +46,27 @@ impl SimpleMmfMw {
 
     /// Run Algorithm 2; returns (configs, probabilities) before
     /// normalization into an [`Allocation`].
-    pub fn solve(&self, batch: &BatchUtilities) -> Vec<(Vec<bool>, f64)> {
+    pub fn solve(&self, batch: &BatchUtilities) -> Vec<(ConfigMask, f64)> {
         let active = batch.active_tenants();
         let n = active.len();
         if n == 0 {
-            return vec![(vec![false; batch.n_views()], 1.0)];
+            return vec![(ConfigMask::empty(batch.n_views()), 1.0)];
         }
         let t_iters = self.iterations(n);
+        let mut welfare = batch.welfare_template();
         // Dual weights live on active tenants only.
         let mut w = vec![1.0 / n as f64; n];
-        let mut pairs: Vec<(Vec<bool>, f64)> = Vec::new();
+        let mut full_w = vec![0.0; batch.n_tenants];
+        let mut pairs: Vec<(ConfigMask, f64)> = Vec::new();
         for _k in 0..t_iters {
             // WELFARE(w): lift the active-tenant weights into a full
             // weight vector.
-            let mut full_w = vec![0.0; batch.n_tenants];
             for (j, &i) in active.iter().enumerate() {
                 full_w[i] = w[j];
             }
-            let sol = batch.welfare_problem(&full_w).solve_exact();
-            let v = batch.scaled_utilities(&sol.selected);
+            let sol = welfare.solve(&full_w);
+            let mask = ConfigMask::from_bools(&sol.selected);
+            let v = batch.scaled_utilities(&mask);
             // Multiplicative update: tenants satisfied by S are
             // down-weighted (Algorithm 2 line 7).
             for (j, &i) in active.iter().enumerate() {
@@ -70,7 +76,7 @@ impl SimpleMmfMw {
             for wj in w.iter_mut() {
                 *wj /= norm;
             }
-            pairs.push((sol.selected, 1.0 / t_iters as f64));
+            pairs.push((mask, 1.0 / t_iters as f64));
         }
         pairs
     }

@@ -5,6 +5,10 @@
 //! (Definition 2). The coordinator samples one configuration per batch;
 //! fairness holds in expectation per batch and deterministically over
 //! the workload horizon (§3.1).
+//!
+//! Configurations are [`ConfigMask`] bitsets throughout (see
+//! `util::mask`); policies are `Send + Sync` so the experiment runner
+//! can fan the policy × seed grid across threads.
 
 pub mod config_space;
 pub mod fastpf;
@@ -17,7 +21,8 @@ pub mod pf_mw;
 pub mod rsd;
 pub mod static_part;
 
-pub use config_space::ConfigSpace;
+pub use config_space::{ConfigId, ConfigSpace};
+pub use crate::util::mask::ConfigMask;
 
 use crate::domain::utility::BatchUtilities;
 use crate::util::rng::Pcg64;
@@ -26,13 +31,13 @@ use crate::util::rng::Pcg64;
 /// to 1 (Definition 2). Configurations are explicit view-selection masks.
 #[derive(Debug, Clone)]
 pub struct Allocation {
-    pub configs: Vec<Vec<bool>>,
+    pub configs: Vec<ConfigMask>,
     pub probs: Vec<f64>,
 }
 
 impl Allocation {
     /// A deterministic allocation (one configuration with probability 1).
-    pub fn deterministic(config: Vec<bool>) -> Self {
+    pub fn deterministic(config: ConfigMask) -> Self {
         Self {
             configs: vec![config],
             probs: vec![1.0],
@@ -42,9 +47,9 @@ impl Allocation {
     /// Build from (config, weight) pairs, normalizing and dropping
     /// negligible-probability entries. Duplicate configurations are
     /// merged. Panics if total weight is not positive.
-    pub fn from_weighted(pairs: Vec<(Vec<bool>, f64)>) -> Self {
+    pub fn from_weighted(pairs: Vec<(ConfigMask, f64)>) -> Self {
         use std::collections::BTreeMap;
-        let mut merged: BTreeMap<Vec<bool>, f64> = BTreeMap::new();
+        let mut merged: BTreeMap<ConfigMask, f64> = BTreeMap::new();
         for (c, w) in pairs {
             // LP/gradient solvers can emit O(1e-9) negative residuals;
             // clamp those, reject anything materially negative.
@@ -72,7 +77,7 @@ impl Allocation {
     }
 
     /// Sample one configuration.
-    pub fn sample(&self, rng: &mut Pcg64) -> &Vec<bool> {
+    pub fn sample(&self, rng: &mut Pcg64) -> &ConfigMask {
         &self.configs[rng.weighted_index(&self.probs)]
     }
 
@@ -108,20 +113,9 @@ impl Allocation {
     }
 }
 
-impl BatchUtilities {
-    /// Total cached size of a configuration (helper shared by policies).
-    pub fn size_of(&self, selected: &[bool]) -> f64 {
-        self.view_sizes
-            .iter()
-            .zip(selected)
-            .filter(|(_, &s)| s)
-            .map(|(sz, _)| *sz)
-            .sum()
-    }
-}
-
-/// A view-selection policy.
-pub trait Policy {
+/// A view-selection policy. `Send + Sync` so allocations for independent
+/// runs can be computed on worker threads (experiments::runner).
+pub trait Policy: Send + Sync {
     fn name(&self) -> &'static str;
 
     /// Compute the per-batch allocation. `rng` drives any internal
@@ -261,12 +255,16 @@ pub(crate) use instances as testing;
 mod tests {
     use super::*;
 
+    fn mask(bits: &[bool]) -> ConfigMask {
+        ConfigMask::from_bools(bits)
+    }
+
     #[test]
     fn allocation_normalization_and_merge() {
         let a = Allocation::from_weighted(vec![
-            (vec![true, false], 1.0),
-            (vec![false, true], 2.0),
-            (vec![true, false], 1.0),
+            (mask(&[true, false]), 1.0),
+            (mask(&[false, true]), 2.0),
+            (mask(&[true, false]), 1.0),
         ]);
         assert_eq!(a.configs.len(), 2);
         assert!((a.total_probability() - 1.0).abs() < 1e-12);
@@ -274,7 +272,7 @@ mod tests {
             .configs
             .iter()
             .zip(&a.probs)
-            .find(|(c, _)| c[0])
+            .find(|(c, _)| c.get(0))
             .unwrap()
             .1;
         assert!((p_r - 0.5).abs() < 1e-12);
@@ -283,16 +281,16 @@ mod tests {
     #[test]
     #[should_panic]
     fn zero_weight_allocation_panics() {
-        Allocation::from_weighted(vec![(vec![true], 0.0)]);
+        Allocation::from_weighted(vec![(mask(&[true]), 0.0)]);
     }
 
     #[test]
     fn expected_utilities_table2() {
         let b = testing::table2();
         let a = Allocation::from_weighted(vec![
-            (vec![true, false, false], 1.0),
-            (vec![false, true, false], 1.0),
-            (vec![false, false, true], 1.0),
+            (mask(&[true, false, false]), 1.0),
+            (mask(&[false, true, false]), 1.0),
+            (mask(&[false, false, true]), 1.0),
         ]);
         let v = a.expected_scaled_utilities(&b);
         for vi in v {
@@ -303,13 +301,13 @@ mod tests {
     #[test]
     fn sampling_respects_distribution() {
         let a = Allocation::from_weighted(vec![
-            (vec![true, false], 3.0),
-            (vec![false, true], 1.0),
+            (mask(&[true, false]), 3.0),
+            (mask(&[false, true]), 1.0),
         ]);
         let mut rng = Pcg64::new(5);
         let mut count_r = 0;
         for _ in 0..20_000 {
-            if a.sample(&mut rng)[0] {
+            if a.sample(&mut rng).get(0) {
                 count_r += 1;
             }
         }

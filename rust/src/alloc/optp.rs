@@ -4,7 +4,7 @@
 //! who contribute little to total utility can be starved (§3.2,
 //! Figure 9's empirical demonstration).
 
-use crate::alloc::{Allocation, Policy};
+use crate::alloc::{Allocation, ConfigMask, Policy};
 use crate::domain::utility::BatchUtilities;
 use crate::util::rng::Pcg64;
 
@@ -18,7 +18,7 @@ impl Policy for UtilityMax {
 
     fn allocate(&self, batch: &BatchUtilities, _rng: &mut Pcg64) -> Allocation {
         let sol = batch.total_utility_problem().solve_exact();
-        Allocation::deterministic(sol.selected)
+        Allocation::deterministic(ConfigMask::from_bools(&sol.selected))
     }
 }
 
@@ -32,7 +32,7 @@ mod tests {
         // Table 3 raw utilities: R→2, S→3, P→2; OPTP caches S.
         let b = table3();
         let a = UtilityMax.allocate(&b, &mut Pcg64::new(0));
-        assert_eq!(a.configs[0], vec![false, true, false]);
+        assert_eq!(a.configs[0], ConfigMask::from_bools(&[false, true, false]));
     }
 
     #[test]
@@ -41,7 +41,7 @@ mod tests {
         // giving tenant A nothing → not SI.
         let b = table5();
         let a = UtilityMax.allocate(&b, &mut Pcg64::new(0));
-        assert_eq!(a.configs[0], vec![true, false]);
+        assert_eq!(a.configs[0], ConfigMask::from_bools(&[true, false]));
         let v = a.expected_scaled_utilities(&b);
         assert_eq!(v[0], 0.0);
     }
@@ -53,6 +53,6 @@ mod tests {
         // Best pair: views {0,1} = 5+3+2 = 10 vs {0,2} = 5+1+4 = 10 vs
         // {1,2} = 3+2+1+4 = 10 — all tie at 10; any 2-view answer is
         // optimal.
-        assert_eq!(a.configs[0].iter().filter(|&&s| s).count(), 2);
+        assert_eq!(a.configs[0].count_ones(), 2);
     }
 }

@@ -10,10 +10,13 @@
 //!   · the γ part minimizes Σ y_i·γ_i over (P2) by the Lagrangian
 //!     parametric search γ_i(L) = clamp(L/y_i, 1/N, 1) with L chosen so
 //!     Σ log γ_i(L) = Q.
+//!
+//! One [`WelfareTemplate`] is shared across every AHK iteration of every
+//! feasibility check — the oracle rewrites only the dual-weight values.
 
 use crate::alloc::mw::{ahk, AhkOutcome, AhkParams, OracleResponse};
-use crate::alloc::{Allocation, Policy};
-use crate::domain::utility::BatchUtilities;
+use crate::alloc::{Allocation, ConfigMask, Policy};
+use crate::domain::utility::{BatchUtilities, WelfareTemplate};
 use crate::util::rng::Pcg64;
 
 #[derive(Debug)]
@@ -80,9 +83,10 @@ impl PfMw {
     fn pf_feas(
         &self,
         batch: &BatchUtilities,
+        welfare: &mut WelfareTemplate,
         active: &[usize],
         q: f64,
-    ) -> Option<Vec<Vec<bool>>> {
+    ) -> Option<Vec<ConfigMask>> {
         let n = active.len();
         let params = AhkParams {
             rho: 1.0,
@@ -99,8 +103,9 @@ impl PfMw {
                 for (j, &i) in active.iter().enumerate() {
                     full_w[i] = y[j];
                 }
-                let sol = batch.welfare_problem(&full_w).solve_exact();
-                let v = batch.scaled_utilities(&sol.selected);
+                let sol = welfare.solve(&full_w);
+                let mask = ConfigMask::from_bools(&sol.selected);
+                let v = batch.scaled_utilities(&mask);
                 // γ part: minimize Σ y_i γ_i over (P2).
                 let gamma = min_gamma(y, q, n);
                 let value: f64 = active
@@ -114,7 +119,7 @@ impl PfMw {
                     .map(|(j, &i)| v[i] - gamma[j])
                     .collect();
                 OracleResponse {
-                    point: sol.selected,
+                    point: mask,
                     value,
                     slacks,
                 }
@@ -128,23 +133,24 @@ impl PfMw {
 
     /// Binary search for the largest feasible Q; returns the allocation
     /// from the last feasible run.
-    pub fn solve(&self, batch: &BatchUtilities) -> Vec<(Vec<bool>, f64)> {
+    pub fn solve(&self, batch: &BatchUtilities) -> Vec<(ConfigMask, f64)> {
         let active = batch.active_tenants();
         let n = active.len();
         if n == 0 {
-            return vec![(vec![false; batch.n_views()], 1.0)];
+            return vec![(ConfigMask::empty(batch.n_views()), 1.0)];
         }
+        let mut welfare = batch.welfare_template();
         let mut lo = -(n as f64) * (n as f64).ln() - 1e-9; // Q of all-SI floor
         let mut hi = 0.0;
         // Q = lo is always feasible (the SI allocation exists: RSD's).
-        let mut best = self.pf_feas(batch, &active, lo);
+        let mut best = self.pf_feas(batch, &mut welfare, &active, lo);
         if best.is_none() {
             // Extremely degenerate batch; fall back to empty config.
-            return vec![(vec![false; batch.n_views()], 1.0)];
+            return vec![(ConfigMask::empty(batch.n_views()), 1.0)];
         }
         for _ in 0..self.search_steps {
             let mid = 0.5 * (lo + hi);
-            match self.pf_feas(batch, &active, mid) {
+            match self.pf_feas(batch, &mut welfare, &active, mid) {
                 Some(points) => {
                     best = Some(points);
                     lo = mid;

@@ -10,7 +10,7 @@
 //! configuration, but the exact distribution matters for fairness
 //! analysis and for the Table 6 property checks.
 
-use crate::alloc::{Allocation, Policy};
+use crate::alloc::{Allocation, ConfigMask, Policy};
 use crate::domain::utility::BatchUtilities;
 use crate::solver::knapsack::{ValuedQuery, WelfareProblem};
 use crate::util::rng::Pcg64;
@@ -34,8 +34,8 @@ impl Default for RandomSerialDictatorship {
 
 impl RandomSerialDictatorship {
     /// Run one serial-dictatorship pass for a fixed tenant order.
-    fn config_for_order(batch: &BatchUtilities, order: &[usize]) -> Vec<bool> {
-        let mut selected = vec![false; batch.n_views()];
+    fn config_for_order(batch: &BatchUtilities, order: &[usize]) -> ConfigMask {
+        let mut selected = ConfigMask::empty(batch.n_views());
         let mut used = 0.0;
         for &tenant in order {
             if batch.u_star[tenant] <= 0.0 {
@@ -43,10 +43,9 @@ impl RandomSerialDictatorship {
             }
             // The tenant optimizes its own utility over the residual
             // budget, keeping already-selected views for free.
-            let queries: Vec<ValuedQuery> = batch
-                .classes
+            let (lo, hi) = batch.index.tenant_ranges[tenant];
+            let queries: Vec<ValuedQuery> = batch.classes[lo as usize..hi as usize]
                 .iter()
-                .filter(|c| c.tenant == tenant)
                 .map(|c| ValuedQuery {
                     value: c.utility,
                     views: c.views.clone(),
@@ -57,7 +56,7 @@ impl RandomSerialDictatorship {
                 .view_sizes
                 .iter()
                 .enumerate()
-                .map(|(v, &sz)| if selected[v] { 0.0 } else { sz })
+                .map(|(v, &sz)| if selected.get(v) { 0.0 } else { sz })
                 .collect();
             let sol = WelfareProblem {
                 view_sizes: sizes,
@@ -66,8 +65,8 @@ impl RandomSerialDictatorship {
             }
             .solve_exact();
             for (v, &s) in sol.selected.iter().enumerate() {
-                if s && !selected[v] {
-                    selected[v] = true;
+                if s && !selected.get(v) {
+                    selected.insert(v);
                     used += batch.view_sizes[v];
                 }
             }
@@ -83,7 +82,7 @@ impl Policy for RandomSerialDictatorship {
 
     fn allocate(&self, batch: &BatchUtilities, rng: &mut Pcg64) -> Allocation {
         let n = batch.n_tenants;
-        let mut pairs: Vec<(Vec<bool>, f64)> = Vec::new();
+        let mut pairs: Vec<(ConfigMask, f64)> = Vec::new();
         if n <= self.exact_up_to {
             // Enumerate all permutations (weights follow tenant weights:
             // a weighted RSD draws orders with probability proportional
@@ -213,8 +212,8 @@ mod tests {
         // Every permutation caches view 0 plus the first dictator's
         // secondary view.
         for c in &a.configs {
-            assert!(c[0]);
-            assert_eq!(c.iter().filter(|&&s| s).count(), 2);
+            assert!(c.get(0));
+            assert_eq!(c.count_ones(), 2);
         }
     }
 }

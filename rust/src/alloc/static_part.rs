@@ -4,7 +4,7 @@
 //! bytes, but Pareto-dominated whenever preferred views exceed the
 //! partition size (§1 Scenario 1, §3.2).
 
-use crate::alloc::{Allocation, Policy};
+use crate::alloc::{Allocation, ConfigMask, Policy};
 use crate::domain::utility::BatchUtilities;
 use crate::util::rng::Pcg64;
 
@@ -18,7 +18,7 @@ impl Policy for StaticPartition {
 
     fn allocate(&self, batch: &BatchUtilities, _rng: &mut Pcg64) -> Allocation {
         let total_weight: f64 = batch.weights.iter().sum();
-        let mut selected = vec![false; batch.n_views()];
+        let mut selected = ConfigMask::empty(batch.n_views());
         for tenant in 0..batch.n_tenants {
             let share = batch.budget * batch.weights[tenant] / total_weight;
             // The tenant's solo knapsack within its partition.
@@ -29,7 +29,9 @@ impl Policy for StaticPartition {
             // still charges each partition, so the union is feasible in
             // the real (shared) cache.
             for (v, &s) in sol.selected.iter().enumerate() {
-                selected[v] |= s;
+                if s {
+                    selected.insert(v);
+                }
             }
         }
         debug_assert!(batch.size_of(&selected) <= batch.budget * (1.0 + 1e-9) + 1.0);
@@ -55,7 +57,7 @@ mod tests {
         let b = table2();
         let a = StaticPartition.allocate(&b, &mut Pcg64::new(0));
         assert_eq!(a.configs.len(), 1);
-        assert!(a.configs[0].iter().all(|&s| !s));
+        assert!(a.configs[0].none_set());
         let v = a.expected_scaled_utilities(&b);
         assert!(v.iter().all(|&x| x == 0.0));
     }
@@ -66,7 +68,7 @@ mod tests {
         // preferred view.
         let b = matrix_instance(&[&[5, 0], &[0, 3]], 2.0);
         let a = StaticPartition.allocate(&b, &mut Pcg64::new(0));
-        assert_eq!(a.configs[0], vec![true, true]);
+        assert_eq!(a.configs[0], ConfigMask::from_bools(&[true, true]));
         let v = a.expected_scaled_utilities(&b);
         assert_eq!(v, vec![1.0, 1.0]);
     }
@@ -76,7 +78,7 @@ mod tests {
         // Both tenants want the same unit view; partitions of 1 each.
         let b = matrix_instance(&[&[7], &[9]], 2.0);
         let a = StaticPartition.allocate(&b, &mut Pcg64::new(0));
-        assert_eq!(a.configs[0], vec![true]);
+        assert_eq!(a.configs[0], ConfigMask::from_bools(&[true]));
         assert!(b.size_of(&a.configs[0]) <= b.budget);
     }
 }

@@ -3,6 +3,11 @@
 //! a marked view when the first query touches it, §5.1), and produces
 //! the stateful utility boost of §5.4 (already-cached views get their
 //! estimated benefit multiplied by γ > 1, making them likelier to stay).
+//!
+//! Cache contents and pending-materialization state are [`ConfigMask`]
+//! bitsets, matching the configuration representation the policies emit.
+
+use crate::util::mask::ConfigMask;
 
 /// Views loaded/evicted by one update.
 #[derive(Debug, Clone, PartialEq)]
@@ -19,10 +24,10 @@ pub struct CacheManager {
     /// Cached size per candidate view.
     sizes: Vec<u64>,
     /// Current contents.
-    cached: Vec<bool>,
+    cached: ConfigMask,
     /// Marked-for-caching but not yet materialized (first access pays
     /// the disk read + materialization penalty).
-    pending_load: Vec<bool>,
+    pending_load: ConfigMask,
 }
 
 impl CacheManager {
@@ -31,8 +36,8 @@ impl CacheManager {
         Self {
             budget,
             sizes,
-            cached: vec![false; n],
-            pending_load: vec![false; n],
+            cached: ConfigMask::empty(n),
+            pending_load: ConfigMask::empty(n),
         }
     }
 
@@ -44,21 +49,16 @@ impl CacheManager {
         self.sizes.len()
     }
 
-    pub fn cached(&self) -> &[bool] {
+    pub fn cached(&self) -> &ConfigMask {
         &self.cached
     }
 
     pub fn is_cached(&self, view: usize) -> bool {
-        self.cached[view]
+        self.cached.get(view)
     }
 
     pub fn used_bytes(&self) -> u64 {
-        self.sizes
-            .iter()
-            .zip(&self.cached)
-            .filter(|(_, &c)| c)
-            .map(|(s, _)| *s)
-            .sum()
+        self.cached.ones().map(|v| self.sizes[v]).sum()
     }
 
     /// Fraction of the budget occupied.
@@ -73,15 +73,9 @@ impl CacheManager {
     /// leaving the config, mark entering views for lazy materialization.
     /// Panics if the target exceeds the budget — policies must produce
     /// feasible configurations.
-    pub fn update(&mut self, target: &[bool]) -> CacheDelta {
-        assert_eq!(target.len(), self.sizes.len());
-        let target_bytes: u64 = self
-            .sizes
-            .iter()
-            .zip(target)
-            .filter(|(_, &t)| t)
-            .map(|(s, _)| *s)
-            .sum();
+    pub fn update(&mut self, target: &ConfigMask) -> CacheDelta {
+        assert_eq!(target.n_bits(), self.sizes.len());
+        let target_bytes: u64 = target.ones().map(|v| self.sizes[v]).sum();
         assert!(
             target_bytes <= self.budget,
             "target config {target_bytes}B exceeds budget {}B",
@@ -92,15 +86,15 @@ impl CacheManager {
             evicted: Vec::new(),
         };
         for v in 0..self.sizes.len() {
-            match (self.cached[v], target[v]) {
+            match (self.cached.get(v), target.get(v)) {
                 (false, true) => {
-                    self.cached[v] = true;
-                    self.pending_load[v] = true;
+                    self.cached.set(v, true);
+                    self.pending_load.set(v, true);
                     delta.loaded.push(v);
                 }
                 (true, false) => {
-                    self.cached[v] = false;
-                    self.pending_load[v] = false;
+                    self.cached.set(v, false);
+                    self.pending_load.set(v, false);
                     delta.evicted.push(v);
                 }
                 _ => {}
@@ -112,8 +106,8 @@ impl CacheManager {
     /// True exactly once per loaded view: the first accessor materializes
     /// it (pays disk bandwidth + penalty); later accesses hit memory.
     pub fn consume_materialization(&mut self, view: usize) -> bool {
-        if self.cached[view] && self.pending_load[view] {
-            self.pending_load[view] = false;
+        if self.cached.get(view) && self.pending_load.get(view) {
+            self.pending_load.set(view, false);
             true
         } else {
             false
@@ -123,9 +117,8 @@ impl CacheManager {
     /// The §5.4 stateful boost vector: γ for currently cached views,
     /// 1.0 otherwise. Feed to [`crate::domain::BatchUtilities::build`].
     pub fn boost_vector(&self, gamma: f64) -> Vec<f64> {
-        self.cached
-            .iter()
-            .map(|&c| if c { gamma } else { 1.0 })
+        (0..self.sizes.len())
+            .map(|v| if self.cached.get(v) { gamma } else { 1.0 })
             .collect()
     }
 }
@@ -134,16 +127,20 @@ impl CacheManager {
 mod tests {
     use super::*;
 
+    fn mask(bits: &[bool]) -> ConfigMask {
+        ConfigMask::from_bools(bits)
+    }
+
     #[test]
     fn update_loads_and_evicts() {
         let mut cm = CacheManager::new(100, vec![40, 50, 30]);
-        let d1 = cm.update(&[true, true, false]);
+        let d1 = cm.update(&mask(&[true, true, false]));
         assert_eq!(d1.loaded, vec![0, 1]);
         assert!(d1.evicted.is_empty());
         assert_eq!(cm.used_bytes(), 90);
         assert!((cm.utilization() - 0.9).abs() < 1e-12);
 
-        let d2 = cm.update(&[true, false, true]);
+        let d2 = cm.update(&mask(&[true, false, true]));
         assert_eq!(d2.loaded, vec![2]);
         assert_eq!(d2.evicted, vec![1]);
         assert_eq!(cm.used_bytes(), 70);
@@ -153,33 +150,33 @@ mod tests {
     #[should_panic]
     fn over_budget_rejected() {
         let mut cm = CacheManager::new(100, vec![60, 60]);
-        cm.update(&[true, true]);
+        cm.update(&mask(&[true, true]));
     }
 
     #[test]
     fn lazy_materialization_consumed_once() {
         let mut cm = CacheManager::new(100, vec![50]);
-        cm.update(&[true]);
+        cm.update(&mask(&[true]));
         assert!(cm.consume_materialization(0));
         assert!(!cm.consume_materialization(0));
         // Re-loading after eviction resets the flag.
-        cm.update(&[false]);
-        cm.update(&[true]);
+        cm.update(&mask(&[false]));
+        cm.update(&mask(&[true]));
         assert!(cm.consume_materialization(0));
     }
 
     #[test]
     fn eviction_clears_pending() {
         let mut cm = CacheManager::new(100, vec![50]);
-        cm.update(&[true]);
-        cm.update(&[false]);
+        cm.update(&mask(&[true]));
+        cm.update(&mask(&[false]));
         assert!(!cm.consume_materialization(0));
     }
 
     #[test]
     fn boost_vector_gamma() {
         let mut cm = CacheManager::new(100, vec![40, 50]);
-        cm.update(&[true, false]);
+        cm.update(&mask(&[true, false]));
         assert_eq!(cm.boost_vector(2.0), vec![2.0, 1.0]);
     }
 

@@ -12,7 +12,7 @@
 //! up accumulates backlog and shows reduced throughput, exactly the
 //! paper's throughput mechanics.
 
-use crate::alloc::Policy;
+use crate::alloc::{ConfigMask, Policy};
 use crate::cache::CacheManager;
 use crate::domain::query::QueryId;
 use crate::domain::tenant::TenantSet;
@@ -54,7 +54,7 @@ pub struct BatchRecord {
     /// Queries in the batch.
     pub n_queries: usize,
     /// The sampled configuration (view mask).
-    pub config: Vec<bool>,
+    pub config: ConfigMask,
     /// Cache utilization after the update.
     pub cache_utilization: f64,
     /// Wall-clock (simulated) times: batch window end / execution span.
@@ -112,10 +112,8 @@ impl RunResult {
     pub fn view_cache_fraction(&self, n_views: usize) -> Vec<f64> {
         let mut frac = vec![0.0; n_views];
         for b in &self.batches {
-            for (v, &c) in b.config.iter().enumerate() {
-                if c {
-                    frac[v] += 1.0;
-                }
+            for v in b.config.ones() {
+                frac[v] += 1.0;
             }
         }
         let n = self.batches.len().max(1) as f64;
@@ -212,7 +210,7 @@ impl<'a> Coordinator<'a> {
             // Step 2: view selection.
             let t0 = std::time::Instant::now();
             let config_mask = if queries.is_empty() {
-                cache.cached().to_vec()
+                cache.cached().clone()
             } else {
                 let boost = self
                     .config
@@ -371,13 +369,7 @@ mod tests {
         let churn = |r: &RunResult| -> usize {
             r.batches
                 .windows(2)
-                .map(|w| {
-                    w[0].config
-                        .iter()
-                        .zip(&w[1].config)
-                        .filter(|(a, b)| a != b)
-                        .count()
-                })
+                .map(|w| w[0].config.diff_count(&w[1].config))
                 .sum()
         };
         assert!(

@@ -141,6 +141,7 @@ impl MetricsSummary {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::alloc::ConfigMask;
     use crate::coordinator::loop_::{BatchRecord, RunResult};
     use crate::domain::query::QueryId;
     use crate::sim::engine::QueryOutcome;
@@ -164,7 +165,7 @@ mod tests {
             batches: vec![BatchRecord {
                 index: 0,
                 n_queries: 0,
-                config: vec![],
+                config: ConfigMask::empty(0),
                 cache_utilization: 0.5,
                 window_end: 40.0,
                 exec_start: 40.0,

@@ -12,5 +12,5 @@ pub mod view;
 pub use dataset::{Dataset, DatasetCatalog, DatasetId, GB, MB};
 pub use query::{Query, QueryId};
 pub use tenant::{Tenant, TenantId, TenantSet};
-pub use utility::{BatchUtilities, UtilityModel};
+pub use utility::{BatchIndex, BatchUtilities, UtilityModel, WelfareTemplate};
 pub use view::{View, ViewCatalog, ViewId, ViewKind};

@@ -5,6 +5,7 @@
 
 use crate::domain::tenant::TenantId;
 use crate::domain::view::ViewId;
+use crate::util::mask::ConfigMask;
 
 /// Globally unique query identifier within a run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
@@ -32,8 +33,8 @@ pub struct Query {
 
 impl Query {
     /// True if `cached` (indexed by ViewId) covers all required views.
-    pub fn satisfied_by(&self, cached: &[bool]) -> bool {
-        self.required_views.iter().all(|v| cached[v.0])
+    pub fn satisfied_by(&self, cached: &ConfigMask) -> bool {
+        self.required_views.iter().all(|v| cached.get(v.0))
     }
 }
 
@@ -52,8 +53,8 @@ mod tests {
             bytes_read: 100,
             compute_cost: 1.0,
         };
-        assert!(q.satisfied_by(&[true, false, true]));
-        assert!(!q.satisfied_by(&[true, true, false]));
-        assert!(!q.satisfied_by(&[false, false, true]));
+        assert!(q.satisfied_by(&ConfigMask::from_bools(&[true, false, true])));
+        assert!(!q.satisfied_by(&ConfigMask::from_bools(&[true, true, false])));
+        assert!(!q.satisfied_by(&ConfigMask::from_bools(&[false, false, true])));
     }
 }

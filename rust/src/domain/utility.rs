@@ -8,14 +8,20 @@
 //!
 //! [`BatchUtilities`] is the *batch problem*: everything a view-selection
 //! policy needs — candidate view sizes, the cache budget, aggregated
-//! per-tenant query classes, and U_i*. It converts to WELFARE-oracle
-//! instances (Definition 5) for arbitrary dual weight vectors and
-//! evaluates U_i(S) / V_i(S) for explicit configurations.
+//! per-tenant query classes, and U_i*. Configurations are [`ConfigMask`]
+//! bitsets; a precomputed [`BatchIndex`] stores each query class's
+//! required-view bitmask (grouped by tenant) plus 1/U_i*, so evaluating
+//! U_i(S)/V_i(S) is a word-wise subset test per class instead of a
+//! per-view index walk. The reusable [`WelfareTemplate`] turns the
+//! WELFARE oracle (Definition 5) into a value-rewrite + solve, so the
+//! multiplicative-weights loops stop rebuilding the instance every
+//! iteration.
 
 use crate::domain::query::Query;
 use crate::domain::tenant::TenantSet;
 use crate::domain::view::ViewCatalog;
 use crate::solver::knapsack::{ValuedQuery, WelfareProblem, WelfareSolution};
+use crate::util::mask::ConfigMask;
 
 /// Utility model configuration.
 #[derive(Debug, Clone)]
@@ -44,6 +50,53 @@ pub struct QueryClass {
     pub count: usize,
 }
 
+/// Precomputed evaluation index over the batch's query classes — the
+/// word-wise fast path behind `utilities()`/`scaled_utilities()` and the
+/// restricted WELFARE evaluations.
+#[derive(Debug, Clone, Default)]
+pub struct BatchIndex {
+    /// Required-view bitmask per class, same order as
+    /// [`BatchUtilities::classes`] (which is sorted by tenant).
+    pub class_masks: Vec<ConfigMask>,
+    /// `tenant_ranges[i]` = half-open class range `[start, end)` of
+    /// tenant `i` within `classes`/`class_masks`.
+    pub tenant_ranges: Vec<(u32, u32)>,
+    /// Precomputed 1/U_i* per tenant; 0.0 flags an inactive tenant
+    /// (no queries in the batch).
+    pub inv_u_star: Vec<f64>,
+}
+
+impl BatchIndex {
+    fn build(n_tenants: usize, n_views: usize, classes: &[QueryClass], u_star: &[f64]) -> Self {
+        let class_masks = classes
+            .iter()
+            .map(|c| ConfigMask::from_indices(n_views, &c.views))
+            .collect();
+        // Classes are sorted by tenant (BTreeMap key order in `build`),
+        // so each tenant's classes form one contiguous run.
+        let mut tenant_ranges = vec![(0u32, 0u32); n_tenants];
+        let mut start = 0usize;
+        for (t, range) in tenant_ranges.iter_mut().enumerate() {
+            let mut end = start;
+            while end < classes.len() && classes[end].tenant == t {
+                end += 1;
+            }
+            *range = (start as u32, end as u32);
+            start = end;
+        }
+        debug_assert_eq!(start, classes.len(), "classes not sorted by tenant");
+        let inv_u_star = u_star
+            .iter()
+            .map(|&u| if u > 0.0 { 1.0 / u } else { 0.0 })
+            .collect();
+        Self {
+            class_masks,
+            tenant_ranges,
+            inv_u_star,
+        }
+    }
+}
+
 /// The per-batch allocation problem.
 #[derive(Debug, Clone)]
 pub struct BatchUtilities {
@@ -54,11 +107,13 @@ pub struct BatchUtilities {
     pub view_sizes: Vec<f64>,
     /// Cache budget.
     pub budget: f64,
-    /// Aggregated query classes.
+    /// Aggregated query classes, sorted by tenant.
     pub classes: Vec<QueryClass>,
     /// U_i*: best achievable utility per tenant alone in the system
     /// (0.0 for tenants with no queries in the batch).
     pub u_star: Vec<f64>,
+    /// Precomputed bitmask index over `classes`.
+    pub index: BatchIndex,
 }
 
 impl BatchUtilities {
@@ -113,8 +168,15 @@ impl BatchUtilities {
             budget,
             classes,
             u_star: vec![0.0; n_tenants],
+            index: BatchIndex::default(),
         };
         this.u_star = (0..n_tenants).map(|i| this.solo_optimum(i).value).collect();
+        this.index = BatchIndex::build(
+            n_tenants,
+            this.view_sizes.len(),
+            &this.classes,
+            &this.u_star,
+        );
         this
     }
 
@@ -125,20 +187,24 @@ impl BatchUtilities {
             .collect()
     }
 
-    /// U_i(S): tenant i's utility under configuration `selected`.
-    pub fn tenant_utility(&self, tenant: usize, selected: &[bool]) -> f64 {
-        self.classes
+    /// U_i(S): tenant i's utility under configuration `selected` —
+    /// word-wise subset tests over the tenant's own class range.
+    pub fn tenant_utility(&self, tenant: usize, selected: &ConfigMask) -> f64 {
+        let (lo, hi) = self.index.tenant_ranges[tenant];
+        let (lo, hi) = (lo as usize, hi as usize);
+        self.classes[lo..hi]
             .iter()
-            .filter(|c| c.tenant == tenant && c.views.iter().all(|&v| selected[v]))
-            .map(|c| c.utility)
+            .zip(&self.index.class_masks[lo..hi])
+            .filter(|(_, m)| selected.contains_all(m))
+            .map(|(c, _)| c.utility)
             .sum()
     }
 
     /// U(S) for all tenants.
-    pub fn utilities(&self, selected: &[bool]) -> Vec<f64> {
+    pub fn utilities(&self, selected: &ConfigMask) -> Vec<f64> {
         let mut u = vec![0.0; self.n_tenants];
-        for c in &self.classes {
-            if c.views.iter().all(|&v| selected[v]) {
+        for (c, m) in self.classes.iter().zip(&self.index.class_masks) {
+            if selected.contains_all(m) {
                 u[c.tenant] += c.utility;
             }
         }
@@ -147,12 +213,29 @@ impl BatchUtilities {
 
     /// V_i(S) = U_i(S)/U_i* for all tenants (1.0 for inactive tenants —
     /// a tenant with no queries is trivially fully satisfied).
-    pub fn scaled_utilities(&self, selected: &[bool]) -> Vec<f64> {
-        self.utilities(selected)
-            .iter()
-            .enumerate()
-            .map(|(i, &u)| if self.u_star[i] > 0.0 { u / self.u_star[i] } else { 1.0 })
-            .collect()
+    pub fn scaled_utilities(&self, selected: &ConfigMask) -> Vec<f64> {
+        let mut v = self.utilities(selected);
+        for (i, vi) in v.iter_mut().enumerate() {
+            // Division (not multiplication by inv_u_star) keeps results
+            // bit-identical to the legacy per-view evaluation path; the
+            // reciprocal serves as the activity flag and feeds the
+            // accelerated marshalling paths.
+            *vi = if self.index.inv_u_star[i] > 0.0 {
+                *vi / self.u_star[i]
+            } else {
+                1.0
+            };
+        }
+        v
+    }
+
+    /// Total cached size of a configuration.
+    pub fn size_of(&self, selected: &ConfigMask) -> f64 {
+        selected.ones().map(|v| self.view_sizes[v]).sum()
+    }
+
+    pub fn n_views(&self) -> usize {
+        self.view_sizes.len()
     }
 
     /// The single-tenant optimum configuration (defines U_i*).
@@ -176,6 +259,10 @@ impl BatchUtilities {
 
     /// WELFARE(w) instance (Definition 5): maximize Σ_i w_i·V_i(S) —
     /// each query class contributes w_t · utility / U_t* when satisfied.
+    ///
+    /// For repeated solves with fresh weights (the MW hot loops), use
+    /// [`BatchUtilities::welfare_template`] instead — it builds the
+    /// skeleton once.
     pub fn welfare_problem(&self, w: &[f64]) -> WelfareProblem {
         assert_eq!(w.len(), self.n_tenants);
         let queries: Vec<ValuedQuery> = self
@@ -191,6 +278,32 @@ impl BatchUtilities {
             view_sizes: self.view_sizes.clone(),
             budget: self.budget,
             queries,
+        }
+    }
+
+    /// Reusable WELFARE(w) instance: clone the class skeleton once, then
+    /// [`WelfareTemplate::solve`] only rewrites the per-class values for
+    /// each new dual-weight vector. Produces solutions identical to
+    /// `welfare_problem(w).solve_exact()`.
+    pub fn welfare_template(&self) -> WelfareTemplate {
+        let mut queries = Vec::new();
+        let mut terms = Vec::new();
+        for c in &self.classes {
+            if self.u_star[c.tenant] > 0.0 {
+                queries.push(ValuedQuery {
+                    value: 0.0,
+                    views: c.views.clone(),
+                });
+                terms.push((c.tenant, c.utility, self.u_star[c.tenant]));
+            }
+        }
+        WelfareTemplate {
+            problem: WelfareProblem {
+                view_sizes: self.view_sizes.clone(),
+                budget: self.budget,
+                queries,
+            },
+            terms,
         }
     }
 
@@ -210,9 +323,32 @@ impl BatchUtilities {
             queries,
         }
     }
+}
 
-    pub fn n_views(&self) -> usize {
-        self.view_sizes.len()
+/// A prebuilt WELFARE(w) skeleton (see
+/// [`BatchUtilities::welfare_template`]): per-class view sets and sizes
+/// are fixed; each `solve` call rewrites only the values
+/// `w_t · utility / U_t*` before running the exact oracle.
+#[derive(Debug, Clone)]
+pub struct WelfareTemplate {
+    problem: WelfareProblem,
+    /// `(tenant, utility, u_star)` per query class in `problem.queries`
+    /// (active-tenant classes only).
+    terms: Vec<(usize, f64, f64)>,
+}
+
+impl WelfareTemplate {
+    /// Solve WELFARE(w) for dual weights `w` (length = n_tenants).
+    pub fn solve(&mut self, w: &[f64]) -> WelfareSolution {
+        for (q, &(t, util, u_star)) in self.problem.queries.iter_mut().zip(&self.terms) {
+            q.value = w[t] * util / u_star;
+        }
+        self.problem.solve_exact()
+    }
+
+    /// The underlying (last-weighted) problem, e.g. for budget overrides.
+    pub fn problem(&self) -> &WelfareProblem {
+        &self.problem
     }
 }
 
@@ -223,6 +359,10 @@ mod tests {
     use crate::domain::query::{Query, QueryId};
     use crate::domain::tenant::{TenantId, TenantSet};
     use crate::domain::view::{ViewCatalog, ViewId, ViewKind};
+
+    fn mask(bits: &[bool]) -> ConfigMask {
+        ConfigMask::from_bools(bits)
+    }
 
     /// The SpaceBook instance of Table 1: views R,S,P of unit size M,
     /// cache M; Analyst/Engineer utilities 2,1,0 and VP 0,1,2.
@@ -268,13 +408,40 @@ mod tests {
         // Alone with cache M each tenant caches its best single view.
         assert_eq!(b.u_star, vec![2.0, 2.0, 2.0]);
         // Config {R}: utilities (2,2,0); scaled (1,1,0).
-        let s_r = [true, false, false];
+        let s_r = mask(&[true, false, false]);
         assert_eq!(b.utilities(&s_r), vec![2.0, 2.0, 0.0]);
         assert_eq!(b.scaled_utilities(&s_r), vec![1.0, 1.0, 0.0]);
         // Config {S}: everyone gets 1 → scaled 0.5.
-        let s_s = [false, true, false];
+        let s_s = mask(&[false, true, false]);
         assert_eq!(b.scaled_utilities(&s_s), vec![0.5, 0.5, 0.5]);
         assert_eq!(b.active_tenants(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn batch_index_groups_classes_by_tenant() {
+        let (ts, vc, queries) = spacebook();
+        let b = BatchUtilities::build(&ts, &vc, 100.0, &queries, None);
+        assert_eq!(b.index.class_masks.len(), b.classes.len());
+        for (t, &(lo, hi)) in b.index.tenant_ranges.iter().enumerate() {
+            for c in &b.classes[lo as usize..hi as usize] {
+                assert_eq!(c.tenant, t);
+            }
+        }
+        let total: u32 = b
+            .index
+            .tenant_ranges
+            .iter()
+            .map(|&(lo, hi)| hi - lo)
+            .sum();
+        assert_eq!(total as usize, b.classes.len());
+        // Each class mask matches its sorted view list.
+        for (c, m) in b.classes.iter().zip(&b.index.class_masks) {
+            assert_eq!(m.ones().collect::<Vec<_>>(), c.views);
+        }
+        // inv_u_star is the reciprocal for active tenants.
+        for (i, &inv) in b.index.inv_u_star.iter().enumerate() {
+            assert!((inv - 1.0 / b.u_star[i]).abs() < 1e-15);
+        }
     }
 
     #[test]
@@ -295,6 +462,24 @@ mod tests {
         // Heavy weight on VP: {P} wins (value 5·(2/2) = 5 > others).
         let sol = b.welfare_problem(&[0.1, 0.1, 5.0]).solve_exact();
         assert_eq!(sol.selected, vec![false, false, true]);
+    }
+
+    #[test]
+    fn welfare_template_matches_problem_exactly() {
+        let (ts, vc, queries) = spacebook();
+        let b = BatchUtilities::build(&ts, &vc, 100.0, &queries, None);
+        let mut template = b.welfare_template();
+        for w in [
+            vec![1.0, 1.0, 1.0],
+            vec![0.1, 0.1, 5.0],
+            vec![0.0, 1.0, 0.0],
+            vec![2.5, 0.25, 0.75],
+        ] {
+            let via_template = template.solve(&w);
+            let via_problem = b.welfare_problem(&w).solve_exact();
+            assert_eq!(via_template.selected, via_problem.selected, "w={w:?}");
+            assert_eq!(via_template.value, via_problem.value, "w={w:?}");
+        }
     }
 
     #[test]
@@ -328,9 +513,10 @@ mod tests {
         queries.retain(|q| q.tenant.0 != 2); // VP submits nothing
         let b = BatchUtilities::build(&ts, &vc, 100.0, &queries, None);
         assert_eq!(b.u_star[2], 0.0);
+        assert_eq!(b.index.inv_u_star[2], 0.0);
         assert_eq!(b.active_tenants(), vec![0, 1]);
         // Scaled utility of inactive tenant reported as 1.0 (satisfied).
-        assert_eq!(b.scaled_utilities(&[true, false, false])[2], 1.0);
+        assert_eq!(b.scaled_utilities(&mask(&[true, false, false]))[2], 1.0);
         // Welfare problem ignores the inactive tenant regardless of w.
         let p = b.welfare_problem(&[1.0, 1.0, 100.0]);
         assert!(p.queries.iter().all(|q| q.value.is_finite()));
@@ -360,10 +546,17 @@ mod tests {
         let boost = vec![2.0, 1.0, 1.0]; // view R already cached, γ=2
         let b = BatchUtilities::build(&ts, &vc, 100.0, &queries, Some(&boost));
         let plain = BatchUtilities::build(&ts, &vc, 100.0, &queries, None);
-        assert!(b.tenant_utility(0, &[true, false, false]) > plain.tenant_utility(0, &[true, false, false]));
-        assert_eq!(
-            b.tenant_utility(0, &[false, true, false]),
-            plain.tenant_utility(0, &[false, true, false])
-        );
+        let r_only = mask(&[true, false, false]);
+        let s_only = mask(&[false, true, false]);
+        assert!(b.tenant_utility(0, &r_only) > plain.tenant_utility(0, &r_only));
+        assert_eq!(b.tenant_utility(0, &s_only), plain.tenant_utility(0, &s_only));
+    }
+
+    #[test]
+    fn size_of_sums_selected_views() {
+        let (ts, vc, queries) = spacebook();
+        let b = BatchUtilities::build(&ts, &vc, 100.0, &queries, None);
+        assert_eq!(b.size_of(&mask(&[true, false, true])), 200.0);
+        assert_eq!(b.size_of(&ConfigMask::empty(3)), 0.0);
     }
 }

@@ -4,6 +4,7 @@
 
 use crate::alloc::config_space::ConfigSpace;
 use crate::alloc::fastpf::FastPf;
+use crate::alloc::ConfigMask;
 use crate::alloc::mmf::MaxMinFair;
 use crate::alloc::mmf_mw::SimpleMmfMw;
 use crate::domain::query::{Query, QueryId};
@@ -57,7 +58,7 @@ pub fn restricted_maxmin_value(space: &ConfigSpace, batch: &BatchUtilities) -> f
     obj[m] = 1.0;
     let mut lp = Lp::new(obj);
     for &i in &active {
-        let mut row: Vec<f64> = (0..m).map(|s| space.v[s][i]).collect();
+        let mut row: Vec<f64> = space.rows().map(|r| r[i]).collect();
         row.push(-1.0);
         lp.constrain(row, Cmp::Ge, 0.0);
     }
@@ -100,11 +101,13 @@ pub fn pruning_error(m_vectors: usize, n_batches: usize, seed: u64) -> f64 {
         }
         // Restricted LP on a pruned space WITHOUT the per-tenant solo
         // optima shortcut (pure random vectors, as in the paper's sweep).
-        let mut space = ConfigSpace::from_configs(&batch, vec![vec![false; batch.n_views()]]);
+        let mut space =
+            ConfigSpace::from_configs(&batch, vec![ConfigMask::empty(batch.n_views())]);
+        let mut welfare = batch.welfare_template();
         for _ in 0..m_vectors {
             let w = rng.unit_weight_vector(batch.n_tenants);
-            let sol = batch.welfare_problem(&w).solve_exact();
-            space.push(&batch, sol.selected);
+            let sol = welfare.solve(&w);
+            space.push(&batch, ConfigMask::from_bools(&sol.selected));
         }
         let lp_min = restricted_maxmin_value(&space, &batch);
         let err = ((ref_min - lp_min) / ref_min).max(0.0);

@@ -1,6 +1,16 @@
 //! Experiment execution: run one setup under every compared policy on
 //! an identical workload (same generator seed), compute the §5.2 metrics
 //! against the STATIC baseline, and return table-ready rows.
+//!
+//! Every run of the policy × seed grid is deterministic (fixed generator
+//! and policy seeds) and independent, so [`run_with_policies`] fans the
+//! policies across `std::thread::scope` workers; [`run_seed_grid`]
+//! additionally fans whole setups per seed. The parallel runner is
+//! output-identical to [`run_with_policies_serial`] — same seeds ⇒ same
+//! simulated outcomes, configurations, and metrics — which the tests
+//! assert. The one exception is `BatchRecord::solve_secs`: it is *host*
+//! wall-clock and can read higher under thread contention, so profile
+//! solve latency with the serial runner (or `solver_bench`).
 
 use crate::alloc::{Policy, PolicyKind};
 use crate::coordinator::loop_::{Coordinator, CoordinatorConfig, RunResult};
@@ -42,12 +52,12 @@ pub fn build_universe(kind: UniverseKind) -> Universe {
     }
 }
 
-/// Run a setup under explicit policies; the first run is the fairness
-/// baseline (pass STATIC first for the paper's Equation 5 semantics).
-pub fn run_with_policies(
+/// Everything a `Coordinator` is built from, derived from one setup.
+/// (The coordinator itself borrows the universe, so callers assemble it
+/// on their own stack frame.)
+fn coordinator_parts(
     setup: &ExperimentSetup,
-    policies: &[Box<dyn Policy>],
-) -> ExperimentOutput {
+) -> (Universe, TenantSet, SimEngine, CoordinatorConfig) {
     let universe = build_universe(setup.universe);
     let mut tenants = TenantSet::new();
     for (i, w) in setup.weights.iter().enumerate() {
@@ -60,12 +70,75 @@ pub fn run_with_policies(
         stateful_gamma: setup.stateful_gamma,
         seed: setup.seed,
     };
+    (universe, tenants, engine, config)
+}
+
+fn summarize(setup: &ExperimentSetup, runs: Vec<RunResult>) -> ExperimentOutput {
+    let baseline = &runs[0];
+    let summaries = runs
+        .iter()
+        .map(|r| MetricsSummary::compute(r, baseline))
+        .collect();
+    ExperimentOutput {
+        setup: setup.clone(),
+        runs,
+        summaries,
+    }
+}
+
+/// Run a setup under explicit policies, one worker thread per policy;
+/// the first run is the fairness baseline (pass STATIC first for the
+/// paper's Equation 5 semantics). Each worker builds its own workload
+/// generator from the setup seed, so arrivals are identical across
+/// policies and across serial/parallel execution.
+pub fn run_with_policies(
+    setup: &ExperimentSetup,
+    policies: &[Box<dyn Policy>],
+) -> ExperimentOutput {
+    let (universe, tenants, engine, config) = coordinator_parts(setup);
+    let coordinator = Coordinator::new(&universe, tenants, engine, config);
+
+    let runs: Vec<RunResult> = std::thread::scope(|scope| {
+        let handles: Vec<_> = policies
+            .iter()
+            .map(|p| {
+                let coordinator = &coordinator;
+                let universe = &universe;
+                scope.spawn(move || {
+                    // Fresh generator with the same seed → identical
+                    // workload for every policy.
+                    let mut gen = WorkloadGenerator::new(
+                        setup.tenant_specs.clone(),
+                        universe,
+                        setup.seed,
+                    );
+                    coordinator.run(&mut gen, p.as_ref())
+                })
+            })
+            .collect();
+        // Join in spawn order: output order matches the policy order.
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("policy run thread panicked"))
+            .collect()
+    });
+
+    summarize(setup, runs)
+}
+
+/// The pre-parallelism reference runner: identical outputs to
+/// [`run_with_policies`], one policy at a time. Kept for equivalence
+/// tests and for profiling single solves without thread noise.
+pub fn run_with_policies_serial(
+    setup: &ExperimentSetup,
+    policies: &[Box<dyn Policy>],
+) -> ExperimentOutput {
+    let (universe, tenants, engine, config) = coordinator_parts(setup);
     let coordinator = Coordinator::new(&universe, tenants, engine, config);
 
     let runs: Vec<RunResult> = policies
         .iter()
         .map(|p| {
-            // Fresh generator with the same seed → identical workload.
             let mut gen = WorkloadGenerator::new(
                 setup.tenant_specs.clone(),
                 &universe,
@@ -75,26 +148,42 @@ pub fn run_with_policies(
         })
         .collect();
 
-    let baseline = &runs[0];
-    let summaries = runs
-        .iter()
-        .map(|r| MetricsSummary::compute(r, baseline))
-        .collect();
-
-    ExperimentOutput {
-        setup: setup.clone(),
-        runs,
-        summaries,
-    }
+    summarize(setup, runs)
 }
 
-/// Run with the default §5.3 policy set.
+/// Run with the default §5.3 policy set (policies fanned across threads).
 pub fn run_experiment(setup: &ExperimentSetup) -> ExperimentOutput {
     let policies: Vec<Box<dyn Policy>> = default_policies()
         .into_iter()
         .map(|k| k.build())
         .collect();
     run_with_policies(setup, &policies)
+}
+
+/// Fan one setup across a seed grid, one worker thread per seed, with
+/// the default policy set run serially inside each worker (the grid is
+/// the outer parallelism axis; seeds × policies cells total). Output
+/// order matches `seeds`.
+pub fn run_seed_grid(setup: &ExperimentSetup, seeds: &[u64]) -> Vec<ExperimentOutput> {
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = seeds
+            .iter()
+            .map(|&seed| {
+                let setup = setup.clone().with_seed(seed);
+                scope.spawn(move || {
+                    let policies: Vec<Box<dyn Policy>> = default_policies()
+                        .into_iter()
+                        .map(|k| k.build())
+                        .collect();
+                    run_with_policies_serial(&setup, &policies)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("seed grid thread panicked"))
+            .collect()
+    })
 }
 
 /// Figure 11 series: fairness index as a function of batch count for one
@@ -167,5 +256,61 @@ mod tests {
         let series = convergence_series(pf, &out.runs[0], 2);
         assert_eq!(series.len(), 5);
         assert!(series.iter().all(|(_, j)| (0.0..=1.0 + 1e-9).contains(j)));
+    }
+
+    /// The tentpole guarantee: the threaded runner is bit-identical to
+    /// the serial reference — same seeds ⇒ same sampled configurations,
+    /// same outcomes, same metrics.
+    #[test]
+    fn parallel_runner_matches_serial_exactly() {
+        let setup = setups::data_sharing_sales()[1].clone().quick(5);
+        let policies = || -> Vec<Box<dyn crate::alloc::Policy>> {
+            default_policies().into_iter().map(|k| k.build()).collect()
+        };
+        let par = run_with_policies(&setup, &policies());
+        let ser = run_with_policies_serial(&setup, &policies());
+        assert_eq!(par.runs.len(), ser.runs.len());
+        for (p, s) in par.runs.iter().zip(&ser.runs) {
+            assert_eq!(p.policy, s.policy);
+            assert_eq!(p.end_time, s.end_time);
+            assert_eq!(p.outcomes.len(), s.outcomes.len());
+            for (po, so) in p.outcomes.iter().zip(&s.outcomes) {
+                assert_eq!(po.id, so.id);
+                assert_eq!(po.start, so.start);
+                assert_eq!(po.finish, so.finish);
+                assert_eq!(po.from_cache, so.from_cache);
+            }
+            for (pb, sb) in p.batches.iter().zip(&s.batches) {
+                assert_eq!(pb.config, sb.config);
+                assert_eq!(pb.cache_utilization, sb.cache_utilization);
+            }
+        }
+        for (p, s) in par.summaries.iter().zip(&ser.summaries) {
+            assert_eq!(p.throughput_per_min, s.throughput_per_min);
+            assert_eq!(p.hit_ratio, s.hit_ratio);
+            assert_eq!(p.fairness_index, s.fairness_index);
+        }
+    }
+
+    /// Seed-grid fan-out: one output per seed, in seed order, each
+    /// identical to a direct run with that seed.
+    #[test]
+    fn seed_grid_matches_direct_runs() {
+        let setup = setups::tenant_scaling()[0].clone().quick(3);
+        let seeds = [11u64, 12];
+        let grid = run_seed_grid(&setup, &seeds);
+        assert_eq!(grid.len(), 2);
+        for (out, &seed) in grid.iter().zip(&seeds) {
+            assert_eq!(out.setup.seed, seed);
+            let direct = run_experiment(&setup.clone().with_seed(seed));
+            for (g, d) in out.runs.iter().zip(&direct.runs) {
+                assert_eq!(g.policy, d.policy);
+                assert_eq!(g.outcomes.len(), d.outcomes.len());
+                for (go, d_o) in g.outcomes.iter().zip(&d.outcomes) {
+                    assert_eq!(go.id, d_o.id);
+                    assert_eq!(go.finish, d_o.finish);
+                }
+            }
+        }
     }
 }

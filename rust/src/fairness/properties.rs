@@ -67,13 +67,13 @@ pub fn find_pareto_improvement(
     let m = space.len();
     let mut obj = vec![0.0; m];
     for &i in &active {
-        for (s, o) in obj.iter_mut().enumerate() {
-            *o += space.v[s][i];
+        for (o, row) in obj.iter_mut().zip(space.rows()) {
+            *o += row[i];
         }
     }
     let mut lp = Lp::new(obj);
     for &i in &active {
-        let row: Vec<f64> = (0..m).map(|s| space.v[s][i]).collect();
+        let row: Vec<f64> = space.rows().map(|r| r[i]).collect();
         lp.constrain(row, Cmp::Ge, current[i]);
     }
     lp.constrain(vec![1.0; m], Cmp::Le, 1.0);
@@ -120,13 +120,13 @@ pub fn find_blocking_coalition(
         //     ‖y‖ ≤ endowment, y ≥ 0.
         let mut obj = vec![0.0; m];
         for &i in &coalition {
-            for (s, o) in obj.iter_mut().enumerate() {
-                *o += space.v[s][i];
+            for (o, row) in obj.iter_mut().zip(space.rows()) {
+                *o += row[i];
             }
         }
         let mut lp = Lp::new(obj);
         for &i in &coalition {
-            let row: Vec<f64> = (0..m).map(|s| space.v[s][i]).collect();
+            let row: Vec<f64> = space.rows().map(|r| r[i]).collect();
             lp.constrain(row, Cmp::Ge, current[i]);
         }
         lp.constrain(vec![1.0; m], Cmp::Le, endowment);

@@ -211,6 +211,7 @@ mod tests {
     use crate::domain::dataset::{GB, MB};
     use crate::domain::tenant::TenantId;
     use crate::domain::view::ViewId;
+    use crate::util::mask::ConfigMask;
 
     fn query(id: u64, tenant: usize, views: Vec<usize>, bytes: u64) -> Query {
         Query {
@@ -226,7 +227,7 @@ mod tests {
 
     fn setup(cache_views: &[bool], sizes: &[u64]) -> CacheManager {
         let mut cm = CacheManager::new(100 * GB, sizes.to_vec());
-        cm.update(cache_views);
+        cm.update(&ConfigMask::from_bools(cache_views));
         // Drain materialization flags so tests measure steady-state
         // cache reads unless they opt in.
         for v in 0..sizes.len() {
@@ -262,7 +263,7 @@ mod tests {
         let engine = SimEngine::default();
         let sizes = [GB];
         let mut cm = CacheManager::new(100 * GB, sizes.to_vec());
-        cm.update(&[true]); // freshly marked, not yet materialized
+        cm.update(&ConfigMask::from_bools(&[true])); // freshly marked, not yet materialized
 
         let q1 = vec![query(1, 0, vec![0], GB)];
         let first = engine.execute_batch(0.0, &q1, &sizes, &mut cm, &[1.0]);

@@ -10,6 +10,7 @@
 use std::hint::black_box;
 use std::time::{Duration, Instant};
 
+use crate::util::json::Json;
 use crate::util::stats;
 
 /// Re-export of `std::hint::black_box` so benches don't need to import it.
@@ -161,6 +162,38 @@ impl BenchSuite {
         self.results.push(result);
     }
 
+    /// Machine-readable JSON of all results (ns/iter statistics per
+    /// benchmark) — the BENCH_*.json trajectory files future PRs diff
+    /// against.
+    pub fn to_json(&self) -> Json {
+        let benchmarks = Json::Array(
+            self.results
+                .iter()
+                .map(|r| {
+                    Json::from_pairs(vec![
+                        ("name", Json::String(r.name.clone())),
+                        ("mean_ns_per_iter", Json::Number(r.mean_ns())),
+                        ("p50_ns_per_iter", Json::Number(r.p50_ns())),
+                        ("p95_ns_per_iter", Json::Number(r.p95_ns())),
+                        ("min_ns_per_iter", Json::Number(r.min_ns())),
+                        ("iters_per_sample", Json::Number(r.iters_per_sample as f64)),
+                        ("iters_per_sec", Json::Number(r.throughput_per_sec())),
+                    ])
+                })
+                .collect(),
+        );
+        Json::from_pairs(vec![
+            ("suite", Json::String(self.name.clone())),
+            ("samples_per_bench", Json::Number(self.config.samples as f64)),
+            ("benchmarks", benchmarks),
+        ])
+    }
+
+    /// Write the JSON report to `path`.
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+    }
+
     /// Markdown table of all results.
     pub fn markdown(&self) -> String {
         let mut out = format!("### {}\n\n", self.name);
@@ -213,6 +246,27 @@ mod tests {
         let md = suite.markdown();
         assert!(md.contains("| a |"));
         assert!(md.contains("| b |"));
+    }
+
+    #[test]
+    fn json_report_has_all_fields() {
+        let mut suite = BenchSuite::new("unit");
+        suite.config = BenchConfig {
+            warmup: Duration::from_millis(2),
+            samples: 3,
+            sample_target: Duration::from_millis(1),
+        };
+        suite.bench("sum", || (0..100u64).sum::<u64>());
+        let json = suite.to_json();
+        assert_eq!(json.get("suite").unwrap().as_str().unwrap(), "unit");
+        let benches = json.get("benchmarks").unwrap().as_array().unwrap();
+        assert_eq!(benches.len(), 1);
+        let b = &benches[0];
+        assert_eq!(b.get("name").unwrap().as_str().unwrap(), "sum");
+        assert!(b.get("mean_ns_per_iter").unwrap().as_f64().unwrap() > 0.0);
+        // Round-trips through the parser.
+        let text = json.to_string_pretty();
+        assert_eq!(Json::parse(&text).unwrap(), json);
     }
 
     #[test]

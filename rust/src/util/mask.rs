@@ -1,0 +1,330 @@
+//! `ConfigMask` — the compact cache-configuration representation used by
+//! every layer of the solve path (policies, configuration space, cache
+//! manager, coordinator records).
+//!
+//! A configuration is a subset of the candidate views (Definition 2).
+//! Representing it as a `u64`-block bitset instead of a `Vec<bool>`
+//! makes the operations the per-batch solve hammers — subset tests
+//! against query-class view sets, equality/dedup during configuration
+//! pruning, hashing for the interning arena — single word ops instead of
+//! per-view walks, and shrinks every stored configuration to
+//! ⌈n_views/64⌉ words.
+//!
+//! Invariant: bits at positions ≥ `n_bits` are always zero, so
+//! `Eq`/`Ord`/`Hash` agree with set semantics. `Ord` mirrors the legacy
+//! `Vec<bool>` lexicographic order (index 0 first, `false < true`), so
+//! `BTreeMap`-based allocation merging visits configurations exactly as
+//! the pre-mask code did — sampling stays reproducible across the
+//! refactor.
+
+use std::cmp::Ordering;
+use std::fmt;
+
+/// A fixed-width bitset over the candidate views of one batch problem.
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct ConfigMask {
+    n_bits: usize,
+    words: Vec<u64>,
+}
+
+impl ConfigMask {
+    /// The empty configuration over `n_bits` candidate views.
+    pub fn empty(n_bits: usize) -> Self {
+        Self {
+            n_bits,
+            words: vec![0; n_bits.div_ceil(64)],
+        }
+    }
+
+    /// Build from an explicit per-view selection slice.
+    pub fn from_bools(bits: &[bool]) -> Self {
+        let mut mask = Self::empty(bits.len());
+        for (i, &b) in bits.iter().enumerate() {
+            if b {
+                mask.words[i / 64] |= 1u64 << (i % 64);
+            }
+        }
+        mask
+    }
+
+    /// Build from set-bit indices (need not be sorted or unique).
+    pub fn from_indices(n_bits: usize, indices: &[usize]) -> Self {
+        let mut mask = Self::empty(n_bits);
+        for &i in indices {
+            mask.set(i, true);
+        }
+        mask
+    }
+
+    /// Expand to the legacy per-view representation (reporting, tests).
+    pub fn to_bools(&self) -> Vec<bool> {
+        (0..self.n_bits).map(|i| self.get(i)).collect()
+    }
+
+    /// Number of candidate views this mask ranges over (not the number
+    /// of selected views — see [`ConfigMask::count_ones`]).
+    pub fn n_bits(&self) -> usize {
+        self.n_bits
+    }
+
+    /// Is view `i` selected?
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        assert!(i < self.n_bits, "bit {i} out of range ({} bits)", self.n_bits);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    /// Select (`true`) or deselect (`false`) view `i`.
+    #[inline]
+    pub fn set(&mut self, i: usize, value: bool) {
+        assert!(i < self.n_bits, "bit {i} out of range ({} bits)", self.n_bits);
+        let (w, b) = (i / 64, i % 64);
+        if value {
+            self.words[w] |= 1u64 << b;
+        } else {
+            self.words[w] &= !(1u64 << b);
+        }
+    }
+
+    /// Select view `i`.
+    #[inline]
+    pub fn insert(&mut self, i: usize) {
+        self.set(i, true);
+    }
+
+    /// Number of selected views.
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// True iff no view is selected.
+    pub fn none_set(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
+    /// Word-wise subset test: does `self` contain every view in
+    /// `required`? This is the all-or-nothing utility-model check
+    /// (`R(q) ⊆ S`) — the innermost operation of `utilities()` and the
+    /// WELFARE oracle evaluation.
+    #[inline]
+    pub fn contains_all(&self, required: &ConfigMask) -> bool {
+        debug_assert_eq!(self.n_bits, required.n_bits);
+        required
+            .words
+            .iter()
+            .zip(&self.words)
+            .all(|(r, s)| r & !s == 0)
+    }
+
+    /// Do the two masks share any selected view?
+    pub fn intersects(&self, other: &ConfigMask) -> bool {
+        debug_assert_eq!(self.n_bits, other.n_bits);
+        self.words.iter().zip(&other.words).any(|(a, b)| a & b != 0)
+    }
+
+    /// In-place union.
+    pub fn union_with(&mut self, other: &ConfigMask) {
+        debug_assert_eq!(self.n_bits, other.n_bits);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a |= b;
+        }
+    }
+
+    /// Hamming distance (number of views whose selection differs) —
+    /// the per-batch cache-churn measure.
+    pub fn diff_count(&self, other: &ConfigMask) -> usize {
+        debug_assert_eq!(self.n_bits, other.n_bits);
+        self.words
+            .iter()
+            .zip(&other.words)
+            .map(|(a, b)| (a ^ b).count_ones() as usize)
+            .sum()
+    }
+
+    /// Iterate the selected view indices in ascending order.
+    pub fn ones(&self) -> Ones<'_> {
+        Ones {
+            words: &self.words,
+            word_idx: 0,
+            current: self.words.first().copied().unwrap_or(0),
+        }
+    }
+
+    /// Raw words (for accelerated backends that marshal the mask).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+}
+
+impl Ord for ConfigMask {
+    /// Lexicographic on the per-view bools from index 0, `false < true`
+    /// — identical to `Vec<bool>`'s ordering. Per word pair, the lowest
+    /// differing bit decides.
+    fn cmp(&self, other: &Self) -> Ordering {
+        for (a, b) in self.words.iter().zip(&other.words) {
+            let d = a ^ b;
+            if d != 0 {
+                let bit = d.trailing_zeros();
+                return if (a >> bit) & 1 == 0 {
+                    Ordering::Less
+                } else {
+                    Ordering::Greater
+                };
+            }
+        }
+        self.n_bits.cmp(&other.n_bits)
+    }
+}
+
+impl PartialOrd for ConfigMask {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl fmt::Debug for ConfigMask {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "ConfigMask[")?;
+        for i in 0..self.n_bits {
+            write!(f, "{}", if self.get(i) { '1' } else { '0' })?;
+        }
+        write!(f, "]")
+    }
+}
+
+/// Iterator over set-bit indices (see [`ConfigMask::ones`]).
+pub struct Ones<'a> {
+    words: &'a [u64],
+    word_idx: usize,
+    current: u64,
+}
+
+impl Iterator for Ones<'_> {
+    type Item = usize;
+
+    fn next(&mut self) -> Option<usize> {
+        while self.current == 0 {
+            self.word_idx += 1;
+            self.current = *self.words.get(self.word_idx)?;
+        }
+        let bit = self.current.trailing_zeros() as usize;
+        self.current &= self.current - 1;
+        Some(self.word_idx * 64 + bit)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_bools() {
+        for n in [0usize, 1, 3, 63, 64, 65, 130] {
+            let bits: Vec<bool> = (0..n).map(|i| i % 3 == 0).collect();
+            let mask = ConfigMask::from_bools(&bits);
+            assert_eq!(mask.n_bits(), n);
+            assert_eq!(mask.to_bools(), bits);
+            assert_eq!(mask.count_ones(), bits.iter().filter(|&&b| b).count());
+        }
+    }
+
+    #[test]
+    fn ones_iterates_ascending_set_bits() {
+        let mask = ConfigMask::from_indices(130, &[0, 5, 63, 64, 129, 5]);
+        let got: Vec<usize> = mask.ones().collect();
+        assert_eq!(got, vec![0, 5, 63, 64, 129]);
+        assert!(ConfigMask::empty(70).ones().next().is_none());
+        assert!(ConfigMask::empty(0).ones().next().is_none());
+    }
+
+    #[test]
+    fn subset_tests_match_per_view_semantics() {
+        let all = ConfigMask::from_bools(&[true, true, true, true]);
+        let some = ConfigMask::from_bools(&[true, false, true, false]);
+        let other = ConfigMask::from_bools(&[false, true, false, false]);
+        let empty = ConfigMask::empty(4);
+        assert!(all.contains_all(&some));
+        assert!(!some.contains_all(&all));
+        assert!(some.contains_all(&some));
+        assert!(some.contains_all(&empty));
+        assert!(!some.contains_all(&other));
+        assert!(!some.intersects(&other));
+        assert!(all.intersects(&other));
+    }
+
+    #[test]
+    fn multiword_subset() {
+        let big = ConfigMask::from_indices(200, &[3, 64, 150, 199]);
+        let sub = ConfigMask::from_indices(200, &[64, 199]);
+        let not_sub = ConfigMask::from_indices(200, &[64, 100]);
+        assert!(big.contains_all(&sub));
+        assert!(!big.contains_all(&not_sub));
+    }
+
+    #[test]
+    fn set_get_and_union() {
+        let mut m = ConfigMask::empty(80);
+        m.insert(79);
+        m.set(2, true);
+        assert!(m.get(79) && m.get(2) && !m.get(3));
+        m.set(79, false);
+        assert!(!m.get(79));
+        let mut a = ConfigMask::from_indices(80, &[1]);
+        a.union_with(&ConfigMask::from_indices(80, &[70]));
+        assert_eq!(a.ones().collect::<Vec<_>>(), vec![1, 70]);
+    }
+
+    #[test]
+    fn diff_count_is_hamming_distance() {
+        let a = ConfigMask::from_bools(&[true, false, true, false]);
+        let b = ConfigMask::from_bools(&[true, true, false, false]);
+        assert_eq!(a.diff_count(&b), 2);
+        assert_eq!(a.diff_count(&a), 0);
+    }
+
+    #[test]
+    fn eq_ord_hash_consistency() {
+        use std::collections::HashMap;
+        let a = ConfigMask::from_bools(&[true, false]);
+        let b = ConfigMask::from_indices(2, &[0]);
+        assert_eq!(a, b);
+        let mut map: HashMap<ConfigMask, usize> = HashMap::new();
+        map.insert(a.clone(), 1);
+        assert_eq!(map.get(&b), Some(&1));
+        // Legacy Vec<bool> lexicographic order: index 0 decides first.
+        let c = ConfigMask::from_bools(&[false, true]);
+        assert!(c < a, "false at index 0 sorts before true");
+    }
+
+    #[test]
+    fn ord_matches_vec_bool_lexicographic() {
+        let mut rng_state = 0x9e3779b97f4a7c15u64;
+        let mut next = move || {
+            rng_state ^= rng_state << 13;
+            rng_state ^= rng_state >> 7;
+            rng_state ^= rng_state << 17;
+            rng_state
+        };
+        for n in [1usize, 2, 7, 64, 65, 130] {
+            for _ in 0..50 {
+                let x: Vec<bool> = (0..n).map(|_| next() & 1 == 1).collect();
+                let y: Vec<bool> = (0..n).map(|_| next() & 1 == 1).collect();
+                let mx = ConfigMask::from_bools(&x);
+                let my = ConfigMask::from_bools(&y);
+                assert_eq!(mx.cmp(&my), x.cmp(&y), "x={x:?} y={y:?}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_get_panics() {
+        ConfigMask::empty(4).get(4);
+    }
+
+    #[test]
+    fn debug_renders_bit_string() {
+        let m = ConfigMask::from_bools(&[true, false, true]);
+        assert_eq!(format!("{m:?}"), "ConfigMask[101]");
+    }
+}

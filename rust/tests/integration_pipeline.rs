@@ -77,13 +77,7 @@ fn cache_budget_never_exceeded() {
     for kind in [PolicyKind::Static, PolicyKind::Mmf, PolicyKind::FastPf, PolicyKind::Optp] {
         let r = run(kind, &universe, specs.clone(), 6, 3);
         for b in &r.batches {
-            let used: u64 = b
-                .config
-                .iter()
-                .zip(&sizes)
-                .filter(|(&c, _)| c)
-                .map(|(_, &s)| s)
-                .sum();
+            let used: u64 = b.config.ones().map(|v| sizes[v]).sum();
             assert!(
                 used <= budget,
                 "{}: batch {} used {used} > budget {budget}",

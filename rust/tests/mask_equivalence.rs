@@ -1,0 +1,231 @@
+//! Mask-path equivalence: the `ConfigMask`/`BatchIndex` fast paths must
+//! be *bit-exact* with the legacy `Vec<bool>` per-view semantics for
+//! `utilities()`, `scaled_utilities()`, `tenant_utility()`, `size_of()`,
+//! and the WELFARE oracle (template vs. freshly built instance) — on the
+//! paper's canonical Tables 2–5 and on randomized instances (seeded
+//! `Pcg64`), including multi-view query classes the matrix instances
+//! don't exercise.
+//!
+//! The legacy reference below is a verbatim reimplementation of the
+//! pre-refactor evaluation code: per-class `views.iter().all(|&v|
+//! sel[v])` walks, `u / u_star` scaling, per-view size filters.
+
+use robus::alloc::instances::{matrix_instance, table2, table3, table4, table5};
+use robus::alloc::ConfigMask;
+use robus::domain::dataset::DatasetCatalog;
+use robus::domain::query::{Query, QueryId};
+use robus::domain::tenant::{TenantId, TenantSet};
+use robus::domain::utility::BatchUtilities;
+use robus::domain::view::{ViewCatalog, ViewId, ViewKind};
+use robus::util::proptest::{check, no_shrink};
+use robus::util::rng::Pcg64;
+
+// ---- the legacy Vec<bool> reference semantics --------------------------
+
+fn legacy_utilities(b: &BatchUtilities, sel: &[bool]) -> Vec<f64> {
+    let mut u = vec![0.0; b.n_tenants];
+    for c in &b.classes {
+        if c.views.iter().all(|&v| sel[v]) {
+            u[c.tenant] += c.utility;
+        }
+    }
+    u
+}
+
+fn legacy_scaled_utilities(b: &BatchUtilities, sel: &[bool]) -> Vec<f64> {
+    legacy_utilities(b, sel)
+        .iter()
+        .enumerate()
+        .map(|(i, &u)| if b.u_star[i] > 0.0 { u / b.u_star[i] } else { 1.0 })
+        .collect()
+}
+
+fn legacy_tenant_utility(b: &BatchUtilities, tenant: usize, sel: &[bool]) -> f64 {
+    b.classes
+        .iter()
+        .filter(|c| c.tenant == tenant && c.views.iter().all(|&v| sel[v]))
+        .map(|c| c.utility)
+        .sum()
+}
+
+fn legacy_size_of(b: &BatchUtilities, sel: &[bool]) -> f64 {
+    b.view_sizes
+        .iter()
+        .zip(sel)
+        .filter(|(_, &s)| s)
+        .map(|(sz, _)| *sz)
+        .sum()
+}
+
+/// Every subset of up to `n_views` views when small, else `samples`
+/// random subsets.
+fn selections(b: &BatchUtilities, rng: &mut Pcg64, samples: usize) -> Vec<Vec<bool>> {
+    let nv = b.n_views();
+    if nv <= 10 {
+        (0u32..(1 << nv))
+            .map(|mask| (0..nv).map(|v| mask & (1 << v) != 0).collect())
+            .collect()
+    } else {
+        (0..samples)
+            .map(|_| (0..nv).map(|_| rng.below(2) == 1).collect())
+            .collect()
+    }
+}
+
+fn assert_batch_equivalence(b: &BatchUtilities, rng: &mut Pcg64) {
+    for sel in selections(b, rng, 64) {
+        let mask = ConfigMask::from_bools(&sel);
+        assert_eq!(
+            b.utilities(&mask),
+            legacy_utilities(b, &sel),
+            "utilities diverge on {sel:?}"
+        );
+        assert_eq!(
+            b.scaled_utilities(&mask),
+            legacy_scaled_utilities(b, &sel),
+            "scaled_utilities diverge on {sel:?}"
+        );
+        assert_eq!(
+            b.size_of(&mask),
+            legacy_size_of(b, &sel),
+            "size_of diverges on {sel:?}"
+        );
+        for t in 0..b.n_tenants {
+            assert_eq!(
+                b.tenant_utility(t, &mask),
+                legacy_tenant_utility(b, t, &sel),
+                "tenant_utility({t}) diverges on {sel:?}"
+            );
+        }
+    }
+}
+
+fn assert_welfare_equivalence(b: &BatchUtilities, rng: &mut Pcg64) {
+    let mut template = b.welfare_template();
+    for _ in 0..8 {
+        let w = rng.unit_weight_vector(b.n_tenants);
+        let via_template = template.solve(&w);
+        let via_problem = b.welfare_problem(&w).solve_exact();
+        assert_eq!(via_template.selected, via_problem.selected, "w={w:?}");
+        assert_eq!(via_template.value, via_problem.value, "w={w:?}");
+    }
+}
+
+// ---- canonical instances ----------------------------------------------
+
+#[test]
+fn tables_2_to_5_bit_exact() {
+    let mut rng = Pcg64::new(2024);
+    for b in [table2(), table3(), table4(4), table4(6), table5()] {
+        assert_batch_equivalence(&b, &mut rng);
+        assert_welfare_equivalence(&b, &mut rng);
+    }
+}
+
+// ---- randomized instances ---------------------------------------------
+
+/// Random single-view utility matrices (the Tables 2–5 shape).
+#[test]
+fn random_matrix_instances_bit_exact() {
+    check(
+        40,
+        |rng| {
+            let n_tenants = 1 + rng.index(5);
+            let n_views = 1 + rng.index(8);
+            let rows: Vec<Vec<u64>> = (0..n_tenants)
+                .map(|_| (0..n_views).map(|_| rng.below(6)).collect())
+                .collect();
+            let budget = 1.0 + rng.index(n_views) as f64;
+            (rows, budget)
+        },
+        no_shrink,
+        |(rows, budget)| {
+            let refs: Vec<&[u64]> = rows.iter().map(|r| r.as_slice()).collect();
+            let b = matrix_instance(&refs, *budget);
+            let mut rng = Pcg64::new(7);
+            assert_batch_equivalence(&b, &mut rng);
+            assert_welfare_equivalence(&b, &mut rng);
+            Ok(())
+        },
+    );
+}
+
+/// Random instances with multi-view query classes (all-or-nothing sets
+/// spanning several views) and non-unit view sizes.
+#[test]
+fn random_multiview_instances_bit_exact() {
+    check(
+        30,
+        |rng| {
+            let n_tenants = 1 + rng.index(4);
+            let n_views = 2 + rng.index(12);
+            let n_queries = 1 + rng.index(20);
+            let sizes: Vec<u64> = (0..n_views).map(|_| 50 + rng.below(200)).collect();
+            let queries: Vec<(usize, Vec<usize>, u64)> = (0..n_queries)
+                .map(|_| {
+                    let tenant = rng.index(n_tenants);
+                    let k = 1 + rng.index(3.min(n_views));
+                    let mut views: Vec<usize> = (0..n_views).collect();
+                    rng.shuffle(&mut views);
+                    views.truncate(k);
+                    (tenant, views, 1 + rng.below(100))
+                })
+                .collect();
+            let total: u64 = sizes.iter().sum();
+            let budget = (total as f64) * (0.2 + 0.6 * rng.next_f64());
+            (n_tenants, sizes, queries, budget)
+        },
+        no_shrink,
+        |(n_tenants, sizes, queries, budget)| {
+            let mut ds = DatasetCatalog::new();
+            let mut vc = ViewCatalog::new();
+            for (v, &sz) in sizes.iter().enumerate() {
+                let d = ds.add(&format!("d{v}"), sz);
+                vc.add(&format!("v{v}"), d, ViewKind::BaseTable, sz, sz);
+            }
+            let ts = TenantSet::equal(*n_tenants);
+            let qs: Vec<Query> = queries
+                .iter()
+                .enumerate()
+                .map(|(i, (tenant, views, bytes))| Query {
+                    id: QueryId(i as u64 + 1),
+                    tenant: TenantId(*tenant),
+                    arrival: 0.0,
+                    template: format!("q{i}"),
+                    required_views: views.iter().map(|&v| ViewId(v)).collect(),
+                    bytes_read: *bytes,
+                    compute_cost: 0.0,
+                })
+                .collect();
+            let b = BatchUtilities::build(&ts, &vc, *budget, &qs, None);
+            let mut rng = Pcg64::new(13);
+            assert_batch_equivalence(&b, &mut rng);
+            assert_welfare_equivalence(&b, &mut rng);
+            Ok(())
+        },
+    );
+}
+
+/// The interning arena dedups without changing the v-matrix contents.
+#[test]
+fn config_space_rows_match_scaled_utilities() {
+    use robus::alloc::ConfigSpace;
+    let mut rng = Pcg64::new(77);
+    for b in [table3(), table4(5)] {
+        let space = ConfigSpace::pruned(&b, 30, &mut rng);
+        // No duplicate masks after interning.
+        for (i, a) in space.masks().iter().enumerate() {
+            for bm in &space.masks()[i + 1..] {
+                assert_ne!(a, bm, "duplicate mask survived interning");
+            }
+        }
+        // Rows are exactly the (legacy-equivalent) scaled utilities.
+        for (s, mask) in space.masks().iter().enumerate() {
+            assert_eq!(space.v_row(s), b.scaled_utilities(mask).as_slice());
+            assert_eq!(
+                b.scaled_utilities(mask),
+                legacy_scaled_utilities(&b, &mask.to_bools())
+            );
+        }
+    }
+}
