@@ -1,0 +1,87 @@
+//! End-to-end coordinator benchmarks (`cargo bench --bench
+//! coordinator_bench`): full multi-batch runs through generation →
+//! solve → cache transition → simulated execution, serial vs pipelined.
+//!
+//! Besides the usual ns/iter suite, this writes
+//! `BENCH_coordinator.json` with the service-level numbers the
+//! trajectory tracks: batches/sec, p50/p99 solve latency, and the
+//! pipeline stall fraction (share of host wall-clock the executor spent
+//! waiting on solves — ≈1 serial, → 0 as the pipeline hides the solve).
+
+use robus::alloc::{Policy, PolicyKind};
+use robus::coordinator::RunResult;
+use robus::experiments::runner::{run_with_policies_pipelined, run_with_policies_serial};
+use robus::experiments::setups;
+use robus::util::bench::BenchSuite;
+use robus::util::json::Json;
+
+fn policies() -> Vec<Box<dyn Policy>> {
+    vec![PolicyKind::FastPf.build()]
+}
+
+fn run_detail(r: &RunResult, mode: &str, depth: usize) -> Json {
+    Json::from_pairs(vec![
+        ("mode", Json::String(mode.to_string())),
+        ("pipeline_depth", Json::Number(depth as f64)),
+        ("policy", Json::String(r.policy.to_string())),
+        ("batches", Json::Number(r.batches.len() as f64)),
+        ("queries", Json::Number(r.outcomes.len() as f64)),
+        ("host_wall_secs", Json::Number(r.host_wall_secs)),
+        ("batches_per_sec", Json::Number(r.batches_per_sec())),
+        ("solve_ms_p50", Json::Number(r.solve_ms_percentile(50.0))),
+        ("solve_ms_p99", Json::Number(r.solve_ms_percentile(99.0))),
+        ("stall_fraction", Json::Number(r.stall_fraction())),
+        (
+            "max_queue_depth",
+            Json::Number(
+                r.batches.iter().map(|b| b.queue_depth).max().unwrap_or(0) as f64,
+            ),
+        ),
+    ])
+}
+
+fn main() {
+    let mut suite = BenchSuite::new("coordinator end-to-end");
+    // Sales G2, 10 batches, FASTPF: the §5.3 shape at bench-able size.
+    let setup = setups::data_sharing_sales()[1].clone().quick(10);
+
+    suite.bench("coordinator_serial_10b_fastpf", || {
+        run_with_policies_serial(&setup, &policies()).runs[0]
+            .outcomes
+            .len()
+    });
+    suite.bench("coordinator_pipelined_d2_10b_fastpf", || {
+        run_with_policies_pipelined(&setup, &policies(), 2).runs[0]
+            .outcomes
+            .len()
+    });
+    // The default four-policy comparison, serial, as the heavyweight
+    // end-to-end reference point.
+    suite.bench("experiment_4policy_serial_6b", || {
+        let s = setups::data_sharing_sales()[0].clone().quick(6);
+        let ps: Vec<Box<dyn Policy>> = robus::experiments::runner::default_policies()
+            .into_iter()
+            .map(|k| k.build())
+            .collect();
+        run_with_policies_serial(&s, &ps).runs.len()
+    });
+
+    // One instrumented run per mode for the service-level numbers.
+    let serial = run_with_policies_serial(&setup, &policies());
+    let pipelined = run_with_policies_pipelined(&setup, &policies(), 2);
+    let runs = Json::Array(vec![
+        run_detail(&serial.runs[0], "serial", 0),
+        run_detail(&pipelined.runs[0], "pipelined", 2),
+    ]);
+    let report = Json::from_pairs(vec![
+        ("suite", Json::String("coordinator end-to-end".to_string())),
+        ("microbench", suite.to_json()),
+        ("runs", runs),
+    ]);
+
+    println!("\n{}", suite.markdown());
+    match std::fs::write("BENCH_coordinator.json", report.to_string_pretty()) {
+        Ok(()) => println!("(wrote BENCH_coordinator.json)"),
+        Err(e) => eprintln!("warn: could not write BENCH_coordinator.json: {e}"),
+    }
+}

@@ -1,19 +1,69 @@
-//! The cache manager: tracks which candidate views are materialized,
-//! applies per-batch configuration updates (lazily — Spark materializes
-//! a marked view when the first query touches it, §5.1), and produces
-//! the stateful utility boost of §5.4 (already-cached views get their
-//! estimated benefit multiplied by γ > 1, making them likelier to stay).
+//! The cache manager: tracks which candidate views are materialized and
+//! applies per-batch configuration updates as **incremental transitions**
+//! — each update is a [`CacheDelta`] (what loads, what evicts, how many
+//! bytes move) rather than a whole-configuration swap, with cumulative
+//! [`TransitionStats`] so the stateful mode (§5.4) and the Figure 12
+//! batch-size sweep reflect actual churn. Loads stay lazy (Spark
+//! materializes a marked view when the first query touches it, §5.1):
+//! the in-flight set scheduled by the deltas is what the simulator
+//! charges materialization costs from.
 //!
-//! Cache contents and pending-materialization state are [`ConfigMask`]
-//! bitsets, matching the configuration representation the policies emit.
+//! Cache contents and in-flight-load state are [`ConfigMask`] bitsets,
+//! matching the configuration representation the policies emit.
 
 use crate::util::mask::ConfigMask;
 
-/// Views loaded/evicted by one update.
-#[derive(Debug, Clone, PartialEq)]
+/// The §5.4 stateful boost vector for a given cache contents mask: γ for
+/// cached views, 1.0 otherwise. Shared by [`CacheManager::boost_vector`]
+/// and the pipelined planner's cache mirror (which must produce
+/// bit-identical boosts without holding the manager itself).
+pub fn stateful_boost(cached: &ConfigMask, gamma: f64) -> Vec<f64> {
+    (0..cached.n_bits())
+        .map(|v| if cached.get(v) { gamma } else { 1.0 })
+        .collect()
+}
+
+/// One incremental cache transition: the views (and bytes) that enter
+/// and leave on an update. `loaded`/`evicted` are ascending view ids.
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct CacheDelta {
     pub loaded: Vec<usize>,
     pub evicted: Vec<usize>,
+    /// Bytes scheduled for (lazy) materialization by this transition.
+    pub bytes_loaded: u64,
+    /// Bytes freed by this transition.
+    pub bytes_evicted: u64,
+}
+
+impl CacheDelta {
+    /// No views moved.
+    pub fn is_empty(&self) -> bool {
+        self.loaded.is_empty() && self.evicted.is_empty()
+    }
+
+    /// Number of views that changed state (the per-batch churn count).
+    pub fn churn(&self) -> usize {
+        self.loaded.len() + self.evicted.len()
+    }
+}
+
+/// Cumulative transition accounting across a run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TransitionStats {
+    /// Updates applied.
+    pub updates: usize,
+    /// Views scheduled for load / evicted, summed over all deltas.
+    pub views_loaded: usize,
+    pub views_evicted: usize,
+    pub bytes_loaded: u64,
+    pub bytes_evicted: u64,
+    /// Materialization charges actually consumed by the executor (first
+    /// touch of an in-flight view).
+    pub materializations: usize,
+    pub bytes_materialized: u64,
+    /// Loads evicted again before any query touched them — pure wasted
+    /// churn (the cost the stateful γ boost exists to suppress).
+    pub cancelled_loads: usize,
 }
 
 /// Cache state across batches.
@@ -25,9 +75,11 @@ pub struct CacheManager {
     sizes: Vec<u64>,
     /// Current contents.
     cached: ConfigMask,
-    /// Marked-for-caching but not yet materialized (first access pays
-    /// the disk read + materialization penalty).
-    pending_load: ConfigMask,
+    /// Scheduled by a transition but not yet materialized (first access
+    /// pays the disk read + materialization penalty).
+    in_flight: ConfigMask,
+    /// Cumulative transition accounting.
+    stats: TransitionStats,
 }
 
 impl CacheManager {
@@ -37,7 +89,8 @@ impl CacheManager {
             budget,
             sizes,
             cached: ConfigMask::empty(n),
-            pending_load: ConfigMask::empty(n),
+            in_flight: ConfigMask::empty(n),
+            stats: TransitionStats::default(),
         }
     }
 
@@ -51,6 +104,17 @@ impl CacheManager {
 
     pub fn cached(&self) -> &ConfigMask {
         &self.cached
+    }
+
+    /// Views scheduled for load whose materialization has not been
+    /// charged yet.
+    pub fn pending_loads(&self) -> &ConfigMask {
+        &self.in_flight
+    }
+
+    /// Cumulative transition accounting since construction.
+    pub fn transition_stats(&self) -> &TransitionStats {
+        &self.stats
     }
 
     pub fn is_cached(&self, view: usize) -> bool {
@@ -69,8 +133,30 @@ impl CacheManager {
         self.used_bytes() as f64 / self.budget as f64
     }
 
-    /// Apply a target configuration (Figure 2 step 3): evict views
-    /// leaving the config, mark entering views for lazy materialization.
+    /// The transition `update(target)` would apply, without applying it
+    /// (planner-side lookahead and tests).
+    pub fn delta_to(&self, target: &ConfigMask) -> CacheDelta {
+        assert_eq!(target.n_bits(), self.sizes.len());
+        let mut delta = CacheDelta::default();
+        for v in 0..self.sizes.len() {
+            match (self.cached.get(v), target.get(v)) {
+                (false, true) => {
+                    delta.loaded.push(v);
+                    delta.bytes_loaded += self.sizes[v];
+                }
+                (true, false) => {
+                    delta.evicted.push(v);
+                    delta.bytes_evicted += self.sizes[v];
+                }
+                _ => {}
+            }
+        }
+        delta
+    }
+
+    /// Apply a target configuration (Figure 2 step 3) as an incremental
+    /// transition: evict views leaving the config, schedule entering
+    /// views for lazy materialization, and account the byte movement.
     /// Panics if the target exceeds the budget — policies must produce
     /// feasible configurations.
     pub fn update(&mut self, target: &ConfigMask) -> CacheDelta {
@@ -81,33 +167,36 @@ impl CacheManager {
             "target config {target_bytes}B exceeds budget {}B",
             self.budget
         );
-        let mut delta = CacheDelta {
-            loaded: Vec::new(),
-            evicted: Vec::new(),
-        };
-        for v in 0..self.sizes.len() {
-            match (self.cached.get(v), target.get(v)) {
-                (false, true) => {
-                    self.cached.set(v, true);
-                    self.pending_load.set(v, true);
-                    delta.loaded.push(v);
-                }
-                (true, false) => {
-                    self.cached.set(v, false);
-                    self.pending_load.set(v, false);
-                    delta.evicted.push(v);
-                }
-                _ => {}
+        let delta = self.delta_to(target);
+        for &v in &delta.loaded {
+            self.cached.set(v, true);
+            self.in_flight.set(v, true);
+        }
+        for &v in &delta.evicted {
+            self.cached.set(v, false);
+            if self.in_flight.get(v) {
+                // Scheduled load never touched by a query: wasted churn.
+                self.in_flight.set(v, false);
+                self.stats.cancelled_loads += 1;
             }
         }
+        self.stats.updates += 1;
+        self.stats.views_loaded += delta.loaded.len();
+        self.stats.views_evicted += delta.evicted.len();
+        self.stats.bytes_loaded += delta.bytes_loaded;
+        self.stats.bytes_evicted += delta.bytes_evicted;
         delta
     }
 
-    /// True exactly once per loaded view: the first accessor materializes
-    /// it (pays disk bandwidth + penalty); later accesses hit memory.
-    pub fn consume_materialization(&mut self, view: usize) -> bool {
-        if self.cached.get(view) && self.pending_load.get(view) {
-            self.pending_load.set(view, false);
+    /// Charge the materialization cost of `view` from the scheduled
+    /// transition: true exactly once per loaded view — the first
+    /// accessor materializes it (pays disk bandwidth + penalty); later
+    /// accesses hit memory.
+    pub fn charge_materialization(&mut self, view: usize) -> bool {
+        if self.cached.get(view) && self.in_flight.get(view) {
+            self.in_flight.set(view, false);
+            self.stats.materializations += 1;
+            self.stats.bytes_materialized += self.sizes[view];
             true
         } else {
             false
@@ -117,9 +206,7 @@ impl CacheManager {
     /// The §5.4 stateful boost vector: γ for currently cached views,
     /// 1.0 otherwise. Feed to [`crate::domain::BatchUtilities::build`].
     pub fn boost_vector(&self, gamma: f64) -> Vec<f64> {
-        (0..self.sizes.len())
-            .map(|v| if self.cached.get(v) { gamma } else { 1.0 })
-            .collect()
+        stateful_boost(&self.cached, gamma)
     }
 }
 
@@ -137,13 +224,33 @@ mod tests {
         let d1 = cm.update(&mask(&[true, true, false]));
         assert_eq!(d1.loaded, vec![0, 1]);
         assert!(d1.evicted.is_empty());
+        assert_eq!(d1.bytes_loaded, 90);
+        assert_eq!(d1.bytes_evicted, 0);
         assert_eq!(cm.used_bytes(), 90);
         assert!((cm.utilization() - 0.9).abs() < 1e-12);
 
         let d2 = cm.update(&mask(&[true, false, true]));
         assert_eq!(d2.loaded, vec![2]);
         assert_eq!(d2.evicted, vec![1]);
+        assert_eq!(d2.bytes_loaded, 30);
+        assert_eq!(d2.bytes_evicted, 50);
+        assert_eq!(d2.churn(), 2);
         assert_eq!(cm.used_bytes(), 70);
+    }
+
+    #[test]
+    fn delta_preview_matches_update_and_is_pure() {
+        let mut cm = CacheManager::new(100, vec![40, 50, 30]);
+        cm.update(&mask(&[true, true, false]));
+        let target = mask(&[false, true, true]);
+        let used_before = cm.used_bytes();
+        let pending_before = cm.pending_loads().clone();
+        let preview = cm.delta_to(&target);
+        // The preview mutated nothing.
+        assert_eq!(cm.used_bytes(), used_before);
+        assert_eq!(cm.pending_loads(), &pending_before);
+        let applied = cm.update(&target);
+        assert_eq!(preview, applied);
     }
 
     #[test]
@@ -154,23 +261,47 @@ mod tests {
     }
 
     #[test]
-    fn lazy_materialization_consumed_once() {
+    fn lazy_materialization_charged_once() {
         let mut cm = CacheManager::new(100, vec![50]);
         cm.update(&mask(&[true]));
-        assert!(cm.consume_materialization(0));
-        assert!(!cm.consume_materialization(0));
-        // Re-loading after eviction resets the flag.
+        assert!(cm.charge_materialization(0));
+        assert!(!cm.charge_materialization(0));
+        // Re-loading after eviction resets the charge.
         cm.update(&mask(&[false]));
         cm.update(&mask(&[true]));
-        assert!(cm.consume_materialization(0));
+        assert!(cm.charge_materialization(0));
+        let s = cm.transition_stats();
+        assert_eq!(s.materializations, 2);
+        assert_eq!(s.bytes_materialized, 100);
     }
 
     #[test]
-    fn eviction_clears_pending() {
+    fn eviction_clears_pending_and_counts_cancelled() {
         let mut cm = CacheManager::new(100, vec![50]);
         cm.update(&mask(&[true]));
         cm.update(&mask(&[false]));
-        assert!(!cm.consume_materialization(0));
+        assert!(!cm.charge_materialization(0));
+        assert_eq!(cm.transition_stats().cancelled_loads, 1);
+        // A load that WAS touched does not count as cancelled.
+        cm.update(&mask(&[true]));
+        assert!(cm.charge_materialization(0));
+        cm.update(&mask(&[false]));
+        assert_eq!(cm.transition_stats().cancelled_loads, 1);
+    }
+
+    #[test]
+    fn stats_accumulate_across_transitions() {
+        let mut cm = CacheManager::new(100, vec![40, 50, 30]);
+        cm.update(&mask(&[true, false, false]));
+        cm.update(&mask(&[false, true, false]));
+        cm.update(&mask(&[false, true, true]));
+        let s = cm.transition_stats().clone();
+        assert_eq!(s.updates, 3);
+        assert_eq!(s.views_loaded, 3); // v0, v1, v2
+        assert_eq!(s.views_evicted, 1); // v0
+        assert_eq!(s.bytes_loaded, 40 + 50 + 30);
+        assert_eq!(s.bytes_evicted, 40);
+        assert_eq!(s.cancelled_loads, 1); // v0 never touched
     }
 
     #[test]
@@ -178,6 +309,8 @@ mod tests {
         let mut cm = CacheManager::new(100, vec![40, 50]);
         cm.update(&mask(&[true, false]));
         assert_eq!(cm.boost_vector(2.0), vec![2.0, 1.0]);
+        // The free-function form sees the same contents mask.
+        assert_eq!(stateful_boost(cm.cached(), 2.0), cm.boost_vector(2.0));
     }
 
     #[test]

@@ -1,5 +1,6 @@
-//! Cache state management (Figure 2 step 3 and the §5.4 stateful mode).
+//! Cache state management (Figure 2 step 3 and the §5.4 stateful mode):
+//! incremental delta-based transitions with materialization accounting.
 
 pub mod manager;
 
-pub use manager::{CacheDelta, CacheManager};
+pub use manager::{stateful_boost, CacheDelta, CacheManager, TransitionStats};

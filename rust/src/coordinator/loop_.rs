@@ -11,16 +11,67 @@
 //! max((b+1)·W, previous batch's completion) — a policy that cannot keep
 //! up accumulates backlog and shows reduced throughput, exactly the
 //! paper's throughput mechanics.
+//!
+//! The loop is split into two halves so the serial reference and the
+//! pipelined runner (`coordinator::pipeline`) share every line of
+//! batch logic: [`BatchPlanner`] owns steps 1–2 (workload drain + solve
+//! + sample) and [`BatchExecutor`] owns steps 3–5 (cache transition +
+//! simulated execution). The planner never reads the live cache — after
+//! an update the cache holds exactly the emitted configuration, so a
+//! local mirror mask reproduces the stateful boost bit-for-bit, which is
+//! what lets the solve for batch b+1 overlap the execution of batch b.
+
+use std::time::Instant;
 
 use crate::alloc::{ConfigMask, Policy};
-use crate::cache::CacheManager;
-use crate::domain::query::QueryId;
+use crate::cache::{stateful_boost, CacheDelta, CacheManager};
+use crate::domain::query::{Query, QueryId};
 use crate::domain::tenant::TenantSet;
 use crate::domain::utility::BatchUtilities;
 use crate::sim::engine::{QueryOutcome, SimEngine};
+use crate::util::event::{Clock, SimClock};
 use crate::util::rng::Pcg64;
+use crate::util::stats;
 use crate::workload::generator::WorkloadGenerator;
 use crate::workload::universe::Universe;
+
+/// The inputs of one batch solve that every driver shares (serial,
+/// pipelined, and the online service).
+pub(crate) struct SolveContext<'a> {
+    pub tenants: &'a TenantSet,
+    pub universe: &'a Universe,
+    pub budget: u64,
+    pub stateful_gamma: Option<f64>,
+}
+
+impl SolveContext<'_> {
+    /// Step 2 of the loop — the one batch-solve implementation: build
+    /// the batch problem over `queries` (with the §5.4 stateful boost
+    /// derived from `cached`, the cache contents at solve time), run
+    /// the policy, sample a configuration. Empty batches keep the
+    /// current contents.
+    pub(crate) fn solve(
+        &self,
+        cached: &ConfigMask,
+        queries: &[Query],
+        policy: &dyn Policy,
+        rng: &mut Pcg64,
+    ) -> ConfigMask {
+        if queries.is_empty() {
+            return cached.clone();
+        }
+        let boost = self.stateful_gamma.map(|g| stateful_boost(cached, g));
+        let batch_problem = BatchUtilities::build(
+            self.tenants,
+            &self.universe.views,
+            self.budget as f64,
+            queries,
+            boost.as_deref(),
+        );
+        let allocation = policy.allocate(&batch_problem, rng);
+        allocation.sample(rng).clone()
+    }
+}
 
 /// Coordinator configuration (the §5.3 experiment knobs).
 #[derive(Debug, Clone)]
@@ -64,6 +115,15 @@ pub struct BatchRecord {
     /// Wall-clock (host) seconds spent in the view-selection solve — the
     /// §5.4 "query wait times of the order of tens of milliseconds".
     pub solve_secs: f64,
+    /// Pre-solved batches waiting when the executor picked this one up
+    /// (0 in serial mode: nothing ever runs ahead).
+    pub queue_depth: usize,
+    /// Host seconds the executor stalled waiting for this batch's solve.
+    /// Serial mode stalls for the whole solve; the pipelined runner only
+    /// stalls when the solver falls behind execution.
+    pub stall_secs: f64,
+    /// The incremental cache transition this batch applied.
+    pub delta: CacheDelta,
 }
 
 /// Complete result of a coordinator run.
@@ -76,6 +136,10 @@ pub struct RunResult {
     pub end_time: f64,
     pub n_tenants: usize,
     pub weights: Vec<f64>,
+    /// Host wall-clock seconds the whole run took (solve + bookkeeping;
+    /// simulated execution is free). Basis of the batches/sec and
+    /// stall-fraction service metrics.
+    pub host_wall_secs: f64,
 }
 
 impl RunResult {
@@ -151,9 +215,182 @@ impl RunResult {
             .map(|o| (o.id, (o.tenant, o.execution_time())))
             .collect()
     }
+
+    /// Percentile of per-batch solve latency in milliseconds (host).
+    pub fn solve_ms_percentile(&self, p: f64) -> f64 {
+        let ms: Vec<f64> = self.batches.iter().map(|b| b.solve_secs * 1e3).collect();
+        stats::percentile(&ms, p)
+    }
+
+    /// Fraction of the run's host wall-clock the executor spent stalled
+    /// on solves: ≈1 in serial mode (the solve IS the critical path),
+    /// near 0 when the pipeline keeps the solver ahead of execution.
+    pub fn stall_fraction(&self) -> f64 {
+        if self.host_wall_secs <= 0.0 {
+            return 0.0;
+        }
+        let stalled: f64 = self.batches.iter().map(|b| b.stall_secs).sum();
+        (stalled / self.host_wall_secs).min(1.0)
+    }
+
+    /// Batches retired per host wall-clock second.
+    pub fn batches_per_sec(&self) -> f64 {
+        if self.host_wall_secs <= 0.0 {
+            return 0.0;
+        }
+        self.batches.len() as f64 / self.host_wall_secs
+    }
+
+    /// Total (bytes loaded, bytes evicted) across all batch transitions
+    /// — the Figure 12 churn measure.
+    pub fn cache_bytes_moved(&self) -> (u64, u64) {
+        self.batches.iter().fold((0, 0), |(l, e), b| {
+            (l + b.delta.bytes_loaded, e + b.delta.bytes_evicted)
+        })
+    }
 }
 
-/// The coordinator: owns the workload generator, cache, engine, policy.
+/// One solved batch handed from the planner to the executor.
+#[derive(Debug)]
+pub struct PlannedBatch {
+    pub index: usize,
+    pub window_end: f64,
+    pub queries: Vec<Query>,
+    pub config: ConfigMask,
+    pub solve_secs: f64,
+}
+
+/// Steps 1–2 of the loop: drain the workload window, build the batch
+/// problem (with the stateful boost from the cache-contents mirror),
+/// solve, sample. Deterministic given the generator and policy seeds, so
+/// serial and pipelined runs produce identical plans.
+pub struct BatchPlanner<'a> {
+    universe: &'a Universe,
+    tenants: &'a TenantSet,
+    cfg: &'a CoordinatorConfig,
+    policy: &'a dyn Policy,
+    generator: &'a mut WorkloadGenerator,
+    budget: u64,
+    rng: Pcg64,
+    /// Mirror of the cache contents: after `CacheManager::update` the
+    /// cache holds exactly the previous emitted configuration, so the
+    /// planner tracks it locally instead of reading the live cache.
+    mirror: ConfigMask,
+    next: usize,
+}
+
+impl BatchPlanner<'_> {
+    /// Plan the next batch, or `None` when all batches are planned.
+    pub fn next_batch(&mut self) -> Option<PlannedBatch> {
+        if self.next >= self.cfg.n_batches {
+            return None;
+        }
+        let b = self.next;
+        self.next += 1;
+        let window_end = (b + 1) as f64 * self.cfg.batch_secs;
+        // Step 1: drain the batch window.
+        let queries = self.generator.generate_until(window_end, self.universe);
+
+        // Step 2: view selection.
+        let t0 = Instant::now();
+        let ctx = SolveContext {
+            tenants: self.tenants,
+            universe: self.universe,
+            budget: self.budget,
+            stateful_gamma: self.cfg.stateful_gamma,
+        };
+        let config = ctx.solve(&self.mirror, &queries, self.policy, &mut self.rng);
+        let solve_secs = t0.elapsed().as_secs_f64();
+        self.mirror = config.clone();
+        Some(PlannedBatch {
+            index: b,
+            window_end,
+            queries,
+            config,
+            solve_secs,
+        })
+    }
+}
+
+/// Steps 3–5 of the loop: apply the incremental cache transition and
+/// execute the batch on the simulated cluster.
+pub struct BatchExecutor<'a> {
+    engine: &'a SimEngine,
+    scan_sizes: Vec<u64>,
+    weights: Vec<f64>,
+    cache: CacheManager,
+    /// Discrete-event clock driving the simulated batch-window axis
+    /// (the sim-side counterpart of the service loop's real-time clock).
+    clock: SimClock,
+    outcomes: Vec<QueryOutcome>,
+    batches: Vec<BatchRecord>,
+    prev_end: f64,
+}
+
+impl BatchExecutor<'_> {
+    /// Execute one planned batch. `queue_depth`/`stall_secs` are the
+    /// pipeline-health observations recorded on the [`BatchRecord`].
+    pub fn execute(&mut self, planned: PlannedBatch, queue_depth: usize, stall_secs: f64) {
+        // Step 3: incremental cache transition.
+        let delta = self.cache.update(&planned.config);
+
+        // Steps 4+5: execute on the simulated cluster, starting once
+        // the batch window has closed and the previous batch finished.
+        let now = self.clock.wait_until(planned.window_end);
+        let exec_start = now.max(self.prev_end);
+        let exec = self.engine.execute_batch(
+            exec_start,
+            &planned.queries,
+            &self.scan_sizes,
+            &mut self.cache,
+            &self.weights,
+        );
+        self.prev_end = exec.end_time;
+
+        self.batches.push(BatchRecord {
+            index: planned.index,
+            n_queries: planned.queries.len(),
+            config: planned.config,
+            cache_utilization: self.cache.utilization(),
+            window_end: planned.window_end,
+            exec_start,
+            exec_end: exec.end_time,
+            solve_secs: planned.solve_secs,
+            queue_depth,
+            stall_secs,
+            delta,
+        });
+        self.outcomes.extend(exec.outcomes);
+    }
+
+    /// Final cache transition accounting.
+    pub fn cache(&self) -> &CacheManager {
+        &self.cache
+    }
+
+    /// Assemble the run result.
+    pub fn into_result(
+        self,
+        policy: &'static str,
+        cfg: &CoordinatorConfig,
+        n_tenants: usize,
+        host_wall_secs: f64,
+    ) -> RunResult {
+        RunResult {
+            policy,
+            outcomes: self.outcomes,
+            batches: self.batches,
+            end_time: self.prev_end.max(cfg.n_batches as f64 * cfg.batch_secs),
+            n_tenants,
+            weights: self.weights,
+            host_wall_secs,
+        }
+    }
+}
+
+/// The coordinator: owns the workload universe handle, cache, engine,
+/// policy configuration; builds planner/executor pairs for the serial
+/// and pipelined drivers.
 pub struct Coordinator<'a> {
     pub universe: &'a Universe,
     pub tenants: TenantSet,
@@ -176,12 +413,28 @@ impl<'a> Coordinator<'a> {
         }
     }
 
-    /// Run the full loop with `policy` over a fresh workload from
-    /// `generator`. The generator seed fixes arrivals; `config.seed`
-    /// fixes policy randomization — so two policies can be compared on
-    /// identical workloads.
-    pub fn run(&self, generator: &mut WorkloadGenerator, policy: &dyn Policy) -> RunResult {
-        let mut rng = Pcg64::with_stream(self.config.seed, 0x0b5);
+    /// The solve half of the loop (shared by serial and pipelined runs).
+    pub(crate) fn planner<'c>(
+        &'c self,
+        generator: &'c mut WorkloadGenerator,
+        policy: &'c dyn Policy,
+    ) -> BatchPlanner<'c> {
+        BatchPlanner {
+            universe: self.universe,
+            tenants: &self.tenants,
+            cfg: &self.config,
+            policy,
+            generator,
+            budget: self.engine.config.cache_budget,
+            rng: Pcg64::with_stream(self.config.seed, 0x0b5),
+            mirror: ConfigMask::empty(self.universe.views.len()),
+            next: 0,
+        }
+    }
+
+    /// The execute half of the loop (shared by serial and pipelined
+    /// runs).
+    pub(crate) fn executor(&self) -> BatchExecutor<'_> {
         let budget = self.engine.config.cache_budget;
         let sizes: Vec<u64> = self
             .universe
@@ -195,74 +448,38 @@ impl<'a> Coordinator<'a> {
             .iter()
             .map(|v| v.scan_bytes)
             .collect();
-        let mut cache = CacheManager::new(budget, sizes);
-        let weights = self.tenants.weights();
-
-        let mut outcomes = Vec::new();
-        let mut batches = Vec::new();
-        let mut prev_end = 0.0f64;
-
-        for b in 0..self.config.n_batches {
-            let window_end = (b + 1) as f64 * self.config.batch_secs;
-            // Step 1: drain the batch.
-            let queries = generator.generate_until(window_end, self.universe);
-
-            // Step 2: view selection.
-            let t0 = std::time::Instant::now();
-            let config_mask = if queries.is_empty() {
-                cache.cached().clone()
-            } else {
-                let boost = self
-                    .config
-                    .stateful_gamma
-                    .map(|g| cache.boost_vector(g));
-                let batch_problem = BatchUtilities::build(
-                    &self.tenants,
-                    &self.universe.views,
-                    budget as f64,
-                    &queries,
-                    boost.as_deref(),
-                );
-                let allocation = policy.allocate(&batch_problem, &mut rng);
-                allocation.sample(&mut rng).clone()
-            };
-            let solve_secs = t0.elapsed().as_secs_f64();
-
-            // Step 3: cache update.
-            cache.update(&config_mask);
-
-            // Steps 4+5: execute on the simulated cluster.
-            let exec_start = window_end.max(prev_end);
-            let exec = self.engine.execute_batch(
-                exec_start,
-                &queries,
-                &scan_sizes,
-                &mut cache,
-                &weights,
-            );
-            prev_end = exec.end_time;
-
-            batches.push(BatchRecord {
-                index: b,
-                n_queries: queries.len(),
-                config: config_mask,
-                cache_utilization: cache.utilization(),
-                window_end,
-                exec_start,
-                exec_end: exec.end_time,
-                solve_secs,
-            });
-            outcomes.extend(exec.outcomes);
+        BatchExecutor {
+            engine: &self.engine,
+            scan_sizes,
+            weights: self.tenants.weights(),
+            cache: CacheManager::new(budget, sizes),
+            clock: SimClock::new(),
+            outcomes: Vec::new(),
+            batches: Vec::new(),
+            prev_end: 0.0,
         }
+    }
 
-        RunResult {
-            policy: policy.name(),
-            outcomes,
-            batches,
-            end_time: prev_end.max(self.config.n_batches as f64 * self.config.batch_secs),
-            n_tenants: self.tenants.len(),
-            weights,
+    /// Run the full loop with `policy` over a fresh workload from
+    /// `generator`, strictly serially (the reference semantics: each
+    /// solve sits on the critical path). The generator seed fixes
+    /// arrivals; `config.seed` fixes policy randomization — so two
+    /// policies can be compared on identical workloads.
+    pub fn run(&self, generator: &mut WorkloadGenerator, policy: &dyn Policy) -> RunResult {
+        let t_run = Instant::now();
+        let mut planner = self.planner(generator, policy);
+        let mut executor = self.executor();
+        while let Some(planned) = planner.next_batch() {
+            // Serial mode: the executor waits out the whole solve.
+            let stall = planned.solve_secs;
+            executor.execute(planned, 0, stall);
         }
+        executor.into_result(
+            policy.name(),
+            &self.config,
+            self.tenants.len(),
+            t_run.elapsed().as_secs_f64(),
+        )
     }
 }
 
@@ -309,6 +526,8 @@ mod tests {
         assert!(total > 10, "expected ~40 queries, got {total}");
         assert!(r.throughput_per_min() > 0.0);
         assert!(r.end_time >= 200.0);
+        assert!(r.host_wall_secs > 0.0);
+        assert!(r.batches_per_sec() > 0.0);
     }
 
     #[test]
@@ -378,6 +597,12 @@ mod tests {
             churn(&stateful),
             churn(&stateless)
         );
+        // The per-batch deltas record the same churn view-by-view.
+        let delta_churn = |r: &RunResult| -> usize {
+            r.batches.iter().skip(1).map(|b| b.delta.churn()).sum()
+        };
+        assert_eq!(churn(&stateless), delta_churn(&stateless));
+        assert_eq!(churn(&stateful), delta_churn(&stateful));
     }
 
     #[test]
@@ -396,6 +621,21 @@ mod tests {
         // §5.4: solves should be tens of milliseconds, not seconds.
         for b in &r.batches {
             assert!(b.solve_secs < 5.0, "solve took {}s", b.solve_secs);
+            // Serial mode: the executor stalls for the whole solve.
+            assert_eq!(b.stall_secs, b.solve_secs);
+            assert_eq!(b.queue_depth, 0);
         }
+    }
+
+    #[test]
+    fn deltas_track_first_batch_loads() {
+        let r = small_run(PolicyKind::FastPf, 4, 42);
+        let first = &r.batches[0];
+        // Everything cached in batch 0 was loaded by batch 0.
+        assert_eq!(first.delta.loaded.len(), first.config.count_ones());
+        assert!(first.delta.evicted.is_empty());
+        let (loaded, evicted) = r.cache_bytes_moved();
+        assert!(loaded >= first.delta.bytes_loaded);
+        assert!(loaded >= evicted, "cannot evict more than was loaded");
     }
 }

@@ -171,10 +171,14 @@ mod tests {
                 exec_start: 40.0,
                 exec_end: 50.0,
                 solve_secs: 0.01,
+                queue_depth: 0,
+                stall_secs: 0.01,
+                delta: crate::cache::CacheDelta::default(),
             }],
             end_time: 60.0,
             n_tenants,
             weights: vec![1.0; n_tenants],
+            host_wall_secs: 0.02,
         }
     }
 

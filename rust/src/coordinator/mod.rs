@@ -1,8 +1,13 @@
-//! The ROBUS coordinator (Figure 2): the five-step batched loop plus the
-//! performance metrics of §5.2.
+//! The ROBUS coordinator (Figure 2): the five-step batched loop (serial
+//! reference + pipelined solve/execute), the real-time service driver
+//! behind `robus serve`, and the performance metrics of §5.2.
 
 pub mod loop_;
 pub mod metrics;
+pub mod pipeline;
+pub mod service;
 
-pub use loop_::{Coordinator, CoordinatorConfig, RunResult};
+pub use loop_::{BatchRecord, Coordinator, CoordinatorConfig, RunResult};
 pub use metrics::{fairness_index, per_tenant_speedups, MetricsSummary};
+pub use pipeline::DEFAULT_PIPELINE_DEPTH;
+pub use service::{AdmissionPolicy, ServeConfig, ServeReport};

@@ -1,0 +1,160 @@
+//! Pipelined solve/execute: while batch *b* executes on the (simulated)
+//! cluster, a solver thread prunes + solves batch *b+1*'s allocation.
+//!
+//! The hand-off is a bounded channel of [`PlannedBatch`]es. Determinism
+//! holds because the planner half is self-contained: the workload
+//! generator and the policy RNG advance in batch order on the solver
+//! thread exactly as they do in the serial loop, and the stateful boost
+//! comes from the planner's cache-contents mirror (after an update the
+//! cache holds precisely the previous emitted configuration). The
+//! pipelined runner is therefore **bit-identical** to
+//! [`Coordinator::run`] on every simulated quantity — configurations,
+//! outcomes, metrics — differing only in the host-time observability
+//! fields (`solve_secs`, `stall_secs`, `queue_depth`,
+//! `host_wall_secs`), the same discipline as the parallel experiment
+//! runner of PR 1 (`experiments::runner`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::alloc::Policy;
+use crate::coordinator::loop_::{Coordinator, PlannedBatch, RunResult};
+use crate::workload::generator::WorkloadGenerator;
+
+/// Default number of pre-solved batches the solver may run ahead.
+pub const DEFAULT_PIPELINE_DEPTH: usize = 2;
+
+impl Coordinator<'_> {
+    /// Run the loop with the solve for batch b+1 overlapping the
+    /// execution of batch b. `depth` bounds how many solved batches may
+    /// queue between the threads (backpressure on the solver); depth 0
+    /// is clamped to 1.
+    pub fn run_pipelined(
+        &self,
+        generator: &mut WorkloadGenerator,
+        policy: &dyn Policy,
+        depth: usize,
+    ) -> RunResult {
+        let depth = depth.max(1);
+        let t_run = Instant::now();
+        let queued = AtomicUsize::new(0);
+        let (tx, rx) = mpsc::sync_channel::<PlannedBatch>(depth);
+        let mut executor = self.executor();
+
+        std::thread::scope(|scope| {
+            let mut planner = self.planner(generator, policy);
+            let queued = &queued;
+            scope.spawn(move || {
+                while let Some(planned) = planner.next_batch() {
+                    queued.fetch_add(1, Ordering::SeqCst);
+                    // The receiver only hangs up when the scope is
+                    // tearing down; nothing to do but stop planning.
+                    if tx.send(planned).is_err() {
+                        break;
+                    }
+                }
+            });
+            loop {
+                let t0 = Instant::now();
+                match rx.recv() {
+                    Ok(planned) => {
+                        let stall_secs = t0.elapsed().as_secs_f64();
+                        // Solved batches still waiting after taking this
+                        // one — how far ahead the solver is running.
+                        let queue_depth = queued.fetch_sub(1, Ordering::SeqCst).saturating_sub(1);
+                        executor.execute(planned, queue_depth, stall_secs);
+                    }
+                    Err(_) => break, // planner finished and hung up
+                }
+            }
+        });
+
+        executor.into_result(
+            policy.name(),
+            &self.config,
+            self.tenants.len(),
+            t_run.elapsed().as_secs_f64(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::alloc::PolicyKind;
+    use crate::coordinator::loop_::{Coordinator, CoordinatorConfig, RunResult};
+    use crate::domain::tenant::TenantSet;
+    use crate::sim::cluster::ClusterConfig;
+    use crate::sim::engine::SimEngine;
+    use crate::workload::generator::WorkloadGenerator;
+    use crate::workload::spec::{AccessSpec, TenantSpec, WindowSpec};
+    use crate::workload::universe::Universe;
+
+    fn run_both(kind: PolicyKind, gamma: Option<f64>, depth: usize) -> (RunResult, RunResult) {
+        let universe = Universe::sales_only();
+        let tenants = TenantSet::equal(3);
+        let engine = SimEngine::new(ClusterConfig::default());
+        let config = CoordinatorConfig {
+            batch_secs: 30.0,
+            n_batches: 6,
+            stateful_gamma: gamma,
+            seed: 17,
+        };
+        let coord = Coordinator::new(&universe, tenants, engine, config);
+        let specs = || -> Vec<TenantSpec> {
+            (1..=3)
+                .map(|g| {
+                    TenantSpec::new(AccessSpec::g(g), 12.0)
+                        .with_window(WindowSpec::default())
+                })
+                .collect()
+        };
+        let policy = kind.build();
+        let mut gen_a = WorkloadGenerator::new(specs(), &universe, 17);
+        let serial = coord.run(&mut gen_a, policy.as_ref());
+        let mut gen_b = WorkloadGenerator::new(specs(), &universe, 17);
+        let pipelined = coord.run_pipelined(&mut gen_b, policy.as_ref(), depth);
+        (serial, pipelined)
+    }
+
+    fn assert_bit_identical(serial: &RunResult, pipelined: &RunResult) {
+        assert_eq!(serial.policy, pipelined.policy);
+        assert_eq!(serial.end_time, pipelined.end_time);
+        assert_eq!(serial.outcomes.len(), pipelined.outcomes.len());
+        for (s, p) in serial.outcomes.iter().zip(&pipelined.outcomes) {
+            assert_eq!(s.id, p.id);
+            assert_eq!(s.start, p.start);
+            assert_eq!(s.finish, p.finish);
+            assert_eq!(s.from_cache, p.from_cache);
+        }
+        assert_eq!(serial.batches.len(), pipelined.batches.len());
+        for (s, p) in serial.batches.iter().zip(&pipelined.batches) {
+            assert_eq!(s.index, p.index);
+            assert_eq!(s.config, p.config);
+            assert_eq!(s.cache_utilization, p.cache_utilization);
+            assert_eq!(s.delta, p.delta);
+            assert_eq!(s.exec_start, p.exec_start);
+            assert_eq!(s.exec_end, p.exec_end);
+        }
+    }
+
+    #[test]
+    fn pipelined_matches_serial_stateless() {
+        let (serial, pipelined) = run_both(PolicyKind::FastPf, None, 2);
+        assert_bit_identical(&serial, &pipelined);
+    }
+
+    #[test]
+    fn pipelined_matches_serial_stateful() {
+        // The stateful boost is the subtle case: the planner's mirror
+        // must reproduce the live cache contents bit-for-bit.
+        let (serial, pipelined) = run_both(PolicyKind::Mmf, Some(2.0), 3);
+        assert_bit_identical(&serial, &pipelined);
+    }
+
+    #[test]
+    fn depth_zero_clamps_and_runs() {
+        let (serial, pipelined) = run_both(PolicyKind::Static, None, 0);
+        assert_bit_identical(&serial, &pipelined);
+    }
+}

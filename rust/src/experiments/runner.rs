@@ -151,6 +151,34 @@ pub fn run_with_policies_serial(
     summarize(setup, runs)
 }
 
+/// Like [`run_with_policies_serial`], but each policy's run uses the
+/// pipelined solve/execute coordinator (solver thread runs `depth`
+/// batches ahead of execution). Bit-identical simulated outputs to the
+/// serial reference — `rust/tests/pipeline_equivalence.rs` asserts this
+/// over the whole experiment grid.
+pub fn run_with_policies_pipelined(
+    setup: &ExperimentSetup,
+    policies: &[Box<dyn Policy>],
+    depth: usize,
+) -> ExperimentOutput {
+    let (universe, tenants, engine, config) = coordinator_parts(setup);
+    let coordinator = Coordinator::new(&universe, tenants, engine, config);
+
+    let runs: Vec<RunResult> = policies
+        .iter()
+        .map(|p| {
+            let mut gen = WorkloadGenerator::new(
+                setup.tenant_specs.clone(),
+                &universe,
+                setup.seed,
+            );
+            coordinator.run_pipelined(&mut gen, p.as_ref(), depth)
+        })
+        .collect();
+
+    summarize(setup, runs)
+}
+
 /// Run with the default §5.3 policy set (policies fanned across threads).
 pub fn run_experiment(setup: &ExperimentSetup) -> ExperimentOutput {
     let policies: Vec<Box<dyn Policy>> = default_policies()

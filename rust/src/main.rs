@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   run              one coordinator run with explicit knobs
+//!   serve            online real-time service mode (live admission)
 //!   experiment NAME  regenerate a paper table/figure (see `list`)
 //!   list             list available experiments
 //!   audit            Table 6 fairness-property audit
@@ -27,6 +28,7 @@ fn main() {
     };
     let code = match args.subcommand.as_deref() {
         Some("run") => cmd_run(&args),
+        Some("serve") => cmd_serve(&args),
         Some("experiment") => cmd_experiment(&args),
         Some("list") => {
             print_experiment_list();
@@ -43,6 +45,7 @@ fn main() {
                     "fair cache allocation for multi-tenant data-parallel workloads (SIGMOD'17 reproduction)",
                     &[
                         ("run", "one coordinator run (see --policy/--tenants/...)"),
+                        ("serve", "online service mode (--duration/--rate/--batch-ms/...)"),
                         ("experiment <name>", "regenerate a paper table/figure"),
                         ("list", "list available experiments"),
                         ("audit", "Table 6 fairness-property audit"),
@@ -57,7 +60,14 @@ fn main() {
                         OptSpec { name: "seed", help: "rng seed", default: Some("42") },
                         OptSpec { name: "gamma", help: "stateful cache boost γ (omit = stateless)", default: None },
                         OptSpec { name: "quick", help: "cut batches down for a fast smoke run", default: None },
+                        OptSpec { name: "pipeline", help: "run: overlap solve(b+1) with execute(b)", default: None },
                         OptSpec { name: "out-dir", help: "write JSON reports here", default: Some("results") },
+                        OptSpec { name: "duration", help: "serve: wall-clock seconds to accept traffic", default: Some("5") },
+                        OptSpec { name: "rate", help: "serve: aggregate arrival rate (queries/sec)", default: Some("1000") },
+                        OptSpec { name: "batch-ms", help: "serve: real-time batch window (ms)", default: Some("250") },
+                        OptSpec { name: "queue-cap", help: "serve: per-tenant admission queue bound", default: Some("8192") },
+                        OptSpec { name: "admission", help: "serve: drop|block at the queue bound", default: Some("drop") },
+                        OptSpec { name: "min-qps", help: "serve: exit 1 if sustained q/s falls below", default: None },
                     ],
                 )
             );
@@ -98,10 +108,75 @@ fn cmd_run(args: &Args) -> i32 {
     }
     let policies: Vec<Box<dyn robus::alloc::Policy>> =
         vec![PolicyKind::Static.build(), kind.build()];
-    let out = run_with_policies(&setup, &policies);
+    let out = if args.flag("pipeline") {
+        robus::experiments::runner::run_with_policies_pipelined(
+            &setup,
+            &policies,
+            robus::coordinator::DEFAULT_PIPELINE_DEPTH,
+        )
+    } else {
+        run_with_policies(&setup, &policies)
+    };
     println!("{}", MetricsSummary::header());
     for s in &out.summaries {
         println!("{}", s.row());
+    }
+    0
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let policy_name = args.opt_or("policy", "FASTPF");
+    let Some(kind) = PolicyKind::parse(policy_name) else {
+        eprintln!("unknown policy {policy_name}");
+        return 2;
+    };
+    let admission_name = args.opt_or("admission", "drop");
+    let Some(admission) = robus::workload::AdmissionPolicy::parse(admission_name) else {
+        eprintln!("unknown admission policy {admission_name} (use drop|block)");
+        return 2;
+    };
+    let cfg = robus::coordinator::ServeConfig {
+        duration_secs: args.opt_f64("duration", 5.0).unwrap_or(5.0),
+        rate_per_sec: args.opt_f64("rate", 1000.0).unwrap_or(1000.0),
+        n_tenants: args.opt_usize("tenants", 4).unwrap_or(4).max(1),
+        batch_secs: args.opt_f64("batch-ms", 250.0).unwrap_or(250.0) / 1e3,
+        queue_capacity: args.opt_usize("queue-cap", 8192).unwrap_or(8192),
+        admission,
+        stateful_gamma: args.opt("gamma").and_then(|g| g.parse::<f64>().ok()),
+        seed: args.opt_u64("seed", 42).unwrap_or(42),
+        verbose: !args.flag("quiet"),
+    };
+    let universe = robus::workload::Universe::sales_only();
+    let tenants = robus::domain::tenant::TenantSet::equal(cfg.n_tenants);
+    let engine = robus::sim::SimEngine::new(robus::sim::ClusterConfig::default());
+    let policy = kind.build();
+    println!(
+        "robus serve: {} tenants, target {:.0} q/s, W={:.0}ms, admission={}, policy={} ({}s run)",
+        cfg.n_tenants,
+        cfg.rate_per_sec,
+        cfg.batch_secs * 1e3,
+        cfg.admission.name(),
+        kind.name(),
+        cfg.duration_secs,
+    );
+    let report = robus::coordinator::service::serve(
+        &universe,
+        &tenants,
+        &engine,
+        policy.as_ref(),
+        &cfg,
+    );
+    print!("{}", report.render());
+    // Optional service-level objective: fail (exit 1) if the sustained
+    // throughput fell short — this is what makes the CI smoke step a
+    // real assertion rather than a crash test.
+    let min_qps = args.opt_f64("min-qps", 0.0).unwrap_or(0.0);
+    if report.queries_per_sec < min_qps {
+        eprintln!(
+            "FAIL: sustained {:.0} q/s < required --min-qps {:.0}",
+            report.queries_per_sec, min_qps
+        );
+        return 1;
     }
     0
 }

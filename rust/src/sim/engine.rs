@@ -4,31 +4,16 @@
 //! (cache or disk bandwidth, with a one-time materialization penalty for
 //! freshly cached views) plus its share of the query's compute cost.
 
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
-
 use crate::cache::CacheManager;
 use crate::domain::query::{Query, QueryId};
 use crate::sim::cluster::ClusterConfig;
 use crate::sim::scheduler::{FairScheduler, Task};
+use crate::util::event::EventQueue;
 
-/// Total-ordering wrapper for event times.
-#[derive(Debug, Clone, Copy, PartialEq)]
-struct OrdF64(f64);
-
-impl Eq for OrdF64 {}
-
-impl PartialOrd for OrdF64 {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
-impl Ord for OrdF64 {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.0.total_cmp(&other.0)
-    }
-}
+/// Task-completion event payload: `(query index, tenant)`. Tuple `Ord`
+/// reproduces the legacy `(time, query, tenant)` heap ordering exactly,
+/// so the refactor onto [`EventQueue`] is bit-identical.
+type Completion = (usize, usize);
 
 /// Result for one executed query.
 #[derive(Debug, Clone)]
@@ -127,7 +112,7 @@ impl SimEngine {
             for v in &q.required_views {
                 let cached = cache.is_cached(v.0);
                 all_cached &= cached;
-                let materialize = cached && cache.consume_materialization(v.0);
+                let materialize = cached && cache.charge_materialization(v.0);
                 io_secs += self.view_io_secs(view_scan_bytes[v.0], cached, materialize);
             }
             let n_tasks = (q.bytes_read.div_ceil(self.config.partition_bytes)).max(1) as usize;
@@ -148,10 +133,10 @@ impl SimEngine {
             });
         }
 
-        // Event loop: (completion_time, query, tenant) on a min-heap;
+        // Event loop: task completions on the shared ordered queue;
         // free cores launch tasks immediately.
         let cores = self.config.total_cores();
-        let mut heap: BinaryHeap<Reverse<(OrdF64, usize, usize)>> = BinaryHeap::new();
+        let mut events: EventQueue<Completion> = EventQueue::new();
         let mut now = start_time;
         let mut free = cores;
 
@@ -159,7 +144,7 @@ impl SimEngine {
                           free: &mut usize,
                           scheduler: &mut FairScheduler,
                           states: &mut Vec<QState>,
-                          heap: &mut BinaryHeap<Reverse<(OrdF64, usize, usize)>>| {
+                          events: &mut EventQueue<Completion>| {
             while *free > 0 {
                 let Some(task) = scheduler.next_task() else {
                     break;
@@ -167,12 +152,12 @@ impl SimEngine {
                 *free -= 1;
                 let st = &mut states[task.query];
                 st.started.get_or_insert(now);
-                heap.push(Reverse((OrdF64(now + task.duration), task.query, task.tenant)));
+                events.push(now + task.duration, (task.query, task.tenant));
             }
         };
 
-        launch(now, &mut free, &mut scheduler, &mut states, &mut heap);
-        while let Some(Reverse((OrdF64(t), qi, tenant))) = heap.pop() {
+        launch(now, &mut free, &mut scheduler, &mut states, &mut events);
+        while let Some((t, (qi, tenant))) = events.pop() {
             now = t;
             free += 1;
             scheduler.task_done(tenant);
@@ -181,7 +166,7 @@ impl SimEngine {
             if st.remaining == 0 {
                 st.finish = now;
             }
-            launch(now, &mut free, &mut scheduler, &mut states, &mut heap);
+            launch(now, &mut free, &mut scheduler, &mut states, &mut events);
         }
 
         let outcomes: Vec<QueryOutcome> = queries
@@ -228,10 +213,10 @@ mod tests {
     fn setup(cache_views: &[bool], sizes: &[u64]) -> CacheManager {
         let mut cm = CacheManager::new(100 * GB, sizes.to_vec());
         cm.update(&ConfigMask::from_bools(cache_views));
-        // Drain materialization flags so tests measure steady-state
-        // cache reads unless they opt in.
+        // Drain scheduled materialization charges so tests measure
+        // steady-state cache reads unless they opt in.
         for v in 0..sizes.len() {
-            cm.consume_materialization(v);
+            cm.charge_materialization(v);
         }
         cm
     }

@@ -1,0 +1,202 @@
+//! The unified event substrate behind both execution modes of the
+//! coordinator: a [`Clock`] trait with a discrete-event driver
+//! ([`SimClock`], time jumps instantly — the paper's experiments) and a
+//! wall-clock driver ([`RealTimeClock`], time waits — the `robus serve`
+//! online service), plus the ordered [`EventQueue`] the simulator's
+//! engine and any future event-driven component share.
+//!
+//! The queue orders events by `(time, payload)` using [`OrdF64`], so a
+//! payload type with the legacy tuple ordering reproduces the original
+//! `BinaryHeap<Reverse<(OrdF64, ..)>>` pop order bit-for-bit.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::time::{Duration, Instant};
+
+use crate::util::ordf64::OrdF64;
+
+/// A monotonically advancing time axis in seconds. The coordinator is
+/// written against this trait; swapping the driver swaps batch pacing
+/// between "as fast as the solve allows" (simulation) and "real time"
+/// (service) without touching the loop logic.
+pub trait Clock {
+    /// Current time on this clock's axis (seconds since its origin).
+    fn now(&mut self) -> f64;
+
+    /// Advance to at least `t`: a sim clock jumps, a real-time clock
+    /// sleeps. Returns the time actually reached (`>= t` unless the
+    /// clock was already past it).
+    fn wait_until(&mut self, t: f64) -> f64;
+}
+
+/// Discrete-event clock: advancing is free, so a run executes as fast
+/// as the host can solve. Bit-identical to the pre-refactor loop, which
+/// tracked batch windows with plain arithmetic.
+#[derive(Debug, Clone, Default)]
+pub struct SimClock {
+    now: f64,
+}
+
+impl SimClock {
+    pub fn new() -> Self {
+        Self { now: 0.0 }
+    }
+
+    pub fn at(t: f64) -> Self {
+        Self { now: t }
+    }
+}
+
+impl Clock for SimClock {
+    fn now(&mut self) -> f64 {
+        self.now
+    }
+
+    fn wait_until(&mut self, t: f64) -> f64 {
+        if t > self.now {
+            self.now = t;
+        }
+        self.now
+    }
+}
+
+/// Wall-clock driver: `now` is host seconds since construction and
+/// `wait_until` sleeps the calling thread. Drives `robus serve`.
+#[derive(Debug, Clone)]
+pub struct RealTimeClock {
+    origin: Instant,
+}
+
+impl RealTimeClock {
+    pub fn new() -> Self {
+        Self {
+            origin: Instant::now(),
+        }
+    }
+
+    /// A clock sharing this one's origin (producer threads and the
+    /// service loop must agree on the time axis).
+    pub fn handle(&self) -> RealTimeClock {
+        self.clone()
+    }
+}
+
+impl Default for RealTimeClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for RealTimeClock {
+    fn now(&mut self) -> f64 {
+        self.origin.elapsed().as_secs_f64()
+    }
+
+    fn wait_until(&mut self, t: f64) -> f64 {
+        let now = self.now();
+        if t > now {
+            std::thread::sleep(Duration::from_secs_f64(t - now));
+        }
+        self.now()
+    }
+}
+
+/// An ordered event queue: min-heap over `(time, payload)`. Ties on
+/// time are broken by the payload's own `Ord`, which is what makes the
+/// engine's task-completion processing deterministic.
+#[derive(Debug, Clone)]
+pub struct EventQueue<P: Ord> {
+    heap: BinaryHeap<Reverse<(OrdF64, P)>>,
+}
+
+impl<P: Ord> EventQueue<P> {
+    pub fn new() -> Self {
+        Self {
+            heap: BinaryHeap::new(),
+        }
+    }
+
+    /// Schedule `payload` at time `t`.
+    pub fn push(&mut self, t: f64, payload: P) {
+        self.heap.push(Reverse((OrdF64(t), payload)));
+    }
+
+    /// Remove and return the earliest event.
+    pub fn pop(&mut self) -> Option<(f64, P)> {
+        self.heap.pop().map(|Reverse((t, p))| (t.get(), p))
+    }
+
+    /// Time of the earliest event without removing it.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|Reverse((t, _))| t.get())
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+impl<P: Ord> Default for EventQueue<P> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_clock_jumps() {
+        let mut c = SimClock::new();
+        assert_eq!(c.now(), 0.0);
+        assert_eq!(c.wait_until(40.0), 40.0);
+        // Never goes backwards.
+        assert_eq!(c.wait_until(10.0), 40.0);
+        assert_eq!(c.now(), 40.0);
+    }
+
+    #[test]
+    fn real_time_clock_waits() {
+        let mut c = RealTimeClock::new();
+        let t0 = c.now();
+        let reached = c.wait_until(t0 + 0.02);
+        assert!(reached >= t0 + 0.02 - 1e-9);
+        // Waiting for the past returns immediately.
+        let before = c.now();
+        let after = c.wait_until(0.0);
+        assert!(after >= before);
+    }
+
+    #[test]
+    fn queue_pops_in_time_order() {
+        let mut q: EventQueue<usize> = EventQueue::new();
+        q.push(3.0, 0);
+        q.push(1.0, 1);
+        q.push(2.0, 2);
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.peek_time(), Some(1.0));
+        assert_eq!(q.pop(), Some((1.0, 1)));
+        assert_eq!(q.pop(), Some((2.0, 2)));
+        assert_eq!(q.pop(), Some((3.0, 0)));
+        assert_eq!(q.pop(), None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn ties_break_by_payload_order() {
+        // Same semantics as the engine's legacy (time, query, tenant)
+        // tuple heap: equal times pop in ascending payload order.
+        let mut q: EventQueue<(usize, usize)> = EventQueue::new();
+        q.push(5.0, (2, 0));
+        q.push(5.0, (1, 9));
+        q.push(5.0, (1, 3));
+        assert_eq!(q.pop(), Some((5.0, (1, 3))));
+        assert_eq!(q.pop(), Some((5.0, (1, 9))));
+        assert_eq!(q.pop(), Some((5.0, (2, 0))));
+    }
+}

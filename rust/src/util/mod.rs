@@ -5,8 +5,13 @@
 
 pub mod bench;
 pub mod cli;
+pub mod event;
 pub mod json;
 pub mod mask;
+pub mod ordf64;
 pub mod proptest;
 pub mod rng;
 pub mod stats;
+
+pub use event::{Clock, EventQueue, RealTimeClock, SimClock};
+pub use ordf64::OrdF64;

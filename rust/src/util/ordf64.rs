@@ -1,0 +1,75 @@
+//! `OrdF64` — a total-ordering wrapper over `f64`.
+//!
+//! Rust's `f64` is only `PartialOrd` (NaN breaks totality), so every
+//! place that needs floats as ordered keys — the discrete-event heap in
+//! the simulator, the shared event queue of `util::event`, sort keys —
+//! used to carry its own private wrapper. This is the one shared copy;
+//! ordering is IEEE 754 `total_cmp` (which agrees with `<`/`==` on the
+//! non-NaN, non-signed-zero values the simulator produces).
+
+use std::cmp::Ordering;
+
+/// Total-ordering wrapper for `f64` keys (event times, sort keys).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OrdF64(pub f64);
+
+impl OrdF64 {
+    /// The wrapped value.
+    #[inline]
+    pub fn get(self) -> f64 {
+        self.0
+    }
+}
+
+impl Eq for OrdF64 {}
+
+impl PartialOrd for OrdF64 {
+    #[inline]
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for OrdF64 {
+    #[inline]
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+impl From<f64> for OrdF64 {
+    #[inline]
+    fn from(x: f64) -> Self {
+        OrdF64(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn orders_like_f64_on_normal_values() {
+        let mut xs = vec![OrdF64(3.0), OrdF64(-1.5), OrdF64(0.0), OrdF64(2.25)];
+        xs.sort();
+        let got: Vec<f64> = xs.iter().map(|x| x.get()).collect();
+        assert_eq!(got, vec![-1.5, 0.0, 2.25, 3.0]);
+    }
+
+    #[test]
+    fn total_order_handles_nan() {
+        // NaN sorts after +inf under total_cmp instead of panicking.
+        let mut xs = vec![OrdF64(f64::NAN), OrdF64(f64::INFINITY), OrdF64(1.0)];
+        xs.sort();
+        assert_eq!(xs[0], OrdF64(1.0));
+        assert_eq!(xs[1], OrdF64(f64::INFINITY));
+        assert!(xs[2].get().is_nan());
+    }
+
+    #[test]
+    fn eq_and_from() {
+        assert_eq!(OrdF64::from(2.0), OrdF64(2.0));
+        assert!(OrdF64(1.0) < OrdF64(2.0));
+        assert!(OrdF64(2.0) > OrdF64(1.0));
+    }
+}

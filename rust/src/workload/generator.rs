@@ -190,7 +190,7 @@ impl WorkloadGenerator {
         for g in self.generators.iter_mut() {
             all.extend(g.generate_until(t_end, universe, &mut self.next_id));
         }
-        all.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        all.sort_by_key(|q| crate::util::ordf64::OrdF64(q.arrival));
         all
     }
 

@@ -3,10 +3,12 @@
 //! mix, and trace record/replay.
 
 pub mod generator;
+pub mod queue;
 pub mod spec;
 pub mod trace;
 pub mod universe;
 
 pub use generator::{TenantGenerator, WorkloadGenerator};
+pub use queue::{AdmissionPolicy, AdmissionQueue};
 pub use spec::{AccessSpec, TenantSpec, WindowSpec};
 pub use universe::Universe;

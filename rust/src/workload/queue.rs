@@ -1,0 +1,216 @@
+//! Online admission: bounded per-tenant producer/consumer queues.
+//!
+//! In the paper's replay experiments the "tenant queues" of Figure 2 are
+//! implicit — the generator materializes each batch window on demand. In
+//! the online service (`robus serve`) they are real queues: generator
+//! threads push arrivals concurrently while the coordinator cuts batches
+//! by draining them. The queue is bounded; what happens at the bound is
+//! the [`AdmissionPolicy`]: shed load (admission cap) or block the
+//! producer (backpressure).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+use crate::domain::query::Query;
+
+/// What to do with an arrival when a tenant's queue is full.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Reject the arrival and count it (per-tenant admission cap).
+    Drop,
+    /// Block the producer until the coordinator drains the queue
+    /// (backpressure).
+    Block,
+}
+
+impl AdmissionPolicy {
+    pub fn parse(s: &str) -> Option<AdmissionPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "drop" => Some(AdmissionPolicy::Drop),
+            "block" => Some(AdmissionPolicy::Block),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdmissionPolicy::Drop => "drop",
+            AdmissionPolicy::Block => "block",
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+struct QueueState {
+    items: VecDeque<Query>,
+    admitted: u64,
+    rejected: u64,
+    closed: bool,
+    /// High-water mark of the queue length (pipeline-health metric).
+    peak_depth: usize,
+}
+
+/// A bounded admission queue for one tenant: producers `offer`,
+/// the coordinator `drain`s whole batches.
+#[derive(Debug)]
+pub struct AdmissionQueue {
+    capacity: usize,
+    state: Mutex<QueueState>,
+    space: Condvar,
+}
+
+impl AdmissionQueue {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            capacity: capacity.max(1),
+            state: Mutex::new(QueueState::default()),
+            space: Condvar::new(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Offer an arrival under `policy`. Returns true iff admitted.
+    /// Closed queues reject everything (and wake blocked producers).
+    pub fn offer(&self, query: Query, policy: AdmissionPolicy) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if policy == AdmissionPolicy::Block {
+            while st.items.len() >= self.capacity && !st.closed {
+                st = self.space.wait(st).unwrap();
+            }
+        }
+        if st.closed || st.items.len() >= self.capacity {
+            st.rejected += 1;
+            return false;
+        }
+        st.items.push_back(query);
+        st.admitted += 1;
+        st.peak_depth = st.peak_depth.max(st.items.len());
+        true
+    }
+
+    /// Remove everything currently queued (the batch cut). Frees space,
+    /// so blocked producers wake.
+    pub fn drain(&self) -> Vec<Query> {
+        let mut st = self.state.lock().unwrap();
+        let out: Vec<Query> = st.items.drain(..).collect();
+        drop(st);
+        if !out.is_empty() {
+            self.space.notify_all();
+        }
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// `(admitted, rejected)` counters so far.
+    pub fn counts(&self) -> (u64, u64) {
+        let st = self.state.lock().unwrap();
+        (st.admitted, st.rejected)
+    }
+
+    /// High-water mark of the queue length.
+    pub fn peak_depth(&self) -> usize {
+        self.state.lock().unwrap().peak_depth
+    }
+
+    /// Stop admitting; blocked producers wake and see rejection.
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.space.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::domain::query::QueryId;
+    use crate::domain::tenant::TenantId;
+
+    fn query(id: u64) -> Query {
+        Query {
+            id: QueryId(id),
+            tenant: TenantId(0),
+            arrival: id as f64,
+            template: "t".into(),
+            required_views: vec![],
+            bytes_read: 1,
+            compute_cost: 0.0,
+        }
+    }
+
+    #[test]
+    fn offers_and_drains_fifo() {
+        let q = AdmissionQueue::new(8);
+        for i in 0..3 {
+            assert!(q.offer(query(i), AdmissionPolicy::Drop));
+        }
+        assert_eq!(q.len(), 3);
+        let batch = q.drain();
+        assert_eq!(batch.iter().map(|x| x.id.0).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert!(q.is_empty());
+        assert_eq!(q.counts(), (3, 0));
+        assert_eq!(q.peak_depth(), 3);
+    }
+
+    #[test]
+    fn drop_policy_sheds_load_at_capacity() {
+        let q = AdmissionQueue::new(2);
+        assert!(q.offer(query(0), AdmissionPolicy::Drop));
+        assert!(q.offer(query(1), AdmissionPolicy::Drop));
+        assert!(!q.offer(query(2), AdmissionPolicy::Drop));
+        assert_eq!(q.counts(), (2, 1));
+        q.drain();
+        assert!(q.offer(query(3), AdmissionPolicy::Drop));
+    }
+
+    #[test]
+    fn block_policy_waits_for_drain() {
+        let q = AdmissionQueue::new(1);
+        assert!(q.offer(query(0), AdmissionPolicy::Block));
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                // Blocks until the main thread drains.
+                assert!(q.offer(query(1), AdmissionPolicy::Block));
+            });
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            let first = q.drain();
+            assert_eq!(first.len(), 1);
+        });
+        assert_eq!(q.counts(), (2, 0));
+        assert_eq!(q.drain().len(), 1);
+    }
+
+    #[test]
+    fn close_rejects_and_wakes_blocked_producers() {
+        let q = AdmissionQueue::new(1);
+        assert!(q.offer(query(0), AdmissionPolicy::Block));
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                // Woken by close, not by space: rejected.
+                assert!(!q.offer(query(1), AdmissionPolicy::Block));
+            });
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            q.close();
+        });
+        assert!(q.is_closed());
+        assert!(!q.offer(query(2), AdmissionPolicy::Drop));
+        assert_eq!(q.counts(), (1, 2));
+        // Already-queued work still drains after close.
+        assert_eq!(q.drain().len(), 1);
+    }
+}

@@ -1,0 +1,115 @@
+//! The tentpole guarantee of the pipelined coordinator: overlapping the
+//! solve for batch b+1 with the execution of batch b changes *nothing*
+//! about the simulated run. For every setup family of the §5.3
+//! experiment grid, the pipelined runner must produce bit-identical
+//! `RunResult`s to the serial reference — same sampled configurations,
+//! same cache transitions, same query outcomes, same summary metrics.
+//! (Host-time observability fields — `solve_secs`, `stall_secs`,
+//! `queue_depth`, `host_wall_secs` — are the only allowed differences.)
+
+use robus::alloc::{Policy, PolicyKind};
+use robus::experiments::runner::{
+    default_policies, run_with_policies_pipelined, run_with_policies_serial,
+};
+use robus::experiments::setups::{self, ExperimentSetup};
+
+fn policy_set() -> Vec<Box<dyn Policy>> {
+    default_policies().into_iter().map(|k| k.build()).collect()
+}
+
+fn assert_setup_equivalent(setup: &ExperimentSetup, depth: usize) {
+    let serial = run_with_policies_serial(setup, &policy_set());
+    let pipelined = run_with_policies_pipelined(setup, &policy_set(), depth);
+    assert_eq!(serial.runs.len(), pipelined.runs.len());
+    for (s, p) in serial.runs.iter().zip(&pipelined.runs) {
+        assert_eq!(s.policy, p.policy, "{}", setup.name);
+        assert_eq!(s.end_time, p.end_time, "{}/{}", setup.name, s.policy);
+        assert_eq!(s.outcomes.len(), p.outcomes.len(), "{}/{}", setup.name, s.policy);
+        for (so, po) in s.outcomes.iter().zip(&p.outcomes) {
+            assert_eq!(so.id, po.id);
+            assert_eq!(so.tenant, po.tenant);
+            assert_eq!(so.arrival, po.arrival);
+            assert_eq!(so.start, po.start);
+            assert_eq!(so.finish, po.finish);
+            assert_eq!(so.from_cache, po.from_cache);
+        }
+        assert_eq!(s.batches.len(), p.batches.len());
+        for (sb, pb) in s.batches.iter().zip(&p.batches) {
+            assert_eq!(sb.index, pb.index);
+            assert_eq!(sb.n_queries, pb.n_queries);
+            assert_eq!(sb.config, pb.config, "{}/{}", setup.name, s.policy);
+            assert_eq!(sb.cache_utilization, pb.cache_utilization);
+            assert_eq!(sb.delta, pb.delta, "{}/{}", setup.name, s.policy);
+            assert_eq!(sb.window_end, pb.window_end);
+            assert_eq!(sb.exec_start, pb.exec_start);
+            assert_eq!(sb.exec_end, pb.exec_end);
+        }
+    }
+    for (s, p) in serial.summaries.iter().zip(&pipelined.summaries) {
+        assert_eq!(s.throughput_per_min, p.throughput_per_min);
+        assert_eq!(s.avg_cache_utilization, p.avg_cache_utilization);
+        assert_eq!(s.hit_ratio, p.hit_ratio);
+        assert_eq!(s.fairness_index, p.fairness_index);
+    }
+}
+
+#[test]
+fn grid_sales_data_sharing() {
+    for setup in setups::data_sharing_sales() {
+        assert_setup_equivalent(&setup.quick(3), 2);
+    }
+}
+
+#[test]
+fn grid_mixed_data_sharing() {
+    // The mixed (TPC-H + Sales) universe is the heavy family; one cell
+    // exercises the multi-view query classes under pipelining.
+    let setup = setups::data_sharing_mixed()[1].clone().quick(3);
+    assert_setup_equivalent(&setup, 2);
+}
+
+#[test]
+fn grid_arrival_rates() {
+    for setup in setups::arrival_rates() {
+        assert_setup_equivalent(&setup.quick(3), 2);
+    }
+}
+
+#[test]
+fn grid_tenant_scaling() {
+    for setup in setups::tenant_scaling() {
+        assert_setup_equivalent(&setup.quick(3), 3);
+    }
+}
+
+#[test]
+fn grid_convergence_and_stateful() {
+    assert_setup_equivalent(&setups::convergence().quick(4), 2);
+    // A stateful (γ=2) Figure 12 cell: the planner's mirror must feed
+    // the boost identically to the live cache.
+    let (stateful, _gamma) = setups::batch_size_sweep()
+        .into_iter()
+        .find(|(s, g)| s.batch_secs == 20.0 && g.is_some())
+        .expect("stateful 20s cell exists");
+    assert_setup_equivalent(&stateful.quick(4), 2);
+}
+
+#[test]
+fn deep_pipeline_still_identical() {
+    // A depth far beyond the batch count: the solver plans the whole
+    // run ahead; results still match the serial reference.
+    let setup = setups::data_sharing_sales()[0].clone().quick(5);
+    let policies: Vec<Box<dyn Policy>> = vec![PolicyKind::FastPf.build()];
+    let serial = run_with_policies_serial(&setup, &policies);
+    let pipelined = run_with_policies_pipelined(&setup, &policies, 64);
+    for (s, p) in serial.runs.iter().zip(&pipelined.runs) {
+        assert_eq!(s.outcomes.len(), p.outcomes.len());
+        for (so, po) in s.outcomes.iter().zip(&p.outcomes) {
+            assert_eq!(so.id, po.id);
+            assert_eq!(so.finish, po.finish);
+        }
+        for (sb, pb) in s.batches.iter().zip(&p.batches) {
+            assert_eq!(sb.config, pb.config);
+        }
+    }
+}
