@@ -1,0 +1,104 @@
+//! Federation scaling benchmarks (`cargo bench --bench cluster_bench`):
+//! the same §5.3 Sales workload run through the sharded federation at
+//! 1/2/4/8 shards, against the single-node serial coordinator.
+//!
+//! Writes `BENCH_cluster.json` with the two trajectory figures the
+//! roadmap tracks: batches/sec scaling (shard solves run concurrently
+//! on smaller sub-batches, so throughput should grow superlinearly in
+//! the solve-bound regime — the acceptance bar is ≥2× at 4 shards vs
+//! 1 shard) and the global fairness spread (max/min weight-normalized
+//! per-tenant speedup vs the STATIC baseline), which the global
+//! accountant must keep close to the single-node value.
+
+use robus::alloc::{Policy, PolicyKind};
+use robus::cluster::FederationConfig;
+use robus::experiments::runner::{run_federated, run_with_policies_serial};
+use robus::experiments::setups;
+use robus::util::bench::BenchSuite;
+use robus::util::json::Json;
+
+fn main() {
+    let mut suite = BenchSuite::new("sharded cache federation");
+    // Sales G2 (the Zipf-skew §5.3 family) at bench-able size.
+    let setup = setups::data_sharing_sales()[1].clone().quick(10);
+    let shard_counts = [1usize, 2, 4, 8];
+
+    for &shards in &shard_counts {
+        let fed = FederationConfig::with_shards(shards);
+        let s = setup.clone();
+        suite.bench(&format!("cluster_{shards}shard_10b_fastpf"), move || {
+            let policy: Box<dyn Policy> = PolicyKind::FastPf.build();
+            run_federated(&s, &fed, policy.as_ref()).run.outcomes.len()
+        });
+    }
+
+    // Instrumented runs for the trajectory figures: STATIC single-node
+    // as the speedup baseline, serial FASTPF as the batches/sec
+    // reference, one federation run per shard count.
+    let baseline = run_with_policies_serial(&setup, &[PolicyKind::Static.build()]);
+    let single = run_with_policies_serial(&setup, &[PolicyKind::FastPf.build()]);
+    let results: Vec<_> = shard_counts
+        .iter()
+        .map(|&shards| {
+            let fed = FederationConfig::with_shards(shards);
+            let policy: Box<dyn Policy> = PolicyKind::FastPf.build();
+            (shards, run_federated(&setup, &fed, policy.as_ref()))
+        })
+        .collect();
+    let one_shard_bps = results[0].1.batches_per_sec();
+
+    let scaling = Json::Array(
+        results
+            .iter()
+            .map(|(shards, r)| {
+                let mut row = r.to_json(Some(&baseline.runs[0]));
+                row.set("shards", Json::Number(*shards as f64));
+                row.set(
+                    "speedup_vs_1shard",
+                    Json::Number(r.batches_per_sec() / one_shard_bps.max(1e-12)),
+                );
+                row
+            })
+            .collect(),
+    );
+    let report = Json::from_pairs(vec![
+        (
+            "suite",
+            Json::String("sharded cache federation".to_string()),
+        ),
+        ("workload", Json::String(setup.name.clone())),
+        ("microbench", suite.to_json()),
+        (
+            "single_node_serial",
+            Json::from_pairs(vec![
+                (
+                    "batches_per_sec",
+                    Json::Number(single.runs[0].batches_per_sec()),
+                ),
+                (
+                    "fairness_spread",
+                    Json::Number(robus::cluster::speedup_spread(
+                        &single.runs[0],
+                        &baseline.runs[0],
+                    )),
+                ),
+            ]),
+        ),
+        ("scaling", scaling),
+    ]);
+
+    println!("\n{}", suite.markdown());
+    for (shards, r) in &results {
+        println!(
+            "{} shard(s): {:.2} batches/s ({:.2}x vs 1 shard), spread {:.3}",
+            shards,
+            r.batches_per_sec(),
+            r.batches_per_sec() / one_shard_bps.max(1e-12),
+            r.fairness_spread(&baseline.runs[0]),
+        );
+    }
+    match std::fs::write("BENCH_cluster.json", report.to_string_pretty()) {
+        Ok(()) => println!("(wrote BENCH_cluster.json)"),
+        Err(e) => eprintln!("warn: could not write BENCH_cluster.json: {e}"),
+    }
+}

@@ -123,6 +123,43 @@ pub trait Policy: Send + Sync {
     fn allocate(&self, batch: &BatchUtilities, rng: &mut Pcg64) -> Allocation;
 }
 
+/// Scale a batch problem's tenant weights λ_i in place by per-tenant
+/// multipliers — the federation's global-fairness feedback entering a
+/// shard's solve. Weights are the only weight-dependent state in
+/// [`BatchUtilities`] (classes, the bitmask index, and U* are
+/// weight-independent), so owners of a freshly built problem apply
+/// multipliers without cloning anything.
+pub fn apply_weight_multipliers(batch: &mut BatchUtilities, mult: &[f64]) {
+    assert_eq!(mult.len(), batch.n_tenants, "multiplier length mismatch");
+    for (w, &m) in batch.weights.iter_mut().zip(mult) {
+        assert!(m > 0.0, "weight multiplier must be positive, got {m}");
+        *w *= m;
+    }
+}
+
+/// Weighted solve entry (the federation's global-fairness feedback
+/// path): run `policy` on `batch` with per-tenant weight multipliers
+/// layered onto the base λ_i. `None` routes straight to
+/// `policy.allocate` and is bit-identical to an unweighted solve. This
+/// borrowed-problem form clones the batch; the hot path
+/// (`SolveContext::solve_accounted`, which owns its problem) uses
+/// [`apply_weight_multipliers`] directly instead.
+pub fn allocate_weighted(
+    policy: &dyn Policy,
+    batch: &BatchUtilities,
+    weight_mult: Option<&[f64]>,
+    rng: &mut Pcg64,
+) -> Allocation {
+    match weight_mult {
+        None => policy.allocate(batch, rng),
+        Some(mult) => {
+            let mut reweighted = batch.clone();
+            apply_weight_multipliers(&mut reweighted, mult);
+            policy.allocate(&reweighted, rng)
+        }
+    }
+}
+
 /// The policies compared in §5.3 plus the provably-good MW variants.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PolicyKind {
@@ -313,6 +350,49 @@ mod tests {
         }
         let frac = count_r as f64 / 20_000.0;
         assert!((frac - 0.75).abs() < 0.02, "frac={frac}");
+    }
+
+    #[test]
+    fn allocate_weighted_none_is_bit_identical() {
+        let b = testing::table3();
+        for kind in [PolicyKind::Mmf, PolicyKind::FastPf, PolicyKind::Static] {
+            let policy = kind.build();
+            let mut r1 = Pcg64::new(3);
+            let mut r2 = Pcg64::new(3);
+            let direct = policy.allocate(&b, &mut r1);
+            let via = allocate_weighted(policy.as_ref(), &b, None, &mut r2);
+            assert_eq!(direct.configs, via.configs, "{}", kind.name());
+            assert_eq!(direct.probs, via.probs, "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn allocate_weighted_multipliers_steer_the_solve() {
+        // Table 5 shape: tenant 0 only values view 1, tenant 1 strongly
+        // prefers view 0. Boosting tenant 0's weight hard must raise its
+        // expected scaled utility relative to the unweighted solve.
+        let b = testing::table5();
+        let policy = PolicyKind::Mmf.build();
+        let base = allocate_weighted(policy.as_ref(), &b, None, &mut Pcg64::new(1));
+        let boosted = allocate_weighted(
+            policy.as_ref(),
+            &b,
+            Some(&[50.0, 1.0]),
+            &mut Pcg64::new(1),
+        );
+        let v_base = base.expected_scaled_utilities(&b);
+        let v_boost = boosted.expected_scaled_utilities(&b);
+        // Weighted MMF is weight-proportional (see mmf.rs): a 50×
+        // multiplier must strictly raise tenant 0's share above the
+        // ~0.5025 equal-weight optimum — a no-op reweighting fails here.
+        assert!(
+            v_boost[0] > v_base[0] + 0.05,
+            "multipliers had no effect: boosted {} vs base {}",
+            v_boost[0],
+            v_base[0]
+        );
+        // The reweighting never mutates the caller's batch problem.
+        assert_eq!(b.weights, vec![1.0, 1.0]);
     }
 
     #[test]

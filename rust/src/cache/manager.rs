@@ -13,16 +13,6 @@
 
 use crate::util::mask::ConfigMask;
 
-/// The §5.4 stateful boost vector for a given cache contents mask: γ for
-/// cached views, 1.0 otherwise. Shared by [`CacheManager::boost_vector`]
-/// and the pipelined planner's cache mirror (which must produce
-/// bit-identical boosts without holding the manager itself).
-pub fn stateful_boost(cached: &ConfigMask, gamma: f64) -> Vec<f64> {
-    (0..cached.n_bits())
-        .map(|v| if cached.get(v) { gamma } else { 1.0 })
-        .collect()
-}
-
 /// One incremental cache transition: the views (and bytes) that enter
 /// and leave on an update. `loaded`/`evicted` are ascending view ids.
 #[derive(Debug, Clone, Default, PartialEq)]
@@ -203,10 +193,16 @@ impl CacheManager {
         }
     }
 
-    /// The §5.4 stateful boost vector: γ for currently cached views,
-    /// 1.0 otherwise. Feed to [`crate::domain::BatchUtilities::build`].
-    pub fn boost_vector(&self, gamma: f64) -> Vec<f64> {
-        stateful_boost(&self.cached, gamma)
+    /// The §5.4 stateful boost vector for a cache contents mask: γ for
+    /// cached views, 1.0 otherwise. Feed to
+    /// [`crate::domain::utility::BatchUtilities::build`]. An associated
+    /// function (not a method) because the pipelined planner boosts from
+    /// its contents *mirror* without holding a manager; a live manager
+    /// passes `cm.cached()`. This is the single boost implementation.
+    pub fn boost_vector(cached: &ConfigMask, gamma: f64) -> Vec<f64> {
+        (0..cached.n_bits())
+            .map(|v| if cached.get(v) { gamma } else { 1.0 })
+            .collect()
     }
 }
 
@@ -308,9 +304,54 @@ mod tests {
     fn boost_vector_gamma() {
         let mut cm = CacheManager::new(100, vec![40, 50]);
         cm.update(&mask(&[true, false]));
-        assert_eq!(cm.boost_vector(2.0), vec![2.0, 1.0]);
-        // The free-function form sees the same contents mask.
-        assert_eq!(stateful_boost(cm.cached(), 2.0), cm.boost_vector(2.0));
+        assert_eq!(CacheManager::boost_vector(cm.cached(), 2.0), vec![2.0, 1.0]);
+        // A detached mirror mask produces the identical boost.
+        let mirror = cm.cached().clone();
+        assert_eq!(
+            CacheManager::boost_vector(&mirror, 2.0),
+            CacheManager::boost_vector(cm.cached(), 2.0)
+        );
+    }
+
+    #[test]
+    fn cancelled_loads_consistent_under_flip_flops() {
+        // Repeated target flip-flops: schedule a load, cancel it before
+        // any query touches it, reschedule — the byte totals must stay
+        // consistent (loaded − evicted == bytes currently cached) and
+        // every untouched load must count as cancelled exactly once.
+        let mut cm = CacheManager::new(100, vec![60, 40]);
+        let on = mask(&[true, false]);
+        let off = mask(&[false, false]);
+        for k in 1..=3u64 {
+            cm.update(&on);
+            cm.update(&off);
+            let s = cm.transition_stats();
+            assert_eq!(s.cancelled_loads, k as usize, "cycle {k}");
+            assert_eq!(s.bytes_loaded, 60 * k);
+            assert_eq!(s.bytes_evicted, 60 * k);
+            assert_eq!(s.materializations, 0);
+            assert_eq!(cm.used_bytes(), 0);
+            assert!(cm.pending_loads().none_set());
+        }
+        // A rescheduled load that IS touched does not count as cancelled,
+        // and its materialization is charged exactly once.
+        cm.update(&on);
+        assert!(cm.charge_materialization(0));
+        cm.update(&off);
+        let s = cm.transition_stats().clone();
+        assert_eq!(s.cancelled_loads, 3);
+        assert_eq!(s.bytes_loaded, 240);
+        assert_eq!(s.bytes_evicted, 240);
+        assert_eq!(s.materializations, 1);
+        assert_eq!(s.bytes_materialized, 60);
+        assert_eq!(s.updates, 8);
+        // Loaded minus evicted equals current contents (empty here); a
+        // final reschedule restores the in-flight state cleanly.
+        assert_eq!(s.bytes_loaded - s.bytes_evicted, cm.used_bytes());
+        cm.update(&on);
+        assert!(cm.pending_loads().get(0));
+        assert!(cm.charge_materialization(0));
+        assert!(!cm.charge_materialization(0));
     }
 
     #[test]

@@ -3,4 +3,4 @@
 
 pub mod manager;
 
-pub use manager::{stateful_boost, CacheDelta, CacheManager, TransitionStats};
+pub use manager::{CacheDelta, CacheManager, TransitionStats};

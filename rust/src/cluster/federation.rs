@@ -1,0 +1,490 @@
+//! The sharded federation coordinator: N single-node ROBUS
+//! planner/executor pairs (one per cache shard) under a global fairness
+//! accountant.
+//!
+//! Per batch window the federation:
+//! 1. drains the *same* workload window a single-node coordinator would
+//!    (identical arrivals — the scale-out changes routing, not demand);
+//! 2. applies hot-view replication and periodic demand-driven rebalance
+//!    decisions from the previous batch's observations;
+//! 3. routes each query to a shard holding all its required views
+//!    (replicated views spread deterministically across holders;
+//!    spanning queries fall back to the home shard of their largest
+//!    view);
+//! 4. solves + executes every shard concurrently on scoped threads —
+//!    each shard runs the unmodified PR-2 `SolveContext`/`BatchExecutor`
+//!    machinery over its routed queries with its slice of the cache
+//!    budget, under per-tenant weight multipliers from the accountant;
+//! 5. aggregates attained/attainable per-tenant utilities across shards
+//!    into the [`GlobalAccountant`], whose weighted-PF feedback boosts
+//!    tenants starved anywhere in the federation on *every* shard next
+//!    batch — fairness stays global per tenant, not per shard (Delta
+//!    Fair Sharing's fleet-wide isolation, LERC's coordinated cache
+//!    decisions).
+//!
+//! With `--shards 1` every step degenerates to the serial coordinator
+//! (no reweighting, no replication, the identity placement), and the
+//! run is bit-identical to `Coordinator::run` — asserted across the
+//! §5.3 grid in `rust/tests/cluster_equivalence.rs`.
+
+use std::time::Instant;
+
+use crate::alloc::Policy;
+use crate::cluster::metrics::{ClusterRecord, ClusterResult};
+use crate::cluster::placement::{Placement, PlacementStrategy};
+use crate::cluster::shard::{Shard, ShardBatchOutcome};
+use crate::coordinator::loop_::{Coordinator, CoordinatorConfig, SolveContext};
+use crate::domain::query::Query;
+use crate::domain::tenant::TenantSet;
+use crate::sim::engine::SimEngine;
+use crate::util::rng::mix64;
+use crate::workload::generator::WorkloadGenerator;
+use crate::workload::universe::Universe;
+
+/// Federation knobs (`robus cluster ...`).
+#[derive(Debug, Clone)]
+pub struct FederationConfig {
+    pub n_shards: usize,
+    pub placement: PlacementStrategy,
+    /// Hot-view replication threshold: a view whose share of the
+    /// previous batch's demanded bytes exceeds this fraction is
+    /// replicated to every shard (replica bytes charged to each holder).
+    /// `None` disables replication.
+    pub replicate_hot: Option<f64>,
+    /// Re-home views by cumulative demand (pack placer) every `k`
+    /// batches; churn is previewed with `CacheManager::delta_to`.
+    /// `None` disables rebalancing.
+    pub rebalance_every: Option<usize>,
+    /// Clamp on the global accountant's per-tenant weight multipliers
+    /// (boosts live in `[1/max_boost, max_boost]`).
+    pub max_boost: f64,
+}
+
+impl Default for FederationConfig {
+    fn default() -> Self {
+        Self {
+            n_shards: 1,
+            placement: PlacementStrategy::Hash,
+            replicate_hot: None,
+            rebalance_every: None,
+            max_boost: 4.0,
+        }
+    }
+}
+
+impl FederationConfig {
+    pub fn with_shards(n_shards: usize) -> Self {
+        Self {
+            n_shards,
+            ..Self::default()
+        }
+    }
+}
+
+/// The global fairness accountant: folds every shard's per-batch
+/// attained utility into one cumulative per-tenant ledger and emits the
+/// weighted-PF weight multipliers for the next batch. A tenant whose
+/// federation-wide attainment trails the mean gets boosted on every
+/// shard — including shards where it is doing fine — so starvation on
+/// one shard is compensated globally.
+#[derive(Debug, Clone)]
+pub struct GlobalAccountant {
+    /// Cumulative attained global scaled utility per tenant
+    /// (Σ over batches of ΣU_i across shards / ΣU*_i across shards).
+    cum: Vec<f64>,
+    /// Batches in which the tenant was active anywhere.
+    active: Vec<usize>,
+    max_boost: f64,
+}
+
+impl GlobalAccountant {
+    pub fn new(n_tenants: usize, max_boost: f64) -> Self {
+        assert!(max_boost >= 1.0, "max_boost must be ≥ 1");
+        Self {
+            cum: vec![0.0; n_tenants],
+            active: vec![0; n_tenants],
+            max_boost,
+        }
+    }
+
+    /// Fold one batch: `utilities` and `u_star` are the per-tenant sums
+    /// across all shards.
+    pub fn observe(&mut self, utilities: &[f64], u_star: &[f64]) {
+        for i in 0..self.cum.len() {
+            if u_star[i] > 0.0 {
+                self.cum[i] += utilities[i] / u_star[i];
+                self.active[i] += 1;
+            }
+        }
+    }
+
+    /// Per-tenant weight multipliers for the next batch. Tenants at the
+    /// mean attainment get exactly 1.0; starved tenants get boosted up
+    /// to `max_boost`, over-served tenants damped down to `1/max_boost`.
+    /// Inactive tenants stay at 1.0.
+    pub fn multipliers(&self, weights: &[f64]) -> Vec<f64> {
+        let norms: Vec<Option<f64>> = self
+            .cum
+            .iter()
+            .zip(&self.active)
+            .zip(weights)
+            .map(|((&c, &a), &w)| {
+                if a > 0 {
+                    Some(c / a as f64 / w.max(1e-12))
+                } else {
+                    None
+                }
+            })
+            .collect();
+        let act: Vec<f64> = norms.iter().flatten().copied().collect();
+        if act.is_empty() {
+            return vec![1.0; self.cum.len()];
+        }
+        let mean = act.iter().sum::<f64>() / act.len() as f64;
+        let eps = mean * 1e-3 + 1e-12;
+        norms
+            .into_iter()
+            .map(|o| match o {
+                None => 1.0,
+                Some(x) => ((mean + eps) / (x + eps))
+                    .clamp(1.0 / self.max_boost, self.max_boost),
+            })
+            .collect()
+    }
+}
+
+/// The federation coordinator. Owns the same inputs as a single-node
+/// [`Coordinator`] plus the [`FederationConfig`]; `engine` describes one
+/// shard's cluster slice with the *total* cache budget (each shard gets
+/// `budget / n_shards`).
+pub struct ShardedCoordinator<'a> {
+    pub universe: &'a Universe,
+    pub tenants: TenantSet,
+    pub engine: SimEngine,
+    pub config: CoordinatorConfig,
+    pub fed: FederationConfig,
+}
+
+impl<'a> ShardedCoordinator<'a> {
+    pub fn new(
+        universe: &'a Universe,
+        tenants: TenantSet,
+        engine: SimEngine,
+        config: CoordinatorConfig,
+        fed: FederationConfig,
+    ) -> Self {
+        assert!(fed.n_shards >= 1, "federation needs at least one shard");
+        Self {
+            universe,
+            tenants,
+            engine,
+            config,
+            fed,
+        }
+    }
+
+    /// Each shard's slice of the total cache budget.
+    pub fn shard_budget(&self) -> u64 {
+        self.engine.config.cache_budget / self.fed.n_shards as u64
+    }
+
+    /// Run the federated loop with `policy` over a fresh workload from
+    /// `generator`. Same determinism contract as the single-node
+    /// drivers: the generator seed fixes arrivals, `config.seed` fixes
+    /// every shard's policy randomization.
+    pub fn run(&self, generator: &mut WorkloadGenerator, policy: &dyn Policy) -> ClusterResult {
+        let t_run = Instant::now();
+        let n_shards = self.fed.n_shards;
+        let n_views = self.universe.views.len();
+        let n_tenants = self.tenants.len();
+        let cached_sizes: Vec<u64> = self
+            .universe
+            .views
+            .iter()
+            .map(|v| v.cached_bytes)
+            .collect();
+        let scan_sizes: Vec<u64> = self
+            .universe
+            .views
+            .iter()
+            .map(|v| v.scan_bytes)
+            .collect();
+        let weights = self.tenants.weights();
+
+        let mut placement = Placement::build(self.fed.placement, n_shards, &cached_sizes);
+
+        // Per-shard coordinators: identical knobs, the engine's budget
+        // cut to the shard slice — `executor()` then builds each shard's
+        // CacheManager with the right budget.
+        let mut shard_engine = self.engine.clone();
+        shard_engine.config.cache_budget = self.shard_budget();
+        let shard_budget = shard_engine.config.cache_budget;
+        let coordinators: Vec<Coordinator<'a>> = (0..n_shards)
+            .map(|_| {
+                Coordinator::new(
+                    self.universe,
+                    self.tenants.clone(),
+                    shard_engine.clone(),
+                    self.config.clone(),
+                )
+            })
+            .collect();
+        let mut shards: Vec<Shard<'_>> = coordinators
+            .iter()
+            .enumerate()
+            .map(|(s, c)| Shard::new(s, c, placement.shard_mask(s), n_views, self.config.seed))
+            .collect();
+
+        let mut accountant = GlobalAccountant::new(n_tenants, self.fed.max_boost);
+        let mut records: Vec<ClusterRecord> = Vec::with_capacity(self.config.n_batches);
+        let mut replication_bytes = 0u64;
+        let mut rebalance_churn = 0u64;
+        // Previous batch's demanded bytes per view (replication signal)
+        // and the whole-run cumulative demand (rebalance signal).
+        let mut prev_demand = vec![0u64; n_views];
+        let mut cum_demand = vec![0u64; n_views];
+
+        for b in 0..self.config.n_batches {
+            let window_end = (b + 1) as f64 * self.config.batch_secs;
+            let queries = generator.generate_until(window_end, self.universe);
+
+            // Hot-view replication, from the previous batch's demand.
+            let mut replicated_views = Vec::new();
+            if n_shards > 1 {
+                if let Some(frac) = self.fed.replicate_hot {
+                    let total: u64 = prev_demand.iter().sum();
+                    if total > 0 {
+                        for v in 0..n_views {
+                            if prev_demand[v] as f64 > frac * total as f64 {
+                                let mut added = 0u64;
+                                for sh in shards.iter_mut() {
+                                    if !sh.is_resident(v) {
+                                        sh.replicas.set(v, true);
+                                        added += 1;
+                                    }
+                                }
+                                if added > 0 {
+                                    replication_bytes += added * cached_sizes[v];
+                                    replicated_views.push(v);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+
+            // Periodic demand-driven rebalance: re-home by cumulative
+            // demand with the pack placer; preview the eviction churn of
+            // each shard's no-longer-resident cached views via delta_to.
+            let mut rebalanced = false;
+            if n_shards > 1 {
+                if let Some(k) = self.fed.rebalance_every {
+                    if k > 0 && b > 0 && b % k == 0 {
+                        let next = Placement::pack_weighted(n_shards, &cum_demand);
+                        if next != placement {
+                            rebalance_churn += rehome(&mut shards, &next);
+                            placement = next;
+                            rebalanced = true;
+                        }
+                    }
+                }
+            }
+
+            // Route the batch (order-preserving within each shard) and
+            // record per-view demanded bytes for the replication and
+            // rebalance signals.
+            let mut batch_demand = vec![0u64; n_views];
+            let targets: Vec<usize> = queries
+                .iter()
+                .map(|q| {
+                    for v in &q.required_views {
+                        batch_demand[v.0] += scan_sizes[v.0];
+                    }
+                    route(&shards, &placement, &cached_sizes, q)
+                })
+                .collect();
+            for (q, s) in queries.into_iter().zip(targets) {
+                shards[s].inbox.push(q);
+            }
+            for v in 0..n_views {
+                cum_demand[v] += batch_demand[v];
+            }
+            prev_demand = batch_demand;
+
+            // Global-fairness feedback for this batch's solves: None on
+            // batch 0 (nothing observed) and for single-shard runs (the
+            // bit-identical serial path).
+            let mults: Option<Vec<f64>> = if n_shards > 1 && b > 0 {
+                Some(accountant.multipliers(&weights))
+            } else {
+                None
+            };
+
+            // Solve + execute every shard concurrently.
+            let outcomes: Vec<ShardBatchOutcome> = std::thread::scope(|scope| {
+                let handles: Vec<_> = shards
+                    .iter_mut()
+                    .map(|sh| {
+                        let ctx = SolveContext {
+                            tenants: &self.tenants,
+                            universe: self.universe,
+                            budget: shard_budget,
+                            stateful_gamma: self.config.stateful_gamma,
+                            weight_mult: mults.as_deref(),
+                        };
+                        scope.spawn(move || sh.step(&ctx, policy, b, window_end))
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("shard thread panicked"))
+                    .collect()
+            });
+
+            // Aggregate federation-wide utilities into the accountant.
+            let mut agg_u = vec![0.0; n_tenants];
+            let mut agg_star = vec![0.0; n_tenants];
+            for o in &outcomes {
+                for i in 0..n_tenants {
+                    agg_u[i] += o.utilities[i];
+                    agg_star[i] += o.u_star[i];
+                }
+            }
+            accountant.observe(&agg_u, &agg_star);
+
+            records.push(ClusterRecord {
+                index: b,
+                multipliers: mults.unwrap_or_else(|| vec![1.0; n_tenants]),
+                replicated_views,
+                rebalanced,
+            });
+        }
+
+        let host_wall_secs = t_run.elapsed().as_secs_f64();
+        let per_shard = shards
+            .into_iter()
+            .map(|sh| {
+                sh.executor
+                    .into_result(policy.name(), &self.config, n_tenants, host_wall_secs)
+            })
+            .collect();
+        ClusterResult::assemble(
+            per_shard,
+            records,
+            replication_bytes,
+            rebalance_churn,
+            host_wall_secs,
+        )
+    }
+}
+
+/// Re-home every shard to `next`'s map, returning the summed
+/// `delta_to`-previewed eviction bytes of cached views the shard will
+/// no longer serve (they age out at the next solve; the preview
+/// quantifies the churn the rebalance causes). Hot-view replicas are
+/// preserved across the re-home — replication is one-way; a replica bit
+/// promoted to home is just reclassified, never dropped.
+fn rehome(shards: &mut [Shard<'_>], next: &Placement) -> u64 {
+    let mut churn = 0u64;
+    for sh in shards.iter_mut() {
+        let new_home = next.shard_mask(sh.id);
+        // Reclassify replica bits the new placement homes here.
+        for v in new_home.ones() {
+            if sh.replicas.get(v) {
+                sh.replicas.set(v, false);
+            }
+        }
+        let cached = sh.executor.cache().cached().clone();
+        let mut keep = cached.clone();
+        for v in cached.ones() {
+            if !new_home.get(v) && !sh.replicas.get(v) {
+                keep.set(v, false);
+            }
+        }
+        churn += sh.executor.cache().delta_to(&keep).bytes_evicted;
+        sh.home = new_home;
+    }
+    churn
+}
+
+/// Route one query: prefer shards holding every required view (several
+/// holders → deterministic spread by query id), else the home shard of
+/// the query's largest required view.
+fn route(
+    shards: &[Shard<'_>],
+    placement: &Placement,
+    cached_sizes: &[u64],
+    q: &Query,
+) -> usize {
+    let holders: Vec<usize> = shards
+        .iter()
+        .filter(|sh| q.required_views.iter().all(|v| sh.is_resident(v.0)))
+        .map(|sh| sh.id)
+        .collect();
+    match holders.len() {
+        0 => q
+            .required_views
+            .iter()
+            .map(|v| v.0)
+            .max_by_key(|&v| (cached_sizes[v], std::cmp::Reverse(v)))
+            .map(|v| placement.home(v))
+            .unwrap_or(0),
+        1 => holders[0],
+        n => holders[(mix64(q.id.0) % n as u64) as usize],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accountant_even_attainment_is_identity() {
+        let mut acc = GlobalAccountant::new(3, 4.0);
+        acc.observe(&[5.0, 5.0, 5.0], &[10.0, 10.0, 10.0]);
+        acc.observe(&[2.0, 2.0, 2.0], &[4.0, 4.0, 4.0]);
+        let m = acc.multipliers(&[1.0, 1.0, 1.0]);
+        for (i, &mi) in m.iter().enumerate() {
+            assert_eq!(mi, 1.0, "tenant {i} got multiplier {mi}");
+        }
+    }
+
+    #[test]
+    fn accountant_boosts_starved_tenant() {
+        let mut acc = GlobalAccountant::new(2, 4.0);
+        // Tenant 0 attains everything, tenant 1 almost nothing.
+        for _ in 0..5 {
+            acc.observe(&[10.0, 1.0], &[10.0, 10.0]);
+        }
+        let m = acc.multipliers(&[1.0, 1.0]);
+        assert!(m[1] > 1.0, "starved tenant not boosted: {m:?}");
+        assert!(m[0] < 1.0, "over-served tenant not damped: {m:?}");
+        assert!(m[1] <= 4.0 && m[0] >= 0.25, "clamp violated: {m:?}");
+    }
+
+    #[test]
+    fn accountant_ignores_inactive_tenants() {
+        let mut acc = GlobalAccountant::new(2, 4.0);
+        acc.observe(&[5.0, 0.0], &[10.0, 0.0]);
+        let m = acc.multipliers(&[1.0, 1.0]);
+        assert_eq!(m[1], 1.0, "inactive tenant must stay neutral");
+    }
+
+    #[test]
+    fn accountant_empty_history_is_identity() {
+        let acc = GlobalAccountant::new(4, 4.0);
+        assert_eq!(acc.multipliers(&[1.0; 4]), vec![1.0; 4]);
+    }
+
+    #[test]
+    fn accountant_respects_tenant_weights() {
+        let mut acc = GlobalAccountant::new(2, 4.0);
+        // Tenant 1 has double weight: the same attained utility means it
+        // is *under*-served relative to entitlement → boosted.
+        for _ in 0..3 {
+            acc.observe(&[5.0, 5.0], &[10.0, 10.0]);
+        }
+        let m = acc.multipliers(&[1.0, 2.0]);
+        assert!(m[1] > m[0], "heavier tenant should be favored: {m:?}");
+    }
+}

@@ -1,0 +1,420 @@
+//! Federation-level metrics: per-batch [`ClusterRecord`]s (shard loads,
+//! fairness multipliers, replication/rebalance events), per-shard
+//! summaries, and the merged [`ClusterResult`] whose `run` field is a
+//! plain [`RunResult`] — so every single-node metric (throughput,
+//! fairness index, speedups, hit ratio) applies to the federation
+//! unchanged, and the `--shards 1` equivalence check is a direct
+//! `RunResult` comparison.
+
+use crate::cache::CacheDelta;
+use crate::coordinator::loop_::{BatchRecord, RunResult};
+use crate::coordinator::metrics::per_tenant_speedups;
+use crate::util::json::Json;
+
+/// One batch of the federation: the global accountant's feedback plus
+/// the replication/rebalance events that fired before it.
+#[derive(Debug, Clone)]
+pub struct ClusterRecord {
+    pub index: usize,
+    /// Per-tenant weight multipliers applied to every shard's solve this
+    /// batch (all 1.0 for batch 0, single-shard runs, and perfectly even
+    /// attainment).
+    pub multipliers: Vec<f64>,
+    /// Views replicated to additional shards before this batch.
+    pub replicated_views: Vec<usize>,
+    /// Whether a demand-driven rebalance re-homed views before this batch.
+    pub rebalanced: bool,
+}
+
+/// Per-shard roll-up of a whole run.
+#[derive(Debug, Clone)]
+pub struct ShardSummary {
+    pub shard: usize,
+    pub queries: usize,
+    /// Simulated queries per minute served by this shard (Eq. 4 scope:
+    /// the shard's own timeline).
+    pub throughput_per_min: f64,
+    /// Host-side solve latency percentiles for this shard's solves.
+    pub solve_ms_p50: f64,
+    pub solve_ms_p99: f64,
+    pub avg_cache_utilization: f64,
+    pub bytes_loaded: u64,
+    pub bytes_evicted: u64,
+}
+
+/// Result of a [`crate::cluster::ShardedCoordinator`] run.
+#[derive(Debug, Clone)]
+pub struct ClusterResult {
+    /// The merged federation-level view: outcomes of every shard, one
+    /// `BatchRecord` per batch (configs unioned, byte movement summed).
+    /// For a 1-shard run this IS the shard's `RunResult`, bit-identical
+    /// to the serial coordinator's.
+    pub run: RunResult,
+    /// Each shard's own run (its timeline, batches, outcomes).
+    pub per_shard: Vec<RunResult>,
+    pub records: Vec<ClusterRecord>,
+    /// Bytes of hot-view replicas added across the run (each replica
+    /// charged at the view's cached size per holding shard).
+    pub replication_bytes: u64,
+    /// Projected eviction churn of rebalance operations (from
+    /// `CacheManager::delta_to` previews at re-home time).
+    pub rebalance_churn: u64,
+}
+
+impl ClusterResult {
+    pub(crate) fn assemble(
+        per_shard: Vec<RunResult>,
+        records: Vec<ClusterRecord>,
+        replication_bytes: u64,
+        rebalance_churn: u64,
+        host_wall_secs: f64,
+    ) -> Self {
+        assert!(!per_shard.is_empty());
+        let run = if per_shard.len() == 1 {
+            per_shard[0].clone()
+        } else {
+            merge_runs(&per_shard, host_wall_secs)
+        };
+        Self {
+            run,
+            per_shard,
+            records,
+            replication_bytes,
+            rebalance_churn,
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.per_shard.len()
+    }
+
+    /// Federation batches retired per host second (the scaling figure
+    /// `cluster_bench` tracks: shard solves run in parallel, so this
+    /// grows with the shard count until routing overhead dominates).
+    pub fn batches_per_sec(&self) -> f64 {
+        self.run.batches_per_sec()
+    }
+
+    /// Cross-shard fairness spread: max/min weight-normalized per-tenant
+    /// speedup versus a baseline run over the same workload. 1.0 is a
+    /// perfectly even federation; the global accountant exists to keep
+    /// this close to the single-node value.
+    pub fn fairness_spread(&self, baseline: &RunResult) -> f64 {
+        speedup_spread(&self.run, baseline)
+    }
+
+    pub fn shard_summaries(&self) -> Vec<ShardSummary> {
+        self.per_shard
+            .iter()
+            .enumerate()
+            .map(|(s, r)| {
+                let (bytes_loaded, bytes_evicted) = r.cache_bytes_moved();
+                ShardSummary {
+                    shard: s,
+                    queries: r.outcomes.len(),
+                    throughput_per_min: r.throughput_per_min(),
+                    solve_ms_p50: r.solve_ms_percentile(50.0),
+                    solve_ms_p99: r.solve_ms_percentile(99.0),
+                    avg_cache_utilization: r.avg_cache_utilization(),
+                    bytes_loaded,
+                    bytes_evicted,
+                }
+            })
+            .collect()
+    }
+
+    /// Human-readable federation report for the CLI.
+    pub fn render(&self, baseline: Option<&RunResult>) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "federation: {} shards, {} batches, {} queries, {:.2} batches/s\n",
+            self.n_shards(),
+            self.run.batches.len(),
+            self.run.outcomes.len(),
+            self.batches_per_sec()
+        ));
+        out.push_str(&format!(
+            "replication: {} B added; rebalance churn: {} B\n",
+            self.replication_bytes, self.rebalance_churn
+        ));
+        if let Some(base) = baseline {
+            out.push_str(&format!(
+                "global fairness: index {:.3}, spread {:.3} (vs {})\n",
+                crate::coordinator::metrics::fairness_index(&self.run, base),
+                self.fairness_spread(base),
+                base.policy
+            ));
+        }
+        out.push_str(
+            "shard     queries   q/min   solve p50   solve p99   util    loaded B    evicted B\n",
+        );
+        for s in self.shard_summaries() {
+            out.push_str(&format!(
+                "{:<9} {:>7} {:>7.1} {:>8.1}ms {:>8.1}ms {:>6.2} {:>11} {:>11}\n",
+                s.shard,
+                s.queries,
+                s.throughput_per_min,
+                s.solve_ms_p50,
+                s.solve_ms_p99,
+                s.avg_cache_utilization,
+                s.bytes_loaded,
+                s.bytes_evicted
+            ));
+        }
+        out
+    }
+
+    /// Machine-readable report (the `BENCH_cluster.json` building block).
+    pub fn to_json(&self, baseline: Option<&RunResult>) -> Json {
+        let shards = Json::Array(
+            self.shard_summaries()
+                .iter()
+                .map(|s| {
+                    Json::from_pairs(vec![
+                        ("shard", Json::Number(s.shard as f64)),
+                        ("queries", Json::Number(s.queries as f64)),
+                        ("throughput_per_min", Json::Number(s.throughput_per_min)),
+                        ("solve_ms_p50", Json::Number(s.solve_ms_p50)),
+                        ("solve_ms_p99", Json::Number(s.solve_ms_p99)),
+                        (
+                            "avg_cache_utilization",
+                            Json::Number(s.avg_cache_utilization),
+                        ),
+                        ("bytes_loaded", Json::Number(s.bytes_loaded as f64)),
+                        ("bytes_evicted", Json::Number(s.bytes_evicted as f64)),
+                    ])
+                })
+                .collect(),
+        );
+        let mut obj = Json::from_pairs(vec![
+            ("n_shards", Json::Number(self.n_shards() as f64)),
+            ("batches", Json::Number(self.run.batches.len() as f64)),
+            ("queries", Json::Number(self.run.outcomes.len() as f64)),
+            ("batches_per_sec", Json::Number(self.batches_per_sec())),
+            ("host_wall_secs", Json::Number(self.run.host_wall_secs)),
+            ("hit_ratio", Json::Number(self.run.hit_ratio())),
+            (
+                "replication_bytes",
+                Json::Number(self.replication_bytes as f64),
+            ),
+            ("rebalance_churn", Json::Number(self.rebalance_churn as f64)),
+            ("shards", shards),
+        ]);
+        if let Some(base) = baseline {
+            obj.set(
+                "fairness_index",
+                Json::Number(crate::coordinator::metrics::fairness_index(&self.run, base)),
+            );
+            obj.set(
+                "fairness_spread",
+                Json::Number(self.fairness_spread(base)),
+            );
+        }
+        obj
+    }
+}
+
+/// Max/min weight-normalized per-tenant speedup of `run` vs `baseline`
+/// (tenants with no joined queries excluded; 1.0 when fewer than two
+/// tenants qualify, infinity when a tenant's speedup is zero).
+pub fn speedup_spread(run: &RunResult, baseline: &RunResult) -> f64 {
+    let x = per_tenant_speedups(run, baseline);
+    let norm: Vec<f64> = x
+        .iter()
+        .zip(&run.weights)
+        .filter(|(xi, _)| **xi > 0.0)
+        .map(|(xi, l)| xi / l)
+        .collect();
+    if norm.len() < 2 {
+        return 1.0;
+    }
+    let max = norm.iter().cloned().fold(f64::MIN, f64::max);
+    let min = norm.iter().cloned().fold(f64::MAX, f64::min);
+    if min <= 0.0 {
+        f64::INFINITY
+    } else {
+        max / min
+    }
+}
+
+/// Merge per-shard runs into one federation-level `RunResult`: outcomes
+/// of all shards (sorted by query id — ids are globally unique), and
+/// per-batch records with configs unioned, query counts and byte
+/// movement summed, utilization averaged (shard budgets are equal
+/// slices), and the host-side solve/stall figures taken as the max
+/// across shards (the shards solve concurrently, so the slowest shard
+/// is the batch's critical path).
+fn merge_runs(per_shard: &[RunResult], host_wall_secs: f64) -> RunResult {
+    let n_batches = per_shard[0].batches.len();
+    assert!(
+        per_shard.iter().all(|r| r.batches.len() == n_batches),
+        "shards must step every batch"
+    );
+    let mut outcomes: Vec<_> = per_shard
+        .iter()
+        .flat_map(|r| r.outcomes.iter().cloned())
+        .collect();
+    outcomes.sort_by_key(|o| o.id);
+
+    let mut batches = Vec::with_capacity(n_batches);
+    for b in 0..n_batches {
+        let rows: Vec<&BatchRecord> = per_shard.iter().map(|r| &r.batches[b]).collect();
+        let mut config = rows[0].config.clone();
+        for row in rows.iter().skip(1) {
+            config.union_with(&row.config);
+        }
+        let mut delta = CacheDelta::default();
+        for row in &rows {
+            delta.loaded.extend(row.delta.loaded.iter().copied());
+            delta.evicted.extend(row.delta.evicted.iter().copied());
+            delta.bytes_loaded += row.delta.bytes_loaded;
+            delta.bytes_evicted += row.delta.bytes_evicted;
+        }
+        // Distinct ascending view ids; byte totals keep counting every
+        // replica's movement.
+        delta.loaded.sort_unstable();
+        delta.loaded.dedup();
+        delta.evicted.sort_unstable();
+        delta.evicted.dedup();
+        batches.push(BatchRecord {
+            index: b,
+            n_queries: rows.iter().map(|r| r.n_queries).sum(),
+            config,
+            cache_utilization: rows.iter().map(|r| r.cache_utilization).sum::<f64>()
+                / rows.len() as f64,
+            window_end: rows[0].window_end,
+            exec_start: rows
+                .iter()
+                .map(|r| r.exec_start)
+                .fold(f64::INFINITY, f64::min),
+            exec_end: rows
+                .iter()
+                .map(|r| r.exec_end)
+                .fold(f64::NEG_INFINITY, f64::max),
+            solve_secs: rows
+                .iter()
+                .map(|r| r.solve_secs)
+                .fold(0.0, f64::max),
+            queue_depth: 0,
+            stall_secs: rows
+                .iter()
+                .map(|r| r.stall_secs)
+                .fold(0.0, f64::max),
+            delta,
+        });
+    }
+
+    RunResult {
+        policy: per_shard[0].policy,
+        outcomes,
+        batches,
+        end_time: per_shard
+            .iter()
+            .map(|r| r.end_time)
+            .fold(0.0, f64::max),
+        n_tenants: per_shard[0].n_tenants,
+        weights: per_shard[0].weights.clone(),
+        host_wall_secs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::ConfigMask;
+    use crate::domain::query::QueryId;
+    use crate::sim::engine::QueryOutcome;
+
+    fn outcome(id: u64, tenant: usize, exec: f64) -> QueryOutcome {
+        QueryOutcome {
+            id: QueryId(id),
+            tenant,
+            arrival: 0.0,
+            start: 0.0,
+            finish: exec,
+            from_cache: false,
+            bytes: 0,
+        }
+    }
+
+    fn shard_run(outcomes: Vec<QueryOutcome>, config_bits: &[bool], util: f64) -> RunResult {
+        RunResult {
+            policy: "TEST",
+            outcomes,
+            batches: vec![BatchRecord {
+                index: 0,
+                n_queries: 1,
+                config: ConfigMask::from_bools(config_bits),
+                cache_utilization: util,
+                window_end: 40.0,
+                exec_start: 40.0,
+                exec_end: 50.0,
+                solve_secs: 0.01,
+                queue_depth: 0,
+                stall_secs: 0.01,
+                delta: CacheDelta {
+                    loaded: vec![0],
+                    evicted: vec![],
+                    bytes_loaded: 10,
+                    bytes_evicted: 0,
+                },
+            }],
+            end_time: 50.0,
+            n_tenants: 2,
+            weights: vec![1.0, 1.0],
+            host_wall_secs: 0.02,
+        }
+    }
+
+    #[test]
+    fn merge_unions_configs_and_sorts_outcomes() {
+        let a = shard_run(vec![outcome(3, 0, 5.0)], &[true, false], 0.5);
+        let b = shard_run(vec![outcome(1, 1, 5.0)], &[false, true], 0.7);
+        let merged = merge_runs(&[a, b], 0.05);
+        assert_eq!(
+            merged.outcomes.iter().map(|o| o.id.0).collect::<Vec<_>>(),
+            vec![1, 3]
+        );
+        let batch = &merged.batches[0];
+        assert_eq!(batch.n_queries, 2);
+        assert!(batch.config.get(0) && batch.config.get(1));
+        assert!((batch.cache_utilization - 0.6).abs() < 1e-12);
+        // Same view scheduled on both shards: listed once, bytes doubled.
+        assert_eq!(batch.delta.loaded, vec![0]);
+        assert_eq!(batch.delta.bytes_loaded, 20);
+        assert_eq!(merged.host_wall_secs, 0.05);
+    }
+
+    #[test]
+    fn single_shard_assembles_verbatim() {
+        let a = shard_run(vec![outcome(1, 0, 5.0)], &[true, false], 0.5);
+        let result = ClusterResult::assemble(vec![a.clone()], vec![], 0, 0, 9.9);
+        // The merged run is the shard's run, untouched (including its
+        // own host wall — the equivalence guarantee's metric surface).
+        assert_eq!(result.run.outcomes.len(), a.outcomes.len());
+        assert_eq!(result.run.batches[0].config, a.batches[0].config);
+        assert_eq!(result.run.host_wall_secs, a.host_wall_secs);
+        assert_eq!(result.n_shards(), 1);
+    }
+
+    #[test]
+    fn speedup_spread_bounds() {
+        let base = shard_run(
+            vec![outcome(1, 0, 10.0), outcome(2, 1, 10.0)],
+            &[true, false],
+            0.5,
+        );
+        let even = shard_run(
+            vec![outcome(1, 0, 5.0), outcome(2, 1, 5.0)],
+            &[true, false],
+            0.5,
+        );
+        assert!((speedup_spread(&even, &base) - 1.0).abs() < 1e-9);
+        let skewed = shard_run(
+            vec![outcome(1, 0, 2.0), outcome(2, 1, 10.0)],
+            &[true, false],
+            0.5,
+        );
+        assert!((speedup_spread(&skewed, &base) - 5.0).abs() < 1e-9);
+    }
+}

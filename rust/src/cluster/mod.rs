@@ -1,0 +1,30 @@
+//! Sharded cache federation: multi-shard ROBUS coordinators with
+//! global per-tenant fairness accounting (distinct from the
+//! discrete-event `sim::cluster` executor model, which describes *one*
+//! cluster's hardware).
+//!
+//! The view universe is partitioned across N cache shards
+//! ([`placement`]); each shard runs the unmodified single-node
+//! planner/executor machinery over the queries routed to it
+//! ([`shard`]); the [`federation`] layer routes, replicates hot views,
+//! rebalances homes by demand, and closes the loop with a
+//! [`GlobalAccountant`] that turns cross-shard per-tenant utilities
+//! into per-shard weight boosts — so sharing incentive and envy bounds
+//! hold per tenant across the whole federation, not per shard.
+//! [`metrics`] rolls the shards up into one `RunResult`-compatible view
+//! plus federation-specific figures (fairness spread, replication
+//! bytes, rebalance churn).
+//!
+//! Entry points: `robus cluster --shards N [--placement hash|pack]
+//! [--replicate-hot T]` on the CLI,
+//! [`crate::experiments::runner::run_federated`] programmatically, and
+//! the `cluster_bench` bench target (`BENCH_cluster.json`).
+
+pub mod federation;
+pub mod metrics;
+pub mod placement;
+pub(crate) mod shard;
+
+pub use federation::{FederationConfig, GlobalAccountant, ShardedCoordinator};
+pub use metrics::{speedup_spread, ClusterRecord, ClusterResult, ShardSummary};
+pub use placement::{Placement, PlacementStrategy};

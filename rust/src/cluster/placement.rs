@@ -1,0 +1,220 @@
+//! View → shard placement for the cache federation.
+//!
+//! The federation partitions the candidate-view universe across N cache
+//! shards; a view's *home* shard is where its queries are routed by
+//! default. Two placers:
+//!
+//! - **consistent hash** (default): each shard contributes `VNODES`
+//!   points to a hash ring; a view lands on the successor of its own
+//!   hash. Adding/removing a shard moves only ~1/N of the views, which
+//!   is what makes incremental resharding cheap at fleet scale.
+//! - **greedy bin packing** (size-aware): views in descending weight
+//!   order onto the least-loaded shard. With weights = cached bytes it
+//!   balances capacity; with weights = observed demand it is the
+//!   rebalance placer (`ShardedCoordinator` feeds cumulative demanded
+//!   bytes back through [`Placement::pack_weighted`]).
+//!
+//! Placement is pure routing state: it decides which shard *drains* a
+//! query, not what a shard may cache — a shard's solver may cache any
+//! view its routed queries demand (LERC-style coordinated decisions),
+//! so a spanning query's off-home views become implicit replicas
+//! charged to that shard's budget.
+
+use std::cmp::Reverse;
+
+use crate::util::mask::ConfigMask;
+use crate::util::rng::mix64;
+
+/// Virtual points per shard on the consistent-hash ring.
+const VNODES: usize = 64;
+
+/// Which placer builds the home map.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementStrategy {
+    /// Consistent hashing over the view ids (ignores sizes).
+    Hash,
+    /// Greedy bin packing by cached size, largest first.
+    Pack,
+}
+
+impl PlacementStrategy {
+    pub fn parse(s: &str) -> Option<PlacementStrategy> {
+        match s.to_ascii_lowercase().as_str() {
+            "hash" => Some(PlacementStrategy::Hash),
+            "pack" => Some(PlacementStrategy::Pack),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlacementStrategy::Hash => "hash",
+            PlacementStrategy::Pack => "pack",
+        }
+    }
+}
+
+/// The home-shard map: view id → shard id.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Placement {
+    n_shards: usize,
+    home: Vec<usize>,
+}
+
+impl Placement {
+    pub fn build(strategy: PlacementStrategy, n_shards: usize, view_sizes: &[u64]) -> Self {
+        match strategy {
+            PlacementStrategy::Hash => Self::hash(n_shards, view_sizes.len()),
+            PlacementStrategy::Pack => Self::pack_weighted(n_shards, view_sizes),
+        }
+    }
+
+    /// Consistent-hash placement over `n_views` view ids.
+    pub fn hash(n_shards: usize, n_views: usize) -> Self {
+        assert!(n_shards > 0, "placement needs at least one shard");
+        let mut ring: Vec<(u64, usize)> = Vec::with_capacity(n_shards * VNODES);
+        for s in 0..n_shards {
+            for r in 0..VNODES {
+                ring.push((mix64(((s as u64) << 16) | r as u64), s));
+            }
+        }
+        ring.sort_unstable();
+        let home = (0..n_views)
+            .map(|v| {
+                let h = mix64(0x5ca1_ab1e ^ ((v as u64) << 20));
+                let idx = ring.partition_point(|&(p, _)| p < h);
+                ring[idx % ring.len()].1
+            })
+            .collect();
+        Self { n_shards, home }
+    }
+
+    /// Greedy bin packing: views in descending `weights` order onto the
+    /// least-loaded shard (ties → lower shard id). `weights` is cached
+    /// bytes for the initial size-aware placement, or observed demanded
+    /// bytes for a rebalance.
+    pub fn pack_weighted(n_shards: usize, weights: &[u64]) -> Self {
+        assert!(n_shards > 0, "placement needs at least one shard");
+        let mut order: Vec<usize> = (0..weights.len()).collect();
+        order.sort_by_key(|&v| (Reverse(weights[v]), v));
+        let mut load = vec![0u64; n_shards];
+        let mut home = vec![0usize; weights.len()];
+        for v in order {
+            let s = (0..n_shards).min_by_key(|&s| (load[s], s)).unwrap();
+            home[v] = s;
+            // Zero-weight views still occupy a routing slot; count one
+            // byte so they round-robin instead of piling onto shard 0.
+            load[s] += weights[v].max(1);
+        }
+        Self { n_shards, home }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    pub fn n_views(&self) -> usize {
+        self.home.len()
+    }
+
+    /// Home shard of `view`.
+    pub fn home(&self, view: usize) -> usize {
+        self.home[view]
+    }
+
+    /// Mask of the views homed on `shard`.
+    pub fn shard_mask(&self, shard: usize) -> ConfigMask {
+        let mut mask = ConfigMask::empty(self.home.len());
+        for (v, &s) in self.home.iter().enumerate() {
+            if s == shard {
+                mask.set(v, true);
+            }
+        }
+        mask
+    }
+
+    /// Total `weights` homed per shard (balance diagnostics and tests).
+    pub fn shard_load(&self, weights: &[u64]) -> Vec<u64> {
+        let mut load = vec![0u64; self.n_shards];
+        for (v, &s) in self.home.iter().enumerate() {
+            load[s] += weights[v];
+        }
+        load
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategy_parse_roundtrip() {
+        for s in [PlacementStrategy::Hash, PlacementStrategy::Pack] {
+            assert_eq!(PlacementStrategy::parse(s.name()), Some(s));
+        }
+        assert_eq!(PlacementStrategy::parse("HASH"), Some(PlacementStrategy::Hash));
+        assert_eq!(PlacementStrategy::parse("nope"), None);
+    }
+
+    #[test]
+    fn single_shard_owns_everything() {
+        for p in [
+            Placement::hash(1, 30),
+            Placement::pack_weighted(1, &[5u64; 30]),
+        ] {
+            assert!((0..30).all(|v| p.home(v) == 0));
+            assert_eq!(p.shard_mask(0).count_ones(), 30);
+        }
+    }
+
+    #[test]
+    fn hash_is_deterministic_and_in_range() {
+        let a = Placement::hash(4, 30);
+        let b = Placement::hash(4, 30);
+        assert_eq!(a, b);
+        assert!((0..30).all(|v| a.home(v) < 4));
+        // Shard masks partition the universe.
+        let total: usize = (0..4).map(|s| a.shard_mask(s).count_ones()).sum();
+        assert_eq!(total, 30);
+    }
+
+    #[test]
+    fn hash_moves_few_views_on_shard_add() {
+        // The consistent-hash property: going 4 → 5 shards relocates
+        // roughly 1/5 of the views, not most of them.
+        let n_views = 400;
+        let a = Placement::hash(4, n_views);
+        let b = Placement::hash(5, n_views);
+        let moved = (0..n_views).filter(|&v| a.home(v) != b.home(v)).count();
+        assert!(
+            moved < n_views / 2,
+            "consistent hash moved {moved}/{n_views} views"
+        );
+        assert!(moved > 0, "a fifth shard must take some views");
+    }
+
+    #[test]
+    fn pack_balances_bytes() {
+        let sizes: Vec<u64> = (1..=30u64).map(|k| k * 100).collect();
+        let p = Placement::pack_weighted(4, &sizes);
+        let load = p.shard_load(&sizes);
+        let max = *load.iter().max().unwrap();
+        let min = *load.iter().min().unwrap();
+        let biggest = *sizes.iter().max().unwrap();
+        // Greedy guarantee: spread ≤ the largest single item.
+        assert!(
+            max - min <= biggest,
+            "pack imbalance {max}-{min} exceeds largest view {biggest}"
+        );
+    }
+
+    #[test]
+    fn pack_by_demand_follows_the_weights() {
+        // Two dominant-demand views must land on different shards.
+        let mut demand = vec![1u64; 10];
+        demand[3] = 1_000_000;
+        demand[7] = 1_000_000;
+        let p = Placement::pack_weighted(2, &demand);
+        assert_ne!(p.home(3), p.home(7));
+    }
+}

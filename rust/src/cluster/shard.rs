@@ -1,0 +1,115 @@
+//! One cache shard of the federation: a `BatchExecutor` (the PR-2
+//! execute half — incremental cache transition + simulated execution on
+//! the shard's own cluster slice), a planner-style cache-contents
+//! mirror, a policy RNG stream, and the home/replica routing masks.
+//!
+//! Each shard is deliberately the *same* machinery as a single-node
+//! coordinator: `SolveContext::solve_accounted` for steps 1–2 and
+//! `BatchExecutor::execute` for steps 3–5. The federation adds routing
+//! and the global fairness accountant around it, nothing inside it —
+//! which is what makes the `--shards 1` run bit-identical to
+//! `Coordinator::run`.
+
+use std::time::Instant;
+
+use crate::alloc::{ConfigMask, Policy};
+use crate::coordinator::loop_::{BatchExecutor, Coordinator, PlannedBatch, SolveContext};
+use crate::domain::query::Query;
+use crate::util::rng::Pcg64;
+
+/// Per-batch, per-shard accounting handed back to the federation's
+/// global fairness accountant.
+pub(crate) struct ShardBatchOutcome {
+    /// Raw per-tenant utility attained on this shard.
+    pub utilities: Vec<f64>,
+    /// Per-tenant solo optimum U* of this shard's batch problem.
+    pub u_star: Vec<f64>,
+}
+
+/// The mutable state of one shard across the run. All fields are
+/// shard-local, so per-batch shard steps run on independent threads
+/// with no shared mutability.
+pub(crate) struct Shard<'a> {
+    pub id: usize,
+    /// Steps 3–5 (cache transition + simulated execution), reused
+    /// verbatim from the coordinator loop.
+    pub executor: BatchExecutor<'a>,
+    /// Policy randomization stream. Shard 0 uses the exact planner
+    /// stream of the serial coordinator, so a 1-shard federation samples
+    /// identical configurations.
+    pub rng: Pcg64,
+    /// Planner-side mirror of this shard's cache contents (the stateful
+    /// boost source — never reads the live cache mid-pipeline).
+    pub mirror: ConfigMask,
+    /// Views homed on this shard by the current placement — the
+    /// federation router's map, not a constraint on the cache.
+    pub home: ConfigMask,
+    /// Hot-view replicas this shard additionally serves. Kept separate
+    /// from `home` so a rebalance (which rewrites `home`) never wipes
+    /// replicas — replication stays one-way until an explicit decay.
+    pub replicas: ConfigMask,
+    /// Queries routed to this shard for the current batch window.
+    pub inbox: Vec<Query>,
+}
+
+/// The serial coordinator planner's RNG stream selector (see
+/// `Coordinator::planner`); shard `s` uses `stream + s`.
+const PLANNER_STREAM: u64 = 0x0b5;
+
+impl<'a> Shard<'a> {
+    pub fn new(
+        id: usize,
+        coordinator: &'a Coordinator<'a>,
+        home: ConfigMask,
+        n_views: usize,
+        seed: u64,
+    ) -> Self {
+        Self {
+            id,
+            executor: coordinator.executor(),
+            rng: Pcg64::with_stream(seed, PLANNER_STREAM + id as u64),
+            mirror: ConfigMask::empty(n_views),
+            home,
+            replicas: ConfigMask::empty(n_views),
+            inbox: Vec::new(),
+        }
+    }
+
+    /// Does this shard serve `view` (home or replica)?
+    pub fn is_resident(&self, view: usize) -> bool {
+        self.home.get(view) || self.replicas.get(view)
+    }
+
+    /// Solve and execute one batch window over the routed inbox.
+    /// Mirrors the serial loop exactly: empty inboxes keep the current
+    /// configuration, the stateful boost comes from the mirror, and the
+    /// executor stalls for the whole (shard-local) solve.
+    pub fn step(
+        &mut self,
+        ctx: &SolveContext<'_>,
+        policy: &dyn Policy,
+        index: usize,
+        window_end: f64,
+    ) -> ShardBatchOutcome {
+        let queries = std::mem::take(&mut self.inbox);
+        let t0 = Instant::now();
+        let solved = ctx.solve_accounted(&self.mirror, &queries, policy, &mut self.rng);
+        let solve_secs = t0.elapsed().as_secs_f64();
+        self.mirror = solved.config.clone();
+        self.executor.execute(
+            PlannedBatch {
+                index,
+                window_end,
+                queries,
+                config: solved.config,
+                solve_secs,
+            },
+            0,
+            solve_secs,
+        );
+        ShardBatchOutcome {
+            utilities: solved.utilities,
+            u_star: solved.u_star,
+        }
+    }
+}

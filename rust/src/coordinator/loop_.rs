@@ -24,7 +24,7 @@
 use std::time::Instant;
 
 use crate::alloc::{ConfigMask, Policy};
-use crate::cache::{stateful_boost, CacheDelta, CacheManager};
+use crate::cache::{CacheDelta, CacheManager};
 use crate::domain::query::{Query, QueryId};
 use crate::domain::tenant::TenantSet;
 use crate::domain::utility::BatchUtilities;
@@ -36,12 +36,29 @@ use crate::workload::generator::WorkloadGenerator;
 use crate::workload::universe::Universe;
 
 /// The inputs of one batch solve that every driver shares (serial,
-/// pipelined, and the online service).
+/// pipelined, the online service, and the sharded federation).
 pub(crate) struct SolveContext<'a> {
     pub tenants: &'a TenantSet,
     pub universe: &'a Universe,
     pub budget: u64,
     pub stateful_gamma: Option<f64>,
+    /// Per-tenant weight multipliers layered onto the base λ_i for this
+    /// solve (the federation's global-fairness feedback). `None` routes
+    /// straight to `policy.allocate` — bit-identical to an unweighted
+    /// solve, which is what the single-node drivers pass.
+    pub weight_mult: Option<&'a [f64]>,
+}
+
+/// One solved batch plus the accounting the federation's global
+/// fairness accountant aggregates across shards.
+pub(crate) struct SolveOutcome {
+    pub config: ConfigMask,
+    /// Raw per-tenant utility attained by the sampled configuration
+    /// (zeros for an empty batch).
+    pub utilities: Vec<f64>,
+    /// Per-tenant solo optimum U* of this batch problem (zeros for an
+    /// empty batch — no demand means nothing attainable).
+    pub u_star: Vec<f64>,
 }
 
 impl SolveContext<'_> {
@@ -57,19 +74,52 @@ impl SolveContext<'_> {
         policy: &dyn Policy,
         rng: &mut Pcg64,
     ) -> ConfigMask {
+        self.solve_accounted(cached, queries, policy, rng).config
+    }
+
+    /// [`SolveContext::solve`] plus the attained/attainable per-tenant
+    /// utilities of the sampled configuration. The extra accounting
+    /// consumes no randomness, so `solve` and `solve_accounted` advance
+    /// `rng` identically.
+    pub(crate) fn solve_accounted(
+        &self,
+        cached: &ConfigMask,
+        queries: &[Query],
+        policy: &dyn Policy,
+        rng: &mut Pcg64,
+    ) -> SolveOutcome {
+        let n = self.tenants.len();
         if queries.is_empty() {
-            return cached.clone();
+            return SolveOutcome {
+                config: cached.clone(),
+                utilities: vec![0.0; n],
+                u_star: vec![0.0; n],
+            };
         }
-        let boost = self.stateful_gamma.map(|g| stateful_boost(cached, g));
-        let batch_problem = BatchUtilities::build(
+        let boost = self
+            .stateful_gamma
+            .map(|g| CacheManager::boost_vector(cached, g));
+        let mut batch_problem = BatchUtilities::build(
             self.tenants,
             &self.universe.views,
             self.budget as f64,
             queries,
             boost.as_deref(),
         );
+        // We own the freshly built problem, so the federation's weight
+        // multipliers apply in place — no clone on the hot path.
+        if let Some(mult) = self.weight_mult {
+            crate::alloc::apply_weight_multipliers(&mut batch_problem, mult);
+        }
         let allocation = policy.allocate(&batch_problem, rng);
-        allocation.sample(rng).clone()
+        let config = allocation.sample(rng).clone();
+        let utilities = batch_problem.utilities(&config);
+        let u_star = batch_problem.u_star.clone();
+        SolveOutcome {
+            config,
+            utilities,
+            u_star,
+        }
     }
 }
 
@@ -298,6 +348,7 @@ impl BatchPlanner<'_> {
             universe: self.universe,
             budget: self.budget,
             stateful_gamma: self.cfg.stateful_gamma,
+            weight_mult: None,
         };
         let config = ctx.solve(&self.mirror, &queries, self.policy, &mut self.rng);
         let solve_secs = t0.elapsed().as_secs_f64();

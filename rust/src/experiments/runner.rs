@@ -13,6 +13,7 @@
 //! solve latency with the serial runner (or `solver_bench`).
 
 use crate::alloc::{Policy, PolicyKind};
+use crate::cluster::{ClusterResult, FederationConfig, ShardedCoordinator};
 use crate::coordinator::loop_::{Coordinator, CoordinatorConfig, RunResult};
 use crate::coordinator::metrics::{fairness_index, MetricsSummary};
 use crate::domain::tenant::TenantSet;
@@ -177,6 +178,21 @@ pub fn run_with_policies_pipelined(
         .collect();
 
     summarize(setup, runs)
+}
+
+/// Run one setup through the sharded federation (`cluster::`): same
+/// workload and policy seeds as the single-node runners, so a 1-shard
+/// federation is bit-identical to [`Coordinator::run`] and multi-shard
+/// runs are directly comparable to the serial baseline.
+pub fn run_federated(
+    setup: &ExperimentSetup,
+    fed: &FederationConfig,
+    policy: &dyn Policy,
+) -> ClusterResult {
+    let (universe, tenants, engine, config) = coordinator_parts(setup);
+    let coordinator = ShardedCoordinator::new(&universe, tenants, engine, config, fed.clone());
+    let mut gen = WorkloadGenerator::new(setup.tenant_specs.clone(), &universe, setup.seed);
+    coordinator.run(&mut gen, policy)
 }
 
 /// Run with the default §5.3 policy set (policies fanned across threads).

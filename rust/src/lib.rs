@@ -9,6 +9,9 @@
 //! - [`alloc`] — the paper's view-selection policies (STATIC, RSD, OPTP,
 //!   MMF, FASTPF and the provably-good multiplicative-weights algorithms);
 //! - [`coordinator`] — the batched five-step ROBUS loop of Figure 2;
+//! - [`cluster`] — the sharded cache federation: N per-shard
+//!   coordinators under size-aware placement, hot-view replication, and
+//!   a global per-tenant fairness accountant;
 //! - [`sim`] — a discrete-event Spark-like cluster simulator standing in
 //!   for the paper's 10-node EC2 testbed;
 //! - [`domain`] / [`workload`] — TPC-H + Sales catalogs, utility model,
@@ -38,6 +41,8 @@ pub mod cache;
 pub mod sim;
 
 pub mod coordinator;
+
+pub mod cluster;
 
 pub mod runtime;
 

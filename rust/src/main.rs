@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   run              one coordinator run with explicit knobs
 //!   serve            online real-time service mode (live admission)
+//!   cluster          sharded cache federation run (multi-shard + global fairness)
 //!   experiment NAME  regenerate a paper table/figure (see `list`)
 //!   list             list available experiments
 //!   audit            Table 6 fairness-property audit
@@ -27,8 +28,9 @@ fn main() {
         }
     };
     let code = match args.subcommand.as_deref() {
-        Some("run") => cmd_run(&args),
-        Some("serve") => cmd_serve(&args),
+        Some("run") => fallible(cmd_run(&args)),
+        Some("serve") => fallible(cmd_serve(&args)),
+        Some("cluster") => fallible(cmd_cluster(&args)),
         Some("experiment") => cmd_experiment(&args),
         Some("list") => {
             print_experiment_list();
@@ -36,7 +38,7 @@ fn main() {
         }
         Some("audit") => cmd_audit(),
         Some("fig3") => cmd_fig3(),
-        Some("pruning-error") => cmd_pruning_error(&args),
+        Some("pruning-error") => fallible(cmd_pruning_error(&args)),
         _ => {
             print!(
                 "{}",
@@ -46,6 +48,7 @@ fn main() {
                     &[
                         ("run", "one coordinator run (see --policy/--tenants/...)"),
                         ("serve", "online service mode (--duration/--rate/--batch-ms/...)"),
+                        ("cluster", "sharded federation (--shards/--placement/--replicate-hot)"),
                         ("experiment <name>", "regenerate a paper table/figure"),
                         ("list", "list available experiments"),
                         ("audit", "Table 6 fairness-property audit"),
@@ -68,6 +71,11 @@ fn main() {
                         OptSpec { name: "queue-cap", help: "serve: per-tenant admission queue bound", default: Some("8192") },
                         OptSpec { name: "admission", help: "serve: drop|block at the queue bound", default: Some("drop") },
                         OptSpec { name: "min-qps", help: "serve: exit 1 if sustained q/s falls below", default: None },
+                        OptSpec { name: "shards", help: "cluster: number of cache shards", default: Some("4") },
+                        OptSpec { name: "placement", help: "cluster: view placement, hash|pack", default: Some("hash") },
+                        OptSpec { name: "replicate-hot", help: "cluster: replicate views above this demand fraction", default: None },
+                        OptSpec { name: "rebalance-every", help: "cluster: re-home views by demand every K batches", default: None },
+                        OptSpec { name: "setup", help: "cluster: §5.3 workload, sales-g1..sales-g4", default: Some("sales-g2") },
                     ],
                 )
             );
@@ -77,17 +85,40 @@ fn main() {
     std::process::exit(code);
 }
 
-fn cmd_run(args: &Args) -> i32 {
+/// Surface option-parse errors (`--seed abc` and friends) as exit 2
+/// instead of silently running with defaults.
+fn fallible(result: Result<i32, String>) -> i32 {
+    match result {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    }
+}
+
+/// Parse `--gamma` strictly: present-but-malformed is an error, absent
+/// means stateless.
+fn opt_gamma(args: &Args) -> Result<Option<f64>, String> {
+    match args.opt("gamma") {
+        None => Ok(None),
+        Some(s) => s
+            .parse::<f64>()
+            .map(Some)
+            .map_err(|_| format!("--gamma expects a number, got '{s}'")),
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<i32, String> {
     let policy_name = args.opt_or("policy", "FASTPF");
     let Some(kind) = PolicyKind::parse(policy_name) else {
-        eprintln!("unknown policy {policy_name}");
-        return 2;
+        return Err(format!("unknown policy {policy_name}"));
     };
-    let n_tenants = args.opt_usize("tenants", 4).unwrap_or(4);
-    let batches = args.opt_usize("batches", 30).unwrap_or(30);
-    let batch_secs = args.opt_f64("batch-secs", 40.0).unwrap_or(40.0);
-    let seed = args.opt_u64("seed", 42).unwrap_or(42);
-    let gamma = args.opt("gamma").and_then(|g| g.parse::<f64>().ok());
+    let n_tenants = args.opt_usize("tenants", 4)?;
+    let batches = args.opt_usize("batches", 30)?;
+    let batch_secs = args.opt_f64("batch-secs", 40.0)?;
+    let seed = args.opt_u64("seed", 42)?;
+    let gamma = opt_gamma(args)?;
 
     use robus::workload::spec::{AccessSpec, TenantSpec};
     let specs: Vec<TenantSpec> = (0..n_tenants)
@@ -121,29 +152,29 @@ fn cmd_run(args: &Args) -> i32 {
     for s in &out.summaries {
         println!("{}", s.row());
     }
-    0
+    Ok(0)
 }
 
-fn cmd_serve(args: &Args) -> i32 {
+fn cmd_serve(args: &Args) -> Result<i32, String> {
     let policy_name = args.opt_or("policy", "FASTPF");
     let Some(kind) = PolicyKind::parse(policy_name) else {
-        eprintln!("unknown policy {policy_name}");
-        return 2;
+        return Err(format!("unknown policy {policy_name}"));
     };
     let admission_name = args.opt_or("admission", "drop");
     let Some(admission) = robus::workload::AdmissionPolicy::parse(admission_name) else {
-        eprintln!("unknown admission policy {admission_name} (use drop|block)");
-        return 2;
+        return Err(format!(
+            "unknown admission policy {admission_name} (use drop|block)"
+        ));
     };
     let cfg = robus::coordinator::ServeConfig {
-        duration_secs: args.opt_f64("duration", 5.0).unwrap_or(5.0),
-        rate_per_sec: args.opt_f64("rate", 1000.0).unwrap_or(1000.0),
-        n_tenants: args.opt_usize("tenants", 4).unwrap_or(4).max(1),
-        batch_secs: args.opt_f64("batch-ms", 250.0).unwrap_or(250.0) / 1e3,
-        queue_capacity: args.opt_usize("queue-cap", 8192).unwrap_or(8192),
+        duration_secs: args.opt_f64("duration", 5.0)?,
+        rate_per_sec: args.opt_f64("rate", 1000.0)?,
+        n_tenants: args.opt_usize("tenants", 4)?.max(1),
+        batch_secs: args.opt_f64("batch-ms", 250.0)? / 1e3,
+        queue_capacity: args.opt_usize("queue-cap", 8192)?,
         admission,
-        stateful_gamma: args.opt("gamma").and_then(|g| g.parse::<f64>().ok()),
-        seed: args.opt_u64("seed", 42).unwrap_or(42),
+        stateful_gamma: opt_gamma(args)?,
+        seed: args.opt_u64("seed", 42)?,
         verbose: !args.flag("quiet"),
     };
     let universe = robus::workload::Universe::sales_only();
@@ -170,15 +201,91 @@ fn cmd_serve(args: &Args) -> i32 {
     // Optional service-level objective: fail (exit 1) if the sustained
     // throughput fell short — this is what makes the CI smoke step a
     // real assertion rather than a crash test.
-    let min_qps = args.opt_f64("min-qps", 0.0).unwrap_or(0.0);
+    let min_qps = args.opt_f64("min-qps", 0.0)?;
     if report.queries_per_sec < min_qps {
         eprintln!(
             "FAIL: sustained {:.0} q/s < required --min-qps {:.0}",
             report.queries_per_sec, min_qps
         );
-        return 1;
+        return Ok(1);
     }
-    0
+    Ok(0)
+}
+
+fn cmd_cluster(args: &Args) -> Result<i32, String> {
+    use robus::cluster::{FederationConfig, PlacementStrategy};
+    use robus::experiments::runner::{run_federated, run_with_policies_serial};
+
+    let policy_name = args.opt_or("policy", "FASTPF");
+    let Some(kind) = PolicyKind::parse(policy_name) else {
+        return Err(format!("unknown policy {policy_name}"));
+    };
+    let placement_name = args.opt_or("placement", "hash");
+    let Some(placement) = PlacementStrategy::parse(placement_name) else {
+        return Err(format!(
+            "unknown placement {placement_name} (use hash|pack)"
+        ));
+    };
+    let n_shards = args.opt_usize("shards", 4)?.max(1);
+    let replicate_hot = match args.opt("replicate-hot") {
+        None => None,
+        Some(s) => Some(s.parse::<f64>().map_err(|_| {
+            format!("--replicate-hot expects a fraction, got '{s}'")
+        })?),
+    };
+    let rebalance_every = match args.opt("rebalance-every") {
+        None => None,
+        Some(s) => Some(s.parse::<usize>().map_err(|_| {
+            format!("--rebalance-every expects an integer, got '{s}'")
+        })?),
+    };
+    let fed = FederationConfig {
+        n_shards,
+        placement,
+        replicate_hot,
+        rebalance_every,
+        ..FederationConfig::default()
+    };
+
+    // The §5.3 Sales sweeps are the federation's driving workloads.
+    // (Setup names are "sales-G1".."sales-G4"; match case-insensitively.)
+    let setup_name = args.opt_or("setup", "sales-g2");
+    let mut setup = setups::data_sharing_sales()
+        .into_iter()
+        .find(|s| s.name.eq_ignore_ascii_case(setup_name))
+        .ok_or_else(|| format!("unknown setup {setup_name} (use sales-g1..sales-g4)"))?;
+    setup.seed = args.opt_u64("seed", 42)?;
+    setup.n_batches = args.opt_usize("batches", setup.n_batches)?;
+    if args.flag("quick") {
+        setup.n_batches = setup.n_batches.min(6);
+    }
+
+    println!(
+        "robus cluster: {} shards ({} placement), {} on {}, {} batches, seed {}",
+        fed.n_shards,
+        fed.placement.name(),
+        kind.name(),
+        setup.name,
+        setup.n_batches,
+        setup.seed,
+    );
+
+    // STATIC single-node serial run = the Eq. 5 speedup baseline.
+    let baseline = run_with_policies_serial(&setup, &[PolicyKind::Static.build()]);
+    let policy = kind.build();
+    let result = run_federated(&setup, &fed, policy.as_ref());
+    print!("{}", result.render(Some(&baseline.runs[0])));
+
+    // Single-node same-policy reference for the scale-out comparison.
+    let single = run_with_policies_serial(&setup, &[kind.build()]);
+    println!(
+        "single-node {}: {:.2} batches/s → federation {:.2} batches/s ({:.2}x)",
+        kind.name(),
+        single.runs[0].batches_per_sec(),
+        result.batches_per_sec(),
+        result.batches_per_sec() / single.runs[0].batches_per_sec().max(1e-12),
+    );
+    Ok(0)
 }
 
 fn print_experiment_list() {
@@ -406,9 +513,9 @@ fn cmd_fig3() -> i32 {
     0
 }
 
-fn cmd_pruning_error(args: &Args) -> i32 {
-    let batches = args.opt_usize("batches", 200).unwrap_or(200);
-    let seed = args.opt_u64("seed", 11).unwrap_or(11);
+fn cmd_pruning_error(args: &Args) -> Result<i32, String> {
+    let batches = args.opt_usize("batches", 200)?;
+    let seed = args.opt_u64("seed", 11)?;
     println!("## §4.3 pruning approximation error ({batches} batches, 5 tenants)\n");
     println!("| random vectors | mean error |");
     println!("|---|---|");
@@ -417,5 +524,5 @@ fn cmd_pruning_error(args: &Args) -> i32 {
         println!("| {m} | {:.1}% |", err * 100.0);
     }
     println!("\n(paper: 10.4% / 1.4% / 0.6%)");
-    0
+    Ok(0)
 }

@@ -196,6 +196,70 @@ mod tests {
     }
 
     #[test]
+    fn zero_capacity_clamps_to_one() {
+        // A zero-capacity queue would deadlock block-mode producers and
+        // shed everything in drop mode; the constructor clamps to 1.
+        let q = AdmissionQueue::new(0);
+        assert_eq!(q.capacity(), 1);
+        assert!(q.offer(query(0), AdmissionPolicy::Drop));
+        assert!(!q.offer(query(1), AdmissionPolicy::Drop));
+        assert_eq!(q.counts(), (1, 1));
+        assert_eq!(q.drain().len(), 1);
+        // Block mode also works at the clamped bound (space after drain).
+        assert!(q.offer(query(2), AdmissionPolicy::Block));
+        assert_eq!(q.peak_depth(), 1);
+    }
+
+    #[test]
+    fn drop_counts_survive_drains() {
+        // Rejections are cumulative admission accounting, not queue
+        // state: draining frees space but never resets the counters.
+        let q = AdmissionQueue::new(2);
+        assert!(q.offer(query(0), AdmissionPolicy::Drop));
+        assert!(q.offer(query(1), AdmissionPolicy::Drop));
+        assert!(!q.offer(query(2), AdmissionPolicy::Drop));
+        assert!(!q.offer(query(3), AdmissionPolicy::Drop));
+        assert_eq!(q.counts(), (2, 2));
+        assert_eq!(q.drain().len(), 2);
+        assert_eq!(q.counts(), (2, 2), "drain must not reset counters");
+        assert!(q.offer(query(4), AdmissionPolicy::Drop));
+        assert!(q.offer(query(5), AdmissionPolicy::Drop));
+        assert!(!q.offer(query(6), AdmissionPolicy::Drop));
+        assert_eq!(q.counts(), (4, 3));
+        // Peak depth is the high-water mark across epochs, not current.
+        assert_eq!(q.peak_depth(), 2);
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn block_mode_under_full_queue_admits_all_producers() {
+        // Two producers blocked on a full capacity-1 queue: repeated
+        // drains must wake and admit both — backpressure never sheds.
+        let q = AdmissionQueue::new(1);
+        assert!(q.offer(query(0), AdmissionPolicy::Block));
+        std::thread::scope(|s| {
+            s.spawn(|| assert!(q.offer(query(1), AdmissionPolicy::Block)));
+            s.spawn(|| assert!(q.offer(query(2), AdmissionPolicy::Block)));
+            let mut drained = 0usize;
+            for _ in 0..500 {
+                drained += q.drain().len();
+                if drained == 3 {
+                    break;
+                }
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            if drained != 3 {
+                // Unblock the producers before panicking so the scope
+                // can join them instead of hanging the test run.
+                q.close();
+                panic!("blocked producers never got admitted (drained {drained})");
+            }
+        });
+        assert_eq!(q.counts(), (3, 0));
+        assert!(q.is_empty());
+    }
+
+    #[test]
     fn close_rejects_and_wakes_blocked_producers() {
         let q = AdmissionQueue::new(1);
         assert!(q.offer(query(0), AdmissionPolicy::Block));

@@ -5,7 +5,7 @@
 //! sizes).
 
 use robus::alloc::{ConfigMask, PolicyKind};
-use robus::cache::{stateful_boost, CacheManager};
+use robus::cache::CacheManager;
 use robus::experiments::runner::run_with_policies;
 use robus::experiments::setups;
 
@@ -18,15 +18,14 @@ fn boost_vector_marks_exactly_the_cached_views() {
         target.set(v, true);
     }
     cm.update(&target);
-    let boost = cm.boost_vector(2.5);
+    let boost = CacheManager::boost_vector(cm.cached(), 2.5);
     assert_eq!(boost.len(), 70);
     for v in 0..70 {
         let expect = if target.get(v) { 2.5 } else { 1.0 };
         assert_eq!(boost[v], expect, "view {v}");
     }
-    // The free-function form (the pipelined planner's mirror path)
-    // agrees bit-for-bit.
-    assert_eq!(stateful_boost(cm.cached(), 2.5), boost);
+    // The pipelined planner's mirror path agrees bit-for-bit.
+    assert_eq!(CacheManager::boost_vector(&target, 2.5), boost);
 }
 
 #[test]
