@@ -2,16 +2,19 @@
 //! the same §5.3 Sales workload run through the sharded federation at
 //! 1/2/4/8 shards, against the single-node serial coordinator.
 //!
-//! Writes `BENCH_cluster.json` with the two trajectory figures the
-//! roadmap tracks: batches/sec scaling (shard solves run concurrently
-//! on smaller sub-batches, so throughput should grow superlinearly in
-//! the solve-bound regime — the acceptance bar is ≥2× at 4 shards vs
-//! 1 shard) and the global fairness spread (max/min weight-normalized
+//! Writes `BENCH_cluster.json` with the trajectory figures the roadmap
+//! tracks: batches/sec scaling (shard solves run concurrently on
+//! smaller sub-batches, so throughput should grow superlinearly in the
+//! solve-bound regime — the acceptance bar is ≥2× at 4 shards vs
+//! 1 shard), the global fairness spread (max/min weight-normalized
 //! per-tenant speedup vs the STATIC baseline), which the global
-//! accountant must keep close to the single-node value.
+//! accountant must keep close to the single-node value, and the
+//! **elasticity figure**: fairness-spread and throughput transients
+//! before/during/after a live shard add and a shard kill on a
+//! mid-length run.
 
 use robus::alloc::{Policy, PolicyKind};
-use robus::cluster::FederationConfig;
+use robus::cluster::{FederationConfig, MembershipPlan};
 use robus::experiments::runner::{run_federated, run_with_policies_serial};
 use robus::experiments::setups;
 use robus::util::bench::BenchSuite;
@@ -61,6 +64,54 @@ fn main() {
             })
             .collect(),
     );
+    // Elasticity figure: one 24-batch run with a live add and a kill;
+    // per-event transient windows (spread + q/batch before/during/after
+    // and the re-convergence lag) go into the report. The kill names an
+    // *original* shard explicitly — the default victim would be the
+    // fresh joiner, whose death merely reverts the add (the hash ring
+    // is a pure function of the id set) and would understate the fault.
+    // ROBUS_BENCH_QUICK (the CI bench mode) shrinks the run like it
+    // shrinks the microbench iteration counts.
+    let quick = std::env::var("ROBUS_BENCH_QUICK").is_ok();
+    let (elastic_batches, elastic_plan) =
+        if quick { (12, "add@3,kill:1@7") } else { (24, "add@6,kill:1@14") };
+    let elastic_setup = setups::data_sharing_sales()[1].clone().quick(elastic_batches);
+    let mut elastic_fed = FederationConfig::with_shards(4);
+    elastic_fed.membership =
+        MembershipPlan::parse(elastic_plan).expect("static plan parses");
+    let elastic_policy: Box<dyn Policy> = PolicyKind::FastPf.build();
+    let elastic = run_federated(&elastic_setup, &elastic_fed, elastic_policy.as_ref());
+    let elasticity = Json::Array(
+        elastic
+            .membership_events()
+            .iter()
+            .map(|(b, c)| {
+                let t = elastic.transient(*b, 4);
+                Json::from_pairs(vec![
+                    ("batch", Json::Number(*b as f64)),
+                    ("action", Json::String(c.action.name().to_string())),
+                    ("shard", Json::Number(c.shard as f64)),
+                    ("views_moved", Json::Number(c.views_moved as f64)),
+                    ("bytes_drained", Json::Number(c.bytes_drained as f64)),
+                    ("bytes_lost", Json::Number(c.bytes_lost as f64)),
+                    ("pre_spread", Json::Number(t.pre_spread)),
+                    ("during_spread", Json::Number(t.during_spread)),
+                    ("post_spread", Json::Number(t.post_spread)),
+                    ("pre_qpb", Json::Number(t.pre_queries_per_batch)),
+                    ("during_qpb", Json::Number(t.during_queries_per_batch)),
+                    ("post_qpb", Json::Number(t.post_queries_per_batch)),
+                    (
+                        "recovery_batches",
+                        match t.recovery_batches {
+                            Some(d) => Json::Number(d as f64),
+                            None => Json::Null,
+                        },
+                    ),
+                ])
+            })
+            .collect(),
+    );
+
     let report = Json::from_pairs(vec![
         (
             "suite",
@@ -68,6 +119,7 @@ fn main() {
         ),
         ("workload", Json::String(setup.name.clone())),
         ("microbench", suite.to_json()),
+        ("elasticity", elasticity),
         (
             "single_node_serial",
             Json::from_pairs(vec![
@@ -88,6 +140,17 @@ fn main() {
     ]);
 
     println!("\n{}", suite.markdown());
+    for (b, c) in elastic.membership_events() {
+        let t = elastic.transient(b, 4);
+        println!(
+            "elasticity {}@{b}: spread {:.3} → {:.3} → {:.3}, recovery {:?}",
+            c.action.name(),
+            t.pre_spread,
+            t.during_spread,
+            t.post_spread,
+            t.recovery_batches,
+        );
+    }
     for (shards, r) in &results {
         println!(
             "{} shard(s): {:.2} batches/s ({:.2}x vs 1 shard), spread {:.3}",

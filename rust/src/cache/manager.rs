@@ -88,6 +88,16 @@ impl CacheManager {
         self.budget
     }
 
+    /// Re-set the usable budget (the federation's elastic membership
+    /// re-splits `total/N'` on every shard add/remove/kill). Contents
+    /// may transiently exceed a shrunken budget — `utilization()` then
+    /// reads above 1.0 until the next `update` applies a configuration
+    /// feasible under the new budget (policies solve with the new value,
+    /// so the very next transition restores feasibility).
+    pub fn set_budget(&mut self, budget: u64) {
+        self.budget = budget;
+    }
+
     pub fn n_views(&self) -> usize {
         self.sizes.len()
     }
@@ -142,6 +152,13 @@ impl CacheManager {
             }
         }
         delta
+    }
+
+    /// The transition that would drain this cache entirely — the
+    /// decommission ("RemoveShard") preview: everything cached migrates
+    /// out, nothing loads. Pure, like [`CacheManager::delta_to`].
+    pub fn drain_delta(&self) -> CacheDelta {
+        self.delta_to(&ConfigMask::empty(self.sizes.len()))
     }
 
     /// Apply a target configuration (Figure 2 step 3) as an incremental
@@ -358,5 +375,41 @@ mod tests {
     fn zero_budget_utilization() {
         let cm = CacheManager::new(0, vec![]);
         assert_eq!(cm.utilization(), 0.0);
+    }
+
+    #[test]
+    fn set_budget_resplits_and_allows_transient_overflow() {
+        let mut cm = CacheManager::new(100, vec![40, 50, 30]);
+        cm.update(&mask(&[true, true, false]));
+        assert_eq!(cm.used_bytes(), 90);
+        // Budget shrinks under the contents (a shard joined): the state
+        // is preserved, utilization reads above 1 until the next update.
+        cm.set_budget(60);
+        assert_eq!(cm.budget(), 60);
+        assert_eq!(cm.used_bytes(), 90);
+        assert!(cm.utilization() > 1.0);
+        // The next (feasible) target transitions down normally.
+        let d = cm.update(&mask(&[false, true, false]));
+        assert_eq!(d.evicted, vec![0]);
+        assert_eq!(cm.used_bytes(), 50);
+        // Budget grows (a shard died): larger targets become legal.
+        cm.set_budget(120);
+        cm.update(&mask(&[true, true, true]));
+        assert_eq!(cm.used_bytes(), 120);
+    }
+
+    #[test]
+    fn drain_delta_previews_full_eviction() {
+        let mut cm = CacheManager::new(100, vec![40, 50, 30]);
+        cm.update(&mask(&[true, false, true]));
+        let used = cm.used_bytes();
+        let drain = cm.drain_delta();
+        assert_eq!(drain.bytes_evicted, used);
+        assert_eq!(drain.evicted, vec![0, 2]);
+        assert!(drain.loaded.is_empty());
+        // Pure: nothing changed.
+        assert_eq!(cm.used_bytes(), used);
+        // An empty cache drains nothing.
+        assert!(CacheManager::new(10, vec![5]).drain_delta().is_empty());
     }
 }

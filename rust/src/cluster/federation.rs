@@ -1,39 +1,61 @@
 //! The sharded federation coordinator: N single-node ROBUS
 //! planner/executor pairs (one per cache shard) under a global fairness
-//! accountant.
+//! accountant, with **elastic membership** — shards can join, drain out,
+//! or die mid-run on a [`MembershipPlan`] schedule.
 //!
 //! Per batch window the federation:
-//! 1. drains the *same* workload window a single-node coordinator would
+//! 1. applies the membership events scheduled for this batch:
+//!    - **add** — a cold shard joins; the placement re-homes ~1/N of the
+//!      views onto it (consistent-hash ring diff), every live budget
+//!      re-splits to `total/N'`, and the joiner sits out the global
+//!      accountant for a warm-up window so its empty cache does not read
+//!      as tenant starvation;
+//!    - **remove** — a planned decommission: the leaver's cached
+//!      contents drain (previewed with `CacheManager::drain_delta`,
+//!      charged to `rebalance_churn_bytes`) and its homed views re-home
+//!      to the survivors before routing;
+//!    - **kill** — fault injection: the victim drops with no drain (its
+//!      cached bytes are lost), homed views re-route to survivors and
+//!      budgets re-split — the per-batch records capture the fairness
+//!      and throughput transient the accountant then absorbs;
+//! 2. drains the *same* workload window a single-node coordinator would
 //!    (identical arrivals — the scale-out changes routing, not demand);
-//! 2. applies hot-view replication and periodic demand-driven rebalance
-//!    decisions from the previous batch's observations;
-//! 3. routes each query to a shard holding all its required views
+//! 3. applies hot-view replication, **replica decay** (a replica whose
+//!    demand share stayed below `--replicate-hot` for `--replica-decay`
+//!    consecutive batches is evicted from non-home holders), and
+//!    periodic demand-driven rebalance decisions from the previous
+//!    batch's observations;
+//! 4. routes each query to a live shard holding all its required views
 //!    (replicated views spread deterministically across holders;
 //!    spanning queries fall back to the home shard of their largest
 //!    view);
-//! 4. solves + executes every shard concurrently on scoped threads —
-//!    each shard runs the unmodified PR-2 `SolveContext`/`BatchExecutor`
-//!    machinery over its routed queries with its slice of the cache
-//!    budget, under per-tenant weight multipliers from the accountant;
-//! 5. aggregates attained/attainable per-tenant utilities across shards
-//!    into the [`GlobalAccountant`], whose weighted-PF feedback boosts
-//!    tenants starved anywhere in the federation on *every* shard next
-//!    batch — fairness stays global per tenant, not per shard (Delta
-//!    Fair Sharing's fleet-wide isolation, LERC's coordinated cache
-//!    decisions).
+//! 5. solves + executes every live shard concurrently on scoped threads
+//!    — each shard runs the unmodified PR-2 `SolveContext`/
+//!    `BatchExecutor` machinery over its routed queries with the current
+//!    budget slice, under per-tenant weight multipliers from the
+//!    accountant;
+//! 6. aggregates attained/attainable per-tenant utilities across shards
+//!    into the [`GlobalAccountant`] (warming joiners excluded), whose
+//!    weighted-PF feedback boosts tenants starved anywhere in the
+//!    federation on *every* shard next batch — fairness stays global per
+//!    tenant through membership churn (Delta Fair Sharing's isolation
+//!    under churn, LERC's coordinated cache decisions).
 //!
-//! With `--shards 1` every step degenerates to the serial coordinator
-//! (no reweighting, no replication, the identity placement), and the
-//! run is bit-identical to `Coordinator::run` — asserted across the
-//! §5.3 grid in `rust/tests/cluster_equivalence.rs`.
+//! With an empty plan every elastic path is inert, and with `--shards 1`
+//! every step degenerates to the serial coordinator (no reweighting, no
+//! replication, the identity placement): the run is bit-identical to
+//! `Coordinator::run` — asserted across the §5.3 grid in
+//! `rust/tests/cluster_equivalence.rs`; the elastic contract lives in
+//! `rust/tests/elastic_membership.rs`.
 
 use std::time::Instant;
 
 use crate::alloc::Policy;
-use crate::cluster::metrics::{ClusterRecord, ClusterResult};
+use crate::cluster::membership::{MembershipAction, MembershipPlan};
+use crate::cluster::metrics::{ClusterRecord, ClusterResult, MembershipChange};
 use crate::cluster::placement::{Placement, PlacementStrategy};
 use crate::cluster::shard::{Shard, ShardBatchOutcome};
-use crate::coordinator::loop_::{Coordinator, CoordinatorConfig, SolveContext};
+use crate::coordinator::loop_::{CoordinatorConfig, SolveContext};
 use crate::domain::query::Query;
 use crate::domain::tenant::TenantSet;
 use crate::sim::engine::SimEngine;
@@ -58,6 +80,18 @@ pub struct FederationConfig {
     /// Clamp on the global accountant's per-tenant weight multipliers
     /// (boosts live in `[1/max_boost, max_boost]`).
     pub max_boost: f64,
+    /// Elastic membership schedule (`--membership "add@40,kill@80"`).
+    /// Empty keeps the shard set fixed for the whole run.
+    pub membership: MembershipPlan,
+    /// Replica decay: evict a hot-view replica from its non-home
+    /// holders once its demand share has stayed below `replicate_hot`
+    /// for this many consecutive batches, charging the projected
+    /// eviction to `rebalance_churn_bytes`. `None` keeps replication
+    /// one-way (the PR-3 behavior).
+    pub replica_decay: Option<usize>,
+    /// Batches a freshly added shard is excluded from the global
+    /// accountant while its cold cache warms up.
+    pub warmup_batches: usize,
 }
 
 impl Default for FederationConfig {
@@ -68,6 +102,9 @@ impl Default for FederationConfig {
             replicate_hot: None,
             rebalance_every: None,
             max_boost: 4.0,
+            membership: MembershipPlan::empty(),
+            replica_decay: None,
+            warmup_batches: 2,
         }
     }
 }
@@ -86,7 +123,10 @@ impl FederationConfig {
 /// weighted-PF weight multipliers for the next batch. A tenant whose
 /// federation-wide attainment trails the mean gets boosted on every
 /// shard — including shards where it is doing fine — so starvation on
-/// one shard is compensated globally.
+/// one shard is compensated globally. The ledger is membership-
+/// agnostic: observations are per-tenant sums over whatever shard set
+/// was live (and warm) that batch, so adds, removes, and kills change
+/// *what* is summed, never the ledger's shape.
 #[derive(Debug, Clone)]
 pub struct GlobalAccountant {
     /// Cumulative attained global scaled utility per tenant
@@ -108,7 +148,7 @@ impl GlobalAccountant {
     }
 
     /// Fold one batch: `utilities` and `u_star` are the per-tenant sums
-    /// across all shards.
+    /// across all observed (live, warmed-up) shards.
     pub fn observe(&mut self, utilities: &[f64], u_star: &[f64]) {
         for i in 0..self.cum.len() {
             if u_star[i] > 0.0 {
@@ -154,9 +194,10 @@ impl GlobalAccountant {
 }
 
 /// The federation coordinator. Owns the same inputs as a single-node
-/// [`Coordinator`] plus the [`FederationConfig`]; `engine` describes one
-/// shard's cluster slice with the *total* cache budget (each shard gets
-/// `budget / n_shards`).
+/// [`crate::coordinator::loop_::Coordinator`] plus the
+/// [`FederationConfig`]; `engine` describes one shard's cluster slice
+/// with the *total* cache budget (each live shard gets `total / N'`,
+/// re-split on every membership change).
 pub struct ShardedCoordinator<'a> {
     pub universe: &'a Universe,
     pub tenants: TenantSet,
@@ -183,7 +224,8 @@ impl<'a> ShardedCoordinator<'a> {
         }
     }
 
-    /// Each shard's slice of the total cache budget.
+    /// Each shard's *initial* slice of the total cache budget (elastic
+    /// membership re-splits to `total / N'` as the live count changes).
     pub fn shard_budget(&self) -> u64 {
         self.engine.config.cache_budget / self.fed.n_shards as u64
     }
@@ -191,12 +233,16 @@ impl<'a> ShardedCoordinator<'a> {
     /// Run the federated loop with `policy` over a fresh workload from
     /// `generator`. Same determinism contract as the single-node
     /// drivers: the generator seed fixes arrivals, `config.seed` fixes
-    /// every shard's policy randomization.
+    /// every shard's policy randomization, and the membership schedule
+    /// is deterministic by construction. Panics on an invalid
+    /// membership plan — front doors validate with
+    /// [`MembershipPlan::resolve`] first.
     pub fn run(&self, generator: &mut WorkloadGenerator, policy: &dyn Policy) -> ClusterResult {
         let t_run = Instant::now();
         let n_shards = self.fed.n_shards;
         let n_views = self.universe.views.len();
         let n_tenants = self.tenants.len();
+        let n_batches = self.config.n_batches;
         let cached_sizes: Vec<u64> = self
             .universe
             .views
@@ -210,47 +256,173 @@ impl<'a> ShardedCoordinator<'a> {
             .map(|v| v.scan_bytes)
             .collect();
         let weights = self.tenants.weights();
+        let total_budget = self.engine.config.cache_budget;
+
+        let schedule = self
+            .fed
+            .membership
+            .resolve(n_shards, n_batches)
+            .expect("invalid membership plan");
+        let mut sched_i = 0usize;
 
         let mut placement = Placement::build(self.fed.placement, n_shards, &cached_sizes);
 
-        // Per-shard coordinators: identical knobs, the engine's budget
-        // cut to the shard slice — `executor()` then builds each shard's
-        // CacheManager with the right budget.
-        let mut shard_engine = self.engine.clone();
-        shard_engine.config.cache_budget = self.shard_budget();
-        let shard_budget = shard_engine.config.cache_budget;
-        let coordinators: Vec<Coordinator<'a>> = (0..n_shards)
-            .map(|_| {
-                Coordinator::new(
+        // One engine clone serves every shard executor (execution
+        // behavior does not depend on the budget field); budgets are
+        // handed to executors explicitly and re-split on membership
+        // changes.
+        let mut live_budget = total_budget / n_shards as u64;
+        let mut exec_engine = self.engine.clone();
+        exec_engine.config.cache_budget = live_budget;
+        let exec_engine = exec_engine;
+
+        let mut shards: Vec<Shard<'_>> = (0..n_shards)
+            .map(|s| {
+                Shard::new(
+                    s,
+                    &exec_engine,
                     self.universe,
-                    self.tenants.clone(),
-                    shard_engine.clone(),
-                    self.config.clone(),
+                    &self.tenants,
+                    placement.shard_mask(s),
+                    self.config.seed,
+                    live_budget,
+                    0,
                 )
             })
             .collect();
-        let mut shards: Vec<Shard<'_>> = coordinators
-            .iter()
-            .enumerate()
-            .map(|(s, c)| Shard::new(s, c, placement.shard_mask(s), n_views, self.config.seed))
-            .collect();
+        // Shards retired by remove/kill, held until the end so their
+        // RunResults share the final host wall-clock.
+        let mut dead: Vec<Shard<'_>> = Vec::new();
 
         let mut accountant = GlobalAccountant::new(n_tenants, self.fed.max_boost);
-        let mut records: Vec<ClusterRecord> = Vec::with_capacity(self.config.n_batches);
+        let mut records: Vec<ClusterRecord> = Vec::with_capacity(n_batches);
         let mut replication_bytes = 0u64;
-        let mut rebalance_churn = 0u64;
-        // Previous batch's demanded bytes per view (replication signal)
-        // and the whole-run cumulative demand (rebalance signal).
+        let mut rebalance_churn_bytes = 0u64;
+        // Previous batch's demanded bytes per view (replication + decay
+        // signal) and the whole-run cumulative demand (rebalance signal).
         let mut prev_demand = vec![0u64; n_views];
         let mut cum_demand = vec![0u64; n_views];
+        // Consecutive batches each view's demand share stayed below the
+        // replication threshold (the decay clock).
+        let mut decay_streaks = vec![0usize; n_views];
 
-        for b in 0..self.config.n_batches {
+        for b in 0..n_batches {
             let window_end = (b + 1) as f64 * self.config.batch_secs;
             let queries = generator.generate_until(window_end, self.universe);
 
-            // Hot-view replication, from the previous batch's demand.
+            // --- 1. Membership events scheduled for this batch. ---
+            // Pack-strategy re-homes re-pack by the demand the current
+            // layout reflects (the rebalance signal) rather than static
+            // sizes, so a membership event does not silently revert a
+            // demand-driven layout and over-charge survivor-to-survivor
+            // moves; before any demand exists, sizes are the signal.
+            // Hash ignores the weights entirely.
+            let mut membership_changes: Vec<MembershipChange> = Vec::new();
+            while sched_i < schedule.len() && schedule[sched_i].batch == b {
+                let pack_weights: &[u64] = if cum_demand.iter().any(|&d| d > 0) {
+                    &cum_demand
+                } else {
+                    &cached_sizes
+                };
+                let ev = schedule[sched_i];
+                sched_i += 1;
+                match ev.action {
+                    MembershipAction::Add => {
+                        let id = ev.shard;
+                        let mut new_ids: Vec<usize> =
+                            shards.iter().map(|s| s.id).collect();
+                        new_ids.push(id);
+                        new_ids.sort_unstable();
+                        let next = placement.rehome_for_membership(
+                            self.fed.placement,
+                            &new_ids,
+                            pack_weights,
+                        );
+                        let moved = apply_placement(
+                            &mut placement,
+                            next,
+                            &mut shards,
+                            &cached_sizes,
+                            &mut rebalance_churn_bytes,
+                            &mut replication_bytes,
+                        );
+                        shards.push(Shard::new(
+                            id,
+                            &exec_engine,
+                            self.universe,
+                            &self.tenants,
+                            placement.shard_mask(id),
+                            self.config.seed,
+                            live_budget,
+                            b + self.fed.warmup_batches,
+                        ));
+                        membership_changes.push(MembershipChange {
+                            action: ev.action,
+                            shard: id,
+                            views_moved: moved,
+                            bytes_drained: 0,
+                            bytes_lost: 0,
+                        });
+                    }
+                    MembershipAction::Remove | MembershipAction::Kill => {
+                        let idx = shards
+                            .iter()
+                            .position(|s| s.id == ev.shard)
+                            .expect("resolved membership target is live");
+                        let sh = shards.remove(idx);
+                        let (bytes_drained, bytes_lost) = match ev.action {
+                            MembershipAction::Remove => {
+                                // Planned decommission: contents migrate
+                                // out — the drain preview is the churn.
+                                let drained =
+                                    sh.executor.cache().drain_delta().bytes_evicted;
+                                rebalance_churn_bytes += drained;
+                                (drained, 0)
+                            }
+                            _ => {
+                                // Kill: no drain, the bytes are lost.
+                                (0, sh.executor.cache().used_bytes())
+                            }
+                        };
+                        // The leaver's replica copies vanish with it.
+                        let rep_bytes: u64 =
+                            sh.replicas.ones().map(|v| cached_sizes[v]).sum();
+                        replication_bytes = replication_bytes.saturating_sub(rep_bytes);
+                        dead.push(sh);
+                        let new_ids: Vec<usize> = shards.iter().map(|s| s.id).collect();
+                        let next = placement.rehome_for_membership(
+                            self.fed.placement,
+                            &new_ids,
+                            pack_weights,
+                        );
+                        let moved = apply_placement(
+                            &mut placement,
+                            next,
+                            &mut shards,
+                            &cached_sizes,
+                            &mut rebalance_churn_bytes,
+                            &mut replication_bytes,
+                        );
+                        membership_changes.push(MembershipChange {
+                            action: ev.action,
+                            shard: ev.shard,
+                            views_moved: moved,
+                            bytes_drained,
+                            bytes_lost,
+                        });
+                    }
+                }
+                // Budget re-split across the new live set.
+                live_budget = total_budget / shards.len() as u64;
+                for sh in shards.iter_mut() {
+                    sh.executor.cache_mut().set_budget(live_budget);
+                }
+            }
+
+            // --- 3a. Hot-view replication, from the previous batch's
+            // demand. ---
             let mut replicated_views = Vec::new();
-            if n_shards > 1 {
+            if shards.len() > 1 {
                 if let Some(frac) = self.fed.replicate_hot {
                     let total: u64 = prev_demand.iter().sum();
                     if total > 0 {
@@ -273,26 +445,77 @@ impl<'a> ShardedCoordinator<'a> {
                 }
             }
 
-            // Periodic demand-driven rebalance: re-home by cumulative
-            // demand with the pack placer; preview the eviction churn of
-            // each shard's no-longer-resident cached views via delta_to.
+            // --- 3b. Replica decay: replicas whose demand share stayed
+            // below the replication threshold for K consecutive batches
+            // are evicted from their non-home holders. ---
+            let mut decayed_views = Vec::new();
+            if shards.len() > 1 {
+                if let (Some(frac), Some(k)) =
+                    (self.fed.replicate_hot, self.fed.replica_decay)
+                {
+                    let total: u64 = prev_demand.iter().sum();
+                    let has_replica: Vec<bool> = (0..n_views)
+                        .map(|v| shards.iter().any(|sh| sh.replicas.get(v)))
+                        .collect();
+                    for v in decay_due(
+                        &mut decay_streaks,
+                        &prev_demand,
+                        total,
+                        frac,
+                        k,
+                        &has_replica,
+                    ) {
+                        for sh in shards.iter_mut() {
+                            if sh.replicas.get(v) {
+                                sh.replicas.set(v, false);
+                                replication_bytes =
+                                    replication_bytes.saturating_sub(cached_sizes[v]);
+                                if sh.executor.cache().is_cached(v) && !sh.home.get(v) {
+                                    // Projected eviction: the solver
+                                    // ages the copy out now that the
+                                    // router stops feeding it.
+                                    rebalance_churn_bytes += cached_sizes[v];
+                                }
+                            }
+                        }
+                        decayed_views.push(v);
+                    }
+                }
+            }
+
+            // --- 3c. Periodic demand-driven rebalance: re-home by
+            // cumulative demand with the pack placer; preview the
+            // eviction churn of each shard's no-longer-resident cached
+            // views via delta_to. ---
             let mut rebalanced = false;
-            if n_shards > 1 {
-                if let Some(k) = self.fed.rebalance_every {
-                    if k > 0 && b > 0 && b % k == 0 {
-                        let next = Placement::pack_weighted(n_shards, &cum_demand);
+            if shards.len() > 1 {
+                if let Some(kk) = self.fed.rebalance_every {
+                    if kk > 0 && b > 0 && b % kk == 0 {
+                        let live_ids: Vec<usize> = shards.iter().map(|s| s.id).collect();
+                        let next = Placement::pack_weighted_for(&live_ids, &cum_demand);
                         if next != placement {
-                            rebalance_churn += rehome(&mut shards, &next);
-                            placement = next;
+                            apply_placement(
+                                &mut placement,
+                                next,
+                                &mut shards,
+                                &cached_sizes,
+                                &mut rebalance_churn_bytes,
+                                &mut replication_bytes,
+                            );
                             rebalanced = true;
                         }
                     }
                 }
             }
 
-            // Route the batch (order-preserving within each shard) and
-            // record per-view demanded bytes for the replication and
-            // rebalance signals.
+            // --- 4. Route the batch (order-preserving within each
+            // shard) and record per-view demanded bytes for the
+            // replication, decay, and rebalance signals. ---
+            let max_id = shards.iter().map(|s| s.id).max().expect("live shards");
+            let mut id_to_idx = vec![usize::MAX; max_id + 1];
+            for (i, sh) in shards.iter().enumerate() {
+                id_to_idx[sh.id] = i;
+            }
             let mut batch_demand = vec![0u64; n_views];
             let targets: Vec<usize> = queries
                 .iter()
@@ -300,7 +523,7 @@ impl<'a> ShardedCoordinator<'a> {
                     for v in &q.required_views {
                         batch_demand[v.0] += scan_sizes[v.0];
                     }
-                    route(&shards, &placement, &cached_sizes, q)
+                    route(&shards, &placement, &id_to_idx, &cached_sizes, q)
                 })
                 .collect();
             for (q, s) in queries.into_iter().zip(targets) {
@@ -312,15 +535,16 @@ impl<'a> ShardedCoordinator<'a> {
             prev_demand = batch_demand;
 
             // Global-fairness feedback for this batch's solves: None on
-            // batch 0 (nothing observed) and for single-shard runs (the
-            // bit-identical serial path).
-            let mults: Option<Vec<f64>> = if n_shards > 1 && b > 0 {
+            // batch 0 (nothing observed) and while a single shard is
+            // live (the bit-identical serial path).
+            let mults: Option<Vec<f64>> = if shards.len() > 1 && b > 0 {
                 Some(accountant.multipliers(&weights))
             } else {
                 None
             };
 
-            // Solve + execute every shard concurrently.
+            // --- 5. Solve + execute every live shard concurrently. ---
+            let solve_budget = live_budget;
             let outcomes: Vec<ShardBatchOutcome> = std::thread::scope(|scope| {
                 let handles: Vec<_> = shards
                     .iter_mut()
@@ -328,7 +552,7 @@ impl<'a> ShardedCoordinator<'a> {
                         let ctx = SolveContext {
                             tenants: &self.tenants,
                             universe: self.universe,
-                            budget: shard_budget,
+                            budget: solve_budget,
                             stateful_gamma: self.config.stateful_gamma,
                             weight_mult: mults.as_deref(),
                         };
@@ -341,57 +565,119 @@ impl<'a> ShardedCoordinator<'a> {
                     .collect()
             });
 
-            // Aggregate federation-wide utilities into the accountant.
+            // --- 6. Aggregate federation-wide utilities. The records
+            // keep the full reality (every live shard); the accountant
+            // observes only warmed-up shards so a joiner's cold cache
+            // does not crater its tenants' attained utility. ---
             let mut agg_u = vec![0.0; n_tenants];
             let mut agg_star = vec![0.0; n_tenants];
-            for o in &outcomes {
+            let mut obs_u = vec![0.0; n_tenants];
+            let mut obs_star = vec![0.0; n_tenants];
+            for (sh, o) in shards.iter().zip(&outcomes) {
+                let warm = !sh.is_warming(b);
                 for i in 0..n_tenants {
                     agg_u[i] += o.utilities[i];
                     agg_star[i] += o.u_star[i];
+                    if warm {
+                        obs_u[i] += o.utilities[i];
+                        obs_star[i] += o.u_star[i];
+                    }
                 }
             }
-            accountant.observe(&agg_u, &agg_star);
+            accountant.observe(&obs_u, &obs_star);
+            let warming_shards: Vec<usize> = shards
+                .iter()
+                .filter(|sh| sh.is_warming(b))
+                .map(|sh| sh.id)
+                .collect();
 
             records.push(ClusterRecord {
                 index: b,
                 multipliers: mults.unwrap_or_else(|| vec![1.0; n_tenants]),
                 replicated_views,
                 rebalanced,
+                membership: membership_changes,
+                decayed_views,
+                live_shards: shards.len(),
+                shard_budget: live_budget,
+                warming_shards,
+                tenant_attained: agg_u,
+                tenant_attainable: agg_star,
             });
         }
 
         let host_wall_secs = t_run.elapsed().as_secs_f64();
-        let per_shard = shards
-            .into_iter()
-            .map(|sh| {
-                sh.executor
-                    .into_result(policy.name(), &self.config, n_tenants, host_wall_secs)
-            })
-            .collect();
+        let mut all: Vec<Shard<'_>> = dead;
+        all.extend(shards);
+        all.sort_by_key(|sh| sh.id);
+        let mut per_shard = Vec::with_capacity(all.len());
+        let mut per_shard_budgets = Vec::with_capacity(all.len());
+        for sh in all {
+            let Shard {
+                executor, budgets, ..
+            } = sh;
+            per_shard_budgets.push(budgets);
+            per_shard.push(executor.into_result(
+                policy.name(),
+                &self.config,
+                n_tenants,
+                host_wall_secs,
+            ));
+        }
         ClusterResult::assemble(
             per_shard,
+            per_shard_budgets,
             records,
             replication_bytes,
-            rebalance_churn,
+            rebalance_churn_bytes,
             host_wall_secs,
+            n_batches,
         )
     }
 }
 
-/// Re-home every shard to `next`'s map, returning the summed
-/// `delta_to`-previewed eviction bytes of cached views the shard will
-/// no longer serve (they age out at the next solve; the preview
-/// quantifies the churn the rebalance causes). Hot-view replicas are
-/// preserved across the re-home — replication is one-way; a replica bit
-/// promoted to home is just reclassified, never dropped.
-fn rehome(shards: &mut [Shard<'_>], next: &Placement) -> u64 {
-    let mut churn = 0u64;
+/// Swap the federation onto a new placement — the one place every
+/// re-home (membership add/remove/kill and demand rebalance) goes
+/// through: diff the old→new maps, re-home every live shard (charging
+/// previewed eviction churn), credit promoted-replica bytes back
+/// against the replication ledger, and install the new map. Returns
+/// the number of views whose home moved.
+fn apply_placement(
+    placement: &mut Placement,
+    next: Placement,
+    shards: &mut [Shard<'_>],
+    cached_sizes: &[u64],
+    churn: &mut u64,
+    replication_bytes: &mut u64,
+) -> usize {
+    let moved = placement.moved_views(&next);
+    let reclaimed = rehome(shards, &next, cached_sizes, churn);
+    *replication_bytes = replication_bytes.saturating_sub(reclaimed);
+    *placement = next;
+    moved
+}
+
+/// Re-home every live shard to `next`'s map: reclassify replica bits
+/// the new placement homes on their holder (the replica becomes the
+/// primary — its replication charge is credited back via the returned
+/// reclaimed bytes), and add the `delta_to`-previewed eviction bytes of
+/// cached views each shard will no longer serve to `churn` (they age
+/// out at the next solve; the preview quantifies the churn the re-home
+/// causes). Replicas the new placement does *not* home stay in place —
+/// replication is one-way until promotion or decay.
+fn rehome(
+    shards: &mut [Shard<'_>],
+    next: &Placement,
+    cached_sizes: &[u64],
+    churn: &mut u64,
+) -> u64 {
+    let mut reclaimed = 0u64;
     for sh in shards.iter_mut() {
         let new_home = next.shard_mask(sh.id);
-        // Reclassify replica bits the new placement homes here.
         for v in new_home.ones() {
             if sh.replicas.get(v) {
                 sh.replicas.set(v, false);
+                reclaimed += cached_sizes[v];
             }
         }
         let cached = sh.executor.cache().cached().clone();
@@ -401,25 +687,61 @@ fn rehome(shards: &mut [Shard<'_>], next: &Placement) -> u64 {
                 keep.set(v, false);
             }
         }
-        churn += sh.executor.cache().delta_to(&keep).bytes_evicted;
+        *churn += sh.executor.cache().delta_to(&keep).bytes_evicted;
         sh.home = new_home;
     }
-    churn
+    reclaimed
 }
 
-/// Route one query: prefer shards holding every required view (several
-/// holders → deterministic spread by query id), else the home shard of
-/// the query's largest required view.
+/// Advance the replica-decay streaks by one batch and return the views
+/// due for decay: views with a live replica whose share of the
+/// previous batch's demand stayed below `frac` for `k` consecutive
+/// batches (a zero-demand batch counts as below for every view). Views
+/// without replicas keep their streak at zero.
+fn decay_due(
+    streaks: &mut [usize],
+    prev_demand: &[u64],
+    total: u64,
+    frac: f64,
+    k: usize,
+    has_replica: &[bool],
+) -> Vec<usize> {
+    let mut due = Vec::new();
+    for v in 0..streaks.len() {
+        if !has_replica[v] {
+            streaks[v] = 0;
+            continue;
+        }
+        let below = total == 0 || (prev_demand[v] as f64) < frac * total as f64;
+        if below {
+            streaks[v] += 1;
+        } else {
+            streaks[v] = 0;
+        }
+        if streaks[v] >= k.max(1) {
+            due.push(v);
+            streaks[v] = 0;
+        }
+    }
+    due
+}
+
+/// Route one query: prefer live shards holding every required view
+/// (several holders → deterministic spread by query id), else the home
+/// shard of the query's largest required view. Returns an index into
+/// the live `shards` slice.
 fn route(
     shards: &[Shard<'_>],
     placement: &Placement,
+    id_to_idx: &[usize],
     cached_sizes: &[u64],
     q: &Query,
 ) -> usize {
     let holders: Vec<usize> = shards
         .iter()
-        .filter(|sh| q.required_views.iter().all(|v| sh.is_resident(v.0)))
-        .map(|sh| sh.id)
+        .enumerate()
+        .filter(|(_, sh)| q.required_views.iter().all(|v| sh.is_resident(v.0)))
+        .map(|(i, _)| i)
         .collect();
     match holders.len() {
         0 => q
@@ -427,7 +749,7 @@ fn route(
             .iter()
             .map(|v| v.0)
             .max_by_key(|&v| (cached_sizes[v], std::cmp::Reverse(v)))
-            .map(|v| placement.home(v))
+            .map(|v| id_to_idx[placement.home(v)])
             .unwrap_or(0),
         1 => holders[0],
         n => holders[(mix64(q.id.0) % n as u64) as usize],
@@ -437,6 +759,7 @@ fn route(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::cluster::ClusterConfig;
 
     #[test]
     fn accountant_even_attainment_is_identity() {
@@ -486,5 +809,60 @@ mod tests {
         }
         let m = acc.multipliers(&[1.0, 2.0]);
         assert!(m[1] > m[0], "heavier tenant should be favored: {m:?}");
+    }
+
+    /// Satellite regression (ISSUE 4): a re-home that promotes a
+    /// replica to primary credits the replication charge back.
+    #[test]
+    fn rehome_promotion_reclaims_replica_bytes() {
+        let universe = Universe::sales_only();
+        let tenants = TenantSet::equal(2);
+        let engine = SimEngine::new(ClusterConfig::default());
+        let n_views = universe.views.len();
+        let cached_sizes: Vec<u64> =
+            universe.views.iter().map(|v| v.cached_bytes).collect();
+        let start = Placement::hash(2, n_views);
+        let mut shards = vec![
+            Shard::new(0, &engine, &universe, &tenants, start.shard_mask(0), 7, 1000, 0),
+            Shard::new(1, &engine, &universe, &tenants, start.shard_mask(1), 7, 1000, 0),
+        ];
+        // Pick a view homed on shard 0 and replicate it onto shard 1.
+        let v = (0..n_views).find(|&v| start.home(v) == 0).unwrap();
+        shards[1].replicas.set(v, true);
+        // New placement homes `v` on shard 1: the replica is promoted.
+        let mut home: Vec<usize> = (0..n_views).map(|x| start.home(x)).collect();
+        home[v] = 1;
+        let next = Placement::from_home_map(vec![0, 1], home);
+        let mut churn = 0u64;
+        let reclaimed = rehome(&mut shards, &next, &cached_sizes, &mut churn);
+        assert_eq!(reclaimed, cached_sizes[v], "promotion must credit the charge");
+        assert!(!shards[1].replicas.get(v), "promoted replica bit cleared");
+        assert!(shards[1].home.get(v), "view is now home on its holder");
+        assert!(!shards[0].home.get(v));
+        // Nothing was cached, so no eviction churn was previewed.
+        assert_eq!(churn, 0);
+    }
+
+    #[test]
+    fn decay_streaks_accumulate_and_reset() {
+        let mut streaks = vec![0usize; 3];
+        let has_replica = vec![true, true, false];
+        // View 0 cold (below 10% of 100), view 1 hot, view 2 unreplicated.
+        let demand = vec![1u64, 60, 39];
+        let due = decay_due(&mut streaks, &demand, 100, 0.1, 2, &has_replica);
+        assert!(due.is_empty());
+        assert_eq!(streaks, vec![1, 0, 0]);
+        // Second cold batch trips K=2 for view 0 and resets its streak.
+        let due = decay_due(&mut streaks, &demand, 100, 0.1, 2, &has_replica);
+        assert_eq!(due, vec![0]);
+        assert_eq!(streaks, vec![0, 0, 0]);
+        // A hot batch resets the streak.
+        let hot = vec![50u64, 11, 39];
+        let due = decay_due(&mut streaks, &hot, 100, 0.1, 2, &has_replica);
+        assert!(due.is_empty());
+        assert_eq!(streaks[0], 0);
+        // Zero total demand counts as below for every replicated view.
+        let due = decay_due(&mut streaks, &[0, 0, 0], 0, 0.1, 1, &has_replica);
+        assert_eq!(due, vec![0, 1]);
     }
 }

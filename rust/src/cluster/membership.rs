@@ -1,0 +1,311 @@
+//! Elastic federation membership: a [`MembershipPlan`] is a schedule of
+//! shard add/remove/kill events keyed by batch index, driving the
+//! federation's live resharding machinery (see `cluster::federation`).
+//!
+//! The three actions map to the three production transitions:
+//!
+//! - **Add** — a cold shard joins; under hash placement ~1/N of the
+//!   views re-home onto it via the consistent-hash ring (pack placement
+//!   re-packs by the observed demand instead), and the joiner sits out
+//!   the global accountant for a warm-up window so its empty cache does
+//!   not read as tenant starvation.
+//! - **Remove** — a planned decommission: the shard *drains* (its cached
+//!   contents are migrated out — previewed with `CacheManager::
+//!   drain_delta` and charged to `rebalance_churn_bytes`) and its homed
+//!   views move to the survivors before the batch routes.
+//! - **Kill** — fault injection: the shard drops with **no** drain, its
+//!   cached bytes are lost, homed views re-route to survivors and every
+//!   survivor's budget re-splits to `total/N'`. The per-batch
+//!   `ClusterRecord`s capture the fairness-spread and throughput
+//!   transients the accountant then absorbs.
+//!
+//! Plans parse from a compact CLI string (`robus cluster --membership
+//! "add@40,kill@80"`): comma-separated `action[:shard]@batch` tokens
+//! where `batch` is an index or `mid` (the run midpoint) and the
+//! optional `:shard` picks an explicit victim for remove/kill (default:
+//! the highest-id live shard). [`MembershipPlan::resolve`] fixes the
+//! batch indices and simulates the schedule against the initial shard
+//! count, rejecting plans that would drop the federation below one live
+//! shard or target a shard that is not alive at event time.
+
+use std::collections::BTreeSet;
+
+/// What a membership event does to the live shard set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MembershipAction {
+    /// A cold shard joins (drain-free; warm-up accounting applies).
+    Add,
+    /// A planned decommission: drain, then re-home to survivors.
+    Remove,
+    /// Fault injection: drop without drain; cached bytes are lost.
+    Kill,
+}
+
+impl MembershipAction {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MembershipAction::Add => "add",
+            MembershipAction::Remove => "remove",
+            MembershipAction::Kill => "kill",
+        }
+    }
+
+    fn parse(s: &str) -> Option<MembershipAction> {
+        match s.to_ascii_lowercase().as_str() {
+            "add" => Some(MembershipAction::Add),
+            "remove" => Some(MembershipAction::Remove),
+            "kill" => Some(MembershipAction::Kill),
+            _ => None,
+        }
+    }
+}
+
+/// When an event fires: an explicit batch index or the run midpoint
+/// (`mid` — resolved to `n_batches / 2` once the batch count is known,
+/// so the same plan string works at `--quick` scale).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchPoint {
+    At(usize),
+    Mid,
+}
+
+/// One scheduled membership change.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MembershipEvent {
+    pub at: BatchPoint,
+    pub action: MembershipAction,
+    /// Explicit target shard for remove/kill (`kill:2@80`); `None`
+    /// targets the highest-id live shard. Rejected at parse time for
+    /// adds (the joiner always gets the next fresh id).
+    pub shard: Option<usize>,
+}
+
+/// A schedule of membership events. Empty plans (the default) keep the
+/// federation static — bit-identical to the pre-elastic behavior.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct MembershipPlan {
+    pub events: Vec<MembershipEvent>,
+}
+
+/// One plan entry with its batch index fixed and its target shard
+/// resolved against the simulated live set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ResolvedEvent {
+    pub batch: usize,
+    pub action: MembershipAction,
+    /// The concrete shard: the fresh id for adds, the victim otherwise.
+    pub shard: usize,
+}
+
+impl MembershipPlan {
+    /// The static (no-events) plan.
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Parse a comma-separated schedule: `action[:shard]@batch` with
+    /// `action` ∈ {add, remove, kill} and `batch` a batch index or
+    /// `mid`. Examples: `"add@40,kill@80"`, `"kill:0@mid"`.
+    pub fn parse(s: &str) -> Result<MembershipPlan, String> {
+        let mut events = Vec::new();
+        for token in s.split(',') {
+            let token = token.trim();
+            if token.is_empty() {
+                continue;
+            }
+            let (head, at) = token
+                .split_once('@')
+                .ok_or_else(|| format!("membership event '{token}' is missing '@batch'"))?;
+            let (action_str, shard) = match head.split_once(':') {
+                None => (head, None),
+                Some((a, id)) => {
+                    let id = id.trim().parse::<usize>().map_err(|_| {
+                        format!("membership event '{token}': bad shard id '{id}'")
+                    })?;
+                    (a, Some(id))
+                }
+            };
+            let action = MembershipAction::parse(action_str.trim()).ok_or_else(|| {
+                format!(
+                    "membership event '{token}': unknown action '{}' (use add|remove|kill)",
+                    action_str.trim()
+                )
+            })?;
+            // A joiner always receives the next fresh id; accepting an
+            // explicit ':shard' here would let a later remove/kill
+            // silently target the wrong shard.
+            if action == MembershipAction::Add && shard.is_some() {
+                return Err(format!(
+                    "membership event '{token}': 'add' cannot name a shard — \
+                     joiners get the next fresh id"
+                ));
+            }
+            let at = match at.trim().to_ascii_lowercase().as_str() {
+                "mid" => BatchPoint::Mid,
+                b => BatchPoint::At(b.parse::<usize>().map_err(|_| {
+                    format!("membership event '{token}': bad batch '{b}' (index or 'mid')")
+                })?),
+            };
+            events.push(MembershipEvent { at, action, shard });
+        }
+        Ok(MembershipPlan { events })
+    }
+
+    /// Fix batch points against `n_batches`, order events by batch
+    /// (stable — same-batch events keep their plan order), and simulate
+    /// the schedule from `n_shards` initial shards, assigning fresh ids
+    /// to adds and default victims to remove/kill. Errors on events
+    /// past the run, targets that are not alive, and schedules that
+    /// would drop the federation below one live shard.
+    pub fn resolve(
+        &self,
+        n_shards: usize,
+        n_batches: usize,
+    ) -> Result<Vec<ResolvedEvent>, String> {
+        let mut ordered: Vec<(usize, MembershipEvent)> = self
+            .events
+            .iter()
+            .map(|e| {
+                let batch = match e.at {
+                    BatchPoint::At(b) => b,
+                    BatchPoint::Mid => n_batches / 2,
+                };
+                (batch, *e)
+            })
+            .collect();
+        ordered.sort_by_key(|(b, _)| *b);
+
+        let mut live: BTreeSet<usize> = (0..n_shards).collect();
+        let mut next_id = n_shards;
+        let mut resolved = Vec::with_capacity(ordered.len());
+        for (batch, ev) in ordered {
+            if batch >= n_batches {
+                return Err(format!(
+                    "membership event {}@{batch} is past the run ({n_batches} batches)",
+                    ev.action.name()
+                ));
+            }
+            let shard = match ev.action {
+                MembershipAction::Add => {
+                    let id = next_id;
+                    next_id += 1;
+                    live.insert(id);
+                    id
+                }
+                MembershipAction::Remove | MembershipAction::Kill => {
+                    let target = match ev.shard {
+                        Some(id) => id,
+                        None => *live.iter().next_back().expect("live set never empty"),
+                    };
+                    if !live.contains(&target) {
+                        return Err(format!(
+                            "membership event {}@{batch}: shard {target} is not alive",
+                            ev.action.name()
+                        ));
+                    }
+                    if live.len() == 1 {
+                        return Err(format!(
+                            "membership event {}@{batch} would remove the last live shard",
+                            ev.action.name()
+                        ));
+                    }
+                    live.remove(&target);
+                    target
+                }
+            };
+            resolved.push(ResolvedEvent {
+                batch,
+                action: ev.action,
+                shard,
+            });
+        }
+        Ok(resolved)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip_and_defaults() {
+        let plan = MembershipPlan::parse("add@40, kill@80").unwrap();
+        assert_eq!(plan.events.len(), 2);
+        assert_eq!(plan.events[0].action, MembershipAction::Add);
+        assert_eq!(plan.events[0].at, BatchPoint::At(40));
+        assert_eq!(plan.events[1].action, MembershipAction::Kill);
+        assert_eq!(plan.events[1].shard, None);
+        assert!(MembershipPlan::empty().is_empty());
+        assert!(MembershipPlan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn parse_explicit_shard_and_mid() {
+        let plan = MembershipPlan::parse("kill:2@mid,remove:0@7").unwrap();
+        assert_eq!(plan.events[0].shard, Some(2));
+        assert_eq!(plan.events[0].at, BatchPoint::Mid);
+        assert_eq!(plan.events[1].action, MembershipAction::Remove);
+        assert_eq!(plan.events[1].shard, Some(0));
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(MembershipPlan::parse("add40").is_err());
+        assert!(MembershipPlan::parse("grow@40").is_err());
+        assert!(MembershipPlan::parse("add@soon").is_err());
+        assert!(MembershipPlan::parse("kill:x@4").is_err());
+        // An explicit shard on 'add' is a user error (the joiner's id
+        // is assigned, not chosen) — surface it instead of ignoring it.
+        assert!(MembershipPlan::parse("add:5@3").is_err());
+    }
+
+    #[test]
+    fn resolve_assigns_fresh_ids_and_default_victims() {
+        let plan = MembershipPlan::parse("add@2,kill@5,remove@8").unwrap();
+        let r = plan.resolve(3, 10).unwrap();
+        // Add gets the first fresh id (3); the default kill victim is
+        // the highest live id (the fresh shard); the remove then takes
+        // the highest original (2).
+        assert_eq!(
+            r,
+            vec![
+                ResolvedEvent { batch: 2, action: MembershipAction::Add, shard: 3 },
+                ResolvedEvent { batch: 5, action: MembershipAction::Kill, shard: 3 },
+                ResolvedEvent { batch: 8, action: MembershipAction::Remove, shard: 2 },
+            ]
+        );
+    }
+
+    #[test]
+    fn resolve_mid_and_ordering() {
+        let plan = MembershipPlan::parse("kill@mid,add@1").unwrap();
+        let r = plan.resolve(4, 20).unwrap();
+        assert_eq!(r[0].batch, 1);
+        assert_eq!(r[0].action, MembershipAction::Add);
+        assert_eq!(r[1].batch, 10);
+        assert_eq!(r[1].action, MembershipAction::Kill);
+    }
+
+    #[test]
+    fn resolve_rejects_impossible_schedules() {
+        // Below one live shard.
+        let p = MembershipPlan::parse("kill@1,kill@2").unwrap();
+        assert!(p.resolve(2, 10).is_err());
+        // Dead target.
+        let p = MembershipPlan::parse("kill:1@1,remove:1@2").unwrap();
+        assert!(p.resolve(3, 10).is_err());
+        // Unknown target.
+        let p = MembershipPlan::parse("kill:9@1").unwrap();
+        assert!(p.resolve(3, 10).is_err());
+        // Past the run.
+        let p = MembershipPlan::parse("add@10").unwrap();
+        assert!(p.resolve(3, 10).is_err());
+        // A kill then an add keeping ≥1 alive is fine.
+        let p = MembershipPlan::parse("kill@1,add@2").unwrap();
+        assert!(p.resolve(2, 10).is_ok());
+    }
+}

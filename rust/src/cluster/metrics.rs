@@ -1,18 +1,43 @@
-//! Federation-level metrics: per-batch [`ClusterRecord`]s (shard loads,
-//! fairness multipliers, replication/rebalance events), per-shard
-//! summaries, and the merged [`ClusterResult`] whose `run` field is a
-//! plain [`RunResult`] — so every single-node metric (throughput,
-//! fairness index, speedups, hit ratio) applies to the federation
-//! unchanged, and the `--shards 1` equivalence check is a direct
-//! `RunResult` comparison.
+//! Federation-level metrics: per-batch [`ClusterRecord`]s (fairness
+//! multipliers, replication/decay/rebalance events, membership changes,
+//! per-tenant attainment), per-shard summaries, and the merged
+//! [`ClusterResult`] whose `run` field is a plain [`RunResult`] — so
+//! every single-node metric (throughput, fairness index, speedups, hit
+//! ratio) applies to the federation unchanged, and the `--shards 1`
+//! equivalence check is a direct `RunResult` comparison.
+//!
+//! Elastic membership (PR 4) generalizes the merge: shards may be born
+//! or retired mid-run (ragged per-shard batch lists keyed by the global
+//! batch index) and per-batch cache utilization is weighted by each
+//! shard's actual budget bytes at that batch rather than assuming equal
+//! slices. The per-batch per-tenant attainment stored on every record
+//! powers the membership *transient* figures: fairness spread and
+//! throughput before/during/after each add/remove/kill.
 
 use crate::cache::CacheDelta;
+use crate::cluster::membership::MembershipAction;
 use crate::coordinator::loop_::{BatchRecord, RunResult};
 use crate::coordinator::metrics::per_tenant_speedups;
 use crate::util::json::Json;
 
+/// One membership change applied before a batch's routing.
+#[derive(Debug, Clone)]
+pub struct MembershipChange {
+    pub action: MembershipAction,
+    /// The joining shard (Add) or the victim (Remove/Kill).
+    pub shard: usize,
+    /// Views whose home moved in the old→new placement diff.
+    pub views_moved: usize,
+    /// Drain preview (`CacheManager::drain_delta`) — bytes the leaving
+    /// shard migrates out. Remove only; 0 otherwise.
+    pub bytes_drained: u64,
+    /// Cached bytes dropped on the floor (no drain). Kill only.
+    pub bytes_lost: u64,
+}
+
 /// One batch of the federation: the global accountant's feedback plus
-/// the replication/rebalance events that fired before it.
+/// the replication/rebalance/membership events that fired before it and
+/// the per-tenant attainment it produced.
 #[derive(Debug, Clone)]
 pub struct ClusterRecord {
     pub index: usize,
@@ -24,6 +49,23 @@ pub struct ClusterRecord {
     pub replicated_views: Vec<usize>,
     /// Whether a demand-driven rebalance re-homed views before this batch.
     pub rebalanced: bool,
+    /// Membership changes applied before this batch's routing.
+    pub membership: Vec<MembershipChange>,
+    /// Hot-view replicas evicted by decay before this batch.
+    pub decayed_views: Vec<usize>,
+    /// Live shard count while this batch ran.
+    pub live_shards: usize,
+    /// Per-shard cache budget while this batch ran (`total / live`).
+    pub shard_budget: u64,
+    /// Shards still inside their post-join warm-up (excluded from the
+    /// global accountant this batch).
+    pub warming_shards: Vec<usize>,
+    /// Federation-wide per-tenant attained utility this batch (summed
+    /// over all live shards, warming or not — the recorded reality; the
+    /// accountant sees the warm subset).
+    pub tenant_attained: Vec<f64>,
+    /// Federation-wide per-tenant attainable (solo-optimum) utility.
+    pub tenant_attainable: Vec<f64>,
 }
 
 /// Per-shard roll-up of a whole run.
@@ -31,6 +73,9 @@ pub struct ClusterRecord {
 pub struct ShardSummary {
     pub shard: usize,
     pub queries: usize,
+    /// Batches this shard was alive for (ragged under elastic
+    /// membership).
+    pub batches: usize,
     /// Simulated queries per minute served by this shard (Eq. 4 scope:
     /// the shard's own timeline).
     pub throughput_per_min: f64,
@@ -42,50 +87,94 @@ pub struct ShardSummary {
     pub bytes_evicted: u64,
 }
 
+/// Fairness-spread and throughput transient around one membership
+/// event (windows of `window` batches before / starting at / after it).
+#[derive(Debug, Clone)]
+pub struct TransientReport {
+    pub batch: usize,
+    pub window: usize,
+    pub pre_spread: f64,
+    pub during_spread: f64,
+    pub post_spread: f64,
+    pub pre_queries_per_batch: f64,
+    pub during_queries_per_batch: f64,
+    pub post_queries_per_batch: f64,
+    /// Batches after the event until a `window`-wide sliding attainment
+    /// spread first returned to ≤ 1.5× the pre-event spread (`None` =
+    /// never within the run).
+    pub recovery_batches: Option<usize>,
+}
+
 /// Result of a [`crate::cluster::ShardedCoordinator`] run.
 #[derive(Debug, Clone)]
 pub struct ClusterResult {
     /// The merged federation-level view: outcomes of every shard, one
-    /// `BatchRecord` per batch (configs unioned, byte movement summed).
-    /// For a 1-shard run this IS the shard's `RunResult`, bit-identical
-    /// to the serial coordinator's.
+    /// `BatchRecord` per global batch (configs unioned, byte movement
+    /// summed). For a 1-shard run this IS the shard's `RunResult`,
+    /// bit-identical to the serial coordinator's.
     pub run: RunResult,
-    /// Each shard's own run (its timeline, batches, outcomes).
+    /// Each shard's own run (its timeline, batches, outcomes), in shard
+    /// id order — including shards retired mid-run.
     pub per_shard: Vec<RunResult>,
+    /// `per_shard_budgets[i][j]` = cache budget of `per_shard[i]` at its
+    /// j-th batch record (the merge's utilization weights).
+    pub per_shard_budgets: Vec<Vec<u64>>,
     pub records: Vec<ClusterRecord>,
-    /// Bytes of hot-view replicas added across the run (each replica
-    /// charged at the view's cached size per holding shard).
+    /// Net bytes of replica copies created by hot-view replication:
+    /// charged per holder at creation, credited back when a re-home
+    /// promotes the replica to primary, when decay evicts it, or when
+    /// its holder leaves the federation.
     pub replication_bytes: u64,
-    /// Projected eviction churn of rebalance operations (from
-    /// `CacheManager::delta_to` previews at re-home time).
-    pub rebalance_churn: u64,
+    /// Projected eviction/migration churn of rebalances, decommission
+    /// drains, and replica decay (from `CacheManager::delta_to` /
+    /// `drain_delta` previews).
+    pub rebalance_churn_bytes: u64,
 }
 
 impl ClusterResult {
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn assemble(
         per_shard: Vec<RunResult>,
+        per_shard_budgets: Vec<Vec<u64>>,
         records: Vec<ClusterRecord>,
         replication_bytes: u64,
-        rebalance_churn: u64,
+        rebalance_churn_bytes: u64,
         host_wall_secs: f64,
+        n_batches: usize,
     ) -> Self {
         assert!(!per_shard.is_empty());
+        assert_eq!(per_shard.len(), per_shard_budgets.len());
         let run = if per_shard.len() == 1 {
+            // The single-shard degeneracy: the merged run is the shard's
+            // run verbatim (bit-identical to `Coordinator::run`).
             per_shard[0].clone()
         } else {
-            merge_runs(&per_shard, host_wall_secs)
+            merge_runs(&per_shard, &per_shard_budgets, n_batches, host_wall_secs)
         };
         Self {
             run,
             per_shard,
+            per_shard_budgets,
             records,
             replication_bytes,
-            rebalance_churn,
+            rebalance_churn_bytes,
         }
     }
 
+    /// Distinct shards that ever lived during the run (dead + live —
+    /// the length of `per_shard`). Under an elastic plan this exceeds
+    /// the live count; see [`ClusterResult::live_shards_final`].
     pub fn n_shards(&self) -> usize {
         self.per_shard.len()
+    }
+
+    /// Shards live at the end of the run (equals `n_shards()` for
+    /// static federations).
+    pub fn live_shards_final(&self) -> usize {
+        self.records
+            .last()
+            .map(|r| r.live_shards)
+            .unwrap_or_else(|| self.per_shard.len())
     }
 
     /// Federation batches retired per host second (the scaling figure
@@ -103,6 +192,106 @@ impl ClusterResult {
         speedup_spread(&self.run, baseline)
     }
 
+    /// Weight-normalized attainment spread over batches `[from, to)`:
+    /// per tenant, attained/attainable summed over the window, divided
+    /// by the tenant weight; spread = max/min over tenants that had
+    /// attainable demand in the window. A tenant that demanded but
+    /// attained *nothing* is fully starved → `f64::INFINITY`. Fewer
+    /// than two active tenants → 1.0. This is the baseline-free,
+    /// per-window spread the membership transients are measured with.
+    pub fn attainment_spread_window(&self, from: usize, to: usize) -> f64 {
+        let n = self.run.weights.len();
+        let mut attained = vec![0.0; n];
+        let mut attainable = vec![0.0; n];
+        for r in &self.records {
+            if r.index >= from && r.index < to {
+                for i in 0..n {
+                    attained[i] += r.tenant_attained.get(i).copied().unwrap_or(0.0);
+                    attainable[i] += r.tenant_attainable.get(i).copied().unwrap_or(0.0);
+                }
+            }
+        }
+        let mut norm: Vec<f64> = Vec::with_capacity(n);
+        for i in 0..n {
+            if attainable[i] <= 0.0 {
+                continue;
+            }
+            if attained[i] <= 0.0 {
+                return f64::INFINITY;
+            }
+            norm.push(attained[i] / attainable[i] / self.run.weights[i].max(1e-12));
+        }
+        if norm.len() < 2 {
+            return 1.0;
+        }
+        let max = norm.iter().cloned().fold(f64::MIN, f64::max);
+        let min = norm.iter().cloned().fold(f64::MAX, f64::min);
+        max / min
+    }
+
+    /// Mean queries routed per batch over `[from, to)` (the throughput
+    /// transient proxy on the batch axis).
+    pub fn queries_per_batch_window(&self, from: usize, to: usize) -> f64 {
+        let rows: Vec<usize> = self
+            .run
+            .batches
+            .iter()
+            .filter(|b| b.index >= from && b.index < to)
+            .map(|b| b.n_queries)
+            .collect();
+        if rows.is_empty() {
+            return 0.0;
+        }
+        rows.iter().sum::<usize>() as f64 / rows.len() as f64
+    }
+
+    /// Fairness-spread and throughput transient around the membership
+    /// event at `batch`, with `window`-batch comparison windows.
+    pub fn transient(&self, batch: usize, window: usize) -> TransientReport {
+        let w = window.max(1);
+        let n = self.records.len();
+        let pre_spread = self.attainment_spread_window(batch.saturating_sub(w), batch);
+        let during_spread = self.attainment_spread_window(batch, (batch + w).min(n));
+        let post_spread =
+            self.attainment_spread_window((batch + w).min(n), (batch + 2 * w).min(n));
+        // An infinite pre spread (a tenant already starved before the
+        // event) gives no meaningful re-convergence target: report
+        // "never recovered" instead of trivially matching at lag 0.
+        let mut recovery_batches = None;
+        if pre_spread.is_finite() {
+            let threshold = pre_spread * 1.5 + 1e-9;
+            let mut t = batch;
+            while t + w <= n {
+                if self.attainment_spread_window(t, t + w) <= threshold {
+                    recovery_batches = Some(t - batch);
+                    break;
+                }
+                t += 1;
+            }
+        }
+        TransientReport {
+            batch,
+            window: w,
+            pre_spread,
+            during_spread,
+            post_spread,
+            pre_queries_per_batch: self
+                .queries_per_batch_window(batch.saturating_sub(w), batch),
+            during_queries_per_batch: self.queries_per_batch_window(batch, (batch + w).min(n)),
+            post_queries_per_batch: self
+                .queries_per_batch_window((batch + w).min(n), (batch + 2 * w).min(n)),
+            recovery_batches,
+        }
+    }
+
+    /// All membership changes with their batch indices, in batch order.
+    pub fn membership_events(&self) -> Vec<(usize, &MembershipChange)> {
+        self.records
+            .iter()
+            .flat_map(|r| r.membership.iter().map(move |c| (r.index, c)))
+            .collect()
+    }
+
     pub fn shard_summaries(&self) -> Vec<ShardSummary> {
         self.per_shard
             .iter()
@@ -112,6 +301,7 @@ impl ClusterResult {
                 ShardSummary {
                     shard: s,
                     queries: r.outcomes.len(),
+                    batches: r.batches.len(),
                     throughput_per_min: r.throughput_per_min(),
                     solve_ms_p50: r.solve_ms_percentile(50.0),
                     solve_ms_p99: r.solve_ms_percentile(99.0),
@@ -126,17 +316,28 @@ impl ClusterResult {
     /// Human-readable federation report for the CLI.
     pub fn render(&self, baseline: Option<&RunResult>) -> String {
         let mut out = String::new();
+        let live = self.live_shards_final();
         out.push_str(&format!(
-            "federation: {} shards, {} batches, {} queries, {:.2} batches/s\n",
+            "federation: {} shard histories ({live} live at end), {} batches, {} queries, {:.2} batches/s\n",
             self.n_shards(),
             self.run.batches.len(),
             self.run.outcomes.len(),
             self.batches_per_sec()
         ));
         out.push_str(&format!(
-            "replication: {} B added; rebalance churn: {} B\n",
-            self.replication_bytes, self.rebalance_churn
+            "replication: {} B net replicas; rebalance/drain churn: {} B\n",
+            self.replication_bytes, self.rebalance_churn_bytes
         ));
+        for (b, c) in self.membership_events() {
+            out.push_str(&format!(
+                "membership: {} shard {} @ batch {b} (moved {} views, drained {} B, lost {} B)\n",
+                c.action.name(),
+                c.shard,
+                c.views_moved,
+                c.bytes_drained,
+                c.bytes_lost
+            ));
+        }
         if let Some(base) = baseline {
             out.push_str(&format!(
                 "global fairness: index {:.3}, spread {:.3} (vs {})\n",
@@ -146,13 +347,14 @@ impl ClusterResult {
             ));
         }
         out.push_str(
-            "shard     queries   q/min   solve p50   solve p99   util    loaded B    evicted B\n",
+            "shard     queries batches   q/min   solve p50   solve p99   util    loaded B    evicted B\n",
         );
         for s in self.shard_summaries() {
             out.push_str(&format!(
-                "{:<9} {:>7} {:>7.1} {:>8.1}ms {:>8.1}ms {:>6.2} {:>11} {:>11}\n",
+                "{:<9} {:>7} {:>7} {:>7.1} {:>8.1}ms {:>8.1}ms {:>6.2} {:>11} {:>11}\n",
                 s.shard,
                 s.queries,
+                s.batches,
                 s.throughput_per_min,
                 s.solve_ms_p50,
                 s.solve_ms_p99,
@@ -173,6 +375,7 @@ impl ClusterResult {
                     Json::from_pairs(vec![
                         ("shard", Json::Number(s.shard as f64)),
                         ("queries", Json::Number(s.queries as f64)),
+                        ("batches", Json::Number(s.batches as f64)),
                         ("throughput_per_min", Json::Number(s.throughput_per_min)),
                         ("solve_ms_p50", Json::Number(s.solve_ms_p50)),
                         ("solve_ms_p99", Json::Number(s.solve_ms_p99)),
@@ -186,8 +389,29 @@ impl ClusterResult {
                 })
                 .collect(),
         );
+        let events = Json::Array(
+            self.membership_events()
+                .iter()
+                .map(|(b, c)| {
+                    Json::from_pairs(vec![
+                        ("batch", Json::Number(*b as f64)),
+                        ("action", Json::String(c.action.name().to_string())),
+                        ("shard", Json::Number(c.shard as f64)),
+                        ("views_moved", Json::Number(c.views_moved as f64)),
+                        ("bytes_drained", Json::Number(c.bytes_drained as f64)),
+                        ("bytes_lost", Json::Number(c.bytes_lost as f64)),
+                    ])
+                })
+                .collect(),
+        );
         let mut obj = Json::from_pairs(vec![
+            // Total shard histories (dead + live); the live count at the
+            // end of the run sits alongside for elastic plans.
             ("n_shards", Json::Number(self.n_shards() as f64)),
+            (
+                "live_shards_final",
+                Json::Number(self.live_shards_final() as f64),
+            ),
             ("batches", Json::Number(self.run.batches.len() as f64)),
             ("queries", Json::Number(self.run.outcomes.len() as f64)),
             ("batches_per_sec", Json::Number(self.batches_per_sec())),
@@ -197,7 +421,11 @@ impl ClusterResult {
                 "replication_bytes",
                 Json::Number(self.replication_bytes as f64),
             ),
-            ("rebalance_churn", Json::Number(self.rebalance_churn as f64)),
+            (
+                "rebalance_churn_bytes",
+                Json::Number(self.rebalance_churn_bytes as f64),
+            ),
+            ("membership_events", events),
             ("shards", shards),
         ]);
         if let Some(base) = baseline {
@@ -214,42 +442,53 @@ impl ClusterResult {
     }
 }
 
-/// Max/min weight-normalized per-tenant speedup of `run` vs `baseline`
-/// (tenants with no joined queries excluded; 1.0 when fewer than two
-/// tenants qualify, infinity when a tenant's speedup is zero).
+/// Max/min weight-normalized per-tenant speedup of `run` vs `baseline`.
+/// Tenants with no queries in the baseline (never demanded anything)
+/// are excluded; a tenant that *was* active in the baseline but
+/// attained zero speedup — no joined queries retired in `run` — is
+/// fully starved and drives the spread to `f64::INFINITY` rather than
+/// being silently dropped. 1.0 when fewer than two tenants qualify.
 pub fn speedup_spread(run: &RunResult, baseline: &RunResult) -> f64 {
     let x = per_tenant_speedups(run, baseline);
-    let norm: Vec<f64> = x
-        .iter()
-        .zip(&run.weights)
-        .filter(|(xi, _)| **xi > 0.0)
-        .map(|(xi, l)| xi / l)
-        .collect();
+    let mut active = vec![false; x.len()];
+    for o in &baseline.outcomes {
+        if o.tenant < active.len() {
+            active[o.tenant] = true;
+        }
+    }
+    let mut norm: Vec<f64> = Vec::with_capacity(x.len());
+    for (i, &xi) in x.iter().enumerate() {
+        if !active[i] {
+            continue;
+        }
+        if xi <= 0.0 {
+            // Active in the baseline, zero attained speedup: starved.
+            return f64::INFINITY;
+        }
+        norm.push(xi / run.weights[i]);
+    }
     if norm.len() < 2 {
         return 1.0;
     }
     let max = norm.iter().cloned().fold(f64::MIN, f64::max);
     let min = norm.iter().cloned().fold(f64::MAX, f64::min);
-    if min <= 0.0 {
-        f64::INFINITY
-    } else {
-        max / min
-    }
+    max / min
 }
 
 /// Merge per-shard runs into one federation-level `RunResult`: outcomes
 /// of all shards (sorted by query id — ids are globally unique), and
-/// per-batch records with configs unioned, query counts and byte
-/// movement summed, utilization averaged (shard budgets are equal
-/// slices), and the host-side solve/stall figures taken as the max
-/// across shards (the shards solve concurrently, so the slowest shard
-/// is the batch's critical path).
-fn merge_runs(per_shard: &[RunResult], host_wall_secs: f64) -> RunResult {
-    let n_batches = per_shard[0].batches.len();
-    assert!(
-        per_shard.iter().all(|r| r.batches.len() == n_batches),
-        "shards must step every batch"
-    );
+/// per-global-batch records with configs unioned, query counts and byte
+/// movement summed, utilization weighted by each shard's budget bytes
+/// at that batch, and the host-side solve/stall figures taken as the
+/// max across shards (the shards solve concurrently, so the slowest
+/// shard is the batch's critical path). Shards born or retired mid-run
+/// contribute only to the batches they were alive for.
+fn merge_runs(
+    per_shard: &[RunResult],
+    budgets: &[Vec<u64>],
+    n_batches: usize,
+    host_wall_secs: f64,
+) -> RunResult {
     let mut outcomes: Vec<_> = per_shard
         .iter()
         .flat_map(|r| r.outcomes.iter().cloned())
@@ -258,13 +497,30 @@ fn merge_runs(per_shard: &[RunResult], host_wall_secs: f64) -> RunResult {
 
     let mut batches = Vec::with_capacity(n_batches);
     for b in 0..n_batches {
-        let rows: Vec<&BatchRecord> = per_shard.iter().map(|r| &r.batches[b]).collect();
-        let mut config = rows[0].config.clone();
-        for row in rows.iter().skip(1) {
+        // Rows from the shards alive at batch b: each shard's records
+        // are a contiguous index range starting at its birth batch.
+        let mut rows: Vec<(&BatchRecord, u64)> = Vec::with_capacity(per_shard.len());
+        for (r, buds) in per_shard.iter().zip(budgets) {
+            let first = match r.batches.first() {
+                Some(rec) => rec.index,
+                None => continue,
+            };
+            if b < first {
+                continue;
+            }
+            if let Some(rec) = r.batches.get(b - first) {
+                debug_assert_eq!(rec.index, b, "shard batch records must be contiguous");
+                rows.push((rec, buds.get(b - first).copied().unwrap_or(0)));
+            }
+        }
+        assert!(!rows.is_empty(), "no live shard recorded batch {b}");
+
+        let mut config = rows[0].0.config.clone();
+        for (row, _) in rows.iter().skip(1) {
             config.union_with(&row.config);
         }
         let mut delta = CacheDelta::default();
-        for row in &rows {
+        for (row, _) in &rows {
             delta.loaded.extend(row.delta.loaded.iter().copied());
             delta.evicted.extend(row.delta.evicted.iter().copied());
             delta.bytes_loaded += row.delta.bytes_loaded;
@@ -276,29 +532,48 @@ fn merge_runs(per_shard: &[RunResult], host_wall_secs: f64) -> RunResult {
         delta.loaded.dedup();
         delta.evicted.sort_unstable();
         delta.evicted.dedup();
+
+        // Budget-weighted utilization. Equal budgets take the
+        // plain-mean path so static federations stay bit-identical to
+        // the unweighted merge. Today's federation re-splits every live
+        // shard to the same total/N' each batch, so real runs always
+        // take that path; the weighted branch makes the merge correct
+        // by construction for any per-shard budget assignment (e.g. the
+        // ROADMAP's warm-start ramps) instead of baking the equal-slice
+        // assumption back in.
+        let total_budget: u64 = rows.iter().map(|(_, w)| *w).sum();
+        let equal = rows.iter().all(|(_, w)| *w == rows[0].1);
+        let cache_utilization = if equal || total_budget == 0 {
+            rows.iter().map(|(r, _)| r.cache_utilization).sum::<f64>() / rows.len() as f64
+        } else {
+            rows.iter()
+                .map(|(r, w)| r.cache_utilization * *w as f64)
+                .sum::<f64>()
+                / total_budget as f64
+        };
+
         batches.push(BatchRecord {
             index: b,
-            n_queries: rows.iter().map(|r| r.n_queries).sum(),
+            n_queries: rows.iter().map(|(r, _)| r.n_queries).sum(),
             config,
-            cache_utilization: rows.iter().map(|r| r.cache_utilization).sum::<f64>()
-                / rows.len() as f64,
-            window_end: rows[0].window_end,
+            cache_utilization,
+            window_end: rows[0].0.window_end,
             exec_start: rows
                 .iter()
-                .map(|r| r.exec_start)
+                .map(|(r, _)| r.exec_start)
                 .fold(f64::INFINITY, f64::min),
             exec_end: rows
                 .iter()
-                .map(|r| r.exec_end)
+                .map(|(r, _)| r.exec_end)
                 .fold(f64::NEG_INFINITY, f64::max),
             solve_secs: rows
                 .iter()
-                .map(|r| r.solve_secs)
+                .map(|(r, _)| r.solve_secs)
                 .fold(0.0, f64::max),
             queue_depth: 0,
             stall_secs: rows
                 .iter()
-                .map(|r| r.stall_secs)
+                .map(|(r, _)| r.stall_secs)
                 .fold(0.0, f64::max),
             delta,
         });
@@ -337,28 +612,32 @@ mod tests {
         }
     }
 
+    fn batch_record(index: usize, config_bits: &[bool], util: f64) -> BatchRecord {
+        BatchRecord {
+            index,
+            n_queries: 1,
+            config: ConfigMask::from_bools(config_bits),
+            cache_utilization: util,
+            window_end: 40.0 * (index + 1) as f64,
+            exec_start: 40.0,
+            exec_end: 50.0,
+            solve_secs: 0.01,
+            queue_depth: 0,
+            stall_secs: 0.01,
+            delta: CacheDelta {
+                loaded: vec![0],
+                evicted: vec![],
+                bytes_loaded: 10,
+                bytes_evicted: 0,
+            },
+        }
+    }
+
     fn shard_run(outcomes: Vec<QueryOutcome>, config_bits: &[bool], util: f64) -> RunResult {
         RunResult {
             policy: "TEST",
             outcomes,
-            batches: vec![BatchRecord {
-                index: 0,
-                n_queries: 1,
-                config: ConfigMask::from_bools(config_bits),
-                cache_utilization: util,
-                window_end: 40.0,
-                exec_start: 40.0,
-                exec_end: 50.0,
-                solve_secs: 0.01,
-                queue_depth: 0,
-                stall_secs: 0.01,
-                delta: CacheDelta {
-                    loaded: vec![0],
-                    evicted: vec![],
-                    bytes_loaded: 10,
-                    bytes_evicted: 0,
-                },
-            }],
+            batches: vec![batch_record(0, config_bits, util)],
             end_time: 50.0,
             n_tenants: 2,
             weights: vec![1.0, 1.0],
@@ -370,7 +649,7 @@ mod tests {
     fn merge_unions_configs_and_sorts_outcomes() {
         let a = shard_run(vec![outcome(3, 0, 5.0)], &[true, false], 0.5);
         let b = shard_run(vec![outcome(1, 1, 5.0)], &[false, true], 0.7);
-        let merged = merge_runs(&[a, b], 0.05);
+        let merged = merge_runs(&[a, b], &[vec![10], vec![10]], 1, 0.05);
         assert_eq!(
             merged.outcomes.iter().map(|o| o.id.0).collect::<Vec<_>>(),
             vec![1, 3]
@@ -378,6 +657,7 @@ mod tests {
         let batch = &merged.batches[0];
         assert_eq!(batch.n_queries, 2);
         assert!(batch.config.get(0) && batch.config.get(1));
+        // Equal budgets → plain mean.
         assert!((batch.cache_utilization - 0.6).abs() < 1e-12);
         // Same view scheduled on both shards: listed once, bytes doubled.
         assert_eq!(batch.delta.loaded, vec![0]);
@@ -385,10 +665,54 @@ mod tests {
         assert_eq!(merged.host_wall_secs, 0.05);
     }
 
+    /// Satellite regression (ISSUE 4): merged utilization is weighted by
+    /// the shards' actual budget bytes, not an equal-slice average.
+    #[test]
+    fn merge_weights_utilization_by_budget() {
+        let a = shard_run(vec![outcome(1, 0, 5.0)], &[true, false], 0.5);
+        let b = shard_run(vec![outcome(2, 1, 5.0)], &[false, true], 0.7);
+        let merged = merge_runs(&[a, b], &[vec![10], vec![30]], 1, 0.05);
+        // (0.5·10 + 0.7·30) / 40 = 0.65, not the naive (0.5+0.7)/2 = 0.6.
+        assert!(
+            (merged.batches[0].cache_utilization - 0.65).abs() < 1e-12,
+            "got {}",
+            merged.batches[0].cache_utilization
+        );
+    }
+
+    /// Elastic membership: shards born mid-run contribute only to the
+    /// batches they were alive for.
+    #[test]
+    fn merge_handles_ragged_shard_lifetimes() {
+        let mut a = shard_run(vec![outcome(1, 0, 5.0)], &[true, false], 0.5);
+        a.batches.push(batch_record(1, &[true, false], 0.4));
+        // Shard b joins at batch 1.
+        let b = RunResult {
+            policy: "TEST",
+            outcomes: vec![outcome(2, 1, 5.0)],
+            batches: vec![batch_record(1, &[false, true], 0.8)],
+            end_time: 90.0,
+            n_tenants: 2,
+            weights: vec![1.0, 1.0],
+            host_wall_secs: 0.02,
+        };
+        let merged = merge_runs(&[a, b], &[vec![20, 10], vec![10]], 2, 0.05);
+        assert_eq!(merged.batches.len(), 2);
+        // Batch 0: shard a alone.
+        assert_eq!(merged.batches[0].n_queries, 1);
+        assert!((merged.batches[0].cache_utilization - 0.5).abs() < 1e-12);
+        // Batch 1: both shards, equal budgets → plain mean of 0.4/0.8.
+        assert_eq!(merged.batches[1].n_queries, 2);
+        assert!((merged.batches[1].cache_utilization - 0.6).abs() < 1e-12);
+        assert!(merged.batches[1].config.get(0) && merged.batches[1].config.get(1));
+        assert_eq!(merged.end_time, 90.0);
+    }
+
     #[test]
     fn single_shard_assembles_verbatim() {
         let a = shard_run(vec![outcome(1, 0, 5.0)], &[true, false], 0.5);
-        let result = ClusterResult::assemble(vec![a.clone()], vec![], 0, 0, 9.9);
+        let result =
+            ClusterResult::assemble(vec![a.clone()], vec![vec![10]], vec![], 0, 0, 9.9, 1);
         // The merged run is the shard's run, untouched (including its
         // own host wall — the equivalence guarantee's metric surface).
         assert_eq!(result.run.outcomes.len(), a.outcomes.len());
@@ -416,5 +740,120 @@ mod tests {
             0.5,
         );
         assert!((speedup_spread(&skewed, &base) - 5.0).abs() < 1e-9);
+    }
+
+    /// Satellite regression (ISSUE 4): a tenant active in the baseline
+    /// that attained zero speedup is counted as starved (spread = ∞),
+    /// not silently excluded.
+    #[test]
+    fn speedup_spread_starved_tenant_is_infinite() {
+        let base = shard_run(
+            vec![outcome(1, 0, 10.0), outcome(2, 1, 10.0)],
+            &[true, false],
+            0.5,
+        );
+        // Tenant 1's query never retired in the policy run.
+        let starved = shard_run(vec![outcome(1, 0, 5.0)], &[true, false], 0.5);
+        assert!(speedup_spread(&starved, &base).is_infinite());
+        // A tenant inactive in the baseline too is genuinely excluded:
+        // with only one active tenant left the spread degenerates to 1.
+        let base_single = shard_run(vec![outcome(1, 0, 10.0)], &[true, false], 0.5);
+        let run_single = shard_run(vec![outcome(1, 0, 5.0)], &[true, false], 0.5);
+        assert_eq!(speedup_spread(&run_single, &base_single), 1.0);
+    }
+
+    fn record_with_attainment(index: usize, u: Vec<f64>, star: Vec<f64>) -> ClusterRecord {
+        ClusterRecord {
+            index,
+            multipliers: vec![1.0; u.len()],
+            replicated_views: vec![],
+            rebalanced: false,
+            membership: vec![],
+            decayed_views: vec![],
+            live_shards: 2,
+            shard_budget: 100,
+            warming_shards: vec![],
+            tenant_attained: u,
+            tenant_attainable: star,
+        }
+    }
+
+    /// The transient report's recovery scan: spread spikes at the event
+    /// and the first sliding window back under 1.5× the pre level is
+    /// reported as the recovery lag.
+    #[test]
+    fn transient_recovery_scan() {
+        let even = |i| record_with_attainment(i, vec![4.0, 4.0], vec![4.0, 4.0]);
+        let skewed = |i| record_with_attainment(i, vec![4.0, 1.0], vec![4.0, 4.0]);
+        let mut records = Vec::new();
+        // Batches 0–3 even (pre), 4–5 skewed (the transient), 6–9 even.
+        for i in 0..4 {
+            records.push(even(i));
+        }
+        for i in 4..6 {
+            records.push(skewed(i));
+        }
+        for i in 6..10 {
+            records.push(even(i));
+        }
+        let mut run = shard_run(vec![outcome(1, 0, 5.0), outcome(2, 1, 5.0)], &[true], 0.5);
+        run.batches = (0..10).map(|i| batch_record(i, &[true], 0.5)).collect();
+        let result = ClusterResult {
+            run,
+            per_shard: vec![],
+            per_shard_budgets: vec![],
+            records,
+            replication_bytes: 0,
+            rebalance_churn_bytes: 0,
+        };
+        let t = result.transient(4, 2);
+        // Pre window [2,4) is even → spread 1; during [4,6) is skewed →
+        // spread 4; post [6,8) is even again → spread 1.
+        assert!((t.pre_spread - 1.0).abs() < 1e-9);
+        assert!((t.during_spread - 4.0).abs() < 1e-9);
+        assert!((t.post_spread - 1.0).abs() < 1e-9);
+        // First 2-wide window from the event with spread ≤ 1.5×1.0 is
+        // [6,8) → recovery after 2 batches.
+        assert_eq!(t.recovery_batches, Some(2));
+        // A run that never recovers reports None.
+        let mut bad = result.clone();
+        for r in bad.records.iter_mut().skip(4) {
+            r.tenant_attained = vec![4.0, 1.0];
+        }
+        assert_eq!(bad.transient(4, 2).recovery_batches, None);
+        // An infinite (starved) pre window has no re-convergence target:
+        // None, not a trivial lag-0 match against an ∞ threshold.
+        let mut starved_pre = result.clone();
+        for r in starved_pre.records.iter_mut().take(4).skip(2) {
+            r.tenant_attained = vec![0.0, 4.0];
+        }
+        let t = starved_pre.transient(4, 2);
+        assert!(t.pre_spread.is_infinite());
+        assert_eq!(t.recovery_batches, None);
+    }
+
+    #[test]
+    fn attainment_spread_windows() {
+        let base = shard_run(vec![outcome(1, 0, 5.0), outcome(2, 1, 5.0)], &[true], 0.5);
+        let result = ClusterResult {
+            run: base,
+            per_shard: vec![],
+            per_shard_budgets: vec![],
+            records: vec![
+                record_with_attainment(0, vec![4.0, 1.0], vec![4.0, 4.0]),
+                record_with_attainment(1, vec![4.0, 4.0], vec![4.0, 4.0]),
+                record_with_attainment(2, vec![0.0, 4.0], vec![4.0, 4.0]),
+            ],
+            replication_bytes: 0,
+            rebalance_churn_bytes: 0,
+        };
+        // Batch 0 alone: tenant ratios 1.0 vs 0.25 → spread 4.
+        assert!((result.attainment_spread_window(0, 1) - 4.0).abs() < 1e-9);
+        // Batches 0–1 pooled: 1.0 vs 0.625 → spread 1.6.
+        assert!((result.attainment_spread_window(0, 2) - 1.6).abs() < 1e-9);
+        // Batch 2 alone: tenant 0 demanded but attained nothing → ∞.
+        assert!(result.attainment_spread_window(2, 3).is_infinite());
+        // Empty window: no active tenants → 1.0.
+        assert_eq!(result.attainment_spread_window(5, 5), 1.0);
     }
 }

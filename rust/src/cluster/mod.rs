@@ -1,30 +1,43 @@
 //! Sharded cache federation: multi-shard ROBUS coordinators with
-//! global per-tenant fairness accounting (distinct from the
-//! discrete-event `sim::cluster` executor model, which describes *one*
-//! cluster's hardware).
+//! global per-tenant fairness accounting and **elastic membership**
+//! (distinct from the discrete-event `sim::cluster` executor model,
+//! which describes *one* cluster's hardware).
 //!
-//! The view universe is partitioned across N cache shards
+//! The view universe is partitioned across a live set of cache shards
 //! ([`placement`]); each shard runs the unmodified single-node
 //! planner/executor machinery over the queries routed to it
-//! ([`shard`]); the [`federation`] layer routes, replicates hot views,
-//! rebalances homes by demand, and closes the loop with a
+//! ([`shard`]); the [`federation`] layer routes, replicates hot views
+//! (with replica decay), rebalances homes by demand, applies the
+//! [`membership`] schedule — live shard add (with warm-up accounting),
+//! drain-and-re-home remove, and fault-injection kill, each re-splitting
+//! the cache budget to `total/N'` — and closes the loop with a
 //! [`GlobalAccountant`] that turns cross-shard per-tenant utilities
-//! into per-shard weight boosts — so sharing incentive and envy bounds
-//! hold per tenant across the whole federation, not per shard.
-//! [`metrics`] rolls the shards up into one `RunResult`-compatible view
-//! plus federation-specific figures (fairness spread, replication
-//! bytes, rebalance churn).
+//! into per-shard weight boosts, so sharing incentive and envy bounds
+//! hold per tenant across the whole federation *through* membership
+//! churn, not per shard. [`metrics`] rolls the (possibly ragged) shard
+//! histories up into one `RunResult`-compatible view plus federation-
+//! specific figures (fairness spread, attainment transients around
+//! membership events, replication bytes, rebalance/drain churn).
 //!
 //! Entry points: `robus cluster --shards N [--placement hash|pack]
-//! [--replicate-hot T]` on the CLI,
+//! [--replicate-hot T] [--replica-decay K] [--membership
+//! "add@40,kill@80"]` on the CLI,
 //! [`crate::experiments::runner::run_federated`] programmatically, and
-//! the `cluster_bench` bench target (`BENCH_cluster.json`).
+//! the `cluster_bench` bench target (`BENCH_cluster.json`, including
+//! the elasticity transient figures).
 
 pub mod federation;
+pub mod membership;
 pub mod metrics;
 pub mod placement;
 pub(crate) mod shard;
 
 pub use federation::{FederationConfig, GlobalAccountant, ShardedCoordinator};
-pub use metrics::{speedup_spread, ClusterRecord, ClusterResult, ShardSummary};
+pub use membership::{
+    BatchPoint, MembershipAction, MembershipEvent, MembershipPlan, ResolvedEvent,
+};
+pub use metrics::{
+    speedup_spread, ClusterRecord, ClusterResult, MembershipChange, ShardSummary,
+    TransientReport,
+};
 pub use placement::{Placement, PlacementStrategy};

@@ -1,18 +1,22 @@
 //! View → shard placement for the cache federation.
 //!
-//! The federation partitions the candidate-view universe across N cache
-//! shards; a view's *home* shard is where its queries are routed by
-//! default. Two placers:
+//! The federation partitions the candidate-view universe across a live
+//! set of cache shards; a view's *home* shard is where its queries are
+//! routed by default. Two placers:
 //!
 //! - **consistent hash** (default): each shard contributes `VNODES`
-//!   points to a hash ring; a view lands on the successor of its own
-//!   hash. Adding/removing a shard moves only ~1/N of the views, which
-//!   is what makes incremental resharding cheap at fleet scale.
+//!   points to a hash ring keyed by its (stable) shard id; a view lands
+//!   on the successor of its own hash. Because ring points depend only
+//!   on the shard ids, a membership change moves exactly the views
+//!   whose successor changed: adding a shard steals ~1/N of the views
+//!   (all landing on the joiner), removing one relocates only the
+//!   removed shard's views — which is what makes live add/remove/kill
+//!   cheap at fleet scale ([`Placement::rehome_for_membership`]).
 //! - **greedy bin packing** (size-aware): views in descending weight
 //!   order onto the least-loaded shard. With weights = cached bytes it
 //!   balances capacity; with weights = observed demand it is the
 //!   rebalance placer (`ShardedCoordinator` feeds cumulative demanded
-//!   bytes back through [`Placement::pack_weighted`]).
+//!   bytes back through [`Placement::pack_weighted_for`]).
 //!
 //! Placement is pure routing state: it decides which shard *drains* a
 //! query, not what a shard may cache — a shard's solver may cache any
@@ -54,10 +58,13 @@ impl PlacementStrategy {
     }
 }
 
-/// The home-shard map: view id → shard id.
+/// The home-shard map: view id → shard id, over an explicit live shard
+/// set (ids need not be contiguous once membership changes retire
+/// shards — a shard's id is stable for its whole life).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Placement {
-    n_shards: usize,
+    /// Live shard ids, ascending.
+    shards: Vec<usize>,
     home: Vec<usize>,
 }
 
@@ -69,11 +76,24 @@ impl Placement {
         }
     }
 
-    /// Consistent-hash placement over `n_views` view ids.
+    /// Consistent-hash placement over `n_views` view ids for the
+    /// contiguous shard set `0..n_shards`.
     pub fn hash(n_shards: usize, n_views: usize) -> Self {
-        assert!(n_shards > 0, "placement needs at least one shard");
-        let mut ring: Vec<(u64, usize)> = Vec::with_capacity(n_shards * VNODES);
-        for s in 0..n_shards {
+        let ids: Vec<usize> = (0..n_shards).collect();
+        Self::hash_for(&ids, n_views)
+    }
+
+    /// Consistent-hash placement for an explicit live shard-id set.
+    /// Ring points are a pure function of the shard id, so two
+    /// placements over overlapping shard sets agree everywhere except
+    /// where the membership diff changed a view's ring successor.
+    pub fn hash_for(shard_ids: &[usize], n_views: usize) -> Self {
+        assert!(!shard_ids.is_empty(), "placement needs at least one shard");
+        let mut shards = shard_ids.to_vec();
+        shards.sort_unstable();
+        shards.dedup();
+        let mut ring: Vec<(u64, usize)> = Vec::with_capacity(shards.len() * VNODES);
+        for &s in &shards {
             for r in 0..VNODES {
                 ring.push((mix64(((s as u64) << 16) | r as u64), s));
             }
@@ -86,43 +106,98 @@ impl Placement {
                 ring[idx % ring.len()].1
             })
             .collect();
-        Self { n_shards, home }
+        Self { shards, home }
     }
 
-    /// Greedy bin packing: views in descending `weights` order onto the
-    /// least-loaded shard (ties → lower shard id). `weights` is cached
-    /// bytes for the initial size-aware placement, or observed demanded
-    /// bytes for a rebalance.
+    /// Greedy bin packing over the contiguous shard set `0..n_shards`:
+    /// views in descending `weights` order onto the least-loaded shard
+    /// (ties → lower shard id). `weights` is cached bytes for the
+    /// initial size-aware placement, or observed demanded bytes for a
+    /// rebalance.
     pub fn pack_weighted(n_shards: usize, weights: &[u64]) -> Self {
-        assert!(n_shards > 0, "placement needs at least one shard");
+        let ids: Vec<usize> = (0..n_shards).collect();
+        Self::pack_weighted_for(&ids, weights)
+    }
+
+    /// Greedy bin packing for an explicit live shard-id set.
+    pub fn pack_weighted_for(shard_ids: &[usize], weights: &[u64]) -> Self {
+        assert!(!shard_ids.is_empty(), "placement needs at least one shard");
+        let mut shards = shard_ids.to_vec();
+        shards.sort_unstable();
+        shards.dedup();
         let mut order: Vec<usize> = (0..weights.len()).collect();
         order.sort_by_key(|&v| (Reverse(weights[v]), v));
-        let mut load = vec![0u64; n_shards];
-        let mut home = vec![0usize; weights.len()];
+        let mut load = vec![0u64; shards.len()];
+        let mut home = vec![shards[0]; weights.len()];
         for v in order {
-            let s = (0..n_shards).min_by_key(|&s| (load[s], s)).unwrap();
-            home[v] = s;
+            // Least-loaded shard, ties to the lower id (`shards` is
+            // ascending, so position order is id order).
+            let i = (0..shards.len()).min_by_key(|&i| (load[i], i)).unwrap();
+            home[v] = shards[i];
             // Zero-weight views still occupy a routing slot; count one
-            // byte so they round-robin instead of piling onto shard 0.
-            load[s] += weights[v].max(1);
+            // byte so they round-robin instead of piling onto one shard.
+            load[i] += weights[v].max(1);
         }
-        Self { n_shards, home }
+        Self { shards, home }
+    }
+
+    /// The placement after a membership change to `new_shards`,
+    /// preserving the strategy's structure: `Hash` rebuilds the ring
+    /// over the new shard set (the consistent-hash property: only views
+    /// whose ring successor changed move — ~1/N per single add or
+    /// remove), `Pack` re-packs by `weights`. Note that a hash re-home
+    /// returns to pure ring homes, discarding any interim demand-driven
+    /// rebalance; the next rebalance tick re-applies the demand layout.
+    /// Diff against `self` (e.g. [`Placement::moved_views`]) to account
+    /// the move set.
+    pub fn rehome_for_membership(
+        &self,
+        strategy: PlacementStrategy,
+        new_shards: &[usize],
+        weights: &[u64],
+    ) -> Placement {
+        match strategy {
+            PlacementStrategy::Hash => Self::hash_for(new_shards, self.home.len()),
+            PlacementStrategy::Pack => Self::pack_weighted_for(new_shards, weights),
+        }
+    }
+
+    /// Number of views whose home differs between `self` and `next`.
+    pub fn moved_views(&self, next: &Placement) -> usize {
+        assert_eq!(self.home.len(), next.home.len());
+        self.home
+            .iter()
+            .zip(&next.home)
+            .filter(|(a, b)| a != b)
+            .count()
+    }
+
+    /// Test-only explicit construction from a home map.
+    #[cfg(test)]
+    pub(crate) fn from_home_map(shards: Vec<usize>, home: Vec<usize>) -> Self {
+        debug_assert!(home.iter().all(|s| shards.contains(s)));
+        Self { shards, home }
     }
 
     pub fn n_shards(&self) -> usize {
-        self.n_shards
+        self.shards.len()
+    }
+
+    /// Live shard ids, ascending.
+    pub fn shards(&self) -> &[usize] {
+        &self.shards
     }
 
     pub fn n_views(&self) -> usize {
         self.home.len()
     }
 
-    /// Home shard of `view`.
+    /// Home shard id of `view`.
     pub fn home(&self, view: usize) -> usize {
         self.home[view]
     }
 
-    /// Mask of the views homed on `shard`.
+    /// Mask of the views homed on shard id `shard`.
     pub fn shard_mask(&self, shard: usize) -> ConfigMask {
         let mut mask = ConfigMask::empty(self.home.len());
         for (v, &s) in self.home.iter().enumerate() {
@@ -133,11 +208,13 @@ impl Placement {
         mask
     }
 
-    /// Total `weights` homed per shard (balance diagnostics and tests).
+    /// Total `weights` homed per shard, aligned with [`Placement::shards`]
+    /// (balance diagnostics and tests).
     pub fn shard_load(&self, weights: &[u64]) -> Vec<u64> {
-        let mut load = vec![0u64; self.n_shards];
+        let mut load = vec![0u64; self.shards.len()];
         for (v, &s) in self.home.iter().enumerate() {
-            load[s] += weights[v];
+            let i = self.shards.binary_search(&s).expect("home is a live shard");
+            load[i] += weights[v];
         }
         load
     }
@@ -191,6 +268,62 @@ mod tests {
             "consistent hash moved {moved}/{n_views} views"
         );
         assert!(moved > 0, "a fifth shard must take some views");
+        assert_eq!(a.moved_views(&b), moved);
+    }
+
+    /// The elastic-membership contract (ISSUE 4 satellite): a single
+    /// add or remove via `rehome_for_membership` moves at most 2/N of
+    /// the views, every add-move lands on the joiner, every remove-move
+    /// comes off the victim, and the transition is exactly reversible.
+    #[test]
+    fn rehome_for_membership_moves_bounded_fraction() {
+        let n_views = 1000;
+        for n in [2usize, 4, 8] {
+            let ids: Vec<usize> = (0..n).collect();
+            let a = Placement::hash_for(&ids, n_views);
+
+            // Add shard `n`: only the joiner gains views, bounded by
+            // 2/(N+1) of the universe.
+            let plus: Vec<usize> = (0..=n).collect();
+            let b = a.rehome_for_membership(PlacementStrategy::Hash, &plus, &[]);
+            let moved: Vec<usize> =
+                (0..n_views).filter(|&v| a.home(v) != b.home(v)).collect();
+            assert!(!moved.is_empty(), "a joining shard must take views (n={n})");
+            assert!(
+                moved.iter().all(|&v| b.home(v) == n),
+                "an add may only move views onto the new shard (n={n})"
+            );
+            assert!(
+                moved.len() <= 2 * n_views / (n + 1),
+                "add at n={n} moved {}/{n_views} views (> 2/{})",
+                moved.len(),
+                n + 1
+            );
+
+            // Removing it again restores the original map exactly.
+            let c = b.rehome_for_membership(PlacementStrategy::Hash, &ids, &[]);
+            assert_eq!(c, a, "ring placement is a pure function of the id set");
+
+            // Remove a middle shard from the original set: only the
+            // victim's views relocate, bounded by 2/N.
+            let victim = n / 2;
+            let minus: Vec<usize> = ids.iter().copied().filter(|&s| s != victim).collect();
+            let d = a.rehome_for_membership(PlacementStrategy::Hash, &minus, &[]);
+            let moved2: Vec<usize> =
+                (0..n_views).filter(|&v| a.home(v) != d.home(v)).collect();
+            assert!(
+                moved2.iter().all(|&v| a.home(v) == victim),
+                "a remove may only move the victim's views (n={n})"
+            );
+            assert!(
+                moved2.len() <= 2 * n_views / n,
+                "remove at n={n} moved {}/{n_views} views (> 2/{n})",
+                moved2.len()
+            );
+            assert_eq!(a.moved_views(&d), moved2.len());
+            // Survivor ids are reported ascending and exclude the victim.
+            assert_eq!(d.shards(), &minus[..]);
+        }
     }
 
     #[test]
@@ -216,5 +349,18 @@ mod tests {
         demand[7] = 1_000_000;
         let p = Placement::pack_weighted(2, &demand);
         assert_ne!(p.home(3), p.home(7));
+    }
+
+    #[test]
+    fn pack_for_noncontiguous_ids() {
+        // After a kill the live set can be e.g. {0, 2}: the packer must
+        // spread over exactly those ids.
+        let sizes: Vec<u64> = (1..=10u64).map(|k| k * 10).collect();
+        let p = Placement::pack_weighted_for(&[0, 2], &sizes);
+        assert_eq!(p.shards(), &[0, 2]);
+        assert!((0..10).all(|v| p.home(v) == 0 || p.home(v) == 2));
+        assert!(p.shard_mask(0).count_ones() > 0);
+        assert!(p.shard_mask(2).count_ones() > 0);
+        assert_eq!(p.shard_mask(1).count_ones(), 0);
     }
 }

@@ -9,13 +9,26 @@
 //! and the global fairness accountant around it, nothing inside it —
 //! which is what makes the `--shards 1` run bit-identical to
 //! `Coordinator::run`.
+//!
+//! Elastic membership (PR 4) makes shards constructible mid-run: a
+//! shard is built straight from the shared engine/universe/tenants
+//! handles (no per-shard `Coordinator`), carries its current budget
+//! history (`budgets[i]` is the budget at its i-th executed batch —
+//! the merge weights utilization by it), and a `warmup_until` batch
+//! before which a freshly joined shard's outcomes are excluded from
+//! the global accountant so its cold cache does not read as tenant
+//! starvation.
 
 use std::time::Instant;
 
 use crate::alloc::{ConfigMask, Policy};
-use crate::coordinator::loop_::{BatchExecutor, Coordinator, PlannedBatch, SolveContext};
+use crate::coordinator::loop_::{BatchExecutor, PlannedBatch, SolveContext};
 use crate::domain::query::Query;
+use crate::domain::tenant::TenantSet;
+use crate::domain::view::ViewId;
+use crate::sim::engine::SimEngine;
 use crate::util::rng::Pcg64;
+use crate::workload::universe::Universe;
 
 /// Per-batch, per-shard accounting handed back to the federation's
 /// global fairness accountant.
@@ -26,10 +39,12 @@ pub(crate) struct ShardBatchOutcome {
     pub u_star: Vec<f64>,
 }
 
-/// The mutable state of one shard across the run. All fields are
+/// The mutable state of one shard across its lifetime. All fields are
 /// shard-local, so per-batch shard steps run on independent threads
 /// with no shared mutability.
 pub(crate) struct Shard<'a> {
+    /// Stable shard id — survives membership changes around it; the
+    /// consistent-hash ring and the RNG stream key off it.
     pub id: usize,
     /// Steps 3–5 (cache transition + simulated execution), reused
     /// verbatim from the coordinator loop.
@@ -46,10 +61,17 @@ pub(crate) struct Shard<'a> {
     pub home: ConfigMask,
     /// Hot-view replicas this shard additionally serves. Kept separate
     /// from `home` so a rebalance (which rewrites `home`) never wipes
-    /// replicas — replication stays one-way until an explicit decay.
+    /// replicas; replicas leave only by promotion to home (re-home
+    /// reclassification) or by replica decay.
     pub replicas: ConfigMask,
     /// Queries routed to this shard for the current batch window.
     pub inbox: Vec<Query>,
+    /// First batch index at which the global accountant may observe
+    /// this shard (join batch + warm-up window; 0 for initial shards).
+    pub warmup_until: usize,
+    /// Cache budget at each executed batch, aligned with the executor's
+    /// batch records — the merge's utilization weights.
+    pub budgets: Vec<u64>,
 }
 
 /// The serial coordinator planner's RNG stream selector (see
@@ -57,27 +79,39 @@ pub(crate) struct Shard<'a> {
 const PLANNER_STREAM: u64 = 0x0b5;
 
 impl<'a> Shard<'a> {
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         id: usize,
-        coordinator: &'a Coordinator<'a>,
+        engine: &'a SimEngine,
+        universe: &Universe,
+        tenants: &TenantSet,
         home: ConfigMask,
-        n_views: usize,
         seed: u64,
+        budget: u64,
+        warmup_until: usize,
     ) -> Self {
+        let n_views = universe.views.len();
         Self {
             id,
-            executor: coordinator.executor(),
+            executor: BatchExecutor::build(engine, universe, tenants, budget),
             rng: Pcg64::with_stream(seed, PLANNER_STREAM + id as u64),
             mirror: ConfigMask::empty(n_views),
             home,
             replicas: ConfigMask::empty(n_views),
             inbox: Vec::new(),
+            warmup_until,
+            budgets: Vec::new(),
         }
     }
 
     /// Does this shard serve `view` (home or replica)?
     pub fn is_resident(&self, view: usize) -> bool {
         self.home.get(view) || self.replicas.get(view)
+    }
+
+    /// Is this shard still inside its post-join warm-up at `batch`?
+    pub fn is_warming(&self, batch: usize) -> bool {
+        batch < self.warmup_until
     }
 
     /// Solve and execute one batch window over the routed inbox.
@@ -95,13 +129,34 @@ impl<'a> Shard<'a> {
         let t0 = Instant::now();
         let solved = ctx.solve_accounted(&self.mirror, &queries, policy, &mut self.rng);
         let solve_secs = t0.elapsed().as_secs_f64();
-        self.mirror = solved.config.clone();
+        let mut config = solved.config;
+        // Elastic budget shrink: a *kept* configuration (empty inbox
+        // re-emits the mirror) can exceed a budget that was just
+        // re-split smaller by a shard add. Policies always solve within
+        // the current budget, so this trim only fires on the keep path;
+        // evict largest views first (deterministic) until feasible.
+        // Static runs never shrink budgets, so this is inert there.
+        let size_of = |v: usize| ctx.universe.views.get(ViewId(v)).cached_bytes;
+        let mut bytes: u64 = config.ones().map(size_of).sum();
+        if bytes > ctx.budget {
+            let mut views: Vec<usize> = config.ones().collect();
+            views.sort_by_key(|&v| (std::cmp::Reverse(size_of(v)), v));
+            for v in views {
+                if bytes <= ctx.budget {
+                    break;
+                }
+                config.set(v, false);
+                bytes -= size_of(v);
+            }
+        }
+        self.mirror = config.clone();
+        self.budgets.push(ctx.budget);
         self.executor.execute(
             PlannedBatch {
                 index,
                 window_end,
                 queries,
-                config: solved.config,
+                config,
                 solve_secs,
             },
             0,

@@ -378,6 +378,33 @@ pub struct BatchExecutor<'a> {
     prev_end: f64,
 }
 
+impl<'e> BatchExecutor<'e> {
+    /// Build an executor over `engine`'s cluster slice with an explicit
+    /// cache budget. Single-node drivers pass the engine's own budget
+    /// (see [`Coordinator::executor`]); the elastic federation hands
+    /// each shard its current slice and re-splits it on membership
+    /// changes via [`BatchExecutor::cache_mut`].
+    pub(crate) fn build(
+        engine: &'e SimEngine,
+        universe: &Universe,
+        tenants: &TenantSet,
+        budget: u64,
+    ) -> BatchExecutor<'e> {
+        let sizes: Vec<u64> = universe.views.iter().map(|v| v.cached_bytes).collect();
+        let scan_sizes: Vec<u64> = universe.views.iter().map(|v| v.scan_bytes).collect();
+        BatchExecutor {
+            engine,
+            scan_sizes,
+            weights: tenants.weights(),
+            cache: CacheManager::new(budget, sizes),
+            clock: SimClock::new(),
+            outcomes: Vec::new(),
+            batches: Vec::new(),
+            prev_end: 0.0,
+        }
+    }
+}
+
 impl BatchExecutor<'_> {
     /// Execute one planned batch. `queue_depth`/`stall_secs` are the
     /// pipeline-health observations recorded on the [`BatchRecord`].
@@ -417,6 +444,12 @@ impl BatchExecutor<'_> {
     /// Final cache transition accounting.
     pub fn cache(&self) -> &CacheManager {
         &self.cache
+    }
+
+    /// Mutable cache access for the federation's elastic budget
+    /// re-splits (`CacheManager::set_budget` on membership changes).
+    pub(crate) fn cache_mut(&mut self) -> &mut CacheManager {
+        &mut self.cache
     }
 
     /// Assemble the run result.
@@ -486,29 +519,12 @@ impl<'a> Coordinator<'a> {
     /// The execute half of the loop (shared by serial and pipelined
     /// runs).
     pub(crate) fn executor(&self) -> BatchExecutor<'_> {
-        let budget = self.engine.config.cache_budget;
-        let sizes: Vec<u64> = self
-            .universe
-            .views
-            .iter()
-            .map(|v| v.cached_bytes)
-            .collect();
-        let scan_sizes: Vec<u64> = self
-            .universe
-            .views
-            .iter()
-            .map(|v| v.scan_bytes)
-            .collect();
-        BatchExecutor {
-            engine: &self.engine,
-            scan_sizes,
-            weights: self.tenants.weights(),
-            cache: CacheManager::new(budget, sizes),
-            clock: SimClock::new(),
-            outcomes: Vec::new(),
-            batches: Vec::new(),
-            prev_end: 0.0,
-        }
+        BatchExecutor::build(
+            &self.engine,
+            self.universe,
+            &self.tenants,
+            self.engine.config.cache_budget,
+        )
     }
 
     /// Run the full loop with `policy` over a fresh workload from

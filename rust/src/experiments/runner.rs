@@ -183,7 +183,10 @@ pub fn run_with_policies_pipelined(
 /// Run one setup through the sharded federation (`cluster::`): same
 /// workload and policy seeds as the single-node runners, so a 1-shard
 /// federation is bit-identical to [`Coordinator::run`] and multi-shard
-/// runs are directly comparable to the serial baseline.
+/// runs are directly comparable to the serial baseline. The federation
+/// config may carry an elastic [`crate::cluster::MembershipPlan`];
+/// validate it against the setup with [`validate_membership`] first —
+/// an invalid schedule panics inside the run.
 pub fn run_federated(
     setup: &ExperimentSetup,
     fed: &FederationConfig,
@@ -193,6 +196,19 @@ pub fn run_federated(
     let coordinator = ShardedCoordinator::new(&universe, tenants, engine, config, fed.clone());
     let mut gen = WorkloadGenerator::new(setup.tenant_specs.clone(), &universe, setup.seed);
     coordinator.run(&mut gen, policy)
+}
+
+/// Resolve a federation config's membership plan against a setup's
+/// batch count (the CLI/bench front door): surfaces schedule errors —
+/// events past the run, dead targets, dropping below one live shard —
+/// as `Err` instead of a panic inside [`run_federated`].
+pub fn validate_membership(
+    setup: &ExperimentSetup,
+    fed: &FederationConfig,
+) -> Result<(), String> {
+    fed.membership
+        .resolve(fed.n_shards, setup.n_batches)
+        .map(|_| ())
 }
 
 /// Run with the default §5.3 policy set (policies fanned across threads).

@@ -74,7 +74,10 @@ fn main() {
                         OptSpec { name: "shards", help: "cluster: number of cache shards", default: Some("4") },
                         OptSpec { name: "placement", help: "cluster: view placement, hash|pack", default: Some("hash") },
                         OptSpec { name: "replicate-hot", help: "cluster: replicate views above this demand fraction", default: None },
+                        OptSpec { name: "replica-decay", help: "cluster: evict replicas below the threshold for K batches", default: None },
                         OptSpec { name: "rebalance-every", help: "cluster: re-home views by demand every K batches", default: None },
+                        OptSpec { name: "membership", help: "cluster: elastic plan, e.g. \"add@40,kill@80\" (batch or 'mid')", default: None },
+                        OptSpec { name: "warmup", help: "cluster: accountant warm-up batches for added shards", default: Some("2") },
                         OptSpec { name: "setup", help: "cluster: §5.3 workload, sales-g1..sales-g4", default: Some("sales-g2") },
                     ],
                 )
@@ -213,8 +216,10 @@ fn cmd_serve(args: &Args) -> Result<i32, String> {
 }
 
 fn cmd_cluster(args: &Args) -> Result<i32, String> {
-    use robus::cluster::{FederationConfig, PlacementStrategy};
-    use robus::experiments::runner::{run_federated, run_with_policies_serial};
+    use robus::cluster::{FederationConfig, MembershipPlan, PlacementStrategy};
+    use robus::experiments::runner::{
+        run_federated, run_with_policies_serial, validate_membership,
+    };
 
     let policy_name = args.opt_or("policy", "FASTPF");
     let Some(kind) = PolicyKind::parse(policy_name) else {
@@ -233,17 +238,39 @@ fn cmd_cluster(args: &Args) -> Result<i32, String> {
             format!("--replicate-hot expects a fraction, got '{s}'")
         })?),
     };
+    let replica_decay = match args.opt("replica-decay") {
+        None => None,
+        Some(s) => Some(s.parse::<usize>().map_err(|_| {
+            format!("--replica-decay expects an integer, got '{s}'")
+        })?),
+    };
+    // Decay ages out replicas created by replication; without a
+    // threshold there is nothing to decay — reject rather than letting
+    // the flag be silently inert.
+    if replica_decay.is_some() && replicate_hot.is_none() {
+        return Err(
+            "--replica-decay requires --replicate-hot (decay ages out hot-view replicas)"
+                .to_string(),
+        );
+    }
     let rebalance_every = match args.opt("rebalance-every") {
         None => None,
         Some(s) => Some(s.parse::<usize>().map_err(|_| {
             format!("--rebalance-every expects an integer, got '{s}'")
         })?),
     };
+    let membership = match args.opt("membership") {
+        None => MembershipPlan::empty(),
+        Some(s) => MembershipPlan::parse(s).map_err(|e| format!("--membership: {e}"))?,
+    };
     let fed = FederationConfig {
         n_shards,
         placement,
         replicate_hot,
         rebalance_every,
+        membership,
+        replica_decay,
+        warmup_batches: args.opt_usize("warmup", 2)?,
         ..FederationConfig::default()
     };
 
@@ -259,15 +286,23 @@ fn cmd_cluster(args: &Args) -> Result<i32, String> {
     if args.flag("quick") {
         setup.n_batches = setup.n_batches.min(6);
     }
+    // Surface impossible schedules (past-the-run events, dead targets,
+    // dropping below one shard) before any work happens.
+    validate_membership(&setup, &fed).map_err(|e| format!("--membership: {e}"))?;
 
     println!(
-        "robus cluster: {} shards ({} placement), {} on {}, {} batches, seed {}",
+        "robus cluster: {} shards ({} placement), {} on {}, {} batches, seed {}{}",
         fed.n_shards,
         fed.placement.name(),
         kind.name(),
         setup.name,
         setup.n_batches,
         setup.seed,
+        if fed.membership.is_empty() {
+            String::new()
+        } else {
+            format!(", membership {} events", fed.membership.events.len())
+        },
     );
 
     // STATIC single-node serial run = the Eq. 5 speedup baseline.
@@ -275,6 +310,28 @@ fn cmd_cluster(args: &Args) -> Result<i32, String> {
     let policy = kind.build();
     let result = run_federated(&setup, &fed, policy.as_ref());
     print!("{}", result.render(Some(&baseline.runs[0])));
+
+    // Elasticity transients: spread/throughput before, during, and
+    // after each membership event, and how long the fairness spread
+    // took to re-converge to ≤1.5× its pre-event level.
+    let window = (setup.n_batches / 6).clamp(2, 5);
+    for (b, change) in result.membership_events() {
+        let t = result.transient(b, window);
+        println!(
+            "transient {}@{b}: spread {:.3} → {:.3} → {:.3}, q/batch {:.1} → {:.1} → {:.1}, {}",
+            change.action.name(),
+            t.pre_spread,
+            t.during_spread,
+            t.post_spread,
+            t.pre_queries_per_batch,
+            t.during_queries_per_batch,
+            t.post_queries_per_batch,
+            match t.recovery_batches {
+                Some(d) => format!("re-converged after {d} batches"),
+                None => "did not re-converge in-run".to_string(),
+            },
+        );
+    }
 
     // Single-node same-policy reference for the scale-out comparison.
     let single = run_with_policies_serial(&setup, &[kind.build()]);

@@ -165,6 +165,51 @@ mod tests {
         assert_eq!(percentile(&ys, 50.0), 3.0);
     }
 
+    /// Edge cases the federation's membership-transient metrics rely on
+    /// (ISSUE 4 satellite): single-sample percentiles, exact p=0/p=100
+    /// endpoints, and a NaN-free guarantee under the OrdF64 sort.
+    #[test]
+    fn percentile_single_sample_any_p() {
+        for p in [0.0, 1.0, 37.5, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile(&[4.25], p), 4.25, "p={p}");
+        }
+    }
+
+    #[test]
+    fn percentile_endpoints_are_exact() {
+        // p=0 and p=100 land on integer ranks: the exact min/max with
+        // no interpolation drift, even on unsorted negative data.
+        let xs = [7.3, -2.5, 0.0, 19.75, 4.5];
+        assert_eq!(percentile(&xs, 0.0), -2.5);
+        assert_eq!(percentile(&xs, 100.0), 19.75);
+        let dup = [3.0, 3.0, 3.0];
+        assert_eq!(percentile(&dup, 0.0), 3.0);
+        assert_eq!(percentile(&dup, 100.0), 3.0);
+    }
+
+    #[test]
+    fn percentile_never_nan_on_finite_inputs() {
+        let datasets: [&[f64]; 4] = [
+            &[1.0],
+            &[0.0, -0.0, 0.0],
+            &[5.0, -3.5, 5.0, 0.25, 1e12, -1e12],
+            &[2.0, 2.0, 4.0, 8.0, 8.0, 8.0, 16.0],
+        ];
+        for xs in datasets {
+            let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+            let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            for p10 in 0..=1000 {
+                let p = p10 as f64 / 10.0;
+                let v = percentile(xs, p);
+                assert!(v.is_finite(), "percentile({xs:?}, {p}) = {v}");
+                assert!(
+                    (lo..=hi).contains(&v),
+                    "percentile({xs:?}, {p}) = {v} outside [{lo}, {hi}]"
+                );
+            }
+        }
+    }
+
     #[test]
     fn jain_index_extremes() {
         assert!((jain_index(&[3.0, 3.0, 3.0, 3.0]) - 1.0).abs() < 1e-12);

@@ -64,7 +64,7 @@ fn assert_shards1_identical(setup: &ExperimentSetup, kind: PolicyKind) {
     assert_eq!(serial.avg_cache_utilization(), run.avg_cache_utilization());
     // The federation layer must be inert at one shard.
     assert_eq!(cluster.replication_bytes, 0);
-    assert_eq!(cluster.rebalance_churn, 0);
+    assert_eq!(cluster.rebalance_churn_bytes, 0);
     assert!(cluster
         .records
         .iter()
