@@ -341,7 +341,7 @@ impl<'a> ShardedCoordinator<'a> {
                         let moved = apply_placement(
                             &mut placement,
                             next,
-                            &mut shards,
+                            shards.iter_mut(),
                             &cached_sizes,
                             &mut rebalance_churn_bytes,
                             &mut replication_bytes,
@@ -398,7 +398,7 @@ impl<'a> ShardedCoordinator<'a> {
                         let moved = apply_placement(
                             &mut placement,
                             next,
-                            &mut shards,
+                            shards.iter_mut(),
                             &cached_sizes,
                             &mut rebalance_churn_bytes,
                             &mut replication_bytes,
@@ -497,7 +497,7 @@ impl<'a> ShardedCoordinator<'a> {
                             apply_placement(
                                 &mut placement,
                                 next,
-                                &mut shards,
+                                shards.iter_mut(),
                                 &cached_sizes,
                                 &mut rebalance_churn_bytes,
                                 &mut replication_bytes,
@@ -637,15 +637,16 @@ impl<'a> ShardedCoordinator<'a> {
 }
 
 /// Swap the federation onto a new placement — the one place every
-/// re-home (membership add/remove/kill and demand rebalance) goes
+/// re-home (membership add/remove/kill and demand rebalance, scheduled
+/// or reactive — `cluster::serving` routes through here too) goes
 /// through: diff the old→new maps, re-home every live shard (charging
 /// previewed eviction churn), credit promoted-replica bytes back
 /// against the replication ledger, and install the new map. Returns
 /// the number of views whose home moved.
-fn apply_placement(
+pub(crate) fn apply_placement<'a, 'e: 'a>(
     placement: &mut Placement,
     next: Placement,
-    shards: &mut [Shard<'_>],
+    shards: impl Iterator<Item = &'a mut Shard<'e>>,
     cached_sizes: &[u64],
     churn: &mut u64,
     replication_bytes: &mut u64,
@@ -665,14 +666,14 @@ fn apply_placement(
 /// out at the next solve; the preview quantifies the churn the re-home
 /// causes). Replicas the new placement does *not* home stay in place —
 /// replication is one-way until promotion or decay.
-fn rehome(
-    shards: &mut [Shard<'_>],
+pub(crate) fn rehome<'a, 'e: 'a>(
+    shards: impl Iterator<Item = &'a mut Shard<'e>>,
     next: &Placement,
     cached_sizes: &[u64],
     churn: &mut u64,
 ) -> u64 {
     let mut reclaimed = 0u64;
-    for sh in shards.iter_mut() {
+    for sh in shards {
         let new_home = next.shard_mask(sh.id);
         for v in new_home.ones() {
             if sh.replicas.get(v) {
@@ -726,22 +727,26 @@ fn decay_due(
     due
 }
 
-/// Route one query: prefer live shards holding every required view
-/// (several holders → deterministic spread by query id), else the home
-/// shard of the query's largest required view. Returns an index into
-/// the live `shards` slice.
-fn route(
-    shards: &[Shard<'_>],
-    placement: &Placement,
-    id_to_idx: &[usize],
+/// The one routing policy both federation front-ends share — the
+/// replay loop (per-batch routing over materialized [`Shard`]s, via
+/// [`route`]) and the serving layer (admission-time routing over the
+/// `ServeRouter`'s masks): prefer live shards serving every required
+/// view (several holders → deterministic spread by query id), else the
+/// home shard of the query's largest required view. `is_resident(i,
+/// v)` asks whether live shard *index* `i` serves view `v` (home or
+/// replica); `home_idx(v)` maps a view to its home shard's live index.
+/// The `--shards 1` serve equivalence and the drain-conservation
+/// contract both rely on the two call sites never diverging — which is
+/// why there is exactly one implementation.
+pub(crate) fn route_query(
+    n_live: usize,
+    is_resident: impl Fn(usize, usize) -> bool,
+    home_idx: impl Fn(usize) -> usize,
     cached_sizes: &[u64],
     q: &Query,
 ) -> usize {
-    let holders: Vec<usize> = shards
-        .iter()
-        .enumerate()
-        .filter(|(_, sh)| q.required_views.iter().all(|v| sh.is_resident(v.0)))
-        .map(|(i, _)| i)
+    let holders: Vec<usize> = (0..n_live)
+        .filter(|&i| q.required_views.iter().all(|v| is_resident(i, v.0)))
         .collect();
     match holders.len() {
         0 => q
@@ -749,11 +754,29 @@ fn route(
             .iter()
             .map(|v| v.0)
             .max_by_key(|&v| (cached_sizes[v], std::cmp::Reverse(v)))
-            .map(|v| id_to_idx[placement.home(v)])
+            .map(home_idx)
             .unwrap_or(0),
         1 => holders[0],
         n => holders[(mix64(q.id.0) % n as u64) as usize],
     }
+}
+
+/// Route one query of the replay federation. Returns an index into the
+/// live `shards` slice.
+fn route(
+    shards: &[Shard<'_>],
+    placement: &Placement,
+    id_to_idx: &[usize],
+    cached_sizes: &[u64],
+    q: &Query,
+) -> usize {
+    route_query(
+        shards.len(),
+        |i, v| shards[i].is_resident(v),
+        |v| id_to_idx[placement.home(v)],
+        cached_sizes,
+        q,
+    )
 }
 
 #[cfg(test)]
@@ -834,7 +857,7 @@ mod tests {
         home[v] = 1;
         let next = Placement::from_home_map(vec![0, 1], home);
         let mut churn = 0u64;
-        let reclaimed = rehome(&mut shards, &next, &cached_sizes, &mut churn);
+        let reclaimed = rehome(shards.iter_mut(), &next, &cached_sizes, &mut churn);
         assert_eq!(reclaimed, cached_sizes[v], "promotion must credit the charge");
         assert!(!shards[1].replicas.get(v), "promoted replica bit cleared");
         assert!(shards[1].home.get(v), "view is now home on its holder");

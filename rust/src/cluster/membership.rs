@@ -227,6 +227,116 @@ impl MembershipPlan {
     }
 }
 
+/// Reactive membership (`robus serve --membership auto[:lo,hi]`): the
+/// closed-loop counterpart of the scheduled [`MembershipPlan`]. Instead
+/// of firing at pre-written batch indices, the federated serving layer
+/// watches sustained per-shard admission load over a sliding window and
+/// *derives* the events — auto-add a shard when the hottest shard's
+/// load stays above `hi_qps`, auto-drain the idlest when its load stays
+/// below `lo_qps` — reusing the same drain→re-home→warm-up machinery
+/// the scheduled plan drives (see `cluster::serving`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AutoMembership {
+    /// Drain trigger: a shard whose admitted load stays below this
+    /// (queries/sec) for a full window is idle.
+    pub lo_qps: f64,
+    /// Add trigger: when the hottest shard's admitted load stays above
+    /// this (queries/sec) for a full window, the federation grows.
+    pub hi_qps: f64,
+    /// Sliding-window length in batches a signal must be sustained for.
+    pub window: usize,
+    /// Batches after any membership event before the next may fire
+    /// (lets the re-home and warm-up settle instead of thrashing).
+    pub cooldown: usize,
+}
+
+impl AutoMembership {
+    /// Default sustained-signal window (batches).
+    pub const DEFAULT_WINDOW: usize = 4;
+
+    /// Parse the serve-mode membership argument: `auto` (bounds derived
+    /// from the configured arrival rate at resolve time) or
+    /// `auto:lo,hi` with explicit queries/sec bounds. Scheduled plans
+    /// (`add@40,...`) are rejected here — they belong to `robus
+    /// cluster`, whose batch indices mean trace-replay batches, not
+    /// wall-clock windows.
+    pub fn parse(s: &str) -> Result<AutoMembershipSpec, String> {
+        let s = s.trim().to_ascii_lowercase();
+        let s = s.as_str();
+        if s == "auto" {
+            return Ok(AutoMembershipSpec {
+                lo_qps: None,
+                hi_qps: None,
+            });
+        }
+        if let Some(bounds) = s.strip_prefix("auto:") {
+            let (lo, hi) = bounds.split_once(',').ok_or_else(|| {
+                format!("'auto:{bounds}' needs two bounds: auto:lo,hi (queries/sec)")
+            })?;
+            let parse = |v: &str, which: &str| -> Result<f64, String> {
+                v.trim()
+                    .parse::<f64>()
+                    .map_err(|_| format!("bad {which} bound '{}' (queries/sec)", v.trim()))
+            };
+            return Ok(AutoMembershipSpec {
+                lo_qps: Some(parse(lo, "lo")?),
+                hi_qps: Some(parse(hi, "hi")?),
+            });
+        }
+        Err(format!(
+            "serve supports reactive membership only: 'auto' or 'auto:lo,hi' \
+             (got '{s}'; batch-scheduled plans like 'add@40' belong to robus cluster)"
+        ))
+    }
+}
+
+/// A parsed-but-unresolved `--membership auto[:lo,hi]`: bounds may
+/// still be deferred to the configured arrival rate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AutoMembershipSpec {
+    pub lo_qps: Option<f64>,
+    pub hi_qps: Option<f64>,
+}
+
+impl AutoMembershipSpec {
+    /// Fill defaulted bounds from the serve config and validate. The
+    /// defaults bracket the initial fair share `rate / n_shards`: add
+    /// above 2× (sustained overload even if traffic were spread
+    /// evenly), drain below ¼× (a shard earning well under its share).
+    /// Validation — both bounds positive, `lo < hi` — applies to
+    /// explicit bounds too, so `auto:200,100` and `auto:0,0` are
+    /// errors, not silent no-ops.
+    pub fn resolve(
+        &self,
+        rate_per_sec: f64,
+        n_shards: usize,
+    ) -> Result<AutoMembership, String> {
+        let fair = rate_per_sec / n_shards.max(1) as f64;
+        let hi = self.hi_qps.unwrap_or(2.0 * fair);
+        let lo = self.lo_qps.unwrap_or(0.25 * fair);
+        if lo <= 0.0 || hi <= 0.0 || lo.is_nan() || hi.is_nan() {
+            return Err(format!(
+                "auto bounds must be positive queries/sec (got lo={lo}, hi={hi})"
+            ));
+        }
+        if lo >= hi {
+            return Err(format!(
+                "auto bounds must satisfy lo < hi (got lo={lo}, hi={hi})"
+            ));
+        }
+        Ok(AutoMembership {
+            lo_qps: lo,
+            hi_qps: hi,
+            window: Self::default_window(),
+            cooldown: Self::default_window(),
+        })
+    }
+
+    fn default_window() -> usize {
+        AutoMembership::DEFAULT_WINDOW
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -307,5 +417,52 @@ mod tests {
         // A kill then an add keeping ≥1 alive is fine.
         let p = MembershipPlan::parse("kill@1,add@2").unwrap();
         assert!(p.resolve(2, 10).is_ok());
+    }
+
+    #[test]
+    fn auto_parse_forms() {
+        let spec = AutoMembership::parse("auto").unwrap();
+        assert_eq!(spec.lo_qps, None);
+        assert_eq!(spec.hi_qps, None);
+        let spec = AutoMembership::parse("auto:50,400").unwrap();
+        assert_eq!(spec.lo_qps, Some(50.0));
+        assert_eq!(spec.hi_qps, Some(400.0));
+        // Whitespace and case are tolerated.
+        let spec = AutoMembership::parse(" AUTO:12.5, 80 ").unwrap();
+        assert_eq!(spec.lo_qps, Some(12.5));
+        assert_eq!(spec.hi_qps, Some(80.0));
+        // Scheduled plans are cluster-mode syntax, not serve-mode.
+        assert!(AutoMembership::parse("add@40").is_err());
+        assert!(AutoMembership::parse("auto:100").is_err());
+        assert!(AutoMembership::parse("auto:a,b").is_err());
+    }
+
+    #[test]
+    fn auto_resolve_defaults_bracket_fair_share() {
+        let auto = AutoMembership::parse("auto")
+            .unwrap()
+            .resolve(1000.0, 4)
+            .unwrap();
+        // Fair share 250 q/s: add above 2×, drain below ¼×.
+        assert!((auto.hi_qps - 500.0).abs() < 1e-9);
+        assert!((auto.lo_qps - 62.5).abs() < 1e-9);
+        assert_eq!(auto.window, AutoMembership::DEFAULT_WINDOW);
+        assert!(auto.cooldown >= 1);
+    }
+
+    /// Satellite (ISSUE 5): `--membership auto` bounds are validated —
+    /// lo < hi and both positive — instead of silently misbehaving.
+    #[test]
+    fn auto_resolve_rejects_bad_bounds() {
+        let bad = |s: &str| AutoMembership::parse(s).unwrap().resolve(1000.0, 2);
+        assert!(bad("auto:200,100").is_err(), "lo >= hi must be rejected");
+        assert!(bad("auto:100,100").is_err());
+        assert!(bad("auto:0,100").is_err(), "lo must be positive");
+        assert!(bad("auto:-5,100").is_err());
+        assert!(bad("auto:10,-1").is_err());
+        // Explicit good bounds pass through untouched.
+        let auto = bad("auto:10,900").unwrap();
+        assert_eq!(auto.lo_qps, 10.0);
+        assert_eq!(auto.hi_qps, 900.0);
     }
 }

@@ -19,25 +19,38 @@
 //! specific figures (fairness spread, attainment transients around
 //! membership events, replication bytes, rebalance/drain churn).
 //!
+//! The [`serving`] layer wires the same federation into the real-time
+//! admission path (`robus serve --shards N --membership auto[:lo,hi]`):
+//! per-shard admission queues, live routing at arrival time, wall-clock
+//! batch cuts, and *reactive* membership driven by sustained per-shard
+//! load instead of a batch-index schedule — see DESIGN.md §2e.
+//!
 //! Entry points: `robus cluster --shards N [--placement hash|pack]
 //! [--replicate-hot T] [--replica-decay K] [--membership
-//! "add@40,kill@80"]` on the CLI,
-//! [`crate::experiments::runner::run_federated`] programmatically, and
-//! the `cluster_bench` bench target (`BENCH_cluster.json`, including
+//! "add@40,kill@80"]` and `robus serve --shards N [--membership
+//! auto[:lo,hi]]` on the CLI,
+//! [`crate::experiments::runner::run_federated`] /
+//! [`serving::serve_federated`] programmatically, and the
+//! `cluster_bench` bench target (`BENCH_cluster.json`, including
 //! the elasticity transient figures).
 
 pub mod federation;
 pub mod membership;
 pub mod metrics;
 pub mod placement;
+pub mod serving;
 pub(crate) mod shard;
 
 pub use federation::{FederationConfig, GlobalAccountant, ShardedCoordinator};
 pub use membership::{
-    BatchPoint, MembershipAction, MembershipEvent, MembershipPlan, ResolvedEvent,
+    AutoMembership, AutoMembershipSpec, BatchPoint, MembershipAction, MembershipEvent,
+    MembershipPlan, ResolvedEvent,
 };
 pub use metrics::{
     speedup_spread, ClusterRecord, ClusterResult, MembershipChange, ShardSummary,
     TransientReport,
 };
 pub use placement::{Placement, PlacementStrategy};
+pub use serving::{
+    serve_federated, serve_federated_sim, FederatedServeReport, ServeFederationConfig,
+};

@@ -10,15 +10,24 @@
 //! simulated cluster. Execution is simulated (free in host time), so the
 //! host-side critical path is exactly what the paper's §5.4 claim is
 //! about: admission plus the per-batch solve.
+//!
+//! The loop itself is written against the [`Clock`] trait: [`serve`]
+//! paces it with the real-time driver and producer threads, while
+//! [`serve_sim`] drives the *same* loop deterministically on a
+//! [`SimClock`] with inline arrival generation — the reference the
+//! federated serving layer's `--shards 1` equivalence is pinned
+//! against (`cluster::serving`, `rust/tests/federated_serving.rs`).
 
 use std::time::Instant;
 
 use crate::alloc::Policy;
-use crate::coordinator::loop_::{Coordinator, CoordinatorConfig, PlannedBatch, SolveContext};
+use crate::coordinator::loop_::{
+    BatchExecutor, Coordinator, CoordinatorConfig, PlannedBatch, RunResult, SolveContext,
+};
 use crate::domain::query::Query;
 use crate::domain::tenant::{TenantId, TenantSet};
 use crate::sim::engine::SimEngine;
-use crate::util::event::{Clock, RealTimeClock};
+use crate::util::event::{Clock, RealTimeClock, SimClock};
 use crate::util::ordf64::OrdF64;
 use crate::util::rng::{mix64, Pcg64};
 use crate::util::stats;
@@ -161,6 +170,168 @@ impl ServeReport {
     }
 }
 
+/// Accounting the service loop accumulates alongside the executor's
+/// own run records.
+#[derive(Debug, Default, Clone, Copy)]
+pub(crate) struct ServeLoopStats {
+    /// Σ over cut queries of (cut time − arrival).
+    pub admit_wait_sum: f64,
+    /// Clock time at which the last non-empty batch was cut — the
+    /// active serving window the throughput figure is measured over
+    /// (excludes the shutdown drain tail).
+    pub served_until: f64,
+}
+
+/// The single-executor service loop shared by both drivers: cut →
+/// solve → transition → execute every `batch_secs` on `clock`'s axis
+/// until `pump` reports production closed and a cut comes up empty.
+///
+/// `pump(clock, now)` advances the arrival side up to `now` and returns
+/// whether production has ended: the real-time driver's producers run
+/// on their own threads, so its pump only checks for closed queues; the
+/// deterministic sim driver generates and offers arrivals inline.
+#[allow(clippy::too_many_arguments)]
+fn service_loop<C: Clock>(
+    clock: &mut C,
+    queues: &[AdmissionQueue],
+    executor: &mut BatchExecutor<'_>,
+    solve_ctx: &SolveContext<'_>,
+    policy: &dyn Policy,
+    rng: &mut Pcg64,
+    cfg: &ServeConfig,
+    mut pump: impl FnMut(&mut C, f64) -> bool,
+) -> ServeLoopStats {
+    let mut stats = ServeLoopStats::default();
+    let mut batch_idx = 0usize;
+    let mut last_report = 0u64;
+    let mut completed_live = 0u64;
+    loop {
+        let window_end = (batch_idx + 1) as f64 * cfg.batch_secs;
+        let now = clock.wait_until(window_end);
+        let all_closed = pump(clock, now);
+
+        // Step 1: cut the batch across all tenant queues.
+        let mut queries: Vec<Query> = queues.iter().flat_map(|q| q.drain()).collect();
+        queries.sort_by_key(|q| OrdF64(q.arrival));
+        for q in &queries {
+            stats.admit_wait_sum += (now - q.arrival).max(0.0);
+        }
+        let n_cut = queries.len();
+
+        // Step 2: the shared solve (host critical path), boosted
+        // from the executor's live cache contents.
+        let t0 = Instant::now();
+        let config = solve_ctx.solve(executor.cache().cached(), &queries, policy, rng);
+        let solve_secs = t0.elapsed().as_secs_f64();
+
+        // Steps 3–5: the loop's executor (incremental cache
+        // transition + simulated execution; free in host time).
+        // `queue_depth` records arrivals already waiting for the
+        // *next* cut; in serve mode the solve is the stall.
+        let backlog: usize = queues.iter().map(|q| q.len()).sum();
+        executor.execute(
+            PlannedBatch {
+                index: batch_idx,
+                window_end,
+                queries,
+                config,
+                solve_secs,
+            },
+            backlog,
+            solve_secs,
+        );
+        completed_live += n_cut as u64;
+        batch_idx += 1;
+        if n_cut > 0 {
+            stats.served_until = now;
+        }
+
+        // Live metrics line, once per second — real-time driver only
+        // (a jumping clock would print once per simulated batch).
+        if cfg.verbose && clock.is_real_time() && now as u64 > last_report {
+            last_report = now as u64;
+            let (adm, rej) = queue_counts(queues);
+            println!(
+                "[t={now:6.2}s] admitted={adm} rejected={rej} completed={completed_live} \
+                 last_batch={n_cut} solve={:.1}ms",
+                solve_secs * 1e3
+            );
+        }
+
+        // Done once producers have closed and nothing was left to
+        // drain this round.
+        if all_closed && n_cut == 0 {
+            break;
+        }
+    }
+    stats
+}
+
+/// Fold per-queue admission counters and the executor's run into the
+/// service report. Shared by the single-node drivers here and the
+/// federated serving layer (`cluster::serving`), so every serve mode
+/// reports the same metric surface.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn assemble_report(
+    run: &RunResult,
+    admitted: u64,
+    rejected: u64,
+    peak_queue_depth: usize,
+    stats: ServeLoopStats,
+    elapsed_secs: f64,
+    tenants: &TenantSet,
+    n_tenants: usize,
+) -> ServeReport {
+    let completed = run.outcomes.len() as u64;
+    let mut per_tenant_completed = vec![0u64; n_tenants];
+    for o in &run.outcomes {
+        per_tenant_completed[o.tenant] += 1;
+    }
+    let normalized: Vec<f64> = per_tenant_completed
+        .iter()
+        .zip(&tenants.weights())
+        .map(|(&c, w)| c as f64 / w.max(1e-12))
+        .collect();
+
+    ServeReport {
+        elapsed_secs,
+        batches: run.batches.len(),
+        admitted,
+        rejected,
+        completed,
+        queries_per_sec: if stats.served_until > 0.0 {
+            completed as f64 / stats.served_until
+        } else {
+            0.0
+        },
+        solve_ms_p50: run.solve_ms_percentile(50.0),
+        solve_ms_p99: run.solve_ms_percentile(99.0),
+        mean_admit_wait_ms: if completed > 0 {
+            1e3 * stats.admit_wait_sum / completed as f64
+        } else {
+            0.0
+        },
+        max_batch: run.batches.iter().map(|b| b.n_queries).max().unwrap_or(0),
+        peak_queue_depth,
+        hit_ratio: run.hit_ratio(),
+        avg_cache_utilization: run.avg_cache_utilization(),
+        per_tenant_completed,
+        throughput_fairness: stats::jain_index(&normalized),
+    }
+}
+
+/// Total `(admitted, rejected)` across a set of admission queues — the
+/// one counter fold every serve driver (single-node and federated)
+/// reports from.
+pub(crate) fn queue_counts<'a>(
+    queues: impl IntoIterator<Item = &'a AdmissionQueue>,
+) -> (u64, u64) {
+    queues.into_iter().fold((0u64, 0u64), |(a, r), q| {
+        let (qa, qr) = q.counts();
+        (a + qa, r + qr)
+    })
+}
+
 /// Run the online coordinator service: generator threads feed the
 /// admission queues while the calling thread runs the batch loop on a
 /// real-time clock. Returns when the duration has elapsed and all
@@ -201,14 +372,9 @@ pub fn serve(
         weight_mult: None,
     };
     let mut rng = Pcg64::with_stream(cfg.seed, 0x0b5);
-    let mut admit_wait_sum = 0.0;
-    // Wall-clock time at which the last non-empty batch was cut — the
-    // active serving window the throughput figure is measured over
-    // (excludes the shutdown drain tail).
-    let mut served_until = 0.0f64;
     let t_start = Instant::now();
 
-    std::thread::scope(|scope| {
+    let stats = std::thread::scope(|scope| {
         // Producers: one real-time Poisson generator per tenant, each
         // seeded explicitly from `--seed` (see ServeConfig::tenant_seed).
         for (i, queue) in queues.iter().enumerate() {
@@ -234,117 +400,132 @@ pub fn serve(
             });
         }
 
-        // The service loop (this thread): cut → solve → transition →
-        // execute, paced by the real-time clock.
+        // The service loop (this thread): the arrival side runs on the
+        // producer threads, so the pump only checks for closed queues.
         let mut clk = clock.handle();
-        let mut batch_idx = 0usize;
-        let mut last_report = 0u64;
-        let mut completed_live = 0u64;
-        loop {
-            let window_end = (batch_idx + 1) as f64 * cfg.batch_secs;
-            let now = clk.wait_until(window_end);
-            let all_closed = queues.iter().all(|q| q.is_closed());
-
-            // Step 1: cut the batch across all tenant queues.
-            let mut queries: Vec<Query> = queues.iter().flat_map(|q| q.drain()).collect();
-            queries.sort_by_key(|q| OrdF64(q.arrival));
-            for q in &queries {
-                admit_wait_sum += (now - q.arrival).max(0.0);
-            }
-            let n_cut = queries.len();
-
-            // Step 2: the shared solve (host critical path), boosted
-            // from the executor's live cache contents.
-            let t0 = Instant::now();
-            let config = solve_ctx.solve(executor.cache().cached(), &queries, policy, &mut rng);
-            let solve_secs = t0.elapsed().as_secs_f64();
-
-            // Steps 3–5: the loop's executor (incremental cache
-            // transition + simulated execution; free in host time).
-            // `queue_depth` records arrivals already waiting for the
-            // *next* cut; in serve mode the solve is the stall.
-            let backlog: usize = queues.iter().map(|q| q.len()).sum();
-            executor.execute(
-                PlannedBatch {
-                    index: batch_idx,
-                    window_end,
-                    queries,
-                    config,
-                    solve_secs,
-                },
-                backlog,
-                solve_secs,
-            );
-            completed_live += n_cut as u64;
-            batch_idx += 1;
-            if n_cut > 0 {
-                served_until = now;
-            }
-
-            if cfg.verbose && now as u64 > last_report {
-                last_report = now as u64;
-                let (adm, rej) = queues.iter().fold((0u64, 0u64), |(a, r), q| {
-                    let (qa, qr) = q.counts();
-                    (a + qa, r + qr)
-                });
-                println!(
-                    "[t={now:6.2}s] admitted={adm} rejected={rej} completed={completed_live} \
-                     last_batch={n_cut} solve={:.1}ms",
-                    solve_secs * 1e3
-                );
-            }
-
-            // Done once producers have closed and nothing was left to
-            // drain this round.
-            if all_closed && n_cut == 0 {
-                break;
-            }
-        }
+        service_loop(
+            &mut clk,
+            &queues,
+            &mut executor,
+            &solve_ctx,
+            policy,
+            &mut rng,
+            cfg,
+            |_, _| queues.iter().all(|q| q.is_closed()),
+        )
     });
 
     let elapsed_secs = t_start.elapsed().as_secs_f64();
     let run = executor.into_result(policy.name(), &coordinator.config, cfg.n_tenants, elapsed_secs);
-    let completed = run.outcomes.len() as u64;
-    let mut per_tenant_completed = vec![0u64; cfg.n_tenants];
-    for o in &run.outcomes {
-        per_tenant_completed[o.tenant] += 1;
-    }
-    let (admitted, rejected) = queues.iter().fold((0u64, 0u64), |(a, r), q| {
-        let (qa, qr) = q.counts();
-        (a + qa, r + qr)
-    });
-    let peak_queue_depth = queues.iter().map(|q| q.peak_depth()).max().unwrap_or(0);
-    let normalized: Vec<f64> = per_tenant_completed
-        .iter()
-        .zip(&tenants.weights())
-        .map(|(&c, w)| c as f64 / w.max(1e-12))
-        .collect();
-
-    ServeReport {
-        elapsed_secs,
-        batches: run.batches.len(),
+    let (admitted, rejected) = queue_counts(&queues);
+    let peak = queues.iter().map(|q| q.peak_depth()).max().unwrap_or(0);
+    assemble_report(
+        &run,
         admitted,
         rejected,
-        completed,
-        queries_per_sec: if served_until > 0.0 {
-            completed as f64 / served_until
-        } else {
-            0.0
+        peak,
+        stats,
+        elapsed_secs,
+        tenants,
+        cfg.n_tenants,
+    )
+}
+
+/// Deterministic single-node serve: the *same* service loop as
+/// [`serve`], driven by a [`SimClock`] with arrivals generated inline
+/// instead of on producer threads. Every simulated quantity — admitted
+/// sets, batch cuts, configurations, outcomes — is a pure function of
+/// the config, which is what makes the federated serving layer's
+/// `--shards 1` equivalence testable (see
+/// `rust/tests/federated_serving.rs`). Only host-measured figures
+/// (elapsed seconds, solve percentiles) vary run to run.
+///
+/// Returns the report plus the underlying [`RunResult`] so equivalence
+/// tests can compare per-query outcomes exactly. Block admission would
+/// deadlock a single-threaded driver (nothing drains while the pump
+/// offers), so only [`AdmissionPolicy::Drop`] is supported.
+pub fn serve_sim(
+    universe: &Universe,
+    tenants: &TenantSet,
+    engine: &SimEngine,
+    policy: &dyn Policy,
+    cfg: &ServeConfig,
+) -> (ServeReport, RunResult) {
+    assert!(cfg.n_tenants > 0, "serve needs at least one tenant");
+    assert!(cfg.batch_secs > 0.0 && cfg.duration_secs > 0.0);
+    assert_eq!(tenants.len(), cfg.n_tenants, "tenant set size mismatch");
+    assert_eq!(
+        cfg.admission,
+        AdmissionPolicy::Drop,
+        "the sim driver is single-threaded: block admission would deadlock"
+    );
+
+    let queues: Vec<AdmissionQueue> = (0..cfg.n_tenants)
+        .map(|_| AdmissionQueue::new(cfg.queue_capacity))
+        .collect();
+    let budget = engine.config.cache_budget;
+    let coord_cfg = CoordinatorConfig {
+        batch_secs: cfg.batch_secs,
+        n_batches: 0,
+        stateful_gamma: cfg.stateful_gamma,
+        seed: cfg.seed,
+    };
+    let coordinator = Coordinator::new(universe, tenants.clone(), engine.clone(), coord_cfg);
+    let mut executor = coordinator.executor();
+    let solve_ctx = SolveContext {
+        tenants,
+        universe,
+        budget,
+        stateful_gamma: cfg.stateful_gamma,
+        weight_mult: None,
+    };
+    let mut rng = Pcg64::with_stream(cfg.seed, 0x0b5);
+    let t_start = Instant::now();
+
+    // Inline producers: same generators, same seeds, same disjoint id
+    // ranges as the real-time driver's threads.
+    let mut gens: Vec<TenantGenerator> = (0..cfg.n_tenants)
+        .map(|i| cfg.tenant_generator(i, universe))
+        .collect();
+    let mut next_ids: Vec<u64> = (0..cfg.n_tenants).map(|i| (i as u64) << 32).collect();
+
+    let mut clock = SimClock::new();
+    let duration = cfg.duration_secs;
+    let admission = cfg.admission;
+    let stats = service_loop(
+        &mut clock,
+        &queues,
+        &mut executor,
+        &solve_ctx,
+        policy,
+        &mut rng,
+        cfg,
+        |_, now| {
+            let t_end = now.min(duration);
+            for (i, g) in gens.iter_mut().enumerate() {
+                for q in g.generate_until(t_end, universe, &mut next_ids[i]) {
+                    queues[i].offer(q, admission);
+                }
+            }
+            now >= duration
         },
-        solve_ms_p50: run.solve_ms_percentile(50.0),
-        solve_ms_p99: run.solve_ms_percentile(99.0),
-        mean_admit_wait_ms: if completed > 0 {
-            1e3 * admit_wait_sum / completed as f64
-        } else {
-            0.0
-        },
-        max_batch: run.batches.iter().map(|b| b.n_queries).max().unwrap_or(0),
-        peak_queue_depth,
-        hit_ratio: run.hit_ratio(),
-        avg_cache_utilization: run.avg_cache_utilization(),
-        per_tenant_completed,
-        throughput_fairness: stats::jain_index(&normalized),
-    }
+    );
+
+    let elapsed_secs = t_start.elapsed().as_secs_f64();
+    let run = executor.into_result(policy.name(), &coordinator.config, cfg.n_tenants, elapsed_secs);
+    let (admitted, rejected) = queue_counts(&queues);
+    let peak = queues.iter().map(|q| q.peak_depth()).max().unwrap_or(0);
+    let report = assemble_report(
+        &run,
+        admitted,
+        rejected,
+        peak,
+        stats,
+        elapsed_secs,
+        tenants,
+        cfg.n_tenants,
+    );
+    (report, run)
 }
 
 #[cfg(test)]
@@ -446,6 +627,47 @@ mod tests {
             r.peak_queue_depth,
             cfg.queue_capacity
         );
+    }
+
+    #[test]
+    fn sim_driver_is_deterministic_and_conserves() {
+        // The SimClock driver underpins the federated serving
+        // equivalence tests: every simulated quantity must be a pure
+        // function of the config.
+        let universe = Universe::sales_only();
+        let cfg = ServeConfig {
+            duration_secs: 1.5,
+            rate_per_sec: 300.0,
+            n_tenants: 2,
+            batch_secs: 0.25,
+            queue_capacity: 4096,
+            admission: AdmissionPolicy::Drop,
+            stateful_gamma: None,
+            seed: 21,
+            verbose: false,
+        };
+        let tenants = TenantSet::equal(cfg.n_tenants);
+        let engine = SimEngine::new(ClusterConfig::default());
+        let policy = PolicyKind::FastPf.build();
+        let (r1, run1) = serve_sim(&universe, &tenants, &engine, policy.as_ref(), &cfg);
+        let (r2, run2) = serve_sim(&universe, &tenants, &engine, policy.as_ref(), &cfg);
+        assert!(r1.completed > 50, "completed={}", r1.completed);
+        assert_eq!(r1.completed, r1.admitted, "sim serve must conserve");
+        assert_eq!(r1.batches, r2.batches);
+        assert_eq!(r1.admitted, r2.admitted);
+        assert_eq!(r1.queries_per_sec, r2.queries_per_sec);
+        assert_eq!(r1.per_tenant_completed, r2.per_tenant_completed);
+        assert_eq!(run1.outcomes.len(), run2.outcomes.len());
+        for (a, b) in run1.outcomes.iter().zip(&run2.outcomes) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.start, b.start);
+            assert_eq!(a.finish, b.finish);
+            assert_eq!(a.from_cache, b.from_cache);
+        }
+        for (a, b) in run1.batches.iter().zip(&run2.batches) {
+            assert_eq!(a.config, b.config);
+            assert_eq!(a.n_queries, b.n_queries);
+        }
     }
 
     #[test]

@@ -47,7 +47,7 @@ fn main() {
                     "fair cache allocation for multi-tenant data-parallel workloads (SIGMOD'17 reproduction)",
                     &[
                         ("run", "one coordinator run (see --policy/--tenants/...)"),
-                        ("serve", "online service mode (--duration/--rate/--batch-ms/...)"),
+                        ("serve", "online service mode (--duration/--rate/--shards/--membership auto)"),
                         ("cluster", "sharded federation (--shards/--placement/--replicate-hot)"),
                         ("experiment <name>", "regenerate a paper table/figure"),
                         ("list", "list available experiments"),
@@ -68,16 +68,16 @@ fn main() {
                         OptSpec { name: "duration", help: "serve: wall-clock seconds to accept traffic", default: Some("5") },
                         OptSpec { name: "rate", help: "serve: aggregate arrival rate (queries/sec)", default: Some("1000") },
                         OptSpec { name: "batch-ms", help: "serve: real-time batch window (ms)", default: Some("250") },
-                        OptSpec { name: "queue-cap", help: "serve: per-tenant admission queue bound", default: Some("8192") },
+                        OptSpec { name: "queue-cap", help: "serve: per-tenant admission bound (federated: per-shard pool of tenants×bound)", default: Some("8192") },
                         OptSpec { name: "admission", help: "serve: drop|block at the queue bound", default: Some("drop") },
                         OptSpec { name: "min-qps", help: "serve: exit 1 if sustained q/s falls below", default: None },
-                        OptSpec { name: "shards", help: "cluster: number of cache shards", default: Some("4") },
-                        OptSpec { name: "placement", help: "cluster: view placement, hash|pack", default: Some("hash") },
-                        OptSpec { name: "replicate-hot", help: "cluster: replicate views above this demand fraction", default: None },
+                        OptSpec { name: "shards", help: "cluster/serve: number of cache shards (serve default 1)", default: Some("4") },
+                        OptSpec { name: "placement", help: "cluster/serve: view placement, hash|pack", default: Some("hash") },
+                        OptSpec { name: "replicate-hot", help: "cluster/serve: replicate views above this demand fraction", default: None },
                         OptSpec { name: "replica-decay", help: "cluster: evict replicas below the threshold for K batches", default: None },
                         OptSpec { name: "rebalance-every", help: "cluster: re-home views by demand every K batches", default: None },
-                        OptSpec { name: "membership", help: "cluster: elastic plan, e.g. \"add@40,kill@80\" (batch or 'mid')", default: None },
-                        OptSpec { name: "warmup", help: "cluster: accountant warm-up batches for added shards", default: Some("2") },
+                        OptSpec { name: "membership", help: "cluster: schedule \"add@40,kill@80\"; serve: reactive auto[:lo,hi]", default: None },
+                        OptSpec { name: "warmup", help: "cluster/serve: accountant warm-up batches for added shards", default: Some("2") },
                         OptSpec { name: "setup", help: "cluster: §5.3 workload, sales-g1..sales-g4", default: Some("sales-g2") },
                     ],
                 )
@@ -159,6 +159,8 @@ fn cmd_run(args: &Args) -> Result<i32, String> {
 }
 
 fn cmd_serve(args: &Args) -> Result<i32, String> {
+    use robus::cluster::{AutoMembership, PlacementStrategy, ServeFederationConfig};
+
     let policy_name = args.opt_or("policy", "FASTPF");
     let Some(kind) = PolicyKind::parse(policy_name) else {
         return Err(format!("unknown policy {policy_name}"));
@@ -180,35 +182,128 @@ fn cmd_serve(args: &Args) -> Result<i32, String> {
         seed: args.opt_u64("seed", 42)?,
         verbose: !args.flag("quiet"),
     };
+    let n_shards = args.opt_usize("shards", 1)?;
+    if n_shards == 0 {
+        return Err("--shards must be at least 1".to_string());
+    }
+    // Serve accepts only the reactive form (`auto[:lo,hi]`); resolve
+    // validates the bounds (both positive, lo < hi) against the
+    // configured rate before any work happens.
+    let auto = match args.opt("membership") {
+        None => None,
+        Some(s) => Some(
+            AutoMembership::parse(s)
+                .and_then(|spec| spec.resolve(cfg.rate_per_sec, n_shards))
+                .map_err(|e| format!("--membership: {e}"))?,
+        ),
+    };
+    let replicate_hot = match args.opt("replicate-hot") {
+        None => None,
+        Some(s) => Some(s.parse::<f64>().map_err(|_| {
+            format!("--replicate-hot expects a fraction, got '{s}'")
+        })?),
+    };
+    let placement = match args.opt("placement") {
+        None => PlacementStrategy::Hash,
+        Some(s) => PlacementStrategy::parse(s)
+            .ok_or_else(|| format!("unknown placement {s} (use hash|pack)"))?,
+    };
+    // Cluster-only knobs have no serve-mode implementation: surface
+    // that instead of silently ignoring them.
+    for name in ["replica-decay", "rebalance-every"] {
+        if args.opt(name).is_some() {
+            eprintln!(
+                "warning: --{name} is not implemented by serve mode; ignoring \
+                 (it drives the trace-replay federation — see robus cluster)"
+            );
+        }
+    }
+    // With one shard and no way to ever gain another, the federation
+    // knobs are meaningless: warn rather than silently no-op.
+    if n_shards == 1 && auto.is_none() {
+        for (name, present) in [
+            ("replicate-hot", replicate_hot.is_some()),
+            ("placement", args.opt("placement").is_some()),
+            ("warmup", args.opt("warmup").is_some()),
+        ] {
+            if present {
+                eprintln!(
+                    "warning: --{name} has no effect on a single-shard serve \
+                     without --membership auto; ignoring"
+                );
+            }
+        }
+    }
+
     let universe = robus::workload::Universe::sales_only();
     let tenants = robus::domain::tenant::TenantSet::equal(cfg.n_tenants);
     let engine = robus::sim::SimEngine::new(robus::sim::ClusterConfig::default());
     let policy = kind.build();
-    println!(
-        "robus serve: {} tenants, target {:.0} q/s, W={:.0}ms, admission={}, policy={} ({}s run)",
-        cfg.n_tenants,
-        cfg.rate_per_sec,
-        cfg.batch_secs * 1e3,
-        cfg.admission.name(),
-        kind.name(),
-        cfg.duration_secs,
-    );
-    let report = robus::coordinator::service::serve(
-        &universe,
-        &tenants,
-        &engine,
-        policy.as_ref(),
-        &cfg,
-    );
-    print!("{}", report.render());
-    // Optional service-level objective: fail (exit 1) if the sustained
-    // throughput fell short — this is what makes the CI smoke step a
-    // real assertion rather than a crash test.
     let min_qps = args.opt_f64("min-qps", 0.0)?;
-    if report.queries_per_sec < min_qps {
+
+    let queries_per_sec = if n_shards == 1 && auto.is_none() {
+        // The single-node service path, byte-for-byte the pre-federated
+        // semantics (pinned against the sharded path in
+        // rust/tests/federated_serving.rs).
+        println!(
+            "robus serve: {} tenants, target {:.0} q/s, W={:.0}ms, admission={}, policy={} ({}s run)",
+            cfg.n_tenants,
+            cfg.rate_per_sec,
+            cfg.batch_secs * 1e3,
+            cfg.admission.name(),
+            kind.name(),
+            cfg.duration_secs,
+        );
+        let report = robus::coordinator::service::serve(
+            &universe,
+            &tenants,
+            &engine,
+            policy.as_ref(),
+            &cfg,
+        );
+        print!("{}", report.render());
+        report.queries_per_sec
+    } else {
+        let fcfg = ServeFederationConfig {
+            replicate_hot,
+            auto,
+            placement,
+            warmup_batches: args.opt_usize("warmup", 2)?,
+            ..ServeFederationConfig::new(cfg.clone(), n_shards)
+        };
+        println!(
+            "robus serve: {} shards ({} placement), {} tenants, target {:.0} q/s, \
+             W={:.0}ms, admission={}, policy={}, membership={} ({}s run)",
+            fcfg.n_shards,
+            fcfg.placement.name(),
+            cfg.n_tenants,
+            cfg.rate_per_sec,
+            cfg.batch_secs * 1e3,
+            cfg.admission.name(),
+            kind.name(),
+            match fcfg.auto {
+                Some(a) => format!("auto[{:.0},{:.0}]", a.lo_qps, a.hi_qps),
+                None => "static".to_string(),
+            },
+            cfg.duration_secs,
+        );
+        let report = robus::cluster::serve_federated(
+            &universe,
+            &tenants,
+            &engine,
+            policy.as_ref(),
+            &fcfg,
+        );
+        print!("{}", report.render());
+        report.serve.queries_per_sec
+    };
+
+    // Optional service-level objective: fail (exit 1) if the sustained
+    // throughput fell short — this is what makes the CI smoke and the
+    // nightly soak real assertions rather than crash tests.
+    if queries_per_sec < min_qps {
         eprintln!(
-            "FAIL: sustained {:.0} q/s < required --min-qps {:.0}",
-            report.queries_per_sec, min_qps
+            "FAIL: sustained {queries_per_sec:.0} q/s < required --min-qps {min_qps:.0}"
         );
         return Ok(1);
     }
@@ -231,7 +326,10 @@ fn cmd_cluster(args: &Args) -> Result<i32, String> {
             "unknown placement {placement_name} (use hash|pack)"
         ));
     };
-    let n_shards = args.opt_usize("shards", 4)?.max(1);
+    let n_shards = args.opt_usize("shards", 4)?;
+    if n_shards == 0 {
+        return Err("--shards must be at least 1".to_string());
+    }
     let replicate_hot = match args.opt("replicate-hot") {
         None => None,
         Some(s) => Some(s.parse::<f64>().map_err(|_| {

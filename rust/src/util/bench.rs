@@ -18,6 +18,28 @@ pub fn bb<T>(x: T) -> T {
     black_box(x)
 }
 
+/// Host-speed index: nanoseconds for one pass of a fixed, deterministic
+/// CPU workload (a 2M-step `mix64` chain; best of five passes). Every
+/// `BENCH_*.json` embeds this so the CI bench-regression gate can
+/// compare hardware-dependent metrics (batches/sec, solve p99) across
+/// runner generations by *normalizing* fresh numbers to the baseline
+/// host's speed instead of comparing absolutes — a 2× slower runner
+/// reports a ~2× larger calibration, cancelling out of the ratio.
+pub fn calibration_ns() -> f64 {
+    use crate::util::rng::mix64;
+    let mut best = f64::INFINITY;
+    for _ in 0..5 {
+        let t0 = Instant::now();
+        let mut x = 0x9e37_79b9_7f4a_7c15u64;
+        for _ in 0..2_000_000u32 {
+            x = mix64(x);
+        }
+        black_box(x);
+        best = best.min(t0.elapsed().as_nanos() as f64);
+    }
+    best
+}
+
 /// Harness configuration.
 #[derive(Debug, Clone)]
 pub struct BenchConfig {
@@ -185,6 +207,9 @@ impl BenchSuite {
         Json::from_pairs(vec![
             ("suite", Json::String(self.name.clone())),
             ("samples_per_bench", Json::Number(self.config.samples as f64)),
+            // The regression gate's normalization anchor (see
+            // [`calibration_ns`] and scripts/check_bench_regression.py).
+            ("host_calibration_ns", Json::Number(calibration_ns())),
             ("benchmarks", benchmarks),
         ])
     }
@@ -267,6 +292,26 @@ mod tests {
         // Round-trips through the parser.
         let text = json.to_string_pretty();
         assert_eq!(Json::parse(&text).unwrap(), json);
+    }
+
+    #[test]
+    fn calibration_is_positive_and_embedded() {
+        let ns = calibration_ns();
+        assert!(ns > 0.0 && ns.is_finite());
+        let mut suite = BenchSuite::new("unit");
+        suite.config = BenchConfig {
+            warmup: Duration::from_millis(2),
+            samples: 2,
+            sample_target: Duration::from_millis(1),
+        };
+        suite.bench("a", || 1 + 1);
+        let cal = suite
+            .to_json()
+            .get("host_calibration_ns")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert!(cal > 0.0);
     }
 
     #[test]

@@ -27,6 +27,15 @@ pub trait Clock {
     /// sleeps. Returns the time actually reached (`>= t` unless the
     /// clock was already past it).
     fn wait_until(&mut self, t: f64) -> f64;
+
+    /// Whether a second on this axis costs a second of host time.
+    /// Clock-generic drivers use this for *presentation* decisions only
+    /// (e.g. the serve loop's once-per-second live metrics line, which
+    /// would spam once per simulated batch on a jumping clock) — never
+    /// for pacing or batch logic, which must stay driver-independent.
+    fn is_real_time(&self) -> bool {
+        false
+    }
 }
 
 /// Discrete-event clock: advancing is free, so a run executes as fast
@@ -99,6 +108,10 @@ impl Clock for RealTimeClock {
         }
         self.now()
     }
+
+    fn is_real_time(&self) -> bool {
+        true
+    }
 }
 
 /// An ordered event queue: min-heap over `(time, payload)`. Ties on
@@ -158,6 +171,12 @@ mod tests {
         // Never goes backwards.
         assert_eq!(c.wait_until(10.0), 40.0);
         assert_eq!(c.now(), 40.0);
+    }
+
+    #[test]
+    fn real_time_flag_distinguishes_drivers() {
+        assert!(!SimClock::new().is_real_time());
+        assert!(RealTimeClock::new().is_real_time());
     }
 
     #[test]

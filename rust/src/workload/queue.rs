@@ -91,6 +91,20 @@ impl AdmissionQueue {
         true
     }
 
+    /// Enqueue a query *without* admission accounting or a capacity
+    /// check. This is the membership re-home path of the federated
+    /// serving layer: a query drained from a retiring shard's queue was
+    /// already admitted (and counted) once, so moving it to its new
+    /// home must neither re-count it nor shed it — the target queue may
+    /// transiently overshoot its capacity by the retiring shard's
+    /// backlog rather than drop admitted work. Works on closed queues
+    /// too (re-homes during the shutdown drain tail still conserve).
+    pub fn requeue(&self, query: Query) {
+        let mut st = self.state.lock().unwrap();
+        st.items.push_back(query);
+        st.peak_depth = st.peak_depth.max(st.items.len());
+    }
+
     /// Remove everything currently queued (the batch cut). Frees space,
     /// so blocked producers wake.
     pub fn drain(&self) -> Vec<Query> {
@@ -257,6 +271,34 @@ mod tests {
         });
         assert_eq!(q.counts(), (3, 0));
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn requeue_bypasses_capacity_and_admission_accounting() {
+        // A re-homed query was already admitted on its original shard's
+        // queue: moving it must not re-count it, must not shed it at the
+        // bound, and must survive a closed target.
+        let q = AdmissionQueue::new(1);
+        assert!(q.offer(query(0), AdmissionPolicy::Drop));
+        q.requeue(query(1));
+        q.requeue(query(2));
+        // Counters unchanged: one admission, zero rejections.
+        assert_eq!(q.counts(), (1, 0));
+        // Capacity overshoot is recorded in the high-water mark.
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.peak_depth(), 3);
+        // FIFO order is preserved across the transfer.
+        assert_eq!(
+            q.drain().iter().map(|x| x.id.0).collect::<Vec<_>>(),
+            vec![0, 1, 2]
+        );
+        // A closed queue still accepts re-homed (already-admitted) work
+        // so the shutdown drain tail conserves it.
+        q.close();
+        assert!(!q.offer(query(3), AdmissionPolicy::Drop));
+        q.requeue(query(4));
+        assert_eq!(q.drain().iter().map(|x| x.id.0).collect::<Vec<_>>(), vec![4]);
+        assert_eq!(q.counts(), (1, 1));
     }
 
     #[test]

@@ -1,0 +1,261 @@
+#!/usr/bin/env python3
+"""Bench-regression gate for the BENCH_*.json trajectory files.
+
+Compares a fresh quick-bench run (``ROBUS_BENCH_QUICK=1 cargo bench``)
+against the committed baselines in ``benchmarks/baseline/`` and fails
+(exit 1) when a tracked metric regresses by more than the threshold
+(default 15%). This is what turns the CI bench step from
+"upload artifacts" into an actual gate.
+
+Two metric classes:
+
+* **ratio / fraction metrics** (fairness spread, 4-shard speedup,
+  pipeline stall fraction, conservation) are hardware-independent and
+  compared directly.
+* **absolute host metrics** (batches/sec, solve p99, ns/iter) are
+  normalized by the ``host_calibration_ns`` index every BENCH file
+  embeds (ns for a fixed 2M-step mix64 chain, see
+  ``rust/src/util/bench.rs::calibration_ns``): a 2× slower runner
+  reports a ~2× larger calibration, which cancels out of the
+  comparison, so the gate survives CI runner generation changes.
+
+Bootstrap: a baseline whose ``_provenance`` is ``"seed"`` (committed
+targets, not yet measured) enforces only the hardware-independent
+metrics; normalized-absolute regressions are reported as warnings.
+Run with ``--update`` after a trusted bench run to promote the fresh
+output to a measured baseline (full enforcement).
+
+Usage:
+  python3 scripts/check_bench_regression.py               # gate
+  python3 scripts/check_bench_regression.py --update      # refresh baselines
+  python3 scripts/check_bench_regression.py --threshold 0.2
+"""
+
+import argparse
+import json
+import os
+import sys
+
+# A metric: (label, json-path, direction, kind, abs_floor)
+#   json-path steps: a dict key, or a (array_key, match_key, match_val)
+#     triple selecting the array element whose match_key == match_val.
+#   direction: "higher" (regression = drop) or "lower" (regression = rise).
+#   kind: "host"  — absolute host metric, normalized by calibration;
+#         "ratio" — deterministic/simulated quantity (fairness spread,
+#                   conservation): hardware-independent, enforced even
+#                   against seed baselines;
+#         "noisy" — timing-derived ratio (parallel speedup, stall
+#                   fraction): core-count/scheduler dependent and NOT
+#                   normalizable by calibration, so it is compared
+#                   directly but only warns against seed baselines;
+#         "bool"  — must be true.
+#   abs_floor: absolute slack added on top of the relative threshold so
+#     near-zero metrics (stall fractions, spreads near 1.0) don't flap.
+SPEC = {
+    "BENCH_solver.json": {
+        "calibration": ["host_calibration_ns"],
+        "metrics": [
+            ("fastpf solve ns/iter",
+             [("benchmarks", "name", "fastpf_gradient_solve_only"),
+              "mean_ns_per_iter"],
+             "lower", "host", 0.0),
+            ("full coordinator batch ns/iter",
+             [("benchmarks", "name", "coordinator_full_batch_fastpf_n4"),
+              "mean_ns_per_iter"],
+             "lower", "host", 0.0),
+        ],
+    },
+    "BENCH_coordinator.json": {
+        "calibration": ["microbench", "host_calibration_ns"],
+        "metrics": [
+            ("serial batches/sec",
+             [("runs", "mode", "serial"), "batches_per_sec"],
+             "higher", "host", 0.0),
+            ("serial solve p99 ms",
+             [("runs", "mode", "serial"), "solve_ms_p99"],
+             "lower", "host", 2.0),
+            ("pipelined batches/sec",
+             [("runs", "mode", "pipelined"), "batches_per_sec"],
+             "higher", "host", 0.0),
+            ("pipeline stall fraction",
+             [("runs", "mode", "pipelined"), "stall_fraction"],
+             "lower", "noisy", 0.10),
+        ],
+    },
+    "BENCH_cluster.json": {
+        "calibration": ["microbench", "host_calibration_ns"],
+        "metrics": [
+            ("1-shard federation batches/sec",
+             [("scaling", "shards", 1), "batches_per_sec"],
+             "higher", "host", 0.0),
+            ("4-shard speedup vs 1 shard",
+             [("scaling", "shards", 4), "speedup_vs_1shard"],
+             "higher", "noisy", 0.30),
+            ("4-shard fairness spread",
+             [("scaling", "shards", 4), "fairness_spread"],
+             "lower", "ratio", 0.15),
+            ("federated serving q/host-sec",
+             ["federated_serving", "completed_per_host_sec"],
+             "higher", "host", 0.0),
+            ("federated serving solve p99 ms",
+             ["federated_serving", "solve_ms_p99"],
+             "lower", "host", 2.0),
+            ("federated serving conservation",
+             ["federated_serving", "conserved"],
+             "true", "bool", 0.0),
+        ],
+    },
+}
+
+
+def select(doc, path):
+    cur = doc
+    for step in path:
+        if isinstance(step, tuple):
+            key, mk, mv = step
+            arr = cur[key]
+            matches = [el for el in arr
+                       if _loose_eq(el.get(mk), mv)]
+            if not matches:
+                raise KeyError(f"no element of '{key}' with {mk}={mv!r}")
+            cur = matches[0]
+        else:
+            cur = cur[step]
+    return cur
+
+
+def _loose_eq(a, b):
+    try:
+        return float(a) == float(b)
+    except (TypeError, ValueError):
+        return a == b
+
+
+def check_file(name, spec, base_dir, fresh_dir, threshold):
+    """Returns (rows, n_regressions, n_warnings)."""
+    base_path = os.path.join(base_dir, name)
+    fresh_path = os.path.join(fresh_dir, name)
+    if not os.path.exists(fresh_path):
+        return ([(name, "<file>", "-", "-", "-", "MISSING FRESH")], 1, 0)
+    if not os.path.exists(base_path):
+        return ([(name, "<file>", "-", "-", "-", "MISSING BASELINE")], 1, 0)
+    with open(base_path) as f:
+        base = json.load(f)
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+    seed_baseline = base.get("_provenance", "measured") == "seed"
+
+    try:
+        cal_base = float(select(base, spec["calibration"]))
+        cal_fresh = float(select(fresh, spec["calibration"]))
+        host_factor = cal_fresh / cal_base if cal_base > 0 else 1.0
+    except (KeyError, TypeError, ValueError):
+        host_factor = 1.0
+
+    rows, regressions, warnings = [], 0, 0
+    for label, path, direction, kind, floor in spec["metrics"]:
+        try:
+            base_v = select(base, path)
+            fresh_v = select(fresh, path)
+        except (KeyError, TypeError) as e:
+            rows.append((name, label, "-", "-", "-", f"PATH ERROR: {e}"))
+            regressions += 1
+            continue
+
+        if kind == "bool":
+            ok = bool(fresh_v)
+            rows.append((name, label, str(base_v), str(fresh_v), "-",
+                         "ok" if ok else "REGRESSION"))
+            if not ok:
+                regressions += 1
+            continue
+
+        base_v, fresh_v = float(base_v), float(fresh_v)
+        # Expected fresh value on this host.
+        if kind == "host":
+            # time-like scales with the calibration; rate-like inversely.
+            expected = base_v * host_factor if direction == "lower" \
+                else base_v / host_factor
+        else:
+            expected = base_v
+        if direction == "lower":
+            bound = expected * (1.0 + threshold) + floor
+            bad = fresh_v > bound
+            delta = (fresh_v - expected) / expected if expected else 0.0
+        else:
+            bound = expected * (1.0 - threshold) - floor
+            bad = fresh_v < bound
+            delta = (expected - fresh_v) / expected if expected else 0.0
+
+        if bad and kind in ("host", "noisy") and seed_baseline:
+            status = "warn (seed baseline)"
+            warnings += 1
+        elif bad:
+            status = "REGRESSION"
+            regressions += 1
+        else:
+            status = "ok"
+        rows.append((name, label, f"{expected:.3g}", f"{fresh_v:.3g}",
+                     f"{delta:+.1%}", status))
+    return rows, regressions, warnings
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default="benchmarks/baseline",
+                    help="directory holding the committed BENCH_*.json")
+    ap.add_argument("--fresh", default=".",
+                    help="directory holding the fresh bench output")
+    ap.add_argument("--threshold", type=float, default=0.15,
+                    help="relative regression threshold (default 0.15)")
+    ap.add_argument("--update", action="store_true",
+                    help="promote the fresh output to measured baselines")
+    args = ap.parse_args()
+
+    if args.update:
+        os.makedirs(args.baseline, exist_ok=True)
+        for name in SPEC:
+            src = os.path.join(args.fresh, name)
+            if not os.path.exists(src):
+                print(f"skip {name}: no fresh output", file=sys.stderr)
+                continue
+            with open(src) as f:
+                doc = json.load(f)
+            doc["_provenance"] = "measured"
+            dst = os.path.join(args.baseline, name)
+            with open(dst, "w") as f:
+                json.dump(doc, f, indent=2, sort_keys=False)
+                f.write("\n")
+            print(f"updated {dst}")
+        return 0
+
+    all_rows, total_reg, total_warn = [], 0, 0
+    for name, spec in SPEC.items():
+        rows, reg, warn = check_file(
+            name, spec, args.baseline, args.fresh, args.threshold)
+        all_rows += rows
+        total_reg += reg
+        total_warn += warn
+
+    widths = [max(len(str(r[i])) for r in all_rows + [
+        ("file", "metric", "expected", "fresh", "delta", "status")])
+        for i in range(6)]
+    header = ("file", "metric", "expected", "fresh", "delta", "status")
+    for row in [header] + all_rows:
+        print("  ".join(str(c).ljust(w) for c, w in zip(row, widths)))
+
+    if total_warn:
+        print(f"\n{total_warn} warning(s) against seed baselines — run a "
+              f"trusted bench and `--update` to arm full enforcement.")
+    if total_reg:
+        print(f"\nFAIL: {total_reg} bench regression(s) beyond "
+              f"{args.threshold:.0%} (if this change is an accepted "
+              f"trade-off, refresh deliberately with --update)",
+              file=sys.stderr)
+        return 1
+    print(f"\nOK: no bench regressions beyond {args.threshold:.0%}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
