@@ -126,44 +126,56 @@ fn main() {
     // host-second is the serving-path throughput the trajectory
     // tracks. Reactive membership runs with bounds that keep a steady
     // 2-shard federation stable (the soak-job assumption).
-    let serve_cfg = ServeConfig {
-        duration_secs: if quick { 2.0 } else { 6.0 },
-        rate_per_sec: 400.0,
-        n_tenants: 4,
-        batch_secs: 0.25,
-        queue_capacity: 16_384,
-        admission: AdmissionPolicy::Drop,
-        stateful_gamma: None,
-        seed: 42,
-        verbose: false,
-    };
-    let mut serve_fed = ServeFederationConfig::new(serve_cfg.clone(), 2);
-    serve_fed.auto = Some(
-        AutoMembership::parse("auto")
-            .expect("static spec parses")
-            .resolve(serve_cfg.rate_per_sec, 2)
-            .expect("default bounds resolve"),
-    );
+    // Run the serving figure twice — with the (default-on) warm-started
+    // solves and with `--warm-start off` — so the trajectory records
+    // the serving-path q/s uplift of carried solver state.
     let serve_universe = Universe::sales_only();
-    let serve_tenants = TenantSet::equal(serve_cfg.n_tenants);
+    let serve_tenants = TenantSet::equal(4);
     let serve_engine = SimEngine::new(ClusterConfig::default());
-    let serve_policy: Box<dyn Policy> = PolicyKind::FastPf.build();
-    let t_serve = std::time::Instant::now();
-    let served = serve_federated_sim(
-        &serve_universe,
-        &serve_tenants,
-        &serve_engine,
-        serve_policy.as_ref(),
-        &serve_fed,
-    );
-    let serve_host_secs = t_serve.elapsed().as_secs_f64();
+    let run_serving = |warm_start: bool| {
+        let serve_cfg = ServeConfig {
+            duration_secs: if quick { 2.0 } else { 6.0 },
+            rate_per_sec: 400.0,
+            n_tenants: 4,
+            batch_secs: 0.25,
+            queue_capacity: 16_384,
+            admission: AdmissionPolicy::Drop,
+            stateful_gamma: None,
+            seed: 42,
+            verbose: false,
+            warm_start,
+        };
+        let mut serve_fed = ServeFederationConfig::new(serve_cfg.clone(), 2);
+        serve_fed.auto = Some(
+            AutoMembership::parse("auto")
+                .expect("static spec parses")
+                .resolve(serve_cfg.rate_per_sec, 2)
+                .expect("default bounds resolve"),
+        );
+        let serve_policy: Box<dyn Policy> = PolicyKind::FastPf.build();
+        let t_serve = std::time::Instant::now();
+        let served = serve_federated_sim(
+            &serve_universe,
+            &serve_tenants,
+            &serve_engine,
+            serve_policy.as_ref(),
+            &serve_fed,
+        );
+        (served, t_serve.elapsed().as_secs_f64())
+    };
+    let (served, serve_host_secs) = run_serving(true);
+    let (served_cold, cold_host_secs) = run_serving(false);
+    let warm_cphs = served.serve.completed as f64 / serve_host_secs.max(1e-9);
+    let cold_cphs = served_cold.serve.completed as f64 / cold_host_secs.max(1e-9);
     let federated_serving = Json::from_pairs(vec![
         ("shards", Json::Number(2.0)),
         ("completed", Json::Number(served.serve.completed as f64)),
         ("batches", Json::Number(served.serve.batches as f64)),
+        ("completed_per_host_sec", Json::Number(warm_cphs)),
+        ("completed_per_host_sec_cold", Json::Number(cold_cphs)),
         (
-            "completed_per_host_sec",
-            Json::Number(served.serve.completed as f64 / serve_host_secs.max(1e-9)),
+            "warm_uplift",
+            Json::Number(warm_cphs / cold_cphs.max(1e-9)),
         ),
         ("solve_ms_p99", Json::Number(served.serve.solve_ms_p99)),
         (

@@ -67,11 +67,16 @@ fn main() {
     });
 
     // One instrumented run per mode for the service-level numbers.
+    // `serial_warm` is the same setup with carried solver state — its
+    // solve_ms_p50 against serial's is the end-to-end warm-start cut.
     let serial = run_with_policies_serial(&setup, &policies());
     let pipelined = run_with_policies_pipelined(&setup, &policies(), 2);
+    let warm_setup = setup.clone().with_warm_start(true);
+    let serial_warm = run_with_policies_serial(&warm_setup, &policies());
     let runs = Json::Array(vec![
         run_detail(&serial.runs[0], "serial", 0),
         run_detail(&pipelined.runs[0], "pipelined", 2),
+        run_detail(&serial_warm.runs[0], "serial_warm", 0),
     ]);
     let report = Json::from_pairs(vec![
         ("suite", Json::String("coordinator end-to-end".to_string())),

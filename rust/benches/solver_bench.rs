@@ -24,7 +24,9 @@ use robus::sim::cluster::ClusterConfig;
 use robus::sim::engine::SimEngine;
 use robus::solver::gradient::GradientConfig;
 use robus::util::bench::BenchSuite;
+use robus::util::json::Json;
 use robus::util::rng::Pcg64;
+use robus::util::stats;
 use robus::workload::generator::WorkloadGenerator;
 use robus::workload::spec::{AccessSpec, TenantSpec, WindowSpec};
 use robus::workload::universe::Universe;
@@ -126,6 +128,7 @@ fn main() {
         n_batches: 1,
         stateful_gamma: None,
         seed: 7,
+        warm_start: false,
     };
     let coordinator = Coordinator::new(&universe, tenants, engine, coord_cfg);
     let window = WindowSpec {
@@ -157,8 +160,63 @@ fn main() {
         Err(e) => eprintln!("skipping compiled-solver bench: {e}"),
     }
 
+    // Steady-state per-batch solve latency, cold vs warm-started, on
+    // the real serial driver (`solve_secs` is the executor's per-batch
+    // solve host time). Same workload seeds both ways, so the carried
+    // `WarmState` is the only difference between the two columns.
+    let solve_ns_for = |warm_start: bool| -> Vec<f64> {
+        let cfg = CoordinatorConfig {
+            batch_secs: 40.0,
+            n_batches: 30,
+            stateful_gamma: None,
+            seed: 7,
+            warm_start,
+        };
+        let coord = Coordinator::new(
+            &universe,
+            TenantSet::equal(4),
+            SimEngine::new(ClusterConfig::default()),
+            cfg,
+        );
+        let mut out = Vec::new();
+        for pass in 0..3u64 {
+            let mut gen = WorkloadGenerator::new(specs.clone(), &universe, 7 + pass);
+            let run = coord.run(&mut gen, fastpf.as_ref());
+            out.extend(run.batches.iter().map(|b| b.solve_secs * 1e9));
+        }
+        out
+    };
+    let cold = solve_ns_for(false);
+    let warm = solve_ns_for(true);
+    let p50_cold = stats::percentile(&cold, 50.0);
+    let p99_cold = stats::percentile(&cold, 99.0);
+    let p50_warm = stats::percentile(&warm, 50.0);
+    let p99_warm = stats::percentile(&warm, 99.0);
+    let ratio = p50_warm / p50_cold.max(1.0);
+    println!(
+        "\nwarm-start fastpf solves over {} batches: cold p50 {:.0} ns / p99 {:.0} ns, \
+         warm p50 {:.0} ns / p99 {:.0} ns (warm/cold p50 {:.3})",
+        cold.len(),
+        p50_cold,
+        p99_cold,
+        p50_warm,
+        p99_warm,
+        ratio,
+    );
+
     println!("\n{}", suite.markdown());
-    match suite.write_json("BENCH_solver.json") {
+    let mut doc = suite.to_json();
+    doc.set(
+        "warm_start",
+        Json::from_pairs(vec![
+            ("solve_p50_cold_ns", Json::Number(p50_cold)),
+            ("solve_p99_cold_ns", Json::Number(p99_cold)),
+            ("solve_p50_warm_ns", Json::Number(p50_warm)),
+            ("solve_p99_warm_ns", Json::Number(p99_warm)),
+            ("p50_warm_over_cold", Json::Number(ratio)),
+        ]),
+    );
+    match std::fs::write("BENCH_solver.json", doc.to_string_pretty()) {
         Ok(()) => println!("(wrote BENCH_solver.json)"),
         Err(e) => eprintln!("warn: could not write BENCH_solver.json: {e}"),
     }

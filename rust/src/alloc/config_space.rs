@@ -25,6 +25,16 @@ use crate::util::rng::Pcg64;
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct ConfigId(pub usize);
 
+/// The random-vector half of one §4.3 pruning run (see
+/// [`ConfigSpace::pruned_traced`]): each drawn unit weight vector and
+/// the exact-WELFARE optimum it produced. A warm-started solve replays
+/// these instead of re-running the M exact knapsacks.
+#[derive(Debug, Clone)]
+pub struct PruneTrace {
+    pub rand_w: Vec<Vec<f64>>,
+    pub rand_opt: Vec<ConfigMask>,
+}
+
 /// A pruned configuration space with precomputed scaled utilities.
 #[derive(Debug, Clone)]
 pub struct ConfigSpace {
@@ -62,6 +72,18 @@ impl ConfigSpace {
     /// unit vectors so every tenant's solo optimum is always present,
     /// which guarantees SI is representable, and the uniform vector).
     pub fn pruned(batch: &BatchUtilities, m: usize, rng: &mut Pcg64) -> Self {
+        Self::pruned_traced(batch, m, rng).0
+    }
+
+    /// [`ConfigSpace::pruned`] plus the trace a warm-started solve needs
+    /// to skip re-enumeration next batch: the random weight vectors
+    /// drawn and the exact-WELFARE optimum each produced. Identical
+    /// enumeration order and RNG consumption to `pruned`.
+    pub fn pruned_traced(
+        batch: &BatchUtilities,
+        m: usize,
+        rng: &mut Pcg64,
+    ) -> (Self, PruneTrace) {
         let n = batch.n_tenants;
         let mut space = Self::new(n);
 
@@ -88,12 +110,19 @@ impl ConfigSpace {
         space.push(batch, ConfigMask::from_bools(&sol.selected));
 
         // m random unit vectors.
+        let mut trace = PruneTrace {
+            rand_w: Vec::with_capacity(m),
+            rand_opt: Vec::with_capacity(m),
+        };
         for _ in 0..m {
             let w = rng.unit_weight_vector(n);
             let sol = welfare.solve(&w);
-            space.push(batch, ConfigMask::from_bools(&sol.selected));
+            let mask = ConfigMask::from_bools(&sol.selected);
+            space.push(batch, mask.clone());
+            trace.rand_w.push(w);
+            trace.rand_opt.push(mask);
         }
-        space
+        (space, trace)
     }
 
     /// Intern a configuration; returns its (possibly pre-existing) id.
@@ -124,6 +153,11 @@ impl ConfigSpace {
     /// One configuration by id.
     pub fn config(&self, id: ConfigId) -> &ConfigMask {
         &self.configs[id.0]
+    }
+
+    /// Look up the id of an already-interned configuration.
+    pub fn id_of(&self, config: &ConfigMask) -> Option<ConfigId> {
+        self.interner.get(config).copied()
     }
 
     /// Scaled-utility row of configuration `s`: `V_i(S_s)` for all i.
@@ -228,6 +262,85 @@ mod tests {
         assert!((space.scaled_utility(0, &x) - 0.5).abs() < 1e-9);
         assert!((space.scaled_utility(1, &x) - 1.0).abs() < 1e-9);
         assert!((space.scaled_utility(2, &x) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pruned_traced_matches_pruned_and_records_optima() {
+        let b = table2();
+        let space_a = ConfigSpace::pruned(&b, 12, &mut Pcg64::new(7));
+        let (space_b, trace) = ConfigSpace::pruned_traced(&b, 12, &mut Pcg64::new(7));
+        // Identical enumeration and RNG consumption.
+        assert_eq!(space_a.masks(), space_b.masks());
+        assert_eq!(trace.rand_w.len(), 12);
+        assert_eq!(trace.rand_opt.len(), 12);
+        // Every recorded optimum is interned, and re-solving the exact
+        // oracle for the recorded vector reproduces it.
+        let mut welfare = b.welfare_template();
+        for (w, opt) in trace.rand_w.iter().zip(&trace.rand_opt) {
+            assert!(space_b.id_of(opt).is_some());
+            let sol = welfare.solve(w);
+            assert_eq!(&mask(&sol.selected), opt);
+        }
+    }
+
+    /// Cross-batch reuse: ids assigned by `from_configs` stay stable
+    /// under incremental `push`, and duplicates pushed during a re-score
+    /// sweep dedup onto the original rows.
+    #[test]
+    fn interner_stable_across_from_configs_and_push() {
+        let b = table2();
+        let carried = vec![
+            mask(&[true, false, false]),
+            mask(&[false, true, false]),
+            mask(&[false, false, true]),
+        ];
+        let mut space = ConfigSpace::from_configs(&b, carried.clone());
+        for (i, c) in carried.iter().enumerate() {
+            assert_eq!(space.id_of(c), Some(ConfigId(i)));
+        }
+        // Incremental push of a new mask appends; re-pushing carried
+        // masks (the warm re-score path) returns the original ids and
+        // adds no rows.
+        let fresh = space.push(&b, mask(&[true, true, false]));
+        assert_eq!(fresh, ConfigId(3));
+        for (i, c) in carried.iter().enumerate() {
+            assert_eq!(space.push(&b, c.clone()), ConfigId(i));
+        }
+        assert_eq!(space.len(), 4);
+        assert_eq!(space.rows().count(), 4);
+        assert_eq!(space.id_of(&mask(&[false, false, false])), None);
+    }
+
+    /// Stale-v invalidation: the v matrix is bound to the batch it was
+    /// scored against. When a view's utility changes, a rebuilt space
+    /// over the same masks must re-score — carrying the old rows would
+    /// return the stale scaled utilities.
+    #[test]
+    fn rescoring_refreshes_stale_v_rows() {
+        use crate::alloc::testing::matrix_instance;
+        let before = matrix_instance(&[&[2, 1, 0], &[0, 1, 0], &[0, 1, 2]], 1.0);
+        let after = matrix_instance(&[&[2, 4, 0], &[0, 1, 0], &[0, 1, 2]], 1.0);
+        let masks = vec![mask(&[true, false, false]), mask(&[false, true, false])];
+        let old = ConfigSpace::from_configs(&before, masks.clone());
+        let new = ConfigSpace::from_configs(&after, masks.clone());
+        // Same interned ids either way…
+        for (i, c) in masks.iter().enumerate() {
+            assert_eq!(old.id_of(c), Some(ConfigId(i)));
+            assert_eq!(new.id_of(c), Some(ConfigId(i)));
+        }
+        // …but tenant 0's scaled utilities moved: U* rose from 2 to 4,
+        // so {R} scores 2/4 and {S} scores 4/4 under the new batch.
+        assert!((old.v_row(0)[0] - 1.0).abs() < 1e-12);
+        assert!((new.v_row(0)[0] - 0.5).abs() < 1e-12);
+        assert!((old.v_row(1)[0] - 0.5).abs() < 1e-12);
+        assert!((new.v_row(1)[0] - 1.0).abs() < 1e-12);
+        // The refreshed rows match the fresh batch exactly.
+        for (s, c) in masks.iter().enumerate() {
+            assert_eq!(new.v_row(s), after.scaled_utilities(c).as_slice());
+        }
+        // And the restricted argmax flips with the re-score.
+        assert_eq!(old.restricted_welfare(&[1.0, 0.0, 0.0]), ConfigId(0));
+        assert_eq!(new.restricted_welfare(&[1.0, 0.0, 0.0]), ConfigId(1));
     }
 
     #[test]

@@ -12,6 +12,7 @@
 //! (Theorem 2), hence also SI and PE.
 
 use crate::alloc::config_space::ConfigSpace;
+use crate::alloc::warm::{BatchSignature, FastPfWarm, WarmState};
 use crate::alloc::{Allocation, ConfigMask, Policy};
 use crate::domain::utility::BatchUtilities;
 use crate::solver::gradient::{maximize, GradientConfig, Objective};
@@ -98,12 +99,26 @@ impl FastPf {
         cfg: &GradientConfig,
     ) -> Vec<f64> {
         let m = space.len();
+        let x0 = vec![1.0 / m.max(1) as f64; m];
+        Self::solve_over_from(space, batch, cfg, &x0)
+    }
+
+    /// [`FastPf::solve_over`] from an explicit starting point — the
+    /// warm path seeds the previous batch's converged distribution, so
+    /// the gradient's relative-tolerance check exits after a handful of
+    /// iterations in steady state instead of re-climbing from uniform.
+    pub fn solve_over_from(
+        space: &ConfigSpace,
+        batch: &BatchUtilities,
+        cfg: &GradientConfig,
+        x0: &[f64],
+    ) -> Vec<f64> {
+        let m = space.len();
         if m == 0 || batch.active_tenants().is_empty() {
             return vec![0.0; m.max(1)];
         }
         let obj = PfObjective::new(space, batch);
-        let x0 = vec![1.0 / m as f64; m];
-        let mut result = maximize(&obj, &x0, cfg);
+        let mut result = maximize(&obj, x0, cfg);
         let norm: f64 = result.x.iter().sum();
         if norm > 0.0 {
             for xi in result.x.iter_mut() {
@@ -112,16 +127,10 @@ impl FastPf {
         }
         result.x
     }
-}
 
-impl Policy for FastPf {
-    fn name(&self) -> &'static str {
-        "FASTPF"
-    }
-
-    fn allocate(&self, batch: &BatchUtilities, rng: &mut Pcg64) -> Allocation {
-        let space = ConfigSpace::pruned(batch, self.prune_vectors, rng);
-        let x = Self::solve_over(&space, batch, &self.gradient);
+    /// Build the final allocation from a solved distribution over the
+    /// space (deterministic empty fallback when the solve vanished).
+    fn allocation_of(space: &ConfigSpace, x: &[f64], batch: &BatchUtilities) -> Allocation {
         if x.iter().sum::<f64>() <= 0.0 {
             return Allocation::deterministic(ConfigMask::empty(batch.n_views()));
         }
@@ -133,6 +142,133 @@ impl Policy for FastPf {
                 .zip(x.iter().copied())
                 .collect(),
         )
+    }
+
+    /// Store the just-solved batch as the next warm start.
+    fn remember(
+        warm: &mut WarmState,
+        sig: BatchSignature,
+        space: &ConfigSpace,
+        rand_w: Vec<Vec<f64>>,
+        rand_opt: Vec<ConfigMask>,
+        x: &[f64],
+    ) {
+        warm.fastpf = Some(FastPfWarm {
+            sig,
+            masks: space.masks().to_vec(),
+            rand_w,
+            rand_opt,
+            x_by_mask: space
+                .masks()
+                .iter()
+                .cloned()
+                .zip(x.iter().copied())
+                .collect(),
+        });
+    }
+}
+
+impl Policy for FastPf {
+    fn name(&self) -> &'static str {
+        "FASTPF"
+    }
+
+    fn allocate(&self, batch: &BatchUtilities, rng: &mut Pcg64) -> Allocation {
+        let space = ConfigSpace::pruned(batch, self.prune_vectors, rng);
+        let x = Self::solve_over(&space, batch, &self.gradient);
+        Self::allocation_of(&space, &x, batch)
+    }
+
+    /// Warm-started FASTPF: re-score the carried configs against the
+    /// fresh batch (cheap), re-run the exact WELFARE knapsack only for
+    /// random weight vectors whose cached optimum is invalidated, and
+    /// start the gradient from the previous converged distribution.
+    fn allocate_warm(
+        &self,
+        batch: &BatchUtilities,
+        rng: &mut Pcg64,
+        warm: &mut WarmState,
+    ) -> Allocation {
+        let sig = BatchSignature::of(batch);
+        let carried = warm
+            .fastpf
+            .take()
+            .filter(|p| p.sig.same_shape(&sig) && p.rand_w.len() == self.prune_vectors);
+        let Some(prev) = carried else {
+            // Cold prune (shape changed, state invalidated, or first
+            // batch), recording the trace for the next batch.
+            let (space, trace) = ConfigSpace::pruned_traced(batch, self.prune_vectors, rng);
+            let x = Self::solve_over(&space, batch, &self.gradient);
+            let alloc = Self::allocation_of(&space, &x, batch);
+            Self::remember(warm, sig, &space, trace.rand_w, trace.rand_opt, &x);
+            return alloc;
+        };
+
+        // Re-score every carried config against the new batch: the
+        // candidate set that challenges each cached optimum below.
+        let prev_sig = prev.sig;
+        let prev_space = ConfigSpace::from_configs(batch, prev.masks);
+
+        // Fresh space with the same enumeration skeleton as `pruned`,
+        // but only the cheap anchors solved exactly up front.
+        let n = batch.n_tenants;
+        let mut space = ConfigSpace::new(n);
+        space.push(batch, ConfigMask::empty(batch.n_views()));
+        let mut welfare = batch.welfare_template();
+        for i in 0..n {
+            if batch.u_star[i] <= 0.0 {
+                continue;
+            }
+            let mut w = vec![0.0; n];
+            w[i] = 1.0;
+            let sol = welfare.solve(&w);
+            space.push(batch, ConfigMask::from_bools(&sol.selected));
+        }
+        let sol = welfare.solve(&vec![1.0; n]);
+        space.push(batch, ConfigMask::from_bools(&sol.selected));
+
+        // The expensive half: one exact knapsack per random vector on
+        // the cold path. Reuse the cached optimum S_k when (a) the
+        // class structure over S_k's member views is unchanged and
+        // (b) S_k still wins weight vector w_k within the re-scored
+        // previous space (every old candidate re-challenges it under
+        // the new utilities); otherwise re-solve exactly.
+        let mut rand_opt = Vec::with_capacity(prev.rand_w.len());
+        for (w, prev_opt) in prev.rand_w.iter().zip(&prev.rand_opt) {
+            let still_optimal = sig.views_unchanged(&prev_sig, prev_opt)
+                && prev_space
+                    .id_of(prev_opt)
+                    .is_some_and(|id| prev_space.restricted_welfare(w) == id);
+            let opt = if still_optimal {
+                prev_opt.clone()
+            } else {
+                ConfigMask::from_bools(&welfare.solve(w).selected)
+            };
+            space.push(batch, opt.clone());
+            rand_opt.push(opt);
+        }
+
+        // Gradient warm start from the previous converged distribution,
+        // mapped through the interner onto the fresh id order.
+        let m = space.len();
+        let mut x0 = vec![0.0; m];
+        for (mask, p) in &prev.x_by_mask {
+            if let Some(id) = space.id_of(mask) {
+                x0[id.0] += *p;
+            }
+        }
+        let seeded: f64 = x0.iter().sum();
+        if seeded > 1e-12 {
+            for xi in x0.iter_mut() {
+                *xi /= seeded;
+            }
+        } else {
+            x0 = vec![1.0 / m.max(1) as f64; m];
+        }
+        let x = Self::solve_over_from(&space, batch, &self.gradient, &x0);
+        let alloc = Self::allocation_of(&space, &x, batch);
+        Self::remember(warm, sig, &space, prev.rand_w, rand_opt, &x);
+        alloc
     }
 }
 
@@ -194,6 +330,74 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn warm_matches_cold_quality_over_steady_sequence() {
+        use crate::alloc::testing::matrix_instance;
+        use crate::alloc::warm::WarmState;
+        let policy = FastPf::default();
+        let mut warm = WarmState::new();
+        // Utilities drift batch to batch; the class structure holds —
+        // the §5.3 steady state. Warm must track cold within ε on the
+        // PF objective (Σ log V_i) and on per-tenant fairness.
+        for k in 0..6u64 {
+            let a = 1 + (k % 3);
+            let rows: Vec<Vec<u64>> =
+                vec![vec![2 + a, 1, 0], vec![0, 1 + a, 0], vec![0, 1, 2 + a]];
+            let refs: Vec<&[u64]> = rows.iter().map(|r| r.as_slice()).collect();
+            let b = matrix_instance(&refs, 1.0);
+            let cold = policy.allocate(&b, &mut Pcg64::new(100 + k));
+            let warm_a = policy.allocate_warm(&b, &mut Pcg64::new(100 + k), &mut warm);
+            let vc = cold.expected_scaled_utilities(&b);
+            let vw = warm_a.expected_scaled_utilities(&b);
+            let obj = |v: &[f64]| v.iter().map(|x| x.max(1e-9).ln()).sum::<f64>();
+            assert!(
+                (obj(&vc) - obj(&vw)).abs() < 0.05,
+                "batch {k}: cold {vc:?} warm {vw:?}"
+            );
+            for (c, w) in vc.iter().zip(&vw) {
+                assert!((c - w).abs() < 0.05, "batch {k}: cold {vc:?} warm {vw:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn warm_reuses_random_vectors_and_invalidates_on_shape_change() {
+        use crate::alloc::testing::matrix_instance;
+        use crate::alloc::warm::WarmState;
+        let policy = FastPf::default();
+        let mut warm = WarmState::new();
+        let b1 = matrix_instance(&[&[2, 1, 0], &[0, 1, 0], &[0, 1, 2]], 1.0);
+        policy.allocate_warm(&b1, &mut Pcg64::new(1), &mut warm);
+        let w_first = warm.fastpf.as_ref().unwrap().rand_w.clone();
+        assert_eq!(w_first.len(), policy.prune_vectors);
+        // Same shape next batch: the drawn vectors are carried verbatim
+        // (no RNG consumption on the warm path).
+        let b2 = matrix_instance(&[&[4, 2, 0], &[0, 2, 0], &[0, 2, 4]], 1.0);
+        policy.allocate_warm(&b2, &mut Pcg64::new(2), &mut warm);
+        assert_eq!(warm.fastpf.as_ref().unwrap().rand_w, w_first);
+        // Budget change = shape change: full cold re-prune, fresh draws.
+        let b3 = matrix_instance(&[&[4, 2, 0], &[0, 2, 0], &[0, 2, 4]], 2.0);
+        policy.allocate_warm(&b3, &mut Pcg64::new(3), &mut warm);
+        assert_ne!(warm.fastpf.as_ref().unwrap().rand_w, w_first);
+        // Explicit invalidation also voids the carried state.
+        warm.invalidate();
+        assert!(warm.fastpf.is_none());
+    }
+
+    #[test]
+    fn warm_first_call_matches_cold_exactly() {
+        use crate::alloc::warm::WarmState;
+        // With no carried state, allocate_warm runs the same pruning
+        // and gradient as allocate, consuming the same RNG stream.
+        let b = table2();
+        let policy = FastPf::default();
+        let cold = policy.allocate(&b, &mut Pcg64::new(11));
+        let mut warm = WarmState::new();
+        let first = policy.allocate_warm(&b, &mut Pcg64::new(11), &mut warm);
+        assert_eq!(cold.configs, first.configs);
+        assert_eq!(cold.probs, first.probs);
     }
 
     #[test]

@@ -15,9 +15,18 @@
 //! its values are rewritten per iteration — the skeleton (view sets,
 //! sizes, budget) never changes across the T solves.
 
+use crate::alloc::warm::{BatchSignature, MmfWarm, WarmState};
 use crate::alloc::{Allocation, ConfigMask, Policy};
 use crate::domain::utility::BatchUtilities;
 use crate::util::rng::Pcg64;
+
+/// Warm runs may stop once the WELFARE optimum has been identical for
+/// this many consecutive iterations (the dual weights have entered the
+/// region where one configuration dominates)...
+const MMF_STABLE_EXIT: usize = 8;
+/// ...but never before this many iterations, so the averaged iterate
+/// always mixes at least a few configurations.
+const MMF_MIN_ITERS: usize = 16;
 
 #[derive(Debug)]
 pub struct SimpleMmfMw {
@@ -47,18 +56,54 @@ impl SimpleMmfMw {
     /// Run Algorithm 2; returns (configs, probabilities) before
     /// normalization into an [`Allocation`].
     pub fn solve(&self, batch: &BatchUtilities) -> Vec<(ConfigMask, f64)> {
+        let mut no_warm = None;
+        self.solve_inner(batch, &mut no_warm)
+    }
+
+    /// [`solve`](Self::solve) with carried dual weights. When `warm`
+    /// holds converged weights for a same-shape batch with the same
+    /// active-tenant set, the loop starts from them instead of uniform
+    /// and may early-exit once the per-iteration WELFARE optimum is
+    /// stable (the remaining probability mass goes to the stable
+    /// configuration — exactly what the truncated iterations would have
+    /// pushed). The converged weights are always stored back.
+    pub fn solve_warm(
+        &self,
+        batch: &BatchUtilities,
+        warm: &mut WarmState,
+    ) -> Vec<(ConfigMask, f64)> {
+        let mut slot = Some(warm);
+        self.solve_inner(batch, &mut slot)
+    }
+
+    fn solve_inner(
+        &self,
+        batch: &BatchUtilities,
+        warm: &mut Option<&mut WarmState>,
+    ) -> Vec<(ConfigMask, f64)> {
         let active = batch.active_tenants();
         let n = active.len();
         if n == 0 {
             return vec![(ConfigMask::empty(batch.n_views()), 1.0)];
         }
+        let sig = warm.as_ref().map(|_| BatchSignature::of(batch));
+        let seeded = match (warm.as_mut(), sig.as_ref()) {
+            (Some(w), Some(sig)) => w
+                .mmf
+                .take()
+                .filter(|p| p.sig.same_shape(sig) && p.active == active)
+                .map(|p| p.weights),
+            _ => None,
+        };
+        let was_seeded = seeded.is_some();
         let t_iters = self.iterations(n);
         let mut welfare = batch.welfare_template();
         // Dual weights live on active tenants only.
-        let mut w = vec![1.0 / n as f64; n];
+        let mut w = seeded.unwrap_or_else(|| vec![1.0 / n as f64; n]);
         let mut full_w = vec![0.0; batch.n_tenants];
         let mut pairs: Vec<(ConfigMask, f64)> = Vec::new();
-        for _k in 0..t_iters {
+        let mut stable = 0usize;
+        for k in 0..t_iters {
             // WELFARE(w): lift the active-tenant weights into a full
             // weight vector.
             for (j, &i) in active.iter().enumerate() {
@@ -76,7 +121,27 @@ impl SimpleMmfMw {
             for wj in w.iter_mut() {
                 *wj /= norm;
             }
-            pairs.push((mask, 1.0 / t_iters as f64));
+            match pairs.last() {
+                Some((last, _)) if *last == mask => stable += 1,
+                _ => stable = 0,
+            }
+            pairs.push((mask.clone(), 1.0 / t_iters as f64));
+            // Seeded runs re-enter near the fixed point; once the
+            // optimum stops moving, hand the rest of the mass to it.
+            if was_seeded && stable >= MMF_STABLE_EXIT && k + 1 >= MMF_MIN_ITERS {
+                let remaining = (t_iters - (k + 1)) as f64 / t_iters as f64;
+                if remaining > 0.0 {
+                    pairs.push((mask, remaining));
+                }
+                break;
+            }
+        }
+        if let (Some(slot), Some(sig)) = (warm.as_mut(), sig) {
+            slot.mmf = Some(MmfWarm {
+                sig,
+                active,
+                weights: w,
+            });
         }
         pairs
     }
@@ -89,6 +154,15 @@ impl Policy for SimpleMmfMw {
 
     fn allocate(&self, batch: &BatchUtilities, _rng: &mut Pcg64) -> Allocation {
         Allocation::from_weighted(self.solve(batch))
+    }
+
+    fn allocate_warm(
+        &self,
+        batch: &BatchUtilities,
+        _rng: &mut Pcg64,
+        warm: &mut WarmState,
+    ) -> Allocation {
+        Allocation::from_weighted(self.solve_warm(batch, warm))
     }
 }
 
@@ -153,5 +227,39 @@ mod tests {
         let b = matrix_instance(&[&[0], &[0]], 1.0);
         let a = SimpleMmfMw::default().allocate(&b, &mut Pcg64::new(0));
         assert!((a.total_probability() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn warm_first_call_matches_cold_and_mass_conserved() {
+        let b = table4(4);
+        let policy = SimpleMmfMw::default();
+        let mut warm = WarmState::new();
+        // An empty WarmState seeds nothing: identical pairs to cold.
+        let cold = policy.solve(&b);
+        let first = policy.solve_warm(&b, &mut warm);
+        assert_eq!(cold, first);
+        assert!(warm.mmf.is_some());
+        // A seeded re-solve may truncate but must conserve unit mass and
+        // keep the min-fairness guarantee.
+        let again = policy.solve_warm(&b, &mut warm);
+        let mass: f64 = again.iter().map(|(_, p)| p).sum();
+        assert!((mass - 1.0).abs() < 1e-9, "mass={mass}");
+        let v = Allocation::from_weighted(again).expected_scaled_utilities(&b);
+        let min = v.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(min >= 0.5 * 0.75, "v={v:?}");
+    }
+
+    #[test]
+    fn warm_seed_rejected_on_shape_change() {
+        use crate::alloc::testing::matrix_instance;
+        let policy = SimpleMmfMw::default();
+        let mut warm = WarmState::new();
+        policy.solve_warm(&matrix_instance(&[&[1, 0], &[0, 1]], 1.0), &mut warm);
+        // Budget change → shape mismatch → runs cold from uniform and
+        // stores fresh weights for the new shape.
+        let b2 = matrix_instance(&[&[1, 0], &[0, 1]], 2.0);
+        let warm_pairs = policy.solve_warm(&b2, &mut warm);
+        assert_eq!(warm_pairs, policy.solve(&b2));
+        assert!(warm.mmf.as_ref().unwrap().sig.budget_bits == 2.0f64.to_bits());
     }
 }

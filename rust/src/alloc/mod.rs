@@ -20,9 +20,11 @@ pub mod optp;
 pub mod pf_mw;
 pub mod rsd;
 pub mod static_part;
+pub mod warm;
 
 pub use config_space::{ConfigId, ConfigSpace};
 pub use crate::util::mask::ConfigMask;
+pub use warm::{BatchSignature, WarmState};
 
 use crate::domain::utility::BatchUtilities;
 use crate::util::rng::Pcg64;
@@ -121,6 +123,24 @@ pub trait Policy: Send + Sync {
     /// Compute the per-batch allocation. `rng` drives any internal
     /// randomization (random weight vectors, permutations).
     fn allocate(&self, batch: &BatchUtilities, rng: &mut Pcg64) -> Allocation;
+
+    /// Warm-started variant: like [`Policy::allocate`], but the policy
+    /// may reuse (and must refresh) state carried in `warm` from the
+    /// owner's previous batch — see [`warm::WarmState`]. The default
+    /// ignores the state, so policies without an incremental path stay
+    /// bit-identical to their cold solve; FASTPF and the MW policies
+    /// override it. Only called by drivers running with `--warm-start`;
+    /// allocations must match the cold solve's welfare/fairness within
+    /// ε, not bit-for-bit.
+    fn allocate_warm(
+        &self,
+        batch: &BatchUtilities,
+        rng: &mut Pcg64,
+        warm: &mut WarmState,
+    ) -> Allocation {
+        let _ = warm;
+        self.allocate(batch, rng)
+    }
 }
 
 /// Scale a batch problem's tenant weights λ_i in place by per-tenant

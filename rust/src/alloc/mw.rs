@@ -47,18 +47,68 @@ pub struct OracleResponse<X> {
 
 /// Run AHK over `r` constraints. `y_dot_b` computes `yᵀb` for the current
 /// duals; `oracle` returns the best point for the duals.
-pub fn ahk<X, F>(r: usize, params: &AhkParams, y_dot_b: impl Fn(&[f64]) -> f64, mut oracle: F) -> AhkOutcome<X>
+pub fn ahk<X, F>(r: usize, params: &AhkParams, y_dot_b: impl Fn(&[f64]) -> f64, oracle: F) -> AhkOutcome<X>
 where
+    X: PartialEq,
+    F: FnMut(&[f64]) -> OracleResponse<X>,
+{
+    ahk_from(r, params, y_dot_b, oracle, None, None).outcome
+}
+
+/// One AHK run's outcome plus the final dual weights — the warm-start
+/// hand-off for the next batch's feasibility checks.
+pub struct AhkRun<X> {
+    pub outcome: AhkOutcome<X>,
+    pub duals: Vec<f64>,
+}
+
+/// [`ahk`] with warm-start hooks: `y0` seeds the dual weights (any
+/// invalid seed — wrong length, negative entries, zero mass — falls
+/// back to uniform), and `stable_exit = Some(k)` declares feasibility
+/// early once the oracle returns the *same* point for `k` consecutive
+/// iterations — the duals have settled into a region where one
+/// configuration dominates, so further iterations only replicate it in
+/// the average. Early exit weakens the Theorem 3 additive-δ guarantee
+/// to a heuristic and is only used on warm solve paths, where
+/// equivalence is quality-within-ε (the infeasibility certificate
+/// `yᵀAx < yᵀb` is still checked every iteration, so seeded runs never
+/// misreport an infeasible system as feasible through the seed alone).
+/// With `y0 = None` and `stable_exit = None`, iteration count, updates,
+/// and outcome are bit-identical to [`ahk`].
+pub fn ahk_from<X, F>(
+    r: usize,
+    params: &AhkParams,
+    y_dot_b: impl Fn(&[f64]) -> f64,
+    mut oracle: F,
+    y0: Option<&[f64]>,
+    stable_exit: Option<usize>,
+) -> AhkRun<X>
+where
+    X: PartialEq,
     F: FnMut(&[f64]) -> OracleResponse<X>,
 {
     let iters = params.iterations(r);
-    let mut y = vec![1.0 / r as f64; r];
-    let mut points = Vec::with_capacity(iters);
+    let mut y = match y0 {
+        Some(seed)
+            if seed.len() == r
+                && seed.iter().all(|v| v.is_finite() && *v >= 0.0)
+                && seed.iter().sum::<f64>() > 0.0 =>
+        {
+            let norm: f64 = seed.iter().sum();
+            seed.iter().map(|v| v / norm).collect()
+        }
+        _ => vec![1.0 / r as f64; r],
+    };
+    let mut points: Vec<X> = Vec::with_capacity(iters);
+    let mut stable = 0usize;
     for _t in 0..iters {
         let resp = oracle(&y);
         debug_assert_eq!(resp.slacks.len(), r);
         if resp.value < y_dot_b(&y) - 1e-12 {
-            return AhkOutcome::Infeasible;
+            return AhkRun {
+                outcome: AhkOutcome::Infeasible,
+                duals: y,
+            };
         }
         // Multiplicative update (Algorithm 1 lines 7-12): constraints
         // with positive slack get down-weighted, violated constraints
@@ -77,9 +127,19 @@ where
                 *yi /= norm;
             }
         }
+        match points.last() {
+            Some(last) if *last == resp.point => stable += 1,
+            _ => stable = 0,
+        }
         points.push(resp.point);
+        if stable_exit.is_some_and(|k| stable >= k) {
+            break;
+        }
     }
-    AhkOutcome::Feasible { points }
+    AhkRun {
+        outcome: AhkOutcome::Feasible { points },
+        duals: y,
+    }
 }
 
 #[cfg(test)]

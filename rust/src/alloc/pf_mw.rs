@@ -14,10 +14,15 @@
 //! One [`WelfareTemplate`] is shared across every AHK iteration of every
 //! feasibility check — the oracle rewrites only the dual-weight values.
 
-use crate::alloc::mw::{ahk, AhkOutcome, AhkParams, OracleResponse};
+use crate::alloc::mw::{ahk_from, AhkOutcome, AhkParams, OracleResponse};
+use crate::alloc::warm::{BatchSignature, PfMwWarm, WarmState};
 use crate::alloc::{Allocation, ConfigMask, Policy};
 use crate::domain::utility::{BatchUtilities, WelfareTemplate};
 use crate::util::rng::Pcg64;
+
+/// Warm feasibility checks may stop once the WELFARE optimum has been
+/// identical for this many consecutive AHK iterations.
+const PF_STABLE_EXIT: usize = 8;
 
 #[derive(Debug)]
 pub struct PfMw {
@@ -87,13 +92,30 @@ impl PfMw {
         active: &[usize],
         q: f64,
     ) -> Option<Vec<ConfigMask>> {
+        self.pf_feas_from(batch, welfare, active, q, None, None).0
+    }
+
+    /// [`pf_feas`](Self::pf_feas) with warm-start hooks: `y0` seeds the
+    /// AHK duals and `stable_exit` enables the early feasibility exit.
+    /// Always returns the final duals alongside the outcome so a failed
+    /// probe still hands its dual progress to the next check. With both
+    /// hooks `None` the outcome is bit-identical to `pf_feas`.
+    fn pf_feas_from(
+        &self,
+        batch: &BatchUtilities,
+        welfare: &mut WelfareTemplate,
+        active: &[usize],
+        q: f64,
+        y0: Option<&[f64]>,
+        stable_exit: Option<usize>,
+    ) -> (Option<Vec<ConfigMask>>, Vec<f64>) {
         let n = active.len();
         let params = AhkParams {
             rho: 1.0,
             delta: (self.epsilon / (n * n) as f64).max(1e-3),
             max_iters: self.max_iters,
         };
-        let outcome = ahk(
+        let run = ahk_from(
             n,
             &params,
             |_y| 0.0, // b = 0
@@ -124,11 +146,14 @@ impl PfMw {
                     slacks,
                 }
             },
+            y0,
+            stable_exit,
         );
-        match outcome {
+        let result = match run.outcome {
             AhkOutcome::Feasible { points } => Some(points),
             AhkOutcome::Infeasible => None,
-        }
+        };
+        (result, run.duals)
     }
 
     /// Binary search for the largest feasible Q; returns the allocation
@@ -164,6 +189,94 @@ impl PfMw {
         let w = 1.0 / points.len() as f64;
         points.into_iter().map(|p| (p, w)).collect()
     }
+
+    /// [`solve`](Self::solve) with carried state. When `warm` holds a
+    /// same-shape, same-active-set record, the previous converged Q* is
+    /// probed first (skipping the always-feasible floor probe on
+    /// success), every AHK run is seeded with the latest duals, and the
+    /// stable-optimum early exit is enabled. With nothing carried the
+    /// pair sequence is bit-identical to `solve` (and the run's Q*/duals
+    /// are recorded for the next batch either way).
+    pub fn solve_warm(
+        &self,
+        batch: &BatchUtilities,
+        warm: &mut WarmState,
+    ) -> Vec<(ConfigMask, f64)> {
+        let active = batch.active_tenants();
+        let n = active.len();
+        if n == 0 {
+            return vec![(ConfigMask::empty(batch.n_views()), 1.0)];
+        }
+        let sig = BatchSignature::of(batch);
+        let prev = warm
+            .pf
+            .take()
+            .filter(|p| p.sig.same_shape(&sig) && p.active == active);
+        let seeded = prev.is_some();
+        let stable = seeded.then_some(PF_STABLE_EXIT);
+        let mut welfare = batch.welfare_template();
+        let floor = -(n as f64) * (n as f64).ln() - 1e-9; // Q of all-SI floor
+        let mut lo = floor;
+        let mut hi = 0.0;
+        let mut best: Option<Vec<ConfigMask>> = None;
+        let mut duals: Option<Vec<f64>> = prev.as_ref().map(|p| p.duals.clone());
+        if let Some(p) = &prev {
+            // Probe the previous converged Q* first: in steady state it
+            // is still feasible and brackets the search from below.
+            if (floor..=0.0).contains(&p.q_lo) {
+                let seed = duals.take().filter(|_| seeded);
+                let (r, d) = self.pf_feas_from(
+                    batch, &mut welfare, &active, p.q_lo, seed.as_deref(), stable,
+                );
+                match r {
+                    Some(points) => {
+                        lo = p.q_lo;
+                        best = Some(points);
+                    }
+                    None => hi = p.q_lo.min(hi),
+                }
+                duals = Some(d);
+            }
+        }
+        if best.is_none() {
+            // Q = lo is always feasible (the SI allocation exists: RSD's).
+            let seed = duals.take().filter(|_| seeded);
+            let (r, d) =
+                self.pf_feas_from(batch, &mut welfare, &active, floor, seed.as_deref(), stable);
+            duals = Some(d);
+            match r {
+                Some(points) => best = Some(points),
+                None => {
+                    // Extremely degenerate batch; fall back to empty config.
+                    return vec![(ConfigMask::empty(batch.n_views()), 1.0)];
+                }
+            }
+            lo = floor;
+        }
+        for _ in 0..self.search_steps {
+            let mid = 0.5 * (lo + hi);
+            let seed = duals.take().filter(|_| seeded);
+            let (r, d) =
+                self.pf_feas_from(batch, &mut welfare, &active, mid, seed.as_deref(), stable);
+            match r {
+                Some(points) => {
+                    best = Some(points);
+                    lo = mid;
+                }
+                None => hi = mid,
+            }
+            duals = Some(d);
+        }
+        warm.pf = Some(PfMwWarm {
+            sig,
+            active,
+            q_lo: lo,
+            duals: duals.unwrap(),
+        });
+        let points = best.unwrap();
+        let w = 1.0 / points.len() as f64;
+        points.into_iter().map(|p| (p, w)).collect()
+    }
 }
 
 impl Policy for PfMw {
@@ -173,6 +286,15 @@ impl Policy for PfMw {
 
     fn allocate(&self, batch: &BatchUtilities, _rng: &mut Pcg64) -> Allocation {
         Allocation::from_weighted(self.solve(batch))
+    }
+
+    fn allocate_warm(
+        &self,
+        batch: &BatchUtilities,
+        _rng: &mut Pcg64,
+        warm: &mut WarmState,
+    ) -> Allocation {
+        Allocation::from_weighted(self.solve_warm(batch, warm))
     }
 }
 
@@ -233,5 +355,47 @@ mod tests {
         for vi in &v {
             assert!(*vi >= 0.5 - 0.12, "v={v:?}");
         }
+    }
+
+    #[test]
+    fn warm_first_call_matches_cold_exactly() {
+        let b = table2();
+        let policy = PfMw::default();
+        let mut warm = WarmState::new();
+        let cold = policy.solve(&b);
+        let first = policy.solve_warm(&b, &mut warm);
+        assert_eq!(cold, first);
+        let rec = warm.pf.as_ref().expect("state recorded");
+        assert_eq!(rec.active, b.active_tenants());
+        assert!(rec.q_lo.is_finite());
+    }
+
+    #[test]
+    fn warm_resolve_keeps_quality() {
+        let b = table4(4);
+        let policy = PfMw::default();
+        let mut warm = WarmState::new();
+        policy.solve_warm(&b, &mut warm);
+        // The seeded re-solve on the same workload keeps PF structure:
+        // majority tenants biased up, minority tenant retained.
+        let pairs = policy.solve_warm(&b, &mut warm);
+        let v = Allocation::from_weighted(pairs).expected_scaled_utilities(&b);
+        assert!(v[0] > 0.6, "v={v:?}");
+        assert!(v[3] > 0.1, "v={v:?}");
+        let floor = -4.0 * 4.0f64.ln() - 1e-6;
+        assert!(warm.pf.as_ref().unwrap().q_lo >= floor);
+    }
+
+    #[test]
+    fn warm_seed_rejected_on_active_set_change() {
+        use crate::alloc::testing::matrix_instance;
+        let policy = PfMw::default();
+        let mut warm = WarmState::new();
+        policy.solve_warm(&matrix_instance(&[&[1, 0], &[0, 1]], 1.0), &mut warm);
+        // Tenant 1 goes inactive: same shape but a different active set,
+        // so the carried record is dropped and the run is cold-identical.
+        let b2 = matrix_instance(&[&[1, 0], &[0, 0]], 1.0);
+        assert_eq!(policy.solve_warm(&b2, &mut warm), policy.solve(&b2));
+        assert_eq!(warm.pf.as_ref().unwrap().active, vec![0]);
     }
 }

@@ -1,0 +1,220 @@
+//! Warm-started incremental batch solves: persistent per-coordinator
+//! (and per-shard) state carried from batch *b* to batch *b+1*.
+//!
+//! Batch b+1's workload heavily overlaps batch b's, yet the cold solve
+//! path re-runs the full §4.3 pruning enumeration (M exact WELFARE
+//! knapsacks) and restarts every multiplicative-weights loop from
+//! uniform weights. [`WarmState`] caches the three reusable artifacts:
+//!
+//! * **FASTPF** — the previous pruned [`ConfigSpace`] (stable masks from
+//!   the interning arena), the M random weight vectors with their
+//!   cached WELFARE optima, and the converged gradient distribution.
+//!   The next batch re-*scores* every cached config against the fresh
+//!   problem (cheap word-wise subset tests) but re-*solves* the exact
+//!   knapsack only for weight vectors whose cached optimum is
+//!   invalidated; the gradient ascent starts from the previous
+//!   distribution and early-exits on its built-in tolerance.
+//! * **MMF-MW / PF-MW** — the converged dual weights of the MW loops,
+//!   plus (for PF-MW) the converged binary-search point Q*, so
+//!   steady-state batches re-enter near the fixed point and exit after
+//!   a fraction of the 400–600 iteration cap.
+//!
+//! Validity is governed by [`BatchSignature`]: any change in tenant
+//! count, view count, or cache budget (membership events and budget
+//! re-splits always change one of these) voids everything; per-view
+//! *structural* signatures (which tenant/view-set classes touch a view)
+//! decide per-cached-optimum reuse under ordinary workload drift.
+//! Owners additionally call [`WarmState::invalidate`] on membership,
+//! re-home, and budget re-split events so elasticity never trusts stale
+//! state even transiently. Equivalence is defined by quality, not bits:
+//! warm allocations must match cold welfare/fairness within ε
+//! (`rust/tests/warm_equivalence.rs`); drivers replaying history run
+//! with warm-start off and stay bit-identical to the legacy path.
+
+use crate::domain::utility::BatchUtilities;
+use crate::util::mask::ConfigMask;
+use crate::util::rng::mix64;
+
+/// Structural identity of a batch problem, used to decide how much of
+/// the previous batch's solve survives.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchSignature {
+    pub n_tenants: usize,
+    pub n_views: usize,
+    /// Exact bit pattern of the cache budget: a federation budget
+    /// re-split (total/N′ on membership change) always lands here, so a
+    /// shape mismatch forces a full cold re-prune even if the owner
+    /// forgot to invalidate explicitly.
+    pub budget_bits: u64,
+    /// Per-view hash chained over the *structure* of the query classes
+    /// touching the view — (tenant, required view set) only, not the
+    /// per-batch utility/count, which drift every batch under Poisson
+    /// arrivals. A view's signature changes when a tenant starts or
+    /// stops issuing a class over it (workload mix shift), which is
+    /// when a cached WELFARE optimum containing the view goes stale in
+    /// a way re-scoring alone cannot detect.
+    pub view_sigs: Vec<u64>,
+}
+
+impl BatchSignature {
+    pub fn of(batch: &BatchUtilities) -> Self {
+        let mut view_sigs = vec![0x9e37_79b9_7f4a_7c15u64; batch.n_views()];
+        for c in &batch.classes {
+            let mut h = mix64(0xa076_1d64_78bd_642fu64 ^ c.tenant as u64);
+            for &v in &c.views {
+                h = mix64(h ^ v as u64);
+            }
+            for &v in &c.views {
+                view_sigs[v] = mix64(view_sigs[v] ^ h);
+            }
+        }
+        Self {
+            n_tenants: batch.n_tenants,
+            n_views: batch.n_views(),
+            budget_bits: batch.budget.to_bits(),
+            view_sigs,
+        }
+    }
+
+    /// Same problem shape: tenant count, view count, and budget. Any
+    /// mismatch voids all carried state (cold re-prune).
+    pub fn same_shape(&self, other: &Self) -> bool {
+        self.n_tenants == other.n_tenants
+            && self.n_views == other.n_views
+            && self.budget_bits == other.budget_bits
+    }
+
+    /// True when every member view of `mask` has an unchanged class
+    /// structure relative to `other` (drawn when the cached optimum was
+    /// produced).
+    pub fn views_unchanged(&self, other: &Self, mask: &ConfigMask) -> bool {
+        mask.ones().all(|v| self.view_sigs[v] == other.view_sigs[v])
+    }
+}
+
+/// FASTPF's carried state (see module docs).
+#[derive(Debug, Clone)]
+pub(crate) struct FastPfWarm {
+    pub sig: BatchSignature,
+    /// Every mask of the previous batch's pruned space, in id order.
+    pub masks: Vec<ConfigMask>,
+    /// The M random unit weight vectors drawn at the last cold prune
+    /// (reused verbatim while the shape holds — they are still M random
+    /// unit vectors; §4.3 only needs them to spray the Pareto frontier).
+    pub rand_w: Vec<Vec<f64>>,
+    /// Cached exact-WELFARE optimum per random vector.
+    pub rand_opt: Vec<ConfigMask>,
+    /// The previous converged allocation (mask → probability), the
+    /// gradient warm start.
+    pub x_by_mask: Vec<(ConfigMask, f64)>,
+}
+
+/// SIMPLEMMF's carried state: converged dual weights over the active
+/// tenant set.
+#[derive(Debug, Clone)]
+pub(crate) struct MmfWarm {
+    pub sig: BatchSignature,
+    pub active: Vec<usize>,
+    pub weights: Vec<f64>,
+}
+
+/// PF-MW's carried state: the converged binary-search point Q* and the
+/// final AHK duals of the last feasible check.
+#[derive(Debug, Clone)]
+pub(crate) struct PfMwWarm {
+    pub sig: BatchSignature,
+    pub active: Vec<usize>,
+    pub q_lo: f64,
+    pub duals: Vec<f64>,
+}
+
+/// Persistent warm-start state, one per solve owner (coordinator
+/// planner, serving loop, federated shard). Policies read and refresh
+/// the slot they own through [`crate::alloc::Policy::allocate_warm`];
+/// an empty state makes every warm entry behave exactly like a cold
+/// solve that also records its trace.
+#[derive(Debug, Clone, Default)]
+pub struct WarmState {
+    pub(crate) fastpf: Option<FastPfWarm>,
+    pub(crate) mmf: Option<MmfWarm>,
+    pub(crate) pf: Option<PfMwWarm>,
+}
+
+impl WarmState {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Drop everything: the next solve of every policy runs fully cold.
+    /// Called on membership events, view re-homes, and budget re-splits
+    /// (belt and braces on top of the [`BatchSignature`] shape check).
+    pub fn invalidate(&mut self) {
+        *self = Self::new();
+    }
+
+    /// True when no state is carried (fresh or just invalidated).
+    pub fn is_cold(&self) -> bool {
+        self.fastpf.is_none() && self.mmf.is_none() && self.pf.is_none()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::testing::{matrix_instance, table3};
+
+    #[test]
+    fn signature_same_shape_and_drift() {
+        let a = BatchSignature::of(&table3());
+        let b = BatchSignature::of(&table3());
+        assert!(a.same_shape(&b));
+        assert_eq!(a, b);
+        // Different utility *values* keep the structural view sigs: the
+        // same (tenant, view-set) classes touch the same views.
+        let scaled = matrix_instance(&[&[4, 2, 0], &[0, 2, 0], &[0, 2, 4]], 1.0);
+        let c = BatchSignature::of(&scaled);
+        assert!(a.same_shape(&c));
+        assert_eq!(a.view_sigs, c.view_sigs);
+        // A tenant dropping a class changes exactly that view's sig.
+        let shifted = matrix_instance(&[&[2, 0, 0], &[0, 1, 0], &[0, 1, 2]], 1.0);
+        let d = BatchSignature::of(&shifted);
+        assert!(a.same_shape(&d));
+        assert_ne!(a.view_sigs[1], d.view_sigs[1]);
+        assert_eq!(a.view_sigs[2], d.view_sigs[2]);
+    }
+
+    #[test]
+    fn signature_budget_mismatch_voids_shape() {
+        let a = BatchSignature::of(&matrix_instance(&[&[1, 0], &[0, 1]], 1.0));
+        let b = BatchSignature::of(&matrix_instance(&[&[1, 0], &[0, 1]], 2.0));
+        assert!(!a.same_shape(&b));
+    }
+
+    #[test]
+    fn views_unchanged_masks_member_views_only() {
+        let base = BatchSignature::of(&table3());
+        let shifted =
+            BatchSignature::of(&matrix_instance(&[&[2, 0, 0], &[0, 1, 0], &[0, 1, 2]], 1.0));
+        // View 1's classes changed, views 0/2 did not.
+        let v0 = ConfigMask::from_bools(&[true, false, false]);
+        let v1 = ConfigMask::from_bools(&[false, true, false]);
+        assert!(shifted.views_unchanged(&base, &v0));
+        assert!(!shifted.views_unchanged(&base, &v1));
+        // The empty mask is trivially unchanged.
+        assert!(shifted.views_unchanged(&base, &ConfigMask::empty(3)));
+    }
+
+    #[test]
+    fn invalidate_clears_all_slots() {
+        let mut w = WarmState::new();
+        assert!(w.is_cold());
+        w.mmf = Some(MmfWarm {
+            sig: BatchSignature::of(&table3()),
+            active: vec![0, 1, 2],
+            weights: vec![0.4, 0.3, 0.3],
+        });
+        assert!(!w.is_cold());
+        w.invalidate();
+        assert!(w.is_cold());
+    }
+}

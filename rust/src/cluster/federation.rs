@@ -92,6 +92,10 @@ pub struct FederationConfig {
     /// Batches a freshly added shard is excluded from the global
     /// accountant while its cold cache warms up.
     pub warmup_batches: usize,
+    /// Per-shard warm-started incremental solves. Off by default so
+    /// `robus cluster` replays stay bit-identical to the historical
+    /// path; the federated serving layer follows `serve`'s default (on).
+    pub warm_start: bool,
 }
 
 impl Default for FederationConfig {
@@ -105,6 +109,7 @@ impl Default for FederationConfig {
             membership: MembershipPlan::empty(),
             replica_decay: None,
             warmup_batches: 2,
+            warm_start: false,
         }
     }
 }
@@ -287,6 +292,7 @@ impl<'a> ShardedCoordinator<'a> {
                     self.config.seed,
                     live_budget,
                     0,
+                    self.fed.warm_start,
                 )
             })
             .collect();
@@ -355,6 +361,7 @@ impl<'a> ShardedCoordinator<'a> {
                             self.config.seed,
                             live_budget,
                             b + self.fed.warmup_batches,
+                            self.fed.warm_start,
                         ));
                         membership_changes.push(MembershipChange {
                             action: ev.action,
@@ -412,10 +419,15 @@ impl<'a> ShardedCoordinator<'a> {
                         });
                     }
                 }
-                // Budget re-split across the new live set.
+                // Budget re-split across the new live set. Carried
+                // solver state is dropped along with it: the budget
+                // change already voids the warm shape signature, the
+                // explicit invalidation keeps elastic events from ever
+                // trusting stale artifacts even transiently.
                 live_budget = total_budget / shards.len() as u64;
                 for sh in shards.iter_mut() {
                     sh.executor.cache_mut().set_budget(live_budget);
+                    sh.invalidate_warm();
                 }
             }
 
@@ -690,6 +702,9 @@ pub(crate) fn rehome<'a, 'e: 'a>(
         }
         *churn += sh.executor.cache().delta_to(&keep).bytes_evicted;
         sh.home = new_home;
+        // A re-home changes what the router feeds this shard next batch;
+        // carried solver state is stale by definition.
+        sh.invalidate_warm();
     }
     reclaimed
 }
@@ -699,7 +714,7 @@ pub(crate) fn rehome<'a, 'e: 'a>(
 /// previous batch's demand stayed below `frac` for `k` consecutive
 /// batches (a zero-demand batch counts as below for every view). Views
 /// without replicas keep their streak at zero.
-fn decay_due(
+pub(crate) fn decay_due(
     streaks: &mut [usize],
     prev_demand: &[u64],
     total: u64,
@@ -846,8 +861,8 @@ mod tests {
             universe.views.iter().map(|v| v.cached_bytes).collect();
         let start = Placement::hash(2, n_views);
         let mut shards = vec![
-            Shard::new(0, &engine, &universe, &tenants, start.shard_mask(0), 7, 1000, 0),
-            Shard::new(1, &engine, &universe, &tenants, start.shard_mask(1), 7, 1000, 0),
+            Shard::new(0, &engine, &universe, &tenants, start.shard_mask(0), 7, 1000, 0, false),
+            Shard::new(1, &engine, &universe, &tenants, start.shard_mask(1), 7, 1000, 0, false),
         ];
         // Pick a view homed on shard 0 and replicate it onto shard 1.
         let v = (0..n_views).find(|&v| start.home(v) == 0).unwrap();

@@ -54,7 +54,7 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::alloc::{ConfigMask, Policy};
-use crate::cluster::federation::{apply_placement, route_query, GlobalAccountant};
+use crate::cluster::federation::{apply_placement, decay_due, route_query, GlobalAccountant};
 use crate::cluster::membership::{AutoMembership, MembershipAction};
 use crate::cluster::metrics::{ClusterRecord, ClusterResult, MembershipChange};
 use crate::cluster::placement::{Placement, PlacementStrategy};
@@ -85,6 +85,15 @@ pub struct ServeFederationConfig {
     /// to every shard (`None` disables; meaningless on a federation
     /// that can never exceed one shard).
     pub replicate_hot: Option<f64>,
+    /// Replica decay (the replay federation's `--replica-decay`, on the
+    /// live path): evict a hot-view replica from its non-home holders
+    /// once its share of the cut demand stayed below `replicate_hot`
+    /// for this many consecutive batches.
+    pub replica_decay: Option<usize>,
+    /// Re-home views by cumulative demand (pack placer) every `k`
+    /// batches — the replay federation's `--rebalance-every` applied to
+    /// future arrivals through the admission router.
+    pub rebalance_every: Option<usize>,
     /// Reactive membership bounds (`--membership auto[:lo,hi]`);
     /// `None` keeps the shard set fixed.
     pub auto: Option<AutoMembership>,
@@ -108,6 +117,8 @@ impl ServeFederationConfig {
             n_shards,
             placement: PlacementStrategy::Hash,
             replicate_hot: None,
+            replica_decay: None,
+            rebalance_every: None,
             auto: None,
             max_shards: (n_shards * 4).max(8),
             warmup_batches: 2,
@@ -343,6 +354,7 @@ fn build_initial<'e>(
                 fcfg.serve.seed,
                 live_budget,
                 0,
+                fcfg.serve.warm_start,
             ),
             queue: Arc::new(AdmissionQueue::new(shard_queue_capacity(&fcfg.serve))),
             load: VecDeque::new(),
@@ -384,6 +396,9 @@ fn run_loop<'e, C: Clock>(
     // Whole-run demanded bytes per view: the pack placer's re-home
     // weights once any demand has been observed (before that, sizes).
     let mut cum_demand = vec![0u64; n_views];
+    // Consecutive cold cuts per replicated view — the replica-decay
+    // streaks (same machinery as the replay federation's).
+    let mut decay_streaks = vec![0usize; n_views];
     let mut live_budget = inp.total_budget / fcfg.n_shards as u64;
     let mut next_shard_id = fcfg.n_shards;
     // Reactive-membership state: consecutive batches the hottest
@@ -449,6 +464,7 @@ fn run_loop<'e, C: Clock>(
                             cfg.seed,
                             live_budget,
                             b + fcfg.warmup_batches,
+                            cfg.warm_start,
                         ),
                         queue,
                         load: VecDeque::new(),
@@ -629,6 +645,76 @@ fn run_loop<'e, C: Clock>(
             }
         }
 
+        // --- 3b. Replica decay, the replay federation's step on the
+        // live path: a replica whose share of the cut demand stayed
+        // below the hot threshold for `k` consecutive cuts leaves its
+        // non-home holders. The signal is the current cut — the same
+        // one replication keys off — so a view that just replicated
+        // starts its streak at zero. ---
+        let mut decayed_views = Vec::new();
+        if live.len() > 1 {
+            if let (Some(frac), Some(k)) = (fcfg.replicate_hot, fcfg.replica_decay) {
+                let total: u64 = batch_demand.iter().sum();
+                let has_replica: Vec<bool> = (0..n_views)
+                    .map(|v| live.iter().any(|ls| ls.shard.replicas.get(v)))
+                    .collect();
+                for v in decay_due(
+                    &mut decay_streaks,
+                    &batch_demand,
+                    total,
+                    frac,
+                    k,
+                    &has_replica,
+                ) {
+                    for ls in live.iter_mut() {
+                        if ls.shard.replicas.get(v) {
+                            ls.shard.replicas.set(v, false);
+                            replication_bytes =
+                                replication_bytes.saturating_sub(cached_sizes[v]);
+                            if ls.shard.executor.cache().is_cached(v)
+                                && !ls.shard.home.get(v)
+                            {
+                                // Projected eviction: the solver ages
+                                // the copy out once the router stops
+                                // feeding it.
+                                churn += cached_sizes[v];
+                            }
+                        }
+                    }
+                    decayed_views.push(v);
+                }
+                if !decayed_views.is_empty() {
+                    sync_router(router, &placement, &live);
+                }
+            }
+        }
+
+        // --- 3c. Periodic demand-driven re-home (`--rebalance-every`
+        // on the live path): future arrivals follow the new homes
+        // through the admission router. ---
+        let mut rebalanced = false;
+        if live.len() > 1 {
+            if let Some(kk) = fcfg.rebalance_every {
+                if kk > 0 && b > 0 && b % kk == 0 {
+                    let live_ids: Vec<usize> =
+                        live.iter().map(|ls| ls.shard.id).collect();
+                    let next = Placement::pack_weighted_for(&live_ids, &cum_demand);
+                    if next != placement {
+                        apply_placement(
+                            &mut placement,
+                            next,
+                            live.iter_mut().map(|ls| &mut ls.shard),
+                            cached_sizes,
+                            &mut churn,
+                            &mut replication_bytes,
+                        );
+                        rebalanced = true;
+                        sync_router(router, &placement, &live);
+                    }
+                }
+            }
+        }
+
         // --- 4. Solve + execute every live shard concurrently, under
         // the accountant's feedback (None while a single shard is live
         // — the single-node-equivalent path). ---
@@ -687,9 +773,9 @@ fn run_loop<'e, C: Clock>(
             index: b,
             multipliers: mults.unwrap_or_else(|| vec![1.0; n_tenants]),
             replicated_views,
-            rebalanced: false,
+            rebalanced,
             membership: membership_changes,
-            decayed_views: Vec::new(),
+            decayed_views,
             live_shards: live.len(),
             shard_budget: live_budget,
             warming_shards,
@@ -752,6 +838,7 @@ fn finish<'e>(
         n_batches: 0, // open-ended, like the single-node service
         stateful_gamma: cfg.stateful_gamma,
         seed: cfg.seed,
+        warm_start: cfg.warm_start,
     };
     let mut all = out.shards;
     all.sort_by_key(|sh| sh.id);
@@ -978,6 +1065,7 @@ mod tests {
             stateful_gamma: None,
             seed: 17,
             verbose: false,
+            warm_start: true,
         }
     }
 
@@ -1040,6 +1128,45 @@ mod tests {
             "no view crossed the 5% replication threshold"
         );
         assert!(r.cluster.replication_bytes > 0);
+        assert_eq!(r.serve.completed, r.serve.admitted);
+    }
+
+    #[test]
+    fn replica_decay_retires_cold_replicas_on_live_path() {
+        // A low threshold replicates marginal views that fluctuate
+        // around it across cuts; with a one-batch streak any of them
+        // going cold for a single cut must decay back out.
+        let mut cfg = base_cfg();
+        cfg.duration_secs = 2.0;
+        let mut fcfg = ServeFederationConfig::new(cfg, 2);
+        fcfg.replicate_hot = Some(0.05);
+        fcfg.replica_decay = Some(1);
+        let r = run_sim(&fcfg);
+        assert!(
+            r.cluster.records.iter().any(|rec| !rec.replicated_views.is_empty()),
+            "no view ever replicated"
+        );
+        assert!(
+            r.cluster.records.iter().any(|rec| !rec.decayed_views.is_empty()),
+            "no replica ever decayed under a one-batch streak"
+        );
+        assert_eq!(r.serve.completed, r.serve.admitted);
+    }
+
+    #[test]
+    fn periodic_rebalance_rehomes_by_demand_on_live_path() {
+        // Initial homes are hash-placed; cumulative Zipf-skewed demand
+        // packs differently, so a per-batch rebalance must fire at
+        // least once and admitted work must still be conserved.
+        let mut cfg = base_cfg();
+        cfg.duration_secs = 1.5;
+        let mut fcfg = ServeFederationConfig::new(cfg, 2);
+        fcfg.rebalance_every = Some(1);
+        let r = run_sim(&fcfg);
+        assert!(
+            r.cluster.records.iter().any(|rec| rec.rebalanced),
+            "demand-driven rebalance never fired"
+        );
         assert_eq!(r.serve.completed, r.serve.admitted);
     }
 }

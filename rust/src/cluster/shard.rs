@@ -21,7 +21,7 @@
 
 use std::time::Instant;
 
-use crate::alloc::{ConfigMask, Policy};
+use crate::alloc::{ConfigMask, Policy, WarmState};
 use crate::coordinator::loop_::{BatchExecutor, PlannedBatch, SolveContext};
 use crate::domain::query::Query;
 use crate::domain::tenant::TenantSet;
@@ -72,6 +72,11 @@ pub(crate) struct Shard<'a> {
     /// Cache budget at each executed batch, aligned with the executor's
     /// batch records — the merge's utilization weights.
     pub budgets: Vec<u64>,
+    /// Carried warm-start solver state (`Some` iff the federation runs
+    /// with warm starts). Shard-local like everything else here; the
+    /// federation invalidates it on membership changes, re-homes, and
+    /// budget re-splits.
+    pub warm: Option<WarmState>,
 }
 
 /// The serial coordinator planner's RNG stream selector (see
@@ -89,6 +94,7 @@ impl<'a> Shard<'a> {
         seed: u64,
         budget: u64,
         warmup_until: usize,
+        warm_start: bool,
     ) -> Self {
         let n_views = universe.views.len();
         Self {
@@ -101,6 +107,16 @@ impl<'a> Shard<'a> {
             inbox: Vec::new(),
             warmup_until,
             budgets: Vec::new(),
+            warm: warm_start.then(WarmState::new),
+        }
+    }
+
+    /// Drop carried solver state; the next solve runs fully cold.
+    /// Called by the federation on membership changes, view re-homes,
+    /// and budget re-splits. No-op when warm starts are off.
+    pub fn invalidate_warm(&mut self) {
+        if let Some(w) = self.warm.as_mut() {
+            w.invalidate();
         }
     }
 
@@ -127,7 +143,13 @@ impl<'a> Shard<'a> {
     ) -> ShardBatchOutcome {
         let queries = std::mem::take(&mut self.inbox);
         let t0 = Instant::now();
-        let solved = ctx.solve_accounted(&self.mirror, &queries, policy, &mut self.rng);
+        let solved = ctx.solve_accounted_warm(
+            &self.mirror,
+            &queries,
+            policy,
+            &mut self.rng,
+            self.warm.as_mut(),
+        );
         let solve_secs = t0.elapsed().as_secs_f64();
         let mut config = solved.config;
         // Elastic budget shrink: a *kept* configuration (empty inbox

@@ -23,7 +23,7 @@
 
 use std::time::Instant;
 
-use crate::alloc::{ConfigMask, Policy};
+use crate::alloc::{ConfigMask, Policy, WarmState};
 use crate::cache::{CacheDelta, CacheManager};
 use crate::domain::query::{Query, QueryId};
 use crate::domain::tenant::TenantSet;
@@ -77,6 +77,22 @@ impl SolveContext<'_> {
         self.solve_accounted(cached, queries, policy, rng).config
     }
 
+    /// [`SolveContext::solve`] with optional warm-start state. `None`
+    /// routes through `policy.allocate` — bit-identical to [`solve`],
+    /// which is what replay-determinism drivers pass; `Some` hands the
+    /// carried [`WarmState`] to `policy.allocate_warm`.
+    pub(crate) fn solve_warm(
+        &self,
+        cached: &ConfigMask,
+        queries: &[Query],
+        policy: &dyn Policy,
+        rng: &mut Pcg64,
+        warm: Option<&mut WarmState>,
+    ) -> ConfigMask {
+        self.solve_accounted_warm(cached, queries, policy, rng, warm)
+            .config
+    }
+
     /// [`SolveContext::solve`] plus the attained/attainable per-tenant
     /// utilities of the sampled configuration. The extra accounting
     /// consumes no randomness, so `solve` and `solve_accounted` advance
@@ -87,6 +103,21 @@ impl SolveContext<'_> {
         queries: &[Query],
         policy: &dyn Policy,
         rng: &mut Pcg64,
+    ) -> SolveOutcome {
+        self.solve_accounted_warm(cached, queries, policy, rng, None)
+    }
+
+    /// The one batch-solve implementation behind all four entry points.
+    /// An empty batch keeps the current contents and touches neither the
+    /// rng nor the warm state (the carried artifacts stay valid for the
+    /// next non-empty batch).
+    pub(crate) fn solve_accounted_warm(
+        &self,
+        cached: &ConfigMask,
+        queries: &[Query],
+        policy: &dyn Policy,
+        rng: &mut Pcg64,
+        warm: Option<&mut WarmState>,
     ) -> SolveOutcome {
         let n = self.tenants.len();
         if queries.is_empty() {
@@ -111,7 +142,10 @@ impl SolveContext<'_> {
         if let Some(mult) = self.weight_mult {
             crate::alloc::apply_weight_multipliers(&mut batch_problem, mult);
         }
-        let allocation = policy.allocate(&batch_problem, rng);
+        let allocation = match warm {
+            Some(w) => policy.allocate_warm(&batch_problem, rng, w),
+            None => policy.allocate(&batch_problem, rng),
+        };
         let config = allocation.sample(rng).clone();
         let utilities = batch_problem.utilities(&config);
         let u_star = batch_problem.u_star.clone();
@@ -135,6 +169,10 @@ pub struct CoordinatorConfig {
     pub stateful_gamma: Option<f64>,
     /// Seed for policy randomization (allocation sampling etc.).
     pub seed: u64,
+    /// Carry solver state across batches (warm-started incremental
+    /// solves). Off by default so `robus run` replay stays bit-identical
+    /// to the historical path; `robus serve` turns it on.
+    pub warm_start: bool,
 }
 
 impl Default for CoordinatorConfig {
@@ -144,6 +182,7 @@ impl Default for CoordinatorConfig {
             n_batches: 30,
             stateful_gamma: None,
             seed: 7,
+            warm_start: false,
         }
     }
 }
@@ -326,6 +365,11 @@ pub struct BatchPlanner<'a> {
     /// cache holds exactly the previous emitted configuration, so the
     /// planner tracks it locally instead of reading the live cache.
     mirror: ConfigMask,
+    /// Carried warm-start state (`Some` iff `cfg.warm_start`). Owned by
+    /// the planner, so the serial and pipelined drivers warm-start
+    /// identically — the pipeline moves the whole planner onto its
+    /// solver thread.
+    warm: Option<WarmState>,
     next: usize,
 }
 
@@ -350,7 +394,13 @@ impl BatchPlanner<'_> {
             stateful_gamma: self.cfg.stateful_gamma,
             weight_mult: None,
         };
-        let config = ctx.solve(&self.mirror, &queries, self.policy, &mut self.rng);
+        let config = ctx.solve_warm(
+            &self.mirror,
+            &queries,
+            self.policy,
+            &mut self.rng,
+            self.warm.as_mut(),
+        );
         let solve_secs = t0.elapsed().as_secs_f64();
         self.mirror = config.clone();
         Some(PlannedBatch {
@@ -512,6 +562,7 @@ impl<'a> Coordinator<'a> {
             budget: self.engine.config.cache_budget,
             rng: Pcg64::with_stream(self.config.seed, 0x0b5),
             mirror: ConfigMask::empty(self.universe.views.len()),
+            warm: self.config.warm_start.then(WarmState::new),
             next: 0,
         }
     }
@@ -566,6 +617,7 @@ mod tests {
             n_batches,
             stateful_gamma: None,
             seed,
+            warm_start: false,
         };
         let coord = Coordinator::new(&universe, tenants, engine, config);
         // Windowed access (as in the §5.3 experiments) so the working
@@ -643,6 +695,7 @@ mod tests {
                 n_batches: 12,
                 stateful_gamma: gamma,
                 seed: 5,
+                warm_start: false,
             };
             let coord = Coordinator::new(&universe, tenants.clone(), engine.clone(), config);
             let mut gen = WorkloadGenerator::new(specs(), &universe, 5);
@@ -692,6 +745,54 @@ mod tests {
             assert_eq!(b.stall_secs, b.solve_secs);
             assert_eq!(b.queue_depth, 0);
         }
+    }
+
+    #[test]
+    fn warm_start_run_matches_cold_quality() {
+        let universe = Universe::sales_only();
+        let engine = SimEngine::new(ClusterConfig::default());
+        let window = crate::workload::spec::WindowSpec {
+            mean_secs: 120.0,
+            std_secs: 30.0,
+            candidates: 8,
+        };
+        let specs = || {
+            vec![
+                TenantSpec::new(AccessSpec::g(1), 10.0).with_window(window.clone()),
+                TenantSpec::new(AccessSpec::g(2), 10.0).with_window(window.clone()),
+            ]
+        };
+        let run = |warm_start: bool| {
+            let config = CoordinatorConfig {
+                batch_secs: 40.0,
+                n_batches: 8,
+                stateful_gamma: None,
+                seed: 42,
+                warm_start,
+            };
+            let coord =
+                Coordinator::new(&universe, TenantSet::equal(2), engine.clone(), config);
+            let mut gen = WorkloadGenerator::new(specs(), &universe, 42);
+            let policy = PolicyKind::FastPf.build();
+            coord.run(&mut gen, policy.as_ref())
+        };
+        let cold = run(false);
+        let warm = run(true);
+        assert_eq!(cold.batches.len(), warm.batches.len());
+        // Warm-started solves must land in the same quality neighbourhood
+        // (equivalence is quality-within-ε, not bit-identity).
+        assert!(
+            (cold.hit_ratio() - warm.hit_ratio()).abs() < 0.15,
+            "cold hit {} vs warm hit {}",
+            cold.hit_ratio(),
+            warm.hit_ratio()
+        );
+        assert!(
+            (cold.avg_cache_utilization() - warm.avg_cache_utilization()).abs() < 0.15,
+            "cold util {} vs warm util {}",
+            cold.avg_cache_utilization(),
+            warm.avg_cache_utilization()
+        );
     }
 
     #[test]

@@ -91,6 +91,15 @@ mod tests {
     use crate::workload::universe::Universe;
 
     fn run_both(kind: PolicyKind, gamma: Option<f64>, depth: usize) -> (RunResult, RunResult) {
+        run_both_warm(kind, gamma, depth, false)
+    }
+
+    fn run_both_warm(
+        kind: PolicyKind,
+        gamma: Option<f64>,
+        depth: usize,
+        warm_start: bool,
+    ) -> (RunResult, RunResult) {
         let universe = Universe::sales_only();
         let tenants = TenantSet::equal(3);
         let engine = SimEngine::new(ClusterConfig::default());
@@ -99,6 +108,7 @@ mod tests {
             n_batches: 6,
             stateful_gamma: gamma,
             seed: 17,
+            warm_start,
         };
         let coord = Coordinator::new(&universe, tenants, engine, config);
         let specs = || -> Vec<TenantSpec> {
@@ -155,6 +165,15 @@ mod tests {
     #[test]
     fn depth_zero_clamps_and_runs() {
         let (serial, pipelined) = run_both(PolicyKind::Static, None, 0);
+        assert_bit_identical(&serial, &pipelined);
+    }
+
+    #[test]
+    fn pipelined_matches_serial_warm_started() {
+        // The warm state rides inside the planner, which moves whole
+        // onto the solver thread — warm serial and warm pipelined runs
+        // stay bit-identical to each other.
+        let (serial, pipelined) = run_both_warm(PolicyKind::FastPf, None, 2, true);
         assert_bit_identical(&serial, &pipelined);
     }
 }

@@ -20,7 +20,7 @@
 
 use std::time::Instant;
 
-use crate::alloc::Policy;
+use crate::alloc::{Policy, WarmState};
 use crate::coordinator::loop_::{
     BatchExecutor, Coordinator, CoordinatorConfig, PlannedBatch, RunResult, SolveContext,
 };
@@ -53,6 +53,11 @@ pub struct ServeConfig {
     /// §5.4 stateful boost γ (None = stateless).
     pub stateful_gamma: Option<f64>,
     pub seed: u64,
+    /// Carry solver state batch-to-batch (warm-started incremental
+    /// solves). On by default: serving is exactly the steady-state
+    /// regime the warm path targets, and its equivalence contract is
+    /// quality-within-ε, not bit-replay.
+    pub warm_start: bool,
     /// Print a live metrics line roughly once per second.
     pub verbose: bool,
 }
@@ -68,6 +73,7 @@ impl Default for ServeConfig {
             admission: AdmissionPolicy::Drop,
             stateful_gamma: None,
             seed: 42,
+            warm_start: true,
             verbose: false,
         }
     }
@@ -205,6 +211,8 @@ fn service_loop<C: Clock>(
     let mut batch_idx = 0usize;
     let mut last_report = 0u64;
     let mut completed_live = 0u64;
+    // Carried solver state (`--warm-start`, on by default for serve).
+    let mut warm = cfg.warm_start.then(WarmState::new);
     loop {
         let window_end = (batch_idx + 1) as f64 * cfg.batch_secs;
         let now = clock.wait_until(window_end);
@@ -221,7 +229,13 @@ fn service_loop<C: Clock>(
         // Step 2: the shared solve (host critical path), boosted
         // from the executor's live cache contents.
         let t0 = Instant::now();
-        let config = solve_ctx.solve(executor.cache().cached(), &queries, policy, rng);
+        let config = solve_ctx.solve_warm(
+            executor.cache().cached(),
+            &queries,
+            policy,
+            rng,
+            warm.as_mut(),
+        );
         let solve_secs = t0.elapsed().as_secs_f64();
 
         // Steps 3–5: the loop's executor (incremental cache
@@ -361,6 +375,7 @@ pub fn serve(
         n_batches: 0, // the service loop is open-ended
         stateful_gamma: cfg.stateful_gamma,
         seed: cfg.seed,
+        warm_start: cfg.warm_start,
     };
     let coordinator = Coordinator::new(universe, tenants.clone(), engine.clone(), coord_cfg);
     let mut executor = coordinator.executor();
@@ -469,6 +484,7 @@ pub fn serve_sim(
         n_batches: 0,
         stateful_gamma: cfg.stateful_gamma,
         seed: cfg.seed,
+        warm_start: cfg.warm_start,
     };
     let coordinator = Coordinator::new(universe, tenants.clone(), engine.clone(), coord_cfg);
     let mut executor = coordinator.executor();
@@ -544,6 +560,7 @@ mod tests {
             admission: AdmissionPolicy::Drop,
             stateful_gamma: None,
             seed: 9,
+            warm_start: true,
             verbose: false,
         }
     }
@@ -644,6 +661,7 @@ mod tests {
             admission: AdmissionPolicy::Drop,
             stateful_gamma: None,
             seed: 21,
+            warm_start: true,
             verbose: false,
         };
         let tenants = TenantSet::equal(cfg.n_tenants);

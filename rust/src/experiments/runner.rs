@@ -70,6 +70,7 @@ fn coordinator_parts(
         n_batches: setup.n_batches,
         stateful_gamma: setup.stateful_gamma,
         seed: setup.seed,
+        warm_start: setup.warm_start,
     };
     (universe, tenants, engine, config)
 }

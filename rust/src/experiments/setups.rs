@@ -36,6 +36,9 @@ pub struct ExperimentSetup {
     pub n_batches: usize,
     pub stateful_gamma: Option<f64>,
     pub seed: u64,
+    /// Carry solver state across batches (see `alloc::WarmState`). Off
+    /// by default so every published table replays bit-identically.
+    pub warm_start: bool,
 }
 
 impl ExperimentSetup {
@@ -56,6 +59,7 @@ impl ExperimentSetup {
             n_batches,
             stateful_gamma: None,
             seed: 42,
+            warm_start: false,
         }
     }
 
@@ -67,6 +71,11 @@ impl ExperimentSetup {
 
     pub fn with_seed(mut self, seed: u64) -> Self {
         self.seed = seed;
+        self
+    }
+
+    pub fn with_warm_start(mut self, on: bool) -> Self {
+        self.warm_start = on;
         self
     }
 }

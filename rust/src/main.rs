@@ -64,6 +64,7 @@ fn main() {
                         OptSpec { name: "gamma", help: "stateful cache boost γ (omit = stateless)", default: None },
                         OptSpec { name: "quick", help: "cut batches down for a fast smoke run", default: None },
                         OptSpec { name: "pipeline", help: "run: overlap solve(b+1) with execute(b)", default: None },
+                        OptSpec { name: "warm-start", help: "on|off: carry solver state across batches (serve default on; run/cluster off)", default: None },
                         OptSpec { name: "out-dir", help: "write JSON reports here", default: Some("results") },
                         OptSpec { name: "duration", help: "serve: wall-clock seconds to accept traffic", default: Some("5") },
                         OptSpec { name: "rate", help: "serve: aggregate arrival rate (queries/sec)", default: Some("1000") },
@@ -74,8 +75,8 @@ fn main() {
                         OptSpec { name: "shards", help: "cluster/serve: number of cache shards (serve default 1)", default: Some("4") },
                         OptSpec { name: "placement", help: "cluster/serve: view placement, hash|pack", default: Some("hash") },
                         OptSpec { name: "replicate-hot", help: "cluster/serve: replicate views above this demand fraction", default: None },
-                        OptSpec { name: "replica-decay", help: "cluster: evict replicas below the threshold for K batches", default: None },
-                        OptSpec { name: "rebalance-every", help: "cluster: re-home views by demand every K batches", default: None },
+                        OptSpec { name: "replica-decay", help: "cluster/serve: evict replicas below the threshold for K batches", default: None },
+                        OptSpec { name: "rebalance-every", help: "cluster/serve: re-home views by demand every K batches", default: None },
                         OptSpec { name: "membership", help: "cluster: schedule \"add@40,kill@80\"; serve: reactive auto[:lo,hi]", default: None },
                         OptSpec { name: "warmup", help: "cluster/serve: accountant warm-up batches for added shards", default: Some("2") },
                         OptSpec { name: "setup", help: "cluster: §5.3 workload, sales-g1..sales-g4", default: Some("sales-g2") },
@@ -97,6 +98,18 @@ fn fallible(result: Result<i32, String>) -> i32 {
             eprintln!("error: {e}");
             2
         }
+    }
+}
+
+/// Parse `--warm-start on|off` strictly; absent takes the mode's
+/// default (on for serve, off for run/cluster so replays stay
+/// bit-identical to the historical path).
+fn opt_warm_start(args: &Args, default: bool) -> Result<bool, String> {
+    match args.opt("warm-start") {
+        None => Ok(default),
+        Some("on" | "true" | "1") => Ok(true),
+        Some("off" | "false" | "0") => Ok(false),
+        Some(s) => Err(format!("--warm-start expects on|off, got '{s}'")),
     }
 }
 
@@ -136,6 +149,7 @@ fn cmd_run(args: &Args) -> Result<i32, String> {
         n_batches: batches,
         stateful_gamma: gamma,
         seed,
+        warm_start: opt_warm_start(args, false)?,
     };
     if args.flag("quick") {
         setup.n_batches = setup.n_batches.min(6);
@@ -181,6 +195,7 @@ fn cmd_serve(args: &Args) -> Result<i32, String> {
         stateful_gamma: opt_gamma(args)?,
         seed: args.opt_u64("seed", 42)?,
         verbose: !args.flag("quiet"),
+        warm_start: opt_warm_start(args, true)?,
     };
     let n_shards = args.opt_usize("shards", 1)?;
     if n_shards == 0 {
@@ -208,21 +223,31 @@ fn cmd_serve(args: &Args) -> Result<i32, String> {
         Some(s) => PlacementStrategy::parse(s)
             .ok_or_else(|| format!("unknown placement {s} (use hash|pack)"))?,
     };
-    // Cluster-only knobs have no serve-mode implementation: surface
-    // that instead of silently ignoring them.
-    for name in ["replica-decay", "rebalance-every"] {
-        if args.opt(name).is_some() {
-            eprintln!(
-                "warning: --{name} is not implemented by serve mode; ignoring \
-                 (it drives the trace-replay federation — see robus cluster)"
-            );
-        }
+    let replica_decay = match args.opt("replica-decay") {
+        None => None,
+        Some(s) => Some(s.parse::<usize>().map_err(|_| {
+            format!("--replica-decay expects an integer, got '{s}'")
+        })?),
+    };
+    if replica_decay.is_some() && replicate_hot.is_none() {
+        return Err(
+            "--replica-decay requires --replicate-hot (decay ages out hot-view replicas)"
+                .to_string(),
+        );
     }
+    let rebalance_every = match args.opt("rebalance-every") {
+        None => None,
+        Some(s) => Some(s.parse::<usize>().map_err(|_| {
+            format!("--rebalance-every expects an integer, got '{s}'")
+        })?),
+    };
     // With one shard and no way to ever gain another, the federation
     // knobs are meaningless: warn rather than silently no-op.
     if n_shards == 1 && auto.is_none() {
         for (name, present) in [
             ("replicate-hot", replicate_hot.is_some()),
+            ("replica-decay", replica_decay.is_some()),
+            ("rebalance-every", rebalance_every.is_some()),
             ("placement", args.opt("placement").is_some()),
             ("warmup", args.opt("warmup").is_some()),
         ] {
@@ -266,6 +291,8 @@ fn cmd_serve(args: &Args) -> Result<i32, String> {
     } else {
         let fcfg = ServeFederationConfig {
             replicate_hot,
+            replica_decay,
+            rebalance_every,
             auto,
             placement,
             warmup_batches: args.opt_usize("warmup", 2)?,
@@ -369,6 +396,7 @@ fn cmd_cluster(args: &Args) -> Result<i32, String> {
         membership,
         replica_decay,
         warmup_batches: args.opt_usize("warmup", 2)?,
+        warm_start: opt_warm_start(args, false)?,
         ..FederationConfig::default()
     };
 

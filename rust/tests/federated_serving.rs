@@ -33,6 +33,7 @@ fn base_cfg() -> ServeConfig {
         stateful_gamma: None,
         seed: 23,
         verbose: false,
+        warm_start: true,
     }
 }
 

@@ -19,6 +19,7 @@ fn run(kind: PolicyKind, universe: &Universe, specs: Vec<TenantSpec>, batches: u
         n_batches: batches,
         stateful_gamma: None,
         seed,
+        warm_start: false,
     };
     let coord = Coordinator::new(universe, tenants, engine, config);
     let mut gen = WorkloadGenerator::new(specs, universe, seed);

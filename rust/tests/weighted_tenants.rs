@@ -24,6 +24,7 @@ fn weighted_run(kind: PolicyKind, weights: &[f64], seed: u64) -> robus::coordina
         n_batches: 10,
         stateful_gamma: None,
         seed,
+        warm_start: false,
     };
     let coord = Coordinator::new(&universe, tenants, engine, config);
     let specs: Vec<TenantSpec> = (0..weights.len())

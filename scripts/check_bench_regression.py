@@ -63,6 +63,11 @@ SPEC = {
              [("benchmarks", "name", "coordinator_full_batch_fastpf_n4"),
               "mean_ns_per_iter"],
              "lower", "host", 0.0),
+            # Warm-started solves must stay measurably below cold ones:
+            # the ratio is host-independent but timing-derived (noisy).
+            ("warm/cold solve p50 ratio",
+             ["warm_start", "p50_warm_over_cold"],
+             "lower", "noisy", 0.25),
         ],
     },
     "BENCH_coordinator.json": {
