@@ -29,11 +29,13 @@
 //!    (replicated views spread deterministically across holders;
 //!    spanning queries fall back to the home shard of their largest
 //!    view);
-//! 5. solves + executes every live shard concurrently on scoped threads
-//!    — each shard runs the unmodified PR-2 `SolveContext`/
-//!    `BatchExecutor` machinery over its routed queries with the current
-//!    budget slice, under per-tenant weight multipliers from the
-//!    accountant;
+//! 5. solves + executes every live shard concurrently on the
+//!    federation's persistent worker pool ([`crate::cluster::runtime`]:
+//!    `--workers` threads created once per run, shard steps multiplexed
+//!    as messages — no per-batch thread spawns) — each shard runs the
+//!    unmodified PR-2 `SolveContext`/`BatchExecutor` machinery over its
+//!    routed queries with the current budget slice, under per-tenant
+//!    weight multipliers from the accountant;
 //! 6. aggregates attained/attainable per-tenant utilities across shards
 //!    into the [`GlobalAccountant`] (warming joiners excluded), whose
 //!    weighted-PF feedback boosts tenants starved anywhere in the
@@ -48,14 +50,16 @@
 //! `rust/tests/cluster_equivalence.rs`; the elastic contract lives in
 //! `rust/tests/elastic_membership.rs`.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::alloc::Policy;
 use crate::cluster::membership::{MembershipAction, MembershipPlan};
 use crate::cluster::metrics::{ClusterRecord, ClusterResult, MembershipChange};
 use crate::cluster::placement::{Placement, PlacementStrategy};
+use crate::cluster::runtime::{resolve_workers, with_shard_pool, ShardPool, StepCtx};
 use crate::cluster::shard::{Shard, ShardBatchOutcome};
-use crate::coordinator::loop_::{CoordinatorConfig, SolveContext};
+use crate::coordinator::loop_::CoordinatorConfig;
 use crate::domain::query::Query;
 use crate::domain::tenant::TenantSet;
 use crate::sim::engine::SimEngine;
@@ -96,6 +100,12 @@ pub struct FederationConfig {
     /// `robus cluster` replays stay bit-identical to the historical
     /// path; the federated serving layer follows `serve`'s default (on).
     pub warm_start: bool,
+    /// Worker-pool width for the shard runtime: `None` sizes to the
+    /// host's available parallelism, `Some(0)` steps shards inline
+    /// (sequential, no pool threads), `Some(n)` pins `n` workers.
+    /// Simulated results are bit-identical across all settings — this
+    /// only changes host-side scheduling.
+    pub workers: Option<usize>,
 }
 
 impl Default for FederationConfig {
@@ -110,6 +120,7 @@ impl Default for FederationConfig {
             replica_decay: None,
             warmup_batches: 2,
             warm_start: false,
+            workers: None,
         }
     }
 }
@@ -168,33 +179,42 @@ impl GlobalAccountant {
     /// to `max_boost`, over-served tenants damped down to `1/max_boost`.
     /// Inactive tenants stay at 1.0.
     pub fn multipliers(&self, weights: &[f64]) -> Vec<f64> {
-        let norms: Vec<Option<f64>> = self
-            .cum
-            .iter()
-            .zip(&self.active)
-            .zip(weights)
-            .map(|((&c, &a), &w)| {
-                if a > 0 {
-                    Some(c / a as f64 / w.max(1e-12))
-                } else {
-                    None
-                }
-            })
-            .collect();
-        let act: Vec<f64> = norms.iter().flatten().copied().collect();
-        if act.is_empty() {
-            return vec![1.0; self.cum.len()];
+        let mut out = Vec::with_capacity(self.cum.len());
+        self.multipliers_into(weights, &mut out);
+        out
+    }
+
+    /// [`GlobalAccountant::multipliers`] into a caller-owned buffer
+    /// (cleared first) — the federation loops call this every batch
+    /// with a reused buffer, so the steady state allocates nothing.
+    /// Two passes over the ledger; the normalized-attainment sum runs
+    /// in tenant order, exactly as the collecting version did, so the
+    /// floating-point results are bit-identical.
+    pub fn multipliers_into(&self, weights: &[f64], out: &mut Vec<f64>) {
+        out.clear();
+        let norm = |c: f64, a: usize, w: f64| c / a as f64 / w.max(1e-12);
+        let mut sum = 0.0;
+        let mut n_act = 0usize;
+        for ((&c, &a), &w) in self.cum.iter().zip(&self.active).zip(weights) {
+            if a > 0 {
+                sum += norm(c, a, w);
+                n_act += 1;
+            }
         }
-        let mean = act.iter().sum::<f64>() / act.len() as f64;
+        if n_act == 0 {
+            out.resize(self.cum.len(), 1.0);
+            return;
+        }
+        let mean = sum / n_act as f64;
         let eps = mean * 1e-3 + 1e-12;
-        norms
-            .into_iter()
-            .map(|o| match o {
-                None => 1.0,
-                Some(x) => ((mean + eps) / (x + eps))
-                    .clamp(1.0 / self.max_boost, self.max_boost),
-            })
-            .collect()
+        for ((&c, &a), &w) in self.cum.iter().zip(&self.active).zip(weights) {
+            out.push(if a > 0 {
+                ((mean + eps) / (norm(c, a, w) + eps))
+                    .clamp(1.0 / self.max_boost, self.max_boost)
+            } else {
+                1.0
+            });
+        }
     }
 }
 
@@ -238,12 +258,47 @@ impl<'a> ShardedCoordinator<'a> {
     /// Run the federated loop with `policy` over a fresh workload from
     /// `generator`. Same determinism contract as the single-node
     /// drivers: the generator seed fixes arrivals, `config.seed` fixes
-    /// every shard's policy randomization, and the membership schedule
-    /// is deterministic by construction. Panics on an invalid
-    /// membership plan — front doors validate with
-    /// [`MembershipPlan::resolve`] first.
+    /// every shard's policy randomization, the membership schedule is
+    /// deterministic by construction, and the worker-pool width
+    /// (`fed.workers`) changes host-side scheduling only — shard steps
+    /// are shard-local, so the simulated results are bit-identical at
+    /// any width. Panics on an invalid membership plan — front doors
+    /// validate with [`MembershipPlan::resolve`] first.
     pub fn run(&self, generator: &mut WorkloadGenerator, policy: &dyn Policy) -> ClusterResult {
         let t_run = Instant::now();
+        // One engine clone serves every shard executor (execution
+        // behavior does not depend on the budget field); budgets are
+        // handed to executors explicitly and re-split on membership
+        // changes. Built before the pool so the shards' engine borrow
+        // outlives the workers.
+        let mut exec_engine = self.engine.clone();
+        exec_engine.config.cache_budget =
+            self.engine.config.cache_budget / self.fed.n_shards as u64;
+        let exec_engine = exec_engine;
+        let ctx = StepCtx {
+            tenants: &self.tenants,
+            universe: self.universe,
+            policy,
+            stateful_gamma: self.config.stateful_gamma,
+        };
+        // The run's worker pool: the only thread creation of the whole
+        // run. Per-batch fan-out/fan-in from here on is channel sends.
+        with_shard_pool(resolve_workers(self.fed.workers), ctx, |pool| {
+            self.run_on_pool(generator, policy, &exec_engine, t_run, pool)
+        })
+    }
+
+    /// The federated batch loop, driven on an already-running worker
+    /// pool (see [`ShardedCoordinator::run`], which owns the pool's
+    /// lifetime around this).
+    fn run_on_pool<'e>(
+        &self,
+        generator: &mut WorkloadGenerator,
+        policy: &dyn Policy,
+        exec_engine: &'e SimEngine,
+        t_run: Instant,
+        pool: &mut ShardPool<'_, Shard<'e>>,
+    ) -> ClusterResult {
         let n_shards = self.fed.n_shards;
         let n_views = self.universe.views.len();
         let n_tenants = self.tenants.len();
@@ -272,20 +327,13 @@ impl<'a> ShardedCoordinator<'a> {
 
         let mut placement = Placement::build(self.fed.placement, n_shards, &cached_sizes);
 
-        // One engine clone serves every shard executor (execution
-        // behavior does not depend on the budget field); budgets are
-        // handed to executors explicitly and re-split on membership
-        // changes.
         let mut live_budget = total_budget / n_shards as u64;
-        let mut exec_engine = self.engine.clone();
-        exec_engine.config.cache_budget = live_budget;
-        let exec_engine = exec_engine;
 
-        let mut shards: Vec<Shard<'_>> = (0..n_shards)
+        let mut shards: Vec<Shard<'e>> = (0..n_shards)
             .map(|s| {
                 Shard::new(
                     s,
-                    &exec_engine,
+                    exec_engine,
                     self.universe,
                     &self.tenants,
                     placement.shard_mask(s),
@@ -311,6 +359,18 @@ impl<'a> ShardedCoordinator<'a> {
         // Consecutive batches each view's demand share stayed below the
         // replication threshold (the decay clock).
         let mut decay_streaks = vec![0usize; n_views];
+        // Per-batch scratch, hoisted so the steady-state loop allocates
+        // nothing per batch (DESIGN.md §2g): routing tables, demand
+        // tallies, outcome fan-in, the accountant's observation sums,
+        // and the shared multiplier buffer (refcounted out to workers,
+        // reused in place once they hand their clones back).
+        let mut id_to_idx: Vec<usize> = Vec::new();
+        let mut batch_demand = vec![0u64; n_views];
+        let mut targets: Vec<usize> = Vec::new();
+        let mut outcomes: Vec<ShardBatchOutcome> = Vec::new();
+        let mut obs_u = vec![0.0; n_tenants];
+        let mut obs_star = vec![0.0; n_tenants];
+        let mut mult_buf: Arc<Vec<f64>> = Arc::new(vec![1.0; n_tenants]);
 
         for b in 0..n_batches {
             let window_end = (b + 1) as f64 * self.config.batch_secs;
@@ -354,7 +414,7 @@ impl<'a> ShardedCoordinator<'a> {
                         );
                         shards.push(Shard::new(
                             id,
-                            &exec_engine,
+                            exec_engine,
                             self.universe,
                             &self.tenants,
                             placement.shard_mask(id),
@@ -524,58 +584,50 @@ impl<'a> ShardedCoordinator<'a> {
             // shard) and record per-view demanded bytes for the
             // replication, decay, and rebalance signals. ---
             let max_id = shards.iter().map(|s| s.id).max().expect("live shards");
-            let mut id_to_idx = vec![usize::MAX; max_id + 1];
+            id_to_idx.clear();
+            id_to_idx.resize(max_id + 1, usize::MAX);
             for (i, sh) in shards.iter().enumerate() {
                 id_to_idx[sh.id] = i;
             }
-            let mut batch_demand = vec![0u64; n_views];
-            let targets: Vec<usize> = queries
-                .iter()
-                .map(|q| {
-                    for v in &q.required_views {
-                        batch_demand[v.0] += scan_sizes[v.0];
-                    }
-                    route(&shards, &placement, &id_to_idx, &cached_sizes, q)
-                })
-                .collect();
-            for (q, s) in queries.into_iter().zip(targets) {
+            batch_demand.fill(0);
+            targets.clear();
+            targets.extend(queries.iter().map(|q| {
+                for v in &q.required_views {
+                    batch_demand[v.0] += scan_sizes[v.0];
+                }
+                route(&shards, &placement, &id_to_idx, &cached_sizes, q)
+            }));
+            for (q, &s) in queries.into_iter().zip(&targets) {
                 shards[s].inbox.push(q);
             }
             for v in 0..n_views {
                 cum_demand[v] += batch_demand[v];
             }
-            prev_demand = batch_demand;
+            // batch_demand becomes the next batch's replication/decay
+            // signal; the old signal buffer is refilled next batch.
+            std::mem::swap(&mut prev_demand, &mut batch_demand);
 
-            // Global-fairness feedback for this batch's solves: None on
-            // batch 0 (nothing observed) and while a single shard is
-            // live (the bit-identical serial path).
-            let mults: Option<Vec<f64>> = if shards.len() > 1 && b > 0 {
-                Some(accountant.multipliers(&weights))
-            } else {
-                None
-            };
+            // Global-fairness feedback for this batch's solves: absent
+            // on batch 0 (nothing observed) and while a single shard is
+            // live (the bit-identical serial path). Every worker drops
+            // its `Arc` clone before replying, so by fan-in the handle
+            // is unique again and `make_mut` rewrites in place.
+            let use_mults = shards.len() > 1 && b > 0;
+            if use_mults {
+                accountant.multipliers_into(&weights, Arc::make_mut(&mut mult_buf));
+            }
 
-            // --- 5. Solve + execute every live shard concurrently. ---
-            let solve_budget = live_budget;
-            let outcomes: Vec<ShardBatchOutcome> = std::thread::scope(|scope| {
-                let handles: Vec<_> = shards
-                    .iter_mut()
-                    .map(|sh| {
-                        let ctx = SolveContext {
-                            tenants: &self.tenants,
-                            universe: self.universe,
-                            budget: solve_budget,
-                            stateful_gamma: self.config.stateful_gamma,
-                            weight_mult: mults.as_deref(),
-                        };
-                        scope.spawn(move || sh.step(&ctx, policy, b, window_end))
-                    })
-                    .collect();
-                handles
-                    .into_iter()
-                    .map(|h| h.join().expect("shard thread panicked"))
-                    .collect()
-            });
+            // --- 5. Solve + execute every live shard on the worker
+            // pool (fan-out/fan-in are channel sends; outcomes land in
+            // shard order). ---
+            pool.step_batch(
+                &mut shards,
+                b,
+                window_end,
+                live_budget,
+                use_mults.then_some(&mult_buf),
+                &mut outcomes,
+            );
 
             // --- 6. Aggregate federation-wide utilities. The records
             // keep the full reality (every live shard); the accountant
@@ -583,8 +635,8 @@ impl<'a> ShardedCoordinator<'a> {
             // does not crater its tenants' attained utility. ---
             let mut agg_u = vec![0.0; n_tenants];
             let mut agg_star = vec![0.0; n_tenants];
-            let mut obs_u = vec![0.0; n_tenants];
-            let mut obs_star = vec![0.0; n_tenants];
+            obs_u.fill(0.0);
+            obs_star.fill(0.0);
             for (sh, o) in shards.iter().zip(&outcomes) {
                 let warm = !sh.is_warming(b);
                 for i in 0..n_tenants {
@@ -605,7 +657,11 @@ impl<'a> ShardedCoordinator<'a> {
 
             records.push(ClusterRecord {
                 index: b,
-                multipliers: mults.unwrap_or_else(|| vec![1.0; n_tenants]),
+                multipliers: if use_mults {
+                    mult_buf.as_ref().clone()
+                } else {
+                    vec![1.0; n_tenants]
+                },
                 replicated_views,
                 rebalanced,
                 membership: membership_changes,
@@ -760,10 +816,13 @@ pub(crate) fn route_query(
     cached_sizes: &[u64],
     q: &Query,
 ) -> usize {
-    let holders: Vec<usize> = (0..n_live)
-        .filter(|&i| q.required_views.iter().all(|v| is_resident(i, v.0)))
-        .collect();
-    match holders.len() {
+    // Allocation-free holder scan (this runs per *arrival* on the
+    // serving path): count the holders, then walk to the chosen one —
+    // identical to indexing the old collected holder list, since both
+    // enumerate live indices in ascending order.
+    let holds = |i: usize| q.required_views.iter().all(|v| is_resident(i, v.0));
+    let n = (0..n_live).filter(|&i| holds(i)).count();
+    match n {
         0 => q
             .required_views
             .iter()
@@ -771,8 +830,17 @@ pub(crate) fn route_query(
             .max_by_key(|&v| (cached_sizes[v], std::cmp::Reverse(v)))
             .map(home_idx)
             .unwrap_or(0),
-        1 => holders[0],
-        n => holders[(mix64(q.id.0) % n as u64) as usize],
+        _ => {
+            let k = if n == 1 {
+                0
+            } else {
+                (mix64(q.id.0) % n as u64) as usize
+            };
+            (0..n_live)
+                .filter(|&i| holds(i))
+                .nth(k)
+                .expect("holder index within count")
+        }
     }
 }
 

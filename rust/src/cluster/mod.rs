@@ -25,6 +25,12 @@
 //! batch cuts, and *reactive* membership driven by sustained per-shard
 //! load instead of a batch-index schedule — see DESIGN.md §2e.
 //!
+//! Both drivers execute their per-batch shard steps on the persistent
+//! worker pool in [`runtime`]: a fixed set of `--workers` threads
+//! created once per run over which every live shard's step multiplexes
+//! as a message, so steady state spawns no threads at all (DESIGN.md
+//! §2g).
+//!
 //! Entry points: `robus cluster --shards N [--placement hash|pack]
 //! [--replicate-hot T] [--replica-decay K] [--membership
 //! "add@40,kill@80"]` and `robus serve --shards N [--membership
@@ -38,6 +44,7 @@ pub mod federation;
 pub mod membership;
 pub mod metrics;
 pub mod placement;
+pub(crate) mod runtime;
 pub mod serving;
 pub(crate) mod shard;
 

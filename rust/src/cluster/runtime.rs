@@ -1,0 +1,506 @@
+//! The persistent shard runtime: a fixed worker pool created once per
+//! federation run, over which every live shard's per-batch `step()`
+//! multiplexes as a message — 64+ shards ride on ~`num_cpus` workers
+//! with **no thread creation in steady state**. This replaces the
+//! spawn-per-batch scoped-thread executor that made per-batch cost grow
+//! with shard count (one OS thread spawn + join per shard per batch).
+//!
+//! Protocol: fan-out sends one [`StepJob`] per shard down a shared MPSC
+//! channel (workers race to pull; whichever is free picks the next
+//! shard up), fan-in collects one [`StepReply`] per job and restores
+//! shards **in slot order**, so the coordinator observes exactly the
+//! same shard ordering as the legacy `thread::scope` loop. Jobs own
+//! their shard for the duration of the step (ownership transfer, not
+//! `&mut` smuggling), which is also what keeps warm-start state
+//! (`alloc::warm`) strictly shard-local: it travels with the shard into
+//! whichever worker runs it.
+//!
+//! Determinism: `Shard::step` touches only shard-local state (its own
+//! RNG stream, mirror, executor, warm state), so the simulated
+//! quantities are independent of which worker runs the step or in what
+//! real-time order steps complete. `workers = Some(0)` degenerates to
+//! an inline sequential loop (no threads at all) and is pinned
+//! bit-identical to the pooled path by the tests below and by
+//! `rust/tests/scale_runtime.rs` at 64 shards.
+
+use std::any::Any;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use crate::alloc::Policy;
+use crate::cluster::shard::{Shard, ShardBatchOutcome};
+use crate::coordinator::loop_::SolveContext;
+use crate::domain::tenant::TenantSet;
+use crate::workload::universe::Universe;
+
+/// The per-run solve inputs every worker shares. Everything a
+/// [`SolveContext`] needs except the per-batch budget and multipliers,
+/// which travel inside each [`StepJob`].
+#[derive(Clone, Copy)]
+pub(crate) struct StepCtx<'a> {
+    pub tenants: &'a TenantSet,
+    pub universe: &'a Universe,
+    pub policy: &'a dyn Policy,
+    pub stateful_gamma: Option<f64>,
+}
+
+/// Anything the pool can step: the replay federation steps [`Shard`]s
+/// directly, the serving loop steps `LiveShard`s (a shard plus its
+/// admission queue handle, which rides along untouched).
+pub(crate) trait PoolItem<'e>: Send {
+    fn shard_mut(&mut self) -> &mut Shard<'e>;
+}
+
+impl<'e> PoolItem<'e> for Shard<'e> {
+    fn shard_mut(&mut self) -> &mut Shard<'e> {
+        self
+    }
+}
+
+/// One shard-step message. `slot` is the shard's index in the batch's
+/// live vector; fan-in restores by slot so shard order is preserved.
+struct StepJob<S> {
+    slot: usize,
+    item: S,
+    batch: usize,
+    window_end: f64,
+    budget: u64,
+    /// Per-tenant weight multipliers for this batch, shared across the
+    /// fan-out by refcount. Workers drop their clone *before* replying,
+    /// so after fan-in the coordinator's handle is unique again and the
+    /// next batch's `Arc::make_mut` reuses the buffer without cloning.
+    mults: Option<Arc<Vec<f64>>>,
+}
+
+/// A finished (or died-trying) shard step.
+enum StepReply<S> {
+    Done {
+        slot: usize,
+        item: S,
+        outcome: ShardBatchOutcome,
+    },
+    /// The step panicked; the payload is re-thrown on the coordinator
+    /// thread (same observable behavior as the legacy `join().expect`).
+    Panicked(Box<dyn Any + Send>),
+}
+
+enum PoolInner<S> {
+    /// `--workers 0`: step shards inline on the calling thread.
+    Inline,
+    Threads {
+        job_tx: mpsc::Sender<StepJob<S>>,
+        done_rx: mpsc::Receiver<StepReply<S>>,
+    },
+}
+
+/// Handle to the per-run worker pool. Created by [`with_shard_pool`];
+/// dropping it closes the job channel, which is what terminates the
+/// workers before the owning scope joins them.
+pub(crate) struct ShardPool<'a, S> {
+    inner: PoolInner<S>,
+    ctx: StepCtx<'a>,
+    /// Fan-in scratch, reused every batch (zero-alloc steady state).
+    slots: Vec<Option<(S, ShardBatchOutcome)>>,
+}
+
+impl<'a, S> ShardPool<'a, S> {
+    /// Step every item of `items` for one batch window and collect the
+    /// outcomes **in item order** into `outcomes` (cleared first).
+    /// Items are moved out for the duration of the step and restored in
+    /// their original slots; `outcomes[i]` belongs to `items[i]`.
+    pub fn step_batch<'e>(
+        &mut self,
+        items: &mut Vec<S>,
+        batch: usize,
+        window_end: f64,
+        budget: u64,
+        mults: Option<&Arc<Vec<f64>>>,
+        outcomes: &mut Vec<ShardBatchOutcome>,
+    ) where
+        S: PoolItem<'e>,
+    {
+        outcomes.clear();
+        match &self.inner {
+            PoolInner::Inline => {
+                let solve_ctx = SolveContext {
+                    tenants: self.ctx.tenants,
+                    universe: self.ctx.universe,
+                    budget,
+                    stateful_gamma: self.ctx.stateful_gamma,
+                    weight_mult: mults.map(|m| m.as_slice()),
+                };
+                for it in items.iter_mut() {
+                    outcomes.push(it.shard_mut().step(
+                        &solve_ctx,
+                        self.ctx.policy,
+                        batch,
+                        window_end,
+                    ));
+                }
+            }
+            PoolInner::Threads { job_tx, done_rx } => {
+                let n = items.len();
+                self.slots.clear();
+                self.slots.resize_with(n, || None);
+                for (slot, item) in items.drain(..).enumerate() {
+                    job_tx
+                        .send(StepJob {
+                            slot,
+                            item,
+                            batch,
+                            window_end,
+                            budget,
+                            mults: mults.cloned(),
+                        })
+                        .expect("worker pool hung up mid-run");
+                }
+                for _ in 0..n {
+                    match done_rx.recv().expect("worker pool hung up mid-run") {
+                        StepReply::Done {
+                            slot,
+                            item,
+                            outcome,
+                        } => self.slots[slot] = Some((item, outcome)),
+                        StepReply::Panicked(p) => std::panic::resume_unwind(p),
+                    }
+                }
+                for s in self.slots.drain(..) {
+                    let (item, outcome) = s.expect("every slot replied exactly once");
+                    items.push(item);
+                    outcomes.push(outcome);
+                }
+            }
+        }
+    }
+}
+
+/// Default pool width: one worker per available core (the `num_cpus`
+/// the CLI's `--workers` help refers to).
+pub(crate) fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+/// Resolve a config's `workers: Option<usize>`: `None` = auto-size to
+/// the host, `Some(0)` = inline sequential, `Some(n)` = n workers.
+pub(crate) fn resolve_workers(workers: Option<usize>) -> usize {
+    workers.unwrap_or_else(default_workers)
+}
+
+/// Run `f` with a live [`ShardPool`]: spawns `workers` pool threads
+/// (once — this is the only thread creation of the whole run), hands
+/// `f` the pool handle, then closes the job channel and joins the
+/// workers. `workers == 0` skips thread creation entirely and steps
+/// inline.
+pub(crate) fn with_shard_pool<'a, 'e, S, R>(
+    workers: usize,
+    ctx: StepCtx<'a>,
+    f: impl FnOnce(&mut ShardPool<'a, S>) -> R,
+) -> R
+where
+    S: PoolItem<'e>,
+{
+    if workers == 0 {
+        let mut pool = ShardPool {
+            inner: PoolInner::Inline,
+            ctx,
+            slots: Vec::new(),
+        };
+        return f(&mut pool);
+    }
+    let (job_tx, job_rx) = mpsc::channel::<StepJob<S>>();
+    let (done_tx, done_rx) = mpsc::channel::<StepReply<S>>();
+    let job_rx = Arc::new(Mutex::new(job_rx));
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let job_rx = Arc::clone(&job_rx);
+            let done_tx = done_tx.clone();
+            scope.spawn(move || worker_loop(ctx, job_rx, done_tx));
+        }
+        // The pool keeps the only non-worker `done_tx` alive through
+        // `done_rx`'s pairing; drop ours so a dead pool is observable.
+        drop(done_tx);
+        let mut pool = ShardPool {
+            inner: PoolInner::Threads { job_tx, done_rx },
+            ctx,
+            slots: Vec::new(),
+        };
+        let out = f(&mut pool);
+        // Dropping the pool drops `job_tx`; every worker's next recv
+        // errors and it exits, letting the scope join cleanly.
+        drop(pool);
+        out
+    })
+}
+
+fn worker_loop<'a, 'e, S: PoolItem<'e>>(
+    ctx: StepCtx<'a>,
+    jobs: Arc<Mutex<mpsc::Receiver<StepJob<S>>>>,
+    done: mpsc::Sender<StepReply<S>>,
+) {
+    loop {
+        // Hold the shared-receiver lock only for the dequeue itself.
+        let job = { jobs.lock().expect("job queue poisoned").recv() };
+        let Ok(StepJob {
+            slot,
+            mut item,
+            batch,
+            window_end,
+            budget,
+            mults,
+        }) = job
+        else {
+            break; // channel closed: the run is over
+        };
+        // A panicking step must not strand the coordinator's fan-in
+        // recv loop — catch it and re-throw on the coordinator thread.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let solve_ctx = SolveContext {
+                tenants: ctx.tenants,
+                universe: ctx.universe,
+                budget,
+                stateful_gamma: ctx.stateful_gamma,
+                weight_mult: mults.as_ref().map(|m| m.as_slice()),
+            };
+            item.shard_mut()
+                .step(&solve_ctx, ctx.policy, batch, window_end)
+        }));
+        // Release our multiplier refcount before replying so the
+        // coordinator's handle is unique by the time fan-in completes.
+        drop(mults);
+        let reply = match result {
+            Ok(outcome) => StepReply::Done {
+                slot,
+                item,
+                outcome,
+            },
+            Err(p) => StepReply::Panicked(p),
+        };
+        if done.send(reply).is_err() {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::PolicyKind;
+    use crate::cluster::placement::Placement;
+    use crate::sim::cluster::ClusterConfig;
+    use crate::sim::engine::SimEngine;
+    use crate::workload::generator::WorkloadGenerator;
+    use crate::workload::spec::{AccessSpec, TenantSpec};
+
+    /// The pre-refactor executor shape, kept verbatim as the
+    /// equivalence reference: one scoped OS thread per shard per batch.
+    fn step_batch_spawn<'e>(
+        shards: &mut [Shard<'e>],
+        ctx: StepCtx<'_>,
+        batch: usize,
+        window_end: f64,
+        budget: u64,
+        mults: Option<&[f64]>,
+    ) -> Vec<ShardBatchOutcome> {
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = shards
+                .iter_mut()
+                .map(|sh| {
+                    let solve_ctx = SolveContext {
+                        tenants: ctx.tenants,
+                        universe: ctx.universe,
+                        budget,
+                        stateful_gamma: ctx.stateful_gamma,
+                        weight_mult: mults,
+                    };
+                    scope.spawn(move || sh.step(&solve_ctx, ctx.policy, batch, window_end))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("shard thread panicked"))
+                .collect()
+        })
+    }
+
+    fn build_shards<'e>(
+        engine: &'e SimEngine,
+        universe: &Universe,
+        tenants: &TenantSet,
+        n_shards: usize,
+        budget: u64,
+    ) -> Vec<Shard<'e>> {
+        let cached_sizes: Vec<u64> =
+            universe.views.iter().map(|v| v.cached_bytes).collect();
+        let placement = Placement::hash(n_shards, cached_sizes.len());
+        (0..n_shards)
+            .map(|s| {
+                Shard::new(
+                    s,
+                    engine,
+                    universe,
+                    tenants,
+                    placement.shard_mask(s),
+                    42,
+                    budget,
+                    0,
+                    false,
+                )
+            })
+            .collect()
+    }
+
+    /// Route a batch of queries round-robin into shard inboxes (the
+    /// routing policy is irrelevant here — both executors must agree on
+    /// *whatever* inboxes they are handed).
+    fn fill_inboxes(shards: &mut [Shard<'_>], batch_end: f64, gen: &mut WorkloadGenerator, universe: &Universe) {
+        let n = shards.len();
+        for (i, q) in gen.generate_until(batch_end, universe).into_iter().enumerate() {
+            shards[i % n].inbox.push(q);
+        }
+    }
+
+    /// Tentpole pin: the pooled executor is bit-identical to the legacy
+    /// spawn-per-batch executor on every simulated quantity, across
+    /// multiple batches and with more shards than workers.
+    #[test]
+    fn pool_matches_spawn_per_batch_executor() {
+        let universe = Universe::sales_only();
+        let tenants = TenantSet::equal(3);
+        let engine = SimEngine::new(ClusterConfig::default());
+        let policy = PolicyKind::FastPf.build();
+        let specs: Vec<TenantSpec> =
+            (0..3).map(|i| TenantSpec::new(AccessSpec::g(1 + i % 4), 30.0)).collect();
+        let budget = engine.config.cache_budget / 2;
+        let n_shards = 6; // more shards than workers: real multiplexing
+        let ctx = StepCtx {
+            tenants: &tenants,
+            universe: &universe,
+            policy: policy.as_ref(),
+            stateful_gamma: Some(2.0),
+        };
+
+        let mut a = build_shards(&engine, &universe, &tenants, n_shards, budget);
+        let mut b = build_shards(&engine, &universe, &tenants, n_shards, budget);
+        let mut gen_a = WorkloadGenerator::new(specs.clone(), &universe, 42);
+        let mut gen_b = WorkloadGenerator::new(specs, &universe, 42);
+
+        let mults: Arc<Vec<f64>> = Arc::new(vec![1.3, 0.8, 1.0]);
+        let mut pooled = Vec::new();
+        with_shard_pool::<Shard<'_>, _>(2, ctx, |pool| {
+            for batch in 0..3 {
+                let end = (batch + 1) as f64 * 40.0;
+                fill_inboxes(&mut a, end, &mut gen_a, &universe);
+                let m = (batch > 0).then_some(&mults);
+                let mut out = Vec::new();
+                pool.step_batch(&mut a, batch, end, budget, m, &mut out);
+                pooled.push(out);
+            }
+        });
+        let mut spawned = Vec::new();
+        for batch in 0..3 {
+            let end = (batch + 1) as f64 * 40.0;
+            fill_inboxes(&mut b, end, &mut gen_b, &universe);
+            let m = (batch > 0).then(|| mults.as_slice());
+            spawned.push(step_batch_spawn(&mut b, ctx, batch, end, budget, m));
+        }
+
+        for (pb, sb) in pooled.iter().zip(&spawned) {
+            assert_eq!(pb.len(), sb.len());
+            for (p, s) in pb.iter().zip(sb) {
+                assert_eq!(p.utilities, s.utilities, "attained utilities diverged");
+                assert_eq!(p.u_star, s.u_star, "solo optima diverged");
+            }
+        }
+        for (sa, sb) in a.iter().zip(&b) {
+            assert_eq!(sa.id, sb.id, "pool must restore shard order");
+            assert_eq!(sa.mirror, sb.mirror, "cache mirrors diverged");
+            assert_eq!(sa.budgets, sb.budgets);
+            assert_eq!(
+                sa.executor.cache().used_bytes(),
+                sb.executor.cache().used_bytes(),
+                "cache contents diverged"
+            );
+        }
+    }
+
+    /// `workers = 0` (inline) and a threaded pool agree — the CLI's
+    /// escape hatch is not a second semantics.
+    #[test]
+    fn inline_pool_matches_threaded_pool() {
+        let universe = Universe::sales_only();
+        let tenants = TenantSet::equal(2);
+        let engine = SimEngine::new(ClusterConfig::default());
+        let policy = PolicyKind::Mmf.build();
+        let specs: Vec<TenantSpec> =
+            (0..2).map(|_| TenantSpec::new(AccessSpec::g(2), 25.0)).collect();
+        let budget = engine.config.cache_budget / 3;
+        let ctx = StepCtx {
+            tenants: &tenants,
+            universe: &universe,
+            policy: policy.as_ref(),
+            stateful_gamma: None,
+        };
+        let run = |workers: usize| {
+            let mut shards = build_shards(&engine, &universe, &tenants, 3, budget);
+            let mut gen = WorkloadGenerator::new(specs.clone(), &universe, 7);
+            let mut all = Vec::new();
+            with_shard_pool::<Shard<'_>, _>(workers, ctx, |pool| {
+                for batch in 0..2 {
+                    let end = (batch + 1) as f64 * 40.0;
+                    fill_inboxes(&mut shards, end, &mut gen, &universe);
+                    let mut out = Vec::new();
+                    pool.step_batch(&mut shards, batch, end, budget, None, &mut out);
+                    all.push(out);
+                }
+            });
+            (all, shards.iter().map(|s| s.mirror.clone()).collect::<Vec<_>>())
+        };
+        let (out0, mirrors0) = run(0);
+        let (out4, mirrors4) = run(4);
+        assert_eq!(mirrors0, mirrors4);
+        for (a, b) in out0.iter().zip(&out4) {
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.utilities, y.utilities);
+                assert_eq!(x.u_star, y.u_star);
+            }
+        }
+    }
+
+    /// A panicking shard step propagates to the coordinator thread
+    /// instead of deadlocking the fan-in loop.
+    #[test]
+    fn worker_panic_propagates() {
+        struct Bomb;
+        impl<'e> PoolItem<'e> for Bomb {
+            fn shard_mut(&mut self) -> &mut Shard<'e> {
+                panic!("boom");
+            }
+        }
+        let universe = Universe::sales_only();
+        let tenants = TenantSet::equal(1);
+        let policy = PolicyKind::Static.build();
+        let ctx = StepCtx {
+            tenants: &tenants,
+            universe: &universe,
+            policy: policy.as_ref(),
+            stateful_gamma: None,
+        };
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            with_shard_pool::<Bomb, _>(2, ctx, |pool| {
+                let mut items = vec![Bomb, Bomb];
+                let mut out = Vec::new();
+                pool.step_batch(&mut items, 0, 40.0, 1000, None, &mut out);
+            })
+        }));
+        assert!(caught.is_err(), "panic must propagate out of the pool");
+    }
+
+    #[test]
+    fn resolve_workers_semantics() {
+        assert_eq!(resolve_workers(Some(0)), 0);
+        assert_eq!(resolve_workers(Some(3)), 3);
+        assert!(resolve_workers(None) >= 1);
+    }
+}

@@ -29,9 +29,10 @@
 //!    across holders (unlike the replay federation, routing here is on
 //!    the admission path — replication cannot retroactively move a
 //!    query that is already queued);
-//! 4. solves + executes every live shard concurrently — the unmodified
+//! 4. solves + executes every live shard on the persistent worker pool
+//!    ([`crate::cluster::runtime`]) — the unmodified
 //!    `SolveContext`/`BatchExecutor` machinery, under the accountant's
-//!    per-tenant weight multipliers;
+//!    per-tenant weight multipliers, with no thread creation per batch;
 //! 5. folds per-shard attained/attainable utilities into the
 //!    [`GlobalAccountant`] (warming joiners excluded) and records a
 //!    [`ClusterRecord`], so every federation metric (attainment
@@ -50,6 +51,7 @@
 //! a reactive drain under idleness with workload conservation.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicPtr, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -58,8 +60,11 @@ use crate::cluster::federation::{apply_placement, decay_due, route_query, Global
 use crate::cluster::membership::{AutoMembership, MembershipAction};
 use crate::cluster::metrics::{ClusterRecord, ClusterResult, MembershipChange};
 use crate::cluster::placement::{Placement, PlacementStrategy};
+use crate::cluster::runtime::{
+    resolve_workers, with_shard_pool, PoolItem, ShardPool, StepCtx,
+};
 use crate::cluster::shard::{Shard, ShardBatchOutcome};
-use crate::coordinator::loop_::{CoordinatorConfig, SolveContext};
+use crate::coordinator::loop_::CoordinatorConfig;
 use crate::coordinator::service::{
     assemble_report, queue_counts, ServeConfig, ServeLoopStats, ServeReport,
 };
@@ -107,6 +112,12 @@ pub struct ServeFederationConfig {
     pub warmup_batches: usize,
     /// Clamp on the accountant's per-tenant weight multipliers.
     pub max_boost: f64,
+    /// Worker-pool width for the per-batch shard steps (`--workers`):
+    /// `None` sizes the pool to the host's available parallelism,
+    /// `Some(0)` steps shards inline on the serving thread, `Some(n)`
+    /// pins `n` pool threads. Every simulated quantity is bit-identical
+    /// across all settings (see `cluster::runtime`).
+    pub workers: Option<usize>,
 }
 
 impl ServeFederationConfig {
@@ -123,6 +134,7 @@ impl ServeFederationConfig {
             max_shards: (n_shards * 4).max(8),
             warmup_batches: 2,
             max_boost: 4.0,
+            workers: None,
         }
     }
 }
@@ -219,97 +231,141 @@ impl LiveShard<'_> {
     }
 }
 
+/// The queue handle and load signal ride along with the shard into
+/// whichever pool worker steps it; only `shard` is touched there.
+impl<'e> PoolItem<'e> for LiveShard<'e> {
+    fn shard_mut(&mut self) -> &mut Shard<'e> {
+        &mut self.shard
+    }
+}
+
 /// The admission-path router shared between producer threads and the
 /// serving loop: placement + per-shard home/replica masks + the live
-/// queue set behind one mutex, swapped atomically on every membership
-/// or replication change. Producers route each arrival to a live
-/// shard's queue; the loop is the only writer.
+/// queue set, published RCU-style as immutable [`RouterEpoch`]s behind
+/// one atomic pointer. Producers route each arrival against the current
+/// epoch with a single `Acquire` load — the admission path takes no
+/// lock — while the serving loop (the only writer) publishes a fresh
+/// epoch on every membership, replication, decay, or rebalance change.
+/// Retired epochs stay allocated until the router drops (a handful of
+/// boxes per run: epochs change on reconfiguration events, not per
+/// batch), which is what makes the borrow in [`ServeRouter::epoch`]
+/// sound without deferred-reclamation machinery.
 pub(crate) struct ServeRouter {
-    state: Mutex<RouterState>,
+    /// The live epoch. Always points into one of the boxes owned by
+    /// `epochs`, so the pointee outlives every reader of `&self`.
+    current: AtomicPtr<RouterEpoch>,
+    /// Every epoch ever published, in publication order. Append-only;
+    /// owns the allocations `current` points into.
+    epochs: Mutex<Vec<Box<RouterEpoch>>>,
+    done_producers: AtomicUsize,
     n_producers: usize,
     cached_sizes: Vec<u64>,
 }
 
-struct RouterState {
+/// One immutable snapshot of the routing state.
+struct RouterEpoch {
     /// Live shard ids, ascending — all vectors below are index-aligned.
     ids: Vec<usize>,
     home_masks: Vec<ConfigMask>,
     replica_masks: Vec<ConfigMask>,
     queues: Vec<Arc<AdmissionQueue>>,
     placement: Option<Placement>,
-    done_producers: usize,
 }
 
 impl ServeRouter {
     fn new(n_producers: usize, cached_sizes: Vec<u64>) -> Self {
-        Self {
-            state: Mutex::new(RouterState {
-                ids: Vec::new(),
-                home_masks: Vec::new(),
-                replica_masks: Vec::new(),
-                queues: Vec::new(),
-                placement: None,
-                done_producers: 0,
-            }),
+        let router = Self {
+            current: AtomicPtr::new(std::ptr::null_mut()),
+            epochs: Mutex::new(Vec::new()),
+            done_producers: AtomicUsize::new(0),
             n_producers,
             cached_sizes,
-        }
+        };
+        // Epoch 0: empty routing state, so `epoch()` never sees null.
+        router.publish(RouterEpoch {
+            ids: Vec::new(),
+            home_masks: Vec::new(),
+            replica_masks: Vec::new(),
+            queues: Vec::new(),
+            placement: None,
+        });
+        router
     }
 
-    /// Route one query against `st` — the replay federation's routing
+    /// Publish a new epoch: box it, retain the box, swap the pointer.
+    /// The `Release` store pairs with the `Acquire` load in
+    /// [`ServeRouter::epoch`], so a reader that observes the new
+    /// pointer observes the fully built epoch behind it.
+    fn publish(&self, epoch: RouterEpoch) {
+        let boxed = Box::new(epoch);
+        let ptr: *const RouterEpoch = &*boxed;
+        self.epochs.lock().unwrap().push(boxed);
+        self.current.store(ptr as *mut RouterEpoch, Ordering::Release);
+    }
+
+    /// The current routing epoch — one atomic load, no lock.
+    fn epoch(&self) -> &RouterEpoch {
+        let ptr = self.current.load(Ordering::Acquire);
+        // SAFETY: `publish` stores pointers only into boxes held by
+        // `self.epochs`, which are append-only and dropped no earlier
+        // than the router itself, so the pointee is valid and unmutated
+        // for as long as this `&self` borrow lives.
+        unsafe { &*ptr }
+    }
+
+    /// Route one query against `ep` — the replay federation's routing
     /// policy ([`route_query`], the single shared implementation),
-    /// applied at admission time over the router's masks.
-    fn idx(&self, st: &RouterState, q: &Query) -> usize {
-        let placement = st.placement.as_ref().expect("router synced");
+    /// applied at admission time over the epoch's masks.
+    fn idx(&self, ep: &RouterEpoch, q: &Query) -> usize {
+        let placement = ep.placement.as_ref().expect("router synced");
         route_query(
-            st.ids.len(),
-            |i, v| st.home_masks[i].get(v) || st.replica_masks[i].get(v),
-            |v| st.ids.binary_search(&placement.home(v)).unwrap_or(0),
+            ep.ids.len(),
+            |i, v| ep.home_masks[i].get(v) || ep.replica_masks[i].get(v),
+            |v| ep.ids.binary_search(&placement.home(v)).unwrap_or(0),
             &self.cached_sizes,
             q,
         )
     }
 
-    /// Admit one arrival: route, then offer under `admission`. The
-    /// queue handle is cloned out of the lock so a blocking offer never
-    /// holds the routing table.
+    /// Admit one arrival: route lock-free against the current epoch,
+    /// then offer under `admission`. The queue handle is cloned out of
+    /// the epoch, so a blocking offer never delays anything else.
     fn offer(&self, q: Query, admission: AdmissionPolicy) -> bool {
-        let queue = {
-            let st = self.state.lock().unwrap();
-            st.queues[self.idx(&st, &q)].clone()
-        };
+        let ep = self.epoch();
+        let queue = ep.queues[self.idx(ep, &q)].clone();
         queue.offer(q, admission)
     }
 
     /// Index (into the live set) a query would route to right now —
     /// the drain path re-homes a retiring shard's backlog through this.
     fn route_index(&self, q: &Query) -> usize {
-        let st = self.state.lock().unwrap();
-        self.idx(&st, q)
+        self.idx(self.epoch(), q)
     }
 
     fn producer_done(&self) {
-        self.state.lock().unwrap().done_producers += 1;
+        self.done_producers.fetch_add(1, Ordering::Release);
     }
 
     fn producers_done(&self) -> bool {
-        let st = self.state.lock().unwrap();
-        st.done_producers >= self.n_producers
+        self.done_producers.load(Ordering::Acquire) >= self.n_producers
     }
 }
 
-/// Install the loop's authoritative placement/shard state into the
-/// router (one atomic swap under the lock).
+/// Publish the loop's authoritative placement/shard state as a fresh
+/// router epoch (one pointer swap; producers mid-route finish against
+/// the epoch they already loaded — same semantics as losing the old
+/// lock race by a hair).
 fn sync_router(router: &ServeRouter, placement: &Placement, live: &[LiveShard<'_>]) {
-    let mut st = router.state.lock().unwrap();
-    st.ids = live.iter().map(|ls| ls.shard.id).collect();
-    st.home_masks = live
-        .iter()
-        .map(|ls| placement.shard_mask(ls.shard.id))
-        .collect();
-    st.replica_masks = live.iter().map(|ls| ls.shard.replicas.clone()).collect();
-    st.queues = live.iter().map(|ls| ls.queue.clone()).collect();
-    st.placement = Some(placement.clone());
+    router.publish(RouterEpoch {
+        ids: live.iter().map(|ls| ls.shard.id).collect(),
+        home_masks: live
+            .iter()
+            .map(|ls| placement.shard_mask(ls.shard.id))
+            .collect(),
+        replica_masks: live.iter().map(|ls| ls.shard.replicas.clone()).collect(),
+        queues: live.iter().map(|ls| ls.queue.clone()).collect(),
+        placement: Some(placement.clone()),
+    });
 }
 
 /// Everything the serving loop borrows for its whole run.
@@ -367,9 +423,37 @@ fn build_initial<'e>(
 /// The shared serving loop — the tentpole's core. Both drivers call
 /// this with their clock and their arrival pump; everything else
 /// (membership, cut, replication, solve/execute, accounting) is
-/// driver-independent.
+/// driver-independent. Spins up the per-run worker pool, then runs
+/// [`run_loop_on_pool`] on it — the only thread creation of the loop's
+/// whole lifetime.
 #[allow(clippy::too_many_arguments)]
 fn run_loop<'e, C: Clock>(
+    inp: &ServingInputs<'_, 'e>,
+    clock: &mut C,
+    router: &ServeRouter,
+    placement: Placement,
+    live: Vec<LiveShard<'e>>,
+    cached_sizes: &[u64],
+    scan_sizes: &[u64],
+    pump: impl FnMut(&mut C, f64) -> bool,
+) -> LoopOut<'e> {
+    let ctx = StepCtx {
+        tenants: inp.tenants,
+        universe: inp.universe,
+        policy: inp.policy,
+        stateful_gamma: inp.fcfg.serve.stateful_gamma,
+    };
+    with_shard_pool(resolve_workers(inp.fcfg.workers), ctx, |pool| {
+        run_loop_on_pool(
+            inp, clock, router, placement, live, cached_sizes, scan_sizes, pump, pool,
+        )
+    })
+}
+
+/// One serving run on an already-live pool: every batch's shard steps
+/// are messages to the fixed worker set — nothing in here spawns.
+#[allow(clippy::too_many_arguments)]
+fn run_loop_on_pool<'e, C: Clock>(
     inp: &ServingInputs<'_, 'e>,
     clock: &mut C,
     router: &ServeRouter,
@@ -378,6 +462,7 @@ fn run_loop<'e, C: Clock>(
     cached_sizes: &[u64],
     scan_sizes: &[u64],
     mut pump: impl FnMut(&mut C, f64) -> bool,
+    pool: &mut ShardPool<'_, LiveShard<'e>>,
 ) -> LoopOut<'e> {
     let fcfg = inp.fcfg;
     let cfg = &fcfg.serve;
@@ -407,6 +492,16 @@ fn run_loop<'e, C: Clock>(
     let mut last_event: Option<usize> = None;
     let mut b = 0usize;
     let mut last_report = 0u64;
+    // Steady-state scratch, hoisted out of the batch loop so a settled
+    // federation allocates nothing per batch (DESIGN.md §2g).
+    let mut batch_demand = vec![0u64; n_views];
+    let mut outcomes: Vec<ShardBatchOutcome> = Vec::new();
+    let mut obs_u = vec![0.0; n_tenants];
+    let mut obs_star = vec![0.0; n_tenants];
+    // Multiplier buffer shared with the pool workers by refcount; the
+    // workers drop their handles before replying, so `Arc::make_mut`
+    // reuses this allocation every batch.
+    let mut mult_buf: Arc<Vec<f64>> = Arc::new(vec![1.0; n_tenants]);
 
     loop {
         let window_end = (b + 1) as f64 * cfg.batch_secs;
@@ -563,18 +658,20 @@ fn run_loop<'e, C: Clock>(
         // --- 2. Cut each live shard's queue (routing happened at
         // admission time); update the load signal. ---
         let mut total_cut = 0usize;
-        let mut batch_demand = vec![0u64; n_views];
+        batch_demand.fill(0);
         let mut max_shard_qps = 0.0f64;
         for ls in live.iter_mut() {
-            let mut qs = ls.queue.drain();
-            qs.sort_by_key(|q| OrdF64(q.arrival));
-            for q in &qs {
+            // Cut into the shard's recycled inbox (emptied, capacity
+            // intact, by the executor's buffer reclaim last step).
+            ls.queue.drain_into(&mut ls.shard.inbox);
+            ls.shard.inbox.sort_by_key(|q| OrdF64(q.arrival));
+            for q in &ls.shard.inbox {
                 stats.admit_wait_sum += (now - q.arrival).max(0.0);
                 for v in &q.required_views {
                     batch_demand[v.0] += scan_sizes[v.0];
                 }
             }
-            let qps = qs.len() as f64 / cfg.batch_secs;
+            let qps = ls.shard.inbox.len() as f64 / cfg.batch_secs;
             max_shard_qps = max_shard_qps.max(qps);
             if let Some(auto) = fcfg.auto {
                 if ls.load.len() >= auto.window {
@@ -582,8 +679,7 @@ fn run_loop<'e, C: Clock>(
                 }
                 ls.load.push_back(qps);
             }
-            total_cut += qs.len();
-            ls.shard.inbox = qs;
+            total_cut += ls.shard.inbox.len();
         }
         // Trigger streaks accumulate only *outside* the cooldown — the
         // whole point of the cooldown is that the signal is not trusted
@@ -715,43 +811,28 @@ fn run_loop<'e, C: Clock>(
             }
         }
 
-        // --- 4. Solve + execute every live shard concurrently, under
-        // the accountant's feedback (None while a single shard is live
-        // — the single-node-equivalent path). ---
-        let mults: Option<Vec<f64>> = if live.len() > 1 && b > 0 {
-            Some(accountant.multipliers(&weights))
-        } else {
-            None
-        };
-        let solve_budget = live_budget;
-        let outcomes: Vec<ShardBatchOutcome> = std::thread::scope(|scope| {
-            let handles: Vec<_> = live
-                .iter_mut()
-                .map(|ls| {
-                    let ctx = SolveContext {
-                        tenants: inp.tenants,
-                        universe: inp.universe,
-                        budget: solve_budget,
-                        stateful_gamma: cfg.stateful_gamma,
-                        weight_mult: mults.as_deref(),
-                    };
-                    let sh = &mut ls.shard;
-                    let policy = inp.policy;
-                    scope.spawn(move || sh.step(&ctx, policy, b, window_end))
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("shard thread panicked"))
-                .collect()
-        });
+        // --- 4. Solve + execute every live shard on the worker pool,
+        // under the accountant's feedback (no multipliers while a
+        // single shard is live — the single-node-equivalent path). ---
+        let use_mults = live.len() > 1 && b > 0;
+        if use_mults {
+            accountant.multipliers_into(&weights, Arc::make_mut(&mut mult_buf));
+        }
+        pool.step_batch(
+            &mut live,
+            b,
+            window_end,
+            live_budget,
+            use_mults.then_some(&mult_buf),
+            &mut outcomes,
+        );
 
         // --- 5. Global fairness accounting (warming joiners excluded
         // from the accountant; records keep the full reality). ---
         let mut agg_u = vec![0.0; n_tenants];
         let mut agg_star = vec![0.0; n_tenants];
-        let mut obs_u = vec![0.0; n_tenants];
-        let mut obs_star = vec![0.0; n_tenants];
+        obs_u.fill(0.0);
+        obs_star.fill(0.0);
         for (ls, o) in live.iter().zip(&outcomes) {
             let warm = !ls.shard.is_warming(b);
             for i in 0..n_tenants {
@@ -771,7 +852,11 @@ fn run_loop<'e, C: Clock>(
             .collect();
         records.push(ClusterRecord {
             index: b,
-            multipliers: mults.unwrap_or_else(|| vec![1.0; n_tenants]),
+            multipliers: if use_mults {
+                mult_buf.as_ref().clone()
+            } else {
+                vec![1.0; n_tenants]
+            },
             replicated_views,
             rebalanced,
             membership: membership_changes,

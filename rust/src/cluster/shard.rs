@@ -173,7 +173,10 @@ impl<'a> Shard<'a> {
         }
         self.mirror = config.clone();
         self.budgets.push(ctx.budget);
-        self.executor.execute(
+        // Reclaim the routed batch's buffer: the cleared Vec (capacity
+        // intact) becomes next batch's inbox, so a steady-state shard
+        // allocates nothing per batch.
+        self.inbox = self.executor.execute_reclaim(
             PlannedBatch {
                 index,
                 window_end,

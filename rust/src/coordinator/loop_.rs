@@ -459,16 +459,36 @@ impl BatchExecutor<'_> {
     /// Execute one planned batch. `queue_depth`/`stall_secs` are the
     /// pipeline-health observations recorded on the [`BatchRecord`].
     pub fn execute(&mut self, planned: PlannedBatch, queue_depth: usize, stall_secs: f64) {
+        self.execute_reclaim(planned, queue_depth, stall_secs);
+    }
+
+    /// [`BatchExecutor::execute`], but hand the batch's (cleared) query
+    /// buffer back to the caller so steady-state loops can refill it
+    /// instead of allocating a fresh `Vec` every batch — the zero-alloc
+    /// contract of the shard runtime (DESIGN.md §2g).
+    pub(crate) fn execute_reclaim(
+        &mut self,
+        planned: PlannedBatch,
+        queue_depth: usize,
+        stall_secs: f64,
+    ) -> Vec<Query> {
+        let PlannedBatch {
+            index,
+            window_end,
+            mut queries,
+            config,
+            solve_secs,
+        } = planned;
         // Step 3: incremental cache transition.
-        let delta = self.cache.update(&planned.config);
+        let delta = self.cache.update(&config);
 
         // Steps 4+5: execute on the simulated cluster, starting once
         // the batch window has closed and the previous batch finished.
-        let now = self.clock.wait_until(planned.window_end);
+        let now = self.clock.wait_until(window_end);
         let exec_start = now.max(self.prev_end);
         let exec = self.engine.execute_batch(
             exec_start,
-            &planned.queries,
+            &queries,
             &self.scan_sizes,
             &mut self.cache,
             &self.weights,
@@ -476,19 +496,21 @@ impl BatchExecutor<'_> {
         self.prev_end = exec.end_time;
 
         self.batches.push(BatchRecord {
-            index: planned.index,
-            n_queries: planned.queries.len(),
-            config: planned.config,
+            index,
+            n_queries: queries.len(),
+            config,
             cache_utilization: self.cache.utilization(),
-            window_end: planned.window_end,
+            window_end,
             exec_start,
             exec_end: exec.end_time,
-            solve_secs: planned.solve_secs,
+            solve_secs,
             queue_depth,
             stall_secs,
             delta,
         });
         self.outcomes.extend(exec.outcomes);
+        queries.clear();
+        queries
     }
 
     /// Final cache transition accounting.

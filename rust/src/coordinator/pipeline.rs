@@ -1,7 +1,9 @@
 //! Pipelined solve/execute: while batch *b* executes on the (simulated)
 //! cluster, a solver thread prunes + solves batch *b+1*'s allocation.
 //!
-//! The hand-off is a bounded channel of [`PlannedBatch`]es. Determinism
+//! The hand-off is a bounded channel of [`PlannedBatch`]es; the solver
+//! half runs as a job on a [`crate::util::pool`] worker (the generic
+//! sibling of the shard runtime's pool). Determinism
 //! holds because the planner half is self-contained: the workload
 //! generator and the policy RNG advance in batch order on the solver
 //! thread exactly as they do in the serial loop, and the stateful boost
@@ -20,6 +22,7 @@ use std::time::Instant;
 
 use crate::alloc::Policy;
 use crate::coordinator::loop_::{Coordinator, PlannedBatch, RunResult};
+use crate::util::pool::with_worker_pool;
 use crate::workload::generator::WorkloadGenerator;
 
 /// Default number of pre-solved batches the solver may run ahead.
@@ -41,14 +44,16 @@ impl Coordinator<'_> {
         let queued = AtomicUsize::new(0);
         let (tx, rx) = mpsc::sync_channel::<PlannedBatch>(depth);
         let mut executor = self.executor();
+        // Built before entering the pool: pool jobs may only borrow
+        // state that outlives the `with_worker_pool` call.
+        let mut planner = self.planner(generator, policy);
 
-        std::thread::scope(|scope| {
-            let mut planner = self.planner(generator, policy);
+        with_worker_pool(1, |pool| {
             let queued = &queued;
-            scope.spawn(move || {
+            pool.submit(move || {
                 while let Some(planned) = planner.next_batch() {
                     queued.fetch_add(1, Ordering::SeqCst);
-                    // The receiver only hangs up when the scope is
+                    // The receiver only hangs up when the pool is
                     // tearing down; nothing to do but stop planning.
                     if tx.send(planned).is_err() {
                         break;

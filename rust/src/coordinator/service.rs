@@ -213,13 +213,18 @@ fn service_loop<C: Clock>(
     let mut completed_live = 0u64;
     // Carried solver state (`--warm-start`, on by default for serve).
     let mut warm = cfg.warm_start.then(WarmState::new);
+    // Batch-cut buffer, recycled through the executor's buffer reclaim
+    // so the steady-state loop allocates nothing per cut.
+    let mut queries: Vec<Query> = Vec::new();
     loop {
         let window_end = (batch_idx + 1) as f64 * cfg.batch_secs;
         let now = clock.wait_until(window_end);
         let all_closed = pump(clock, now);
 
         // Step 1: cut the batch across all tenant queues.
-        let mut queries: Vec<Query> = queues.iter().flat_map(|q| q.drain()).collect();
+        for q in queues {
+            q.drain_into(&mut queries);
+        }
         queries.sort_by_key(|q| OrdF64(q.arrival));
         for q in &queries {
             stats.admit_wait_sum += (now - q.arrival).max(0.0);
@@ -243,7 +248,7 @@ fn service_loop<C: Clock>(
         // `queue_depth` records arrivals already waiting for the
         // *next* cut; in serve mode the solve is the stall.
         let backlog: usize = queues.iter().map(|q| q.len()).sum();
-        executor.execute(
+        queries = executor.execute_reclaim(
             PlannedBatch {
                 index: batch_idx,
                 window_end,

@@ -79,6 +79,8 @@ fn main() {
                         OptSpec { name: "rebalance-every", help: "cluster/serve: re-home views by demand every K batches", default: None },
                         OptSpec { name: "membership", help: "cluster: schedule \"add@40,kill@80\"; serve: reactive auto[:lo,hi]", default: None },
                         OptSpec { name: "warmup", help: "cluster/serve: accountant warm-up batches for added shards", default: Some("2") },
+                        OptSpec { name: "workers", help: "cluster/serve: shard-step worker threads (0 = inline; default: host cores)", default: None },
+                        OptSpec { name: "sim", help: "serve: drive the loop on a simulated clock (deterministic, drop admission only)", default: None },
                         OptSpec { name: "setup", help: "cluster: §5.3 workload, sales-g1..sales-g4", default: Some("sales-g2") },
                     ],
                 )
@@ -122,6 +124,18 @@ fn opt_gamma(args: &Args) -> Result<Option<f64>, String> {
             .parse::<f64>()
             .map(Some)
             .map_err(|_| format!("--gamma expects a number, got '{s}'")),
+    }
+}
+
+/// Parse `--workers` strictly; absent means auto-size the shard-step
+/// pool to the host, 0 means step shards inline (no pool threads).
+fn opt_workers(args: &Args) -> Result<Option<usize>, String> {
+    match args.opt("workers") {
+        None => Ok(None),
+        Some(s) => s
+            .parse::<usize>()
+            .map(Some)
+            .map_err(|_| format!("--workers expects an integer, got '{s}'")),
     }
 }
 
@@ -241,6 +255,13 @@ fn cmd_serve(args: &Args) -> Result<i32, String> {
             format!("--rebalance-every expects an integer, got '{s}'")
         })?),
     };
+    let workers = opt_workers(args)?;
+    // The deterministic driver is single-threaded on the arrival side;
+    // a blocked offer would deadlock it (see serve_federated_sim).
+    let sim = args.flag("sim");
+    if sim && admission != robus::workload::AdmissionPolicy::Drop {
+        return Err("--sim supports only --admission drop".to_string());
+    }
     // With one shard and no way to ever gain another, the federation
     // knobs are meaningless: warn rather than silently no-op.
     if n_shards == 1 && auto.is_none() {
@@ -250,6 +271,7 @@ fn cmd_serve(args: &Args) -> Result<i32, String> {
             ("rebalance-every", rebalance_every.is_some()),
             ("placement", args.opt("placement").is_some()),
             ("warmup", args.opt("warmup").is_some()),
+            ("workers", workers.is_some()),
         ] {
             if present {
                 eprintln!(
@@ -279,13 +301,24 @@ fn cmd_serve(args: &Args) -> Result<i32, String> {
             kind.name(),
             cfg.duration_secs,
         );
-        let report = robus::coordinator::service::serve(
-            &universe,
-            &tenants,
-            &engine,
-            policy.as_ref(),
-            &cfg,
-        );
+        let report = if sim {
+            robus::coordinator::service::serve_sim(
+                &universe,
+                &tenants,
+                &engine,
+                policy.as_ref(),
+                &cfg,
+            )
+            .0
+        } else {
+            robus::coordinator::service::serve(
+                &universe,
+                &tenants,
+                &engine,
+                policy.as_ref(),
+                &cfg,
+            )
+        };
         print!("{}", report.render());
         report.queries_per_sec
     } else {
@@ -296,6 +329,7 @@ fn cmd_serve(args: &Args) -> Result<i32, String> {
             auto,
             placement,
             warmup_batches: args.opt_usize("warmup", 2)?,
+            workers,
             ..ServeFederationConfig::new(cfg.clone(), n_shards)
         };
         println!(
@@ -314,13 +348,23 @@ fn cmd_serve(args: &Args) -> Result<i32, String> {
             },
             cfg.duration_secs,
         );
-        let report = robus::cluster::serve_federated(
-            &universe,
-            &tenants,
-            &engine,
-            policy.as_ref(),
-            &fcfg,
-        );
+        let report = if sim {
+            robus::cluster::serve_federated_sim(
+                &universe,
+                &tenants,
+                &engine,
+                policy.as_ref(),
+                &fcfg,
+            )
+        } else {
+            robus::cluster::serve_federated(
+                &universe,
+                &tenants,
+                &engine,
+                policy.as_ref(),
+                &fcfg,
+            )
+        };
         print!("{}", report.render());
         report.serve.queries_per_sec
     };
@@ -397,6 +441,7 @@ fn cmd_cluster(args: &Args) -> Result<i32, String> {
         replica_decay,
         warmup_batches: args.opt_usize("warmup", 2)?,
         warm_start: opt_warm_start(args, false)?,
+        workers: opt_workers(args)?,
         ..FederationConfig::default()
     };
 

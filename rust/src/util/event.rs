@@ -218,4 +218,58 @@ mod tests {
         assert_eq!(q.pop(), Some((5.0, (1, 9))));
         assert_eq!(q.pop(), Some((5.0, (2, 0))));
     }
+
+    #[test]
+    fn queue_matches_legacy_heap_order() {
+        // The module contract, checked property-style: for any event
+        // sequence, `EventQueue` pops in exactly the order of the
+        // pre-refactor `BinaryHeap<Reverse<(OrdF64, P)>>` the engine
+        // used inline. Times are drawn from a coarse grid so ties (the
+        // interesting case) occur constantly.
+        crate::util::proptest::check(
+            200,
+            |rng| {
+                let n = 1 + rng.index(60);
+                (0..n)
+                    .map(|_| {
+                        let t = rng.index(8) as f64 * 0.5;
+                        (t, (rng.index(5), rng.index(5)))
+                    })
+                    .collect::<Vec<(f64, (usize, usize))>>()
+            },
+            |events| {
+                // Shrink by dropping one event at a time.
+                (0..events.len())
+                    .map(|i| {
+                        let mut v = events.clone();
+                        v.remove(i);
+                        v
+                    })
+                    .collect()
+            },
+            |events| {
+                let mut q: EventQueue<(usize, usize)> = EventQueue::new();
+                let mut legacy: BinaryHeap<Reverse<(OrdF64, (usize, usize))>> = BinaryHeap::new();
+                for &(t, p) in events {
+                    q.push(t, p);
+                    legacy.push(Reverse((OrdF64(t), p)));
+                }
+                while let Some(Reverse((t, p))) = legacy.pop() {
+                    let got = q.pop();
+                    if got != Some((t.get(), p)) {
+                        return Err(format!(
+                            "legacy popped ({}, {:?}), queue popped {:?}",
+                            t.get(),
+                            p,
+                            got
+                        ));
+                    }
+                }
+                if let Some(extra) = q.pop() {
+                    return Err(format!("queue had leftover event {extra:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
 }

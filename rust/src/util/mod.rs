@@ -9,6 +9,7 @@ pub mod event;
 pub mod json;
 pub mod mask;
 pub mod ordf64;
+pub mod pool;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

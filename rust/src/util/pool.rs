@@ -1,0 +1,137 @@
+//! A minimal scoped worker pool over boxed jobs — the generic sibling
+//! of the shard-typed pool in `cluster::runtime`. Threads are created
+//! once per `with_worker_pool` call and multiplex every job submitted
+//! during its body; nothing inside the body spawns. Used by the
+//! pipelined coordinator (`coordinator::pipeline`) for its planner
+//! thread, and available to any other long-running host-side work.
+//!
+//! Jobs are `FnOnce() + Send + 'env`: they may borrow anything that
+//! outlives the `with_worker_pool` call itself, so state a job needs
+//! must be created *before* entering the pool (see `run_pipelined`,
+//! which builds its planner first for exactly this reason).
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+type Job<'env> = Box<dyn FnOnce() + Send + 'env>;
+
+/// Handle to a live pool; [`WorkerPool::submit`] hands jobs to free
+/// workers. Dropping it (done by [`with_worker_pool`] on exit) closes
+/// the job channel, which is what terminates the workers.
+pub struct WorkerPool<'env> {
+    tx: mpsc::Sender<Job<'env>>,
+}
+
+impl<'env> WorkerPool<'env> {
+    /// Queue one job; whichever worker is free picks it up. A panicking
+    /// job tears the pool down and resurfaces at the scope join, like a
+    /// panic on a directly spawned scoped thread.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'env) {
+        self.tx
+            .send(Box::new(job))
+            .expect("worker pool hung up before shutdown");
+    }
+}
+
+/// Run `f` with a pool of `workers` threads (clamped to at least 1):
+/// spawn once, hand `f` the submit handle, then close the channel and
+/// join the workers. Returns `f`'s result.
+pub fn with_worker_pool<'env, R>(
+    workers: usize,
+    f: impl FnOnce(&WorkerPool<'env>) -> R,
+) -> R {
+    let workers = workers.max(1);
+    let (tx, rx) = mpsc::channel::<Job<'env>>();
+    let rx = Arc::new(Mutex::new(rx));
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let rx = Arc::clone(&rx);
+            scope.spawn(move || loop {
+                // Hold the shared-receiver lock only for the dequeue.
+                let job = { rx.lock().expect("job queue poisoned").recv() };
+                match job {
+                    Ok(job) => job(),
+                    Err(_) => break, // channel closed: pool shutting down
+                }
+            });
+        }
+        let pool = WorkerPool { tx };
+        let out = f(&pool);
+        // Dropping the handle drops the sender; every worker's next
+        // recv errors and it exits, letting the scope join cleanly.
+        drop(pool);
+        out
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn jobs_run_and_join_before_return() {
+        let counter = AtomicUsize::new(0);
+        with_worker_pool(3, |pool| {
+            for _ in 0..20 {
+                pool.submit(|| {
+                    counter.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        });
+        // The pool joins its workers before returning, so every
+        // submitted job has finished here.
+        assert_eq!(counter.load(Ordering::SeqCst), 20);
+    }
+
+    #[test]
+    fn jobs_overlap_the_calling_thread() {
+        let mut out = Vec::new();
+        let (tx, rx) = mpsc::channel::<usize>();
+        with_worker_pool(2, |pool| {
+            for i in 0..8usize {
+                let tx = tx.clone();
+                pool.submit(move || tx.send(i * i).unwrap());
+            }
+            drop(tx);
+            // The calling thread keeps working while jobs run.
+            out.extend(rx.iter().take(8));
+        });
+        out.sort_unstable();
+        assert_eq!(out, vec![0, 1, 4, 9, 16, 25, 36, 49]);
+    }
+
+    #[test]
+    fn zero_workers_clamps_to_one() {
+        let ran = AtomicUsize::new(0);
+        with_worker_pool(0, |pool| {
+            pool.submit(|| {
+                ran.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(ran.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn long_job_does_not_block_other_workers() {
+        // One worker parks on a gate; the other must still drain the
+        // remaining jobs — submit distributes over free workers.
+        let (gate_tx, gate_rx) = mpsc::channel::<()>();
+        let done = AtomicUsize::new(0);
+        with_worker_pool(2, |pool| {
+            pool.submit(move || {
+                gate_rx.recv().unwrap();
+            });
+            for _ in 0..4 {
+                pool.submit(|| {
+                    done.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            while done.load(Ordering::SeqCst) < 4 {
+                std::thread::yield_now();
+            }
+            gate_tx.send(()).unwrap();
+        });
+        assert_eq!(done.load(Ordering::SeqCst), 4);
+    }
+}

@@ -108,13 +108,22 @@ impl AdmissionQueue {
     /// Remove everything currently queued (the batch cut). Frees space,
     /// so blocked producers wake.
     pub fn drain(&self) -> Vec<Query> {
+        let mut out = Vec::new();
+        self.drain_into(&mut out);
+        out
+    }
+
+    /// [`AdmissionQueue::drain`] into a caller-owned buffer (appended,
+    /// not cleared) — the serving loops cut every batch into a reused
+    /// per-shard buffer instead of allocating a fresh `Vec` per cut.
+    pub fn drain_into(&self, out: &mut Vec<Query>) {
         let mut st = self.state.lock().unwrap();
-        let out: Vec<Query> = st.items.drain(..).collect();
+        let drained = st.items.len();
+        out.extend(st.items.drain(..));
         drop(st);
-        if !out.is_empty() {
+        if drained > 0 {
             self.space.notify_all();
         }
-        out
     }
 
     pub fn len(&self) -> usize {

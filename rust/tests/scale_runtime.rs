@@ -1,0 +1,152 @@
+//! The shard-runtime scale suite (DESIGN.md §2g): the persistent
+//! worker pool at 64 shards, far past the old spawn-per-batch
+//! executor's comfort zone, on the deterministic SimClock drivers.
+//!
+//! Pins the two contracts the runtime refactor must keep:
+//!
+//! 1. **Determinism at scale** — two same-config 64-shard runs are
+//!    bit-identical on every simulated quantity (outcomes, sampled
+//!    configurations, accountant multipliers, per-tenant attainment),
+//!    with 1000 tenants multiplexing over a handful of pool workers.
+//! 2. **Worker-count invariance** — `workers` = `Some(0)` (inline),
+//!    `Some(n)` (pinned pool), and `None` (host-sized pool) are one
+//!    semantics: the pool width only changes host-side scheduling,
+//!    never what is simulated.
+
+use robus::alloc::PolicyKind;
+use robus::cluster::{ClusterResult, FederationConfig, ServeFederationConfig};
+use robus::cluster::{serve_federated_sim, FederatedServeReport};
+use robus::coordinator::ServeConfig;
+use robus::domain::tenant::TenantSet;
+use robus::experiments::runner::run_federated;
+use robus::experiments::{ExperimentSetup, UniverseKind};
+use robus::sim::{ClusterConfig, SimEngine};
+use robus::workload::spec::{AccessSpec, TenantSpec};
+use robus::workload::{AdmissionPolicy, Universe};
+
+const SHARDS: usize = 64;
+const TENANTS: usize = 1000;
+
+/// 64 shards × 1000 tenants, two batches — enough arrivals that every
+/// shard sees traffic, small enough for the tier-1 suite.
+fn scale_setup() -> ExperimentSetup {
+    ExperimentSetup {
+        name: "scale-64x1k".to_string(),
+        universe: UniverseKind::SalesOnly,
+        tenant_specs: (0..TENANTS)
+            .map(|i| TenantSpec::new(AccessSpec::g(1 + i % 4), 40.0))
+            .collect(),
+        weights: vec![1.0; TENANTS],
+        batch_secs: 20.0,
+        n_batches: 2,
+        stateful_gamma: None,
+        seed: 4242,
+        warm_start: false,
+    }
+}
+
+fn fed(workers: Option<usize>) -> FederationConfig {
+    let mut f = FederationConfig::with_shards(SHARDS);
+    f.workers = workers;
+    f
+}
+
+fn run(workers: Option<usize>) -> ClusterResult {
+    let policy = PolicyKind::FastPf.build();
+    run_federated(&scale_setup(), &fed(workers), policy.as_ref())
+}
+
+/// Bitwise equality of every simulated quantity two federation runs
+/// produce (host-time fields like solve seconds legitimately differ).
+fn assert_cluster_identical(a: &ClusterResult, b: &ClusterResult) {
+    assert_eq!(a.run.outcomes.len(), b.run.outcomes.len());
+    for (x, y) in a.run.outcomes.iter().zip(&b.run.outcomes) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.tenant, y.tenant);
+        assert_eq!(x.start, y.start);
+        assert_eq!(x.finish, y.finish);
+        assert_eq!(x.from_cache, y.from_cache);
+    }
+    assert_eq!(a.per_shard.len(), b.per_shard.len());
+    for (sa, sb) in a.per_shard.iter().zip(&b.per_shard) {
+        assert_eq!(sa.batches.len(), sb.batches.len());
+        for (x, y) in sa.batches.iter().zip(&sb.batches) {
+            assert_eq!(x.config, y.config, "sampled configurations diverged");
+            assert_eq!(x.n_queries, y.n_queries);
+            assert_eq!(x.delta, y.delta);
+        }
+    }
+    assert_eq!(a.records.len(), b.records.len());
+    for (x, y) in a.records.iter().zip(&b.records) {
+        assert_eq!(x.multipliers, y.multipliers, "accountant diverged");
+        assert_eq!(x.tenant_attained, y.tenant_attained);
+        assert_eq!(x.tenant_attainable, y.tenant_attainable);
+        assert_eq!(x.live_shards, y.live_shards);
+    }
+    assert_eq!(a.replication_bytes, b.replication_bytes);
+    assert_eq!(a.rebalance_churn_bytes, b.rebalance_churn_bytes);
+}
+
+#[test]
+fn replay_64_shards_1k_tenants_is_deterministic() {
+    let a = run(Some(4));
+    let b = run(Some(4));
+    assert_eq!(a.n_shards(), SHARDS);
+    assert!(
+        a.run.outcomes.len() > 500,
+        "scale run too small to mean anything: {} outcomes",
+        a.run.outcomes.len()
+    );
+    assert_cluster_identical(&a, &b);
+}
+
+#[test]
+fn replay_64_shards_invariant_to_worker_count() {
+    // Inline (no pool threads at all), a pinned narrow pool, and the
+    // host-sized default must simulate the exact same federation.
+    let inline = run(Some(0));
+    let pooled = run(Some(4));
+    let auto = run(None);
+    assert_cluster_identical(&inline, &pooled);
+    assert_cluster_identical(&inline, &auto);
+}
+
+fn serve_scale(workers: Option<usize>) -> FederatedServeReport {
+    let cfg = ServeConfig {
+        duration_secs: 0.75,
+        rate_per_sec: 4000.0,
+        n_tenants: 256,
+        batch_secs: 0.25,
+        queue_capacity: 8192,
+        admission: AdmissionPolicy::Drop,
+        stateful_gamma: None,
+        seed: 77,
+        warm_start: true,
+        verbose: false,
+    };
+    let mut fcfg = ServeFederationConfig::new(cfg, SHARDS);
+    fcfg.workers = workers;
+    let universe = Universe::sales_only();
+    let tenants = TenantSet::equal(fcfg.serve.n_tenants);
+    let engine = SimEngine::new(ClusterConfig::default());
+    let policy = PolicyKind::FastPf.build();
+    serve_federated_sim(&universe, &tenants, &engine, policy.as_ref(), &fcfg)
+}
+
+#[test]
+fn serving_64_shards_deterministic_and_invariant_to_worker_count() {
+    let a = serve_scale(Some(3));
+    let b = serve_scale(Some(3));
+    let inline = serve_scale(Some(0));
+    assert_eq!(a.live_shards_final(), SHARDS);
+    assert!(a.serve.completed > 500, "completed={}", a.serve.completed);
+    // Conservation through the lock-free router at 64 shards.
+    assert_eq!(a.serve.completed, a.serve.admitted);
+    for other in [&b, &inline] {
+        assert_eq!(a.serve.completed, other.serve.completed);
+        assert_eq!(a.serve.admitted, other.serve.admitted);
+        assert_eq!(a.serve.batches, other.serve.batches);
+        assert_eq!(a.serve.per_tenant_completed, other.serve.per_tenant_completed);
+        assert_cluster_identical(&a.cluster, &other.cluster);
+    }
+}

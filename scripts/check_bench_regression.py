@@ -99,6 +99,17 @@ SPEC = {
             ("4-shard fairness spread",
              [("scaling", "shards", 4), "fairness_spread"],
              "lower", "ratio", 0.15),
+            # The scale-wall gate: batches/sec at 64 shards must stay a
+            # healthy multiple of the 1-shard rate now that the shard
+            # runtime multiplexes shards over a fixed worker pool.
+            # Parallel-efficiency ratios are scheduler/core-count
+            # dependent, hence "noisy" (warns against seed baselines).
+            ("64-shard scaling efficiency",
+             [("scaling", "shards", 64), "speedup_vs_1shard"],
+             "higher", "noisy", 0.30),
+            ("64-shard fairness spread",
+             [("scaling", "shards", 64), "fairness_spread"],
+             "lower", "ratio", 0.15),
             ("federated serving q/host-sec",
              ["federated_serving", "completed_per_host_sec"],
              "higher", "host", 0.0),
