@@ -78,7 +78,7 @@ fn main() {
                 // p99 the scale-wall item tracks alongside batches/sec.
                 row.set(
                     "solve_ms_p99",
-                    Json::Number(r.run.solve_ms_percentile(99.0)),
+                    Json::Number(r.run.solve_ms_percentiles(&[99.0])[0]),
                 );
                 row
             })

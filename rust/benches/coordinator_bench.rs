@@ -20,6 +20,7 @@ fn policies() -> Vec<Box<dyn Policy>> {
 }
 
 fn run_detail(r: &RunResult, mode: &str, depth: usize) -> Json {
+    let solve_ps = r.solve_ms_percentiles(&[50.0, 99.0]);
     Json::from_pairs(vec![
         ("mode", Json::String(mode.to_string())),
         ("pipeline_depth", Json::Number(depth as f64)),
@@ -28,8 +29,8 @@ fn run_detail(r: &RunResult, mode: &str, depth: usize) -> Json {
         ("queries", Json::Number(r.outcomes.len() as f64)),
         ("host_wall_secs", Json::Number(r.host_wall_secs)),
         ("batches_per_sec", Json::Number(r.batches_per_sec())),
-        ("solve_ms_p50", Json::Number(r.solve_ms_percentile(50.0))),
-        ("solve_ms_p99", Json::Number(r.solve_ms_percentile(99.0))),
+        ("solve_ms_p50", Json::Number(solve_ps[0])),
+        ("solve_ms_p99", Json::Number(solve_ps[1])),
         ("stall_fraction", Json::Number(r.stall_fraction())),
         (
             "max_queue_depth",

@@ -188,10 +188,10 @@ fn main() {
     };
     let cold = solve_ns_for(false);
     let warm = solve_ns_for(true);
-    let p50_cold = stats::percentile(&cold, 50.0);
-    let p99_cold = stats::percentile(&cold, 99.0);
-    let p50_warm = stats::percentile(&warm, 50.0);
-    let p99_warm = stats::percentile(&warm, 99.0);
+    let cold_ps = stats::percentiles_of(&cold, &[50.0, 99.0]);
+    let warm_ps = stats::percentiles_of(&warm, &[50.0, 99.0]);
+    let (p50_cold, p99_cold) = (cold_ps[0], cold_ps[1]);
+    let (p50_warm, p99_warm) = (warm_ps[0], warm_ps[1]);
     let ratio = p50_warm / p50_cold.max(1.0);
     println!(
         "\nwarm-start fastpf solves over {} batches: cold p50 {:.0} ns / p99 {:.0} ns, \

@@ -158,6 +158,19 @@ impl WarmState {
     }
 }
 
+/// Canonical reason strings attached to `warm_invalidation` trace
+/// events, so the telemetry vocabulary stays closed (one constant per
+/// caller class of [`WarmState::invalidate`]) and `summarize_trace.py`
+/// can aggregate without free-text parsing.
+pub mod reason {
+    /// Views moved owners (placement re-home).
+    pub const REHOME: &str = "rehome";
+    /// The shard's cache-budget slice changed (total/N′ re-split).
+    pub const BUDGET_RESPLIT: &str = "budget_resplit";
+    /// A membership event voided the carried state wholesale.
+    pub const MEMBERSHIP: &str = "membership";
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -60,9 +60,11 @@ use crate::cluster::placement::{Placement, PlacementStrategy};
 use crate::cluster::runtime::{resolve_workers, with_shard_pool, ShardPool, StepCtx};
 use crate::cluster::shard::{Shard, ShardBatchOutcome};
 use crate::coordinator::loop_::CoordinatorConfig;
+use crate::alloc::warm::reason;
 use crate::domain::query::Query;
 use crate::domain::tenant::TenantSet;
 use crate::sim::engine::SimEngine;
+use crate::telemetry::{EventKind, Telemetry};
 use crate::util::rng::mix64;
 use crate::workload::generator::WorkloadGenerator;
 use crate::workload::universe::Universe;
@@ -265,7 +267,26 @@ impl<'a> ShardedCoordinator<'a> {
     /// any width. Panics on an invalid membership plan — front doors
     /// validate with [`MembershipPlan::resolve`] first.
     pub fn run(&self, generator: &mut WorkloadGenerator, policy: &dyn Policy) -> ClusterResult {
+        self.run_with(generator, policy, &Telemetry::off())
+    }
+
+    /// [`ShardedCoordinator::run`] with telemetry: per-shard batch
+    /// spans (emitted by [`Shard::step`] on whichever pool worker runs
+    /// it), scheduled membership / clamp / warm-invalidation events,
+    /// and periodic counter snapshots on the simulated clock.
+    pub fn run_with(
+        &self,
+        generator: &mut WorkloadGenerator,
+        policy: &dyn Policy,
+        tel: &Telemetry,
+    ) -> ClusterResult {
         let t_run = Instant::now();
+        tel.meta(
+            "cluster-replay",
+            self.tenants.len(),
+            self.fed.n_shards,
+            self.fed.max_boost,
+        );
         // One engine clone serves every shard executor (execution
         // behavior does not depend on the budget field); budgets are
         // handed to executors explicitly and re-split on membership
@@ -280,11 +301,12 @@ impl<'a> ShardedCoordinator<'a> {
             universe: self.universe,
             policy,
             stateful_gamma: self.config.stateful_gamma,
+            tel,
         };
         // The run's worker pool: the only thread creation of the whole
         // run. Per-batch fan-out/fan-in from here on is channel sends.
         with_shard_pool(resolve_workers(self.fed.workers), ctx, |pool| {
-            self.run_on_pool(generator, policy, &exec_engine, t_run, pool)
+            self.run_on_pool(generator, policy, &exec_engine, t_run, tel, pool)
         })
     }
 
@@ -297,6 +319,7 @@ impl<'a> ShardedCoordinator<'a> {
         policy: &dyn Policy,
         exec_engine: &'e SimEngine,
         t_run: Instant,
+        tel: &Telemetry,
         pool: &mut ShardPool<'_, Shard<'e>>,
     ) -> ClusterResult {
         let n_shards = self.fed.n_shards;
@@ -384,6 +407,7 @@ impl<'a> ShardedCoordinator<'a> {
             // moves; before any demand exists, sizes are the signal.
             // Hash ignores the weights entirely.
             let mut membership_changes: Vec<MembershipChange> = Vec::new();
+            let t_event = b as f64 * self.config.batch_secs;
             while sched_i < schedule.len() && schedule[sched_i].batch == b {
                 let pack_weights: &[u64] = if cum_demand.iter().any(|&d| d > 0) {
                     &cum_demand
@@ -411,6 +435,9 @@ impl<'a> ShardedCoordinator<'a> {
                             &cached_sizes,
                             &mut rebalance_churn_bytes,
                             &mut replication_bytes,
+                            tel,
+                            t_event,
+                            b as i64,
                         );
                         shards.push(Shard::new(
                             id,
@@ -423,6 +450,15 @@ impl<'a> ShardedCoordinator<'a> {
                             b + self.fed.warmup_batches,
                             self.fed.warm_start,
                         ));
+                        tel.event(
+                            t_event,
+                            EventKind::MembershipAdd,
+                            id as i64,
+                            -1,
+                            moved as f64,
+                            "scheduled",
+                            b as i64,
+                        );
                         membership_changes.push(MembershipChange {
                             action: ev.action,
                             shard: id,
@@ -469,6 +505,22 @@ impl<'a> ShardedCoordinator<'a> {
                             &cached_sizes,
                             &mut rebalance_churn_bytes,
                             &mut replication_bytes,
+                            tel,
+                            t_event,
+                            b as i64,
+                        );
+                        let kind = match ev.action {
+                            MembershipAction::Kill => EventKind::MembershipKill,
+                            _ => EventKind::MembershipRemove,
+                        };
+                        tel.event(
+                            t_event,
+                            kind,
+                            ev.shard as i64,
+                            -1,
+                            (bytes_drained + bytes_lost) as f64,
+                            "scheduled",
+                            b as i64,
                         );
                         membership_changes.push(MembershipChange {
                             action: ev.action,
@@ -487,7 +539,17 @@ impl<'a> ShardedCoordinator<'a> {
                 live_budget = total_budget / shards.len() as u64;
                 for sh in shards.iter_mut() {
                     sh.executor.cache_mut().set_budget(live_budget);
-                    sh.invalidate_warm();
+                    if sh.invalidate_warm() {
+                        tel.event(
+                            t_event,
+                            EventKind::WarmInvalidation,
+                            sh.id as i64,
+                            -1,
+                            0.0,
+                            reason::BUDGET_RESPLIT,
+                            b as i64,
+                        );
+                    }
                 }
             }
 
@@ -573,6 +635,9 @@ impl<'a> ShardedCoordinator<'a> {
                                 &cached_sizes,
                                 &mut rebalance_churn_bytes,
                                 &mut replication_bytes,
+                                tel,
+                                t_event,
+                                b as i64,
                             );
                             rebalanced = true;
                         }
@@ -615,6 +680,19 @@ impl<'a> ShardedCoordinator<'a> {
             let use_mults = shards.len() > 1 && b > 0;
             if use_mults {
                 accountant.multipliers_into(&weights, Arc::make_mut(&mut mult_buf));
+                for (i, &m) in mult_buf.iter().enumerate() {
+                    if m >= self.fed.max_boost || m <= 1.0 / self.fed.max_boost {
+                        tel.event(
+                            t_event,
+                            EventKind::MultiplierClamp,
+                            -1,
+                            i as i64,
+                            m,
+                            "boost_bound",
+                            b as i64,
+                        );
+                    }
+                }
             }
 
             // --- 5. Solve + execute every live shard on the worker
@@ -672,6 +750,7 @@ impl<'a> ShardedCoordinator<'a> {
                 tenant_attained: agg_u,
                 tenant_attainable: agg_star,
             });
+            tel.tick(window_end);
         }
 
         let host_wall_secs = t_run.elapsed().as_secs_f64();
@@ -711,6 +790,7 @@ impl<'a> ShardedCoordinator<'a> {
 /// previewed eviction churn), credit promoted-replica bytes back
 /// against the replication ledger, and install the new map. Returns
 /// the number of views whose home moved.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn apply_placement<'a, 'e: 'a>(
     placement: &mut Placement,
     next: Placement,
@@ -718,9 +798,12 @@ pub(crate) fn apply_placement<'a, 'e: 'a>(
     cached_sizes: &[u64],
     churn: &mut u64,
     replication_bytes: &mut u64,
+    tel: &Telemetry,
+    t: f64,
+    batch: i64,
 ) -> usize {
     let moved = placement.moved_views(&next);
-    let reclaimed = rehome(shards, &next, cached_sizes, churn);
+    let reclaimed = rehome(shards, &next, cached_sizes, churn, tel, t, batch);
     *replication_bytes = replication_bytes.saturating_sub(reclaimed);
     *placement = next;
     moved
@@ -739,6 +822,9 @@ pub(crate) fn rehome<'a, 'e: 'a>(
     next: &Placement,
     cached_sizes: &[u64],
     churn: &mut u64,
+    tel: &Telemetry,
+    t: f64,
+    batch: i64,
 ) -> u64 {
     let mut reclaimed = 0u64;
     for sh in shards {
@@ -760,7 +846,17 @@ pub(crate) fn rehome<'a, 'e: 'a>(
         sh.home = new_home;
         // A re-home changes what the router feeds this shard next batch;
         // carried solver state is stale by definition.
-        sh.invalidate_warm();
+        if sh.invalidate_warm() {
+            tel.event(
+                t,
+                EventKind::WarmInvalidation,
+                sh.id as i64,
+                -1,
+                0.0,
+                reason::REHOME,
+                batch,
+            );
+        }
     }
     reclaimed
 }
@@ -940,7 +1036,9 @@ mod tests {
         home[v] = 1;
         let next = Placement::from_home_map(vec![0, 1], home);
         let mut churn = 0u64;
-        let reclaimed = rehome(shards.iter_mut(), &next, &cached_sizes, &mut churn);
+        let tel = Telemetry::off();
+        let reclaimed =
+            rehome(shards.iter_mut(), &next, &cached_sizes, &mut churn, &tel, 0.0, -1);
         assert_eq!(reclaimed, cached_sizes[v], "promotion must credit the charge");
         assert!(!shards[1].replicas.get(v), "promoted replica bit cleared");
         assert!(shards[1].home.get(v), "view is now home on its holder");

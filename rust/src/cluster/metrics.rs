@@ -16,7 +16,7 @@
 
 use crate::cache::CacheDelta;
 use crate::cluster::membership::MembershipAction;
-use crate::coordinator::loop_::{BatchRecord, RunResult};
+use crate::coordinator::loop_::{BatchRecord, ExecSummary, RunResult};
 use crate::coordinator::metrics::per_tenant_speedups;
 use crate::util::json::Json;
 
@@ -298,13 +298,15 @@ impl ClusterResult {
             .enumerate()
             .map(|(s, r)| {
                 let (bytes_loaded, bytes_evicted) = r.cache_bytes_moved();
+                // One sort (or one histogram walk) for both quantiles.
+                let ps = r.solve_ms_percentiles(&[50.0, 99.0]);
                 ShardSummary {
                     shard: s,
-                    queries: r.outcomes.len(),
-                    batches: r.batches.len(),
+                    queries: r.completed() as usize,
+                    batches: r.n_batches(),
                     throughput_per_min: r.throughput_per_min(),
-                    solve_ms_p50: r.solve_ms_percentile(50.0),
-                    solve_ms_p99: r.solve_ms_percentile(99.0),
+                    solve_ms_p50: ps[0],
+                    solve_ms_p99: ps[1],
                     avg_cache_utilization: r.avg_cache_utilization(),
                     bytes_loaded,
                     bytes_evicted,
@@ -320,8 +322,8 @@ impl ClusterResult {
         out.push_str(&format!(
             "federation: {} shard histories ({live} live at end), {} batches, {} queries, {:.2} batches/s\n",
             self.n_shards(),
-            self.run.batches.len(),
-            self.run.outcomes.len(),
+            self.run.n_batches(),
+            self.run.completed(),
             self.batches_per_sec()
         ));
         out.push_str(&format!(
@@ -412,8 +414,8 @@ impl ClusterResult {
                 "live_shards_final",
                 Json::Number(self.live_shards_final() as f64),
             ),
-            ("batches", Json::Number(self.run.batches.len() as f64)),
-            ("queries", Json::Number(self.run.outcomes.len() as f64)),
+            ("batches", Json::Number(self.run.n_batches() as f64)),
+            ("queries", Json::Number(self.run.completed() as f64)),
             ("batches_per_sec", Json::Number(self.batches_per_sec())),
             ("host_wall_secs", Json::Number(self.run.host_wall_secs)),
             ("hit_ratio", Json::Number(self.run.hit_ratio())),
@@ -483,20 +485,35 @@ pub fn speedup_spread(run: &RunResult, baseline: &RunResult) -> f64 {
 /// max across shards (the shards solve concurrently, so the slowest
 /// shard is the batch's critical path). Shards born or retired mid-run
 /// contribute only to the batches they were alive for.
+///
+/// Streaming shard runs (the real-clock federated service retains no
+/// raw records — memory stays flat over an open-ended run) merge by
+/// absorbing their [`ExecSummary`] aggregates instead; the merged run
+/// then answers every report accessor from its own summary. The
+/// absorbed summary rides along in the raw case too, with `batches`
+/// pinned to the *global* batch count (per-shard counts overlap).
 fn merge_runs(
     per_shard: &[RunResult],
     budgets: &[Vec<u64>],
     n_batches: usize,
     host_wall_secs: f64,
 ) -> RunResult {
+    let mut summary = ExecSummary::default();
+    for r in per_shard {
+        summary.absorb(&r.summary);
+    }
+    summary.batches = n_batches as u64;
+
     let mut outcomes: Vec<_> = per_shard
         .iter()
         .flat_map(|r| r.outcomes.iter().cloned())
         .collect();
     outcomes.sort_by_key(|o| o.id);
+    let streaming = outcomes.is_empty() && per_shard.iter().all(|r| r.batches.is_empty());
+    let merge_batches = if streaming { 0 } else { n_batches };
 
-    let mut batches = Vec::with_capacity(n_batches);
-    for b in 0..n_batches {
+    let mut batches = Vec::with_capacity(merge_batches);
+    for b in 0..merge_batches {
         // Rows from the shards alive at batch b: each shard's records
         // are a contiguous index range starting at its birth batch.
         let mut rows: Vec<(&BatchRecord, u64)> = Vec::with_capacity(per_shard.len());
@@ -590,6 +607,7 @@ fn merge_runs(
         n_tenants: per_shard[0].n_tenants,
         weights: per_shard[0].weights.clone(),
         host_wall_secs,
+        summary,
     }
 }
 
@@ -642,6 +660,7 @@ mod tests {
             n_tenants: 2,
             weights: vec![1.0, 1.0],
             host_wall_secs: 0.02,
+            summary: ExecSummary::default(),
         }
     }
 
@@ -695,6 +714,7 @@ mod tests {
             n_tenants: 2,
             weights: vec![1.0, 1.0],
             host_wall_secs: 0.02,
+            summary: ExecSummary::default(),
         };
         let merged = merge_runs(&[a, b], &[vec![20, 10], vec![10]], 2, 0.05);
         assert_eq!(merged.batches.len(), 2);
@@ -706,6 +726,40 @@ mod tests {
         assert!((merged.batches[1].cache_utilization - 0.6).abs() < 1e-12);
         assert!(merged.batches[1].config.get(0) && merged.batches[1].config.get(1));
         assert_eq!(merged.end_time, 90.0);
+    }
+
+    /// Streaming shard runs (the real-clock federated service) carry
+    /// no raw records; the merge must answer every report accessor
+    /// from the absorbed summaries with `batches` pinned to the global
+    /// count, not the per-shard sum.
+    #[test]
+    fn merge_streams_summaries_without_raw_records() {
+        let streamed = |completed: u64, util: f64| {
+            let mut r = shard_run(vec![], &[true], 0.0);
+            r.batches.clear();
+            r.summary.batches = 3;
+            r.summary.util_batches = 3;
+            r.summary.completed = completed;
+            r.summary.util_sum = util * 3.0;
+            r.summary.per_tenant_completed = vec![completed, 0];
+            r.summary.bytes_loaded = 100;
+            r.summary.solve_ms.record(2.0);
+            r
+        };
+        let merged = merge_runs(
+            &[streamed(10, 0.5), streamed(30, 0.7)],
+            &[vec![10, 10, 10], vec![10, 10, 10]],
+            3,
+            0.05,
+        );
+        assert!(merged.batches.is_empty() && merged.outcomes.is_empty());
+        assert_eq!(merged.completed(), 40);
+        assert_eq!(merged.n_batches(), 3, "global batches, not 3 + 3");
+        assert_eq!(merged.per_tenant_completed(), vec![40, 0]);
+        // util_sum / util_batches: (0.5·3 + 0.7·3) / 6 = 0.6.
+        assert!((merged.avg_cache_utilization() - 0.6).abs() < 1e-12);
+        assert_eq!(merged.cache_bytes_moved(), (200, 0));
+        assert!(merged.solve_ms_percentiles(&[50.0])[0] > 0.0);
     }
 
     #[test]

@@ -59,5 +59,6 @@ pub use metrics::{
 };
 pub use placement::{Placement, PlacementStrategy};
 pub use serving::{
-    serve_federated, serve_federated_sim, FederatedServeReport, ServeFederationConfig,
+    serve_federated, serve_federated_sim, serve_federated_sim_with, serve_federated_with,
+    FederatedServeReport, ServeFederationConfig,
 };

@@ -31,17 +31,22 @@ use crate::alloc::Policy;
 use crate::cluster::shard::{Shard, ShardBatchOutcome};
 use crate::coordinator::loop_::SolveContext;
 use crate::domain::tenant::TenantSet;
+use crate::telemetry::Telemetry;
 use crate::workload::universe::Universe;
 
 /// The per-run solve inputs every worker shares. Everything a
 /// [`SolveContext`] needs except the per-batch budget and multipliers,
-/// which travel inside each [`StepJob`].
+/// which travel inside each [`StepJob`]. The telemetry handle rides
+/// here (not per-job) because it is a pure observer: workers record
+/// into lock-free registers and emit spans over a channel, never
+/// touching control flow.
 #[derive(Clone, Copy)]
 pub(crate) struct StepCtx<'a> {
     pub tenants: &'a TenantSet,
     pub universe: &'a Universe,
     pub policy: &'a dyn Policy,
     pub stateful_gamma: Option<f64>,
+    pub tel: &'a Telemetry,
 }
 
 /// Anything the pool can step: the replay federation steps [`Shard`]s
@@ -129,12 +134,14 @@ impl<'a, S> ShardPool<'a, S> {
                     stateful_gamma: self.ctx.stateful_gamma,
                     weight_mult: mults.map(|m| m.as_slice()),
                 };
-                for it in items.iter_mut() {
+                for (slot, it) in items.iter_mut().enumerate() {
                     outcomes.push(it.shard_mut().step(
                         &solve_ctx,
                         self.ctx.policy,
                         batch,
                         window_end,
+                        slot,
+                        self.ctx.tel,
                     ));
                 }
             }
@@ -264,7 +271,7 @@ fn worker_loop<'a, 'e, S: PoolItem<'e>>(
                 weight_mult: mults.as_ref().map(|m| m.as_slice()),
             };
             item.shard_mut()
-                .step(&solve_ctx, ctx.policy, batch, window_end)
+                .step(&solve_ctx, ctx.policy, batch, window_end, slot, ctx.tel)
         }));
         // Release our multiplier refcount before replying so the
         // coordinator's handle is unique by the time fan-in completes.
@@ -306,7 +313,8 @@ mod tests {
         std::thread::scope(|scope| {
             let handles: Vec<_> = shards
                 .iter_mut()
-                .map(|sh| {
+                .enumerate()
+                .map(|(slot, sh)| {
                     let solve_ctx = SolveContext {
                         tenants: ctx.tenants,
                         universe: ctx.universe,
@@ -314,7 +322,9 @@ mod tests {
                         stateful_gamma: ctx.stateful_gamma,
                         weight_mult: mults,
                     };
-                    scope.spawn(move || sh.step(&solve_ctx, ctx.policy, batch, window_end))
+                    scope.spawn(move || {
+                        sh.step(&solve_ctx, ctx.policy, batch, window_end, slot, ctx.tel)
+                    })
                 })
                 .collect();
             handles
@@ -374,11 +384,13 @@ mod tests {
             (0..3).map(|i| TenantSpec::new(AccessSpec::g(1 + i % 4), 30.0)).collect();
         let budget = engine.config.cache_budget / 2;
         let n_shards = 6; // more shards than workers: real multiplexing
+        let tel = Telemetry::off();
         let ctx = StepCtx {
             tenants: &tenants,
             universe: &universe,
             policy: policy.as_ref(),
             stateful_gamma: Some(2.0),
+            tel: &tel,
         };
 
         let mut a = build_shards(&engine, &universe, &tenants, n_shards, budget);
@@ -436,11 +448,13 @@ mod tests {
         let specs: Vec<TenantSpec> =
             (0..2).map(|_| TenantSpec::new(AccessSpec::g(2), 25.0)).collect();
         let budget = engine.config.cache_budget / 3;
+        let tel = Telemetry::off();
         let ctx = StepCtx {
             tenants: &tenants,
             universe: &universe,
             policy: policy.as_ref(),
             stateful_gamma: None,
+            tel: &tel,
         };
         let run = |workers: usize| {
             let mut shards = build_shards(&engine, &universe, &tenants, 3, budget);
@@ -481,11 +495,13 @@ mod tests {
         let universe = Universe::sales_only();
         let tenants = TenantSet::equal(1);
         let policy = PolicyKind::Static.build();
+        let tel = Telemetry::off();
         let ctx = StepCtx {
             tenants: &tenants,
             universe: &universe,
             policy: policy.as_ref(),
             stateful_gamma: None,
+            tel: &tel,
         };
         let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             with_shard_pool::<Bomb, _>(2, ctx, |pool| {

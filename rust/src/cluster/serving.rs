@@ -71,6 +71,7 @@ use crate::coordinator::service::{
 use crate::domain::query::Query;
 use crate::domain::tenant::TenantSet;
 use crate::sim::engine::SimEngine;
+use crate::telemetry::{EventKind, Telemetry};
 use crate::util::event::{Clock, RealTimeClock, SimClock};
 use crate::util::ordf64::OrdF64;
 use crate::workload::generator::TenantGenerator;
@@ -188,8 +189,8 @@ impl FederatedServeReport {
             out.push_str(&format!(
                 "shard {:<3} served {:>6} queries over {:>4} batches\n",
                 i,
-                r.outcomes.len(),
-                r.batches.len()
+                r.completed(),
+                r.n_batches()
             ));
         }
         out
@@ -354,8 +355,27 @@ impl ServeRouter {
 /// Publish the loop's authoritative placement/shard state as a fresh
 /// router epoch (one pointer swap; producers mid-route finish against
 /// the epoch they already loaded — same semantics as losing the old
-/// lock race by a hair).
-fn sync_router(router: &ServeRouter, placement: &Placement, live: &[LiveShard<'_>]) {
+/// lock race by a hair). Every publication is a trace event: `reason`
+/// says what reconfiguration forced it, `value` carries the live shard
+/// count the new epoch routes over.
+fn sync_router(
+    router: &ServeRouter,
+    placement: &Placement,
+    live: &[LiveShard<'_>],
+    tel: &Telemetry,
+    t: f64,
+    batch: i64,
+    reason: &'static str,
+) {
+    tel.event(
+        t,
+        EventKind::RouterEpoch,
+        -1,
+        -1,
+        live.len() as f64,
+        reason,
+        batch,
+    );
     router.publish(RouterEpoch {
         ids: live.iter().map(|ls| ls.shard.id).collect(),
         home_masks: live
@@ -376,6 +396,14 @@ struct ServingInputs<'a, 'e> {
     policy: &'a dyn Policy,
     fcfg: &'a ServeFederationConfig,
     total_budget: u64,
+    /// Pure-observer telemetry handle, shared with pool workers and
+    /// admission queues (via probes).
+    tel: &'a Telemetry,
+    /// Keep per-query outcome/batch records on every shard executor.
+    /// The real-clock driver turns this off (open-ended runs stream
+    /// into `ExecSummary` so memory stays flat); the sim driver keeps
+    /// raw records — the equivalence tests compare them exactly.
+    retain_raw: bool,
 }
 
 /// What the loop hands back to the drivers for report assembly.
@@ -400,8 +428,8 @@ fn build_initial<'e>(
     let placement = Placement::build(fcfg.placement, fcfg.n_shards, cached_sizes);
     let live_budget = inp.total_budget / fcfg.n_shards as u64;
     let live: Vec<LiveShard<'e>> = (0..fcfg.n_shards)
-        .map(|s| LiveShard {
-            shard: Shard::new(
+        .map(|s| {
+            let mut shard = Shard::new(
                 s,
                 inp.exec_engine,
                 inp.universe,
@@ -411,10 +439,17 @@ fn build_initial<'e>(
                 live_budget,
                 0,
                 fcfg.serve.warm_start,
-            ),
-            queue: Arc::new(AdmissionQueue::new(shard_queue_capacity(&fcfg.serve))),
-            load: VecDeque::new(),
-            idle_streak: 0,
+            );
+            shard.executor.set_retain_raw(inp.retain_raw);
+            LiveShard {
+                shard,
+                queue: Arc::new(AdmissionQueue::with_probe(
+                    shard_queue_capacity(&fcfg.serve),
+                    inp.tel.queue_probe(s as i64),
+                )),
+                load: VecDeque::new(),
+                idle_streak: 0,
+            }
         })
         .collect();
     (placement, live)
@@ -442,6 +477,7 @@ fn run_loop<'e, C: Clock>(
         universe: inp.universe,
         policy: inp.policy,
         stateful_gamma: inp.fcfg.serve.stateful_gamma,
+        tel: inp.tel,
     };
     with_shard_pool(resolve_workers(inp.fcfg.workers), ctx, |pool| {
         run_loop_on_pool(
@@ -466,6 +502,7 @@ fn run_loop_on_pool<'e, C: Clock>(
 ) -> LoopOut<'e> {
     let fcfg = inp.fcfg;
     let cfg = &fcfg.serve;
+    let tel = inp.tel;
     let n_views = inp.universe.views.len();
     let n_tenants = inp.tenants.len();
     let weights = inp.tenants.weights();
@@ -546,21 +583,29 @@ fn run_loop_on_pool<'e, C: Clock>(
                         cached_sizes,
                         &mut churn,
                         &mut replication_bytes,
+                        tel,
+                        now,
+                        b as i64,
                     );
-                    let queue = Arc::new(AdmissionQueue::new(shard_queue_capacity(cfg)));
+                    let queue = Arc::new(AdmissionQueue::with_probe(
+                        shard_queue_capacity(cfg),
+                        tel.queue_probe(id as i64),
+                    ));
                     all_queues.push(queue.clone());
+                    let mut joiner = Shard::new(
+                        id,
+                        inp.exec_engine,
+                        inp.universe,
+                        inp.tenants,
+                        placement.shard_mask(id),
+                        cfg.seed,
+                        live_budget,
+                        b + fcfg.warmup_batches,
+                        cfg.warm_start,
+                    );
+                    joiner.executor.set_retain_raw(inp.retain_raw);
                     live.push(LiveShard {
-                        shard: Shard::new(
-                            id,
-                            inp.exec_engine,
-                            inp.universe,
-                            inp.tenants,
-                            placement.shard_mask(id),
-                            cfg.seed,
-                            live_budget,
-                            b + fcfg.warmup_batches,
-                            cfg.warm_start,
-                        ),
+                        shard: joiner,
                         queue,
                         load: VecDeque::new(),
                         idle_streak: 0,
@@ -570,6 +615,15 @@ fn run_loop_on_pool<'e, C: Clock>(
                         ls.shard.executor.cache_mut().set_budget(live_budget);
                         ls.idle_streak = 0;
                     }
+                    tel.event(
+                        now,
+                        EventKind::MembershipAdd,
+                        id as i64,
+                        -1,
+                        moved as f64,
+                        "reactive_overload",
+                        b as i64,
+                    );
                     membership_changes.push(MembershipChange {
                         action: MembershipAction::Add,
                         shard: id,
@@ -579,7 +633,15 @@ fn run_loop_on_pool<'e, C: Clock>(
                     });
                     overload_streak = 0;
                     last_event = Some(b);
-                    sync_router(router, &placement, &live);
+                    sync_router(
+                        router,
+                        &placement,
+                        &live,
+                        tel,
+                        now,
+                        b as i64,
+                        "membership_add",
+                    );
                 } else if live.len() > 1 {
                     // Reactive DRAIN: the idlest shard whose load
                     // stayed below lo for a full window retires.
@@ -621,6 +683,9 @@ fn run_loop_on_pool<'e, C: Clock>(
                             cached_sizes,
                             &mut churn,
                             &mut replication_bytes,
+                            tel,
+                            now,
+                            b as i64,
                         );
                         live_budget = inp.total_budget / live.len() as u64;
                         for ls in live.iter_mut() {
@@ -634,13 +699,30 @@ fn run_loop_on_pool<'e, C: Clock>(
                         // arrival to its new home. `requeue` neither
                         // re-counts nor sheds — admitted work is
                         // conserved across the drain.
-                        sync_router(router, &placement, &live);
+                        sync_router(
+                            router,
+                            &placement,
+                            &live,
+                            tel,
+                            now,
+                            b as i64,
+                            "membership_drain",
+                        );
                         leaving.queue.close();
                         for q in leaving.queue.drain() {
                             let idx = router.route_index(&q);
                             live[idx].queue.requeue(q);
                         }
                         dead.push(leaving.shard);
+                        tel.event(
+                            now,
+                            EventKind::MembershipRemove,
+                            leaving_id as i64,
+                            -1,
+                            drained as f64,
+                            "reactive_idle",
+                            b as i64,
+                        );
                         membership_changes.push(MembershipChange {
                             action: MembershipAction::Remove,
                             shard: leaving_id,
@@ -663,10 +745,16 @@ fn run_loop_on_pool<'e, C: Clock>(
         for ls in live.iter_mut() {
             // Cut into the shard's recycled inbox (emptied, capacity
             // intact, by the executor's buffer reclaim last step).
+            let t_cut = Instant::now();
             ls.queue.drain_into(&mut ls.shard.inbox);
             ls.shard.inbox.sort_by_key(|q| OrdF64(q.arrival));
+            // Host cost of this shard's cut, consumed into the span the
+            // shard emits when it steps this batch.
+            ls.shard.last_drain_secs = t_cut.elapsed().as_secs_f64();
             for q in &ls.shard.inbox {
-                stats.admit_wait_sum += (now - q.arrival).max(0.0);
+                let wait = (now - q.arrival).max(0.0);
+                stats.admit_wait_sum += wait;
+                tel.admit_wait(wait * 1e3);
                 for v in &q.required_views {
                     batch_demand[v.0] += scan_sizes[v.0];
                 }
@@ -735,7 +823,15 @@ fn run_loop_on_pool<'e, C: Clock>(
                         }
                     }
                     if !replicated_views.is_empty() {
-                        sync_router(router, &placement, &live);
+                        sync_router(
+                            router,
+                            &placement,
+                            &live,
+                            tel,
+                            now,
+                            b as i64,
+                            "replicate_hot",
+                        );
                     }
                 }
             }
@@ -780,7 +876,15 @@ fn run_loop_on_pool<'e, C: Clock>(
                     decayed_views.push(v);
                 }
                 if !decayed_views.is_empty() {
-                    sync_router(router, &placement, &live);
+                    sync_router(
+                        router,
+                        &placement,
+                        &live,
+                        tel,
+                        now,
+                        b as i64,
+                        "replica_decay",
+                    );
                 }
             }
         }
@@ -803,9 +907,20 @@ fn run_loop_on_pool<'e, C: Clock>(
                             cached_sizes,
                             &mut churn,
                             &mut replication_bytes,
+                            tel,
+                            now,
+                            b as i64,
                         );
                         rebalanced = true;
-                        sync_router(router, &placement, &live);
+                        sync_router(
+                            router,
+                            &placement,
+                            &live,
+                            tel,
+                            now,
+                            b as i64,
+                            "rebalance",
+                        );
                     }
                 }
             }
@@ -817,6 +932,23 @@ fn run_loop_on_pool<'e, C: Clock>(
         let use_mults = live.len() > 1 && b > 0;
         if use_mults {
             accountant.multipliers_into(&weights, Arc::make_mut(&mut mult_buf));
+            // A multiplier sitting on either clamp bound means the
+            // accountant wanted to push harder — worth a trace event
+            // per clamped tenant (observation only; the clamp itself
+            // happened inside the accountant).
+            for (i, &m) in mult_buf.iter().enumerate() {
+                if m >= fcfg.max_boost || m <= 1.0 / fcfg.max_boost {
+                    tel.event(
+                        now,
+                        EventKind::MultiplierClamp,
+                        -1,
+                        i as i64,
+                        m,
+                        "boost_bound",
+                        b as i64,
+                    );
+                }
+            }
         }
         pool.step_batch(
             &mut live,
@@ -867,6 +999,14 @@ fn run_loop_on_pool<'e, C: Clock>(
             tenant_attained: agg_u,
             tenant_attainable: agg_star,
         });
+
+        // Registry gauges + periodic trace snapshot: pure observation,
+        // after the batch's accounting is folded.
+        tel.metrics().live_shards.set(live.len() as u64);
+        tel.metrics()
+            .queue_depth
+            .set(live.iter().map(|ls| ls.queue.len() as u64).sum());
+        tel.tick(now);
 
         // Live metrics line, once per second — real-time driver only.
         if cfg.verbose && clock.is_real_time() && now as u64 > last_report {
@@ -985,8 +1125,26 @@ pub fn serve_federated(
     policy: &dyn Policy,
     fcfg: &ServeFederationConfig,
 ) -> FederatedServeReport {
+    serve_federated_with(universe, tenants, engine, policy, fcfg, &Telemetry::off())
+}
+
+/// [`serve_federated`] with telemetry. The open-ended real-clock run
+/// streams per-shard execution into [`ExecSummary`] aggregates
+/// (`retain_raw = false`): a soak's memory stays flat no matter how
+/// long it runs, and every report field reads from the summaries.
+///
+/// [`ExecSummary`]: crate::coordinator::loop_::ExecSummary
+pub fn serve_federated_with(
+    universe: &Universe,
+    tenants: &TenantSet,
+    engine: &SimEngine,
+    policy: &dyn Policy,
+    fcfg: &ServeFederationConfig,
+    tel: &Telemetry,
+) -> FederatedServeReport {
     validate(fcfg, tenants);
     let cfg = &fcfg.serve;
+    tel.meta("serve-federated", cfg.n_tenants, fcfg.n_shards, fcfg.max_boost);
     let total_budget = engine.config.cache_budget;
     let cached_sizes: Vec<u64> = universe.views.iter().map(|v| v.cached_bytes).collect();
     let scan_sizes: Vec<u64> = universe.views.iter().map(|v| v.scan_bytes).collect();
@@ -1002,10 +1160,12 @@ pub fn serve_federated(
         policy,
         fcfg,
         total_budget,
+        tel,
+        retain_raw: false,
     };
     let (placement, live) = build_initial(&inputs, &cached_sizes);
     let router = ServeRouter::new(cfg.n_tenants, cached_sizes.clone());
-    sync_router(&router, &placement, &live);
+    sync_router(&router, &placement, &live, tel, 0.0, -1, "initial");
 
     let clock = RealTimeClock::new();
     let t_start = Instant::now();
@@ -1068,12 +1228,33 @@ pub fn serve_federated_sim(
     policy: &dyn Policy,
     fcfg: &ServeFederationConfig,
 ) -> FederatedServeReport {
+    serve_federated_sim_with(universe, tenants, engine, policy, fcfg, &Telemetry::off())
+}
+
+/// [`serve_federated_sim`] with telemetry. Unlike the real-clock
+/// driver this keeps raw per-query records (`retain_raw = true`): the
+/// equivalence and conservation tests compare them exactly, and a sim
+/// run's length is bounded by its config.
+pub fn serve_federated_sim_with(
+    universe: &Universe,
+    tenants: &TenantSet,
+    engine: &SimEngine,
+    policy: &dyn Policy,
+    fcfg: &ServeFederationConfig,
+    tel: &Telemetry,
+) -> FederatedServeReport {
     validate(fcfg, tenants);
     let cfg = &fcfg.serve;
     assert_eq!(
         cfg.admission,
         AdmissionPolicy::Drop,
         "the sim driver is single-threaded: block admission would deadlock"
+    );
+    tel.meta(
+        "serve-federated-sim",
+        cfg.n_tenants,
+        fcfg.n_shards,
+        fcfg.max_boost,
     );
     let total_budget = engine.config.cache_budget;
     let cached_sizes: Vec<u64> = universe.views.iter().map(|v| v.cached_bytes).collect();
@@ -1088,10 +1269,12 @@ pub fn serve_federated_sim(
         policy,
         fcfg,
         total_budget,
+        tel,
+        retain_raw: true,
     };
     let (placement, live) = build_initial(&inputs, &cached_sizes);
     let router = ServeRouter::new(cfg.n_tenants, cached_sizes.clone());
-    sync_router(&router, &placement, &live);
+    sync_router(&router, &placement, &live, tel, 0.0, -1, "initial");
 
     // Inline producers: same generators, seeds, and disjoint id ranges
     // as the real-time driver's threads.

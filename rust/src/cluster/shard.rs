@@ -27,6 +27,7 @@ use crate::domain::query::Query;
 use crate::domain::tenant::TenantSet;
 use crate::domain::view::ViewId;
 use crate::sim::engine::SimEngine;
+use crate::telemetry::{SpanRecord, Telemetry};
 use crate::util::rng::Pcg64;
 use crate::workload::universe::Universe;
 
@@ -77,6 +78,11 @@ pub(crate) struct Shard<'a> {
     /// federation invalidates it on membership changes, re-homes, and
     /// budget re-splits.
     pub warm: Option<WarmState>,
+    /// Host seconds the driver spent routing/draining this shard's
+    /// inbox for the upcoming batch — set by the serving loop before
+    /// [`Shard::step`], consumed into that step's telemetry span (the
+    /// replay federation routes in bulk and leaves it 0).
+    pub last_drain_secs: f64,
 }
 
 /// The serial coordinator planner's RNG stream selector (see
@@ -108,16 +114,21 @@ impl<'a> Shard<'a> {
             warmup_until,
             budgets: Vec::new(),
             warm: warm_start.then(WarmState::new),
+            last_drain_secs: 0.0,
         }
     }
 
     /// Drop carried solver state; the next solve runs fully cold.
     /// Called by the federation on membership changes, view re-homes,
-    /// and budget re-splits. No-op when warm starts are off.
-    pub fn invalidate_warm(&mut self) {
+    /// and budget re-splits. Returns whether warm starts are on (i.e.
+    /// there was carried state to drop) so callers can emit a
+    /// warm-invalidation trace event exactly when one happened.
+    pub fn invalidate_warm(&mut self) -> bool {
         if let Some(w) = self.warm.as_mut() {
             w.invalidate();
+            return true;
         }
+        false
     }
 
     /// Does this shard serve `view` (home or replica)?
@@ -133,15 +144,22 @@ impl<'a> Shard<'a> {
     /// Solve and execute one batch window over the routed inbox.
     /// Mirrors the serial loop exactly: empty inboxes keep the current
     /// configuration, the stateful boost comes from the mirror, and the
-    /// executor stalls for the whole (shard-local) solve.
+    /// executor stalls for the whole (shard-local) solve. `slot` is the
+    /// shard's position in the live roster this batch (span labelling
+    /// only); `tel` is the pure-observer telemetry handle, safe to
+    /// share across worker threads.
     pub fn step(
         &mut self,
         ctx: &SolveContext<'_>,
         policy: &dyn Policy,
         index: usize,
         window_end: f64,
+        slot: usize,
+        tel: &Telemetry,
     ) -> ShardBatchOutcome {
         let queries = std::mem::take(&mut self.inbox);
+        let n_queries = queries.len();
+        let drain_secs = std::mem::take(&mut self.last_drain_secs);
         let t0 = Instant::now();
         let solved = ctx.solve_accounted_warm(
             &self.mirror,
@@ -183,10 +201,30 @@ impl<'a> Shard<'a> {
                 queries,
                 config,
                 solve_secs,
+                drain_secs,
+                boost_secs: solved.boost_secs,
+                alloc_secs: solved.alloc_secs,
+                sample_secs: solved.sample_secs,
+                solve_kind: solved.kind,
             },
             0,
             solve_secs,
         );
+        let (transition_secs, execute_secs) = self.executor.last_phase_secs();
+        tel.span(&SpanRecord {
+            t: window_end,
+            batch: index,
+            shard: self.id as i64,
+            slot: slot as i64,
+            n_queries,
+            drain_ms: drain_secs * 1e3,
+            boost_ms: solved.boost_secs * 1e3,
+            solve_ms: solved.alloc_secs * 1e3,
+            sample_ms: solved.sample_secs * 1e3,
+            transition_ms: transition_secs * 1e3,
+            execute_ms: execute_secs * 1e3,
+            solve_kind: solved.kind,
+        });
         ShardBatchOutcome {
             utilities: solved.utilities,
             u_star: solved.u_star,

@@ -29,6 +29,7 @@ use crate::domain::query::{Query, QueryId};
 use crate::domain::tenant::TenantSet;
 use crate::domain::utility::BatchUtilities;
 use crate::sim::engine::{QueryOutcome, SimEngine};
+use crate::telemetry::{LocalHistogram, SpanRecord, Telemetry};
 use crate::util::event::{Clock, SimClock};
 use crate::util::rng::Pcg64;
 use crate::util::stats;
@@ -59,6 +60,20 @@ pub(crate) struct SolveOutcome {
     /// Per-tenant solo optimum U* of this batch problem (zeros for an
     /// empty batch — no demand means nothing attainable).
     pub u_star: Vec<f64>,
+    /// Host seconds building the batch problem (stateful boost +
+    /// utility matrix + weight multipliers) — the span's `boost` phase.
+    pub boost_secs: f64,
+    /// Host seconds in `policy.allocate[_warm]` proper — the span's
+    /// `solve` phase.
+    pub alloc_secs: f64,
+    /// Host seconds sampling the configuration and scoring utilities —
+    /// the span's `sample` phase.
+    pub sample_secs: f64,
+    /// `"cold"`, `"warm"` (carried state was reusable at entry), or
+    /// `"none"` for an empty batch that solved nothing. Observational
+    /// only: the warm/cold split is judged from the state's shape
+    /// before the solve, not from the policy's internal reuse verdict.
+    pub kind: &'static str,
 }
 
 impl SolveContext<'_> {
@@ -125,8 +140,20 @@ impl SolveContext<'_> {
                 config: cached.clone(),
                 utilities: vec![0.0; n],
                 u_star: vec![0.0; n],
+                boost_secs: 0.0,
+                alloc_secs: 0.0,
+                sample_secs: 0.0,
+                kind: "none",
             };
         }
+        // Phase timings are host-time observations only: `Instant` reads
+        // never feed back into any simulated quantity, preserving the
+        // determinism contract.
+        let kind = match &warm {
+            Some(w) if !w.is_cold() => "warm",
+            _ => "cold",
+        };
+        let t0 = Instant::now();
         let boost = self
             .stateful_gamma
             .map(|g| CacheManager::boost_vector(cached, g));
@@ -142,17 +169,26 @@ impl SolveContext<'_> {
         if let Some(mult) = self.weight_mult {
             crate::alloc::apply_weight_multipliers(&mut batch_problem, mult);
         }
+        let boost_secs = t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
         let allocation = match warm {
             Some(w) => policy.allocate_warm(&batch_problem, rng, w),
             None => policy.allocate(&batch_problem, rng),
         };
+        let alloc_secs = t1.elapsed().as_secs_f64();
+        let t2 = Instant::now();
         let config = allocation.sample(rng).clone();
         let utilities = batch_problem.utilities(&config);
         let u_star = batch_problem.u_star.clone();
+        let sample_secs = t2.elapsed().as_secs_f64();
         SolveOutcome {
             config,
             utilities,
             u_star,
+            boost_secs,
+            alloc_secs,
+            sample_secs,
+            kind,
         }
     }
 }
@@ -215,11 +251,73 @@ pub struct BatchRecord {
     pub delta: CacheDelta,
 }
 
+/// Streaming aggregates a [`BatchExecutor`] maintains for every batch,
+/// raw retention or not. This is what lets a long real-clock `serve`
+/// run drop per-batch/per-query records (`retain_raw = false`) while
+/// the end-of-run report keeps its meaning: counts, sums, extrema, and
+/// a mergeable log-scale histogram of solve latency stand in for the
+/// raw vectors. Memory is O(tenants + histogram buckets), flat over
+/// any soak length.
+#[derive(Debug, Clone, Default)]
+pub struct ExecSummary {
+    /// Batches executed. After a federation merge this is the *global*
+    /// batch count, not the per-shard sum — see `util_batches`.
+    pub batches: u64,
+    /// Shard-batches contributing to `util_sum` (equals `batches` on a
+    /// single node; the per-shard sum after a merge).
+    pub util_batches: u64,
+    pub completed: u64,
+    /// Queries served entirely off cached views.
+    pub hits: u64,
+    pub util_sum: f64,
+    pub stall_secs_sum: f64,
+    /// Largest single batch (queries).
+    pub max_batch: usize,
+    pub per_tenant_completed: Vec<u64>,
+    pub bytes_loaded: u64,
+    pub bytes_evicted: u64,
+    /// Per-batch solve latency (total solve, milliseconds).
+    pub solve_ms: LocalHistogram,
+}
+
+impl ExecSummary {
+    /// Fold `other` into `self` (federation result merge). `batches`
+    /// deliberately does NOT accumulate — the merged global batch count
+    /// is set by the caller; `util_batches` and everything else sums.
+    pub fn absorb(&mut self, other: &ExecSummary) {
+        self.util_batches += other.util_batches;
+        self.completed += other.completed;
+        self.hits += other.hits;
+        self.util_sum += other.util_sum;
+        self.stall_secs_sum += other.stall_secs_sum;
+        self.max_batch = self.max_batch.max(other.max_batch);
+        if self.per_tenant_completed.len() < other.per_tenant_completed.len() {
+            self.per_tenant_completed
+                .resize(other.per_tenant_completed.len(), 0);
+        }
+        for (a, b) in self
+            .per_tenant_completed
+            .iter_mut()
+            .zip(&other.per_tenant_completed)
+        {
+            *a += b;
+        }
+        self.bytes_loaded += other.bytes_loaded;
+        self.bytes_evicted += other.bytes_evicted;
+        self.solve_ms.merge(&other.solve_ms);
+    }
+}
+
 /// Complete result of a coordinator run.
 #[derive(Debug, Clone)]
 pub struct RunResult {
     pub policy: &'static str,
+    /// Per-query outcomes. Empty when the run streamed its aggregates
+    /// (`retain_raw = false`); report accessors below fall back to
+    /// [`RunResult::summary`] in that case.
     pub outcomes: Vec<QueryOutcome>,
+    /// Per-batch records; empty under streamed retention, like
+    /// `outcomes`.
     pub batches: Vec<BatchRecord>,
     /// Simulated time at which all batches completed.
     pub end_time: f64,
@@ -229,36 +327,104 @@ pub struct RunResult {
     /// simulated execution is free). Basis of the batches/sec and
     /// stall-fraction service metrics.
     pub host_wall_secs: f64,
+    /// Streaming aggregates, maintained whether or not raw records were
+    /// retained.
+    pub summary: ExecSummary,
 }
 
 impl RunResult {
+    /// Whether raw per-query/per-batch records were retained. Accessors
+    /// prefer the raw (exact) path when available and fall back to the
+    /// streaming summary otherwise.
+    fn raw(&self) -> bool {
+        !self.batches.is_empty() || !self.outcomes.is_empty()
+    }
+
+    /// Queries completed over the whole run.
+    pub fn completed(&self) -> usize {
+        if self.raw() {
+            self.outcomes.len()
+        } else {
+            self.summary.completed as usize
+        }
+    }
+
+    /// Batches executed over the whole run.
+    pub fn n_batches(&self) -> usize {
+        if self.raw() {
+            self.batches.len()
+        } else {
+            self.summary.batches as usize
+        }
+    }
+
+    /// Queries completed per tenant (length `n_tenants`).
+    pub fn per_tenant_completed(&self) -> Vec<u64> {
+        let mut counts = vec![0u64; self.n_tenants];
+        if self.raw() {
+            for o in &self.outcomes {
+                if o.tenant < counts.len() {
+                    counts[o.tenant] += 1;
+                }
+            }
+        } else {
+            for (i, &c) in self.summary.per_tenant_completed.iter().enumerate() {
+                if i < counts.len() {
+                    counts[i] = c;
+                }
+            }
+        }
+        counts
+    }
+
+    /// Largest single batch (queries).
+    pub fn max_batch(&self) -> usize {
+        if self.raw() {
+            self.batches.iter().map(|b| b.n_queries).max().unwrap_or(0)
+        } else {
+            self.summary.max_batch
+        }
+    }
+
     /// Queries per minute of simulated time (Equation 4).
     pub fn throughput_per_min(&self) -> f64 {
         if self.end_time <= 0.0 {
             return 0.0;
         }
-        self.outcomes.len() as f64 / (self.end_time / 60.0)
+        self.completed() as f64 / (self.end_time / 60.0)
     }
 
     /// Fraction of queries served entirely off cached views.
     pub fn hit_ratio(&self) -> f64 {
-        if self.outcomes.is_empty() {
-            return 0.0;
+        if self.raw() {
+            if self.outcomes.is_empty() {
+                return 0.0;
+            }
+            self.outcomes.iter().filter(|o| o.from_cache).count() as f64
+                / self.outcomes.len() as f64
+        } else if self.summary.completed == 0 {
+            0.0
+        } else {
+            self.summary.hits as f64 / self.summary.completed as f64
         }
-        self.outcomes.iter().filter(|o| o.from_cache).count() as f64
-            / self.outcomes.len() as f64
     }
 
     /// Mean cache utilization across batches.
     pub fn avg_cache_utilization(&self) -> f64 {
-        if self.batches.is_empty() {
-            return 0.0;
+        if self.raw() {
+            if self.batches.is_empty() {
+                return 0.0;
+            }
+            self.batches
+                .iter()
+                .map(|b| b.cache_utilization)
+                .sum::<f64>()
+                / self.batches.len() as f64
+        } else if self.summary.util_batches == 0 {
+            0.0
+        } else {
+            self.summary.util_sum / self.summary.util_batches as f64
         }
-        self.batches
-            .iter()
-            .map(|b| b.cache_utilization)
-            .sum::<f64>()
-            / self.batches.len() as f64
     }
 
     /// Fraction of batches in which each view was cached (Figure 7).
@@ -307,8 +473,19 @@ impl RunResult {
 
     /// Percentile of per-batch solve latency in milliseconds (host).
     pub fn solve_ms_percentile(&self, p: f64) -> f64 {
-        let ms: Vec<f64> = self.batches.iter().map(|b| b.solve_secs * 1e3).collect();
-        stats::percentile(&ms, p)
+        self.solve_ms_percentiles(&[p])[0]
+    }
+
+    /// Several solve-latency percentiles over one pass: exact
+    /// (single-sort `percentiles_of`) when raw batch records were
+    /// retained, streaming-histogram quantiles otherwise.
+    pub fn solve_ms_percentiles(&self, ps: &[f64]) -> Vec<f64> {
+        if self.raw() {
+            let ms: Vec<f64> = self.batches.iter().map(|b| b.solve_secs * 1e3).collect();
+            stats::percentiles_of(&ms, ps)
+        } else {
+            ps.iter().map(|&p| self.summary.solve_ms.quantile(p)).collect()
+        }
     }
 
     /// Fraction of the run's host wall-clock the executor spent stalled
@@ -318,7 +495,11 @@ impl RunResult {
         if self.host_wall_secs <= 0.0 {
             return 0.0;
         }
-        let stalled: f64 = self.batches.iter().map(|b| b.stall_secs).sum();
+        let stalled: f64 = if self.raw() {
+            self.batches.iter().map(|b| b.stall_secs).sum()
+        } else {
+            self.summary.stall_secs_sum
+        };
         (stalled / self.host_wall_secs).min(1.0)
     }
 
@@ -327,15 +508,19 @@ impl RunResult {
         if self.host_wall_secs <= 0.0 {
             return 0.0;
         }
-        self.batches.len() as f64 / self.host_wall_secs
+        self.n_batches() as f64 / self.host_wall_secs
     }
 
     /// Total (bytes loaded, bytes evicted) across all batch transitions
     /// — the Figure 12 churn measure.
     pub fn cache_bytes_moved(&self) -> (u64, u64) {
-        self.batches.iter().fold((0, 0), |(l, e), b| {
-            (l + b.delta.bytes_loaded, e + b.delta.bytes_evicted)
-        })
+        if self.raw() {
+            self.batches.iter().fold((0, 0), |(l, e), b| {
+                (l + b.delta.bytes_loaded, e + b.delta.bytes_evicted)
+            })
+        } else {
+            (self.summary.bytes_loaded, self.summary.bytes_evicted)
+        }
     }
 }
 
@@ -347,6 +532,15 @@ pub struct PlannedBatch {
     pub queries: Vec<Query>,
     pub config: ConfigMask,
     pub solve_secs: f64,
+    /// Span phase breakdown (host seconds; observational only — see
+    /// [`SolveOutcome`]). `solve_secs` stays the total the reports use;
+    /// the phases partition it: drain + boost + alloc + sample.
+    pub drain_secs: f64,
+    pub boost_secs: f64,
+    pub alloc_secs: f64,
+    pub sample_secs: f64,
+    /// `"cold"` / `"warm"` / `"none"` (empty batch).
+    pub solve_kind: &'static str,
 }
 
 /// Steps 1–2 of the loop: drain the workload window, build the batch
@@ -383,7 +577,9 @@ impl BatchPlanner<'_> {
         self.next += 1;
         let window_end = (b + 1) as f64 * self.cfg.batch_secs;
         // Step 1: drain the batch window.
+        let t_drain = Instant::now();
         let queries = self.generator.generate_until(window_end, self.universe);
+        let drain_secs = t_drain.elapsed().as_secs_f64();
 
         // Step 2: view selection.
         let t0 = Instant::now();
@@ -394,7 +590,7 @@ impl BatchPlanner<'_> {
             stateful_gamma: self.cfg.stateful_gamma,
             weight_mult: None,
         };
-        let config = ctx.solve_warm(
+        let outcome = ctx.solve_accounted_warm(
             &self.mirror,
             &queries,
             self.policy,
@@ -402,13 +598,18 @@ impl BatchPlanner<'_> {
             self.warm.as_mut(),
         );
         let solve_secs = t0.elapsed().as_secs_f64();
-        self.mirror = config.clone();
+        self.mirror = outcome.config.clone();
         Some(PlannedBatch {
             index: b,
             window_end,
             queries,
-            config,
+            config: outcome.config,
             solve_secs,
+            drain_secs,
+            boost_secs: outcome.boost_secs,
+            alloc_secs: outcome.alloc_secs,
+            sample_secs: outcome.sample_secs,
+            solve_kind: outcome.kind,
         })
     }
 }
@@ -426,6 +627,18 @@ pub struct BatchExecutor<'a> {
     outcomes: Vec<QueryOutcome>,
     batches: Vec<BatchRecord>,
     prev_end: f64,
+    /// Streaming aggregates, maintained for every batch regardless of
+    /// `retain_raw`.
+    summary: ExecSummary,
+    /// When false, per-batch/per-query raw records are dropped after
+    /// folding into `summary` — flat-memory mode for long real-clock
+    /// serves. Defaults to true (replay determinism tests compare raw
+    /// vectors).
+    retain_raw: bool,
+    /// Host seconds of the most recent batch's cache transition and
+    /// simulated execution — the span's last two phases.
+    last_transition_secs: f64,
+    last_execute_secs: f64,
 }
 
 impl<'e> BatchExecutor<'e> {
@@ -442,15 +655,24 @@ impl<'e> BatchExecutor<'e> {
     ) -> BatchExecutor<'e> {
         let sizes: Vec<u64> = universe.views.iter().map(|v| v.cached_bytes).collect();
         let scan_sizes: Vec<u64> = universe.views.iter().map(|v| v.scan_bytes).collect();
+        let weights = tenants.weights();
+        let summary = ExecSummary {
+            per_tenant_completed: vec![0; weights.len()],
+            ..ExecSummary::default()
+        };
         BatchExecutor {
             engine,
             scan_sizes,
-            weights: tenants.weights(),
+            weights,
             cache: CacheManager::new(budget, sizes),
             clock: SimClock::new(),
             outcomes: Vec::new(),
             batches: Vec::new(),
             prev_end: 0.0,
+            summary,
+            retain_raw: true,
+            last_transition_secs: 0.0,
+            last_execute_secs: 0.0,
         }
     }
 }
@@ -478,12 +700,16 @@ impl BatchExecutor<'_> {
             mut queries,
             config,
             solve_secs,
+            ..
         } = planned;
         // Step 3: incremental cache transition.
+        let t_trans = Instant::now();
         let delta = self.cache.update(&config);
+        self.last_transition_secs = t_trans.elapsed().as_secs_f64();
 
         // Steps 4+5: execute on the simulated cluster, starting once
         // the batch window has closed and the previous batch finished.
+        let t_exec = Instant::now();
         let now = self.clock.wait_until(window_end);
         let exec_start = now.max(self.prev_end);
         let exec = self.engine.execute_batch(
@@ -493,22 +719,47 @@ impl BatchExecutor<'_> {
             &mut self.cache,
             &self.weights,
         );
+        self.last_execute_secs = t_exec.elapsed().as_secs_f64();
         self.prev_end = exec.end_time;
 
-        self.batches.push(BatchRecord {
-            index,
-            n_queries: queries.len(),
-            config,
-            cache_utilization: self.cache.utilization(),
-            window_end,
-            exec_start,
-            exec_end: exec.end_time,
-            solve_secs,
-            queue_depth,
-            stall_secs,
-            delta,
-        });
-        self.outcomes.extend(exec.outcomes);
+        // Streaming aggregates first, raw retention second — the
+        // summary is maintained either way so flat-memory serves report
+        // the same fields.
+        let utilization = self.cache.utilization();
+        self.summary.batches += 1;
+        self.summary.util_batches += 1;
+        self.summary.util_sum += utilization;
+        self.summary.stall_secs_sum += stall_secs;
+        self.summary.max_batch = self.summary.max_batch.max(queries.len());
+        self.summary.completed += exec.outcomes.len() as u64;
+        self.summary.bytes_loaded += delta.bytes_loaded;
+        self.summary.bytes_evicted += delta.bytes_evicted;
+        self.summary.solve_ms.record(solve_secs * 1e3);
+        for o in &exec.outcomes {
+            if o.from_cache {
+                self.summary.hits += 1;
+            }
+            if o.tenant < self.summary.per_tenant_completed.len() {
+                self.summary.per_tenant_completed[o.tenant] += 1;
+            }
+        }
+
+        if self.retain_raw {
+            self.batches.push(BatchRecord {
+                index,
+                n_queries: queries.len(),
+                config,
+                cache_utilization: utilization,
+                window_end,
+                exec_start,
+                exec_end: exec.end_time,
+                solve_secs,
+                queue_depth,
+                stall_secs,
+                delta,
+            });
+            self.outcomes.extend(exec.outcomes);
+        }
         queries.clear();
         queries
     }
@@ -522,6 +773,18 @@ impl BatchExecutor<'_> {
     /// re-splits (`CacheManager::set_budget` on membership changes).
     pub(crate) fn cache_mut(&mut self) -> &mut CacheManager {
         &mut self.cache
+    }
+
+    /// Flat-memory mode: stop retaining raw per-batch/per-query records
+    /// (the streaming [`ExecSummary`] keeps the report fields meaningful).
+    pub(crate) fn set_retain_raw(&mut self, retain: bool) {
+        self.retain_raw = retain;
+    }
+
+    /// Host seconds of the most recent batch's (cache transition,
+    /// simulated execution) — the last two span phases.
+    pub(crate) fn last_phase_secs(&self) -> (f64, f64) {
+        (self.last_transition_secs, self.last_execute_secs)
     }
 
     /// Assemble the run result.
@@ -540,6 +803,7 @@ impl BatchExecutor<'_> {
             n_tenants,
             weights: self.weights,
             host_wall_secs,
+            summary: self.summary,
         }
     }
 }
@@ -606,13 +870,47 @@ impl<'a> Coordinator<'a> {
     /// arrivals; `config.seed` fixes policy randomization — so two
     /// policies can be compared on identical workloads.
     pub fn run(&self, generator: &mut WorkloadGenerator, policy: &dyn Policy) -> RunResult {
+        self.run_with(generator, policy, &Telemetry::off())
+    }
+
+    /// [`Coordinator::run`] with telemetry: one span per batch, a tick
+    /// per batch window on the simulated clock. Telemetry is a pure
+    /// observer — `run` and `run_with` are bit-identical in every
+    /// simulated quantity.
+    pub fn run_with(
+        &self,
+        generator: &mut WorkloadGenerator,
+        policy: &dyn Policy,
+        tel: &Telemetry,
+    ) -> RunResult {
         let t_run = Instant::now();
         let mut planner = self.planner(generator, policy);
         let mut executor = self.executor();
         while let Some(planned) = planner.next_batch() {
             // Serial mode: the executor waits out the whole solve.
             let stall = planned.solve_secs;
+            let span = SpanRecord {
+                t: planned.window_end,
+                batch: planned.index,
+                shard: -1,
+                slot: -1,
+                n_queries: planned.queries.len(),
+                drain_ms: planned.drain_secs * 1e3,
+                boost_ms: planned.boost_secs * 1e3,
+                solve_ms: planned.alloc_secs * 1e3,
+                sample_ms: planned.sample_secs * 1e3,
+                transition_ms: 0.0,
+                execute_ms: 0.0,
+                solve_kind: planned.solve_kind,
+            };
             executor.execute(planned, 0, stall);
+            let (transition, exec) = executor.last_phase_secs();
+            tel.span(&SpanRecord {
+                transition_ms: transition * 1e3,
+                execute_ms: exec * 1e3,
+                ..span
+            });
+            tel.tick(span.t);
         }
         executor.into_result(
             policy.name(),

@@ -179,6 +179,7 @@ mod tests {
             n_tenants,
             weights: vec![1.0; n_tenants],
             host_wall_secs: 0.02,
+            summary: crate::coordinator::loop_::ExecSummary::default(),
         }
     }
 

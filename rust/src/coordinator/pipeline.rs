@@ -22,6 +22,7 @@ use std::time::Instant;
 
 use crate::alloc::Policy;
 use crate::coordinator::loop_::{Coordinator, PlannedBatch, RunResult};
+use crate::telemetry::{SpanRecord, Telemetry};
 use crate::util::pool::with_worker_pool;
 use crate::workload::generator::WorkloadGenerator;
 
@@ -38,6 +39,20 @@ impl Coordinator<'_> {
         generator: &mut WorkloadGenerator,
         policy: &dyn Policy,
         depth: usize,
+    ) -> RunResult {
+        self.run_pipelined_with(generator, policy, depth, &Telemetry::off())
+    }
+
+    /// [`Coordinator::run_pipelined`] with telemetry: spans are emitted
+    /// from the executor side (this thread), one per retired batch, so
+    /// trace order matches execution order regardless of how far ahead
+    /// the solver runs.
+    pub fn run_pipelined_with(
+        &self,
+        generator: &mut WorkloadGenerator,
+        policy: &dyn Policy,
+        depth: usize,
+        tel: &Telemetry,
     ) -> RunResult {
         let depth = depth.max(1);
         let t_run = Instant::now();
@@ -68,7 +83,28 @@ impl Coordinator<'_> {
                         // Solved batches still waiting after taking this
                         // one — how far ahead the solver is running.
                         let queue_depth = queued.fetch_sub(1, Ordering::SeqCst).saturating_sub(1);
+                        let span = SpanRecord {
+                            t: planned.window_end,
+                            batch: planned.index,
+                            shard: -1,
+                            slot: -1,
+                            n_queries: planned.queries.len(),
+                            drain_ms: planned.drain_secs * 1e3,
+                            boost_ms: planned.boost_secs * 1e3,
+                            solve_ms: planned.alloc_secs * 1e3,
+                            sample_ms: planned.sample_secs * 1e3,
+                            transition_ms: 0.0,
+                            execute_ms: 0.0,
+                            solve_kind: planned.solve_kind,
+                        };
                         executor.execute(planned, queue_depth, stall_secs);
+                        let (transition, exec) = executor.last_phase_secs();
+                        tel.span(&SpanRecord {
+                            transition_ms: transition * 1e3,
+                            execute_ms: exec * 1e3,
+                            ..span
+                        });
+                        tel.tick(span.t);
                     }
                     Err(_) => break, // planner finished and hung up
                 }

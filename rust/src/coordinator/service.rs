@@ -27,6 +27,7 @@ use crate::coordinator::loop_::{
 use crate::domain::query::Query;
 use crate::domain::tenant::{TenantId, TenantSet};
 use crate::sim::engine::SimEngine;
+use crate::telemetry::{SpanRecord, Telemetry};
 use crate::util::event::{Clock, RealTimeClock, SimClock};
 use crate::util::ordf64::OrdF64;
 use crate::util::rng::{mix64, Pcg64};
@@ -205,6 +206,7 @@ fn service_loop<C: Clock>(
     policy: &dyn Policy,
     rng: &mut Pcg64,
     cfg: &ServeConfig,
+    tel: &Telemetry,
     mut pump: impl FnMut(&mut C, f64) -> bool,
 ) -> ServeLoopStats {
     let mut stats = ServeLoopStats::default();
@@ -222,19 +224,23 @@ fn service_loop<C: Clock>(
         let all_closed = pump(clock, now);
 
         // Step 1: cut the batch across all tenant queues.
+        let t_drain = Instant::now();
         for q in queues {
             q.drain_into(&mut queries);
         }
         queries.sort_by_key(|q| OrdF64(q.arrival));
         for q in &queries {
-            stats.admit_wait_sum += (now - q.arrival).max(0.0);
+            let wait = (now - q.arrival).max(0.0);
+            stats.admit_wait_sum += wait;
+            tel.admit_wait(wait * 1e3);
         }
         let n_cut = queries.len();
+        let drain_secs = t_drain.elapsed().as_secs_f64();
 
         // Step 2: the shared solve (host critical path), boosted
         // from the executor's live cache contents.
         let t0 = Instant::now();
-        let config = solve_ctx.solve_warm(
+        let solved = solve_ctx.solve_accounted_warm(
             executor.cache().cached(),
             &queries,
             policy,
@@ -248,17 +254,39 @@ fn service_loop<C: Clock>(
         // `queue_depth` records arrivals already waiting for the
         // *next* cut; in serve mode the solve is the stall.
         let backlog: usize = queues.iter().map(|q| q.len()).sum();
+        tel.metrics().queue_depth.set(backlog as u64);
         queries = executor.execute_reclaim(
             PlannedBatch {
                 index: batch_idx,
                 window_end,
                 queries,
-                config,
+                config: solved.config,
                 solve_secs,
+                drain_secs,
+                boost_secs: solved.boost_secs,
+                alloc_secs: solved.alloc_secs,
+                sample_secs: solved.sample_secs,
+                solve_kind: solved.kind,
             },
             backlog,
             solve_secs,
         );
+        let (transition_secs, execute_secs) = executor.last_phase_secs();
+        tel.span(&SpanRecord {
+            t: window_end,
+            batch: batch_idx,
+            shard: -1,
+            slot: -1,
+            n_queries: n_cut,
+            drain_ms: drain_secs * 1e3,
+            boost_ms: solved.boost_secs * 1e3,
+            solve_ms: solved.alloc_secs * 1e3,
+            sample_ms: solved.sample_secs * 1e3,
+            transition_ms: transition_secs * 1e3,
+            execute_ms: execute_secs * 1e3,
+            solve_kind: solved.kind,
+        });
+        tel.tick(now);
         completed_live += n_cut as u64;
         batch_idx += 1;
         if n_cut > 0 {
@@ -301,20 +329,22 @@ pub(crate) fn assemble_report(
     tenants: &TenantSet,
     n_tenants: usize,
 ) -> ServeReport {
-    let completed = run.outcomes.len() as u64;
-    let mut per_tenant_completed = vec![0u64; n_tenants];
-    for o in &run.outcomes {
-        per_tenant_completed[o.tenant] += 1;
-    }
+    // Summary-backed accessors: exact under raw retention, streaming
+    // aggregates under the flat-memory serve mode — either way the
+    // report fields keep their meaning.
+    let completed = run.completed() as u64;
+    let mut per_tenant_completed = run.per_tenant_completed();
+    per_tenant_completed.resize(n_tenants, 0);
     let normalized: Vec<f64> = per_tenant_completed
         .iter()
         .zip(&tenants.weights())
         .map(|(&c, w)| c as f64 / w.max(1e-12))
         .collect();
+    let solve_ps = run.solve_ms_percentiles(&[50.0, 99.0]);
 
     ServeReport {
         elapsed_secs,
-        batches: run.batches.len(),
+        batches: run.n_batches(),
         admitted,
         rejected,
         completed,
@@ -323,14 +353,14 @@ pub(crate) fn assemble_report(
         } else {
             0.0
         },
-        solve_ms_p50: run.solve_ms_percentile(50.0),
-        solve_ms_p99: run.solve_ms_percentile(99.0),
+        solve_ms_p50: solve_ps[0],
+        solve_ms_p99: solve_ps[1],
         mean_admit_wait_ms: if completed > 0 {
             1e3 * stats.admit_wait_sum / completed as f64
         } else {
             0.0
         },
-        max_batch: run.batches.iter().map(|b| b.n_queries).max().unwrap_or(0),
+        max_batch: run.max_batch(),
         peak_queue_depth,
         hit_ratio: run.hit_ratio(),
         avg_cache_utilization: run.avg_cache_utilization(),
@@ -362,12 +392,29 @@ pub fn serve(
     policy: &dyn Policy,
     cfg: &ServeConfig,
 ) -> ServeReport {
+    serve_with(universe, tenants, engine, policy, cfg, &Telemetry::off())
+}
+
+/// [`serve`] with telemetry. The real-clock driver is where soak
+/// memory matters, so it runs the executor in flat-memory mode
+/// (streaming [`crate::coordinator::loop_::ExecSummary`] instead of
+/// per-query raw records) — the report fields keep their meaning at
+/// any duration.
+pub fn serve_with(
+    universe: &Universe,
+    tenants: &TenantSet,
+    engine: &SimEngine,
+    policy: &dyn Policy,
+    cfg: &ServeConfig,
+    tel: &Telemetry,
+) -> ServeReport {
     assert!(cfg.n_tenants > 0, "serve needs at least one tenant");
     assert!(cfg.batch_secs > 0.0 && cfg.duration_secs > 0.0);
     assert_eq!(tenants.len(), cfg.n_tenants, "tenant set size mismatch");
+    tel.meta("serve", cfg.n_tenants, 1, 1.0);
 
     let queues: Vec<AdmissionQueue> = (0..cfg.n_tenants)
-        .map(|_| AdmissionQueue::new(cfg.queue_capacity))
+        .map(|_| AdmissionQueue::with_probe(cfg.queue_capacity, tel.queue_probe(-1)))
         .collect();
     let clock = RealTimeClock::new();
     let budget = engine.config.cache_budget;
@@ -384,6 +431,9 @@ pub fn serve(
     };
     let coordinator = Coordinator::new(universe, tenants.clone(), engine.clone(), coord_cfg);
     let mut executor = coordinator.executor();
+    // Flat-memory soak mode: fold every batch into the streaming
+    // summary instead of retaining raw per-query/per-batch vectors.
+    executor.set_retain_raw(false);
     let solve_ctx = SolveContext {
         tenants,
         universe,
@@ -431,6 +481,7 @@ pub fn serve(
             policy,
             &mut rng,
             cfg,
+            tel,
             |_, _| queues.iter().all(|q| q.is_closed()),
         )
     });
@@ -471,6 +522,21 @@ pub fn serve_sim(
     policy: &dyn Policy,
     cfg: &ServeConfig,
 ) -> (ServeReport, RunResult) {
+    serve_sim_with(universe, tenants, engine, policy, cfg, &Telemetry::off())
+}
+
+/// [`serve_sim`] with telemetry. Raw retention stays ON here — the sim
+/// driver's whole point is returning exact per-query outcomes for
+/// equivalence tests, and telemetry must not change a single one of
+/// them (`rust/tests/telemetry_observer.rs`).
+pub fn serve_sim_with(
+    universe: &Universe,
+    tenants: &TenantSet,
+    engine: &SimEngine,
+    policy: &dyn Policy,
+    cfg: &ServeConfig,
+    tel: &Telemetry,
+) -> (ServeReport, RunResult) {
     assert!(cfg.n_tenants > 0, "serve needs at least one tenant");
     assert!(cfg.batch_secs > 0.0 && cfg.duration_secs > 0.0);
     assert_eq!(tenants.len(), cfg.n_tenants, "tenant set size mismatch");
@@ -479,9 +545,10 @@ pub fn serve_sim(
         AdmissionPolicy::Drop,
         "the sim driver is single-threaded: block admission would deadlock"
     );
+    tel.meta("serve-sim", cfg.n_tenants, 1, 1.0);
 
     let queues: Vec<AdmissionQueue> = (0..cfg.n_tenants)
-        .map(|_| AdmissionQueue::new(cfg.queue_capacity))
+        .map(|_| AdmissionQueue::with_probe(cfg.queue_capacity, tel.queue_probe(-1)))
         .collect();
     let budget = engine.config.cache_budget;
     let coord_cfg = CoordinatorConfig {
@@ -521,6 +588,7 @@ pub fn serve_sim(
         policy,
         &mut rng,
         cfg,
+        tel,
         |_, now| {
             let t_end = now.min(duration);
             for (i, g) in gens.iter_mut().enumerate() {

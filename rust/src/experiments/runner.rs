@@ -20,6 +20,7 @@ use crate::domain::tenant::TenantSet;
 use crate::experiments::setups::{ExperimentSetup, UniverseKind};
 use crate::sim::cluster::ClusterConfig;
 use crate::sim::engine::SimEngine;
+use crate::telemetry::Telemetry;
 use crate::workload::generator::WorkloadGenerator;
 use crate::workload::universe::Universe;
 
@@ -97,6 +98,18 @@ pub fn run_with_policies(
     setup: &ExperimentSetup,
     policies: &[Box<dyn Policy>],
 ) -> ExperimentOutput {
+    run_with_policies_tel(setup, policies, &Telemetry::off())
+}
+
+/// [`run_with_policies`] with telemetry. `Telemetry` is `Sync`, so the
+/// per-policy worker threads share one handle; spans carry the batch
+/// index, and ticks ride whichever worker crosses a snapshot boundary
+/// first.
+pub fn run_with_policies_tel(
+    setup: &ExperimentSetup,
+    policies: &[Box<dyn Policy>],
+    tel: &Telemetry,
+) -> ExperimentOutput {
     let (universe, tenants, engine, config) = coordinator_parts(setup);
     let coordinator = Coordinator::new(&universe, tenants, engine, config);
 
@@ -114,7 +127,7 @@ pub fn run_with_policies(
                         universe,
                         setup.seed,
                     );
-                    coordinator.run(&mut gen, p.as_ref())
+                    coordinator.run_with(&mut gen, p.as_ref(), tel)
                 })
             })
             .collect();
@@ -163,6 +176,17 @@ pub fn run_with_policies_pipelined(
     policies: &[Box<dyn Policy>],
     depth: usize,
 ) -> ExperimentOutput {
+    run_with_policies_pipelined_tel(setup, policies, depth, &Telemetry::off())
+}
+
+/// [`run_with_policies_pipelined`] with telemetry (one span per retired
+/// batch, executor-side).
+pub fn run_with_policies_pipelined_tel(
+    setup: &ExperimentSetup,
+    policies: &[Box<dyn Policy>],
+    depth: usize,
+    tel: &Telemetry,
+) -> ExperimentOutput {
     let (universe, tenants, engine, config) = coordinator_parts(setup);
     let coordinator = Coordinator::new(&universe, tenants, engine, config);
 
@@ -174,7 +198,7 @@ pub fn run_with_policies_pipelined(
                 &universe,
                 setup.seed,
             );
-            coordinator.run_pipelined(&mut gen, p.as_ref(), depth)
+            coordinator.run_pipelined_with(&mut gen, p.as_ref(), depth, tel)
         })
         .collect();
 
@@ -193,10 +217,21 @@ pub fn run_federated(
     fed: &FederationConfig,
     policy: &dyn Policy,
 ) -> ClusterResult {
+    run_federated_tel(setup, fed, policy, &Telemetry::off())
+}
+
+/// [`run_federated`] with telemetry (per-shard spans, membership and
+/// clamp events, warm-invalidation audit trail).
+pub fn run_federated_tel(
+    setup: &ExperimentSetup,
+    fed: &FederationConfig,
+    policy: &dyn Policy,
+    tel: &Telemetry,
+) -> ClusterResult {
     let (universe, tenants, engine, config) = coordinator_parts(setup);
     let coordinator = ShardedCoordinator::new(&universe, tenants, engine, config, fed.clone());
     let mut gen = WorkloadGenerator::new(setup.tenant_specs.clone(), &universe, setup.seed);
-    coordinator.run(&mut gen, policy)
+    coordinator.run_with(&mut gen, policy, tel)
 }
 
 /// Resolve a federation config's membership plan against a setup's

@@ -26,6 +26,8 @@
 
 pub mod util;
 
+pub mod telemetry;
+
 pub mod solver;
 
 pub mod domain;

@@ -82,6 +82,9 @@ fn main() {
                         OptSpec { name: "workers", help: "cluster/serve: shard-step worker threads (0 = inline; default: host cores)", default: None },
                         OptSpec { name: "sim", help: "serve: drive the loop on a simulated clock (deterministic, drop admission only)", default: None },
                         OptSpec { name: "setup", help: "cluster: §5.3 workload, sales-g1..sales-g4", default: Some("sales-g2") },
+                        OptSpec { name: "trace-out", help: "run/serve/cluster: write a JSONL batch trace here (spans, events, snapshots)", default: None },
+                        OptSpec { name: "metrics-addr", help: "run/serve/cluster: serve live Prometheus /metrics on HOST:PORT", default: None },
+                        OptSpec { name: "snapshot-secs", help: "run/serve/cluster: emit a counter snapshot into the trace every N run-clock seconds", default: None },
                     ],
                 )
             );
@@ -127,6 +130,33 @@ fn opt_gamma(args: &Args) -> Result<Option<f64>, String> {
     }
 }
 
+/// Build the run's telemetry from the uniform observability flags
+/// (`--trace-out FILE`, `--metrics-addr HOST:PORT`,
+/// `--snapshot-secs N`), shared verbatim by `run`, `serve`, and
+/// `cluster`. Flag hygiene: an unwritable trace path or unbindable
+/// metrics address is a *startup* error (exit 2), never a mid-run
+/// surprise.
+fn telemetry_from_args(args: &Args) -> Result<robus::telemetry::Telemetry, String> {
+    let mut tel = robus::telemetry::Telemetry::off();
+    if let Some(path) = args.opt("trace-out") {
+        tel.trace_to_file(path)
+            .map_err(|e| format!("--trace-out {path}: {e}"))?;
+    }
+    if let Some(addr) = args.opt("metrics-addr") {
+        let bound = tel
+            .serve_metrics(addr)
+            .map_err(|e| format!("--metrics-addr {addr}: {e}"))?;
+        eprintln!("metrics: serving http://{bound}/metrics");
+    }
+    if let Some(s) = args.opt("snapshot-secs") {
+        let secs = s
+            .parse::<f64>()
+            .map_err(|_| format!("--snapshot-secs expects a number, got '{s}'"))?;
+        tel.snapshot_every(secs);
+    }
+    Ok(tel)
+}
+
 /// Parse `--workers` strictly; absent means auto-size the shard-step
 /// pool to the host, 0 means step shards inline (no pool threads).
 fn opt_workers(args: &Args) -> Result<Option<usize>, String> {
@@ -170,15 +200,25 @@ fn cmd_run(args: &Args) -> Result<i32, String> {
     }
     let policies: Vec<Box<dyn robus::alloc::Policy>> =
         vec![PolicyKind::Static.build(), kind.build()];
-    let out = if args.flag("pipeline") {
-        robus::experiments::runner::run_with_policies_pipelined(
+    let mut tel = telemetry_from_args(args)?;
+    let pipeline = args.flag("pipeline");
+    tel.meta(
+        if pipeline { "run-pipelined" } else { "run" },
+        n_tenants,
+        1,
+        1.0,
+    );
+    let out = if pipeline {
+        robus::experiments::runner::run_with_policies_pipelined_tel(
             &setup,
             &policies,
             robus::coordinator::DEFAULT_PIPELINE_DEPTH,
+            &tel,
         )
     } else {
-        run_with_policies(&setup, &policies)
+        robus::experiments::runner::run_with_policies_tel(&setup, &policies, &tel)
     };
+    tel.shutdown();
     println!("{}", MetricsSummary::header());
     for s in &out.summaries {
         println!("{}", s.row());
@@ -287,6 +327,7 @@ fn cmd_serve(args: &Args) -> Result<i32, String> {
     let engine = robus::sim::SimEngine::new(robus::sim::ClusterConfig::default());
     let policy = kind.build();
     let min_qps = args.opt_f64("min-qps", 0.0)?;
+    let mut tel = telemetry_from_args(args)?;
 
     let queries_per_sec = if n_shards == 1 && auto.is_none() {
         // The single-node service path, byte-for-byte the pre-federated
@@ -302,21 +343,23 @@ fn cmd_serve(args: &Args) -> Result<i32, String> {
             cfg.duration_secs,
         );
         let report = if sim {
-            robus::coordinator::service::serve_sim(
+            robus::coordinator::service::serve_sim_with(
                 &universe,
                 &tenants,
                 &engine,
                 policy.as_ref(),
                 &cfg,
+                &tel,
             )
             .0
         } else {
-            robus::coordinator::service::serve(
+            robus::coordinator::service::serve_with(
                 &universe,
                 &tenants,
                 &engine,
                 policy.as_ref(),
                 &cfg,
+                &tel,
             )
         };
         print!("{}", report.render());
@@ -349,25 +392,28 @@ fn cmd_serve(args: &Args) -> Result<i32, String> {
             cfg.duration_secs,
         );
         let report = if sim {
-            robus::cluster::serve_federated_sim(
+            robus::cluster::serve_federated_sim_with(
                 &universe,
                 &tenants,
                 &engine,
                 policy.as_ref(),
                 &fcfg,
+                &tel,
             )
         } else {
-            robus::cluster::serve_federated(
+            robus::cluster::serve_federated_with(
                 &universe,
                 &tenants,
                 &engine,
                 policy.as_ref(),
                 &fcfg,
+                &tel,
             )
         };
         print!("{}", report.render());
         report.serve.queries_per_sec
     };
+    tel.shutdown();
 
     // Optional service-level objective: fail (exit 1) if the sustained
     // throughput fell short — this is what makes the CI smoke and the
@@ -384,7 +430,7 @@ fn cmd_serve(args: &Args) -> Result<i32, String> {
 fn cmd_cluster(args: &Args) -> Result<i32, String> {
     use robus::cluster::{FederationConfig, MembershipPlan, PlacementStrategy};
     use robus::experiments::runner::{
-        run_federated, run_with_policies_serial, validate_membership,
+        run_federated_tel, run_with_policies_serial, validate_membership,
     };
 
     let policy_name = args.opt_or("policy", "FASTPF");
@@ -479,7 +525,9 @@ fn cmd_cluster(args: &Args) -> Result<i32, String> {
     // STATIC single-node serial run = the Eq. 5 speedup baseline.
     let baseline = run_with_policies_serial(&setup, &[PolicyKind::Static.build()]);
     let policy = kind.build();
-    let result = run_federated(&setup, &fed, policy.as_ref());
+    let mut tel = telemetry_from_args(args)?;
+    let result = run_federated_tel(&setup, &fed, policy.as_ref(), &tel);
+    tel.shutdown();
     print!("{}", result.render(Some(&baseline.runs[0])));
 
     // Elasticity transients: spread/throughput before, during, and

@@ -1,0 +1,143 @@
+//! Live `/metrics` endpoint: a `std::net::TcpListener` accept loop on
+//! its own thread, answering every HTTP request with the registry
+//! rendered as Prometheus text exposition (version 0.0.4). Zero
+//! external crates; the "HTTP server" is deliberately minimal — read
+//! until the blank line, write one `Connection: close` response.
+//!
+//! Binding happens in [`MetricsEndpoint::bind`], *before* any run
+//! starts, so an unbindable `--metrics-addr` is a startup error rather
+//! than a mid-run surprise (flag-hygiene contract).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::telemetry::registry::Metrics;
+
+pub struct MetricsEndpoint {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl MetricsEndpoint {
+    /// Bind `addr` (e.g. `127.0.0.1:9101`; port 0 picks a free port)
+    /// and start serving `metrics`. Errors here are the caller's
+    /// startup errors.
+    pub fn bind(addr: &str, metrics: Arc<Metrics>) -> std::io::Result<MetricsEndpoint> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_in = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("robus-metrics".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if stop_in.load(Ordering::Acquire) {
+                        break;
+                    }
+                    if let Ok(stream) = conn {
+                        // One slow scraper must not wedge the accept
+                        // loop forever.
+                        let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
+                        let _ = stream.set_write_timeout(Some(Duration::from_secs(2)));
+                        let _ = serve_one(stream, &metrics);
+                    }
+                }
+            })?;
+        Ok(MetricsEndpoint {
+            addr: local,
+            stop,
+            handle: Some(handle),
+        })
+    }
+
+    /// The actually-bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for MetricsEndpoint {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        // `incoming()` blocks in accept; poke it awake so the thread
+        // observes the stop flag and exits.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Read the request head (best effort), respond with the current
+/// exposition. Any request path gets the same body — there is exactly
+/// one resource.
+fn serve_one(mut stream: TcpStream, metrics: &Metrics) -> std::io::Result<()> {
+    let mut head = [0u8; 1024];
+    let mut read = 0;
+    // Read until CRLFCRLF, EOF, buffer full, or timeout: enough to
+    // consume a scraper's GET line + headers without trusting it.
+    loop {
+        match stream.read(&mut head[read..]) {
+            Ok(0) => break,
+            Ok(n) => {
+                read += n;
+                if head[..read].windows(4).any(|w| w == b"\r\n\r\n") || read == head.len() {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    let body = metrics.render_prometheus();
+    let resp = format!(
+        "HTTP/1.1 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{}",
+        body.len(),
+        body
+    );
+    stream.write_all(resp.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bind_serve_scrape_shutdown() {
+        let metrics = Arc::new(Metrics::new());
+        metrics.queries_admitted.add(42);
+        metrics.solve_ms.record(1.5);
+        let ep = MetricsEndpoint::bind("127.0.0.1:0", metrics).expect("bind ephemeral port");
+        let addr = ep.addr();
+
+        let mut stream = TcpStream::connect(addr).expect("connect");
+        stream
+            .write_all(b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n")
+            .unwrap();
+        let mut resp = String::new();
+        stream.read_to_string(&mut resp).expect("read response");
+        assert!(resp.starts_with("HTTP/1.1 200 OK"), "got: {resp}");
+        assert!(resp.contains("text/plain; version=0.0.4"));
+        assert!(resp.contains("robus_queries_admitted_total 42"));
+        assert!(resp.contains("robus_solve_ms_count 1"));
+        drop(ep); // joins the accept thread
+
+        // After shutdown the port stops answering (connect may still
+        // succeed briefly on some stacks; a second bind must work).
+        let rebind = TcpListener::bind(addr);
+        assert!(rebind.is_ok(), "address not released after drop");
+    }
+
+    #[test]
+    fn unbindable_address_errors_at_bind() {
+        let metrics = Arc::new(Metrics::new());
+        assert!(MetricsEndpoint::bind("256.0.0.1:80", metrics.clone()).is_err());
+        assert!(MetricsEndpoint::bind("not-an-addr", metrics).is_err());
+    }
+}

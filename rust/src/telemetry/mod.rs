@@ -1,0 +1,370 @@
+//! Zero-overhead observability for the serving stack (DESIGN.md §2h).
+//!
+//! Four pieces, all dependency-free:
+//! - [`registry`] — lock-free atomic counters/gauges and fixed-bucket
+//!   log-scale histograms; hot-path `record` is alloc-free and
+//!   wait-free.
+//! - [`trace`] — per-batch span records and discrete events as JSONL
+//!   through a bounded writer thread that drops-and-counts under
+//!   backpressure (`--trace-out FILE`).
+//! - [`endpoint`] — a live Prometheus text-exposition `/metrics`
+//!   server on `std::net::TcpListener` (`--metrics-addr HOST:PORT`).
+//! - [`snapshot`] — clock-generic periodic counter snapshots so
+//!   SimClock tests drive the full path deterministically.
+//!
+//! The [`Telemetry`] facade bundles them behind one `&Telemetry`
+//! threaded through every driver. The hard invariant, pinned by
+//! `rust/tests/telemetry_observer.rs`: telemetry is a **pure
+//! observer** — it consumes no randomness, takes no locks on the batch
+//! path, and never changes control flow, so a SimClock replay is
+//! bit-identical with telemetry on versus off at any shard/worker
+//! count.
+
+pub mod endpoint;
+pub mod registry;
+pub mod snapshot;
+pub mod trace;
+
+use std::io::Write;
+use std::net::SocketAddr;
+use std::sync::Arc;
+
+pub use endpoint::MetricsEndpoint;
+pub use registry::{Counter, Gauge, Histogram, LocalHistogram, Metrics};
+pub use snapshot::SnapshotTimer;
+pub use trace::{spawn_writer, EventKind, SpanRecord, TraceSink, TraceWriter};
+pub use trace::DEFAULT_TRACE_CAPACITY;
+
+/// The per-run observability handle. `Telemetry::off()` is free —
+/// counters still count (they're a handful of relaxed atomics) but no
+/// trace writer, endpoint, or snapshot timer exists. All drivers take
+/// `&Telemetry`; it is `Sync`, so scoped shard threads share it
+/// directly.
+pub struct Telemetry {
+    metrics: Arc<Metrics>,
+    sink: Option<TraceSink>,
+    writer: Option<TraceWriter>,
+    endpoint: Option<MetricsEndpoint>,
+    snap: SnapshotTimer,
+}
+
+impl Default for Telemetry {
+    fn default() -> Telemetry {
+        Telemetry::off()
+    }
+}
+
+impl Telemetry {
+    /// No tracing, no endpoint, no snapshots — just the registry.
+    pub fn off() -> Telemetry {
+        Telemetry {
+            metrics: Arc::new(Metrics::new()),
+            sink: None,
+            writer: None,
+            endpoint: None,
+            snap: SnapshotTimer::new(0.0),
+        }
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    pub fn metrics_arc(&self) -> Arc<Metrics> {
+        self.metrics.clone()
+    }
+
+    /// Whether a trace sink is attached (spans/events leave the
+    /// process).
+    pub fn tracing(&self) -> bool {
+        self.sink.is_some()
+    }
+
+    /// Attach a JSONL trace writer over an arbitrary sink (tests use
+    /// in-memory buffers; `io::sink()` gives a full-path no-op).
+    pub fn trace_to(&mut self, out: Box<dyn Write + Send>, capacity: usize) {
+        let (sink, writer) = spawn_writer(out, capacity, self.metrics.clone());
+        self.sink = Some(sink);
+        self.writer = Some(writer);
+    }
+
+    /// Attach a trace writer over `path`. Creating the file here —
+    /// before any run starts — is the flag-hygiene contract: an
+    /// unwritable `--trace-out` is a startup error.
+    pub fn trace_to_file(&mut self, path: &str) -> std::io::Result<()> {
+        let file = std::fs::File::create(path)?;
+        self.trace_to(
+            Box::new(std::io::BufWriter::new(file)),
+            DEFAULT_TRACE_CAPACITY,
+        );
+        Ok(())
+    }
+
+    /// Bind the live `/metrics` endpoint. Errors (unbindable address,
+    /// bad syntax) surface here, at startup.
+    pub fn serve_metrics(&mut self, addr: &str) -> std::io::Result<SocketAddr> {
+        let ep = MetricsEndpoint::bind(addr, self.metrics.clone())?;
+        let bound = ep.addr();
+        self.endpoint = Some(ep);
+        Ok(bound)
+    }
+
+    /// Emit a counter snapshot into the trace every `secs` of *run*
+    /// clock (SimClock or real).
+    pub fn snapshot_every(&mut self, secs: f64) {
+        self.snap = SnapshotTimer::new(secs);
+    }
+
+    /// Run-shape header, first line of a trace.
+    pub fn meta(&self, driver: &'static str, n_tenants: usize, n_shards: usize, max_boost: f64) {
+        if let Some(sink) = &self.sink {
+            sink.meta(driver, n_tenants, n_shards, max_boost);
+        }
+    }
+
+    /// Record one batch step's phase breakdown: registry histograms +
+    /// counters always, trace span when a sink is attached.
+    pub fn span(&self, s: &SpanRecord) {
+        let m = &self.metrics;
+        m.batch_spans.inc();
+        m.queries_completed.add(s.n_queries as u64);
+        m.solve_ms.record(s.solve_ms);
+        m.batch_queries.record(s.n_queries as f64);
+        match s.solve_kind {
+            "warm" => m.solves_warm.inc(),
+            "cold" => m.solves_cold.inc(),
+            _ => {}
+        }
+        if let Some(sink) = &self.sink {
+            sink.span(s);
+        }
+    }
+
+    /// Record a discrete event: bumps the matching counter, emits a
+    /// trace event when a sink is attached. Use `-1` for
+    /// not-applicable `shard`/`tenant`/`batch`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn event(
+        &self,
+        t: f64,
+        kind: EventKind,
+        shard: i64,
+        tenant: i64,
+        value: f64,
+        reason: &'static str,
+        batch: i64,
+    ) {
+        let m = &self.metrics;
+        match kind {
+            EventKind::AdmissionDrop => m.queries_rejected.inc(),
+            EventKind::Requeue => m.queries_requeued.inc(),
+            EventKind::MembershipAdd => m.membership_adds.inc(),
+            EventKind::MembershipRemove => m.membership_removes.inc(),
+            EventKind::MembershipKill => m.membership_kills.inc(),
+            EventKind::RouterEpoch => m.router_epochs.inc(),
+            EventKind::MultiplierClamp => m.multiplier_clamps.inc(),
+            EventKind::WarmInvalidation => m.warm_invalidations.inc(),
+        }
+        if let Some(sink) = &self.sink {
+            sink.event(t, kind, shard, tenant, value, reason, batch);
+        }
+    }
+
+    /// Record one query's admission wait (milliseconds).
+    pub fn admit_wait(&self, wait_ms: f64) {
+        self.metrics.admit_wait_ms.record(wait_ms);
+    }
+
+    /// Periodic heartbeat from a driver loop: emits a counter snapshot
+    /// into the trace when one is due on the run's clock.
+    pub fn tick(&self, now: f64) {
+        if self.snap.due(now) {
+            if let Some(sink) = &self.sink {
+                sink.snapshot(now, &self.metrics);
+            }
+        }
+    }
+
+    /// A cheap clone-able handle for admission queues (and their
+    /// producer threads): counts admits/rejects/requeues and emits
+    /// drop/requeue events without the queue knowing about `Telemetry`.
+    pub fn queue_probe(&self, shard: i64) -> QueueProbe {
+        QueueProbe {
+            metrics: self.metrics.clone(),
+            sink: self.sink.clone(),
+            shard,
+        }
+    }
+
+    /// Flush and tear down: writes the `final` conservation record,
+    /// drops the sink (closing the channel), joins the writer thread,
+    /// and stops the endpoint. Called automatically on drop; callable
+    /// early to flush before reading the trace file. Must run after
+    /// every [`QueueProbe`] from this telemetry has been dropped, or
+    /// the writer join waits on their open channel handles — drivers
+    /// satisfy this by construction (queues die when the run returns).
+    pub fn shutdown(&mut self) {
+        if let Some(sink) = self.sink.take() {
+            sink.final_record(&self.metrics);
+        }
+        self.writer.take();
+        self.endpoint.take();
+    }
+}
+
+impl Drop for Telemetry {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Admission-side probe handed to `AdmissionQueue`s; see
+/// [`Telemetry::queue_probe`].
+#[derive(Clone, Debug)]
+pub struct QueueProbe {
+    metrics: Arc<Metrics>,
+    sink: Option<TraceSink>,
+    shard: i64,
+}
+
+impl QueueProbe {
+    /// A probe wired to nothing — the default inside queues built
+    /// without telemetry.
+    pub fn disconnected() -> QueueProbe {
+        QueueProbe {
+            metrics: Arc::new(Metrics::new()),
+            sink: None,
+            shard: -1,
+        }
+    }
+
+    pub fn admitted(&self) {
+        self.metrics.queries_admitted.inc();
+    }
+
+    pub fn rejected(&self, tenant: usize, arrival: f64) {
+        self.metrics.queries_rejected.inc();
+        if let Some(sink) = &self.sink {
+            sink.event(
+                arrival,
+                EventKind::AdmissionDrop,
+                self.shard,
+                tenant as i64,
+                0.0,
+                "queue_full",
+                -1,
+            );
+        }
+    }
+
+    pub fn requeued(&self, tenant: usize, arrival: f64) {
+        self.metrics.queries_requeued.inc();
+        if let Some(sink) = &self.sink {
+            sink.event(
+                arrival,
+                EventKind::Requeue,
+                self.shard,
+                tenant as i64,
+                0.0,
+                "drain_rehome",
+                -1,
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+    impl Write for SharedBuf {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn off_telemetry_records_metrics_only() {
+        let tel = Telemetry::off();
+        assert!(!tel.tracing());
+        tel.span(&SpanRecord {
+            t: 0.25,
+            batch: 0,
+            shard: -1,
+            slot: -1,
+            n_queries: 7,
+            drain_ms: 0.0,
+            boost_ms: 0.0,
+            solve_ms: 2.0,
+            sample_ms: 0.0,
+            transition_ms: 0.0,
+            execute_ms: 0.5,
+            solve_kind: "cold",
+        });
+        tel.event(0.3, EventKind::RouterEpoch, -1, -1, 1.0, "sync", 0);
+        assert_eq!(tel.metrics().batch_spans.get(), 1);
+        assert_eq!(tel.metrics().queries_completed.get(), 7);
+        assert_eq!(tel.metrics().solves_cold.get(), 1);
+        assert_eq!(tel.metrics().router_epochs.get(), 1);
+        assert_eq!(tel.metrics().trace_emitted.get(), 0);
+    }
+
+    #[test]
+    fn facade_trace_lifecycle_writes_final_record() {
+        let buf = Arc::new(Mutex::new(Vec::new()));
+        let mut tel = Telemetry::off();
+        tel.trace_to(Box::new(SharedBuf(buf.clone())), 128);
+        tel.snapshot_every(1.0);
+        tel.meta("run", 2, 1, 4.0);
+        let probe = tel.queue_probe(0);
+        probe.admitted();
+        probe.rejected(1, 0.5);
+        probe.requeued(0, 0.75);
+        tel.tick(0.0); // first snapshot due immediately
+        tel.tick(0.5); // not due
+        drop(probe); // release the probe's sink clone before shutdown
+        tel.shutdown();
+
+        let text = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(lines[0].contains("\"type\":\"meta\""));
+        assert_eq!(
+            lines.iter().filter(|l| l.contains("\"type\":\"snapshot\"")).count(),
+            1
+        );
+        let last = lines.last().unwrap();
+        assert!(last.contains("\"type\":\"final\""), "got: {last}");
+        assert!(last.contains("\"admitted\":1"));
+        assert!(last.contains("\"rejected\":1"));
+        assert!(last.contains("\"requeued\":1"));
+        assert_eq!(tel.metrics().queries_admitted.get(), 1);
+        // Shutdown is idempotent.
+        tel.shutdown();
+    }
+
+    #[test]
+    fn snapshot_timer_rides_sim_clock_times() {
+        let buf = Arc::new(Mutex::new(Vec::new()));
+        let mut tel = Telemetry::off();
+        tel.trace_to(Box::new(SharedBuf(buf.clone())), 128);
+        tel.snapshot_every(0.5);
+        for i in 0..8 {
+            tel.tick(i as f64 * 0.25); // 0.0, 0.25, ..., 1.75
+        }
+        tel.shutdown();
+        let text = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
+        let snaps = text
+            .lines()
+            .filter(|l| l.contains("\"type\":\"snapshot\""))
+            .count();
+        assert_eq!(snaps, 4, "0.0, 0.5, 1.0, 1.5 due under a 0.5s period");
+    }
+}

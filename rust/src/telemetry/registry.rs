@@ -1,0 +1,449 @@
+//! The lock-free metrics registry: atomic [`Counter`]s and [`Gauge`]s
+//! plus fixed-bucket log-scale [`Histogram`]s whose buckets are
+//! pre-allocated at construction, so every hot-path `record` call is
+//! **alloc-free and wait-free** (a `partition_point` over 256 cached
+//! bounds and three `Relaxed` `fetch_add`s). This is what lets the
+//! telemetry layer ride inside the zero-alloc steady-state batch loops
+//! (DESIGN.md §2g) without becoming a participant in them.
+//!
+//! Histograms use a geometric bucket ladder: 256 buckets growing by
+//! 2^(1/8) ≈ 1.09× per bucket from an upper bound of 10⁻³ on the first,
+//! covering ~10⁻³ … 3.6×10⁶ with ≤9% relative quantile error — wide
+//! enough for millisecond latencies (up to ~an hour) and batch sizes on
+//! one shared layout. [`LocalHistogram`] is the single-threaded,
+//! mergeable twin used by streaming run summaries
+//! (`coordinator::loop_::ExecSummary`), sharing the bucket math so
+//! quantiles agree between the live registry and end-of-run reports.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Geometric buckets per histogram.
+pub const N_BUCKETS: usize = 256;
+/// Upper bound of the first bucket.
+const LO: f64 = 1e-3;
+/// log₂ of the per-bucket growth ratio (2^(1/8) ≈ 1.0905).
+const STEP_LOG2: f64 = 0.125;
+
+/// Upper bounds of buckets `0..N_BUCKETS`; the last is a catch-all
+/// (rendered as `+Inf` in the Prometheus exposition).
+fn bucket_bounds() -> Box<[f64]> {
+    (0..N_BUCKETS)
+        .map(|i| LO * (i as f64 * STEP_LOG2).exp2())
+        .collect()
+}
+
+/// Bucket index for `v`: bucket `i` covers `(bounds[i-1], bounds[i]]`,
+/// bucket 0 everything `<= bounds[0]`, the last bucket everything else.
+fn bucket_index(bounds: &[f64], v: f64) -> usize {
+    let v = if v.is_finite() && v > 0.0 { v } else { 0.0 };
+    bounds.partition_point(|&b| b < v).min(N_BUCKETS - 1)
+}
+
+/// Point estimate for a value inside bucket `i`: the geometric midpoint
+/// of the bucket (`upper / 2^(1/16)`), biased at most one ratio step
+/// from any sample the bucket absorbed.
+fn bucket_estimate(bounds: &[f64], i: usize) -> f64 {
+    bounds[i] * (-STEP_LOG2 / 2.0).exp2()
+}
+
+/// Rank-walk quantile over a bucket snapshot (`q` in percent).
+fn quantile_over(bounds: &[f64], buckets: &[u64], count: u64, q: f64) -> f64 {
+    if count == 0 {
+        return 0.0;
+    }
+    let target = ((q / 100.0).clamp(0.0, 1.0) * (count - 1) as f64).round() as u64;
+    let mut cum = 0u64;
+    for (i, &b) in buckets.iter().enumerate() {
+        cum += b;
+        if cum > target {
+            return bucket_estimate(bounds, i);
+        }
+    }
+    bucket_estimate(bounds, N_BUCKETS - 1)
+}
+
+/// A monotone event counter. All operations are `Relaxed` atomics: the
+/// registry observes, it never synchronizes.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Self {
+        Self(AtomicU64::new(0))
+    }
+
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-writer-wins instantaneous value (queue depth, live shards).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub const fn new() -> Self {
+        Self(AtomicU64::new(0))
+    }
+
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A thread-safe fixed-bucket log-scale histogram. `record` is
+/// wait-free and alloc-free; `quantile` and the Prometheus rendering
+/// take a racy-but-consistent-enough snapshot (each bucket is loaded
+/// once, `Relaxed` — fine for observability, never for control flow).
+#[derive(Debug)]
+pub struct Histogram {
+    bounds: Box<[f64]>,
+    buckets: Box<[AtomicU64]>,
+    count: AtomicU64,
+    /// Sum in micro-units (`v * 1e6` truncated): an integer so it can
+    /// be a single wait-free `fetch_add` instead of a CAS loop on bits.
+    sum_micro: AtomicU64,
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self {
+            bounds: bucket_bounds(),
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_micro: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, v: f64) {
+        let i = bucket_index(&self.bounds, v);
+        self.buckets[i].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let v = if v.is_finite() && v > 0.0 { v } else { 0.0 };
+        self.sum_micro.fetch_add((v * 1e6) as u64, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum_micro.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    /// Estimated `q`-th percentile (≤ one bucket-ratio of relative
+    /// error vs the exact sample percentile; see the property test in
+    /// `rust/tests/telemetry_observer.rs`).
+    pub fn quantile(&self, q: f64) -> f64 {
+        let buckets: Vec<u64> = self
+            .buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect();
+        let count: u64 = buckets.iter().sum();
+        quantile_over(&self.bounds, &buckets, count, q)
+    }
+
+    /// Append this histogram in Prometheus text exposition (cumulative
+    /// `le` series over the non-empty buckets, then `+Inf`/sum/count).
+    fn render_into(&self, name: &str, out: &mut String) {
+        use std::fmt::Write as _;
+        let _ = writeln!(out, "# TYPE {name} histogram");
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            let n = b.load(Ordering::Relaxed);
+            if n == 0 {
+                continue;
+            }
+            cum += n;
+            if i + 1 < N_BUCKETS {
+                let _ = writeln!(out, "{name}_bucket{{le=\"{}\"}} {cum}", self.bounds[i]);
+            }
+        }
+        let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {cum}");
+        let _ = writeln!(out, "{name}_sum {}", self.sum());
+        let _ = writeln!(out, "{name}_count {cum}");
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The single-threaded, mergeable twin of [`Histogram`]: same bucket
+/// ladder, plain `u64` buckets, `Clone`. This is what streaming run
+/// summaries carry so long `robus serve` runs stop retaining every raw
+/// per-batch solve sample just to print two end-of-run percentiles.
+#[derive(Debug, Clone)]
+pub struct LocalHistogram {
+    bounds: Box<[f64]>,
+    buckets: Box<[u64]>,
+    count: u64,
+    sum: f64,
+}
+
+impl LocalHistogram {
+    pub fn new() -> Self {
+        Self {
+            bounds: bucket_bounds(),
+            buckets: vec![0u64; N_BUCKETS].into_boxed_slice(),
+            count: 0,
+            sum: 0.0,
+        }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        let i = bucket_index(&self.bounds, v);
+        self.buckets[i] += 1;
+        self.count += 1;
+        if v.is_finite() && v > 0.0 {
+            self.sum += v;
+        }
+    }
+
+    /// Fold `other` into `self` (the federation's shard-summary merge).
+    pub fn merge(&mut self, other: &LocalHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += *b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn quantile(&self, q: f64) -> f64 {
+        quantile_over(&self.bounds, &self.buckets, self.count, q)
+    }
+}
+
+impl Default for LocalHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The process-wide registry: every named series the serving stack
+/// records and the `/metrics` endpoint exposes. One flat struct of
+/// atomics — registration is the field list, lookup is field access,
+/// and there is nothing to lock, ever.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// Per-(shard,)batch step spans recorded (one per `SpanRecord`).
+    pub batch_spans: Counter,
+    pub queries_admitted: Counter,
+    pub queries_rejected: Counter,
+    pub queries_completed: Counter,
+    /// Already-admitted queries re-homed by a drain (never re-counted
+    /// as admissions).
+    pub queries_requeued: Counter,
+    pub solves_cold: Counter,
+    pub solves_warm: Counter,
+    pub membership_adds: Counter,
+    pub membership_removes: Counter,
+    pub membership_kills: Counter,
+    /// Router epochs published (RCU pointer swaps in `ServeRouter`).
+    pub router_epochs: Counter,
+    /// Per-tenant accountant multipliers that hit the `max_boost` clamp.
+    pub multiplier_clamps: Counter,
+    pub warm_invalidations: Counter,
+    /// Trace records accepted by the bounded writer channel…
+    pub trace_emitted: Counter,
+    /// …and records dropped because it was full (never blocks a loop).
+    pub trace_dropped: Counter,
+    /// Backlog across admission queues at the last cut.
+    pub queue_depth: Gauge,
+    pub live_shards: Gauge,
+    pub solve_ms: Histogram,
+    pub admit_wait_ms: Histogram,
+    /// Queries per batch cut (distribution of batch sizes).
+    pub batch_queries: Histogram,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn counters(&self) -> [(&'static str, &Counter); 15] {
+        [
+            ("robus_batch_spans_total", &self.batch_spans),
+            ("robus_queries_admitted_total", &self.queries_admitted),
+            ("robus_queries_rejected_total", &self.queries_rejected),
+            ("robus_queries_completed_total", &self.queries_completed),
+            ("robus_queries_requeued_total", &self.queries_requeued),
+            ("robus_solves_cold_total", &self.solves_cold),
+            ("robus_solves_warm_total", &self.solves_warm),
+            ("robus_membership_adds_total", &self.membership_adds),
+            ("robus_membership_removes_total", &self.membership_removes),
+            ("robus_membership_kills_total", &self.membership_kills),
+            ("robus_router_epochs_total", &self.router_epochs),
+            ("robus_multiplier_clamps_total", &self.multiplier_clamps),
+            ("robus_warm_invalidations_total", &self.warm_invalidations),
+            ("robus_trace_emitted_total", &self.trace_emitted),
+            ("robus_trace_dropped_total", &self.trace_dropped),
+        ]
+    }
+
+    fn gauges(&self) -> [(&'static str, &Gauge); 2] {
+        [
+            ("robus_queue_depth", &self.queue_depth),
+            ("robus_live_shards", &self.live_shards),
+        ]
+    }
+
+    fn histograms(&self) -> [(&'static str, &Histogram); 3] {
+        [
+            ("robus_solve_ms", &self.solve_ms),
+            ("robus_admit_wait_ms", &self.admit_wait_ms),
+            ("robus_batch_queries", &self.batch_queries),
+        ]
+    }
+
+    /// Prometheus text exposition (format 0.0.4) of every series.
+    pub fn render_prometheus(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::with_capacity(4096);
+        for (name, c) in self.counters() {
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name} {}", c.get());
+        }
+        for (name, g) in self.gauges() {
+            let _ = writeln!(out, "# TYPE {name} gauge");
+            let _ = writeln!(out, "{name} {}", g.get());
+        }
+        for (name, h) in self.histograms() {
+            h.render_into(name, &mut out);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_roundtrip() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::new();
+        g.set(17);
+        assert_eq!(g.get(), 17);
+        g.set(3);
+        assert_eq!(g.get(), 3);
+    }
+
+    #[test]
+    fn bucket_index_bounds() {
+        let bounds = bucket_bounds();
+        assert_eq!(bucket_index(&bounds, 0.0), 0);
+        assert_eq!(bucket_index(&bounds, -5.0), 0);
+        assert_eq!(bucket_index(&bounds, f64::NAN), 0);
+        assert_eq!(bucket_index(&bounds, LO), 0);
+        assert_eq!(bucket_index(&bounds, LO * 1.01), 1);
+        // Everything past the ladder lands in the catch-all.
+        assert_eq!(bucket_index(&bounds, 1e12), N_BUCKETS - 1);
+        // Bounds are strictly increasing (partition_point's contract).
+        assert!(bounds.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn histogram_quantiles_track_recorded_values() {
+        let h = Histogram::new();
+        for _ in 0..90 {
+            h.record(10.0);
+        }
+        for _ in 0..10 {
+            h.record(1000.0);
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.sum() - 10.0 * 90.0 - 1000.0 * 10.0).abs() < 1e-3);
+        let ratio = (STEP_LOG2).exp2();
+        let p50 = h.quantile(50.0);
+        assert!(p50 >= 10.0 / ratio && p50 <= 10.0 * ratio, "p50={p50}");
+        let p99 = h.quantile(99.0);
+        assert!(p99 >= 1000.0 / ratio && p99 <= 1000.0 * ratio, "p99={p99}");
+        // Empty histogram: a defined zero, not NaN.
+        assert_eq!(Histogram::new().quantile(50.0), 0.0);
+    }
+
+    #[test]
+    fn local_histogram_merges() {
+        let mut a = LocalHistogram::new();
+        let mut b = LocalHistogram::new();
+        for _ in 0..50 {
+            a.record(1.0);
+            b.record(100.0);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 100);
+        assert!((a.sum() - 50.0 - 5000.0).abs() < 1e-9);
+        let ratio = (STEP_LOG2).exp2();
+        let p25 = a.quantile(25.0);
+        assert!(p25 >= 1.0 / ratio && p25 <= 1.0 * ratio, "p25={p25}");
+        let p75 = a.quantile(75.0);
+        assert!(p75 >= 100.0 / ratio && p75 <= 100.0 * ratio, "p75={p75}");
+    }
+
+    #[test]
+    fn atomic_and_local_quantiles_agree() {
+        let h = Histogram::new();
+        let mut l = LocalHistogram::new();
+        let mut x = 0.37f64;
+        for _ in 0..500 {
+            // Deterministic pseudo-values spread over several decades.
+            x = (x * 97.0) % 1000.0 + 0.01;
+            h.record(x);
+            l.record(x);
+        }
+        for q in [0.0, 10.0, 50.0, 90.0, 99.0, 100.0] {
+            assert_eq!(h.quantile(q), l.quantile(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        let m = Metrics::new();
+        m.queries_admitted.add(7);
+        m.queue_depth.set(3);
+        m.solve_ms.record(5.0);
+        m.solve_ms.record(50.0);
+        let text = m.render_prometheus();
+        assert!(text.contains("# TYPE robus_queries_admitted_total counter"));
+        assert!(text.contains("robus_queries_admitted_total 7"));
+        assert!(text.contains("robus_queue_depth 3"));
+        assert!(text.contains("# TYPE robus_solve_ms histogram"));
+        assert!(text.contains("robus_solve_ms_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("robus_solve_ms_count 2"));
+        // Cumulative le-series is monotone non-decreasing.
+        let mut last = 0u64;
+        for line in text.lines().filter(|l| l.starts_with("robus_solve_ms_bucket")) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= last, "non-monotone cumulative buckets: {text}");
+            last = v;
+        }
+    }
+}

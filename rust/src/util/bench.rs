@@ -94,6 +94,13 @@ impl BenchResult {
         stats::percentile(&self.samples_ns, 95.0)
     }
 
+    /// Both report percentiles from one sort (see
+    /// `stats::percentiles_of`): (p50, p95).
+    fn report_percentiles(&self) -> (f64, f64) {
+        let ps = stats::percentiles_of(&self.samples_ns, &[50.0, 95.0]);
+        (ps[0], ps[1])
+    }
+
     pub fn min_ns(&self) -> f64 {
         self.samples_ns
             .iter()
@@ -107,12 +114,13 @@ impl BenchResult {
 
     /// One human-readable report line.
     pub fn report_line(&self) -> String {
+        let (p50, p95) = self.report_percentiles();
         format!(
             "{:<44} {:>12}/iter  p50 {:>12}  p95 {:>12}  ({:.1} iters/s)",
             self.name,
             fmt_ns(self.mean_ns()),
-            fmt_ns(self.p50_ns()),
-            fmt_ns(self.p95_ns()),
+            fmt_ns(p50),
+            fmt_ns(p95),
             self.throughput_per_sec(),
         )
     }
@@ -192,11 +200,12 @@ impl BenchSuite {
             self.results
                 .iter()
                 .map(|r| {
+                    let (p50, p95) = r.report_percentiles();
                     Json::from_pairs(vec![
                         ("name", Json::String(r.name.clone())),
                         ("mean_ns_per_iter", Json::Number(r.mean_ns())),
-                        ("p50_ns_per_iter", Json::Number(r.p50_ns())),
-                        ("p95_ns_per_iter", Json::Number(r.p95_ns())),
+                        ("p50_ns_per_iter", Json::Number(p50)),
+                        ("p95_ns_per_iter", Json::Number(p95)),
                         ("min_ns_per_iter", Json::Number(r.min_ns())),
                         ("iters_per_sample", Json::Number(r.iters_per_sample as f64)),
                         ("iters_per_sec", Json::Number(r.throughput_per_sec())),
@@ -225,12 +234,13 @@ impl BenchSuite {
         out.push_str("| benchmark | mean/iter | p50 | p95 | iters/s |\n");
         out.push_str("|---|---|---|---|---|\n");
         for r in &self.results {
+            let (p50, p95) = r.report_percentiles();
             out.push_str(&format!(
                 "| {} | {} | {} | {} | {:.1} |\n",
                 r.name,
                 fmt_ns(r.mean_ns()),
-                fmt_ns(r.p50_ns()),
-                fmt_ns(r.p95_ns()),
+                fmt_ns(p50),
+                fmt_ns(p95),
                 r.throughput_per_sec()
             ));
         }

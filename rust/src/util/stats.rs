@@ -42,6 +42,31 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     }
 }
 
+/// Several percentiles over one sorted copy of the data. Report paths
+/// always want a p50/p99 (or p50/p95) pair; calling [`percentile`]
+/// twice copies and sorts the same vector twice. Returns one value per
+/// requested `p`, same interpolation rule as [`percentile`].
+pub fn percentiles_of(xs: &[f64], ps: &[f64]) -> Vec<f64> {
+    if xs.is_empty() {
+        return vec![0.0; ps.len()];
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by_key(|&x| crate::util::ordf64::OrdF64(x));
+    ps.iter()
+        .map(|&p| {
+            let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+            let lo = rank.floor() as usize;
+            let hi = rank.ceil() as usize;
+            if lo == hi {
+                sorted[lo]
+            } else {
+                let frac = rank - lo as f64;
+                sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+            }
+        })
+        .collect()
+}
+
 /// Jain's fairness index over per-tenant values:
 /// J(x) = (Σ x_i)² / (n · Σ x_i²). Equals 1.0 when all values are equal,
 /// approaches 1/n when one tenant dominates. Values are the tenants'
@@ -208,6 +233,19 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn percentiles_of_matches_percentile() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0, 9.5, -1.25, 3.0];
+        let ps = [0.0, 12.5, 50.0, 95.0, 99.0, 100.0];
+        let batch = percentiles_of(&xs, &ps);
+        assert_eq!(batch.len(), ps.len());
+        for (i, &p) in ps.iter().enumerate() {
+            assert_eq!(batch[i], percentile(&xs, p), "p={p}");
+        }
+        assert_eq!(percentiles_of(&[], &ps), vec![0.0; ps.len()]);
+        assert_eq!(percentiles_of(&xs, &[]), Vec::<f64>::new());
     }
 
     #[test]

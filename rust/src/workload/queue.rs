@@ -12,6 +12,7 @@ use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 
 use crate::domain::query::Query;
+use crate::telemetry::QueueProbe;
 
 /// What to do with an arrival when a tenant's queue is full.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -57,14 +58,25 @@ pub struct AdmissionQueue {
     capacity: usize,
     state: Mutex<QueueState>,
     space: Condvar,
+    /// Telemetry probe: admit/reject/requeue counters and drop/requeue
+    /// trace events. Disconnected by default; probe calls are lock-free
+    /// and happen after the queue lock is released.
+    probe: QueueProbe,
 }
 
 impl AdmissionQueue {
     pub fn new(capacity: usize) -> Self {
+        Self::with_probe(capacity, QueueProbe::disconnected())
+    }
+
+    /// [`AdmissionQueue::new`] with a telemetry probe (see
+    /// [`crate::telemetry::Telemetry::queue_probe`]).
+    pub fn with_probe(capacity: usize, probe: QueueProbe) -> Self {
         Self {
             capacity: capacity.max(1),
             state: Mutex::new(QueueState::default()),
             space: Condvar::new(),
+            probe,
         }
     }
 
@@ -75,6 +87,8 @@ impl AdmissionQueue {
     /// Offer an arrival under `policy`. Returns true iff admitted.
     /// Closed queues reject everything (and wake blocked producers).
     pub fn offer(&self, query: Query, policy: AdmissionPolicy) -> bool {
+        let tenant = query.tenant.0;
+        let arrival = query.arrival;
         let mut st = self.state.lock().unwrap();
         if policy == AdmissionPolicy::Block {
             while st.items.len() >= self.capacity && !st.closed {
@@ -83,11 +97,15 @@ impl AdmissionQueue {
         }
         if st.closed || st.items.len() >= self.capacity {
             st.rejected += 1;
+            drop(st);
+            self.probe.rejected(tenant, arrival);
             return false;
         }
         st.items.push_back(query);
         st.admitted += 1;
         st.peak_depth = st.peak_depth.max(st.items.len());
+        drop(st);
+        self.probe.admitted();
         true
     }
 
@@ -100,9 +118,13 @@ impl AdmissionQueue {
     /// backlog rather than drop admitted work. Works on closed queues
     /// too (re-homes during the shutdown drain tail still conserve).
     pub fn requeue(&self, query: Query) {
+        let tenant = query.tenant.0;
+        let arrival = query.arrival;
         let mut st = self.state.lock().unwrap();
         st.items.push_back(query);
         st.peak_depth = st.peak_depth.max(st.items.len());
+        drop(st);
+        self.probe.requeued(tenant, arrival);
     }
 
     /// Remove everything currently queued (the batch cut). Frees space,

@@ -292,6 +292,7 @@ fn starved_tenant_spread_is_infinite() {
         n_tenants: 3,
         weights: vec![1.0; 3],
         host_wall_secs: 0.01,
+        summary: robus::coordinator::loop_::ExecSummary::default(),
     };
     let baseline = run_of(vec![
         outcome(1, 0, 10.0),

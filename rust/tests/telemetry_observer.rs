@@ -1,0 +1,217 @@
+//! The telemetry contract (ISSUE 8): telemetry is a **pure observer**.
+//! A SimClock replay with a full telemetry stack attached (trace sink,
+//! snapshots, registry) is bit-identical — outcome by outcome, batch by
+//! batch — to the same replay with telemetry off, for every driver:
+//! serial, pipelined, and an 8-shard federated serve with membership,
+//! replication, and rebalancing all live.
+//!
+//! Also here: the histogram-quantile accuracy property (registry
+//! estimates vs `util::stats::percentile` exact answers). The trace
+//! writer's drop-and-count backpressure contract is unit-tested next to
+//! the writer itself (`src/telemetry/trace.rs`).
+
+use robus::alloc::PolicyKind;
+use robus::cluster::{
+    serve_federated_sim, serve_federated_sim_with, AutoMembership, ServeFederationConfig,
+};
+use robus::coordinator::loop_::{Coordinator, CoordinatorConfig, RunResult};
+use robus::coordinator::service::AdmissionPolicy;
+use robus::coordinator::ServeConfig;
+use robus::domain::tenant::TenantSet;
+use robus::sim::{ClusterConfig, SimEngine};
+use robus::telemetry::{Histogram, Telemetry};
+use robus::util::rng::Pcg64;
+use robus::util::stats;
+use robus::workload::generator::WorkloadGenerator;
+use robus::workload::spec::{AccessSpec, TenantSpec};
+use robus::workload::Universe;
+
+/// A telemetry stack with every path live but no file/socket: JSONL
+/// trace into `io::sink()`, snapshots on the run clock, registry
+/// always-on.
+fn full_telemetry() -> Telemetry {
+    let mut tel = Telemetry::off();
+    tel.trace_to(Box::new(std::io::sink()), 256);
+    tel.snapshot_every(10.0);
+    tel
+}
+
+fn specs(n: usize) -> Vec<TenantSpec> {
+    (0..n)
+        .map(|i| TenantSpec::new(AccessSpec::g(1 + i % 4), 20.0))
+        .collect()
+}
+
+fn replay(pipelined: bool, tel: &Telemetry) -> RunResult {
+    let universe = Universe::sales_only();
+    let engine = SimEngine::new(ClusterConfig::default());
+    let cfg = CoordinatorConfig {
+        batch_secs: 40.0,
+        n_batches: 8,
+        stateful_gamma: Some(2.0),
+        seed: 42,
+        warm_start: true,
+    };
+    let coordinator = Coordinator::new(&universe, TenantSet::equal(4), engine, cfg);
+    let mut gen = WorkloadGenerator::new(specs(4), &universe, 42);
+    let policy = PolicyKind::FastPf.build();
+    if pipelined {
+        coordinator.run_pipelined_with(&mut gen, policy.as_ref(), 2, tel)
+    } else {
+        coordinator.run_with(&mut gen, policy.as_ref(), tel)
+    }
+}
+
+/// Every simulated quantity of two runs must match exactly (bitwise on
+/// the floats — no tolerance).
+fn assert_bit_identical(off: &RunResult, on: &RunResult) {
+    assert!(!off.outcomes.is_empty(), "degenerate run proves nothing");
+    assert_eq!(off.outcomes.len(), on.outcomes.len());
+    for (a, b) in off.outcomes.iter().zip(&on.outcomes) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.tenant, b.tenant);
+        assert_eq!(a.arrival, b.arrival);
+        assert_eq!(a.start, b.start);
+        assert_eq!(a.finish, b.finish);
+        assert_eq!(a.from_cache, b.from_cache);
+    }
+    assert_eq!(off.batches.len(), on.batches.len());
+    for (a, b) in off.batches.iter().zip(&on.batches) {
+        assert_eq!(a.index, b.index);
+        assert_eq!(a.n_queries, b.n_queries);
+        assert_eq!(a.config, b.config);
+        assert_eq!(a.cache_utilization, b.cache_utilization);
+        assert_eq!(a.delta, b.delta);
+        assert_eq!(a.exec_start, b.exec_start);
+        assert_eq!(a.exec_end, b.exec_end);
+    }
+    assert_eq!(off.end_time, on.end_time);
+}
+
+#[test]
+fn serial_replay_bit_identical_with_telemetry() {
+    let off = replay(false, &Telemetry::off());
+    let mut tel = full_telemetry();
+    let on = replay(false, &tel);
+    tel.shutdown();
+    assert_bit_identical(&off, &on);
+    // And the observer actually observed: one span per batch.
+    assert_eq!(tel.metrics().batch_spans.get(), on.batches.len() as u64);
+    assert_eq!(tel.metrics().queries_completed.get(), on.outcomes.len() as u64);
+    assert_eq!(tel.metrics().trace_dropped.get(), 0);
+}
+
+#[test]
+fn pipelined_replay_bit_identical_with_telemetry() {
+    let off = replay(true, &Telemetry::off());
+    let mut tel = full_telemetry();
+    let on = replay(true, &tel);
+    tel.shutdown();
+    assert_bit_identical(&off, &on);
+    assert_eq!(tel.metrics().batch_spans.get(), on.batches.len() as u64);
+}
+
+/// The hard case: 8 shards, worker threads, reactive membership armed,
+/// hot-view replication + decay, periodic rebalance — every event
+/// source live. Telemetry on vs off must still replay bit-identically
+/// under SimClock.
+#[test]
+fn federated_8shard_replay_bit_identical_with_telemetry() {
+    let cfg = ServeConfig {
+        duration_secs: 2.0,
+        rate_per_sec: 800.0,
+        n_tenants: 4,
+        batch_secs: 0.25,
+        queue_capacity: 16_384,
+        admission: AdmissionPolicy::Drop,
+        stateful_gamma: None,
+        seed: 23,
+        verbose: false,
+        warm_start: true,
+    };
+    let mut fcfg = ServeFederationConfig::new(cfg, 8);
+    fcfg.auto = Some(AutoMembership {
+        lo_qps: 5.0,
+        hi_qps: 5_000.0,
+        window: 2,
+        cooldown: 2,
+    });
+    fcfg.replicate_hot = Some(0.3);
+    fcfg.replica_decay = Some(2);
+    fcfg.rebalance_every = Some(3);
+
+    let universe = Universe::sales_only();
+    let tenants = TenantSet::equal(fcfg.serve.n_tenants);
+    let engine = SimEngine::new(ClusterConfig::default());
+    let policy = PolicyKind::FastPf.build();
+
+    let off = serve_federated_sim(&universe, &tenants, &engine, policy.as_ref(), &fcfg);
+    let mut tel = full_telemetry();
+    let on = serve_federated_sim_with(&universe, &tenants, &engine, policy.as_ref(), &fcfg, &tel);
+    tel.shutdown();
+
+    assert_bit_identical(&off.cluster.run, &on.cluster.run);
+    assert_eq!(off.serve.admitted, on.serve.admitted);
+    assert_eq!(off.serve.rejected, on.serve.rejected);
+    assert_eq!(off.serve.completed, on.serve.completed);
+    assert_eq!(off.serve.per_tenant_completed, on.serve.per_tenant_completed);
+    assert_eq!(off.membership_events().len(), on.membership_events().len());
+    assert_eq!(off.cluster.per_shard.len(), on.cluster.per_shard.len());
+    for (a, b) in off.cluster.per_shard.iter().zip(&on.cluster.per_shard) {
+        assert_eq!(a.outcomes.len(), b.outcomes.len());
+    }
+
+    // The registry agrees with the report on the conservation ledger.
+    assert_eq!(tel.metrics().queries_admitted.get(), on.serve.admitted);
+    assert_eq!(tel.metrics().queries_rejected.get(), on.serve.rejected);
+    assert_eq!(tel.metrics().queries_completed.get(), on.serve.completed);
+    // Router epochs: at least the initial publication reached the trace.
+    assert!(tel.metrics().router_epochs.get() >= 1);
+    assert_eq!(tel.metrics().trace_dropped.get(), 0);
+}
+
+/// Histogram quantile accuracy: the 2^(1/8) bucket ladder promises
+/// estimates within one bucket ratio (≤ ~9% relative) of the exact
+/// sample percentile for values inside the representable range, across
+/// scales and skews.
+#[test]
+fn histogram_quantiles_track_exact_percentiles() {
+    let mut rng = Pcg64::new(7);
+    // Log-uniform over ~5 decades (0.01 .. 1000) — covers ms latencies
+    // and batch sizes alike, nothing near the ladder's edges.
+    let xs: Vec<f64> = (0..5000)
+        .map(|_| 10f64.powf(rng.next_f64() * 5.0 - 2.0))
+        .collect();
+    let h = Histogram::new();
+    for &x in &xs {
+        h.record(x);
+    }
+    assert_eq!(h.count(), xs.len() as u64);
+    let exact_sum: f64 = xs.iter().sum();
+    assert!((h.sum() - exact_sum).abs() / exact_sum < 1e-3);
+
+    let ps = [1.0, 10.0, 25.0, 50.0, 75.0, 90.0, 99.0, 99.9];
+    let exact = stats::percentiles_of(&xs, &ps);
+    for (&p, &e) in ps.iter().zip(&exact) {
+        let est = h.quantile(p);
+        let rel = (est - e).abs() / e;
+        // One bucket ratio (2^(1/8) ≈ 1.09) plus rank-rounding slack.
+        assert!(
+            rel < 0.12,
+            "p{p}: histogram {est} vs exact {e} (rel err {rel:.3})"
+        );
+    }
+}
+
+/// Degenerate inputs stay sane: empty histogram answers 0, one sample
+/// answers (approximately) itself at any percentile.
+#[test]
+fn histogram_quantile_edge_cases() {
+    let h = Histogram::new();
+    assert_eq!(h.quantile(50.0), 0.0);
+    h.record(2.5);
+    for p in [0.0, 50.0, 100.0] {
+        let est = h.quantile(p);
+        assert!((est - 2.5).abs() / 2.5 < 0.09, "single sample p{p}: {est}");
+    }
+}

@@ -1,0 +1,205 @@
+#!/usr/bin/env python3
+"""Summarize and validate a robus JSONL batch trace (``--trace-out``).
+
+Reads the trace written by the telemetry layer
+(``rust/src/telemetry/trace.rs``: one JSON object per line, ``type``
+discriminated into ``meta`` / ``span`` / ``event`` / ``snapshot`` /
+``final``), prints a human-readable digest, and enforces the
+conservation invariants the serving stack promises:
+
+* **Workload conservation** — the ``final`` counter record must satisfy
+  ``admitted == completed + queued`` (rejected queries were never
+  admitted; requeued queries moved between queues without being
+  re-counted). A finished run has ``queued == 0``, so admitted ==
+  completed.
+* **Span accounting** — the ``final`` record's ``spans`` count plus its
+  ``dropped`` count bounds the span lines actually present (a bounded
+  trace channel may drop records, but only while counting them).
+* **Multiplier clamp bounds** — every ``multiplier_clamp`` event's value
+  must lie within ``[1/max_boost - eps, max_boost + eps]`` of the run's
+  ``meta.max_boost`` (the accountant clamps *to* the bound, never past
+  it).
+* **Snapshot monotonicity** — counters in successive ``snapshot``
+  records never decrease.
+
+Exit status: 0 when every invariant holds, 1 on any violation, 2 on
+unusable input (missing file, no final record, malformed JSON).
+
+Usage:
+  python3 scripts/summarize_trace.py TRACE.jsonl
+  python3 scripts/summarize_trace.py TRACE.jsonl --quiet   # checks only
+"""
+
+import argparse
+import json
+import sys
+from collections import Counter, defaultdict
+
+PHASES = ("drain_ms", "boost_ms", "solve_ms", "sample_ms", "transition_ms", "execute_ms")
+EPS = 1e-9
+
+
+def load(path):
+    records = []
+    try:
+        with open(path, "r", encoding="utf-8") as f:
+            for i, line in enumerate(f, 1):
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    records.append(json.loads(line))
+                except json.JSONDecodeError as e:
+                    print(f"error: {path}:{i}: malformed JSON ({e})", file=sys.stderr)
+                    sys.exit(2)
+    except OSError as e:
+        print(f"error: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+    if not records:
+        print(f"error: {path} is empty", file=sys.stderr)
+        sys.exit(2)
+    return records
+
+
+def percentile(xs, p):
+    """Linear-interpolation percentile, matching ``util::stats``."""
+    if not xs:
+        return 0.0
+    ys = sorted(xs)
+    if len(ys) == 1:
+        return ys[0]
+    rank = (p / 100.0) * (len(ys) - 1)
+    lo = int(rank)
+    hi = min(lo + 1, len(ys) - 1)
+    frac = rank - lo
+    return ys[lo] * (1.0 - frac) + ys[hi] * frac
+
+
+def summarize(records, quiet):
+    meta = next((r for r in records if r.get("type") == "meta"), None)
+    spans = [r for r in records if r.get("type") == "span"]
+    events = [r for r in records if r.get("type") == "event"]
+    snapshots = [r for r in records if r.get("type") == "snapshot"]
+    finals = [r for r in records if r.get("type") == "final"]
+
+    violations = []
+
+    if not finals:
+        print("error: trace has no final record (run did not shut down cleanly)",
+              file=sys.stderr)
+        sys.exit(2)
+    final = finals[-1]
+
+    if not quiet:
+        if meta:
+            print(f"run: driver={meta.get('driver')} tenants={meta.get('tenants')} "
+                  f"shards={meta.get('shards')} max_boost={meta.get('max_boost')}")
+        print(f"records: {len(spans)} spans, {len(events)} events, "
+              f"{len(snapshots)} snapshots")
+
+    # --- per-phase breakdown over spans ---
+    if spans and not quiet:
+        print("\nphase breakdown (host ms per batch step):")
+        print(f"  {'phase':<14} {'total':>10} {'mean':>9} {'p50':>9} {'p99':>9}")
+        for ph in PHASES:
+            xs = [s.get(ph, 0.0) for s in spans]
+            total = sum(xs)
+            print(f"  {ph:<14} {total:>10.2f} {total / len(xs):>9.3f} "
+                  f"{percentile(xs, 50):>9.3f} {percentile(xs, 99):>9.3f}")
+        kinds = Counter(s.get("kind", "?") for s in spans)
+        kind_txt = ", ".join(f"{k}: {n}" for k, n in sorted(kinds.items()))
+        print(f"  solve kinds: {kind_txt}")
+        n_q = [s.get("n", 0) for s in spans]
+        print(f"  queries/span: total {sum(n_q)}, max {max(n_q)}, "
+              f"p50 {percentile(n_q, 50):.0f}")
+        shards = sorted({s.get("shard", -1) for s in spans})
+        if shards != [-1]:
+            per_shard = defaultdict(int)
+            for s in spans:
+                per_shard[s.get("shard", -1)] += s.get("n", 0)
+            loads = ", ".join(f"s{k}: {v}" for k, v in sorted(per_shard.items()))
+            print(f"  per-shard queries: {loads}")
+
+    # --- events ---
+    if events and not quiet:
+        counts = Counter(e.get("kind", "?") for e in events)
+        print("\nevents:")
+        for k, n in sorted(counts.items()):
+            print(f"  {k:<20} {n}")
+
+    # --- invariant: workload conservation ---
+    # Only serving drivers admit through probed queues; replay drivers
+    # (`run`, `cluster`) route in bulk and legitimately report
+    # admitted == 0 while spans still count completions.
+    admitted = final.get("admitted", 0)
+    completed = final.get("completed", 0)
+    queued = final.get("queued", 0)
+    if admitted > 0 and admitted != completed + queued:
+        violations.append(
+            f"conservation: admitted ({admitted}) != completed ({completed}) "
+            f"+ queued ({queued})")
+
+    # --- invariant: span accounting under bounded-channel drops ---
+    dropped = final.get("dropped", 0)
+    span_total = final.get("spans", 0)
+    if len(spans) > span_total:
+        violations.append(
+            f"span accounting: {len(spans)} span lines exceed the final "
+            f"record's count ({span_total})")
+    if len(spans) + dropped < span_total:
+        violations.append(
+            f"span accounting: {len(spans)} span lines + {dropped} dropped "
+            f"records cannot cover {span_total} recorded spans")
+
+    # --- invariant: multiplier clamps stay within the boost bound ---
+    clamps = [e for e in events if e.get("kind") == "multiplier_clamp"]
+    max_boost = (meta or {}).get("max_boost")
+    if clamps and max_boost:
+        lo, hi = 1.0 / max_boost - EPS, max_boost + EPS
+        for e in clamps:
+            v = e.get("value", 0.0)
+            if not (lo <= v <= hi):
+                violations.append(
+                    f"clamp bound: multiplier {v} outside [{1.0 / max_boost}, "
+                    f"{max_boost}] (batch {e.get('batch')}, tenant {e.get('tenant')})")
+
+    # --- invariant: snapshot counters are monotone ---
+    for key in ("admitted", "rejected", "completed", "requeued"):
+        prev = -1
+        for s in snapshots:
+            v = s.get(key, 0)
+            if v < prev:
+                violations.append(
+                    f"snapshot monotonicity: {key} fell from {prev} to {v} "
+                    f"at t={s.get('t')}")
+                break
+            prev = v
+
+    if not quiet:
+        print(f"\nfinal: admitted={admitted} completed={completed} "
+              f"rejected={final.get('rejected', 0)} "
+              f"requeued={final.get('requeued', 0)} queued={queued} "
+              f"spans={span_total} trace_dropped={dropped}")
+
+    if violations:
+        print(f"\nFAIL: {len(violations)} invariant violation(s):", file=sys.stderr)
+        for v in violations:
+            print(f"  - {v}", file=sys.stderr)
+        return 1
+    print("\nOK: conservation, span accounting, clamp bounds, and snapshot "
+          "monotonicity all hold")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("trace", help="JSONL trace file written by --trace-out")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress the digest, print only the verdict")
+    args = ap.parse_args()
+    sys.exit(summarize(load(args.trace), args.quiet))
+
+
+if __name__ == "__main__":
+    main()
