@@ -24,8 +24,9 @@
 //! `rust/tests/scale_runtime.rs` at 64 shards.
 
 use std::any::Any;
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
+
+use crate::util::sync::{mpsc, Mutex};
 
 use crate::alloc::Policy;
 use crate::cluster::shard::{Shard, ShardBatchOutcome};
@@ -374,7 +375,11 @@ mod tests {
     /// Tentpole pin: the pooled executor is bit-identical to the legacy
     /// spawn-per-batch executor on every simulated quantity, across
     /// multiple batches and with more shards than workers.
+    /// (Full multi-batch solves — outside the Miri subset for time; the
+    /// pool's message protocol is Miri-covered by `worker_panic_propagates`
+    /// and model-checked by `rust/tests/model_concurrency.rs`.)
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn pool_matches_spawn_per_batch_executor() {
         let universe = Universe::sales_only();
         let tenants = TenantSet::equal(3);
@@ -440,6 +445,7 @@ mod tests {
     /// `workers = 0` (inline) and a threaded pool agree — the CLI's
     /// escape hatch is not a second semantics.
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn inline_pool_matches_threaded_pool() {
         let universe = Universe::sales_only();
         let tenants = TenantSet::equal(2);

@@ -16,9 +16,10 @@
 //! `host_wall_secs`), the same discipline as the parallel experiment
 //! runner of PR 1 (`experiments::runner`).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc;
 use std::time::Instant;
+
+use crate::util::sync::atomic::{AtomicUsize, Ordering};
+use crate::util::sync::mpsc;
 
 use crate::alloc::Policy;
 use crate::coordinator::loop_::{Coordinator, PlannedBatch, RunResult};
@@ -67,7 +68,11 @@ impl Coordinator<'_> {
             let queued = &queued;
             pool.submit(move || {
                 while let Some(planned) = planner.next_batch() {
-                    queued.fetch_add(1, Ordering::SeqCst);
+                    // ordering: Relaxed pairs with the Relaxed
+                    // fetch_sub in the executor loop — `queued` is an
+                    // observability-only depth gauge; the sync_channel
+                    // itself orders the hand-off of the batch data.
+                    queued.fetch_add(1, Ordering::Relaxed);
                     // The receiver only hangs up when the pool is
                     // tearing down; nothing to do but stop planning.
                     if tx.send(planned).is_err() {
@@ -82,7 +87,10 @@ impl Coordinator<'_> {
                         let stall_secs = t0.elapsed().as_secs_f64();
                         // Solved batches still waiting after taking this
                         // one — how far ahead the solver is running.
-                        let queue_depth = queued.fetch_sub(1, Ordering::SeqCst).saturating_sub(1);
+                        // ordering: Relaxed pairs with the Relaxed
+                        // fetch_add on the planner side; approximate
+                        // depth is fine, the channel orders the data.
+                        let queue_depth = queued.fetch_sub(1, Ordering::Relaxed).saturating_sub(1);
                         let span = SpanRecord {
                             t: planned.window_end,
                             batch: planned.index,
@@ -189,13 +197,19 @@ mod tests {
         }
     }
 
+    // The equivalence tests below each run a full 6-batch coordinator
+    // twice — far too slow for the interpreter, so they are excluded
+    // from the Miri subset (the channel/counter protocol itself is
+    // covered by the model checker and the pool tests).
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn pipelined_matches_serial_stateless() {
         let (serial, pipelined) = run_both(PolicyKind::FastPf, None, 2);
         assert_bit_identical(&serial, &pipelined);
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn pipelined_matches_serial_stateful() {
         // The stateful boost is the subtle case: the planner's mirror
         // must reproduce the live cache contents bit-for-bit.
@@ -204,12 +218,14 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn depth_zero_clamps_and_runs() {
         let (serial, pipelined) = run_both(PolicyKind::Static, None, 0);
         assert_bit_identical(&serial, &pipelined);
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn pipelined_matches_serial_warm_started() {
         // The warm state rides inside the planner, which moves whole
         // onto the solver thread — warm serial and warm pipelined runs

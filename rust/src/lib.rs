@@ -24,6 +24,13 @@
 //! - [`experiments`] — configurations and runners regenerating every
 //!   table and figure of the paper's evaluation.
 
+// Concurrency-correctness gates (PR 9, enforced alongside
+// `scripts/lint_static.py`): every unsafe operation inside an `unsafe fn`
+// must sit in its own `unsafe {}` block, and every unsafe block must
+// carry a `// SAFETY:` justification.
+#![deny(unsafe_op_in_unsafe_fn)]
+#![deny(clippy::undocumented_unsafe_blocks)]
+
 pub mod util;
 
 pub mod telemetry;

@@ -15,7 +15,7 @@
 //! (`coordinator::loop_::ExecSummary`), sharing the bucket math so
 //! quantiles agree between the live registry and end-of-run reports.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::atomic::{AtomicU64, Ordering};
 
 /// Geometric buckets per histogram.
 pub const N_BUCKETS: usize = 256;
@@ -73,14 +73,18 @@ impl Counter {
     }
 
     pub fn inc(&self) {
+        // ordering: Relaxed pairs with the Relaxed `get` — a monotone
+        // event count, observed but never used to order other data.
         self.0.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn add(&self, n: u64) {
+        // ordering: Relaxed pairs with the Relaxed `get` (see `inc`).
         self.0.fetch_add(n, Ordering::Relaxed);
     }
 
     pub fn get(&self) -> u64 {
+        // ordering: Relaxed pairs with the Relaxed `inc`/`add` writers.
         self.0.load(Ordering::Relaxed)
     }
 }
@@ -95,10 +99,13 @@ impl Gauge {
     }
 
     pub fn set(&self, v: u64) {
+        // ordering: Relaxed pairs with the Relaxed `get` — last-writer-
+        // wins observability value, no data published through it.
         self.0.store(v, Ordering::Relaxed);
     }
 
     pub fn get(&self) -> u64 {
+        // ordering: Relaxed pairs with the Relaxed `set` writer.
         self.0.load(Ordering::Relaxed)
     }
 }
@@ -129,6 +136,12 @@ impl Histogram {
 
     pub fn record(&self, v: f64) {
         let i = bucket_index(&self.bounds, v);
+        // ordering: Relaxed pairs with the Relaxed reader loads in
+        // `count`/`sum`/`quantile`/`render_into`; the three adds are
+        // individually atomic but deliberately not a transaction — a
+        // concurrent render may see a record half-applied, which is
+        // fine for observability (pinned by the concurrent stress test
+        // below: totals converge once writers finish).
         self.buckets[i].fetch_add(1, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
         let v = if v.is_finite() && v > 0.0 { v } else { 0.0 };
@@ -136,10 +149,12 @@ impl Histogram {
     }
 
     pub fn count(&self) -> u64 {
+        // ordering: Relaxed pairs with the Relaxed writers in `record`.
         self.count.load(Ordering::Relaxed)
     }
 
     pub fn sum(&self) -> f64 {
+        // ordering: Relaxed pairs with the Relaxed writers in `record`.
         self.sum_micro.load(Ordering::Relaxed) as f64 / 1e6
     }
 
@@ -147,6 +162,8 @@ impl Histogram {
     /// error vs the exact sample percentile; see the property test in
     /// `rust/tests/telemetry_observer.rs`).
     pub fn quantile(&self, q: f64) -> f64 {
+        // ordering: Relaxed pairs with the Relaxed writers in `record`
+        // (racy-but-consistent-enough snapshot; see the type docs).
         let buckets: Vec<u64> = self
             .buckets
             .iter()
@@ -163,6 +180,9 @@ impl Histogram {
         let _ = writeln!(out, "# TYPE {name} histogram");
         let mut cum = 0u64;
         for (i, b) in self.buckets.iter().enumerate() {
+            // ordering: Relaxed pairs with the Relaxed writers in
+            // `record`; the exposition derives count from the same
+            // bucket loads so the cumulative series stays coherent.
             let n = b.load(Ordering::Relaxed);
             if n == 0 {
                 continue;
@@ -264,6 +284,11 @@ pub struct Metrics {
     pub membership_kills: Counter,
     /// Router epochs published (RCU pointer swaps in `ServeRouter`).
     pub router_epochs: Counter,
+    /// Arrivals routed through the documented shard-0 fallback because
+    /// the epoch's shard set did not contain the view's home shard
+    /// (`ServeRouter::idx` miss — should stay 0 outside membership
+    /// transitions).
+    pub router_fallback_routes: Counter,
     /// Per-tenant accountant multipliers that hit the `max_boost` clamp.
     pub multiplier_clamps: Counter,
     pub warm_invalidations: Counter,
@@ -285,7 +310,7 @@ impl Metrics {
         Self::default()
     }
 
-    fn counters(&self) -> [(&'static str, &Counter); 15] {
+    fn counters(&self) -> [(&'static str, &Counter); 16] {
         [
             ("robus_batch_spans_total", &self.batch_spans),
             ("robus_queries_admitted_total", &self.queries_admitted),
@@ -298,6 +323,7 @@ impl Metrics {
             ("robus_membership_removes_total", &self.membership_removes),
             ("robus_membership_kills_total", &self.membership_kills),
             ("robus_router_epochs_total", &self.router_epochs),
+            ("robus_router_fallback_routes_total", &self.router_fallback_routes),
             ("robus_multiplier_clamps_total", &self.multiplier_clamps),
             ("robus_warm_invalidations_total", &self.warm_invalidations),
             ("robus_trace_emitted_total", &self.trace_emitted),
@@ -422,6 +448,45 @@ mod tests {
         for q in [0.0, 10.0, 50.0, 90.0, 99.0, 100.0] {
             assert_eq!(h.quantile(q), l.quantile(q), "q={q}");
         }
+    }
+
+    #[test]
+    fn concurrent_histogram_records_and_renders() {
+        // Writers hammer `record` while a reader renders mid-flight;
+        // part of the Miri subset (tightened iteration count there) so
+        // the interpreter checks the wait-free path's memory accesses.
+        let iters: usize = if cfg!(miri) { 40 } else { 4000 };
+        let h = std::sync::Arc::new(Histogram::new());
+        let writers: Vec<_> = (0..3)
+            .map(|w| {
+                let h = std::sync::Arc::clone(&h);
+                std::thread::spawn(move || {
+                    for i in 0..iters {
+                        h.record(((w * iters + i) % 700) as f64 + 0.5);
+                    }
+                })
+            })
+            .collect();
+        // Interleaved reads must render a coherent (monotone) snapshot
+        // even while writers are mid-record.
+        for _ in 0..4 {
+            let text = {
+                let mut out = String::new();
+                h.render_into("robus_stress", &mut out);
+                out
+            };
+            let mut last = 0u64;
+            for line in text.lines().filter(|l| l.starts_with("robus_stress_bucket")) {
+                let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+                assert!(v >= last, "non-monotone mid-flight snapshot: {text}");
+                last = v;
+            }
+        }
+        for w in writers {
+            w.join().unwrap();
+        }
+        assert_eq!(h.count(), (3 * iters) as u64);
+        assert!(h.quantile(0.0) > 0.0);
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! time, so a SimClock test exercises the identical snapshot path a
 //! production soak does, deterministically.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::atomic::{AtomicU64, Ordering};
 
 /// Decides when a periodic counter snapshot is due. Lock-free: the
 /// next-due instant is an `f64` stored as bits in an `AtomicU64`, and
@@ -36,11 +36,19 @@ impl SnapshotTimer {
             return false;
         }
         loop {
+            // ordering: Relaxed pairs with the Relaxed CAS below — the
+            // timer claims a tick, it publishes no data; the winner
+            // only gains the right to emit a snapshot, and the counters
+            // it then reads are themselves Relaxed observability values
+            // (audited PR 9: no visibility guarantee is riding on this
+            // flag, so Acquire/Release would buy nothing).
             let cur = self.next.load(Ordering::Relaxed);
             if now < f64::from_bits(cur) {
                 return false;
             }
             let next = (now + self.period).to_bits();
+            // ordering: Relaxed pairs with the Relaxed load above (tick
+            // claim only — see that comment).
             if self
                 .next
                 .compare_exchange(cur, next, Ordering::Relaxed, Ordering::Relaxed)

@@ -8,11 +8,14 @@ pub mod cli;
 pub mod event;
 pub mod json;
 pub mod mask;
+#[cfg(feature = "model")]
+pub mod model;
 pub mod ordf64;
 pub mod pool;
 pub mod proptest;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 
 pub use event::{Clock, EventQueue, RealTimeClock, SimClock};
 pub use ordf64::OrdF64;

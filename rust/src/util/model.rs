@@ -1,0 +1,1112 @@
+//! A bounded model checker for the crate's lock-free protocols — the
+//! loom pattern, self-built (std-only, zero deps, like everything under
+//! `util/`). `check` runs a closure many times, each time forcing a
+//! different thread interleaving, until every schedule within the
+//! preemption bound has been explored (or a bound is hit).
+//!
+//! How it works:
+//! - **Cooperative serialization.** Threads created with [`spawn`] are
+//!   real OS threads, but a shared scheduler (`Exec`) lets exactly one
+//!   run at a time. Every operation on a [`crate::util::sync`] wrapper
+//!   (atomic access, mutex lock/unlock, channel send/recv) is a *yield
+//!   point*: the running thread hands control to the scheduler, which
+//!   picks who runs next.
+//! - **DFS over schedules.** Whenever more than one thread is runnable,
+//!   the scheduler records a decision. After an execution completes, the
+//!   deepest decision with an unexplored alternative is flipped and the
+//!   prefix replayed — classic stateless DFS with backtracking. A
+//!   CHESS-style *preemption bound* prunes schedules that switch away
+//!   from a runnable thread more than `preemption_bound` times, which
+//!   keeps exploration exhaustive-within-bound and tractable.
+//! - **Happens-before tracking.** Each thread carries a vector clock.
+//!   `Release` stores (and release-sequence RMWs) attach the writer's
+//!   clock to the atomic location; `Acquire` loads join it. Channel
+//!   sends carry the sender's clock to the receiver; mutex unlock/lock
+//!   edges do the same. A [`RaceCell`] is plain (non-atomic) data whose
+//!   reads and writes are checked against those clocks — two accesses
+//!   that are not ordered by happens-before fail the execution as a
+//!   data race, with the interleaving trace attached.
+//!
+//! Scope, honestly stated: atomic *values* follow the interleaving
+//! order (sequentially consistent per location). `Ordering` arguments
+//! do not produce weak-memory value anomalies; they drive the
+//! happens-before bookkeeping. An ordering bug therefore surfaces as a
+//! data race on the payload the atomic was supposed to publish (see the
+//! seeded `Release`→`Relaxed` mutation test in
+//! `rust/tests/model_concurrency.rs`), not as a stale atomic read.
+//! That is exactly the failure mode that matters for the router-epoch,
+//! pool, and trace-writer protocols this checker pins.
+//!
+//! Caveat for test authors: shared state must live at a stable address
+//! before model threads touch it (construct atomics inside their
+//! `Arc`/`Box` and don't move the owner afterwards) — locations are
+//! keyed by address. All threads must be created with [`spawn`] (a raw
+//! `std::thread::spawn` would escape the scheduler), and joined or
+//! leaked-on-abort; `check` panics on the first failing interleaving.
+
+use std::any::Any;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicU64 as StdAtomicU64, Ordering as StdOrdering};
+use std::sync::{Arc, Condvar, Mutex as StdMutex, MutexGuard as StdMutexGuard, Once};
+
+/// Maximum trace lines replayed in a failure report.
+const TRACE_TAIL: usize = 120;
+
+// ---------------------------------------------------------------------------
+// Vector clocks
+// ---------------------------------------------------------------------------
+
+/// A per-thread vector clock; index = model thread id.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct VClock(Vec<u64>);
+
+impl VClock {
+    fn grow(&mut self, n: usize) {
+        if self.0.len() < n {
+            self.0.resize(n, 0);
+        }
+    }
+
+    fn tick(&mut self, tid: usize) {
+        self.grow(tid + 1);
+        self.0[tid] += 1;
+    }
+
+    fn join(&mut self, other: &VClock) {
+        self.grow(other.0.len());
+        for (i, &v) in other.0.iter().enumerate() {
+            if v > self.0[i] {
+                self.0[i] = v;
+            }
+        }
+    }
+
+    fn get(&self, tid: usize) -> u64 {
+        self.0.get(tid).copied().unwrap_or(0)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler state
+// ---------------------------------------------------------------------------
+
+/// What a blocked thread is waiting on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum ResKey {
+    Mutex(usize),
+    Chan(u64),
+    Thread(usize),
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum Status {
+    Runnable,
+    Blocked(ResKey),
+    Finished,
+}
+
+#[derive(Debug)]
+struct ThreadInfo {
+    status: Status,
+    clock: VClock,
+}
+
+/// One recorded scheduling decision (taken where >1 thread was
+/// runnable): which threads were enabled, which index was chosen, and
+/// which thread was running when the decision was made (for preemption
+/// accounting).
+#[derive(Clone, Debug)]
+struct Decision {
+    enabled: Vec<usize>,
+    chosen: usize,
+    running: usize,
+}
+
+#[derive(Debug, Default)]
+struct AtomicMeta {
+    /// Clock attached by the last release store / release sequence;
+    /// `None` after a plain (non-release) store broke the chain.
+    release: Option<VClock>,
+}
+
+#[derive(Debug, Default)]
+struct MutexMeta {
+    owner: Option<usize>,
+    release: Option<VClock>,
+}
+
+struct Core {
+    threads: Vec<ThreadInfo>,
+    active: usize,
+    /// Forced choices for the DFS prefix being replayed.
+    schedule: Vec<usize>,
+    decisions: Vec<Decision>,
+    trace: Vec<String>,
+    atomics: HashMap<usize, AtomicMeta>,
+    mutexes: HashMap<usize, MutexMeta>,
+    steps: usize,
+    max_steps: usize,
+    failure: Option<String>,
+    aborting: bool,
+    completed: bool,
+}
+
+struct Exec {
+    core: StdMutex<Core>,
+    cv: Condvar,
+}
+
+/// Panic payload used to unwind model threads when an execution aborts
+/// (failure found, or teardown). Never reported as a user panic.
+struct AbortToken;
+
+/// Panic payload for *deliberate* panics inside model tests (e.g. the
+/// pool's panic-propagation protocol): behaves like any user panic but
+/// is suppressed by the quiet panic hook, so exploring thousands of
+/// panicking interleavings does not flood stderr with backtraces.
+pub struct QuietPanic(pub &'static str);
+
+thread_local! {
+    static CTX: RefCell<Option<(Arc<Exec>, usize)>> = const { RefCell::new(None) };
+}
+
+fn set_ctx(exec: Arc<Exec>, tid: usize) {
+    CTX.with(|c| *c.borrow_mut() = Some((exec, tid)));
+}
+
+fn clear_ctx() {
+    CTX.with(|c| *c.borrow_mut() = None);
+}
+
+fn try_ctx() -> Option<(Arc<Exec>, usize)> {
+    CTX.with(|c| c.borrow().clone())
+}
+
+fn ctx() -> (Arc<Exec>, usize) {
+    try_ctx().expect("model operation outside a model::check run")
+}
+
+/// True when the calling thread is running inside a `check` execution —
+/// the `util::sync` wrappers consult this to decide whether to route
+/// through the scheduler or behave exactly like `std::sync`.
+pub(crate) fn in_model() -> bool {
+    CTX.with(|c| c.borrow().is_some())
+}
+
+fn abort_unwind() -> ! {
+    panic::panic_any(AbortToken)
+}
+
+fn panic_message(p: &(dyn Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else if let Some(q) = p.downcast_ref::<QuietPanic>() {
+        q.0.to_string()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Install (once, chained) a panic hook that stays silent for the
+/// checker's own control-flow panics; everything else goes to the
+/// previous hook untouched.
+fn install_quiet_hook() {
+    static HOOK: Once = Once::new();
+    HOOK.call_once(|| {
+        let prev = panic::take_hook();
+        panic::set_hook(Box::new(move |info| {
+            let quiet = info.payload().downcast_ref::<AbortToken>().is_some()
+                || info.payload().downcast_ref::<QuietPanic>().is_some();
+            if !quiet {
+                prev(info);
+            }
+        }));
+    });
+}
+
+impl Exec {
+    fn new(schedule: Vec<usize>, max_steps: usize) -> Exec {
+        Exec {
+            core: StdMutex::new(Core {
+                threads: vec![ThreadInfo {
+                    status: Status::Runnable,
+                    clock: VClock::default(),
+                }],
+                active: 0,
+                schedule,
+                decisions: Vec::new(),
+                trace: Vec::new(),
+                atomics: HashMap::new(),
+                mutexes: HashMap::new(),
+                steps: 0,
+                max_steps,
+                failure: None,
+                aborting: false,
+                completed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Lock the core, recovering from poison (a panicking model thread
+    /// must not wedge the whole exploration).
+    fn lock_core(&self) -> StdMutexGuard<'_, Core> {
+        self.core.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// The central yield point: record the op, advance the caller's
+    /// clock, optionally block the caller, pick who runs next, and
+    /// return once the caller is scheduled again.
+    fn reschedule(&self, me: usize, desc: &str, block_on: Option<ResKey>) {
+        let mut core = self.lock_core();
+        if core.aborting {
+            drop(core);
+            abort_unwind();
+        }
+        core.trace.push(format!("t{me}: {desc}"));
+        core.threads[me].clock.tick(me);
+        if let Some(key) = block_on {
+            core.threads[me].status = Status::Blocked(key);
+        }
+        self.pick_next(&mut core, me);
+        loop {
+            if core.aborting {
+                drop(core);
+                abort_unwind();
+            }
+            if core.active == me && core.threads[me].status == Status::Runnable {
+                return;
+            }
+            core = self
+                .cv
+                .wait(core)
+                .unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    /// Choose the next thread to run. Called with the core locked, by
+    /// the thread that just yielded/blocked/finished.
+    fn pick_next(&self, core: &mut Core, me: usize) {
+        if core.aborting || core.completed {
+            self.cv.notify_all();
+            return;
+        }
+        core.steps += 1;
+        if core.steps > core.max_steps {
+            core.failure = Some(format!(
+                "step budget ({}) exceeded — livelock or an unbounded loop in the model body",
+                core.max_steps
+            ));
+            core.aborting = true;
+            self.cv.notify_all();
+            return;
+        }
+        let enabled: Vec<usize> = core
+            .threads
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.status == Status::Runnable)
+            .map(|(i, _)| i)
+            .collect();
+        if enabled.is_empty() {
+            if core.threads.iter().all(|t| t.status == Status::Finished) {
+                core.completed = true;
+            } else {
+                let stuck: Vec<String> = core
+                    .threads
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, t)| matches!(t.status, Status::Blocked(_)))
+                    .map(|(i, t)| format!("t{i} {:?}", t.status))
+                    .collect();
+                core.failure =
+                    Some(format!("deadlock: no runnable thread ({})", stuck.join(", ")));
+                core.aborting = true;
+            }
+            self.cv.notify_all();
+            return;
+        }
+        let choice = if enabled.len() == 1 {
+            0
+        } else {
+            let forced = core.schedule.get(core.decisions.len()).copied();
+            // Default policy past the forced prefix: stay on the current
+            // thread when it is still enabled (non-preemptive), else the
+            // lowest-id runnable one. Alternatives are explored by the
+            // DFS flipping recorded decisions.
+            let idx = forced
+                .unwrap_or_else(|| enabled.iter().position(|&t| t == me).unwrap_or(0))
+                .min(enabled.len() - 1);
+            core.decisions.push(Decision {
+                enabled: enabled.clone(),
+                chosen: idx,
+                running: me,
+            });
+            idx
+        };
+        core.active = enabled[choice];
+        self.cv.notify_all();
+    }
+
+    /// First scheduling of a freshly spawned thread.
+    fn wait_until_scheduled(&self, tid: usize) {
+        let mut core = self.lock_core();
+        loop {
+            if core.aborting {
+                drop(core);
+                abort_unwind();
+            }
+            if core.active == tid && core.threads[tid].status == Status::Runnable {
+                return;
+            }
+            core = self
+                .cv
+                .wait(core)
+                .unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    /// A model thread's body returned (or panicked with `user_panic`).
+    fn thread_finished(&self, me: usize, user_panic: Option<String>) {
+        let mut core = self.lock_core();
+        core.threads[me].status = Status::Finished;
+        core.trace.push(format!("t{me}: finished"));
+        if let Some(msg) = user_panic {
+            if !core.aborting {
+                core.failure = Some(format!("thread t{me} panicked: {msg}"));
+                core.aborting = true;
+            }
+            self.cv.notify_all();
+            return;
+        }
+        for t in core.threads.iter_mut() {
+            if t.status == Status::Blocked(ResKey::Thread(me)) {
+                t.status = Status::Runnable;
+            }
+        }
+        self.pick_next(&mut core, me);
+    }
+
+    /// A model thread unwound with an `AbortToken`: mark it gone without
+    /// touching the failure state the abort is delivering.
+    fn thread_finished_quiet(&self, me: usize) {
+        let mut core = self.lock_core();
+        core.threads[me].status = Status::Finished;
+        self.cv.notify_all();
+    }
+
+    /// Record `msg` as the execution's failure, wake everyone, unwind.
+    fn fail(&self, mut core: StdMutexGuard<'_, Core>, msg: String) -> ! {
+        if !core.aborting {
+            let tail: Vec<&str> = core
+                .trace
+                .iter()
+                .rev()
+                .take(TRACE_TAIL)
+                .map(String::as_str)
+                .collect();
+            let trace: Vec<&str> = tail.into_iter().rev().collect();
+            core.failure = Some(format!("{msg}\n--- interleaving ---\n{}", trace.join("\n")));
+            core.aborting = true;
+        }
+        self.cv.notify_all();
+        drop(core);
+        abort_unwind()
+    }
+
+    /// Block the controller until the execution completed or aborted.
+    fn wait_done(&self) {
+        let mut core = self.lock_core();
+        while !(core.completed || core.aborting) {
+            core = self
+                .cv
+                .wait(core)
+                .unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    fn outcome(&self) -> (Option<String>, Vec<Decision>) {
+        let core = self.lock_core();
+        (core.failure.clone(), core.decisions.clone())
+    }
+}
+
+fn wake_waiters(core: &mut Core, key: ResKey) {
+    for t in core.threads.iter_mut() {
+        if t.status == Status::Blocked(key) {
+            t.status = Status::Runnable;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Operations called by the util::sync wrappers
+// ---------------------------------------------------------------------------
+
+/// How an atomic access interacts with the release chain of its
+/// location.
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum AccessKind {
+    Load,
+    Store,
+    Rmw,
+}
+
+fn apply_atomic_hb(core: &mut Core, me: usize, addr: usize, kind: AccessKind, order: Ordering) {
+    // ordering: classification only — the orderings below are the
+    // *caller's*; this function is the model's HB bookkeeping, not a
+    // memory-access site.
+    let acquires = !matches!(kind, AccessKind::Store)
+        && matches!(order, Ordering::Acquire | Ordering::AcqRel | Ordering::SeqCst);
+    let releases = !matches!(kind, AccessKind::Load)
+        && matches!(order, Ordering::Release | Ordering::AcqRel | Ordering::SeqCst);
+    if acquires {
+        let rel = core.atomics.get(&addr).and_then(|m| m.release.clone());
+        if let Some(r) = rel {
+            core.threads[me].clock.join(&r);
+        }
+    }
+    match kind {
+        AccessKind::Load => {}
+        AccessKind::Store => {
+            let snap = if releases {
+                Some(core.threads[me].clock.clone())
+            } else {
+                // A plain store breaks the location's release chain:
+                // later acquire loads get no edge to earlier releases.
+                None
+            };
+            core.atomics.entry(addr).or_default().release = snap;
+        }
+        AccessKind::Rmw => {
+            if releases {
+                let snap = core.threads[me].clock.clone();
+                let slot = &mut core.atomics.entry(addr).or_default().release;
+                match slot {
+                    Some(r) => r.join(&snap),
+                    None => *slot = Some(snap),
+                }
+            }
+            // A relaxed RMW continues an existing release sequence:
+            // leave the attached clock as-is.
+        }
+    }
+}
+
+/// Yield, then perform `op` (the real `std` atomic op) at the scheduled
+/// point, applying happens-before per `kind`/`order`.
+pub(crate) fn atomic_access<R>(
+    addr: usize,
+    desc: &str,
+    kind: AccessKind,
+    order: Ordering,
+    op: impl FnOnce() -> R,
+) -> R {
+    let (exec, me) = ctx();
+    exec.reschedule(me, desc, None);
+    let mut core = exec.lock_core();
+    let r = op();
+    apply_atomic_hb(&mut core, me, addr, kind, order);
+    r
+}
+
+/// Compare-exchange: RMW semantics with the success ordering when `op`
+/// returns `Ok`, load semantics with the failure ordering otherwise.
+pub(crate) fn atomic_cas<V>(
+    addr: usize,
+    desc: &str,
+    success: Ordering,
+    failure: Ordering,
+    op: impl FnOnce() -> Result<V, V>,
+) -> Result<V, V> {
+    let (exec, me) = ctx();
+    exec.reschedule(me, desc, None);
+    let mut core = exec.lock_core();
+    let r = op();
+    match &r {
+        Ok(_) => apply_atomic_hb(&mut core, me, addr, AccessKind::Rmw, success),
+        Err(_) => apply_atomic_hb(&mut core, me, addr, AccessKind::Load, failure),
+    }
+    r
+}
+
+/// Model-aware mutex acquire: yields, then takes ownership or blocks
+/// until the owner releases. The unlock→lock happens-before edge rides
+/// on the mutex's release clock.
+pub(crate) fn mutex_lock(addr: usize) {
+    let (exec, me) = ctx();
+    loop {
+        exec.reschedule(me, "mutex.lock", None);
+        let mut core = exec.lock_core();
+        let free = {
+            let m = core.mutexes.entry(addr).or_default();
+            if m.owner.is_none() {
+                m.owner = Some(me);
+                true
+            } else {
+                false
+            }
+        };
+        if free {
+            let rel = core.mutexes.get(&addr).and_then(|m| m.release.clone());
+            if let Some(r) = rel {
+                core.threads[me].clock.join(&r);
+            }
+            return;
+        }
+        drop(core);
+        exec.reschedule(me, "mutex.blocked", Some(ResKey::Mutex(addr)));
+    }
+}
+
+/// Release a model mutex. Called from guard `Drop`, so it must never
+/// panic — abort delivery waits for the thread's next yield point.
+pub(crate) fn mutex_unlock(addr: usize) {
+    let Some((exec, me)) = try_ctx() else { return };
+    let mut core = exec.lock_core();
+    let my = core.threads[me].clock.clone();
+    {
+        let m = core.mutexes.entry(addr).or_default();
+        m.owner = None;
+        m.release = Some(my);
+    }
+    wake_waiters(&mut core, ResKey::Mutex(addr));
+}
+
+/// Process-global channel id allocator (ids key blocked-waiter lists;
+/// endpoints move between threads, so addresses would not do).
+pub(crate) fn new_chan_id() -> u64 {
+    static NEXT: StdAtomicU64 = StdAtomicU64::new(1);
+    // ordering: Relaxed pairs with nothing — this is a unique-id
+    // counter, not a publication.
+    NEXT.fetch_add(1, StdOrdering::Relaxed)
+}
+
+/// Yield point before a channel operation.
+pub(crate) fn chan_yield(id: u64, desc: &str) {
+    let (exec, me) = ctx();
+    exec.reschedule(me, &format!("{desc}(ch{id})"), None);
+}
+
+/// Block until another endpoint operation on channel `id` wakes us.
+pub(crate) fn chan_block(id: u64) {
+    let (exec, me) = ctx();
+    exec.reschedule(me, "chan.blocked", Some(ResKey::Chan(id)));
+}
+
+/// Wake every thread blocked on channel `id` (they re-check and may
+/// re-block — spurious wakes are safe). Called from endpoint `Drop`
+/// too, so it must never panic.
+pub(crate) fn chan_wake(id: u64) {
+    if let Some((exec, _)) = try_ctx() {
+        let mut core = exec.lock_core();
+        wake_waiters(&mut core, ResKey::Chan(id));
+    }
+}
+
+/// The calling thread's current vector clock (attached to sends).
+pub(crate) fn clock_snapshot() -> VClock {
+    let (exec, me) = ctx();
+    exec.lock_core().threads[me].clock.clone()
+}
+
+/// Join a received clock into the calling thread's (the send→recv
+/// happens-before edge).
+pub(crate) fn join_clock(c: &VClock) {
+    let (exec, me) = ctx();
+    exec.lock_core().threads[me].clock.join(c);
+}
+
+// ---------------------------------------------------------------------------
+// Threads
+// ---------------------------------------------------------------------------
+
+/// Handle to a thread spawned inside a model execution.
+pub struct JoinHandle<T> {
+    tid: usize,
+    result: Arc<StdMutex<Option<std::thread::Result<T>>>>,
+    os: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Spawn a model thread. Must be called from inside a `check` closure;
+/// the child inherits the parent's clock (everything the parent did
+/// before the spawn happens-before everything the child does).
+pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    let (exec, me) = ctx();
+    let tid = {
+        let mut core = exec.lock_core();
+        let parent_clock = core.threads[me].clock.clone();
+        let tid = core.threads.len();
+        core.threads.push(ThreadInfo {
+            status: Status::Runnable,
+            clock: parent_clock,
+        });
+        core.trace.push(format!("t{me}: spawn t{tid}"));
+        tid
+    };
+    let result: Arc<StdMutex<Option<std::thread::Result<T>>>> = Arc::new(StdMutex::new(None));
+    let (exec2, result2) = (Arc::clone(&exec), Arc::clone(&result));
+    let os = std::thread::spawn(move || {
+        set_ctx(Arc::clone(&exec2), tid);
+        let _ = panic::catch_unwind(AssertUnwindSafe(|| {
+            exec2.wait_until_scheduled(tid);
+            match panic::catch_unwind(AssertUnwindSafe(f)) {
+                Ok(v) => {
+                    *result2.lock().unwrap_or_else(|p| p.into_inner()) = Some(Ok(v));
+                    exec2.thread_finished(tid, None);
+                }
+                Err(p) => {
+                    if p.downcast_ref::<AbortToken>().is_some() {
+                        exec2.thread_finished_quiet(tid);
+                    } else {
+                        let msg = panic_message(p.as_ref());
+                        *result2.lock().unwrap_or_else(|q| q.into_inner()) = Some(Err(p));
+                        exec2.thread_finished(tid, Some(msg));
+                    }
+                }
+            }
+        }));
+        clear_ctx();
+    });
+    exec.reschedule(me, "spawn", None);
+    JoinHandle {
+        tid,
+        result,
+        os: Some(os),
+    }
+}
+
+impl<T> JoinHandle<T> {
+    /// Join the model thread: blocks (in model time) until it finishes,
+    /// joins its clock into the caller's, and returns its result — the
+    /// same `Result` shape as `std::thread::JoinHandle::join`.
+    pub fn join(mut self) -> std::thread::Result<T> {
+        let (exec, me) = ctx();
+        loop {
+            {
+                let mut core = exec.lock_core();
+                if core.aborting {
+                    drop(core);
+                    abort_unwind();
+                }
+                if core.threads[self.tid].status == Status::Finished {
+                    let child = core.threads[self.tid].clock.clone();
+                    core.threads[me].clock.join(&child);
+                    break;
+                }
+            }
+            exec.reschedule(me, "join", Some(ResKey::Thread(self.tid)));
+        }
+        if let Some(os) = self.os.take() {
+            let _ = os.join();
+        }
+        self.result
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .take()
+            .expect("model thread finished without a result")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RaceCell — plain data under race detection
+// ---------------------------------------------------------------------------
+
+/// Non-atomic shared data with FastTrack-style race detection: the
+/// model twin of "a plain field published through an atomic". Reads
+/// and writes are checked against the location's happens-before state;
+/// an unordered pair fails the execution as a data race.
+pub struct RaceCell<T> {
+    value: std::cell::UnsafeCell<T>,
+    meta: StdMutex<CellMeta>,
+}
+
+#[derive(Debug, Default)]
+struct CellMeta {
+    /// Last write: (thread, that thread's clock component at the write).
+    write: Option<(usize, u64)>,
+    /// Last read per thread since the last write.
+    reads: Vec<(usize, u64)>,
+}
+
+// SAFETY: all cross-thread access is mediated by the model scheduler
+// (exactly one model thread runs at a time) and vetted by the race
+// detector before the cell is touched; outside a model run the cell is
+// plain single-threaded data.
+unsafe impl<T: Send> Sync for RaceCell<T> {}
+
+impl<T: Copy> RaceCell<T> {
+    pub fn new(value: T) -> Self {
+        RaceCell {
+            value: std::cell::UnsafeCell::new(value),
+            meta: StdMutex::new(CellMeta::default()),
+        }
+    }
+
+    pub fn read(&self) -> T {
+        if let Some((exec, me)) = try_ctx() {
+            exec.reschedule(me, "RaceCell.read", None);
+            let core = exec.lock_core();
+            let mut meta = self.meta.lock().unwrap_or_else(|p| p.into_inner());
+            if let Some((wt, wc)) = meta.write {
+                if core.threads[me].clock.get(wt) < wc {
+                    drop(meta);
+                    exec.fail(
+                        core,
+                        format!(
+                            "data race: t{me} read a RaceCell not ordered after t{wt}'s write"
+                        ),
+                    );
+                }
+            }
+            let c = core.threads[me].clock.get(me);
+            match meta.reads.iter_mut().find(|(t, _)| *t == me) {
+                Some(entry) => entry.1 = c,
+                None => meta.reads.push((me, c)),
+            }
+        }
+        // SAFETY: serialized by the model scheduler (or single-threaded
+        // outside it) and race-checked above — no concurrent mutation
+        // can be in flight here.
+        unsafe { *self.value.get() }
+    }
+
+    pub fn write(&self, v: T) {
+        if let Some((exec, me)) = try_ctx() {
+            exec.reschedule(me, "RaceCell.write", None);
+            let core = exec.lock_core();
+            let mut meta = self.meta.lock().unwrap_or_else(|p| p.into_inner());
+            if let Some((wt, wc)) = meta.write {
+                if core.threads[me].clock.get(wt) < wc {
+                    drop(meta);
+                    exec.fail(
+                        core,
+                        format!(
+                            "data race: t{me} wrote a RaceCell not ordered after t{wt}'s write"
+                        ),
+                    );
+                }
+            }
+            let racy_read = meta
+                .reads
+                .iter()
+                .find(|(rt, rc)| core.threads[me].clock.get(*rt) < *rc)
+                .copied();
+            if let Some((rt, _)) = racy_read {
+                drop(meta);
+                exec.fail(
+                    core,
+                    format!("data race: t{me} wrote a RaceCell concurrently read by t{rt}"),
+                );
+            }
+            meta.write = Some((me, core.threads[me].clock.get(me)));
+            meta.reads.clear();
+        }
+        // SAFETY: serialized by the model scheduler (or single-threaded
+        // outside it) and race-checked above — no concurrent access can
+        // be in flight here.
+        unsafe {
+            *self.value.get() = v;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The explorer
+// ---------------------------------------------------------------------------
+
+/// Outcome of a `check` run that found no failing interleaving.
+#[derive(Clone, Copy, Debug)]
+pub struct Report {
+    /// Interleavings executed.
+    pub executions: usize,
+    /// True when every schedule within the preemption bound was
+    /// explored; false when `max_executions` stopped exploration early.
+    pub complete: bool,
+}
+
+/// Exploration bounds. `preemption_bound: None` removes the CHESS
+/// pruning entirely (full DFS — only for very small models).
+#[derive(Clone, Copy, Debug)]
+pub struct Builder {
+    pub max_executions: usize,
+    pub preemption_bound: Option<usize>,
+    pub max_steps: usize,
+}
+
+impl Default for Builder {
+    fn default() -> Self {
+        Builder {
+            max_executions: 40_000,
+            preemption_bound: Some(2),
+            max_steps: 10_000,
+        }
+    }
+}
+
+pub fn builder() -> Builder {
+    Builder::default()
+}
+
+/// Explore `f` under the default bounds. Panics, with the failing
+/// interleaving's trace, on the first execution that deadlocks, races,
+/// or panics.
+pub fn check<F>(f: F) -> Report
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    builder().check(f)
+}
+
+/// True when flipping decision `d` to `choice` switches away from a
+/// still-runnable current thread — a preemption in the CHESS sense.
+fn is_preemption(d: &Decision, choice: usize) -> bool {
+    d.enabled.contains(&d.running) && d.enabled[choice] != d.running
+}
+
+/// Deepest-first backtracking: find the last decision with an untried
+/// alternative whose prefix stays within the preemption bound.
+fn next_schedule(decisions: &[Decision], bound: Option<usize>) -> Option<Vec<usize>> {
+    let prefix_preemptions: Vec<usize> = {
+        let mut acc = Vec::with_capacity(decisions.len());
+        let mut p = 0usize;
+        for d in decisions {
+            acc.push(p);
+            if is_preemption(d, d.chosen) {
+                p += 1;
+            }
+        }
+        acc
+    };
+    for i in (0..decisions.len()).rev() {
+        let d = &decisions[i];
+        for cand in d.chosen + 1..d.enabled.len() {
+            let p = prefix_preemptions[i] + usize::from(is_preemption(d, cand));
+            if let Some(b) = bound {
+                if p > b {
+                    continue;
+                }
+            }
+            let mut schedule: Vec<usize> =
+                decisions[..i].iter().map(|d| d.chosen).collect();
+            schedule.push(cand);
+            return Some(schedule);
+        }
+    }
+    None
+}
+
+impl Builder {
+    pub fn max_executions(mut self, n: usize) -> Self {
+        self.max_executions = n;
+        self
+    }
+
+    pub fn preemption_bound(mut self, b: Option<usize>) -> Self {
+        self.preemption_bound = b;
+        self
+    }
+
+    /// Run the exploration. See [`check`].
+    pub fn check<F>(&self, f: F) -> Report
+    where
+        F: Fn() + Send + Sync + 'static,
+    {
+        install_quiet_hook();
+        let f = Arc::new(f);
+        let mut schedule: Vec<usize> = Vec::new();
+        let mut executions = 0usize;
+        loop {
+            let exec = Arc::new(Exec::new(schedule.clone(), self.max_steps));
+            let (exec0, f0) = (Arc::clone(&exec), Arc::clone(&f));
+            let t0 = std::thread::spawn(move || {
+                set_ctx(Arc::clone(&exec0), 0);
+                let _ = panic::catch_unwind(AssertUnwindSafe(|| {
+                    match panic::catch_unwind(AssertUnwindSafe(|| f0())) {
+                        Ok(()) => exec0.thread_finished(0, None),
+                        Err(p) => {
+                            if p.downcast_ref::<AbortToken>().is_some() {
+                                exec0.thread_finished_quiet(0);
+                            } else {
+                                exec0.thread_finished(0, Some(panic_message(p.as_ref())));
+                            }
+                        }
+                    }
+                }));
+                clear_ctx();
+            });
+            exec.wait_done();
+            let _ = t0.join();
+            executions += 1;
+            let (failure, decisions) = exec.outcome();
+            if let Some(msg) = failure {
+                panic!("model check failed on execution {executions}: {msg}");
+            }
+            if executions >= self.max_executions {
+                return Report {
+                    executions,
+                    complete: false,
+                };
+            }
+            match next_schedule(&decisions, self.preemption_bound) {
+                Some(s) => schedule = s,
+                None => {
+                    return Report {
+                        executions,
+                        complete: true,
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::sync::atomic::{AtomicU64, Ordering};
+    use crate::util::sync::{mpsc, Mutex};
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::Arc;
+
+    fn failure_message(f: impl Fn() + Send + Sync + 'static) -> String {
+        let err = catch_unwind(AssertUnwindSafe(move || {
+            builder().check(f);
+        }))
+        .expect_err("expected the model checker to fail");
+        if let Some(s) = err.downcast_ref::<String>() {
+            s.clone()
+        } else if let Some(s) = err.downcast_ref::<&str>() {
+            (*s).to_string()
+        } else {
+            String::from("<non-string panic>")
+        }
+    }
+
+    /// The checker's own message-passing core: release publish /
+    /// acquire consume is race-free in every interleaving.
+    #[test]
+    fn model_release_acquire_publication_is_race_free() {
+        let report = check(|| {
+            let cell = Arc::new(RaceCell::new(0u64));
+            let flag = Arc::new(AtomicU64::new(0));
+            let (c, f) = (Arc::clone(&cell), Arc::clone(&flag));
+            let t = spawn(move || {
+                c.write(42);
+                // ordering: Release pairs with the Acquire load below —
+                // the mutation-catch test flips exactly this.
+                f.store(1, Ordering::Release);
+            });
+            if flag.load(Ordering::Acquire) == 1 {
+                assert_eq!(cell.read(), 42);
+            }
+            t.join().unwrap();
+        });
+        assert!(report.complete, "small model must explore exhaustively");
+        assert!(report.executions >= 2, "got {} executions", report.executions);
+    }
+
+    /// Self-validation: downgrading the publishing store to `Relaxed`
+    /// removes the happens-before edge, and the checker must report the
+    /// resulting data race on the payload.
+    #[test]
+    fn model_relaxed_publication_race_is_caught() {
+        let msg = failure_message(|| {
+            let cell = Arc::new(RaceCell::new(0u64));
+            let flag = Arc::new(AtomicU64::new(0));
+            let (c, f) = (Arc::clone(&cell), Arc::clone(&flag));
+            let t = spawn(move || {
+                c.write(42);
+                // ordering: deliberately Relaxed — the seeded bug.
+                f.store(1, Ordering::Relaxed);
+            });
+            if flag.load(Ordering::Acquire) == 1 {
+                let _ = cell.read();
+            }
+            t.join().unwrap();
+        });
+        assert!(msg.contains("data race"), "unexpected failure: {msg}");
+    }
+
+    /// ABBA lock ordering must surface as a reported deadlock, not a
+    /// hung test.
+    #[test]
+    fn model_detects_abba_deadlock() {
+        let msg = failure_message(|| {
+            let a = Arc::new(Mutex::new(0u64));
+            let b = Arc::new(Mutex::new(0u64));
+            let (a2, b2) = (Arc::clone(&a), Arc::clone(&b));
+            let t = spawn(move || {
+                let ga = a2.lock().unwrap();
+                let gb = b2.lock().unwrap();
+                drop((ga, gb));
+            });
+            {
+                let gb = b.lock().unwrap();
+                let ga = a.lock().unwrap();
+                drop((ga, gb));
+            }
+            t.join().unwrap();
+        });
+        assert!(msg.contains("deadlock"), "unexpected failure: {msg}");
+    }
+
+    /// Channel transfer carries happens-before: writing plain data then
+    /// sending is race-free for the receiver in every interleaving.
+    #[test]
+    fn model_channel_send_carries_happens_before() {
+        let report = check(|| {
+            let cell = Arc::new(RaceCell::new(0u64));
+            let (tx, rx) = mpsc::channel::<()>();
+            let c = Arc::clone(&cell);
+            let t = spawn(move || {
+                c.write(7);
+                tx.send(()).unwrap();
+            });
+            rx.recv().unwrap();
+            assert_eq!(cell.read(), 7);
+            t.join().unwrap();
+        });
+        assert!(report.complete);
+    }
+
+    /// Mutex critical sections order their contents: two lock-protected
+    /// increments never race and always sum.
+    #[test]
+    fn model_mutex_orders_critical_sections() {
+        let report = check(|| {
+            let n = Arc::new(Mutex::new(0u64));
+            let n2 = Arc::clone(&n);
+            let t = spawn(move || {
+                *n2.lock().unwrap() += 1;
+            });
+            *n.lock().unwrap() += 1;
+            t.join().unwrap();
+            assert_eq!(*n.lock().unwrap(), 2);
+        });
+        assert!(report.complete);
+        assert!(report.executions >= 2);
+    }
+
+    /// A panic inside a model thread is reported as a failure with its
+    /// message, not swallowed.
+    #[test]
+    fn model_reports_thread_panics() {
+        let msg = failure_message(|| {
+            let t = spawn(|| {
+                std::panic::panic_any(QuietPanic("child boom"));
+            });
+            let _ = t.join();
+        });
+        assert!(msg.contains("child boom"), "unexpected failure: {msg}");
+    }
+}

@@ -10,8 +10,9 @@
 //! must be created *before* entering the pool (see `run_pipelined`,
 //! which builds its planner first for exactly this reason).
 
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
+
+use crate::util::sync::{mpsc, Mutex};
 
 type Job<'env> = Box<dyn FnOnce() + Send + 'env>;
 
@@ -113,6 +114,9 @@ mod tests {
     }
 
     #[test]
+    // Spin-waits on a worker under wall-clock scheduling — excluded
+    // from the Miri subset (spin loops crawl under the interpreter).
+    #[cfg_attr(miri, ignore)]
     fn long_job_does_not_block_other_workers() {
         // One worker parks on a gate; the other must still drain the
         // remaining jobs — submit distributes over free workers.

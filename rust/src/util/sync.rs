@@ -1,0 +1,593 @@
+//! Crate-wide synchronization shim: the single import point for
+//! atomics, `Mutex`, and `mpsc` channels on the concurrent hot paths
+//! (`cluster::serving`, `cluster::runtime`, `util::pool`,
+//! `coordinator::pipeline`, `telemetry::*`).
+//!
+//! Without the `model` feature this module is nothing but `pub use`
+//! re-exports of `std::sync` — zero cost, zero behavior change, and
+//! the SimClock bit-identical-replay contract is untouched by
+//! construction.
+//!
+//! With `--features model`, the same names resolve to thin wrappers
+//! that check a thread-local: inside a [`crate::util::model::check`]
+//! run every operation becomes a scheduler yield point with
+//! happens-before tracking (see `util/model.rs`); outside one they
+//! delegate straight to `std`, so the full ordinary test suite also
+//! passes under the feature.
+//!
+//! Model-mode deviations from `std`, by design:
+//! - lock poisoning is swallowed inside model runs (a deliberately
+//!   panicking interleaving must not cascade poison panics through
+//!   the exploration);
+//! - `sync_channel(0)` is given capacity 1 inside a model run — the
+//!   model's blocking loops are try-op based and a rendezvous channel
+//!   never accepts a `try_send`.
+
+#[cfg(not(feature = "model"))]
+pub use std::sync::{Mutex, MutexGuard};
+
+/// Atomics: `std::sync::atomic` verbatim when the model feature is
+/// off.
+#[cfg(not(feature = "model"))]
+pub mod atomic {
+    pub use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicU64, AtomicUsize, Ordering};
+}
+
+/// Channels: `std::sync::mpsc` verbatim when the model feature is
+/// off.
+#[cfg(not(feature = "model"))]
+pub mod mpsc {
+    pub use std::sync::mpsc::{
+        channel, sync_channel, IntoIter, Iter, Receiver, RecvError, SendError, Sender, SyncSender,
+        TryIter, TryRecvError, TrySendError,
+    };
+}
+
+#[cfg(feature = "model")]
+pub use self::model_impl::{Mutex, MutexGuard};
+
+#[cfg(feature = "model")]
+pub mod atomic {
+    pub use super::model_impl::atomic::{AtomicBool, AtomicPtr, AtomicU64, AtomicUsize};
+    pub use std::sync::atomic::Ordering;
+}
+
+#[cfg(feature = "model")]
+pub mod mpsc {
+    pub use super::model_impl::mpsc::{channel, sync_channel, Iter, Receiver, Sender, SyncSender};
+    pub use std::sync::mpsc::{RecvError, SendError, TryRecvError, TrySendError};
+}
+
+#[cfg(feature = "model")]
+mod model_impl {
+    use crate::util::model;
+    use std::fmt;
+    use std::sync::{LockResult, PoisonError, TryLockError};
+
+    // -- Mutex --------------------------------------------------------
+
+    /// `std::sync::Mutex` twin; inside a model run, lock/unlock are
+    /// scheduler yield points carrying the unlock→lock happens-before
+    /// edge.
+    #[derive(Default)]
+    pub struct Mutex<T> {
+        inner: std::sync::Mutex<T>,
+    }
+
+    pub struct MutexGuard<'a, T> {
+        /// `Option` so `Drop` can release the OS lock *before* telling
+        /// the model scheduler the mutex is free.
+        inner: Option<std::sync::MutexGuard<'a, T>>,
+        model_addr: Option<usize>,
+    }
+
+    impl<T> Mutex<T> {
+        pub const fn new(t: T) -> Self {
+            Mutex {
+                inner: std::sync::Mutex::new(t),
+            }
+        }
+
+        pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+            if model::in_model() {
+                let addr = self as *const Self as usize;
+                model::mutex_lock(addr);
+                // The scheduler granted ownership, so the OS lock is
+                // free (guards release it before notifying the model);
+                // recover poison rather than cascading panics across
+                // explored interleavings.
+                let g = match self.inner.try_lock() {
+                    Ok(g) => g,
+                    Err(TryLockError::Poisoned(p)) => p.into_inner(),
+                    Err(TryLockError::WouldBlock) => {
+                        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+                    }
+                };
+                Ok(MutexGuard {
+                    inner: Some(g),
+                    model_addr: Some(addr),
+                })
+            } else {
+                match self.inner.lock() {
+                    Ok(g) => Ok(MutexGuard {
+                        inner: Some(g),
+                        model_addr: None,
+                    }),
+                    Err(p) => Err(PoisonError::new(MutexGuard {
+                        inner: Some(p.into_inner()),
+                        model_addr: None,
+                    })),
+                }
+            }
+        }
+    }
+
+    impl<T> fmt::Debug for Mutex<T> {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            f.debug_struct("Mutex").finish_non_exhaustive()
+        }
+    }
+
+    impl<T> std::ops::Deref for MutexGuard<'_, T> {
+        type Target = T;
+
+        fn deref(&self) -> &T {
+            self.inner.as_ref().expect("guard accessed after drop")
+        }
+    }
+
+    impl<T> std::ops::DerefMut for MutexGuard<'_, T> {
+        fn deref_mut(&mut self) -> &mut T {
+            self.inner.as_mut().expect("guard accessed after drop")
+        }
+    }
+
+    impl<T> Drop for MutexGuard<'_, T> {
+        fn drop(&mut self) {
+            // Release the OS lock first, then the model lock: the next
+            // thread the scheduler admits must find the OS mutex free.
+            self.inner.take();
+            if let Some(addr) = self.model_addr {
+                model::mutex_unlock(addr);
+            }
+        }
+    }
+
+    // -- Atomics ------------------------------------------------------
+
+    pub mod atomic {
+        use crate::util::model;
+        use std::fmt;
+        use std::sync::atomic::Ordering;
+
+        macro_rules! model_atomic_int {
+            ($name:ident, $std:ident, $prim:ty) => {
+                /// `std::sync::atomic` twin; inside a model run every
+                /// access is a yield point and its `Ordering` feeds
+                /// happens-before tracking.
+                #[derive(Debug, Default)]
+                pub struct $name {
+                    inner: std::sync::atomic::$std,
+                }
+
+                impl $name {
+                    pub const fn new(v: $prim) -> Self {
+                        Self {
+                            inner: std::sync::atomic::$std::new(v),
+                        }
+                    }
+
+                    fn addr(&self) -> usize {
+                        self as *const Self as usize
+                    }
+
+                    pub fn load(&self, order: Ordering) -> $prim {
+                        if model::in_model() {
+                            model::atomic_access(
+                                self.addr(),
+                                concat!(stringify!($name), ".load"),
+                                model::AccessKind::Load,
+                                order,
+                                || self.inner.load(order),
+                            )
+                        } else {
+                            self.inner.load(order)
+                        }
+                    }
+
+                    pub fn store(&self, v: $prim, order: Ordering) {
+                        if model::in_model() {
+                            model::atomic_access(
+                                self.addr(),
+                                concat!(stringify!($name), ".store"),
+                                model::AccessKind::Store,
+                                order,
+                                || self.inner.store(v, order),
+                            )
+                        } else {
+                            self.inner.store(v, order)
+                        }
+                    }
+
+                    pub fn fetch_add(&self, v: $prim, order: Ordering) -> $prim {
+                        if model::in_model() {
+                            model::atomic_access(
+                                self.addr(),
+                                concat!(stringify!($name), ".fetch_add"),
+                                model::AccessKind::Rmw,
+                                order,
+                                || self.inner.fetch_add(v, order),
+                            )
+                        } else {
+                            self.inner.fetch_add(v, order)
+                        }
+                    }
+
+                    pub fn fetch_sub(&self, v: $prim, order: Ordering) -> $prim {
+                        if model::in_model() {
+                            model::atomic_access(
+                                self.addr(),
+                                concat!(stringify!($name), ".fetch_sub"),
+                                model::AccessKind::Rmw,
+                                order,
+                                || self.inner.fetch_sub(v, order),
+                            )
+                        } else {
+                            self.inner.fetch_sub(v, order)
+                        }
+                    }
+
+                    pub fn compare_exchange(
+                        &self,
+                        current: $prim,
+                        new: $prim,
+                        success: Ordering,
+                        failure: Ordering,
+                    ) -> Result<$prim, $prim> {
+                        if model::in_model() {
+                            model::atomic_cas(
+                                self.addr(),
+                                concat!(stringify!($name), ".compare_exchange"),
+                                success,
+                                failure,
+                                || self.inner.compare_exchange(current, new, success, failure),
+                            )
+                        } else {
+                            self.inner.compare_exchange(current, new, success, failure)
+                        }
+                    }
+                }
+            };
+        }
+
+        model_atomic_int!(AtomicU64, AtomicU64, u64);
+        model_atomic_int!(AtomicUsize, AtomicUsize, usize);
+
+        /// `std::sync::atomic::AtomicBool` twin (load/store surface —
+        /// all the crate uses).
+        #[derive(Debug, Default)]
+        pub struct AtomicBool {
+            inner: std::sync::atomic::AtomicBool,
+        }
+
+        impl AtomicBool {
+            pub const fn new(v: bool) -> Self {
+                Self {
+                    inner: std::sync::atomic::AtomicBool::new(v),
+                }
+            }
+
+            fn addr(&self) -> usize {
+                self as *const Self as usize
+            }
+
+            pub fn load(&self, order: Ordering) -> bool {
+                if model::in_model() {
+                    model::atomic_access(
+                        self.addr(),
+                        "AtomicBool.load",
+                        model::AccessKind::Load,
+                        order,
+                        || self.inner.load(order),
+                    )
+                } else {
+                    self.inner.load(order)
+                }
+            }
+
+            pub fn store(&self, v: bool, order: Ordering) {
+                if model::in_model() {
+                    model::atomic_access(
+                        self.addr(),
+                        "AtomicBool.store",
+                        model::AccessKind::Store,
+                        order,
+                        || self.inner.store(v, order),
+                    )
+                } else {
+                    self.inner.store(v, order)
+                }
+            }
+        }
+
+        /// `std::sync::atomic::AtomicPtr` twin (load/store surface —
+        /// the RCU epoch pointer in `cluster::serving`).
+        pub struct AtomicPtr<T> {
+            inner: std::sync::atomic::AtomicPtr<T>,
+        }
+
+        impl<T> AtomicPtr<T> {
+            pub const fn new(p: *mut T) -> Self {
+                Self {
+                    inner: std::sync::atomic::AtomicPtr::new(p),
+                }
+            }
+
+            fn addr(&self) -> usize {
+                self as *const Self as usize
+            }
+
+            pub fn load(&self, order: Ordering) -> *mut T {
+                if model::in_model() {
+                    model::atomic_access(
+                        self.addr(),
+                        "AtomicPtr.load",
+                        model::AccessKind::Load,
+                        order,
+                        || self.inner.load(order),
+                    )
+                } else {
+                    self.inner.load(order)
+                }
+            }
+
+            pub fn store(&self, p: *mut T, order: Ordering) {
+                if model::in_model() {
+                    model::atomic_access(
+                        self.addr(),
+                        "AtomicPtr.store",
+                        model::AccessKind::Store,
+                        order,
+                        || self.inner.store(p, order),
+                    )
+                } else {
+                    self.inner.store(p, order)
+                }
+            }
+        }
+
+        impl<T> fmt::Debug for AtomicPtr<T> {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                f.debug_struct("AtomicPtr").finish_non_exhaustive()
+            }
+        }
+    }
+
+    // -- mpsc ---------------------------------------------------------
+
+    pub mod mpsc {
+        use crate::util::model;
+        use std::fmt;
+        use std::sync::mpsc as std_mpsc;
+        use std::sync::mpsc::{RecvError, SendError, TryRecvError, TrySendError};
+
+        /// Messages carry the sender's vector clock inside model runs
+        /// so recv can join it (the send→recv happens-before edge).
+        type Payload<T> = (T, Option<model::VClock>);
+
+        pub struct Sender<T> {
+            inner: std_mpsc::Sender<Payload<T>>,
+            id: u64,
+        }
+
+        pub struct SyncSender<T> {
+            inner: std_mpsc::SyncSender<Payload<T>>,
+            id: u64,
+        }
+
+        pub struct Receiver<T> {
+            inner: std_mpsc::Receiver<Payload<T>>,
+            id: u64,
+        }
+
+        pub fn channel<T>() -> (Sender<T>, Receiver<T>) {
+            let id = model::new_chan_id();
+            let (tx, rx) = std_mpsc::channel();
+            (Sender { inner: tx, id }, Receiver { inner: rx, id })
+        }
+
+        pub fn sync_channel<T>(bound: usize) -> (SyncSender<T>, Receiver<T>) {
+            let id = model::new_chan_id();
+            // Model runs need capacity ≥ 1: the model's blocking loops
+            // are try-op based, and a rendezvous channel only accepts
+            // try_send while a receiver sits inside the *real* recv.
+            let bound = if model::in_model() { bound.max(1) } else { bound };
+            let (tx, rx) = std_mpsc::sync_channel(bound);
+            (SyncSender { inner: tx, id }, Receiver { inner: rx, id })
+        }
+
+        impl<T> Sender<T> {
+            pub fn send(&self, t: T) -> Result<(), SendError<T>> {
+                if model::in_model() {
+                    model::chan_yield(self.id, "send");
+                    let clock = model::clock_snapshot();
+                    match self.inner.send((t, Some(clock))) {
+                        Ok(()) => {
+                            model::chan_wake(self.id);
+                            Ok(())
+                        }
+                        Err(SendError((v, _))) => Err(SendError(v)),
+                    }
+                } else {
+                    self.inner
+                        .send((t, None))
+                        .map_err(|SendError((v, _))| SendError(v))
+                }
+            }
+        }
+
+        impl<T> SyncSender<T> {
+            pub fn send(&self, t: T) -> Result<(), SendError<T>> {
+                if model::in_model() {
+                    let mut item = t;
+                    loop {
+                        model::chan_yield(self.id, "send");
+                        let clock = model::clock_snapshot();
+                        match self.inner.try_send((item, Some(clock))) {
+                            Ok(()) => {
+                                model::chan_wake(self.id);
+                                return Ok(());
+                            }
+                            Err(TrySendError::Full((v, _))) => {
+                                item = v;
+                                model::chan_block(self.id);
+                            }
+                            Err(TrySendError::Disconnected((v, _))) => return Err(SendError(v)),
+                        }
+                    }
+                } else {
+                    self.inner
+                        .send((t, None))
+                        .map_err(|SendError((v, _))| SendError(v))
+                }
+            }
+
+            pub fn try_send(&self, t: T) -> Result<(), TrySendError<T>> {
+                if model::in_model() {
+                    model::chan_yield(self.id, "try_send");
+                    let clock = model::clock_snapshot();
+                    match self.inner.try_send((t, Some(clock))) {
+                        Ok(()) => {
+                            model::chan_wake(self.id);
+                            Ok(())
+                        }
+                        Err(TrySendError::Full((v, _))) => Err(TrySendError::Full(v)),
+                        Err(TrySendError::Disconnected((v, _))) => {
+                            Err(TrySendError::Disconnected(v))
+                        }
+                    }
+                } else {
+                    self.inner.try_send((t, None)).map_err(|e| match e {
+                        TrySendError::Full((v, _)) => TrySendError::Full(v),
+                        TrySendError::Disconnected((v, _)) => TrySendError::Disconnected(v),
+                    })
+                }
+            }
+        }
+
+        impl<T> Receiver<T> {
+            pub fn recv(&self) -> Result<T, RecvError> {
+                if model::in_model() {
+                    loop {
+                        model::chan_yield(self.id, "recv");
+                        match self.inner.try_recv() {
+                            Ok((v, clock)) => {
+                                if let Some(c) = &clock {
+                                    model::join_clock(c);
+                                }
+                                model::chan_wake(self.id);
+                                return Ok(v);
+                            }
+                            Err(TryRecvError::Empty) => model::chan_block(self.id),
+                            Err(TryRecvError::Disconnected) => return Err(RecvError),
+                        }
+                    }
+                } else {
+                    self.inner.recv().map(|(v, _)| v)
+                }
+            }
+
+            pub fn try_recv(&self) -> Result<T, TryRecvError> {
+                if model::in_model() {
+                    model::chan_yield(self.id, "try_recv");
+                    match self.inner.try_recv() {
+                        Ok((v, clock)) => {
+                            if let Some(c) = &clock {
+                                model::join_clock(c);
+                            }
+                            model::chan_wake(self.id);
+                            Ok(v)
+                        }
+                        Err(e) => Err(e),
+                    }
+                } else {
+                    self.inner.try_recv().map(|(v, _)| v)
+                }
+            }
+
+            pub fn iter(&self) -> Iter<'_, T> {
+                Iter { rx: self }
+            }
+        }
+
+        pub struct Iter<'a, T> {
+            rx: &'a Receiver<T>,
+        }
+
+        impl<T> Iterator for Iter<'_, T> {
+            type Item = T;
+
+            fn next(&mut self) -> Option<T> {
+                self.rx.recv().ok()
+            }
+        }
+
+        impl<T> Clone for Sender<T> {
+            fn clone(&self) -> Self {
+                Sender {
+                    inner: self.inner.clone(),
+                    id: self.id,
+                }
+            }
+        }
+
+        impl<T> Clone for SyncSender<T> {
+            fn clone(&self) -> Self {
+                SyncSender {
+                    inner: self.inner.clone(),
+                    id: self.id,
+                }
+            }
+        }
+
+        // Dropping an endpoint can disconnect the channel: wake model
+        // waiters so they re-check and observe the disconnect. Safe
+        // ordering because woken threads only *run* after this thread's
+        // next yield point, by which time the field drop has completed.
+        impl<T> Drop for Sender<T> {
+            fn drop(&mut self) {
+                model::chan_wake(self.id);
+            }
+        }
+
+        impl<T> Drop for SyncSender<T> {
+            fn drop(&mut self) {
+                model::chan_wake(self.id);
+            }
+        }
+
+        impl<T> Drop for Receiver<T> {
+            fn drop(&mut self) {
+                model::chan_wake(self.id);
+            }
+        }
+
+        impl<T> fmt::Debug for Sender<T> {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                f.debug_struct("Sender").finish_non_exhaustive()
+            }
+        }
+
+        impl<T> fmt::Debug for SyncSender<T> {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                f.debug_struct("SyncSender").finish_non_exhaustive()
+            }
+        }
+
+        impl<T> fmt::Debug for Receiver<T> {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                f.debug_struct("Receiver").finish_non_exhaustive()
+            }
+        }
+    }
+}

@@ -1,0 +1,311 @@
+#!/usr/bin/env python3
+"""Static concurrency-correctness and determinism lints (PR 9).
+
+Three rule classes over the Rust sources (stdlib-only, no deps):
+
+  unsafe-comment    every `unsafe` block / fn / impl / trait in
+                    rust/src and rust/tests must carry a `// SAFETY:`
+                    justification on the same line or within the 6
+                    lines above (the compiler half of this gate is
+                    `#![deny(clippy::undocumented_unsafe_blocks)]` in
+                    rust/src/lib.rs; this script also covers
+                    integration tests, which are separate crates).
+
+  atomic-ordering   every explicit `Ordering::{Relaxed,Acquire,
+                    Release,AcqRel,SeqCst}` in non-test rust/src code
+                    must have a pairing comment — a `//` comment
+                    containing "pairs with" or "ordering:" on the same
+                    line or within the 10 lines above — so each memory
+                    ordering states what it synchronizes with (or that
+                    it deliberately synchronizes nothing).
+
+  nondeterminism    replay-deterministic modules (non-test rust/src)
+                    must not reach for wall clocks or OS entropy
+                    (`SystemTime::now`, `Instant::now`, `thread_rng`,
+                    `from_entropy`, `getrandom`, `RandomState`,
+                    `OsRng`, `rand::`), and must not iterate a
+                    HashMap/HashSet (unordered!) unless the result is
+                    sorted within the next 3 lines or the line carries
+                    `// lint: ordered-ok`. Legitimate wall-clock users
+                    (the real-time serving drivers, the bench harness,
+                    the SimClock's own real half) are enumerated in
+                    scripts/lint_allowlist.txt.
+
+Findings print as `path:line: [rule] message`; any unallowed finding
+exits 1. `--self-test` seeds one violation of each rule class (plus a
+clean twin) in a temp tree and asserts the expected catches — CI runs
+the self-test first, so a regression in the linter itself fails fast.
+"""
+
+import argparse
+import re
+import sys
+import tempfile
+from pathlib import Path
+
+UNSAFE_RE = re.compile(r"\bunsafe\b\s*(\{|fn\b|impl\b|trait\b)")
+ORDERING_RE = re.compile(r"\bOrdering::(Relaxed|Acquire|Release|AcqRel|SeqCst)\b")
+PAIRING_RE = re.compile(r"pairs with|ordering:", re.IGNORECASE)
+CFG_TEST_RE = re.compile(r"^\s*#\[cfg\((?:all\()?\s*test\b")
+NONDET_PATTERNS = [
+    ("SystemTime::now", "wall-clock read"),
+    ("Instant::now", "wall-clock read"),
+    (r"\bthread_rng\b", "OS-seeded RNG"),
+    (r"\bfrom_entropy\b", "OS-seeded RNG"),
+    (r"\bgetrandom\b", "OS entropy"),
+    (r"\bRandomState\b", "randomized hasher"),
+    (r"\bOsRng\b", "OS entropy"),
+    (r"\brand::", "external RNG"),
+]
+HASH_DECL_RE = re.compile(
+    r"\b(\w+)\s*:\s*&?(?:mut\s+)?(?:std::collections::)?Hash(?:Map|Set)\b"
+    r"|\blet\s+(?:mut\s+)?(\w+)(?::[^=;]*)?=\s*(?:std::collections::)?Hash(?:Map|Set)\b"
+)
+SORTED_RE = re.compile(r"\.sort|sorted|BTree")
+ORDERED_OK = "lint: ordered-ok"
+
+
+def strip_strings(code):
+    """Blank out string/char literal contents (crude but comment-safe)."""
+    return re.sub(r'"(?:[^"\\]|\\.)*"', '""', code)
+
+
+def split_comment(line):
+    """Return (code, comment) halves of a source line."""
+    stripped = strip_strings(line)
+    if "//" in stripped:
+        idx = stripped.index("//")
+        return stripped[:idx], stripped[idx:]
+    return stripped, ""
+
+
+def pre_test_len(lines):
+    """Lines before the first `#[cfg(test)]` / `#[cfg(all(test, ...))]`."""
+    for i, line in enumerate(lines):
+        if CFG_TEST_RE.match(line):
+            return i
+    return len(lines)
+
+
+def comment_nearby(lines, i, span, pattern):
+    """True if `pattern` appears in a comment on line i or `span` lines above."""
+    for j in range(max(0, i - span), i + 1):
+        _, comment = split_comment(lines[j])
+        if pattern.search(comment) if hasattr(pattern, "search") else pattern in comment:
+            return True
+    return False
+
+
+def lint_file(relpath, lines, findings):
+    is_src = str(relpath).startswith("rust/src/")
+    limit = pre_test_len(lines) if is_src else len(lines)
+
+    hash_idents = set()
+    if is_src:
+        for line in lines[:limit]:
+            code, _ = split_comment(line)
+            for m in HASH_DECL_RE.finditer(code):
+                hash_idents.add(m.group(1) or m.group(2))
+    iter_res = [
+        (
+            ident,
+            re.compile(
+                r"\bfor\b[^;]*\bin\s+&?(?:mut\s+)?" + re.escape(ident) + r"\b"
+                r"|\b" + re.escape(ident) + r"\s*\.\s*(?:iter|iter_mut|keys|values|values_mut|drain|into_iter)\s*\("
+            ),
+        )
+        for ident in sorted(hash_idents)
+    ]
+
+    for i, line in enumerate(lines):
+        code, _ = split_comment(line)
+
+        # unsafe-comment: whole file, src and tests alike.
+        if UNSAFE_RE.search(code) and not comment_nearby(lines, i, 6, "SAFETY"):
+            findings.append(
+                (relpath, i + 1, "unsafe-comment", line,
+                 "unsafe without a `// SAFETY:` justification within 6 lines")
+            )
+
+        if not is_src or i >= limit:
+            continue
+
+        # atomic-ordering: every explicit ordering states its pairing.
+        if ORDERING_RE.search(code) and not comment_nearby(lines, i, 10, PAIRING_RE):
+            findings.append(
+                (relpath, i + 1, "atomic-ordering", line,
+                 "explicit Ordering without a pairing comment "
+                 '("pairs with ..." / "ordering: ...") within 10 lines')
+            )
+
+        # nondeterminism: banned sources of run-to-run variation.
+        for pat, why in NONDET_PATTERNS:
+            if re.search(pat, code):
+                findings.append(
+                    (relpath, i + 1, "nondeterminism", line,
+                     f"{why} in a replay-deterministic module")
+                )
+
+        for ident, rx in iter_res:
+            if rx.search(code):
+                window = "\n".join(lines[i : i + 4])
+                if ORDERED_OK in window or SORTED_RE.search(window):
+                    continue
+                findings.append(
+                    (relpath, i + 1, "nondeterminism", line,
+                     f"iterating unordered `{ident}` (HashMap/HashSet) feeding "
+                     "output: sort within 3 lines or mark `// lint: ordered-ok`")
+                )
+
+
+def load_allowlist(path):
+    entries = []
+    if path and path.exists():
+        for raw in path.read_text().splitlines():
+            stripped = raw.strip()
+            if not stripped or stripped.startswith("#"):
+                continue
+            parts = stripped.split(maxsplit=2)
+            if len(parts) == 3:
+                entries.append(tuple(parts))
+    return entries
+
+
+def allowed(finding, entries):
+    relpath, _, rule, line, _ = finding
+    return any(
+        rule == e_rule and str(relpath) == e_path and substr in line
+        for e_rule, e_path, substr in entries
+    )
+
+
+def run(root, allowlist_path):
+    findings = []
+    for sub in ("rust/src", "rust/tests"):
+        base = root / sub
+        if not base.is_dir():
+            continue
+        for f in sorted(base.rglob("*.rs")):
+            rel = f.relative_to(root)
+            lint_file(rel, f.read_text().splitlines(), findings)
+    entries = load_allowlist(allowlist_path)
+    return [f for f in findings if not allowed(f, entries)]
+
+
+def self_test():
+    """Seed one violation per rule class plus clean twins; assert catches."""
+    seeds = {
+        # (file, contents, expected rules caught in that file)
+        "rust/src/st_bad_unsafe.rs": (
+            "pub fn deref(p: *const u32) -> u32 {\n    unsafe { *p }\n}\n",
+            {"unsafe-comment"},
+        ),
+        "rust/src/st_good_unsafe.rs": (
+            "pub fn deref(p: *const u32) -> u32 {\n"
+            "    // SAFETY: caller guarantees `p` is valid and aligned.\n"
+            "    unsafe { *p }\n}\n",
+            set(),
+        ),
+        "rust/src/st_bad_atomic.rs": (
+            "use std::sync::atomic::{AtomicU64, Ordering};\n"
+            "pub fn bump(a: &AtomicU64) {\n"
+            "    a.fetch_add(1, Ordering::Relaxed);\n}\n",
+            {"atomic-ordering"},
+        ),
+        "rust/src/st_good_atomic.rs": (
+            "use std::sync::atomic::{AtomicU64, Ordering};\n"
+            "pub fn bump(a: &AtomicU64) {\n"
+            "    // ordering: Relaxed pairs with the Relaxed reader.\n"
+            "    a.fetch_add(1, Ordering::Relaxed);\n}\n",
+            set(),
+        ),
+        "rust/src/st_bad_nondet.rs": (
+            "pub fn stamp() -> std::time::Instant {\n"
+            "    std::time::Instant::now()\n}\n",
+            {"nondeterminism"},
+        ),
+        "rust/src/st_bad_iter.rs": (
+            "use std::collections::HashMap;\n"
+            "pub fn dump(m: &HashMap<u32, u32>) -> Vec<u32> {\n"
+            "    let mut out = Vec::new();\n"
+            "    for (k, _) in m.iter() {\n"
+            "        out.push(*k);\n    }\n    out\n}\n",
+            {"nondeterminism"},
+        ),
+        "rust/src/st_good_iter.rs": (
+            "use std::collections::HashMap;\n"
+            "pub fn dump(m: &HashMap<u32, u32>) -> Vec<u32> {\n"
+            "    let mut out: Vec<u32> = m.keys().copied().collect();\n"
+            "    out.sort_unstable();\n    out\n}\n",
+            set(),
+        ),
+        "rust/src/st_test_gated.rs": (
+            "pub fn fine() {}\n"
+            "#[cfg(test)]\n"
+            "mod tests {\n"
+            "    use std::sync::atomic::{AtomicU64, Ordering};\n"
+            "    #[test]\n"
+            "    fn t() {\n"
+            "        AtomicU64::new(0).fetch_add(1, Ordering::SeqCst);\n"
+            "        let _ = std::time::Instant::now();\n    }\n}\n",
+            set(),  # everything below #[cfg(test)] is out of scope
+        ),
+    }
+    with tempfile.TemporaryDirectory() as tmp:
+        root = Path(tmp)
+        for rel, (contents, _) in seeds.items():
+            path = root / rel
+            path.parent.mkdir(parents=True, exist_ok=True)
+            path.write_text(contents)
+
+        remaining = run(root, None)
+        by_file = {}
+        for rel, _, rule, _, _ in remaining:
+            by_file.setdefault(str(rel), set()).add(rule)
+        ok = True
+        for rel, (_, expected) in seeds.items():
+            got = by_file.get(rel, set())
+            if got != expected:
+                print(f"self-test FAIL: {rel}: expected {sorted(expected)}, got {sorted(got)}")
+                ok = False
+
+        # Allowlist suppression: the same nondet seed, allowlisted away.
+        allow = root / "allow.txt"
+        allow.write_text(
+            "# comment lines and blanks are ignored\n\n"
+            "nondeterminism rust/src/st_bad_nondet.rs Instant::now\n"
+        )
+        suppressed = run(root, allow)
+        still = [f for f in suppressed if str(f[0]) == "rust/src/st_bad_nondet.rs"]
+        if still:
+            print("self-test FAIL: allowlist did not suppress st_bad_nondet.rs")
+            ok = False
+
+        print("self-test ok" if ok else "self-test failed")
+        return 0 if ok else 1
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", type=Path,
+                    default=Path(__file__).resolve().parent.parent)
+    ap.add_argument("--allowlist", type=Path, default=None,
+                    help="default: <root>/scripts/lint_allowlist.txt")
+    ap.add_argument("--self-test", action="store_true")
+    args = ap.parse_args()
+    if args.self_test:
+        return self_test()
+
+    allowlist = args.allowlist or args.root / "scripts" / "lint_allowlist.txt"
+    findings = run(args.root, allowlist)
+    for rel, lineno, rule, _, msg in findings:
+        print(f"{rel}:{lineno}: [{rule}] {msg}")
+    if findings:
+        print(f"{len(findings)} finding(s)")
+        return 1
+    print("lint_static: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
