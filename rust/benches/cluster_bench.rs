@@ -17,14 +17,16 @@
 //! mid-length run.
 
 use robus::alloc::{Policy, PolicyKind};
+use robus::cache::tier::{TierBudgets, TierCostModel, TierSpec};
 use robus::cluster::{
-    serve_federated_sim, AutoMembership, FederationConfig, MembershipPlan,
-    ServeFederationConfig,
+    AutoMembership, ClusterResult, FederationConfig, MembershipPlan, ServeFederationConfig,
 };
+use robus::coordinator::loop_::CommonConfig;
 use robus::coordinator::ServeConfig;
 use robus::domain::tenant::TenantSet;
 use robus::experiments::runner::{run_federated, run_with_policies_serial};
 use robus::experiments::setups;
+use robus::session::Session;
 use robus::sim::{ClusterConfig, SimEngine};
 use robus::util::bench::BenchSuite;
 use robus::util::json::Json;
@@ -146,16 +148,18 @@ fn main() {
     let serve_engine = SimEngine::new(ClusterConfig::default());
     let run_serving = |warm_start: bool| {
         let serve_cfg = ServeConfig {
+            common: CommonConfig {
+                batch_secs: 0.25,
+                seed: 42,
+                warm_start,
+                ..CommonConfig::default()
+            },
             duration_secs: if quick { 2.0 } else { 6.0 },
             rate_per_sec: 400.0,
             n_tenants: 4,
-            batch_secs: 0.25,
             queue_capacity: 16_384,
             admission: AdmissionPolicy::Drop,
-            stateful_gamma: None,
-            seed: 42,
             verbose: false,
-            warm_start,
         };
         let mut serve_fed = ServeFederationConfig::new(serve_cfg.clone(), 2);
         serve_fed.auto = Some(
@@ -166,13 +170,14 @@ fn main() {
         );
         let serve_policy: Box<dyn Policy> = PolicyKind::FastPf.build();
         let t_serve = std::time::Instant::now();
-        let served = serve_federated_sim(
+        let served = Session::serve_federated(
             &serve_universe,
             &serve_tenants,
             &serve_engine,
-            serve_policy.as_ref(),
-            &serve_fed,
-        );
+            serve_fed,
+        )
+        .sim()
+        .run(serve_policy.as_ref());
         (served, t_serve.elapsed().as_secs_f64())
     };
     let (served, serve_host_secs) = run_serving(true);
@@ -204,6 +209,54 @@ fn main() {
         ),
     ]);
 
+    // Tiered-uplift figure at the federation level (ISSUE 10): the same
+    // 4-shard §5.3 run at equal *total* cache bytes, all-RAM vs a small
+    // RAM tier backed by a 20× larger SSD plane. Per-shard tier budgets
+    // come from the federation's `TierSpec::split`, so this exercises
+    // the tiered accountant and the demotion path under sharding; the
+    // regression gate holds the retention ratio.
+    let total = ClusterConfig::default().cache_budget;
+    let tiered_fed_run = |tiers: Option<TierSpec>| {
+        let s = setup.clone().with_tiers(tiers);
+        let fed = FederationConfig::with_shards(4);
+        let policy: Box<dyn Policy> = PolicyKind::FastPf.build();
+        run_federated(&s, &fed, policy.as_ref())
+    };
+    let fed_qpm = |r: &ClusterResult| {
+        r.run.outcomes.len() as f64 / r.run.end_time.max(1e-9) * 60.0
+    };
+    let tiered_ram_only = tiered_fed_run(Some(TierSpec::single(total)));
+    let tiered_ram_ssd = tiered_fed_run(Some(TierSpec {
+        budgets: TierBudgets {
+            ram: total / 21,
+            ssd: total - total / 21,
+        },
+        cost: TierCostModel::default(),
+    }));
+    let tiered_retention = fed_qpm(&tiered_ram_ssd) / fed_qpm(&tiered_ram_only).max(1e-9);
+    println!(
+        "tiered 4-shard uplift at equal total bytes ({total} B): RAM-only {:.1} q/min vs \
+         RAM+20×SSD {:.1} q/min (retention {:.3})",
+        fed_qpm(&tiered_ram_only),
+        fed_qpm(&tiered_ram_ssd),
+        tiered_retention,
+    );
+    let tiered = Json::from_pairs(vec![
+        ("shards", Json::Number(4.0)),
+        ("total_bytes", Json::Number(total as f64)),
+        ("ram_only_qpm", Json::Number(fed_qpm(&tiered_ram_only))),
+        ("ram_ssd_qpm", Json::Number(fed_qpm(&tiered_ram_ssd))),
+        ("ram_ssd_over_ram_only", Json::Number(tiered_retention)),
+        (
+            "ram_only_fairness_spread",
+            Json::Number(tiered_ram_only.fairness_spread(&baseline.runs[0])),
+        ),
+        (
+            "ram_ssd_fairness_spread",
+            Json::Number(tiered_ram_ssd.fairness_spread(&baseline.runs[0])),
+        ),
+    ]);
+
     let report = Json::from_pairs(vec![
         (
             "suite",
@@ -213,6 +266,7 @@ fn main() {
         ("microbench", suite.to_json()),
         ("elasticity", elasticity),
         ("federated_serving", federated_serving),
+        ("tiered", tiered),
         (
             "single_node_serial",
             Json::from_pairs(vec![

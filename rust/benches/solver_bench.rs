@@ -16,10 +16,12 @@ use robus::alloc::mmf_mw::SimpleMmfMw;
 use robus::alloc::pf_mw::PfMw;
 use robus::alloc::rsd::RandomSerialDictatorship;
 use robus::alloc::{Policy, PolicyKind};
-use robus::coordinator::loop_::{Coordinator, CoordinatorConfig};
+use robus::cache::tier::{TierBudgets, TierCostModel, TierSpec};
+use robus::coordinator::loop_::{CommonConfig, Coordinator, CoordinatorConfig, RunResult};
 use robus::domain::tenant::TenantSet;
 use robus::experiments::analysis::random_sales_batch;
 use robus::runtime::solvers::{AcceleratedFastPf, CompiledSolvers};
+use robus::session::Session;
 use robus::sim::cluster::ClusterConfig;
 use robus::sim::engine::SimEngine;
 use robus::solver::gradient::GradientConfig;
@@ -124,11 +126,12 @@ fn main() {
     let tenants = TenantSet::equal(4);
     let engine = SimEngine::new(ClusterConfig::default());
     let coord_cfg = CoordinatorConfig {
-        batch_secs: 40.0,
+        common: CommonConfig {
+            batch_secs: 40.0,
+            seed: 7,
+            ..CommonConfig::default()
+        },
         n_batches: 1,
-        stateful_gamma: None,
-        seed: 7,
-        warm_start: false,
     };
     let coordinator = Coordinator::new(&universe, tenants, engine, coord_cfg);
     let window = WindowSpec {
@@ -142,7 +145,12 @@ fn main() {
     let fastpf = PolicyKind::FastPf.build();
     suite.bench("coordinator_full_batch_fastpf_n4", || {
         let mut gen = WorkloadGenerator::new(specs.clone(), &universe, 7);
-        coordinator.run(&mut gen, fastpf.as_ref()).outcomes.len()
+        // The coordinator is shared across iterations so only the batch
+        // itself is timed; the deprecated entry point is the thin
+        // delegate of `run_impl`, identical cost.
+        #[allow(deprecated)]
+        let run = coordinator.run(&mut gen, fastpf.as_ref());
+        run.outcomes.len()
     });
 
     // Compiled (PJRT) FASTPF — one execute per batch, including padding
@@ -166,22 +174,24 @@ fn main() {
     // `WarmState` is the only difference between the two columns.
     let solve_ns_for = |warm_start: bool| -> Vec<f64> {
         let cfg = CoordinatorConfig {
-            batch_secs: 40.0,
+            common: CommonConfig {
+                batch_secs: 40.0,
+                seed: 7,
+                warm_start,
+                ..CommonConfig::default()
+            },
             n_batches: 30,
-            stateful_gamma: None,
-            seed: 7,
-            warm_start,
         };
-        let coord = Coordinator::new(
-            &universe,
-            TenantSet::equal(4),
-            SimEngine::new(ClusterConfig::default()),
-            cfg,
-        );
         let mut out = Vec::new();
         for pass in 0..3u64 {
             let mut gen = WorkloadGenerator::new(specs.clone(), &universe, 7 + pass);
-            let run = coord.run(&mut gen, fastpf.as_ref());
+            let run = Session::replay(
+                &universe,
+                TenantSet::equal(4),
+                SimEngine::new(ClusterConfig::default()),
+            )
+            .config(cfg.clone())
+            .run(&mut gen, fastpf.as_ref());
             out.extend(run.batches.iter().map(|b| b.solve_secs * 1e9));
         }
         out
@@ -204,8 +214,72 @@ fn main() {
         ratio,
     );
 
+    // Tiered-uplift figure: the same workload and the same *total* cache
+    // bytes, all-RAM vs a small RAM tier backed by a 20× larger SSD
+    // plane (the production framing of the tier model). Fully simulated
+    // → deterministic; `check_bench_regression.py` gates the retention
+    // ratio so a collapsed tiered path can't land silently.
+    let total = ClusterConfig::default().cache_budget;
+    let tiered_run = |policy: &dyn Policy, tiers: Option<TierSpec>| -> RunResult {
+        let cfg = CoordinatorConfig {
+            common: CommonConfig {
+                batch_secs: 40.0,
+                seed: 7,
+                tiers,
+                ..CommonConfig::default()
+            },
+            n_batches: 8,
+        };
+        let mut gen = WorkloadGenerator::new(specs.clone(), &universe, 7);
+        Session::replay(
+            &universe,
+            TenantSet::equal(4),
+            SimEngine::new(ClusterConfig::default()),
+        )
+        .config(cfg)
+        .run(&mut gen, policy)
+    };
+    let qpm = |r: &RunResult| r.outcomes.len() as f64 / r.end_time.max(1e-9) * 60.0;
+    let static_baseline = tiered_run(PolicyKind::Static.build().as_ref(), None);
+    let ram_only = tiered_run(fastpf.as_ref(), Some(TierSpec::single(total)));
+    let ram_ssd = tiered_run(
+        fastpf.as_ref(),
+        Some(TierSpec {
+            budgets: TierBudgets {
+                ram: total / 21,
+                ssd: total - total / 21,
+            },
+            cost: TierCostModel::default(),
+        }),
+    );
+    let retention = qpm(&ram_ssd) / qpm(&ram_only).max(1e-9);
+    println!(
+        "\ntiered uplift at equal total bytes ({total} B): RAM-only {:.1} q/min vs \
+         RAM+20×SSD {:.1} q/min (retention {:.3})",
+        qpm(&ram_only),
+        qpm(&ram_ssd),
+        retention,
+    );
+
     println!("\n{}", suite.markdown());
     let mut doc = suite.to_json();
+    doc.set(
+        "tiered",
+        Json::from_pairs(vec![
+            ("total_bytes", Json::Number(total as f64)),
+            ("ram_only_qpm", Json::Number(qpm(&ram_only))),
+            ("ram_ssd_qpm", Json::Number(qpm(&ram_ssd))),
+            ("ram_ssd_over_ram_only", Json::Number(retention)),
+            (
+                "ram_only_fairness_spread",
+                Json::Number(robus::cluster::speedup_spread(&ram_only, &static_baseline)),
+            ),
+            (
+                "ram_ssd_fairness_spread",
+                Json::Number(robus::cluster::speedup_spread(&ram_ssd, &static_baseline)),
+            ),
+        ]),
+    );
     doc.set(
         "warm_start",
         Json::from_pairs(vec![

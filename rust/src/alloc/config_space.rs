@@ -16,6 +16,7 @@
 
 use std::collections::HashMap;
 
+use crate::cache::tier::TierAssignment;
 use crate::domain::utility::BatchUtilities;
 use crate::util::mask::ConfigMask;
 use crate::util::rng::Pcg64;
@@ -32,20 +33,30 @@ pub struct ConfigId(pub usize);
 #[derive(Debug, Clone)]
 pub struct PruneTrace {
     pub rand_w: Vec<Vec<f64>>,
-    pub rand_opt: Vec<ConfigMask>,
+    /// The `(RAM, SSD)` optimum per random vector; the SSD plane is
+    /// empty in single-tier mode.
+    pub rand_opt: Vec<TierAssignment>,
 }
 
 /// A pruned configuration space with precomputed scaled utilities.
+///
+/// Configurations are `(RAM, SSD)` plane pairs ([`TierAssignment`]); in
+/// single-tier mode every SSD plane is empty and the space behaves
+/// exactly like the pre-tier mask arena (interning, ids, and v rows all
+/// bit-identical).
 #[derive(Debug, Clone)]
 pub struct ConfigSpace {
-    /// Interned configurations, in insertion order (index = ConfigId).
+    /// Interned RAM planes, in insertion order (index = ConfigId).
     configs: Vec<ConfigMask>,
+    /// SSD planes, parallel to `configs` (all-empty in single-tier mode).
+    ssd: Vec<ConfigMask>,
     /// Flat row-major scaled-utility matrix: `v[s * n_tenants + i]` =
     /// `V_i(configs[s])`.
     v: Vec<f64>,
     n_tenants: usize,
-    /// Interning table: mask → id (deduplication in O(1) expected).
-    interner: HashMap<ConfigMask, ConfigId>,
+    /// Interning table: (RAM, SSD) pair → id (deduplication in O(1)
+    /// expected).
+    interner: HashMap<TierAssignment, ConfigId>,
 }
 
 impl ConfigSpace {
@@ -53,17 +64,27 @@ impl ConfigSpace {
     pub fn new(n_tenants: usize) -> Self {
         ConfigSpace {
             configs: Vec::new(),
+            ssd: Vec::new(),
             v: Vec::new(),
             n_tenants,
             interner: HashMap::new(),
         }
     }
 
-    /// Build from explicit configurations.
+    /// Build from explicit single-tier configurations.
     pub fn from_configs(batch: &BatchUtilities, configs: Vec<ConfigMask>) -> Self {
         let mut space = Self::new(batch.n_tenants);
         for c in configs {
             space.push(batch, c);
+        }
+        space
+    }
+
+    /// Build from explicit `(RAM, SSD)` pairs.
+    pub fn from_pairs(batch: &BatchUtilities, pairs: Vec<TierAssignment>) -> Self {
+        let mut space = Self::new(batch.n_tenants);
+        for p in pairs {
+            space.push_pair(batch, p);
         }
         space
     }
@@ -94,20 +115,23 @@ impl ConfigSpace {
         // One reusable WELFARE skeleton for the whole sweep.
         let mut welfare = batch.welfare_template();
 
-        // Per-tenant solo optima (unit weight vectors).
+        // Per-tenant solo optima (unit weight vectors). `solve_pair` is
+        // the plain exact solve plus (in two-tier mode only) the SSD
+        // phase; single-tier float operations and RNG draws are
+        // untouched.
         for i in 0..n {
             if batch.u_star[i] <= 0.0 {
                 continue;
             }
             let mut w = vec![0.0; n];
             w[i] = 1.0;
-            let sol = welfare.solve(&w);
-            space.push(batch, ConfigMask::from_bools(&sol.selected));
+            let pair = welfare.solve_pair(&w);
+            space.push_pair(batch, pair);
         }
 
         // Uniform weights (the overall welfare optimum).
-        let sol = welfare.solve(&vec![1.0; n]);
-        space.push(batch, ConfigMask::from_bools(&sol.selected));
+        let pair = welfare.solve_pair(&vec![1.0; n]);
+        space.push_pair(batch, pair);
 
         // m random unit vectors.
         let mut trace = PruneTrace {
@@ -116,24 +140,33 @@ impl ConfigSpace {
         };
         for _ in 0..m {
             let w = rng.unit_weight_vector(n);
-            let sol = welfare.solve(&w);
-            let mask = ConfigMask::from_bools(&sol.selected);
-            space.push(batch, mask.clone());
+            let pair = welfare.solve_pair(&w);
+            space.push_pair(batch, pair.clone());
             trace.rand_w.push(w);
-            trace.rand_opt.push(mask);
+            trace.rand_opt.push(pair);
         }
         (space, trace)
     }
 
-    /// Intern a configuration; returns its (possibly pre-existing) id.
+    /// Intern a single-tier configuration (empty SSD plane); returns its
+    /// (possibly pre-existing) id.
     pub fn push(&mut self, batch: &BatchUtilities, config: ConfigMask) -> ConfigId {
-        if let Some(&id) = self.interner.get(&config) {
+        self.push_pair(batch, TierAssignment::single(config))
+    }
+
+    /// Intern a `(RAM, SSD)` pair; returns its (possibly pre-existing)
+    /// id. With an empty SSD plane the scoring delegates to the
+    /// single-tier evaluation, so single-tier v rows are bit-identical
+    /// to the pre-tier arena.
+    pub fn push_pair(&mut self, batch: &BatchUtilities, pair: TierAssignment) -> ConfigId {
+        if let Some(&id) = self.interner.get(&pair) {
             return id;
         }
         let id = ConfigId(self.configs.len());
-        self.v.extend(batch.scaled_utilities(&config));
-        self.interner.insert(config.clone(), id);
-        self.configs.push(config);
+        self.v.extend(batch.scaled_utilities_pair(&pair));
+        self.interner.insert(pair.clone(), id);
+        self.configs.push(pair.ram);
+        self.ssd.push(pair.ssd);
         id
     }
 
@@ -145,19 +178,51 @@ impl ConfigSpace {
         self.configs.is_empty()
     }
 
-    /// The interned configurations in id order.
+    /// The interned RAM planes in id order (the full configuration in
+    /// single-tier mode).
     pub fn masks(&self) -> &[ConfigMask] {
         &self.configs
     }
 
-    /// One configuration by id.
+    /// The interned SSD planes in id order (all empty in single-tier
+    /// mode).
+    pub fn ssd_masks(&self) -> &[ConfigMask] {
+        &self.ssd
+    }
+
+    /// One configuration's RAM plane by id.
     pub fn config(&self, id: ConfigId) -> &ConfigMask {
         &self.configs[id.0]
     }
 
-    /// Look up the id of an already-interned configuration.
+    /// One full `(RAM, SSD)` pair by id.
+    pub fn pair(&self, id: ConfigId) -> TierAssignment {
+        TierAssignment {
+            ram: self.configs[id.0].clone(),
+            ssd: self.ssd[id.0].clone(),
+        }
+    }
+
+    /// Iterate the interned `(RAM, SSD)` pairs in id order.
+    pub fn pairs(&self) -> impl Iterator<Item = TierAssignment> + '_ {
+        self.configs
+            .iter()
+            .zip(&self.ssd)
+            .map(|(r, s)| TierAssignment {
+                ram: r.clone(),
+                ssd: s.clone(),
+            })
+    }
+
+    /// Look up the id of an already-interned single-tier configuration
+    /// (i.e. the pair with an empty SSD plane).
     pub fn id_of(&self, config: &ConfigMask) -> Option<ConfigId> {
-        self.interner.get(config).copied()
+        self.id_of_pair(&TierAssignment::single(config.clone()))
+    }
+
+    /// Look up the id of an already-interned `(RAM, SSD)` pair.
+    pub fn id_of_pair(&self, pair: &TierAssignment) -> Option<ConfigId> {
+        self.interner.get(pair).copied()
     }
 
     /// Scaled-utility row of configuration `s`: `V_i(S_s)` for all i.
@@ -274,13 +339,57 @@ mod tests {
         assert_eq!(trace.rand_w.len(), 12);
         assert_eq!(trace.rand_opt.len(), 12);
         // Every recorded optimum is interned, and re-solving the exact
-        // oracle for the recorded vector reproduces it.
+        // oracle for the recorded vector reproduces it. Single-tier:
+        // every recorded pair has an empty SSD plane.
         let mut welfare = b.welfare_template();
         for (w, opt) in trace.rand_w.iter().zip(&trace.rand_opt) {
-            assert!(space_b.id_of(opt).is_some());
+            assert!(space_b.id_of_pair(opt).is_some());
+            assert!(opt.ssd.none_set());
             let sol = welfare.solve(w);
-            assert_eq!(&mask(&sol.selected), opt);
+            assert_eq!(mask(&sol.selected), opt.ram);
         }
+    }
+
+    #[test]
+    fn tiered_pruning_interns_pairs_and_scores_with_discount() {
+        use crate::cache::tier::TierAssignment;
+        use crate::domain::utility::TierPlan;
+        let b = table2();
+        let plan = TierPlan {
+            ssd_budget: b.budget,
+            discount: 0.5,
+        };
+        let bt = b.clone().with_tier(Some(plan));
+        let (space, trace) = ConfigSpace::pruned_traced(&bt, 10, &mut Pcg64::new(7));
+        // The RAM planes match the single-tier sweep exactly (phase 1 is
+        // the unchanged exact solve over the same RNG stream)…
+        let single = ConfigSpace::pruned(&b, 10, &mut Pcg64::new(7));
+        let ram_planes: Vec<_> = space.pairs().map(|p| p.ram).collect();
+        for m in single.masks() {
+            assert!(ram_planes.contains(m), "missing RAM plane {m:?}");
+        }
+        // …and at least one pair fills its SSD plane (budget equals RAM,
+        // so a second-best view always fits).
+        assert!(space.pairs().any(|p| !p.ssd.none_set()));
+        assert!(trace.rand_opt.iter().all(|p| space.id_of_pair(p).is_some()));
+        // v rows are the discounted pair evaluation.
+        for (s, p) in space.pairs().enumerate() {
+            assert_eq!(space.v_row(s), bt.scaled_utilities_pair(&p).as_slice());
+        }
+        // Pairs differing only in the SSD plane intern as distinct ids.
+        let mut arena = ConfigSpace::new(b.n_tenants);
+        let ram = mask(&[true, false, false]);
+        let a = arena.push_pair(&bt, TierAssignment::single(ram.clone()));
+        let bb = arena.push_pair(
+            &bt,
+            TierAssignment {
+                ram: ram.clone(),
+                ssd: mask(&[false, true, false]),
+            },
+        );
+        assert_ne!(a, bb);
+        assert_eq!(arena.len(), 2);
+        assert_eq!(arena.id_of(&ram), Some(a));
     }
 
     /// Cross-batch reuse: ids assigned by `from_configs` stay stable

@@ -14,6 +14,7 @@
 use crate::alloc::config_space::ConfigSpace;
 use crate::alloc::warm::{BatchSignature, FastPfWarm, WarmState};
 use crate::alloc::{Allocation, ConfigMask, Policy};
+use crate::cache::tier::TierAssignment;
 use crate::domain::utility::BatchUtilities;
 use crate::solver::gradient::{maximize, GradientConfig, Objective};
 use crate::util::rng::Pcg64;
@@ -134,14 +135,7 @@ impl FastPf {
         if x.iter().sum::<f64>() <= 0.0 {
             return Allocation::deterministic(ConfigMask::empty(batch.n_views()));
         }
-        Allocation::from_weighted(
-            space
-                .masks()
-                .iter()
-                .cloned()
-                .zip(x.iter().copied())
-                .collect(),
-        )
+        Allocation::from_weighted_pairs(space.pairs().zip(x.iter().copied()).collect())
     }
 
     /// Store the just-solved batch as the next warm start.
@@ -150,20 +144,15 @@ impl FastPf {
         sig: BatchSignature,
         space: &ConfigSpace,
         rand_w: Vec<Vec<f64>>,
-        rand_opt: Vec<ConfigMask>,
+        rand_opt: Vec<TierAssignment>,
         x: &[f64],
     ) {
         warm.fastpf = Some(FastPfWarm {
             sig,
-            masks: space.masks().to_vec(),
+            pairs: space.pairs().collect(),
             rand_w,
             rand_opt,
-            x_by_mask: space
-                .masks()
-                .iter()
-                .cloned()
-                .zip(x.iter().copied())
-                .collect(),
+            x_by_pair: space.pairs().zip(x.iter().copied()).collect(),
         });
     }
 }
@@ -207,7 +196,7 @@ impl Policy for FastPf {
         // Re-score every carried config against the new batch: the
         // candidate set that challenges each cached optimum below.
         let prev_sig = prev.sig;
-        let prev_space = ConfigSpace::from_configs(batch, prev.masks);
+        let prev_space = ConfigSpace::from_pairs(batch, prev.pairs);
 
         // Fresh space with the same enumeration skeleton as `pruned`,
         // but only the cheap anchors solved exactly up front.
@@ -221,30 +210,30 @@ impl Policy for FastPf {
             }
             let mut w = vec![0.0; n];
             w[i] = 1.0;
-            let sol = welfare.solve(&w);
-            space.push(batch, ConfigMask::from_bools(&sol.selected));
+            let pair = welfare.solve_pair(&w);
+            space.push_pair(batch, pair);
         }
-        let sol = welfare.solve(&vec![1.0; n]);
-        space.push(batch, ConfigMask::from_bools(&sol.selected));
+        let pair = welfare.solve_pair(&vec![1.0; n]);
+        space.push_pair(batch, pair);
 
         // The expensive half: one exact knapsack per random vector on
         // the cold path. Reuse the cached optimum S_k when (a) the
-        // class structure over S_k's member views is unchanged and
-        // (b) S_k still wins weight vector w_k within the re-scored
-        // previous space (every old candidate re-challenges it under
-        // the new utilities); otherwise re-solve exactly.
+        // class structure over S_k's member views (either tier) is
+        // unchanged and (b) S_k still wins weight vector w_k within the
+        // re-scored previous space (every old candidate re-challenges
+        // it under the new utilities); otherwise re-solve exactly.
         let mut rand_opt = Vec::with_capacity(prev.rand_w.len());
         for (w, prev_opt) in prev.rand_w.iter().zip(&prev.rand_opt) {
-            let still_optimal = sig.views_unchanged(&prev_sig, prev_opt)
+            let still_optimal = sig.views_unchanged(&prev_sig, &prev_opt.union())
                 && prev_space
-                    .id_of(prev_opt)
+                    .id_of_pair(prev_opt)
                     .is_some_and(|id| prev_space.restricted_welfare(w) == id);
             let opt = if still_optimal {
                 prev_opt.clone()
             } else {
-                ConfigMask::from_bools(&welfare.solve(w).selected)
+                welfare.solve_pair(w)
             };
-            space.push(batch, opt.clone());
+            space.push_pair(batch, opt.clone());
             rand_opt.push(opt);
         }
 
@@ -252,8 +241,8 @@ impl Policy for FastPf {
         // mapped through the interner onto the fresh id order.
         let m = space.len();
         let mut x0 = vec![0.0; m];
-        for (mask, p) in &prev.x_by_mask {
-            if let Some(id) = space.id_of(mask) {
+        for (pair, p) in &prev.x_by_pair {
+            if let Some(id) = space.id_of_pair(pair) {
                 x0[id.0] += *p;
             }
         }

@@ -149,14 +149,7 @@ impl Policy for MaxMinFair {
         if x.iter().sum::<f64>() <= 0.0 {
             return Allocation::deterministic(ConfigMask::empty(batch.n_views()));
         }
-        Allocation::from_weighted(
-            space
-                .masks()
-                .iter()
-                .cloned()
-                .zip(x.iter().copied())
-                .collect(),
-        )
+        Allocation::from_weighted_pairs(space.pairs().zip(x.iter().copied()).collect())
     }
 }
 

@@ -17,6 +17,7 @@
 
 use crate::alloc::warm::{BatchSignature, MmfWarm, WarmState};
 use crate::alloc::{Allocation, ConfigMask, Policy};
+use crate::cache::tier::TierAssignment;
 use crate::domain::utility::BatchUtilities;
 use crate::util::rng::Pcg64;
 
@@ -54,8 +55,9 @@ impl SimpleMmfMw {
     }
 
     /// Run Algorithm 2; returns (configs, probabilities) before
-    /// normalization into an [`Allocation`].
-    pub fn solve(&self, batch: &BatchUtilities) -> Vec<(ConfigMask, f64)> {
+    /// normalization into an [`Allocation`]. Configurations are
+    /// `(RAM, SSD)` pairs; SSD planes are empty in single-tier mode.
+    pub fn solve(&self, batch: &BatchUtilities) -> Vec<(TierAssignment, f64)> {
         let mut no_warm = None;
         self.solve_inner(batch, &mut no_warm)
     }
@@ -71,7 +73,7 @@ impl SimpleMmfMw {
         &self,
         batch: &BatchUtilities,
         warm: &mut WarmState,
-    ) -> Vec<(ConfigMask, f64)> {
+    ) -> Vec<(TierAssignment, f64)> {
         let mut slot = Some(warm);
         self.solve_inner(batch, &mut slot)
     }
@@ -80,11 +82,14 @@ impl SimpleMmfMw {
         &self,
         batch: &BatchUtilities,
         warm: &mut Option<&mut WarmState>,
-    ) -> Vec<(ConfigMask, f64)> {
+    ) -> Vec<(TierAssignment, f64)> {
         let active = batch.active_tenants();
         let n = active.len();
         if n == 0 {
-            return vec![(ConfigMask::empty(batch.n_views()), 1.0)];
+            return vec![(
+                TierAssignment::single(ConfigMask::empty(batch.n_views())),
+                1.0,
+            )];
         }
         let sig = warm.as_ref().map(|_| BatchSignature::of(batch));
         let seeded = match (warm.as_mut(), sig.as_ref()) {
@@ -101,7 +106,7 @@ impl SimpleMmfMw {
         // Dual weights live on active tenants only.
         let mut w = seeded.unwrap_or_else(|| vec![1.0 / n as f64; n]);
         let mut full_w = vec![0.0; batch.n_tenants];
-        let mut pairs: Vec<(ConfigMask, f64)> = Vec::new();
+        let mut pairs: Vec<(TierAssignment, f64)> = Vec::new();
         let mut stable = 0usize;
         for k in 0..t_iters {
             // WELFARE(w): lift the active-tenant weights into a full
@@ -109,9 +114,8 @@ impl SimpleMmfMw {
             for (j, &i) in active.iter().enumerate() {
                 full_w[i] = w[j];
             }
-            let sol = welfare.solve(&full_w);
-            let mask = ConfigMask::from_bools(&sol.selected);
-            let v = batch.scaled_utilities(&mask);
+            let pair = welfare.solve_pair(&full_w);
+            let v = batch.scaled_utilities_pair(&pair);
             // Multiplicative update: tenants satisfied by S are
             // down-weighted (Algorithm 2 line 7).
             for (j, &i) in active.iter().enumerate() {
@@ -122,16 +126,16 @@ impl SimpleMmfMw {
                 *wj /= norm;
             }
             match pairs.last() {
-                Some((last, _)) if *last == mask => stable += 1,
+                Some((last, _)) if *last == pair => stable += 1,
                 _ => stable = 0,
             }
-            pairs.push((mask.clone(), 1.0 / t_iters as f64));
+            pairs.push((pair.clone(), 1.0 / t_iters as f64));
             // Seeded runs re-enter near the fixed point; once the
             // optimum stops moving, hand the rest of the mass to it.
             if was_seeded && stable >= MMF_STABLE_EXIT && k + 1 >= MMF_MIN_ITERS {
                 let remaining = (t_iters - (k + 1)) as f64 / t_iters as f64;
                 if remaining > 0.0 {
-                    pairs.push((mask, remaining));
+                    pairs.push((pair, remaining));
                 }
                 break;
             }
@@ -153,7 +157,7 @@ impl Policy for SimpleMmfMw {
     }
 
     fn allocate(&self, batch: &BatchUtilities, _rng: &mut Pcg64) -> Allocation {
-        Allocation::from_weighted(self.solve(batch))
+        Allocation::from_weighted_pairs(self.solve(batch))
     }
 
     fn allocate_warm(
@@ -162,7 +166,7 @@ impl Policy for SimpleMmfMw {
         _rng: &mut Pcg64,
         warm: &mut WarmState,
     ) -> Allocation {
-        Allocation::from_weighted(self.solve_warm(batch, warm))
+        Allocation::from_weighted_pairs(self.solve_warm(batch, warm))
     }
 }
 
@@ -244,7 +248,7 @@ mod tests {
         let again = policy.solve_warm(&b, &mut warm);
         let mass: f64 = again.iter().map(|(_, p)| p).sum();
         assert!((mass - 1.0).abs() < 1e-9, "mass={mass}");
-        let v = Allocation::from_weighted(again).expected_scaled_utilities(&b);
+        let v = Allocation::from_weighted_pairs(again).expected_scaled_utilities(&b);
         let min = v.iter().cloned().fold(f64::INFINITY, f64::min);
         assert!(min >= 0.5 * 0.75, "v={v:?}");
     }

@@ -26,22 +26,35 @@ pub use config_space::{ConfigId, ConfigSpace};
 pub use crate::util::mask::ConfigMask;
 pub use warm::{BatchSignature, WarmState};
 
+use crate::cache::tier::TierAssignment;
 use crate::domain::utility::BatchUtilities;
 use crate::util::rng::Pcg64;
 
 /// A randomized allocation: configurations with probabilities summing
-/// to 1 (Definition 2). Configurations are explicit view-selection masks.
+/// to 1 (Definition 2). Configurations are `(RAM, SSD)` plane pairs;
+/// in single-tier mode every SSD plane is empty and `configs` alone is
+/// the full configuration, exactly as before tiers existed.
 #[derive(Debug, Clone)]
 pub struct Allocation {
+    /// RAM planes (the whole configuration in single-tier mode).
     pub configs: Vec<ConfigMask>,
+    /// SSD planes, parallel to `configs` (empty masks in single-tier
+    /// mode).
+    pub ssd: Vec<ConfigMask>,
     pub probs: Vec<f64>,
 }
 
 impl Allocation {
     /// A deterministic allocation (one configuration with probability 1).
     pub fn deterministic(config: ConfigMask) -> Self {
+        Self::deterministic_pair(TierAssignment::single(config))
+    }
+
+    /// A deterministic allocation over a `(RAM, SSD)` pair.
+    pub fn deterministic_pair(pair: TierAssignment) -> Self {
         Self {
-            configs: vec![config],
+            configs: vec![pair.ram],
+            ssd: vec![pair.ssd],
             probs: vec![1.0],
         }
     }
@@ -50,8 +63,21 @@ impl Allocation {
     /// negligible-probability entries. Duplicate configurations are
     /// merged. Panics if total weight is not positive.
     pub fn from_weighted(pairs: Vec<(ConfigMask, f64)>) -> Self {
+        Self::from_weighted_pairs(
+            pairs
+                .into_iter()
+                .map(|(c, w)| (TierAssignment::single(c), w))
+                .collect(),
+        )
+    }
+
+    /// [`Allocation::from_weighted`] over `(RAM, SSD)` pairs. The merge
+    /// map is keyed by the pair; with all-empty SSD planes the derived
+    /// pair ordering collapses to the RAM-mask ordering, so single-tier
+    /// output is bit-identical to the pre-tier builder.
+    pub fn from_weighted_pairs(pairs: Vec<(TierAssignment, f64)>) -> Self {
         use std::collections::BTreeMap;
-        let mut merged: BTreeMap<ConfigMask, f64> = BTreeMap::new();
+        let mut merged: BTreeMap<TierAssignment, f64> = BTreeMap::new();
         for (c, w) in pairs {
             // LP/gradient solvers can emit O(1e-9) negative residuals;
             // clamp those, reject anything materially negative.
@@ -62,13 +88,15 @@ impl Allocation {
         }
         let total: f64 = merged.values().sum();
         assert!(total > 0.0, "allocation has zero total probability");
-        let (configs, probs): (Vec<_>, Vec<_>) = merged
+        let (kept, probs): (Vec<_>, Vec<_>) = merged
             .into_iter()
             .filter(|(_, w)| *w / total > 1e-9)
             .unzip();
         let renorm: f64 = probs.iter().sum();
+        let (configs, ssd) = kept.into_iter().map(|p| (p.ram, p.ssd)).unzip();
         Self {
             configs,
+            ssd,
             probs: probs.into_iter().map(|p| p / renorm).collect(),
         }
     }
@@ -78,17 +106,34 @@ impl Allocation {
         self.probs.iter().sum()
     }
 
-    /// Sample one configuration.
+    /// Sample one configuration's RAM plane.
     pub fn sample(&self, rng: &mut Pcg64) -> &ConfigMask {
         &self.configs[rng.weighted_index(&self.probs)]
     }
 
-    /// Expected scaled utilities V_i(x) = Σ_S x_S V_i(S).
+    /// Sample one full `(RAM, SSD)` configuration. Consumes exactly the
+    /// same single RNG draw as [`Allocation::sample`], so single-tier
+    /// replay streams are unchanged.
+    pub fn sample_pair(&self, rng: &mut Pcg64) -> TierAssignment {
+        let i = rng.weighted_index(&self.probs);
+        TierAssignment {
+            ram: self.configs[i].clone(),
+            ssd: self.ssd[i].clone(),
+        }
+    }
+
+    /// Expected scaled utilities V_i(x) = Σ_S x_S V_i(S), tier-aware
+    /// (SSD-resident classes count at the tier discount; with empty SSD
+    /// planes the evaluation is the unchanged single-tier one).
     pub fn expected_scaled_utilities(&self, batch: &BatchUtilities) -> Vec<f64> {
         let mut v = vec![0.0; batch.n_tenants];
-        for (c, p) in self.configs.iter().zip(&self.probs) {
-            for (i, s) in batch.scaled_utilities(c).iter().enumerate() {
-                v[i] += p * s;
+        for ((c, s), p) in self.configs.iter().zip(&self.ssd).zip(&self.probs) {
+            let pair = TierAssignment {
+                ram: c.clone(),
+                ssd: s.clone(),
+            };
+            for (i, u) in batch.scaled_utilities_pair(&pair).iter().enumerate() {
+                v[i] += p * u;
             }
         }
         v
@@ -105,9 +150,18 @@ impl Allocation {
         u
     }
 
-    /// Expected cache bytes used.
+    /// Expected RAM-tier cache bytes used.
     pub fn expected_cache_bytes(&self, batch: &BatchUtilities) -> f64 {
         self.configs
+            .iter()
+            .zip(&self.probs)
+            .map(|(c, p)| p * batch.size_of(c))
+            .sum()
+    }
+
+    /// Expected SSD-tier cache bytes used (0 in single-tier mode).
+    pub fn expected_ssd_bytes(&self, batch: &BatchUtilities) -> f64 {
+        self.ssd
             .iter()
             .zip(&self.probs)
             .map(|(c, p)| p * batch.size_of(c))
@@ -339,6 +393,58 @@ mod tests {
     #[should_panic]
     fn zero_weight_allocation_panics() {
         Allocation::from_weighted(vec![(mask(&[true]), 0.0)]);
+    }
+
+    #[test]
+    fn pair_builder_merges_on_both_planes() {
+        let ram = mask(&[true, false]);
+        let a = Allocation::from_weighted_pairs(vec![
+            (TierAssignment::single(ram.clone()), 1.0),
+            (
+                TierAssignment {
+                    ram: ram.clone(),
+                    ssd: mask(&[false, true]),
+                },
+                2.0,
+            ),
+            (TierAssignment::single(ram.clone()), 1.0),
+        ]);
+        // Same RAM plane with different SSD planes stays distinct.
+        assert_eq!(a.configs.len(), 2);
+        assert_eq!(a.ssd.len(), 2);
+        assert!((a.total_probability() - 1.0).abs() < 1e-12);
+        // Single-tier builder output carries empty SSD planes and
+        // matches the pair builder restricted to empty planes.
+        let single = Allocation::from_weighted(vec![
+            (mask(&[true, false]), 1.0),
+            (mask(&[false, true]), 3.0),
+        ]);
+        assert!(single.ssd.iter().all(|s| s.none_set()));
+        assert_eq!(single.configs.len(), single.ssd.len());
+    }
+
+    #[test]
+    fn sample_pair_consumes_one_draw_like_sample() {
+        let a = Allocation::from_weighted_pairs(vec![
+            (TierAssignment::single(mask(&[true, false])), 3.0),
+            (
+                TierAssignment {
+                    ram: mask(&[false, true]),
+                    ssd: mask(&[true, false]),
+                },
+                1.0,
+            ),
+        ]);
+        let mut r1 = Pcg64::new(11);
+        let mut r2 = Pcg64::new(11);
+        for _ in 0..200 {
+            let ram_only = a.sample(&mut r1).clone();
+            let pair = a.sample_pair(&mut r2);
+            assert_eq!(ram_only, pair.ram);
+        }
+        // Identical residual RNG state: the pair sample used exactly one
+        // draw per call too.
+        assert_eq!(r1.next_f64(), r2.next_f64());
     }
 
     #[test]

@@ -17,6 +17,7 @@
 use crate::alloc::mw::{ahk_from, AhkOutcome, AhkParams, OracleResponse};
 use crate::alloc::warm::{BatchSignature, PfMwWarm, WarmState};
 use crate::alloc::{Allocation, ConfigMask, Policy};
+use crate::cache::tier::TierAssignment;
 use crate::domain::utility::{BatchUtilities, WelfareTemplate};
 use crate::util::rng::Pcg64;
 
@@ -91,7 +92,7 @@ impl PfMw {
         welfare: &mut WelfareTemplate,
         active: &[usize],
         q: f64,
-    ) -> Option<Vec<ConfigMask>> {
+    ) -> Option<Vec<TierAssignment>> {
         self.pf_feas_from(batch, welfare, active, q, None, None).0
     }
 
@@ -108,7 +109,7 @@ impl PfMw {
         q: f64,
         y0: Option<&[f64]>,
         stable_exit: Option<usize>,
-    ) -> (Option<Vec<ConfigMask>>, Vec<f64>) {
+    ) -> (Option<Vec<TierAssignment>>, Vec<f64>) {
         let n = active.len();
         let params = AhkParams {
             rho: 1.0,
@@ -125,9 +126,8 @@ impl PfMw {
                 for (j, &i) in active.iter().enumerate() {
                     full_w[i] = y[j];
                 }
-                let sol = welfare.solve(&full_w);
-                let mask = ConfigMask::from_bools(&sol.selected);
-                let v = batch.scaled_utilities(&mask);
+                let pair = welfare.solve_pair(&full_w);
+                let v = batch.scaled_utilities_pair(&pair);
                 // γ part: minimize Σ y_i γ_i over (P2).
                 let gamma = min_gamma(y, q, n);
                 let value: f64 = active
@@ -141,7 +141,7 @@ impl PfMw {
                     .map(|(j, &i)| v[i] - gamma[j])
                     .collect();
                 OracleResponse {
-                    point: mask,
+                    point: pair,
                     value,
                     slacks,
                 }
@@ -157,12 +157,16 @@ impl PfMw {
     }
 
     /// Binary search for the largest feasible Q; returns the allocation
-    /// from the last feasible run.
-    pub fn solve(&self, batch: &BatchUtilities) -> Vec<(ConfigMask, f64)> {
+    /// from the last feasible run. Configurations are `(RAM, SSD)`
+    /// pairs; SSD planes are empty in single-tier mode.
+    pub fn solve(&self, batch: &BatchUtilities) -> Vec<(TierAssignment, f64)> {
         let active = batch.active_tenants();
         let n = active.len();
         if n == 0 {
-            return vec![(ConfigMask::empty(batch.n_views()), 1.0)];
+            return vec![(
+                TierAssignment::single(ConfigMask::empty(batch.n_views())),
+                1.0,
+            )];
         }
         let mut welfare = batch.welfare_template();
         let mut lo = -(n as f64) * (n as f64).ln() - 1e-9; // Q of all-SI floor
@@ -171,7 +175,10 @@ impl PfMw {
         let mut best = self.pf_feas(batch, &mut welfare, &active, lo);
         if best.is_none() {
             // Extremely degenerate batch; fall back to empty config.
-            return vec![(ConfigMask::empty(batch.n_views()), 1.0)];
+            return vec![(
+                TierAssignment::single(ConfigMask::empty(batch.n_views())),
+                1.0,
+            )];
         }
         for _ in 0..self.search_steps {
             let mid = 0.5 * (lo + hi);
@@ -201,11 +208,14 @@ impl PfMw {
         &self,
         batch: &BatchUtilities,
         warm: &mut WarmState,
-    ) -> Vec<(ConfigMask, f64)> {
+    ) -> Vec<(TierAssignment, f64)> {
         let active = batch.active_tenants();
         let n = active.len();
         if n == 0 {
-            return vec![(ConfigMask::empty(batch.n_views()), 1.0)];
+            return vec![(
+                TierAssignment::single(ConfigMask::empty(batch.n_views())),
+                1.0,
+            )];
         }
         let sig = BatchSignature::of(batch);
         let prev = warm
@@ -218,7 +228,7 @@ impl PfMw {
         let floor = -(n as f64) * (n as f64).ln() - 1e-9; // Q of all-SI floor
         let mut lo = floor;
         let mut hi = 0.0;
-        let mut best: Option<Vec<ConfigMask>> = None;
+        let mut best: Option<Vec<TierAssignment>> = None;
         let mut duals: Option<Vec<f64>> = prev.as_ref().map(|p| p.duals.clone());
         if let Some(p) = &prev {
             // Probe the previous converged Q* first: in steady state it
@@ -248,7 +258,10 @@ impl PfMw {
                 Some(points) => best = Some(points),
                 None => {
                     // Extremely degenerate batch; fall back to empty config.
-                    return vec![(ConfigMask::empty(batch.n_views()), 1.0)];
+                    return vec![(
+                        TierAssignment::single(ConfigMask::empty(batch.n_views())),
+                        1.0,
+                    )];
                 }
             }
             lo = floor;
@@ -285,7 +298,7 @@ impl Policy for PfMw {
     }
 
     fn allocate(&self, batch: &BatchUtilities, _rng: &mut Pcg64) -> Allocation {
-        Allocation::from_weighted(self.solve(batch))
+        Allocation::from_weighted_pairs(self.solve(batch))
     }
 
     fn allocate_warm(
@@ -294,7 +307,7 @@ impl Policy for PfMw {
         _rng: &mut Pcg64,
         warm: &mut WarmState,
     ) -> Allocation {
-        Allocation::from_weighted(self.solve_warm(batch, warm))
+        Allocation::from_weighted_pairs(self.solve_warm(batch, warm))
     }
 }
 
@@ -379,7 +392,7 @@ mod tests {
         // The seeded re-solve on the same workload keeps PF structure:
         // majority tenants biased up, minority tenant retained.
         let pairs = policy.solve_warm(&b, &mut warm);
-        let v = Allocation::from_weighted(pairs).expected_scaled_utilities(&b);
+        let v = Allocation::from_weighted_pairs(pairs).expected_scaled_utilities(&b);
         assert!(v[0] > 0.6, "v={v:?}");
         assert!(v[3] > 0.1, "v={v:?}");
         let floor = -4.0 * 4.0f64.ln() - 1e-6;

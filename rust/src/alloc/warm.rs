@@ -31,6 +31,7 @@
 //! (`rust/tests/warm_equivalence.rs`); drivers replaying history run
 //! with warm-start off and stay bit-identical to the legacy path.
 
+use crate::cache::tier::TierAssignment;
 use crate::domain::utility::BatchUtilities;
 use crate::util::mask::ConfigMask;
 use crate::util::rng::mix64;
@@ -46,6 +47,11 @@ pub struct BatchSignature {
     /// shape mismatch forces a full cold re-prune even if the owner
     /// forgot to invalidate explicitly.
     pub budget_bits: u64,
+    /// Hash of the tier plan (SSD budget and discount bit patterns); 0
+    /// in single-tier mode. A tier-budget re-split or cost-model change
+    /// is a shape change: cached pair optima priced under the old
+    /// discount are wrong in a way re-scoring cannot detect.
+    pub tier_bits: u64,
     /// Per-view hash chained over the *structure* of the query classes
     /// touching the view — (tenant, required view set) only, not the
     /// per-batch utility/count, which drift every batch under Poisson
@@ -68,20 +74,26 @@ impl BatchSignature {
                 view_sigs[v] = mix64(view_sigs[v] ^ h);
             }
         }
+        let tier_bits = match batch.tier {
+            None => 0,
+            Some(t) => mix64(t.ssd_budget.to_bits() ^ mix64(t.discount.to_bits())),
+        };
         Self {
             n_tenants: batch.n_tenants,
             n_views: batch.n_views(),
             budget_bits: batch.budget.to_bits(),
+            tier_bits,
             view_sigs,
         }
     }
 
-    /// Same problem shape: tenant count, view count, and budget. Any
-    /// mismatch voids all carried state (cold re-prune).
+    /// Same problem shape: tenant count, view count, and budgets (both
+    /// tiers). Any mismatch voids all carried state (cold re-prune).
     pub fn same_shape(&self, other: &Self) -> bool {
         self.n_tenants == other.n_tenants
             && self.n_views == other.n_views
             && self.budget_bits == other.budget_bits
+            && self.tier_bits == other.tier_bits
     }
 
     /// True when every member view of `mask` has an unchanged class
@@ -96,17 +108,18 @@ impl BatchSignature {
 #[derive(Debug, Clone)]
 pub(crate) struct FastPfWarm {
     pub sig: BatchSignature,
-    /// Every mask of the previous batch's pruned space, in id order.
-    pub masks: Vec<ConfigMask>,
+    /// Every `(RAM, SSD)` pair of the previous batch's pruned space, in
+    /// id order (SSD planes all empty in single-tier mode).
+    pub pairs: Vec<TierAssignment>,
     /// The M random unit weight vectors drawn at the last cold prune
     /// (reused verbatim while the shape holds — they are still M random
     /// unit vectors; §4.3 only needs them to spray the Pareto frontier).
     pub rand_w: Vec<Vec<f64>>,
     /// Cached exact-WELFARE optimum per random vector.
-    pub rand_opt: Vec<ConfigMask>,
-    /// The previous converged allocation (mask → probability), the
+    pub rand_opt: Vec<TierAssignment>,
+    /// The previous converged allocation (pair → probability), the
     /// gradient warm start.
-    pub x_by_mask: Vec<(ConfigMask, f64)>,
+    pub x_by_pair: Vec<(TierAssignment, f64)>,
 }
 
 /// SIMPLEMMF's carried state: converged dual weights over the active
@@ -201,6 +214,35 @@ mod tests {
         let a = BatchSignature::of(&matrix_instance(&[&[1, 0], &[0, 1]], 1.0));
         let b = BatchSignature::of(&matrix_instance(&[&[1, 0], &[0, 1]], 2.0));
         assert!(!a.same_shape(&b));
+    }
+
+    #[test]
+    fn signature_tier_plan_is_shape() {
+        use crate::domain::utility::TierPlan;
+        let single = BatchSignature::of(&matrix_instance(&[&[1, 0], &[0, 1]], 1.0));
+        assert_eq!(single.tier_bits, 0);
+        let plan = TierPlan {
+            ssd_budget: 2000.0,
+            discount: 0.8,
+        };
+        let tiered = BatchSignature::of(
+            &matrix_instance(&[&[1, 0], &[0, 1]], 1.0).with_tier(Some(plan)),
+        );
+        assert!(!single.same_shape(&tiered));
+        // An SSD-budget re-split (total/N′) is a shape change too.
+        let resplit = BatchSignature::of(&matrix_instance(&[&[1, 0], &[0, 1]], 1.0).with_tier(
+            Some(TierPlan {
+                ssd_budget: 1000.0,
+                discount: 0.8,
+            }),
+        ));
+        assert!(!tiered.same_shape(&resplit));
+        // Same plan → same shape; view sigs are tier-independent.
+        let again = BatchSignature::of(
+            &matrix_instance(&[&[1, 0], &[0, 1]], 1.0).with_tier(Some(plan)),
+        );
+        assert!(tiered.same_shape(&again));
+        assert_eq!(single.view_sigs, tiered.view_sigs);
     }
 
     #[test]

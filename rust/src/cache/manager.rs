@@ -11,29 +11,57 @@
 //! Cache contents and in-flight-load state are [`ConfigMask`] bitsets,
 //! matching the configuration representation the policies emit.
 
+use crate::cache::tier::{Tier, TierAssignment, TierBudgets, TierCostModel, TierSpec};
 use crate::util::mask::ConfigMask;
 
 /// One incremental cache transition: the views (and bytes) that enter
-/// and leave on an update. `loaded`/`evicted` are ascending view ids.
+/// and leave on an update. All view lists are ascending view ids.
+///
+/// The tier fields (`ssd_loaded`, `demoted`, `promoted` and their byte
+/// counters) are empty/zero on every single-tier transition, so the
+/// replay-equality comparisons that predate tiers (`delta == delta`)
+/// keep holding bit for bit.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct CacheDelta {
+    /// Views entering RAM from disk.
     pub loaded: Vec<usize>,
+    /// Views leaving residency entirely (dropped from both tiers).
     pub evicted: Vec<usize>,
-    /// Bytes scheduled for (lazy) materialization by this transition.
+    /// Views entering SSD from disk.
+    pub ssd_loaded: Vec<usize>,
+    /// Views moved RAM→SSD (eviction-as-demotion).
+    pub demoted: Vec<usize>,
+    /// Views moved SSD→RAM.
+    pub promoted: Vec<usize>,
+    /// Bytes scheduled for (lazy) materialization into RAM.
     pub bytes_loaded: u64,
-    /// Bytes freed by this transition.
+    /// Bytes freed by this transition (both tiers).
     pub bytes_evicted: u64,
+    /// Bytes scheduled for (lazy) materialization into SSD.
+    pub bytes_ssd_loaded: u64,
+    /// Inter-tier bytes written RAM→SSD, charged like loads.
+    pub bytes_demoted: u64,
+    /// Inter-tier bytes copied SSD→RAM, charged like loads.
+    pub bytes_promoted: u64,
 }
 
 impl CacheDelta {
     /// No views moved.
     pub fn is_empty(&self) -> bool {
-        self.loaded.is_empty() && self.evicted.is_empty()
+        self.loaded.is_empty()
+            && self.evicted.is_empty()
+            && self.ssd_loaded.is_empty()
+            && self.demoted.is_empty()
+            && self.promoted.is_empty()
     }
 
     /// Number of views that changed state (the per-batch churn count).
     pub fn churn(&self) -> usize {
-        self.loaded.len() + self.evicted.len()
+        self.loaded.len()
+            + self.evicted.len()
+            + self.ssd_loaded.len()
+            + self.demoted.len()
+            + self.promoted.len()
     }
 }
 
@@ -54,17 +82,33 @@ pub struct TransitionStats {
     /// Loads evicted again before any query touched them — pure wasted
     /// churn (the cost the stateful γ boost exists to suppress).
     pub cancelled_loads: usize,
+    /// Tier traffic (all zero in single-tier mode): loads into SSD from
+    /// disk, demotions RAM→SSD, promotions SSD→RAM — inter-tier bytes
+    /// are charged exactly the way `bytes_loaded` charges disk loads.
+    pub ssd_views_loaded: usize,
+    pub bytes_ssd_loaded: u64,
+    pub views_demoted: usize,
+    pub bytes_demoted: u64,
+    pub views_promoted: usize,
+    pub bytes_promoted: u64,
 }
 
 /// Cache state across batches.
 #[derive(Debug, Clone)]
 pub struct CacheManager {
-    /// Usable cache budget in bytes.
+    /// Usable RAM-tier budget in bytes (the legacy single budget).
     budget: u64,
+    /// SSD-tier budget in bytes; 0 selects single-tier mode, whose
+    /// every path is bit-identical to the pre-tier manager.
+    ssd_budget: u64,
+    /// Per-tier cost model (only consulted in tiered mode).
+    cost: TierCostModel,
     /// Cached size per candidate view.
     sizes: Vec<u64>,
-    /// Current contents.
+    /// Current RAM contents.
     cached: ConfigMask,
+    /// Current SSD contents (always empty in single-tier mode).
+    ssd: ConfigMask,
     /// Scheduled by a transition but not yet materialized (first access
     /// pays the disk read + materialization penalty).
     in_flight: ConfigMask,
@@ -74,11 +118,20 @@ pub struct CacheManager {
 
 impl CacheManager {
     pub fn new(budget: u64, sizes: Vec<u64>) -> Self {
+        Self::new_tiered(TierSpec::single(budget), sizes)
+    }
+
+    /// Tiered constructor: RAM + SSD capacities and the cost model. With
+    /// `spec.is_single_tier()` this is exactly [`CacheManager::new`].
+    pub fn new_tiered(spec: TierSpec, sizes: Vec<u64>) -> Self {
         let n = sizes.len();
         Self {
-            budget,
+            budget: spec.budgets.ram,
+            ssd_budget: spec.budgets.ssd,
+            cost: spec.cost,
             sizes,
             cached: ConfigMask::empty(n),
+            ssd: ConfigMask::empty(n),
             in_flight: ConfigMask::empty(n),
             stats: TransitionStats::default(),
         }
@@ -86,6 +139,21 @@ impl CacheManager {
 
     pub fn budget(&self) -> u64 {
         self.budget
+    }
+
+    pub fn tier_budgets(&self) -> TierBudgets {
+        TierBudgets {
+            ram: self.budget,
+            ssd: self.ssd_budget,
+        }
+    }
+
+    pub fn cost_model(&self) -> &TierCostModel {
+        &self.cost
+    }
+
+    pub fn is_single_tier(&self) -> bool {
+        self.ssd_budget == 0
     }
 
     /// Re-set the usable budget (the federation's elastic membership
@@ -96,6 +164,14 @@ impl CacheManager {
     /// so the very next transition restores feasibility).
     pub fn set_budget(&mut self, budget: u64) {
         self.budget = budget;
+    }
+
+    /// Tier-aware budget re-split (elastic membership): both tiers
+    /// shrink or grow together; contents may transiently overflow like
+    /// [`CacheManager::set_budget`].
+    pub fn set_tier_budgets(&mut self, budgets: TierBudgets) {
+        self.budget = budgets.ram;
+        self.ssd_budget = budgets.ssd;
     }
 
     pub fn n_views(&self) -> usize {
@@ -121,8 +197,29 @@ impl CacheManager {
         self.cached.get(view)
     }
 
+    /// Current SSD contents (empty in single-tier mode).
+    pub fn ssd_contents(&self) -> &ConfigMask {
+        &self.ssd
+    }
+
+    /// Residency tier of a view, if any. In single-tier mode this is
+    /// `Some(Ram)` exactly when [`CacheManager::is_cached`] is true.
+    pub fn tier_of(&self, view: usize) -> Option<Tier> {
+        if self.cached.get(view) {
+            Some(Tier::Ram)
+        } else if self.ssd.get(view) {
+            Some(Tier::Ssd)
+        } else {
+            None
+        }
+    }
+
     pub fn used_bytes(&self) -> u64 {
         self.cached.ones().map(|v| self.sizes[v]).sum()
+    }
+
+    pub fn ssd_used_bytes(&self) -> u64 {
+        self.ssd.ones().map(|v| self.sizes[v]).sum()
     }
 
     /// Fraction of the budget occupied.
@@ -156,9 +253,142 @@ impl CacheManager {
 
     /// The transition that would drain this cache entirely — the
     /// decommission ("RemoveShard") preview: everything cached migrates
-    /// out, nothing loads. Pure, like [`CacheManager::delta_to`].
+    /// out, nothing loads. Pure, like [`CacheManager::delta_to`]. A
+    /// drain is a true eviction of both tiers — demotion does not apply
+    /// (the shard is going away, there is no SSD to keep).
     pub fn drain_delta(&self) -> CacheDelta {
-        self.delta_to(&ConfigMask::empty(self.sizes.len()))
+        let mut delta = self.delta_to(&ConfigMask::empty(self.sizes.len()));
+        for v in self.ssd.ones() {
+            delta.evicted.push(v);
+            delta.bytes_evicted += self.sizes[v];
+        }
+        delta.evicted.sort_unstable();
+        delta
+    }
+
+    /// The transition `update_tiered(target)` would apply, without
+    /// applying it — includes the demotion-before-drop fill, so the
+    /// preview matches the applied delta exactly.
+    pub fn delta_to_tiered(&self, target: &TierAssignment) -> CacheDelta {
+        self.plan_tiered(target).0
+    }
+
+    /// Classify the tiered transition to `target` and resolve the final
+    /// SSD plane. **Demotion before drop:** RAM-resident views the
+    /// solver dropped entirely fill the SSD tier's spare capacity (after
+    /// the solver's own SSD plane is placed) in ascending view-id order
+    /// instead of being discarded — a deterministic rule, so the
+    /// preview/apply pair and any replaying twin agree bit for bit.
+    fn plan_tiered(&self, target: &TierAssignment) -> (CacheDelta, ConfigMask) {
+        assert_eq!(target.ram.n_bits(), self.sizes.len());
+        assert_eq!(target.ssd.n_bits(), self.sizes.len());
+        debug_assert!(
+            !target.ram.intersects(&target.ssd),
+            "tier planes must be disjoint"
+        );
+        let new_ssd =
+            Self::resolve_ssd_plane(&self.cached, target, &self.sizes, self.ssd_budget);
+        let mut delta = CacheDelta::default();
+        for v in 0..self.sizes.len() {
+            let (was_ram, was_ssd) = (self.cached.get(v), self.ssd.get(v));
+            let (now_ram, now_ssd) = (target.ram.get(v), new_ssd.get(v));
+            let sz = self.sizes[v];
+            match (was_ram || was_ssd, now_ram || now_ssd) {
+                (false, true) if now_ram => {
+                    delta.loaded.push(v);
+                    delta.bytes_loaded += sz;
+                }
+                (false, true) => {
+                    delta.ssd_loaded.push(v);
+                    delta.bytes_ssd_loaded += sz;
+                }
+                (true, false) => {
+                    delta.evicted.push(v);
+                    delta.bytes_evicted += sz;
+                }
+                (true, true) if was_ram && !now_ram => {
+                    delta.demoted.push(v);
+                    delta.bytes_demoted += sz;
+                }
+                (true, true) if was_ssd && now_ram => {
+                    delta.promoted.push(v);
+                    delta.bytes_promoted += sz;
+                }
+                _ => {}
+            }
+        }
+        (delta, new_ssd)
+    }
+
+    /// The SSD plane a tiered transition to `target` resolves to, given
+    /// the previous RAM contents: the solver's own SSD plane plus the
+    /// demotion-before-drop fill (dropped RAM residents pack into spare
+    /// SSD capacity in ascending view-id order). An associated function
+    /// so planner-side mirrors (which never read the live cache) can
+    /// reproduce the cache contents bit for bit — the tiered analogue
+    /// of [`CacheManager::boost_vector`]'s contract.
+    pub(crate) fn resolve_ssd_plane(
+        prev_ram: &ConfigMask,
+        target: &TierAssignment,
+        sizes: &[u64],
+        ssd_budget: u64,
+    ) -> ConfigMask {
+        let mut new_ssd = target.ssd.clone();
+        let mut ssd_used: u64 = new_ssd.ones().map(|v| sizes[v]).sum();
+        for v in prev_ram.ones() {
+            if !target.ram.get(v) && !new_ssd.get(v) && ssd_used + sizes[v] <= ssd_budget {
+                new_ssd.set(v, true);
+                ssd_used += sizes[v];
+            }
+        }
+        new_ssd
+    }
+
+    /// Apply a tiered `(view, tier)` target. With an SSD budget of 0 and
+    /// an empty SSD plane this delegates to [`CacheManager::update`] —
+    /// the bit-identical degenerate path `tier_equivalence.rs` pins.
+    /// Panics if either plane exceeds its tier budget.
+    pub fn update_tiered(&mut self, target: &TierAssignment) -> CacheDelta {
+        if self.is_single_tier() && target.ssd.none_set() {
+            return self.update(&target.ram);
+        }
+        let ram_bytes: u64 = target.ram.ones().map(|v| self.sizes[v]).sum();
+        assert!(
+            ram_bytes <= self.budget,
+            "RAM plane {ram_bytes}B exceeds budget {}B",
+            self.budget
+        );
+        let ssd_bytes: u64 = target.ssd.ones().map(|v| self.sizes[v]).sum();
+        assert!(
+            ssd_bytes <= self.ssd_budget,
+            "SSD plane {ssd_bytes}B exceeds budget {}B",
+            self.ssd_budget
+        );
+        let (delta, new_ssd) = self.plan_tiered(target);
+        for &v in delta.loaded.iter().chain(&delta.ssd_loaded) {
+            self.in_flight.set(v, true);
+        }
+        for &v in &delta.evicted {
+            if self.in_flight.get(v) {
+                // Scheduled load never touched by a query: wasted churn.
+                self.in_flight.set(v, false);
+                self.stats.cancelled_loads += 1;
+            }
+        }
+        self.cached = target.ram.clone();
+        self.ssd = new_ssd;
+        self.stats.updates += 1;
+        self.stats.views_loaded += delta.loaded.len();
+        self.stats.views_evicted += delta.evicted.len();
+        self.stats.bytes_loaded += delta.bytes_loaded;
+        self.stats.bytes_evicted += delta.bytes_evicted;
+        self.stats.ssd_views_loaded += delta.ssd_loaded.len();
+        self.stats.bytes_ssd_loaded += delta.bytes_ssd_loaded;
+        self.stats.views_demoted += delta.demoted.len();
+        self.stats.bytes_demoted += delta.bytes_demoted;
+        self.stats.views_promoted += delta.promoted.len();
+        self.stats.bytes_promoted += delta.bytes_promoted;
+        delta
     }
 
     /// Apply a target configuration (Figure 2 step 3) as an incremental
@@ -200,7 +430,7 @@ impl CacheManager {
     /// accessor materializes it (pays disk bandwidth + penalty); later
     /// accesses hit memory.
     pub fn charge_materialization(&mut self, view: usize) -> bool {
-        if self.cached.get(view) && self.in_flight.get(view) {
+        if (self.cached.get(view) || self.ssd.get(view)) && self.in_flight.get(view) {
             self.in_flight.set(view, false);
             self.stats.materializations += 1;
             self.stats.bytes_materialized += self.sizes[view];
@@ -411,5 +641,134 @@ mod tests {
         assert_eq!(cm.used_bytes(), used);
         // An empty cache drains nothing.
         assert!(CacheManager::new(10, vec![5]).drain_delta().is_empty());
+    }
+
+    // ---- tiered mode ----
+
+    use crate::cache::tier::{Tier, TierAssignment, TierBudgets, TierCostModel, TierSpec};
+
+    fn tiered(ram: u64, ssd: u64, sizes: &[u64]) -> CacheManager {
+        CacheManager::new_tiered(
+            TierSpec {
+                budgets: TierBudgets { ram, ssd },
+                cost: TierCostModel::default(),
+            },
+            sizes.to_vec(),
+        )
+    }
+
+    fn assign(ram: &[bool], ssd: &[bool]) -> TierAssignment {
+        TierAssignment {
+            ram: mask(ram),
+            ssd: mask(ssd),
+        }
+    }
+
+    #[test]
+    fn degenerate_tiered_update_is_single_tier_update() {
+        // SSD budget 0 + empty SSD plane delegates to `update` exactly.
+        let mut a = CacheManager::new(100, vec![40, 50, 30]);
+        let mut b = CacheManager::new(100, vec![40, 50, 30]);
+        let targets = [
+            assign(&[true, true, false], &[false; 3]),
+            assign(&[true, false, true], &[false; 3]),
+            assign(&[false, false, false], &[false; 3]),
+        ];
+        for t in &targets {
+            let da = a.update(&t.ram);
+            let db = b.update_tiered(t);
+            assert_eq!(da, db);
+            assert_eq!(a.cached(), b.cached());
+            assert_eq!(a.transition_stats(), b.transition_stats());
+            assert!(b.ssd_contents().none_set());
+        }
+    }
+
+    #[test]
+    fn eviction_becomes_demotion_before_drop() {
+        let mut cm = tiered(100, 100, &[40, 50, 30]);
+        cm.update_tiered(&assign(&[true, true, false], &[false; 3]));
+        // Both RAM views leave the RAM plane; the solver asked for
+        // nothing on SSD — demotion fills SSD in ascending id order.
+        let d = cm.update_tiered(&assign(&[false, false, true], &[false; 3]));
+        assert_eq!(d.demoted, vec![0, 1]);
+        assert_eq!(d.bytes_demoted, 90);
+        assert!(d.evicted.is_empty());
+        assert_eq!(d.loaded, vec![2]);
+        assert_eq!(cm.tier_of(0), Some(Tier::Ssd));
+        assert_eq!(cm.tier_of(1), Some(Tier::Ssd));
+        assert_eq!(cm.tier_of(2), Some(Tier::Ram));
+        assert_eq!(cm.ssd_used_bytes(), 90);
+    }
+
+    #[test]
+    fn demotion_respects_ssd_capacity() {
+        let mut cm = tiered(100, 45, &[40, 50, 30]);
+        cm.update_tiered(&assign(&[true, true, false], &[false; 3]));
+        // Only view 0 (40B) fits the 45B SSD; view 1 (50B) is dropped.
+        let d = cm.update_tiered(&assign(&[false, false, false], &[false; 3]));
+        assert_eq!(d.demoted, vec![0]);
+        assert_eq!(d.evicted, vec![1]);
+        assert_eq!(d.bytes_evicted, 50);
+        assert_eq!(cm.ssd_used_bytes(), 40);
+    }
+
+    #[test]
+    fn ssd_loads_promotions_and_conservation() {
+        let mut cm = tiered(100, 100, &[40, 50, 30]);
+        // Solver places view 2 straight onto SSD.
+        let d1 = cm.update_tiered(&assign(&[true, false, false], &[false, false, true]));
+        assert_eq!(d1.loaded, vec![0]);
+        assert_eq!(d1.ssd_loaded, vec![2]);
+        assert_eq!(d1.bytes_ssd_loaded, 30);
+        // Promotion SSD→RAM; the old RAM view demotes.
+        let d2 = cm.update_tiered(&assign(&[false, false, true], &[true, false, false]));
+        assert_eq!(d2.promoted, vec![2]);
+        assert_eq!(d2.bytes_promoted, 30);
+        assert_eq!(d2.demoted, vec![0]);
+        // Conservation: resident bytes = Σ loads − Σ evictions
+        // (demotions/promotions are internal moves, net zero).
+        let s = cm.transition_stats();
+        let resident = cm.used_bytes() + cm.ssd_used_bytes();
+        assert_eq!(
+            s.bytes_loaded + s.bytes_ssd_loaded - s.bytes_evicted,
+            resident
+        );
+    }
+
+    #[test]
+    fn tiered_preview_matches_apply_and_materialization_covers_ssd() {
+        let mut cm = tiered(100, 100, &[40, 50, 30]);
+        let t = assign(&[true, false, false], &[false, true, false]);
+        let preview = cm.delta_to_tiered(&t);
+        let applied = cm.update_tiered(&t);
+        assert_eq!(preview, applied);
+        // SSD loads materialize lazily like RAM loads.
+        assert!(cm.charge_materialization(1));
+        assert!(!cm.charge_materialization(1));
+        assert_eq!(cm.transition_stats().materializations, 1);
+    }
+
+    #[test]
+    fn tiered_drain_evicts_both_planes() {
+        let mut cm = tiered(100, 100, &[40, 50, 30]);
+        cm.update_tiered(&assign(&[true, false, false], &[false, true, true]));
+        let d = cm.drain_delta();
+        assert_eq!(d.evicted, vec![0, 1, 2]);
+        assert_eq!(d.bytes_evicted, 120);
+    }
+
+    #[test]
+    #[should_panic]
+    fn ssd_plane_over_budget_rejected() {
+        let mut cm = tiered(100, 20, &[40, 50, 30]);
+        cm.update_tiered(&assign(&[false; 3], &[false, false, true]));
+    }
+
+    #[test]
+    fn tier_budget_resplit() {
+        let mut cm = tiered(100, 200, &[40, 50, 30]);
+        cm.set_tier_budgets(TierBudgets { ram: 50, ssd: 100 });
+        assert_eq!(cm.tier_budgets(), TierBudgets { ram: 50, ssd: 100 });
     }
 }

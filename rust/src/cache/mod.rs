@@ -1,6 +1,9 @@
 //! Cache state management (Figure 2 step 3 and the §5.4 stateful mode):
-//! incremental delta-based transitions with materialization accounting.
+//! incremental delta-based transitions with materialization accounting,
+//! over one RAM tier or a two-tier RAM + SSD hierarchy (`tier`).
 
 pub mod manager;
+pub mod tier;
 
 pub use manager::{CacheDelta, CacheManager, TransitionStats};
+pub use tier::{Tier, TierAssignment, TierBudgets, TierCostModel, TierSpec};

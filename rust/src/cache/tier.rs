@@ -1,0 +1,236 @@
+//! The two-tier (RAM + SSD) cache model: per-tier capacities, the
+//! per-tier cost model (hit latency, load cost, write/demotion cost per
+//! byte), and the `(view, tier)` assignment type the solver emits.
+//!
+//! The degenerate configuration — SSD capacity 0 — is the correctness
+//! anchor of the whole tier feature: every code path that takes a
+//! [`TierSpec`] with `ssd == 0` must route through exactly the
+//! single-tier logic that existed before tiers, bit for bit (same float
+//! operations, same RNG consumption). `rust/tests/tier_equivalence.rs`
+//! pins this.
+//!
+//! Production framing (ROADMAP): a RAM tier sized for the hot 5% backed
+//! by a ~20× larger SSD tier. An SSD hit is slower than a RAM hit but
+//! far faster than a disk scan; the solver prices that with the
+//! [`TierCostModel::ssd_discount`] factor — the fraction of the
+//! disk-vs-RAM I/O saving an SSD hit still captures.
+
+use crate::util::mask::ConfigMask;
+
+/// Bytes per GB as f64, for the ms-per-GB cost conversions.
+const GB_F: f64 = (1u64 << 30) as f64;
+
+/// Which tier a resident view occupies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    Ram,
+    Ssd,
+}
+
+/// Per-tier byte capacities. `ssd == 0` selects single-tier mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TierBudgets {
+    pub ram: u64,
+    pub ssd: u64,
+}
+
+impl TierBudgets {
+    /// The pre-tier configuration: everything in RAM, no SSD.
+    pub fn single(ram: u64) -> Self {
+        Self { ram, ssd: 0 }
+    }
+
+    /// True when the SSD tier is absent (the bit-identical legacy path).
+    pub fn is_single_tier(&self) -> bool {
+        self.ssd == 0
+    }
+
+    pub fn total(&self) -> u64 {
+        self.ram + self.ssd
+    }
+
+    /// Per-shard slice: both tiers split `total/N` exactly like the
+    /// federation's existing single budget.
+    pub fn split(&self, n_shards: usize) -> Self {
+        let n = n_shards.max(1) as u64;
+        Self {
+            ram: self.ram / n,
+            ssd: self.ssd / n,
+        }
+    }
+}
+
+/// Per-tier cost model, in milliseconds per GB moved/scanned. The
+/// defaults mirror the paper's Table 7 testbed per-core bandwidths
+/// (2500 MB/s cache and 25 MB/s effective disk scan per node, 8 cores)
+/// with an SSD pegged 20× slower than RAM and 20× faster than disk.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TierCostModel {
+    /// RAM hit latency (scan cost), ms per GB per core.
+    pub ram_hit_ms_per_gb: f64,
+    /// SSD hit latency (scan cost), ms per GB per core.
+    pub ssd_hit_ms_per_gb: f64,
+    /// Disk scan cost, ms per GB per core — the miss path both tiers
+    /// are priced against.
+    pub disk_ms_per_gb: f64,
+    /// Write-path charge for loading a view from disk into a tier.
+    pub load_ms_per_gb: f64,
+    /// Write-path charge for demoting a view RAM→SSD.
+    pub demote_ms_per_gb: f64,
+}
+
+impl Default for TierCostModel {
+    fn default() -> Self {
+        // Per-core: cache 2500/8 MB/s → 3276.8 ms/GB; disk 25/8 MB/s →
+        // 327680 ms/GB. SSD 20× slower than RAM, 5× faster than disk.
+        Self {
+            ram_hit_ms_per_gb: 3_276.8,
+            ssd_hit_ms_per_gb: 65_536.0,
+            disk_ms_per_gb: 327_680.0,
+            load_ms_per_gb: 327_680.0,
+            demote_ms_per_gb: 65_536.0,
+        }
+    }
+}
+
+impl TierCostModel {
+    /// Seconds for one core to scan `bytes` from the SSD tier.
+    pub fn ssd_secs(&self, bytes: u64) -> f64 {
+        bytes as f64 / GB_F * self.ssd_hit_ms_per_gb * 1e-3
+    }
+
+    /// Fraction of the disk-vs-RAM I/O saving an SSD hit retains:
+    /// `(disk − ssd) / (disk − ram)`, clamped to [0, 1]. This is the
+    /// tier discount the FASTPF/MMF/PF-MW utility oracles apply to a
+    /// query class whose views are resident but not all in RAM.
+    pub fn ssd_discount(&self) -> f64 {
+        let denom = self.disk_ms_per_gb - self.ram_hit_ms_per_gb;
+        if denom <= 0.0 {
+            return 0.0;
+        }
+        ((self.disk_ms_per_gb - self.ssd_hit_ms_per_gb) / denom).clamp(0.0, 1.0)
+    }
+
+    /// Write-path charge (seconds) for demoting `bytes` RAM→SSD.
+    pub fn demote_secs(&self, bytes: u64) -> f64 {
+        bytes as f64 / GB_F * self.demote_ms_per_gb * 1e-3
+    }
+}
+
+/// The full tier specification a driver runs under: budgets + costs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TierSpec {
+    pub budgets: TierBudgets,
+    pub cost: TierCostModel,
+}
+
+impl TierSpec {
+    /// Single-tier spec (no SSD) with the default cost model — the
+    /// pre-tier behaviour for a given RAM budget.
+    pub fn single(ram: u64) -> Self {
+        Self {
+            budgets: TierBudgets::single(ram),
+            cost: TierCostModel::default(),
+        }
+    }
+
+    pub fn is_single_tier(&self) -> bool {
+        self.budgets.is_single_tier()
+    }
+
+    /// Per-shard slice (both tiers split `total/N`), costs unchanged.
+    pub fn split(&self, n_shards: usize) -> Self {
+        Self {
+            budgets: self.budgets.split(n_shards),
+            cost: self.cost,
+        }
+    }
+}
+
+/// A solved `(view, tier)` configuration: disjoint RAM and SSD planes
+/// over the same view universe. The RAM plane is exactly the legacy
+/// [`ConfigMask`] configuration; the SSD plane is empty in single-tier
+/// mode.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TierAssignment {
+    pub ram: ConfigMask,
+    pub ssd: ConfigMask,
+}
+
+impl TierAssignment {
+    /// Lift a legacy single-tier configuration: everything in RAM.
+    pub fn single(ram: ConfigMask) -> Self {
+        let n = ram.n_bits();
+        Self {
+            ram,
+            ssd: ConfigMask::empty(n),
+        }
+    }
+
+    pub fn n_bits(&self) -> usize {
+        self.ram.n_bits()
+    }
+
+    /// All resident views regardless of tier.
+    pub fn union(&self) -> ConfigMask {
+        let mut u = self.ram.clone();
+        u.union_with(&self.ssd);
+        u
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budgets_split_and_single_tier() {
+        let b = TierBudgets { ram: 100, ssd: 2000 };
+        assert!(!b.is_single_tier());
+        assert_eq!(b.total(), 2100);
+        let s = b.split(4);
+        assert_eq!(s, TierBudgets { ram: 25, ssd: 500 });
+        assert!(TierBudgets::single(64).is_single_tier());
+        assert_eq!(TierBudgets::single(64).split(3).ram, 21);
+    }
+
+    #[test]
+    fn discount_between_zero_and_one() {
+        let c = TierCostModel::default();
+        let d = c.ssd_discount();
+        assert!((0.0..=1.0).contains(&d), "d={d}");
+        // Faster SSD → larger discount (closer to a RAM hit's value).
+        let fast = TierCostModel {
+            ssd_hit_ms_per_gb: 10_000.0,
+            ..c
+        };
+        assert!(fast.ssd_discount() > d);
+        // SSD as slow as disk → worthless.
+        let slow = TierCostModel {
+            ssd_hit_ms_per_gb: c.disk_ms_per_gb,
+            ..c
+        };
+        assert!(slow.ssd_discount() < 1e-12);
+    }
+
+    #[test]
+    fn assignment_union_and_single() {
+        let ram = ConfigMask::from_bools(&[true, false, false]);
+        let ssd = ConfigMask::from_bools(&[false, true, false]);
+        let t = TierAssignment { ram, ssd };
+        assert_eq!(t.union(), ConfigMask::from_bools(&[true, true, false]));
+        let single = TierAssignment::single(ConfigMask::from_bools(&[true, false]));
+        assert!(single.ssd.none_set());
+    }
+
+    #[test]
+    fn spec_split_keeps_cost() {
+        let spec = TierSpec {
+            budgets: TierBudgets { ram: 80, ssd: 1600 },
+            cost: TierCostModel::default(),
+        };
+        let s = spec.split(8);
+        assert_eq!(s.budgets, TierBudgets { ram: 10, ssd: 200 });
+        assert_eq!(s.cost, spec.cost);
+    }
+}

@@ -54,12 +54,13 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::alloc::Policy;
+use crate::cache::tier::TierSpec;
 use crate::cluster::membership::{MembershipAction, MembershipPlan};
 use crate::cluster::metrics::{ClusterRecord, ClusterResult, MembershipChange};
 use crate::cluster::placement::{Placement, PlacementStrategy};
 use crate::cluster::runtime::{resolve_workers, with_shard_pool, ShardPool, StepCtx};
 use crate::cluster::shard::{Shard, ShardBatchOutcome};
-use crate::coordinator::loop_::CoordinatorConfig;
+use crate::coordinator::loop_::{tier_plan_of, CoordinatorConfig};
 use crate::alloc::warm::reason;
 use crate::domain::query::Query;
 use crate::domain::tenant::TenantSet;
@@ -251,10 +252,21 @@ impl<'a> ShardedCoordinator<'a> {
         }
     }
 
-    /// Each shard's *initial* slice of the total cache budget (elastic
-    /// membership re-splits to `total / N'` as the live count changes).
+    /// The federation's *total* tier specification: the configured
+    /// `common.tiers` when tiered, else single-tier over the engine's
+    /// whole cache budget (the legacy path).
+    pub(crate) fn total_spec(&self) -> TierSpec {
+        self.config
+            .common
+            .tiers
+            .unwrap_or_else(|| TierSpec::single(self.engine.config.cache_budget))
+    }
+
+    /// Each shard's *initial* RAM slice of the total cache budget
+    /// (elastic membership re-splits to `total / N'` as the live count
+    /// changes; in tiered mode the SSD slice splits the same way).
     pub fn shard_budget(&self) -> u64 {
-        self.engine.config.cache_budget / self.fed.n_shards as u64
+        self.total_spec().split(self.fed.n_shards).budgets.ram
     }
 
     /// Run the federated loop with `policy` over a fresh workload from
@@ -266,15 +278,34 @@ impl<'a> ShardedCoordinator<'a> {
     /// are shard-local, so the simulated results are bit-identical at
     /// any width. Panics on an invalid membership plan — front doors
     /// validate with [`MembershipPlan::resolve`] first.
+    #[deprecated(
+        since = "0.2.0",
+        note = "construct through `session::Session::federated(..).run(..)`"
+    )]
     pub fn run(&self, generator: &mut WorkloadGenerator, policy: &dyn Policy) -> ClusterResult {
-        self.run_with(generator, policy, &Telemetry::off())
+        self.run_impl(generator, policy, &Telemetry::off())
     }
 
     /// [`ShardedCoordinator::run`] with telemetry: per-shard batch
     /// spans (emitted by [`Shard::step`] on whichever pool worker runs
     /// it), scheduled membership / clamp / warm-invalidation events,
     /// and periodic counter snapshots on the simulated clock.
+    #[deprecated(
+        since = "0.2.0",
+        note = "construct through `session::Session::federated(..).telemetry(..).run(..)`"
+    )]
     pub fn run_with(
+        &self,
+        generator: &mut WorkloadGenerator,
+        policy: &dyn Policy,
+        tel: &Telemetry,
+    ) -> ClusterResult {
+        self.run_impl(generator, policy, tel)
+    }
+
+    /// The federated driver behind [`ShardedCoordinator::run`]/
+    /// [`run_with`] and the Session API.
+    pub(crate) fn run_impl(
         &self,
         generator: &mut WorkloadGenerator,
         policy: &dyn Policy,
@@ -293,14 +324,13 @@ impl<'a> ShardedCoordinator<'a> {
         // changes. Built before the pool so the shards' engine borrow
         // outlives the workers.
         let mut exec_engine = self.engine.clone();
-        exec_engine.config.cache_budget =
-            self.engine.config.cache_budget / self.fed.n_shards as u64;
+        exec_engine.config.cache_budget = self.shard_budget();
         let exec_engine = exec_engine;
         let ctx = StepCtx {
             tenants: &self.tenants,
             universe: self.universe,
             policy,
-            stateful_gamma: self.config.stateful_gamma,
+            stateful_gamma: self.config.common.stateful_gamma,
             tel,
         };
         // The run's worker pool: the only thread creation of the whole
@@ -339,7 +369,7 @@ impl<'a> ShardedCoordinator<'a> {
             .map(|v| v.scan_bytes)
             .collect();
         let weights = self.tenants.weights();
-        let total_budget = self.engine.config.cache_budget;
+        let total_spec = self.total_spec();
 
         let schedule = self
             .fed
@@ -350,7 +380,7 @@ impl<'a> ShardedCoordinator<'a> {
 
         let mut placement = Placement::build(self.fed.placement, n_shards, &cached_sizes);
 
-        let mut live_budget = total_budget / n_shards as u64;
+        let mut live_spec = total_spec.split(n_shards);
 
         let mut shards: Vec<Shard<'e>> = (0..n_shards)
             .map(|s| {
@@ -360,8 +390,8 @@ impl<'a> ShardedCoordinator<'a> {
                     self.universe,
                     &self.tenants,
                     placement.shard_mask(s),
-                    self.config.seed,
-                    live_budget,
+                    self.config.common.seed,
+                    live_spec,
                     0,
                     self.fed.warm_start,
                 )
@@ -396,7 +426,7 @@ impl<'a> ShardedCoordinator<'a> {
         let mut mult_buf: Arc<Vec<f64>> = Arc::new(vec![1.0; n_tenants]);
 
         for b in 0..n_batches {
-            let window_end = (b + 1) as f64 * self.config.batch_secs;
+            let window_end = (b + 1) as f64 * self.config.common.batch_secs;
             let queries = generator.generate_until(window_end, self.universe);
 
             // --- 1. Membership events scheduled for this batch. ---
@@ -407,7 +437,7 @@ impl<'a> ShardedCoordinator<'a> {
             // moves; before any demand exists, sizes are the signal.
             // Hash ignores the weights entirely.
             let mut membership_changes: Vec<MembershipChange> = Vec::new();
-            let t_event = b as f64 * self.config.batch_secs;
+            let t_event = b as f64 * self.config.common.batch_secs;
             while sched_i < schedule.len() && schedule[sched_i].batch == b {
                 let pack_weights: &[u64] = if cum_demand.iter().any(|&d| d > 0) {
                     &cum_demand
@@ -445,8 +475,8 @@ impl<'a> ShardedCoordinator<'a> {
                             self.universe,
                             &self.tenants,
                             placement.shard_mask(id),
-                            self.config.seed,
-                            live_budget,
+                            self.config.common.seed,
+                            live_spec,
                             b + self.fed.warmup_batches,
                             self.fed.warm_start,
                         ));
@@ -531,14 +561,15 @@ impl<'a> ShardedCoordinator<'a> {
                         });
                     }
                 }
-                // Budget re-split across the new live set. Carried
-                // solver state is dropped along with it: the budget
-                // change already voids the warm shape signature, the
-                // explicit invalidation keeps elastic events from ever
-                // trusting stale artifacts even transiently.
-                live_budget = total_budget / shards.len() as u64;
+                // Budget re-split across the new live set (both tiers
+                // split together). Carried solver state is dropped
+                // along with it: the budget change already voids the
+                // warm shape signature, the explicit invalidation keeps
+                // elastic events from ever trusting stale artifacts
+                // even transiently.
+                live_spec = total_spec.split(shards.len());
                 for sh in shards.iter_mut() {
-                    sh.executor.cache_mut().set_budget(live_budget);
+                    sh.executor.cache_mut().set_tier_budgets(live_spec.budgets);
                     if sh.invalidate_warm() {
                         tel.event(
                             t_event,
@@ -702,7 +733,8 @@ impl<'a> ShardedCoordinator<'a> {
                 &mut shards,
                 b,
                 window_end,
-                live_budget,
+                live_spec.budgets.ram,
+                tier_plan_of(&live_spec),
                 use_mults.then_some(&mult_buf),
                 &mut outcomes,
             );
@@ -745,7 +777,7 @@ impl<'a> ShardedCoordinator<'a> {
                 membership: membership_changes,
                 decayed_views,
                 live_shards: shards.len(),
-                shard_budget: live_budget,
+                shard_budget: live_spec.budgets.ram,
                 warming_shards,
                 tenant_attained: agg_u,
                 tenant_attainable: agg_star,
@@ -1024,9 +1056,10 @@ mod tests {
         let cached_sizes: Vec<u64> =
             universe.views.iter().map(|v| v.cached_bytes).collect();
         let start = Placement::hash(2, n_views);
+        let spec = TierSpec::single(1000);
         let mut shards = vec![
-            Shard::new(0, &engine, &universe, &tenants, start.shard_mask(0), 7, 1000, 0, false),
-            Shard::new(1, &engine, &universe, &tenants, start.shard_mask(1), 7, 1000, 0, false),
+            Shard::new(0, &engine, &universe, &tenants, start.shard_mask(0), 7, spec, 0, false),
+            Shard::new(1, &engine, &universe, &tenants, start.shard_mask(1), 7, spec, 0, false),
         ];
         // Pick a view homed on shard 0 and replicate it onto shard 1.
         let v = (0..n_views).find(|&v| start.home(v) == 0).unwrap();

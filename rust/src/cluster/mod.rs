@@ -58,6 +58,10 @@ pub use metrics::{
     TransientReport,
 };
 pub use placement::{Placement, PlacementStrategy};
+// The free-function entry points stay re-exported for callers mid-
+// migration; the deprecation they carry still reaches users through
+// the original items.
+#[allow(deprecated)]
 pub use serving::{
     serve_federated, serve_federated_sim, serve_federated_sim_with, serve_federated_with,
     FederatedServeReport, ServeFederationConfig,

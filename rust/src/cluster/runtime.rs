@@ -32,6 +32,7 @@ use crate::alloc::Policy;
 use crate::cluster::shard::{Shard, ShardBatchOutcome};
 use crate::coordinator::loop_::SolveContext;
 use crate::domain::tenant::TenantSet;
+use crate::domain::utility::TierPlan;
 use crate::telemetry::Telemetry;
 use crate::workload::universe::Universe;
 
@@ -71,6 +72,8 @@ struct StepJob<S> {
     batch: usize,
     window_end: f64,
     budget: u64,
+    /// SSD-tier budget and discount for this batch (`None` single-tier).
+    tier: Option<TierPlan>,
     /// Per-tenant weight multipliers for this batch, shared across the
     /// fan-out by refcount. Workers drop their clone *before* replying,
     /// so after fan-in the coordinator's handle is unique again and the
@@ -120,6 +123,7 @@ impl<'a, S> ShardPool<'a, S> {
         batch: usize,
         window_end: f64,
         budget: u64,
+        tier: Option<TierPlan>,
         mults: Option<&Arc<Vec<f64>>>,
         outcomes: &mut Vec<ShardBatchOutcome>,
     ) where
@@ -132,6 +136,7 @@ impl<'a, S> ShardPool<'a, S> {
                     tenants: self.ctx.tenants,
                     universe: self.ctx.universe,
                     budget,
+                    tier,
                     stateful_gamma: self.ctx.stateful_gamma,
                     weight_mult: mults.map(|m| m.as_slice()),
                 };
@@ -158,6 +163,7 @@ impl<'a, S> ShardPool<'a, S> {
                             batch,
                             window_end,
                             budget,
+                            tier,
                             mults: mults.cloned(),
                         })
                         .expect("worker pool hung up mid-run");
@@ -256,6 +262,7 @@ fn worker_loop<'a, 'e, S: PoolItem<'e>>(
             batch,
             window_end,
             budget,
+            tier,
             mults,
         }) = job
         else {
@@ -268,6 +275,7 @@ fn worker_loop<'a, 'e, S: PoolItem<'e>>(
                 tenants: ctx.tenants,
                 universe: ctx.universe,
                 budget,
+                tier,
                 stateful_gamma: ctx.stateful_gamma,
                 weight_mult: mults.as_ref().map(|m| m.as_slice()),
             };
@@ -320,6 +328,7 @@ mod tests {
                         tenants: ctx.tenants,
                         universe: ctx.universe,
                         budget,
+                        tier: None,
                         stateful_gamma: ctx.stateful_gamma,
                         weight_mult: mults,
                     };
@@ -354,7 +363,7 @@ mod tests {
                     tenants,
                     placement.shard_mask(s),
                     42,
-                    budget,
+                    crate::cache::tier::TierSpec::single(budget),
                     0,
                     false,
                 )
@@ -411,7 +420,7 @@ mod tests {
                 fill_inboxes(&mut a, end, &mut gen_a, &universe);
                 let m = (batch > 0).then_some(&mults);
                 let mut out = Vec::new();
-                pool.step_batch(&mut a, batch, end, budget, m, &mut out);
+                pool.step_batch(&mut a, batch, end, budget, None, m, &mut out);
                 pooled.push(out);
             }
         });
@@ -471,7 +480,7 @@ mod tests {
                     let end = (batch + 1) as f64 * 40.0;
                     fill_inboxes(&mut shards, end, &mut gen, &universe);
                     let mut out = Vec::new();
-                    pool.step_batch(&mut shards, batch, end, budget, None, &mut out);
+                    pool.step_batch(&mut shards, batch, end, budget, None, None, &mut out);
                     all.push(out);
                 }
             });
@@ -513,7 +522,7 @@ mod tests {
             with_shard_pool::<Bomb, _>(2, ctx, |pool| {
                 let mut items = vec![Bomb, Bomb];
                 let mut out = Vec::new();
-                pool.step_batch(&mut items, 0, 40.0, 1000, None, &mut out);
+                pool.step_batch(&mut items, 0, 40.0, 1000, None, None, &mut out);
             })
         }));
         assert!(caught.is_err(), "panic must propagate out of the pool");

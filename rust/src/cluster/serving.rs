@@ -55,6 +55,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::alloc::{ConfigMask, Policy};
+use crate::cache::tier::TierSpec;
 use crate::cluster::federation::{apply_placement, decay_due, route_query, GlobalAccountant};
 use crate::cluster::membership::{AutoMembership, MembershipAction};
 use crate::cluster::metrics::{ClusterRecord, ClusterResult, MembershipChange};
@@ -63,7 +64,7 @@ use crate::cluster::runtime::{
     resolve_workers, with_shard_pool, PoolItem, ShardPool, StepCtx,
 };
 use crate::cluster::shard::{Shard, ShardBatchOutcome};
-use crate::coordinator::loop_::CoordinatorConfig;
+use crate::coordinator::loop_::{tier_plan_of, CoordinatorConfig};
 use crate::coordinator::service::{
     assemble_report, queue_counts, ServeConfig, ServeLoopStats, ServeReport,
 };
@@ -433,7 +434,9 @@ struct ServingInputs<'a, 'e> {
     exec_engine: &'e SimEngine,
     policy: &'a dyn Policy,
     fcfg: &'a ServeFederationConfig,
-    total_budget: u64,
+    /// The federation's *total* tier spec; each live shard runs on a
+    /// `total_spec.split(N')` slice, re-split on membership changes.
+    total_spec: TierSpec,
     /// Pure-observer telemetry handle, shared with pool workers and
     /// admission queues (via probes).
     tel: &'a Telemetry,
@@ -464,7 +467,7 @@ fn build_initial<'e>(
 ) -> (Placement, Vec<LiveShard<'e>>) {
     let fcfg = inp.fcfg;
     let placement = Placement::build(fcfg.placement, fcfg.n_shards, cached_sizes);
-    let live_budget = inp.total_budget / fcfg.n_shards as u64;
+    let live_spec = inp.total_spec.split(fcfg.n_shards);
     let live: Vec<LiveShard<'e>> = (0..fcfg.n_shards)
         .map(|s| {
             let mut shard = Shard::new(
@@ -473,10 +476,10 @@ fn build_initial<'e>(
                 inp.universe,
                 inp.tenants,
                 placement.shard_mask(s),
-                fcfg.serve.seed,
-                live_budget,
+                fcfg.serve.common.seed,
+                live_spec,
                 0,
-                fcfg.serve.warm_start,
+                fcfg.serve.common.warm_start,
             );
             shard.executor.set_retain_raw(inp.retain_raw);
             LiveShard {
@@ -514,7 +517,7 @@ fn run_loop<'e, C: Clock>(
         tenants: inp.tenants,
         universe: inp.universe,
         policy: inp.policy,
-        stateful_gamma: inp.fcfg.serve.stateful_gamma,
+        stateful_gamma: inp.fcfg.serve.common.stateful_gamma,
         tel: inp.tel,
     };
     with_shard_pool(resolve_workers(inp.fcfg.workers), ctx, |pool| {
@@ -559,7 +562,7 @@ fn run_loop_on_pool<'e, C: Clock>(
     // Consecutive cold cuts per replicated view — the replica-decay
     // streaks (same machinery as the replay federation's).
     let mut decay_streaks = vec![0usize; n_views];
-    let mut live_budget = inp.total_budget / fcfg.n_shards as u64;
+    let mut live_spec = inp.total_spec.split(fcfg.n_shards);
     let mut next_shard_id = fcfg.n_shards;
     // Reactive-membership state: consecutive batches the hottest
     // shard's load exceeded hi, and the batch of the last event.
@@ -579,7 +582,7 @@ fn run_loop_on_pool<'e, C: Clock>(
     let mut mult_buf: Arc<Vec<f64>> = Arc::new(vec![1.0; n_tenants]);
 
     loop {
-        let window_end = (b + 1) as f64 * cfg.batch_secs;
+        let window_end = (b + 1) as f64 * cfg.common.batch_secs;
         let now = clock.wait_until(window_end);
         let closed = pump(clock, now);
 
@@ -636,10 +639,10 @@ fn run_loop_on_pool<'e, C: Clock>(
                         inp.universe,
                         inp.tenants,
                         placement.shard_mask(id),
-                        cfg.seed,
-                        live_budget,
+                        cfg.common.seed,
+                        live_spec,
                         b + fcfg.warmup_batches,
-                        cfg.warm_start,
+                        cfg.common.warm_start,
                     );
                     joiner.executor.set_retain_raw(inp.retain_raw);
                     live.push(LiveShard {
@@ -648,9 +651,9 @@ fn run_loop_on_pool<'e, C: Clock>(
                         load: VecDeque::new(),
                         idle_streak: 0,
                     });
-                    live_budget = inp.total_budget / live.len() as u64;
+                    live_spec = inp.total_spec.split(live.len());
                     for ls in live.iter_mut() {
-                        ls.shard.executor.cache_mut().set_budget(live_budget);
+                        ls.shard.executor.cache_mut().set_tier_budgets(live_spec.budgets);
                         ls.idle_streak = 0;
                     }
                     tel.event(
@@ -725,9 +728,12 @@ fn run_loop_on_pool<'e, C: Clock>(
                             now,
                             b as i64,
                         );
-                        live_budget = inp.total_budget / live.len() as u64;
+                        live_spec = inp.total_spec.split(live.len());
                         for ls in live.iter_mut() {
-                            ls.shard.executor.cache_mut().set_budget(live_budget);
+                            ls.shard
+                                .executor
+                                .cache_mut()
+                                .set_tier_budgets(live_spec.budgets);
                             ls.idle_streak = 0;
                         }
                         // New routing table first, then the final
@@ -797,7 +803,7 @@ fn run_loop_on_pool<'e, C: Clock>(
                     batch_demand[v.0] += scan_sizes[v.0];
                 }
             }
-            let qps = ls.shard.inbox.len() as f64 / cfg.batch_secs;
+            let qps = ls.shard.inbox.len() as f64 / cfg.common.batch_secs;
             max_shard_qps = max_shard_qps.max(qps);
             if let Some(auto) = fcfg.auto {
                 if ls.load.len() >= auto.window {
@@ -992,7 +998,8 @@ fn run_loop_on_pool<'e, C: Clock>(
             &mut live,
             b,
             window_end,
-            live_budget,
+            live_spec.budgets.ram,
+            tier_plan_of(&live_spec),
             use_mults.then_some(&mult_buf),
             &mut outcomes,
         );
@@ -1032,7 +1039,7 @@ fn run_loop_on_pool<'e, C: Clock>(
             membership: membership_changes,
             decayed_views,
             live_shards: live.len(),
-            shard_budget: live_budget,
+            shard_budget: live_spec.budgets.ram,
             warming_shards,
             tenant_attained: agg_u,
             tenant_attainable: agg_star,
@@ -1081,7 +1088,7 @@ fn validate(fcfg: &ServeFederationConfig, tenants: &TenantSet) {
     let cfg = &fcfg.serve;
     assert!(fcfg.n_shards >= 1, "federated serve needs at least one shard");
     assert!(cfg.n_tenants > 0, "serve needs at least one tenant");
-    assert!(cfg.batch_secs > 0.0 && cfg.duration_secs > 0.0);
+    assert!(cfg.common.batch_secs > 0.0 && cfg.duration_secs > 0.0);
     assert_eq!(tenants.len(), cfg.n_tenants, "tenant set size mismatch");
 }
 
@@ -1097,11 +1104,8 @@ fn finish<'e>(
     let fcfg = inp.fcfg;
     let cfg = &fcfg.serve;
     let coord_cfg = CoordinatorConfig {
-        batch_secs: cfg.batch_secs,
+        common: cfg.common.clone(),
         n_batches: 0, // open-ended, like the single-node service
-        stateful_gamma: cfg.stateful_gamma,
-        seed: cfg.seed,
-        warm_start: cfg.warm_start,
     };
     let mut all = out.shards;
     all.sort_by_key(|sh| sh.id);
@@ -1156,6 +1160,10 @@ fn finish<'e>(
 /// producer threads feed the router while the calling thread runs the
 /// serving loop. Returns when the duration has elapsed and all
 /// admitted traffic has been served.
+#[deprecated(
+    since = "0.2.0",
+    note = "construct through `session::Session::serve_federated(..).run(..)`"
+)]
 pub fn serve_federated(
     universe: &Universe,
     tenants: &TenantSet,
@@ -1163,16 +1171,43 @@ pub fn serve_federated(
     policy: &dyn Policy,
     fcfg: &ServeFederationConfig,
 ) -> FederatedServeReport {
-    serve_federated_with(universe, tenants, engine, policy, fcfg, &Telemetry::off())
+    serve_federated_impl(universe, tenants, engine, policy, fcfg, &Telemetry::off())
 }
 
-/// [`serve_federated`] with telemetry. The open-ended real-clock run
-/// streams per-shard execution into [`ExecSummary`] aggregates
-/// (`retain_raw = false`): a soak's memory stays flat no matter how
-/// long it runs, and every report field reads from the summaries.
+/// [`serve_federated`] with telemetry.
+#[deprecated(
+    since = "0.2.0",
+    note = "construct through `session::Session::serve_federated(..).telemetry(..).run(..)`"
+)]
+pub fn serve_federated_with(
+    universe: &Universe,
+    tenants: &TenantSet,
+    engine: &SimEngine,
+    policy: &dyn Policy,
+    fcfg: &ServeFederationConfig,
+    tel: &Telemetry,
+) -> FederatedServeReport {
+    serve_federated_impl(universe, tenants, engine, policy, fcfg, tel)
+}
+
+/// The federation's total tier spec: the configured `common.tiers`
+/// when tiered, else single-tier over the engine's whole cache budget.
+fn fed_total_spec(fcfg: &ServeFederationConfig, engine: &SimEngine) -> TierSpec {
+    fcfg.serve
+        .common
+        .tiers
+        .unwrap_or_else(|| TierSpec::single(engine.config.cache_budget))
+}
+
+/// The real-clock federated driver behind [`serve_federated`]/
+/// [`serve_federated_with`] and the Session API. The open-ended
+/// real-clock run streams per-shard execution into [`ExecSummary`]
+/// aggregates (`retain_raw = false`): a soak's memory stays flat no
+/// matter how long it runs, and every report field reads from the
+/// summaries.
 ///
 /// [`ExecSummary`]: crate::coordinator::loop_::ExecSummary
-pub fn serve_federated_with(
+pub(crate) fn serve_federated_impl(
     universe: &Universe,
     tenants: &TenantSet,
     engine: &SimEngine,
@@ -1183,13 +1218,13 @@ pub fn serve_federated_with(
     validate(fcfg, tenants);
     let cfg = &fcfg.serve;
     tel.meta("serve-federated", cfg.n_tenants, fcfg.n_shards, fcfg.max_boost);
-    let total_budget = engine.config.cache_budget;
+    let total_spec = fed_total_spec(fcfg, engine);
     let cached_sizes: Vec<u64> = universe.views.iter().map(|v| v.cached_bytes).collect();
     let scan_sizes: Vec<u64> = universe.views.iter().map(|v| v.scan_bytes).collect();
     // One engine clone serves every shard executor; budgets are handed
     // to executors explicitly and re-split on membership changes.
     let mut exec_engine = engine.clone();
-    exec_engine.config.cache_budget = total_budget / fcfg.n_shards as u64;
+    exec_engine.config.cache_budget = total_spec.split(fcfg.n_shards).budgets.ram;
     let exec_engine = exec_engine;
     let inputs = ServingInputs {
         universe,
@@ -1197,7 +1232,7 @@ pub fn serve_federated_with(
         exec_engine: &exec_engine,
         policy,
         fcfg,
-        total_budget,
+        total_spec,
         tel,
         retain_raw: false,
     };
@@ -1259,6 +1294,10 @@ pub fn serve_federated_with(
 /// are all pinned in `rust/tests/federated_serving.rs`. Like
 /// `serve_sim`, only [`AdmissionPolicy::Drop`] is supported (a blocked
 /// offer would deadlock a single-threaded driver).
+#[deprecated(
+    since = "0.2.0",
+    note = "construct through `session::Session::serve_federated(..).sim().run(..)`"
+)]
 pub fn serve_federated_sim(
     universe: &Universe,
     tenants: &TenantSet,
@@ -1266,14 +1305,32 @@ pub fn serve_federated_sim(
     policy: &dyn Policy,
     fcfg: &ServeFederationConfig,
 ) -> FederatedServeReport {
-    serve_federated_sim_with(universe, tenants, engine, policy, fcfg, &Telemetry::off())
+    serve_federated_sim_impl(universe, tenants, engine, policy, fcfg, &Telemetry::off())
 }
 
-/// [`serve_federated_sim`] with telemetry. Unlike the real-clock
-/// driver this keeps raw per-query records (`retain_raw = true`): the
-/// equivalence and conservation tests compare them exactly, and a sim
-/// run's length is bounded by its config.
+/// [`serve_federated_sim`] with telemetry.
+#[deprecated(
+    since = "0.2.0",
+    note = "construct through `session::Session::serve_federated(..).telemetry(..).sim().run(..)`"
+)]
 pub fn serve_federated_sim_with(
+    universe: &Universe,
+    tenants: &TenantSet,
+    engine: &SimEngine,
+    policy: &dyn Policy,
+    fcfg: &ServeFederationConfig,
+    tel: &Telemetry,
+) -> FederatedServeReport {
+    serve_federated_sim_impl(universe, tenants, engine, policy, fcfg, tel)
+}
+
+/// The deterministic federated driver behind [`serve_federated_sim`]/
+/// [`serve_federated_sim_with`] and the Session API. Unlike the
+/// real-clock driver this keeps raw per-query records
+/// (`retain_raw = true`): the equivalence and conservation tests
+/// compare them exactly, and a sim run's length is bounded by its
+/// config.
+pub(crate) fn serve_federated_sim_impl(
     universe: &Universe,
     tenants: &TenantSet,
     engine: &SimEngine,
@@ -1294,11 +1351,11 @@ pub fn serve_federated_sim_with(
         fcfg.n_shards,
         fcfg.max_boost,
     );
-    let total_budget = engine.config.cache_budget;
+    let total_spec = fed_total_spec(fcfg, engine);
     let cached_sizes: Vec<u64> = universe.views.iter().map(|v| v.cached_bytes).collect();
     let scan_sizes: Vec<u64> = universe.views.iter().map(|v| v.scan_bytes).collect();
     let mut exec_engine = engine.clone();
-    exec_engine.config.cache_budget = total_budget / fcfg.n_shards as u64;
+    exec_engine.config.cache_budget = total_spec.split(fcfg.n_shards).budgets.ram;
     let exec_engine = exec_engine;
     let inputs = ServingInputs {
         universe,
@@ -1306,7 +1363,7 @@ pub fn serve_federated_sim_with(
         exec_engine: &exec_engine,
         policy,
         fcfg,
-        total_budget,
+        total_spec,
         tel,
         retain_raw: true,
     };
@@ -1358,20 +1415,23 @@ pub fn serve_federated_sim_with(
 mod tests {
     use super::*;
     use crate::alloc::PolicyKind;
+    use crate::coordinator::loop_::CommonConfig;
     use crate::sim::cluster::ClusterConfig;
 
     fn base_cfg() -> ServeConfig {
         ServeConfig {
+            common: CommonConfig {
+                batch_secs: 0.25,
+                seed: 17,
+                warm_start: true,
+                ..CommonConfig::default()
+            },
             duration_secs: 1.0,
             rate_per_sec: 300.0,
             n_tenants: 2,
-            batch_secs: 0.25,
             queue_capacity: 8192,
             admission: AdmissionPolicy::Drop,
-            stateful_gamma: None,
-            seed: 17,
             verbose: false,
-            warm_start: true,
         }
     }
 
@@ -1380,7 +1440,14 @@ mod tests {
         let tenants = TenantSet::equal(fcfg.serve.n_tenants);
         let engine = SimEngine::new(ClusterConfig::default());
         let policy = PolicyKind::FastPf.build();
-        serve_federated_sim(&universe, &tenants, &engine, policy.as_ref(), fcfg)
+        serve_federated_sim_impl(
+            &universe,
+            &tenants,
+            &engine,
+            policy.as_ref(),
+            fcfg,
+            &Telemetry::off(),
+        )
     }
 
     #[test]

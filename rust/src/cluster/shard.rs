@@ -22,6 +22,7 @@
 use std::time::Instant;
 
 use crate::alloc::{ConfigMask, Policy, WarmState};
+use crate::cache::tier::{TierAssignment, TierSpec};
 use crate::coordinator::loop_::{BatchExecutor, PlannedBatch, SolveContext};
 use crate::domain::query::Query;
 use crate::domain::tenant::TenantSet;
@@ -55,8 +56,10 @@ pub(crate) struct Shard<'a> {
     /// identical configurations.
     pub rng: Pcg64,
     /// Planner-side mirror of this shard's cache contents (the stateful
-    /// boost source — never reads the live cache mid-pipeline).
-    pub mirror: ConfigMask,
+    /// boost source). Re-synced from the live cache after every
+    /// transition, so in tiered mode it also carries the SSD plane's
+    /// demotion fill the solver never saw.
+    pub mirror: TierAssignment,
     /// Views homed on this shard by the current placement — the
     /// federation router's map, not a constraint on the cache.
     pub home: ConfigMask,
@@ -98,16 +101,16 @@ impl<'a> Shard<'a> {
         tenants: &TenantSet,
         home: ConfigMask,
         seed: u64,
-        budget: u64,
+        spec: TierSpec,
         warmup_until: usize,
         warm_start: bool,
     ) -> Self {
         let n_views = universe.views.len();
         Self {
             id,
-            executor: BatchExecutor::build(engine, universe, tenants, budget),
+            executor: BatchExecutor::build(engine, universe, tenants, spec),
             rng: Pcg64::with_stream(seed, PLANNER_STREAM + id as u64),
-            mirror: ConfigMask::empty(n_views),
+            mirror: TierAssignment::single(ConfigMask::empty(n_views)),
             home,
             replicas: ConfigMask::empty(n_views),
             inbox: Vec::new(),
@@ -176,20 +179,26 @@ impl<'a> Shard<'a> {
         // the current budget, so this trim only fires on the keep path;
         // evict largest views first (deterministic) until feasible.
         // Static runs never shrink budgets, so this is inert there.
+        // Each tier plane is trimmed against its own budget (the SSD
+        // plane can carry demotion fill from the mirror re-sync).
         let size_of = |v: usize| ctx.universe.views.get(ViewId(v)).cached_bytes;
-        let mut bytes: u64 = config.ones().map(size_of).sum();
-        if bytes > ctx.budget {
-            let mut views: Vec<usize> = config.ones().collect();
-            views.sort_by_key(|&v| (std::cmp::Reverse(size_of(v)), v));
-            for v in views {
-                if bytes <= ctx.budget {
-                    break;
+        let trim = |plane: &mut ConfigMask, budget: u64| {
+            let mut bytes: u64 = plane.ones().map(size_of).sum();
+            if bytes > budget {
+                let mut views: Vec<usize> = plane.ones().collect();
+                views.sort_by_key(|&v| (std::cmp::Reverse(size_of(v)), v));
+                for v in views {
+                    if bytes <= budget {
+                        break;
+                    }
+                    plane.set(v, false);
+                    bytes -= size_of(v);
                 }
-                config.set(v, false);
-                bytes -= size_of(v);
             }
-        }
-        self.mirror = config.clone();
+        };
+        trim(&mut config.ram, ctx.budget);
+        let ssd_budget = ctx.tier.map_or(0, |t| t.ssd_budget as u64);
+        trim(&mut config.ssd, ssd_budget);
         self.budgets.push(ctx.budget);
         // Reclaim the routed batch's buffer: the cleared Vec (capacity
         // intact) becomes next batch's inbox, so a steady-state shard
@@ -210,6 +219,13 @@ impl<'a> Shard<'a> {
             0,
             solve_secs,
         );
+        // Re-sync the mirror from the live cache: same thread, exact —
+        // this picks up the SSD demotion fill chosen by the transition
+        // (single-tier: identical to the emitted configuration).
+        self.mirror = TierAssignment {
+            ram: self.executor.cache().cached().clone(),
+            ssd: self.executor.cache().ssd_contents().clone(),
+        };
         let (transition_secs, execute_secs) = self.executor.last_phase_secs();
         tel.span(&SpanRecord {
             t: window_end,

@@ -24,10 +24,11 @@
 use std::time::Instant;
 
 use crate::alloc::{ConfigMask, Policy, WarmState};
+use crate::cache::tier::{TierAssignment, TierSpec};
 use crate::cache::{CacheDelta, CacheManager};
 use crate::domain::query::{Query, QueryId};
 use crate::domain::tenant::TenantSet;
-use crate::domain::utility::BatchUtilities;
+use crate::domain::utility::{BatchUtilities, TierPlan};
 use crate::sim::engine::{QueryOutcome, SimEngine};
 use crate::telemetry::{LocalHistogram, SpanRecord, Telemetry};
 use crate::util::event::{Clock, SimClock};
@@ -36,12 +37,26 @@ use crate::util::stats;
 use crate::workload::generator::WorkloadGenerator;
 use crate::workload::universe::Universe;
 
+/// The tier dimension of one driver's solve loop, derived once from a
+/// [`TierSpec`]: `None` in single-tier mode (SSD budget 0), which makes
+/// every solve below route through exactly the legacy RAM-only code.
+pub(crate) fn tier_plan_of(spec: &TierSpec) -> Option<TierPlan> {
+    (!spec.is_single_tier()).then(|| TierPlan {
+        ssd_budget: spec.budgets.ssd as f64,
+        discount: spec.cost.ssd_discount(),
+    })
+}
+
 /// The inputs of one batch solve that every driver shares (serial,
 /// pipelined, the online service, and the sharded federation).
 pub(crate) struct SolveContext<'a> {
     pub tenants: &'a TenantSet,
     pub universe: &'a Universe,
+    /// RAM-tier byte budget (the legacy single budget).
     pub budget: u64,
+    /// SSD-tier plane of the solve; `None` = single-tier (bit-identical
+    /// to the pre-tier path).
+    pub tier: Option<TierPlan>,
     pub stateful_gamma: Option<f64>,
     /// Per-tenant weight multipliers layered onto the base λ_i for this
     /// solve (the federation's global-fairness feedback). `None` routes
@@ -53,7 +68,9 @@ pub(crate) struct SolveContext<'a> {
 /// One solved batch plus the accounting the federation's global
 /// fairness accountant aggregates across shards.
 pub(crate) struct SolveOutcome {
-    pub config: ConfigMask,
+    /// The sampled `(view, tier)` configuration. Single-tier solves
+    /// always emit an empty SSD plane.
+    pub config: TierAssignment,
     /// Raw per-tenant utility attained by the sampled configuration
     /// (zeros for an empty batch).
     pub utilities: Vec<f64>,
@@ -84,11 +101,11 @@ impl SolveContext<'_> {
     /// current contents.
     pub(crate) fn solve(
         &self,
-        cached: &ConfigMask,
+        cached: &TierAssignment,
         queries: &[Query],
         policy: &dyn Policy,
         rng: &mut Pcg64,
-    ) -> ConfigMask {
+    ) -> TierAssignment {
         self.solve_accounted(cached, queries, policy, rng).config
     }
 
@@ -98,12 +115,12 @@ impl SolveContext<'_> {
     /// carried [`WarmState`] to `policy.allocate_warm`.
     pub(crate) fn solve_warm(
         &self,
-        cached: &ConfigMask,
+        cached: &TierAssignment,
         queries: &[Query],
         policy: &dyn Policy,
         rng: &mut Pcg64,
         warm: Option<&mut WarmState>,
-    ) -> ConfigMask {
+    ) -> TierAssignment {
         self.solve_accounted_warm(cached, queries, policy, rng, warm)
             .config
     }
@@ -114,7 +131,7 @@ impl SolveContext<'_> {
     /// `rng` identically.
     pub(crate) fn solve_accounted(
         &self,
-        cached: &ConfigMask,
+        cached: &TierAssignment,
         queries: &[Query],
         policy: &dyn Policy,
         rng: &mut Pcg64,
@@ -128,7 +145,7 @@ impl SolveContext<'_> {
     /// next non-empty batch).
     pub(crate) fn solve_accounted_warm(
         &self,
-        cached: &ConfigMask,
+        cached: &TierAssignment,
         queries: &[Query],
         policy: &dyn Policy,
         rng: &mut Pcg64,
@@ -154,16 +171,19 @@ impl SolveContext<'_> {
             _ => "cold",
         };
         let t0 = Instant::now();
+        // §5.4 stateful boost comes from the RAM plane only: a demoted
+        // view lost its RAM residency, so it loses its retention boost.
         let boost = self
             .stateful_gamma
-            .map(|g| CacheManager::boost_vector(cached, g));
+            .map(|g| CacheManager::boost_vector(&cached.ram, g));
         let mut batch_problem = BatchUtilities::build(
             self.tenants,
             &self.universe.views,
             self.budget as f64,
             queries,
             boost.as_deref(),
-        );
+        )
+        .with_tier(self.tier);
         // We own the freshly built problem, so the federation's weight
         // multipliers apply in place — no clone on the hot path.
         if let Some(mult) = self.weight_mult {
@@ -177,8 +197,8 @@ impl SolveContext<'_> {
         };
         let alloc_secs = t1.elapsed().as_secs_f64();
         let t2 = Instant::now();
-        let config = allocation.sample(rng).clone();
-        let utilities = batch_problem.utilities(&config);
+        let config = allocation.sample_pair(rng);
+        let utilities = batch_problem.utilities_pair(&config);
         let u_star = batch_problem.u_star.clone();
         let sample_secs = t2.elapsed().as_secs_f64();
         SolveOutcome {
@@ -193,13 +213,14 @@ impl SolveContext<'_> {
     }
 }
 
-/// Coordinator configuration (the §5.3 experiment knobs).
+/// The configuration fields every driver shares (serial replay, the
+/// pipelined runner, the online service, and both federations). Each
+/// driver config embeds one of these; the CLI parses the corresponding
+/// flags in exactly one place (`main::opt_common`).
 #[derive(Debug, Clone)]
-pub struct CoordinatorConfig {
-    /// Batch interval W in (simulated) seconds.
+pub struct CommonConfig {
+    /// Batch interval W in (simulated or real) seconds.
     pub batch_secs: f64,
-    /// Number of batches to run.
-    pub n_batches: usize,
     /// Stateful cache mode (§5.4): boost factor γ for cached views;
     /// `None` = stateless (the paper's default).
     pub stateful_gamma: Option<f64>,
@@ -209,16 +230,38 @@ pub struct CoordinatorConfig {
     /// solves). Off by default so `robus run` replay stays bit-identical
     /// to the historical path; `robus serve` turns it on.
     pub warm_start: bool,
+    /// Tiered cache hierarchy (RAM + SSD budgets + cost model). `None`
+    /// keeps the engine's single RAM budget — the pre-tier path, bit
+    /// for bit. A spec whose SSD budget is 0 behaves identically.
+    pub tiers: Option<TierSpec>,
+}
+
+impl Default for CommonConfig {
+    fn default() -> Self {
+        Self {
+            batch_secs: 40.0,
+            stateful_gamma: None,
+            seed: 7,
+            warm_start: false,
+            tiers: None,
+        }
+    }
+}
+
+/// Coordinator configuration (the §5.3 experiment knobs).
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Knobs shared with every other driver.
+    pub common: CommonConfig,
+    /// Number of batches to run.
+    pub n_batches: usize,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
         Self {
-            batch_secs: 40.0,
+            common: CommonConfig::default(),
             n_batches: 30,
-            stateful_gamma: None,
-            seed: 7,
-            warm_start: false,
         }
     }
 }
@@ -229,8 +272,12 @@ pub struct BatchRecord {
     pub index: usize,
     /// Queries in the batch.
     pub n_queries: usize,
-    /// The sampled configuration (view mask).
+    /// The sampled configuration's RAM plane (the legacy view mask —
+    /// everything that reads `config` keeps its pre-tier meaning).
     pub config: ConfigMask,
+    /// The SSD plane of the sampled configuration (empty in single-tier
+    /// mode).
+    pub ssd: ConfigMask,
     /// Cache utilization after the update.
     pub cache_utilization: f64,
     /// Wall-clock (simulated) times: batch window end / execution span.
@@ -276,6 +323,12 @@ pub struct ExecSummary {
     pub per_tenant_completed: Vec<u64>,
     pub bytes_loaded: u64,
     pub bytes_evicted: u64,
+    /// Disk→SSD load bytes (tiered mode; 0 single-tier).
+    pub bytes_ssd_loaded: u64,
+    /// RAM→SSD demotion bytes (tiered mode; 0 single-tier).
+    pub bytes_demoted: u64,
+    /// SSD→RAM promotion bytes (tiered mode; 0 single-tier).
+    pub bytes_promoted: u64,
     /// Per-batch solve latency (total solve, milliseconds).
     pub solve_ms: LocalHistogram,
 }
@@ -304,6 +357,9 @@ impl ExecSummary {
         }
         self.bytes_loaded += other.bytes_loaded;
         self.bytes_evicted += other.bytes_evicted;
+        self.bytes_ssd_loaded += other.bytes_ssd_loaded;
+        self.bytes_demoted += other.bytes_demoted;
+        self.bytes_promoted += other.bytes_promoted;
         self.solve_ms.merge(&other.solve_ms);
     }
 }
@@ -530,7 +586,7 @@ pub struct PlannedBatch {
     pub index: usize,
     pub window_end: f64,
     pub queries: Vec<Query>,
-    pub config: ConfigMask,
+    pub config: TierAssignment,
     pub solve_secs: f64,
     /// Span phase breakdown (host seconds; observational only — see
     /// [`SolveOutcome`]). `solve_secs` stays the total the reports use;
@@ -553,12 +609,18 @@ pub struct BatchPlanner<'a> {
     cfg: &'a CoordinatorConfig,
     policy: &'a dyn Policy,
     generator: &'a mut WorkloadGenerator,
-    budget: u64,
+    /// The planner's tier spec (RAM budget + optional SSD plane); in
+    /// single-tier mode the RAM budget is exactly the engine's cache
+    /// budget and the tier plan below is `None`.
+    spec: TierSpec,
+    /// Cached view sizes, for reproducing the executor's
+    /// demotion-before-drop SSD fill on the mirror (tiered mode only).
+    sizes: Vec<u64>,
     rng: Pcg64,
-    /// Mirror of the cache contents: after `CacheManager::update` the
-    /// cache holds exactly the previous emitted configuration, so the
-    /// planner tracks it locally instead of reading the live cache.
-    mirror: ConfigMask,
+    /// Mirror of the cache contents: after `CacheManager::update_tiered`
+    /// the cache holds exactly the previous emitted configuration, so
+    /// the planner tracks it locally instead of reading the live cache.
+    mirror: TierAssignment,
     /// Carried warm-start state (`Some` iff `cfg.warm_start`). Owned by
     /// the planner, so the serial and pipelined drivers warm-start
     /// identically — the pipeline moves the whole planner onto its
@@ -575,7 +637,7 @@ impl BatchPlanner<'_> {
         }
         let b = self.next;
         self.next += 1;
-        let window_end = (b + 1) as f64 * self.cfg.batch_secs;
+        let window_end = (b + 1) as f64 * self.cfg.common.batch_secs;
         // Step 1: drain the batch window.
         let t_drain = Instant::now();
         let queries = self.generator.generate_until(window_end, self.universe);
@@ -586,8 +648,9 @@ impl BatchPlanner<'_> {
         let ctx = SolveContext {
             tenants: self.tenants,
             universe: self.universe,
-            budget: self.budget,
-            stateful_gamma: self.cfg.stateful_gamma,
+            budget: self.spec.budgets.ram,
+            tier: tier_plan_of(&self.spec),
+            stateful_gamma: self.cfg.common.stateful_gamma,
             weight_mult: None,
         };
         let outcome = ctx.solve_accounted_warm(
@@ -598,7 +661,23 @@ impl BatchPlanner<'_> {
             self.warm.as_mut(),
         );
         let solve_secs = t0.elapsed().as_secs_f64();
-        self.mirror = outcome.config.clone();
+        // Mirror the cache contents the executor will hold after this
+        // batch's transition. The planner never reads the live cache, so
+        // in tiered mode it reproduces the demotion-before-drop SSD fill
+        // with the same deterministic rule the manager applies.
+        self.mirror = if self.spec.is_single_tier() {
+            outcome.config.clone()
+        } else {
+            TierAssignment {
+                ssd: CacheManager::resolve_ssd_plane(
+                    &self.mirror.ram,
+                    &outcome.config,
+                    &self.sizes,
+                    self.spec.budgets.ssd,
+                ),
+                ram: outcome.config.ram.clone(),
+            }
+        };
         Some(PlannedBatch {
             index: b,
             window_end,
@@ -643,15 +722,15 @@ pub struct BatchExecutor<'a> {
 
 impl<'e> BatchExecutor<'e> {
     /// Build an executor over `engine`'s cluster slice with an explicit
-    /// cache budget. Single-node drivers pass the engine's own budget
-    /// (see [`Coordinator::executor`]); the elastic federation hands
-    /// each shard its current slice and re-splits it on membership
-    /// changes via [`BatchExecutor::cache_mut`].
+    /// tier spec. Single-node drivers derive it from the config (see
+    /// [`Coordinator::executor`]); the elastic federation hands each
+    /// shard its current slice and re-splits it on membership changes
+    /// via [`BatchExecutor::cache_mut`].
     pub(crate) fn build(
         engine: &'e SimEngine,
         universe: &Universe,
         tenants: &TenantSet,
-        budget: u64,
+        spec: TierSpec,
     ) -> BatchExecutor<'e> {
         let sizes: Vec<u64> = universe.views.iter().map(|v| v.cached_bytes).collect();
         let scan_sizes: Vec<u64> = universe.views.iter().map(|v| v.scan_bytes).collect();
@@ -664,7 +743,7 @@ impl<'e> BatchExecutor<'e> {
             engine,
             scan_sizes,
             weights,
-            cache: CacheManager::new(budget, sizes),
+            cache: CacheManager::new_tiered(spec, sizes),
             clock: SimClock::new(),
             outcomes: Vec::new(),
             batches: Vec::new(),
@@ -702,9 +781,10 @@ impl BatchExecutor<'_> {
             solve_secs,
             ..
         } = planned;
-        // Step 3: incremental cache transition.
+        // Step 3: incremental cache transition (tier-aware: demotion
+        // before drop; single-tier assignments take the legacy path).
         let t_trans = Instant::now();
-        let delta = self.cache.update(&config);
+        let delta = self.cache.update_tiered(&config);
         self.last_transition_secs = t_trans.elapsed().as_secs_f64();
 
         // Steps 4+5: execute on the simulated cluster, starting once
@@ -734,6 +814,9 @@ impl BatchExecutor<'_> {
         self.summary.completed += exec.outcomes.len() as u64;
         self.summary.bytes_loaded += delta.bytes_loaded;
         self.summary.bytes_evicted += delta.bytes_evicted;
+        self.summary.bytes_ssd_loaded += delta.bytes_ssd_loaded;
+        self.summary.bytes_demoted += delta.bytes_demoted;
+        self.summary.bytes_promoted += delta.bytes_promoted;
         self.summary.solve_ms.record(solve_secs * 1e3);
         for o in &exec.outcomes {
             if o.from_cache {
@@ -745,10 +828,12 @@ impl BatchExecutor<'_> {
         }
 
         if self.retain_raw {
+            let TierAssignment { ram, ssd } = config;
             self.batches.push(BatchRecord {
                 index,
                 n_queries: queries.len(),
-                config,
+                config: ram,
+                ssd,
                 cache_utilization: utilization,
                 window_end,
                 exec_start,
@@ -799,7 +884,7 @@ impl BatchExecutor<'_> {
             policy,
             outcomes: self.outcomes,
             batches: self.batches,
-            end_time: self.prev_end.max(cfg.n_batches as f64 * cfg.batch_secs),
+            end_time: self.prev_end.max(cfg.n_batches as f64 * cfg.common.batch_secs),
             n_tenants,
             weights: self.weights,
             host_wall_secs,
@@ -833,22 +918,33 @@ impl<'a> Coordinator<'a> {
         }
     }
 
+    /// The run's tier spec: the configured hierarchy, or the engine's
+    /// single RAM budget when tiers are off.
+    pub(crate) fn tier_spec(&self) -> TierSpec {
+        self.config
+            .common
+            .tiers
+            .unwrap_or_else(|| TierSpec::single(self.engine.config.cache_budget))
+    }
+
     /// The solve half of the loop (shared by serial and pipelined runs).
     pub(crate) fn planner<'c>(
         &'c self,
         generator: &'c mut WorkloadGenerator,
         policy: &'c dyn Policy,
     ) -> BatchPlanner<'c> {
+        let n_views = self.universe.views.len();
         BatchPlanner {
             universe: self.universe,
             tenants: &self.tenants,
             cfg: &self.config,
             policy,
             generator,
-            budget: self.engine.config.cache_budget,
-            rng: Pcg64::with_stream(self.config.seed, 0x0b5),
-            mirror: ConfigMask::empty(self.universe.views.len()),
-            warm: self.config.warm_start.then(WarmState::new),
+            spec: self.tier_spec(),
+            sizes: self.universe.views.iter().map(|v| v.cached_bytes).collect(),
+            rng: Pcg64::with_stream(self.config.common.seed, 0x0b5),
+            mirror: TierAssignment::single(ConfigMask::empty(n_views)),
+            warm: self.config.common.warm_start.then(WarmState::new),
             next: 0,
         }
     }
@@ -856,12 +952,7 @@ impl<'a> Coordinator<'a> {
     /// The execute half of the loop (shared by serial and pipelined
     /// runs).
     pub(crate) fn executor(&self) -> BatchExecutor<'_> {
-        BatchExecutor::build(
-            &self.engine,
-            self.universe,
-            &self.tenants,
-            self.engine.config.cache_budget,
-        )
+        BatchExecutor::build(&self.engine, self.universe, &self.tenants, self.tier_spec())
     }
 
     /// Run the full loop with `policy` over a fresh workload from
@@ -869,15 +960,34 @@ impl<'a> Coordinator<'a> {
     /// solve sits on the critical path). The generator seed fixes
     /// arrivals; `config.seed` fixes policy randomization — so two
     /// policies can be compared on identical workloads.
+    #[deprecated(
+        since = "0.2.0",
+        note = "construct through `session::Session::replay(..).run(..)`"
+    )]
     pub fn run(&self, generator: &mut WorkloadGenerator, policy: &dyn Policy) -> RunResult {
-        self.run_with(generator, policy, &Telemetry::off())
+        self.run_impl(generator, policy, &Telemetry::off())
     }
 
     /// [`Coordinator::run`] with telemetry: one span per batch, a tick
     /// per batch window on the simulated clock. Telemetry is a pure
     /// observer — `run` and `run_with` are bit-identical in every
     /// simulated quantity.
+    #[deprecated(
+        since = "0.2.0",
+        note = "construct through `session::Session::replay(..).telemetry(..).run(..)`"
+    )]
     pub fn run_with(
+        &self,
+        generator: &mut WorkloadGenerator,
+        policy: &dyn Policy,
+        tel: &Telemetry,
+    ) -> RunResult {
+        self.run_impl(generator, policy, tel)
+    }
+
+    /// The serial driver behind [`Coordinator::run`]/[`run_with`] and
+    /// the Session API.
+    pub(crate) fn run_impl(
         &self,
         generator: &mut WorkloadGenerator,
         policy: &dyn Policy,
@@ -933,11 +1043,11 @@ mod tests {
         let tenants = TenantSet::equal(2);
         let engine = SimEngine::new(ClusterConfig::default());
         let config = CoordinatorConfig {
-            batch_secs: 40.0,
+            common: CommonConfig {
+                seed,
+                ..CommonConfig::default()
+            },
             n_batches,
-            stateful_gamma: None,
-            seed,
-            warm_start: false,
         };
         let coord = Coordinator::new(&universe, tenants, engine, config);
         // Windowed access (as in the §5.3 experiments) so the working
@@ -953,7 +1063,7 @@ mod tests {
         ];
         let mut gen = WorkloadGenerator::new(specs, &universe, seed);
         let policy = kind.build();
-        coord.run(&mut gen, policy.as_ref())
+        coord.run_impl(&mut gen, policy.as_ref(), &Telemetry::off())
     }
 
     #[test]
@@ -1011,16 +1121,18 @@ mod tests {
         };
         let run = |gamma: Option<f64>| {
             let config = CoordinatorConfig {
-                batch_secs: 20.0,
+                common: CommonConfig {
+                    batch_secs: 20.0,
+                    stateful_gamma: gamma,
+                    seed: 5,
+                    ..CommonConfig::default()
+                },
                 n_batches: 12,
-                stateful_gamma: gamma,
-                seed: 5,
-                warm_start: false,
             };
             let coord = Coordinator::new(&universe, tenants.clone(), engine.clone(), config);
             let mut gen = WorkloadGenerator::new(specs(), &universe, 5);
             let policy = PolicyKind::FastPf.build();
-            coord.run(&mut gen, policy.as_ref())
+            coord.run_impl(&mut gen, policy.as_ref(), &Telemetry::off())
         };
         let stateless = run(None);
         let stateful = run(Some(2.0));
@@ -1084,17 +1196,18 @@ mod tests {
         };
         let run = |warm_start: bool| {
             let config = CoordinatorConfig {
-                batch_secs: 40.0,
+                common: CommonConfig {
+                    seed: 42,
+                    warm_start,
+                    ..CommonConfig::default()
+                },
                 n_batches: 8,
-                stateful_gamma: None,
-                seed: 42,
-                warm_start,
             };
             let coord =
                 Coordinator::new(&universe, TenantSet::equal(2), engine.clone(), config);
             let mut gen = WorkloadGenerator::new(specs(), &universe, 42);
             let policy = PolicyKind::FastPf.build();
-            coord.run(&mut gen, policy.as_ref())
+            coord.run_impl(&mut gen, policy.as_ref(), &Telemetry::off())
         };
         let cold = run(false);
         let warm = run(true);

@@ -35,20 +35,40 @@ impl Coordinator<'_> {
     /// execution of batch b. `depth` bounds how many solved batches may
     /// queue between the threads (backpressure on the solver); depth 0
     /// is clamped to 1.
+    #[deprecated(
+        since = "0.2.0",
+        note = "construct through `session::Session::replay(..).pipelined(depth).run(..)`"
+    )]
     pub fn run_pipelined(
         &self,
         generator: &mut WorkloadGenerator,
         policy: &dyn Policy,
         depth: usize,
     ) -> RunResult {
-        self.run_pipelined_with(generator, policy, depth, &Telemetry::off())
+        self.run_pipelined_impl(generator, policy, depth, &Telemetry::off())
     }
 
     /// [`Coordinator::run_pipelined`] with telemetry: spans are emitted
     /// from the executor side (this thread), one per retired batch, so
     /// trace order matches execution order regardless of how far ahead
     /// the solver runs.
+    #[deprecated(
+        since = "0.2.0",
+        note = "construct through `session::Session::replay(..).pipelined(depth).telemetry(..).run(..)`"
+    )]
     pub fn run_pipelined_with(
+        &self,
+        generator: &mut WorkloadGenerator,
+        policy: &dyn Policy,
+        depth: usize,
+        tel: &Telemetry,
+    ) -> RunResult {
+        self.run_pipelined_impl(generator, policy, depth, tel)
+    }
+
+    /// The pipelined driver behind [`Coordinator::run_pipelined`]/
+    /// [`run_pipelined_with`] and the Session API.
+    pub(crate) fn run_pipelined_impl(
         &self,
         generator: &mut WorkloadGenerator,
         policy: &dyn Policy,
@@ -131,8 +151,9 @@ impl Coordinator<'_> {
 #[cfg(test)]
 mod tests {
     use crate::alloc::PolicyKind;
-    use crate::coordinator::loop_::{Coordinator, CoordinatorConfig, RunResult};
+    use crate::coordinator::loop_::{CommonConfig, Coordinator, CoordinatorConfig, RunResult};
     use crate::domain::tenant::TenantSet;
+    use crate::telemetry::Telemetry;
     use crate::sim::cluster::ClusterConfig;
     use crate::sim::engine::SimEngine;
     use crate::workload::generator::WorkloadGenerator;
@@ -153,11 +174,14 @@ mod tests {
         let tenants = TenantSet::equal(3);
         let engine = SimEngine::new(ClusterConfig::default());
         let config = CoordinatorConfig {
-            batch_secs: 30.0,
+            common: CommonConfig {
+                batch_secs: 30.0,
+                stateful_gamma: gamma,
+                seed: 17,
+                warm_start,
+                tiers: None,
+            },
             n_batches: 6,
-            stateful_gamma: gamma,
-            seed: 17,
-            warm_start,
         };
         let coord = Coordinator::new(&universe, tenants, engine, config);
         let specs = || -> Vec<TenantSpec> {
@@ -169,10 +193,11 @@ mod tests {
                 .collect()
         };
         let policy = kind.build();
+        let tel = Telemetry::off();
         let mut gen_a = WorkloadGenerator::new(specs(), &universe, 17);
-        let serial = coord.run(&mut gen_a, policy.as_ref());
+        let serial = coord.run_impl(&mut gen_a, policy.as_ref(), &tel);
         let mut gen_b = WorkloadGenerator::new(specs(), &universe, 17);
-        let pipelined = coord.run_pipelined(&mut gen_b, policy.as_ref(), depth);
+        let pipelined = coord.run_pipelined_impl(&mut gen_b, policy.as_ref(), depth, &tel);
         (serial, pipelined)
     }
 
@@ -190,6 +215,7 @@ mod tests {
         for (s, p) in serial.batches.iter().zip(&pipelined.batches) {
             assert_eq!(s.index, p.index);
             assert_eq!(s.config, p.config);
+            assert_eq!(s.ssd, p.ssd);
             assert_eq!(s.cache_utilization, p.cache_utilization);
             assert_eq!(s.delta, p.delta);
             assert_eq!(s.exec_start, p.exec_start);

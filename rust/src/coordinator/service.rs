@@ -20,9 +20,11 @@
 
 use std::time::Instant;
 
-use crate::alloc::{Policy, WarmState};
+use crate::alloc::{ConfigMask, Policy, WarmState};
+use crate::cache::tier::{TierAssignment, TierSpec};
 use crate::coordinator::loop_::{
-    BatchExecutor, Coordinator, CoordinatorConfig, PlannedBatch, RunResult, SolveContext,
+    tier_plan_of, BatchExecutor, CommonConfig, Coordinator, CoordinatorConfig, PlannedBatch,
+    RunResult, SolveContext,
 };
 use crate::domain::query::Query;
 use crate::domain::tenant::{TenantId, TenantSet};
@@ -41,24 +43,20 @@ use crate::workload::universe::Universe;
 /// Knobs of one `robus serve` run.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
+    /// Knobs shared with every other driver (batch window, γ, seed,
+    /// warm start, tier budgets). Serve defaults differ from replay:
+    /// W = 0.25 s real-time windows, warm start ON (serving is the
+    /// steady-state regime the warm path targets, and its equivalence
+    /// contract is quality-within-ε, not bit-replay).
+    pub common: CommonConfig,
     /// How long to accept traffic (wall-clock seconds).
     pub duration_secs: f64,
     /// Aggregate target arrival rate across all tenants (queries/sec).
     pub rate_per_sec: f64,
     pub n_tenants: usize,
-    /// Real-time batch window W (seconds).
-    pub batch_secs: f64,
     /// Per-tenant queue bound (the admission cap).
     pub queue_capacity: usize,
     pub admission: AdmissionPolicy,
-    /// §5.4 stateful boost γ (None = stateless).
-    pub stateful_gamma: Option<f64>,
-    pub seed: u64,
-    /// Carry solver state batch-to-batch (warm-started incremental
-    /// solves). On by default: serving is exactly the steady-state
-    /// regime the warm path targets, and its equivalence contract is
-    /// quality-within-ε, not bit-replay.
-    pub warm_start: bool,
     /// Print a live metrics line roughly once per second.
     pub verbose: bool,
 }
@@ -66,15 +64,17 @@ pub struct ServeConfig {
 impl Default for ServeConfig {
     fn default() -> Self {
         Self {
+            common: CommonConfig {
+                batch_secs: 0.25,
+                seed: 42,
+                warm_start: true,
+                ..CommonConfig::default()
+            },
             duration_secs: 5.0,
             rate_per_sec: 1000.0,
             n_tenants: 4,
-            batch_secs: 0.25,
             queue_capacity: 8192,
             admission: AdmissionPolicy::Drop,
-            stateful_gamma: None,
-            seed: 42,
-            warm_start: true,
             verbose: false,
         }
     }
@@ -102,7 +102,7 @@ impl ServeConfig {
     /// same per-tenant arrival sequences; only the wall-clock batch
     /// boundaries differ.
     pub fn tenant_seed(&self, tenant: usize) -> u64 {
-        mix64(self.seed ^ mix64(tenant as u64))
+        mix64(self.common.seed ^ mix64(tenant as u64))
     }
 
     /// The per-tenant producer generator used by [`serve`] — exposed so
@@ -214,12 +214,18 @@ fn service_loop<C: Clock>(
     let mut last_report = 0u64;
     let mut completed_live = 0u64;
     // Carried solver state (`--warm-start`, on by default for serve).
-    let mut warm = cfg.warm_start.then(WarmState::new);
+    let mut warm = cfg.common.warm_start.then(WarmState::new);
+    // Mirror of the executor's tiered cache contents: after each
+    // `update_tiered` the cache holds exactly the emitted assignment,
+    // so the loop tracks both planes locally (the live cache only
+    // exposes the RAM mask).
+    let mut mirror =
+        TierAssignment::single(ConfigMask::empty(solve_ctx.universe.views.len()));
     // Batch-cut buffer, recycled through the executor's buffer reclaim
     // so the steady-state loop allocates nothing per cut.
     let mut queries: Vec<Query> = Vec::new();
     loop {
-        let window_end = (batch_idx + 1) as f64 * cfg.batch_secs;
+        let window_end = (batch_idx + 1) as f64 * cfg.common.batch_secs;
         let now = clock.wait_until(window_end);
         let all_closed = pump(clock, now);
 
@@ -238,15 +244,10 @@ fn service_loop<C: Clock>(
         let drain_secs = t_drain.elapsed().as_secs_f64();
 
         // Step 2: the shared solve (host critical path), boosted
-        // from the executor's live cache contents.
+        // from the mirror of the executor's live cache contents.
         let t0 = Instant::now();
-        let solved = solve_ctx.solve_accounted_warm(
-            executor.cache().cached(),
-            &queries,
-            policy,
-            rng,
-            warm.as_mut(),
-        );
+        let solved =
+            solve_ctx.solve_accounted_warm(&mirror, &queries, policy, rng, warm.as_mut());
         let solve_secs = t0.elapsed().as_secs_f64();
 
         // Steps 3–5: the loop's executor (incremental cache
@@ -271,6 +272,13 @@ fn service_loop<C: Clock>(
             backlog,
             solve_secs,
         );
+        // Re-sync the mirror from the live cache (same thread, so this
+        // is exact): the transition may have demoted dropped RAM views
+        // into spare SSD capacity beyond the solver's own SSD plane.
+        mirror = TierAssignment {
+            ram: executor.cache().cached().clone(),
+            ssd: executor.cache().ssd_contents().clone(),
+        };
         let (transition_secs, execute_secs) = executor.last_phase_secs();
         tel.span(&SpanRecord {
             t: window_end,
@@ -385,6 +393,10 @@ pub(crate) fn queue_counts<'a>(
 /// admission queues while the calling thread runs the batch loop on a
 /// real-time clock. Returns when the duration has elapsed and all
 /// admitted traffic has been served.
+#[deprecated(
+    since = "0.2.0",
+    note = "construct through `session::Session::serve(..).run(..)`"
+)]
 pub fn serve(
     universe: &Universe,
     tenants: &TenantSet,
@@ -392,7 +404,7 @@ pub fn serve(
     policy: &dyn Policy,
     cfg: &ServeConfig,
 ) -> ServeReport {
-    serve_with(universe, tenants, engine, policy, cfg, &Telemetry::off())
+    serve_impl(universe, tenants, engine, policy, cfg, &Telemetry::off())
 }
 
 /// [`serve`] with telemetry. The real-clock driver is where soak
@@ -400,6 +412,10 @@ pub fn serve(
 /// (streaming [`crate::coordinator::loop_::ExecSummary`] instead of
 /// per-query raw records) — the report fields keep their meaning at
 /// any duration.
+#[deprecated(
+    since = "0.2.0",
+    note = "construct through `session::Session::serve(..).telemetry(..).run(..)`"
+)]
 pub fn serve_with(
     universe: &Universe,
     tenants: &TenantSet,
@@ -408,8 +424,21 @@ pub fn serve_with(
     cfg: &ServeConfig,
     tel: &Telemetry,
 ) -> ServeReport {
+    serve_impl(universe, tenants, engine, policy, cfg, tel)
+}
+
+/// The real-time serve driver behind [`serve`]/[`serve_with`] and the
+/// Session API.
+pub(crate) fn serve_impl(
+    universe: &Universe,
+    tenants: &TenantSet,
+    engine: &SimEngine,
+    policy: &dyn Policy,
+    cfg: &ServeConfig,
+    tel: &Telemetry,
+) -> ServeReport {
     assert!(cfg.n_tenants > 0, "serve needs at least one tenant");
-    assert!(cfg.batch_secs > 0.0 && cfg.duration_secs > 0.0);
+    assert!(cfg.common.batch_secs > 0.0 && cfg.duration_secs > 0.0);
     assert_eq!(tenants.len(), cfg.n_tenants, "tenant set size mismatch");
     tel.meta("serve", cfg.n_tenants, 1, 1.0);
 
@@ -417,17 +446,17 @@ pub fn serve_with(
         .map(|_| AdmissionQueue::with_probe(cfg.queue_capacity, tel.queue_probe(-1)))
         .collect();
     let clock = RealTimeClock::new();
-    let budget = engine.config.cache_budget;
+    let spec = cfg
+        .common
+        .tiers
+        .unwrap_or_else(|| TierSpec::single(engine.config.cache_budget));
 
     // The execute half (steps 3–5) is the loop's own `BatchExecutor`;
     // the solve is the shared `SolveContext`. The online driver adds
     // only admission and real-time pacing around them.
     let coord_cfg = CoordinatorConfig {
-        batch_secs: cfg.batch_secs,
+        common: cfg.common.clone(),
         n_batches: 0, // the service loop is open-ended
-        stateful_gamma: cfg.stateful_gamma,
-        seed: cfg.seed,
-        warm_start: cfg.warm_start,
     };
     let coordinator = Coordinator::new(universe, tenants.clone(), engine.clone(), coord_cfg);
     let mut executor = coordinator.executor();
@@ -437,11 +466,12 @@ pub fn serve_with(
     let solve_ctx = SolveContext {
         tenants,
         universe,
-        budget,
-        stateful_gamma: cfg.stateful_gamma,
+        budget: spec.budgets.ram,
+        tier: tier_plan_of(&spec),
+        stateful_gamma: cfg.common.stateful_gamma,
         weight_mult: None,
     };
-    let mut rng = Pcg64::with_stream(cfg.seed, 0x0b5);
+    let mut rng = Pcg64::with_stream(cfg.common.seed, 0x0b5);
     let t_start = Instant::now();
 
     let stats = std::thread::scope(|scope| {
@@ -515,6 +545,10 @@ pub fn serve_with(
 /// tests can compare per-query outcomes exactly. Block admission would
 /// deadlock a single-threaded driver (nothing drains while the pump
 /// offers), so only [`AdmissionPolicy::Drop`] is supported.
+#[deprecated(
+    since = "0.2.0",
+    note = "construct through `session::Session::serve(..).sim().run(..)`"
+)]
 pub fn serve_sim(
     universe: &Universe,
     tenants: &TenantSet,
@@ -522,13 +556,17 @@ pub fn serve_sim(
     policy: &dyn Policy,
     cfg: &ServeConfig,
 ) -> (ServeReport, RunResult) {
-    serve_sim_with(universe, tenants, engine, policy, cfg, &Telemetry::off())
+    serve_sim_impl(universe, tenants, engine, policy, cfg, &Telemetry::off())
 }
 
 /// [`serve_sim`] with telemetry. Raw retention stays ON here — the sim
 /// driver's whole point is returning exact per-query outcomes for
 /// equivalence tests, and telemetry must not change a single one of
 /// them (`rust/tests/telemetry_observer.rs`).
+#[deprecated(
+    since = "0.2.0",
+    note = "construct through `session::Session::serve(..).telemetry(..).sim().run(..)`"
+)]
 pub fn serve_sim_with(
     universe: &Universe,
     tenants: &TenantSet,
@@ -537,8 +575,21 @@ pub fn serve_sim_with(
     cfg: &ServeConfig,
     tel: &Telemetry,
 ) -> (ServeReport, RunResult) {
+    serve_sim_impl(universe, tenants, engine, policy, cfg, tel)
+}
+
+/// The deterministic sim-serve driver behind [`serve_sim`]/
+/// [`serve_sim_with`] and the Session API.
+pub(crate) fn serve_sim_impl(
+    universe: &Universe,
+    tenants: &TenantSet,
+    engine: &SimEngine,
+    policy: &dyn Policy,
+    cfg: &ServeConfig,
+    tel: &Telemetry,
+) -> (ServeReport, RunResult) {
     assert!(cfg.n_tenants > 0, "serve needs at least one tenant");
-    assert!(cfg.batch_secs > 0.0 && cfg.duration_secs > 0.0);
+    assert!(cfg.common.batch_secs > 0.0 && cfg.duration_secs > 0.0);
     assert_eq!(tenants.len(), cfg.n_tenants, "tenant set size mismatch");
     assert_eq!(
         cfg.admission,
@@ -550,24 +601,25 @@ pub fn serve_sim_with(
     let queues: Vec<AdmissionQueue> = (0..cfg.n_tenants)
         .map(|_| AdmissionQueue::with_probe(cfg.queue_capacity, tel.queue_probe(-1)))
         .collect();
-    let budget = engine.config.cache_budget;
+    let spec = cfg
+        .common
+        .tiers
+        .unwrap_or_else(|| TierSpec::single(engine.config.cache_budget));
     let coord_cfg = CoordinatorConfig {
-        batch_secs: cfg.batch_secs,
+        common: cfg.common.clone(),
         n_batches: 0,
-        stateful_gamma: cfg.stateful_gamma,
-        seed: cfg.seed,
-        warm_start: cfg.warm_start,
     };
     let coordinator = Coordinator::new(universe, tenants.clone(), engine.clone(), coord_cfg);
     let mut executor = coordinator.executor();
     let solve_ctx = SolveContext {
         tenants,
         universe,
-        budget,
-        stateful_gamma: cfg.stateful_gamma,
+        budget: spec.budgets.ram,
+        tier: tier_plan_of(&spec),
+        stateful_gamma: cfg.common.stateful_gamma,
         weight_mult: None,
     };
-    let mut rng = Pcg64::with_stream(cfg.seed, 0x0b5);
+    let mut rng = Pcg64::with_stream(cfg.common.seed, 0x0b5);
     let t_start = Instant::now();
 
     // Inline producers: same generators, same seeds, same disjoint id
@@ -625,15 +677,17 @@ mod tests {
 
     fn quick_cfg() -> ServeConfig {
         ServeConfig {
+            common: CommonConfig {
+                batch_secs: 0.05,
+                seed: 9,
+                warm_start: true,
+                ..CommonConfig::default()
+            },
             duration_secs: 0.3,
             rate_per_sec: 400.0,
             n_tenants: 2,
-            batch_secs: 0.05,
             queue_capacity: 4096,
             admission: AdmissionPolicy::Drop,
-            stateful_gamma: None,
-            seed: 9,
-            warm_start: true,
             verbose: false,
         }
     }
@@ -643,7 +697,14 @@ mod tests {
         let tenants = TenantSet::equal(cfg.n_tenants);
         let engine = SimEngine::new(ClusterConfig::default());
         let policy = PolicyKind::FastPf.build();
-        serve(&universe, &tenants, &engine, policy.as_ref(), cfg)
+        serve_impl(
+            &universe,
+            &tenants,
+            &engine,
+            policy.as_ref(),
+            cfg,
+            &Telemetry::off(),
+        )
     }
 
     #[test]
@@ -653,7 +714,10 @@ mod tests {
         let universe = Universe::sales_only();
         let cfg = ServeConfig {
             n_tenants: 3,
-            seed: 123,
+            common: CommonConfig {
+                seed: 123,
+                ..ServeConfig::default().common
+            },
             ..ServeConfig::default()
         };
         let stream = |cfg: &ServeConfig| -> Vec<(usize, String, f64)> {
@@ -672,7 +736,10 @@ mod tests {
         assert!(!a.is_empty());
         assert_eq!(a, stream(&cfg), "same seed must replay identically");
         let other = ServeConfig {
-            seed: 124,
+            common: CommonConfig {
+                seed: 124,
+                ..cfg.common.clone()
+            },
             ..cfg.clone()
         };
         assert_ne!(a, stream(&other), "different seed must differ");
@@ -726,22 +793,27 @@ mod tests {
         // function of the config.
         let universe = Universe::sales_only();
         let cfg = ServeConfig {
+            common: CommonConfig {
+                batch_secs: 0.25,
+                seed: 21,
+                warm_start: true,
+                ..CommonConfig::default()
+            },
             duration_secs: 1.5,
             rate_per_sec: 300.0,
             n_tenants: 2,
-            batch_secs: 0.25,
             queue_capacity: 4096,
             admission: AdmissionPolicy::Drop,
-            stateful_gamma: None,
-            seed: 21,
-            warm_start: true,
             verbose: false,
         };
         let tenants = TenantSet::equal(cfg.n_tenants);
         let engine = SimEngine::new(ClusterConfig::default());
         let policy = PolicyKind::FastPf.build();
-        let (r1, run1) = serve_sim(&universe, &tenants, &engine, policy.as_ref(), &cfg);
-        let (r2, run2) = serve_sim(&universe, &tenants, &engine, policy.as_ref(), &cfg);
+        let tel = Telemetry::off();
+        let (r1, run1) =
+            serve_sim_impl(&universe, &tenants, &engine, policy.as_ref(), &cfg, &tel);
+        let (r2, run2) =
+            serve_sim_impl(&universe, &tenants, &engine, policy.as_ref(), &cfg, &tel);
         assert!(r1.completed > 50, "completed={}", r1.completed);
         assert_eq!(r1.completed, r1.admitted, "sim serve must conserve");
         assert_eq!(r1.batches, r2.batches);

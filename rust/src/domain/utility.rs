@@ -17,11 +17,26 @@
 //! multiplicative-weights loops stop rebuilding the instance every
 //! iteration.
 
+use crate::cache::tier::TierAssignment;
 use crate::domain::query::Query;
 use crate::domain::tenant::TenantSet;
 use crate::domain::view::ViewCatalog;
 use crate::solver::knapsack::{ValuedQuery, WelfareProblem, WelfareSolution};
 use crate::util::mask::ConfigMask;
+
+/// Tier dimension of the batch problem (two-tier mode only): the SSD
+/// byte budget and the utility discount an SSD-resident view earns
+/// ([`crate::cache::tier::TierCostModel::ssd_discount`]). `None` on
+/// [`BatchUtilities::tier`] selects the legacy single-tier problem,
+/// whose evaluation paths stay bit-identical.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TierPlan {
+    /// SSD tier capacity in bytes (same unit as `budget`).
+    pub ssd_budget: f64,
+    /// Fraction of a class's utility retained when its views are
+    /// resident but not all in RAM, in [0, 1].
+    pub discount: f64,
+}
 
 /// Utility model configuration.
 #[derive(Debug, Clone)]
@@ -114,6 +129,9 @@ pub struct BatchUtilities {
     pub u_star: Vec<f64>,
     /// Precomputed bitmask index over `classes`.
     pub index: BatchIndex,
+    /// Two-tier extension (`None` = legacy single-tier problem; every
+    /// evaluation path then avoids tier arithmetic entirely).
+    pub tier: Option<TierPlan>,
 }
 
 impl BatchUtilities {
@@ -169,6 +187,7 @@ impl BatchUtilities {
             classes,
             u_star: vec![0.0; n_tenants],
             index: BatchIndex::default(),
+            tier: None,
         };
         this.u_star = (0..n_tenants).map(|i| this.solo_optimum(i).value).collect();
         this.index = BatchIndex::build(
@@ -211,6 +230,29 @@ impl BatchUtilities {
         u
     }
 
+    /// Raw U over a `(view, tier)` assignment: a class counts fully
+    /// when its views are all in RAM, at the tier discount when they
+    /// are all resident (RAM ∪ SSD) but not all in RAM, and zero
+    /// otherwise. With an empty SSD plane this delegates to
+    /// [`BatchUtilities::utilities`] — bit-identical to the single-tier
+    /// path by construction.
+    pub fn utilities_pair(&self, tiers: &TierAssignment) -> Vec<f64> {
+        if tiers.ssd.none_set() {
+            return self.utilities(&tiers.ram);
+        }
+        let discount = self.tier.map(|t| t.discount).unwrap_or(0.0);
+        let union = tiers.union();
+        let mut u = vec![0.0; self.n_tenants];
+        for (c, m) in self.classes.iter().zip(&self.index.class_masks) {
+            if tiers.ram.contains_all(m) {
+                u[c.tenant] += c.utility;
+            } else if union.contains_all(m) {
+                u[c.tenant] += c.utility * discount;
+            }
+        }
+        u
+    }
+
     /// V_i(S) = U_i(S)/U_i* for all tenants (1.0 for inactive tenants —
     /// a tenant with no queries is trivially fully satisfied).
     pub fn scaled_utilities(&self, selected: &ConfigMask) -> Vec<f64> {
@@ -227,6 +269,51 @@ impl BatchUtilities {
             };
         }
         v
+    }
+
+    /// Attach (or clear) the tier dimension. Builder-style so callers
+    /// can keep the single `build(..)` construction site.
+    pub fn with_tier(mut self, tier: Option<TierPlan>) -> Self {
+        self.tier = tier;
+        self
+    }
+
+    /// V_i over a `(view, tier)` assignment: a class counts fully when
+    /// its views are all in RAM, at the tier discount when they are all
+    /// resident (RAM ∪ SSD) but not all in RAM, and zero otherwise.
+    ///
+    /// With an empty SSD plane this delegates to
+    /// [`BatchUtilities::scaled_utilities`] — bit-identical to the
+    /// single-tier path by construction.
+    pub fn scaled_utilities_pair(&self, tiers: &TierAssignment) -> Vec<f64> {
+        if tiers.ssd.none_set() {
+            return self.scaled_utilities(&tiers.ram);
+        }
+        let discount = self.tier.map(|t| t.discount).unwrap_or(0.0);
+        let union = tiers.union();
+        let mut v = vec![0.0; self.n_tenants];
+        for (c, m) in self.classes.iter().zip(&self.index.class_masks) {
+            if tiers.ram.contains_all(m) {
+                v[c.tenant] += c.utility;
+            } else if union.contains_all(m) {
+                v[c.tenant] += c.utility * discount;
+            }
+        }
+        for (i, vi) in v.iter_mut().enumerate() {
+            *vi = if self.index.inv_u_star[i] > 0.0 {
+                *vi / self.u_star[i]
+            } else {
+                1.0
+            };
+        }
+        v
+    }
+
+    /// Whether a `(view, tier)` assignment fits both tier budgets.
+    pub fn tier_feasible(&self, tiers: &TierAssignment) -> bool {
+        let ssd_budget = self.tier.map(|t| t.ssd_budget).unwrap_or(0.0);
+        self.size_of(&tiers.ram) <= self.budget + 1e-9
+            && self.size_of(&tiers.ssd) <= ssd_budget + 1e-9
     }
 
     /// Total cached size of a configuration.
@@ -304,6 +391,7 @@ impl BatchUtilities {
                 queries,
             },
             terms,
+            tier: self.tier,
         }
     }
 
@@ -335,6 +423,9 @@ pub struct WelfareTemplate {
     /// `(tenant, utility, u_star)` per query class in `problem.queries`
     /// (active-tenant classes only).
     terms: Vec<(usize, f64, f64)>,
+    /// Tier dimension inherited from the batch problem (`None` =
+    /// single-tier; `solve_pair` then never runs its second phase).
+    tier: Option<TierPlan>,
 }
 
 impl WelfareTemplate {
@@ -344,6 +435,50 @@ impl WelfareTemplate {
             q.value = w[t] * util / u_star;
         }
         self.problem.solve_exact()
+    }
+
+    /// Tiered WELFARE(w): phase 1 is the unchanged exact RAM solve
+    /// (same float operations as [`WelfareTemplate::solve`]); phase 2 —
+    /// skipped entirely in single-tier mode — runs a second knapsack
+    /// over the SSD budget for the classes RAM left unsatisfied, with
+    /// RAM-resident views free (size 0, since union residency is what
+    /// satisfies a class) and values scaled by the tier discount.
+    pub fn solve_pair(&mut self, w: &[f64]) -> TierAssignment {
+        let ram_sol = self.solve(w);
+        let ram = ConfigMask::from_bools(&ram_sol.selected);
+        let Some(plan) = self.tier else {
+            return TierAssignment::single(ram);
+        };
+        if plan.ssd_budget <= 0.0 || plan.discount <= 0.0 {
+            return TierAssignment::single(ram);
+        }
+        let mut sizes = self.problem.view_sizes.clone();
+        for v in ram.ones() {
+            sizes[v] = 0.0;
+        }
+        let queries: Vec<ValuedQuery> = self
+            .problem
+            .queries
+            .iter()
+            .filter(|q| !q.views.iter().all(|&v| ram.get(v)))
+            .map(|q| ValuedQuery {
+                value: q.value * plan.discount,
+                views: q.views.clone(),
+            })
+            .collect();
+        let ssd_sol = WelfareProblem {
+            view_sizes: sizes,
+            budget: plan.ssd_budget,
+            queries,
+        }
+        .solve_exact();
+        let mut ssd = ConfigMask::from_bools(&ssd_sol.selected);
+        // RAM-resident views may be "selected" in phase 2 (they are
+        // free); drop them to keep the planes disjoint.
+        for v in ram.ones() {
+            ssd.set(v, false);
+        }
+        TierAssignment { ram, ssd }
     }
 
     /// The underlying (last-weighted) problem, e.g. for budget overrides.
@@ -558,5 +693,82 @@ mod tests {
         let b = BatchUtilities::build(&ts, &vc, 100.0, &queries, None);
         assert_eq!(b.size_of(&mask(&[true, false, true])), 200.0);
         assert_eq!(b.size_of(&ConfigMask::empty(3)), 0.0);
+    }
+
+    #[test]
+    fn solve_pair_without_tier_is_single_plane() {
+        let (ts, vc, queries) = spacebook();
+        let b = BatchUtilities::build(&ts, &vc, 100.0, &queries, None);
+        let mut t = b.welfare_template();
+        let w = vec![1.0, 1.0, 1.0];
+        let pair = t.solve_pair(&w);
+        assert!(pair.ssd.none_set());
+        let sol = b.welfare_problem(&w).solve_exact();
+        assert_eq!(pair.ram, ConfigMask::from_bools(&sol.selected));
+    }
+
+    #[test]
+    fn solve_pair_fills_ssd_with_next_best_views() {
+        let (ts, vc, queries) = spacebook();
+        let plan = TierPlan {
+            ssd_budget: 100.0,
+            discount: 0.5,
+        };
+        let b = BatchUtilities::build(&ts, &vc, 100.0, &queries, None).with_tier(Some(plan));
+        let mut t = b.welfare_template();
+        let pair = t.solve_pair(&[1.0, 1.0, 1.0]);
+        // RAM plane is the untouched phase-1 optimum {R}; the SSD plane
+        // adds {S}, whose discounted residual welfare (3·0.5/2 = 0.75)
+        // beats {P} (1·0.5 = 0.5).
+        assert_eq!(pair.ram, mask(&[true, false, false]));
+        assert_eq!(pair.ssd, mask(&[false, true, false]));
+        assert!(b.tier_feasible(&pair));
+    }
+
+    #[test]
+    fn scaled_utilities_pair_discounts_ssd_residency() {
+        let (ts, vc, queries) = spacebook();
+        let plan = TierPlan {
+            ssd_budget: 100.0,
+            discount: 0.5,
+        };
+        let b = BatchUtilities::build(&ts, &vc, 100.0, &queries, None).with_tier(Some(plan));
+        let tiers = TierAssignment {
+            ram: mask(&[true, false, false]),
+            ssd: mask(&[false, true, false]),
+        };
+        // RAM {R} gives (1, 1, 0); SSD {S} adds half of each S class:
+        // analyst/engineer +0.5·1/2, VP +0.5·1/2.
+        assert_eq!(b.scaled_utilities_pair(&tiers), vec![1.25, 1.25, 0.25]);
+        // Empty SSD plane delegates to the single-tier evaluation.
+        let single = TierAssignment::single(mask(&[true, false, false]));
+        assert_eq!(
+            b.scaled_utilities_pair(&single),
+            b.scaled_utilities(&single.ram)
+        );
+    }
+
+    #[test]
+    fn tier_feasible_checks_both_planes() {
+        let (ts, vc, queries) = spacebook();
+        let plan = TierPlan {
+            ssd_budget: 100.0,
+            discount: 0.5,
+        };
+        let b = BatchUtilities::build(&ts, &vc, 100.0, &queries, None).with_tier(Some(plan));
+        let ok = TierAssignment {
+            ram: mask(&[true, false, false]),
+            ssd: mask(&[false, true, false]),
+        };
+        assert!(b.tier_feasible(&ok));
+        let ssd_over = TierAssignment {
+            ram: mask(&[true, false, false]),
+            ssd: mask(&[false, true, true]),
+        };
+        assert!(!b.tier_feasible(&ssd_over));
+        // Without a tier plan the SSD budget is zero.
+        let b0 = BatchUtilities::build(&ts, &vc, 100.0, &queries, None);
+        assert!(!b0.tier_feasible(&ok));
+        assert!(b0.tier_feasible(&TierAssignment::single(mask(&[true, false, false]))));
     }
 }

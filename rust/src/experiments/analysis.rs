@@ -89,7 +89,7 @@ pub fn pruning_error(m_vectors: usize, n_batches: usize, seed: u64) -> f64 {
             continue;
         }
         // Reference objective: Algorithm 2's achieved min rate.
-        let ref_alloc = crate::alloc::Allocation::from_weighted(reference.solve(&batch));
+        let ref_alloc = crate::alloc::Allocation::from_weighted_pairs(reference.solve(&batch));
         let v_ref = ref_alloc.expected_scaled_utilities(&batch);
         let ref_min = batch
             .active_tenants()

@@ -13,8 +13,8 @@
 //! solve latency with the serial runner (or `solver_bench`).
 
 use crate::alloc::{Policy, PolicyKind};
-use crate::cluster::{ClusterResult, FederationConfig, ShardedCoordinator};
-use crate::coordinator::loop_::{Coordinator, CoordinatorConfig, RunResult};
+use crate::cluster::{ClusterResult, FederationConfig};
+use crate::coordinator::loop_::{CommonConfig, Coordinator, CoordinatorConfig, RunResult};
 use crate::coordinator::metrics::{fairness_index, MetricsSummary};
 use crate::domain::tenant::TenantSet;
 use crate::experiments::setups::{ExperimentSetup, UniverseKind};
@@ -67,11 +67,14 @@ fn coordinator_parts(
     }
     let engine = SimEngine::new(ClusterConfig::default());
     let config = CoordinatorConfig {
-        batch_secs: setup.batch_secs,
+        common: CommonConfig {
+            batch_secs: setup.batch_secs,
+            stateful_gamma: setup.stateful_gamma,
+            seed: setup.seed,
+            warm_start: setup.warm_start,
+            tiers: setup.tiers,
+        },
         n_batches: setup.n_batches,
-        stateful_gamma: setup.stateful_gamma,
-        seed: setup.seed,
-        warm_start: setup.warm_start,
     };
     (universe, tenants, engine, config)
 }
@@ -127,7 +130,7 @@ pub fn run_with_policies_tel(
                         universe,
                         setup.seed,
                     );
-                    coordinator.run_with(&mut gen, p.as_ref(), tel)
+                    coordinator.run_impl(&mut gen, p.as_ref(), tel)
                 })
             })
             .collect();
@@ -159,7 +162,7 @@ pub fn run_with_policies_serial(
                 &universe,
                 setup.seed,
             );
-            coordinator.run(&mut gen, p.as_ref())
+            coordinator.run_impl(&mut gen, p.as_ref(), &Telemetry::off())
         })
         .collect();
 
@@ -198,7 +201,7 @@ pub fn run_with_policies_pipelined_tel(
                 &universe,
                 setup.seed,
             );
-            coordinator.run_pipelined_with(&mut gen, p.as_ref(), depth, tel)
+            coordinator.run_pipelined_impl(&mut gen, p.as_ref(), depth, tel)
         })
         .collect();
 
@@ -229,9 +232,12 @@ pub fn run_federated_tel(
     tel: &Telemetry,
 ) -> ClusterResult {
     let (universe, tenants, engine, config) = coordinator_parts(setup);
-    let coordinator = ShardedCoordinator::new(&universe, tenants, engine, config, fed.clone());
     let mut gen = WorkloadGenerator::new(setup.tenant_specs.clone(), &universe, setup.seed);
-    coordinator.run_with(&mut gen, policy, tel)
+    crate::session::Session::federated(&universe, tenants, engine)
+        .config(config)
+        .federation(fed.clone())
+        .telemetry(tel)
+        .run(&mut gen, policy)
 }
 
 /// Resolve a federation config's membership plan against a setup's

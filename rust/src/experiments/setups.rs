@@ -1,5 +1,6 @@
 //! The evaluation setups of §5.3 (Tables 8–14), expressed declaratively.
 
+use crate::cache::tier::TierSpec;
 use crate::workload::spec::{AccessSpec, TenantSpec, WindowSpec};
 
 /// Sales tenants use the §5.1 hot/cold local-window mechanism: every
@@ -39,6 +40,9 @@ pub struct ExperimentSetup {
     /// Carry solver state across batches (see `alloc::WarmState`). Off
     /// by default so every published table replays bit-identically.
     pub warm_start: bool,
+    /// Two-tier (RAM + SSD) cache spec. `None` (the default) runs the
+    /// bit-identical single-tier path over the engine's cache budget.
+    pub tiers: Option<TierSpec>,
 }
 
 impl ExperimentSetup {
@@ -60,6 +64,7 @@ impl ExperimentSetup {
             stateful_gamma: None,
             seed: 42,
             warm_start: false,
+            tiers: None,
         }
     }
 
@@ -76,6 +81,11 @@ impl ExperimentSetup {
 
     pub fn with_warm_start(mut self, on: bool) -> Self {
         self.warm_start = on;
+        self
+    }
+
+    pub fn with_tiers(mut self, tiers: Option<TierSpec>) -> Self {
+        self.tiers = tiers;
         self
     }
 }

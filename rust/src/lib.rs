@@ -9,6 +9,8 @@
 //! - [`alloc`] — the paper's view-selection policies (STATIC, RSD, OPTP,
 //!   MMF, FASTPF and the provably-good multiplicative-weights algorithms);
 //! - [`coordinator`] — the batched five-step ROBUS loop of Figure 2;
+//! - [`session`] — the unified builder API every driver (replay,
+//!   pipelined, serve, federated) is constructed through;
 //! - [`cluster`] — the sharded cache federation: N per-shard
 //!   coordinators under size-aware placement, hot-view replication, and
 //!   a global per-tenant fairness accountant;
@@ -52,6 +54,8 @@ pub mod sim;
 pub mod coordinator;
 
 pub mod cluster;
+
+pub mod session;
 
 pub mod runtime;
 

@@ -65,6 +65,9 @@ fn main() {
                         OptSpec { name: "quick", help: "cut batches down for a fast smoke run", default: None },
                         OptSpec { name: "pipeline", help: "run: overlap solve(b+1) with execute(b)", default: None },
                         OptSpec { name: "warm-start", help: "on|off: carry solver state across batches (serve default on; run/cluster off)", default: None },
+                        OptSpec { name: "ram-budget", help: "run/serve/cluster: RAM cache-tier budget in GB (absent = engine default, single tier)", default: None },
+                        OptSpec { name: "ssd-budget", help: "run/serve/cluster: SSD cache-tier budget in GB (requires --ram-budget; 0 = single tier)", default: None },
+                        OptSpec { name: "ssd-hit-ms", help: "run/serve/cluster: SSD scan/demote cost, ms per GB per core (requires --ssd-budget)", default: None },
                         OptSpec { name: "out-dir", help: "write JSON reports here", default: Some("results") },
                         OptSpec { name: "duration", help: "serve: wall-clock seconds to accept traffic", default: Some("5") },
                         OptSpec { name: "rate", help: "serve: aggregate arrival rate (queries/sec)", default: Some("1000") },
@@ -157,6 +160,64 @@ fn telemetry_from_args(args: &Args) -> Result<robus::telemetry::Telemetry, Strin
     Ok(tel)
 }
 
+/// Parse the tier flags (`--ram-budget GB`, `--ssd-budget GB`,
+/// `--ssd-hit-ms MS`) strictly, in one place for every subcommand.
+/// Absent means `None`: the bit-identical single-tier path over the
+/// engine's default cache budget. Flag hygiene mirrors the rest of the
+/// CLI — an inconsistent combination is a startup error (exit 2), not
+/// a silently-inert knob.
+fn opt_tiers(args: &Args) -> Result<Option<robus::cache::tier::TierSpec>, String> {
+    use robus::cache::tier::{TierBudgets, TierCostModel, TierSpec};
+    let gb = |name: &str| -> Result<Option<f64>, String> {
+        match args.opt(name) {
+            None => Ok(None),
+            Some(s) => match s.parse::<f64>() {
+                Ok(v) if v >= 0.0 => Ok(Some(v)),
+                _ => Err(format!("--{name} expects GB (a non-negative number), got '{s}'")),
+            },
+        }
+    };
+    let ram = gb("ram-budget")?;
+    let ssd = gb("ssd-budget")?;
+    let ssd_hit_ms = match args.opt("ssd-hit-ms") {
+        None => None,
+        Some(s) => match s.parse::<f64>() {
+            Ok(v) if v > 0.0 => Some(v),
+            _ => {
+                return Err(format!(
+                    "--ssd-hit-ms expects ms per GB (a positive number), got '{s}'"
+                ))
+            }
+        },
+    };
+    if ssd_hit_ms.is_some() && ssd.is_none() {
+        return Err("--ssd-hit-ms requires --ssd-budget (it prices the SSD tier)".to_string());
+    }
+    if ssd.is_some() && ram.is_none() {
+        return Err("--ssd-budget requires --ram-budget (the RAM tier it backs)".to_string());
+    }
+    let Some(ram_gb) = ram else {
+        return Ok(None);
+    };
+    if ram_gb <= 0.0 {
+        return Err("--ram-budget must be positive".to_string());
+    }
+    let to_bytes = |g: f64| (g * (1u64 << 30) as f64) as u64;
+    let mut cost = TierCostModel::default();
+    if let Some(ms) = ssd_hit_ms {
+        // Demotions write at the same device speed the tier reads at.
+        cost.ssd_hit_ms_per_gb = ms;
+        cost.demote_ms_per_gb = ms;
+    }
+    Ok(Some(TierSpec {
+        budgets: TierBudgets {
+            ram: to_bytes(ram_gb),
+            ssd: ssd.map_or(0, to_bytes),
+        },
+        cost,
+    }))
+}
+
 /// Parse `--workers` strictly; absent means auto-size the shard-step
 /// pool to the host, 0 means step shards inline (no pool threads).
 fn opt_workers(args: &Args) -> Result<Option<usize>, String> {
@@ -194,6 +255,7 @@ fn cmd_run(args: &Args) -> Result<i32, String> {
         stateful_gamma: gamma,
         seed,
         warm_start: opt_warm_start(args, false)?,
+        tiers: opt_tiers(args)?,
     };
     if args.flag("quick") {
         setup.n_batches = setup.n_batches.min(6);
@@ -240,16 +302,19 @@ fn cmd_serve(args: &Args) -> Result<i32, String> {
         ));
     };
     let cfg = robus::coordinator::ServeConfig {
+        common: robus::coordinator::loop_::CommonConfig {
+            batch_secs: args.opt_f64("batch-ms", 250.0)? / 1e3,
+            stateful_gamma: opt_gamma(args)?,
+            seed: args.opt_u64("seed", 42)?,
+            warm_start: opt_warm_start(args, true)?,
+            tiers: opt_tiers(args)?,
+        },
         duration_secs: args.opt_f64("duration", 5.0)?,
         rate_per_sec: args.opt_f64("rate", 1000.0)?,
         n_tenants: args.opt_usize("tenants", 4)?.max(1),
-        batch_secs: args.opt_f64("batch-ms", 250.0)? / 1e3,
         queue_capacity: args.opt_usize("queue-cap", 8192)?,
         admission,
-        stateful_gamma: opt_gamma(args)?,
-        seed: args.opt_u64("seed", 42)?,
         verbose: !args.flag("quiet"),
-        warm_start: opt_warm_start(args, true)?,
     };
     let n_shards = args.opt_usize("shards", 1)?;
     if n_shards == 0 {
@@ -337,30 +402,18 @@ fn cmd_serve(args: &Args) -> Result<i32, String> {
             "robus serve: {} tenants, target {:.0} q/s, W={:.0}ms, admission={}, policy={} ({}s run)",
             cfg.n_tenants,
             cfg.rate_per_sec,
-            cfg.batch_secs * 1e3,
+            cfg.common.batch_secs * 1e3,
             cfg.admission.name(),
             kind.name(),
             cfg.duration_secs,
         );
+        let sess = robus::session::Session::serve(&universe, &tenants, &engine)
+            .config(cfg.clone())
+            .telemetry(&tel);
         let report = if sim {
-            robus::coordinator::service::serve_sim_with(
-                &universe,
-                &tenants,
-                &engine,
-                policy.as_ref(),
-                &cfg,
-                &tel,
-            )
-            .0
+            sess.sim().run(policy.as_ref()).0
         } else {
-            robus::coordinator::service::serve_with(
-                &universe,
-                &tenants,
-                &engine,
-                policy.as_ref(),
-                &cfg,
-                &tel,
-            )
+            sess.run(policy.as_ref())
         };
         print!("{}", report.render());
         report.queries_per_sec
@@ -382,7 +435,7 @@ fn cmd_serve(args: &Args) -> Result<i32, String> {
             fcfg.placement.name(),
             cfg.n_tenants,
             cfg.rate_per_sec,
-            cfg.batch_secs * 1e3,
+            cfg.common.batch_secs * 1e3,
             cfg.admission.name(),
             kind.name(),
             match fcfg.auto {
@@ -391,24 +444,12 @@ fn cmd_serve(args: &Args) -> Result<i32, String> {
             },
             cfg.duration_secs,
         );
+        let sess = robus::session::Session::serve_federated(&universe, &tenants, &engine, fcfg)
+            .telemetry(&tel);
         let report = if sim {
-            robus::cluster::serve_federated_sim_with(
-                &universe,
-                &tenants,
-                &engine,
-                policy.as_ref(),
-                &fcfg,
-                &tel,
-            )
+            sess.sim().run(policy.as_ref())
         } else {
-            robus::cluster::serve_federated_with(
-                &universe,
-                &tenants,
-                &engine,
-                policy.as_ref(),
-                &fcfg,
-                &tel,
-            )
+            sess.run(policy.as_ref())
         };
         print!("{}", report.render());
         report.serve.queries_per_sec
@@ -500,6 +541,7 @@ fn cmd_cluster(args: &Args) -> Result<i32, String> {
         .ok_or_else(|| format!("unknown setup {setup_name} (use sales-g1..sales-g4)"))?;
     setup.seed = args.opt_u64("seed", 42)?;
     setup.n_batches = args.opt_usize("batches", setup.n_batches)?;
+    setup.tiers = opt_tiers(args)?;
     if args.flag("quick") {
         setup.n_batches = setup.n_batches.min(6);
     }

@@ -13,8 +13,9 @@
 
 use std::sync::Arc;
 
-use crate::alloc::config_space::ConfigSpace;
+use crate::alloc::config_space::{ConfigId, ConfigSpace};
 use crate::alloc::{Allocation, ConfigMask, Policy};
+use crate::cache::tier::TierAssignment;
 use crate::domain::utility::BatchUtilities;
 use crate::runtime::artifacts::{ArtifactRegistry, SHAPES};
 use crate::runtime::Result;
@@ -65,9 +66,9 @@ impl CompiledSolvers {
                 sb.partial_cmp(&sa).unwrap()
             });
             idx.truncate(SHAPES.nc);
-            let configs: Vec<ConfigMask> =
-                idx.iter().map(|&i| space.masks()[i].clone()).collect();
-            space = ConfigSpace::from_configs(batch, configs);
+            let configs: Vec<TierAssignment> =
+                idx.iter().map(|&i| space.pair(ConfigId(i))).collect();
+            space = ConfigSpace::from_pairs(batch, configs);
         }
 
         let mut v = vec![0f32; SHAPES.nt * SHAPES.nc];
@@ -125,16 +126,12 @@ impl CompiledSolvers {
         let x = self
             .run_solver(entry, &v, &wl, &cmask)
             .expect("compiled solver execution failed");
-        let pairs: Vec<(ConfigMask, f64)> = space
-            .masks()
-            .iter()
-            .cloned()
-            .zip(x.iter().copied())
-            .collect();
+        let pairs: Vec<(TierAssignment, f64)> =
+            space.pairs().zip(x.iter().copied()).collect();
         if pairs.iter().map(|(_, p)| p).sum::<f64>() <= 0.0 {
             return Allocation::deterministic(ConfigMask::empty(batch.n_views()));
         }
-        Allocation::from_weighted(pairs)
+        Allocation::from_weighted_pairs(pairs)
     }
 }
 

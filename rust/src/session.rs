@@ -1,0 +1,408 @@
+//! The unified driver front door: one builder (`Session`) through
+//! which every ROBUS driver is constructed — serial replay, pipelined
+//! replay, single-node online serving (real-clock or simulated), the
+//! sharded replay federation, and federated serving. This replaces the
+//! twelve `run`/`*_with`/`*_sim` free-function entry points that
+//! accumulated across PRs 1–9 (each now a thin `#[deprecated]`
+//! delegate, pinned bit-identical in
+//! `rust/tests/session_conversion.rs`).
+//!
+//! The shape is the same for all four drivers:
+//!
+//! ```text
+//! Session::replay(&universe, tenants, engine)
+//!     .config(cfg)              // CoordinatorConfig (batch window, seed, ...)
+//!     .tiers(spec)              // optional RAM+SSD TierSpec
+//!     .pipelined(depth)         // optional: overlap solve with execute
+//!     .telemetry(&tel)          // optional: default is Telemetry::off()
+//!     .run(&mut generator, policy.as_ref())
+//! ```
+//!
+//! - [`Session::replay`] — the batched §5.3 replay loop
+//!   ([`Coordinator`]); `.pipelined(depth)` selects the overlapped
+//!   solver ([`Coordinator::run_pipelined`] semantics, bit-identical).
+//! - [`Session::serve`] — the single-node online service;
+//!   `.sim()` switches to the deterministic simulated-clock driver,
+//!   which also returns the underlying [`RunResult`].
+//! - [`Session::federated`] — the sharded replay federation
+//!   ([`ShardedCoordinator`]) with elastic membership.
+//! - [`Session::serve_federated`] — real-clock federated serving;
+//!   `.sim()` selects the deterministic driver.
+//!
+//! Tier budgets (`--ram-budget`/`--ssd-budget`) enter through
+//! `.tiers(TierSpec)`, which writes the one shared
+//! [`CommonConfig::tiers`] field every driver reads — there is no
+//! per-driver tier plumbing to keep in sync. A builder without
+//! `.tiers(..)` (or with an SSD budget of 0) runs the bit-identical
+//! single-tier path.
+
+use crate::alloc::Policy;
+use crate::cache::tier::TierSpec;
+use crate::cluster::federation::{FederationConfig, ShardedCoordinator};
+use crate::cluster::metrics::ClusterResult;
+use crate::cluster::serving::{
+    serve_federated_impl, serve_federated_sim_impl, FederatedServeReport,
+    ServeFederationConfig,
+};
+use crate::coordinator::loop_::{Coordinator, CoordinatorConfig, RunResult};
+use crate::coordinator::service::{serve_impl, serve_sim_impl, ServeConfig, ServeReport};
+use crate::domain::tenant::TenantSet;
+use crate::sim::engine::SimEngine;
+use crate::telemetry::Telemetry;
+use crate::workload::generator::WorkloadGenerator;
+use crate::workload::universe::Universe;
+
+/// Entry point of the unified driver API. Each constructor returns the
+/// builder for one driver family; see the module docs for the shape.
+pub struct Session;
+
+impl Session {
+    /// Batched replay (the §5.3 experiment loop): a fixed number of
+    /// batch windows over a seeded workload generator.
+    pub fn replay(universe: &Universe, tenants: TenantSet, engine: SimEngine) -> Replay<'_> {
+        Replay {
+            universe,
+            tenants,
+            engine,
+            config: CoordinatorConfig::default(),
+            depth: None,
+            tel: None,
+        }
+    }
+
+    /// Single-node online serving on the real clock (per-tenant
+    /// producer threads); `.sim()` switches to the deterministic
+    /// simulated-clock driver.
+    pub fn serve<'a>(
+        universe: &'a Universe,
+        tenants: &'a TenantSet,
+        engine: &'a SimEngine,
+    ) -> Serve<'a> {
+        Serve {
+            universe,
+            tenants,
+            engine,
+            config: ServeConfig::default(),
+            tel: None,
+        }
+    }
+
+    /// Sharded replay federation with elastic membership.
+    pub fn federated(
+        universe: &Universe,
+        tenants: TenantSet,
+        engine: SimEngine,
+    ) -> Federated<'_> {
+        Federated {
+            universe,
+            tenants,
+            engine,
+            config: CoordinatorConfig::default(),
+            fed: FederationConfig::default(),
+            tel: None,
+        }
+    }
+
+    /// Federated serving (live admission + reactive membership) on the
+    /// real clock; `.sim()` switches to the deterministic driver.
+    pub fn serve_federated<'a>(
+        universe: &'a Universe,
+        tenants: &'a TenantSet,
+        engine: &'a SimEngine,
+        fcfg: ServeFederationConfig,
+    ) -> ServeFederated<'a> {
+        ServeFederated {
+            universe,
+            tenants,
+            engine,
+            fcfg,
+            tel: None,
+        }
+    }
+}
+
+/// Run `f` with the chosen telemetry handle, or an off handle when the
+/// builder never saw `.telemetry(..)`.
+fn with_tel<R>(tel: Option<&Telemetry>, f: impl FnOnce(&Telemetry) -> R) -> R {
+    match tel {
+        Some(t) => f(t),
+        None => f(&Telemetry::off()),
+    }
+}
+
+/// Builder for the batched replay drivers (serial and pipelined).
+pub struct Replay<'a> {
+    universe: &'a Universe,
+    tenants: TenantSet,
+    engine: SimEngine,
+    config: CoordinatorConfig,
+    depth: Option<usize>,
+    tel: Option<&'a Telemetry>,
+}
+
+impl<'a> Replay<'a> {
+    /// Replace the whole coordinator configuration (batch window,
+    /// batch count, seed, γ, warm starts, tiers).
+    pub fn config(mut self, config: CoordinatorConfig) -> Self {
+        self.config = config;
+        self
+    }
+
+    /// Run with a two-tier (RAM + SSD) cache under `spec`.
+    pub fn tiers(mut self, spec: TierSpec) -> Self {
+        self.config.common.tiers = Some(spec);
+        self
+    }
+
+    /// Overlap the solve for batch b+1 with the execution of batch b
+    /// (`depth` bounds the solver's run-ahead; 0 clamps to 1). The
+    /// results stay bit-identical to the serial loop.
+    pub fn pipelined(mut self, depth: usize) -> Self {
+        self.depth = Some(depth);
+        self
+    }
+
+    /// Attach a telemetry handle (default: off).
+    pub fn telemetry(mut self, tel: &'a Telemetry) -> Self {
+        self.tel = Some(tel);
+        self
+    }
+
+    /// Drive the loop to completion over `generator`'s arrivals.
+    pub fn run(self, generator: &mut WorkloadGenerator, policy: &dyn Policy) -> RunResult {
+        let coord = Coordinator::new(self.universe, self.tenants, self.engine, self.config);
+        with_tel(self.tel, |tel| match self.depth {
+            Some(depth) => coord.run_pipelined_impl(generator, policy, depth, tel),
+            None => coord.run_impl(generator, policy, tel),
+        })
+    }
+}
+
+/// Builder for single-node online serving.
+pub struct Serve<'a> {
+    universe: &'a Universe,
+    tenants: &'a TenantSet,
+    engine: &'a SimEngine,
+    config: ServeConfig,
+    tel: Option<&'a Telemetry>,
+}
+
+impl<'a> Serve<'a> {
+    /// Replace the whole serve configuration (duration, rate, batch
+    /// window, admission policy, seed, tiers, ...).
+    pub fn config(mut self, config: ServeConfig) -> Self {
+        self.config = config;
+        self
+    }
+
+    /// Run with a two-tier (RAM + SSD) cache under `spec`.
+    pub fn tiers(mut self, spec: TierSpec) -> Self {
+        self.config.common.tiers = Some(spec);
+        self
+    }
+
+    /// Attach a telemetry handle (default: off).
+    pub fn telemetry(mut self, tel: &'a Telemetry) -> Self {
+        self.tel = Some(tel);
+        self
+    }
+
+    /// Switch to the deterministic simulated-clock driver, whose
+    /// result also carries the underlying [`RunResult`].
+    pub fn sim(self) -> ServeSim<'a> {
+        ServeSim(self)
+    }
+
+    /// Serve on the real clock until the configured duration elapses
+    /// and all admitted traffic is drained.
+    pub fn run(self, policy: &dyn Policy) -> ServeReport {
+        with_tel(self.tel, |tel| {
+            serve_impl(self.universe, self.tenants, self.engine, policy, &self.config, tel)
+        })
+    }
+}
+
+/// The simulated-clock variant of [`Serve`] (see [`Serve::sim`]).
+pub struct ServeSim<'a>(Serve<'a>);
+
+impl ServeSim<'_> {
+    /// Drive the same serving loop on a simulated clock: every result
+    /// is a pure function of the configuration.
+    pub fn run(self, policy: &dyn Policy) -> (ServeReport, RunResult) {
+        let s = self.0;
+        with_tel(s.tel, |tel| {
+            serve_sim_impl(s.universe, s.tenants, s.engine, policy, &s.config, tel)
+        })
+    }
+}
+
+/// Builder for the sharded replay federation.
+pub struct Federated<'a> {
+    universe: &'a Universe,
+    tenants: TenantSet,
+    engine: SimEngine,
+    config: CoordinatorConfig,
+    fed: FederationConfig,
+    tel: Option<&'a Telemetry>,
+}
+
+impl<'a> Federated<'a> {
+    /// Replace the coordinator configuration shared with the
+    /// single-node replay loop.
+    pub fn config(mut self, config: CoordinatorConfig) -> Self {
+        self.config = config;
+        self
+    }
+
+    /// Replace the federation knobs (shard count, placement,
+    /// replication, membership schedule, workers, ...).
+    pub fn federation(mut self, fed: FederationConfig) -> Self {
+        self.fed = fed;
+        self
+    }
+
+    /// Run with a two-tier (RAM + SSD) cache: every shard gets a
+    /// `spec.split(N')` slice, re-split on membership changes.
+    pub fn tiers(mut self, spec: TierSpec) -> Self {
+        self.config.common.tiers = Some(spec);
+        self
+    }
+
+    /// Attach a telemetry handle (default: off).
+    pub fn telemetry(mut self, tel: &'a Telemetry) -> Self {
+        self.tel = Some(tel);
+        self
+    }
+
+    /// Drive the federated loop to completion.
+    pub fn run(self, generator: &mut WorkloadGenerator, policy: &dyn Policy) -> ClusterResult {
+        let coord = ShardedCoordinator::new(
+            self.universe,
+            self.tenants,
+            self.engine,
+            self.config,
+            self.fed,
+        );
+        with_tel(self.tel, |tel| coord.run_impl(generator, policy, tel))
+    }
+}
+
+/// Builder for federated serving.
+pub struct ServeFederated<'a> {
+    universe: &'a Universe,
+    tenants: &'a TenantSet,
+    engine: &'a SimEngine,
+    fcfg: ServeFederationConfig,
+    tel: Option<&'a Telemetry>,
+}
+
+impl<'a> ServeFederated<'a> {
+    /// Run with a two-tier (RAM + SSD) cache: every shard gets a
+    /// `spec.split(N')` slice, re-split on reactive membership events.
+    pub fn tiers(mut self, spec: TierSpec) -> Self {
+        self.fcfg.serve.common.tiers = Some(spec);
+        self
+    }
+
+    /// Attach a telemetry handle (default: off).
+    pub fn telemetry(mut self, tel: &'a Telemetry) -> Self {
+        self.tel = Some(tel);
+        self
+    }
+
+    /// Switch to the deterministic simulated-clock driver.
+    pub fn sim(self) -> ServeFederatedSim<'a> {
+        ServeFederatedSim(self)
+    }
+
+    /// Serve on the real clock with per-tenant producer threads.
+    pub fn run(self, policy: &dyn Policy) -> FederatedServeReport {
+        with_tel(self.tel, |tel| {
+            serve_federated_impl(self.universe, self.tenants, self.engine, policy, &self.fcfg, tel)
+        })
+    }
+}
+
+/// The simulated-clock variant of [`ServeFederated`]
+/// (see [`ServeFederated::sim`]).
+pub struct ServeFederatedSim<'a>(ServeFederated<'a>);
+
+impl ServeFederatedSim<'_> {
+    /// Drive the same federated serving loop on a simulated clock.
+    pub fn run(self, policy: &dyn Policy) -> FederatedServeReport {
+        let s = self.0;
+        with_tel(s.tel, |tel| {
+            serve_federated_sim_impl(s.universe, s.tenants, s.engine, policy, &s.fcfg, tel)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::PolicyKind;
+    use crate::cache::tier::{TierBudgets, TierCostModel};
+    use crate::coordinator::loop_::CommonConfig;
+    use crate::sim::cluster::ClusterConfig;
+    use crate::workload::spec::{AccessSpec, TenantSpec, WindowSpec};
+
+    fn quick_cfg() -> CoordinatorConfig {
+        CoordinatorConfig {
+            common: CommonConfig {
+                batch_secs: 30.0,
+                seed: 11,
+                ..CommonConfig::default()
+            },
+            n_batches: 3,
+        }
+    }
+
+    fn gen(universe: &Universe) -> WorkloadGenerator {
+        let specs: Vec<TenantSpec> = (1..=2)
+            .map(|g| TenantSpec::new(AccessSpec::g(g), 10.0).with_window(WindowSpec::default()))
+            .collect();
+        WorkloadGenerator::new(specs, universe, 11)
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)]
+    fn replay_serial_and_pipelined_agree() {
+        let universe = Universe::sales_only();
+        let engine = SimEngine::new(ClusterConfig::default());
+        let policy = PolicyKind::FastPf.build();
+        let serial = Session::replay(&universe, TenantSet::equal(2), engine.clone())
+            .config(quick_cfg())
+            .run(&mut gen(&universe), policy.as_ref());
+        let pipelined = Session::replay(&universe, TenantSet::equal(2), engine)
+            .config(quick_cfg())
+            .pipelined(2)
+            .run(&mut gen(&universe), policy.as_ref());
+        assert_eq!(serial.end_time, pipelined.end_time);
+        assert_eq!(serial.outcomes.len(), pipelined.outcomes.len());
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)]
+    fn tiers_builder_threads_spec_into_the_run() {
+        let universe = Universe::sales_only();
+        let engine = SimEngine::new(ClusterConfig::default());
+        let policy = PolicyKind::FastPf.build();
+        let spec = TierSpec {
+            budgets: TierBudgets {
+                ram: engine.config.cache_budget / 2,
+                ssd: engine.config.cache_budget,
+            },
+            cost: TierCostModel::default(),
+        };
+        let r = Session::replay(&universe, TenantSet::equal(2), engine)
+            .config(quick_cfg())
+            .tiers(spec)
+            .run(&mut gen(&universe), policy.as_ref());
+        // The SSD plane exists in the records (it may be empty early).
+        assert_eq!(r.batches.len(), 3);
+        assert!(r
+            .batches
+            .iter()
+            .all(|b| b.ssd.n_bits() == universe.views.len()));
+    }
+}

@@ -13,27 +13,29 @@
 //! sleeps, no flaky timing.
 
 use robus::alloc::PolicyKind;
-use robus::cluster::{
-    serve_federated_sim, AutoMembership, MembershipAction, ServeFederationConfig,
-};
-use robus::coordinator::service::{serve_sim, AdmissionPolicy};
+use robus::cluster::{AutoMembership, MembershipAction, ServeFederationConfig};
+use robus::coordinator::loop_::CommonConfig;
+use robus::coordinator::service::AdmissionPolicy;
 use robus::coordinator::ServeConfig;
 use robus::domain::tenant::TenantSet;
+use robus::session::Session;
 use robus::sim::{ClusterConfig, SimEngine};
 use robus::workload::Universe;
 
 fn base_cfg() -> ServeConfig {
     ServeConfig {
+        common: CommonConfig {
+            batch_secs: 0.25,
+            seed: 23,
+            warm_start: true,
+            ..CommonConfig::default()
+        },
         duration_secs: 2.0,
         rate_per_sec: 300.0,
         n_tenants: 3,
-        batch_secs: 0.25,
         queue_capacity: 16_384,
         admission: AdmissionPolicy::Drop,
-        stateful_gamma: None,
-        seed: 23,
         verbose: false,
-        warm_start: true,
     }
 }
 
@@ -42,7 +44,9 @@ fn run_federated(fcfg: &ServeFederationConfig) -> robus::cluster::FederatedServe
     let tenants = TenantSet::equal(fcfg.serve.n_tenants);
     let engine = SimEngine::new(ClusterConfig::default());
     let policy = PolicyKind::FastPf.build();
-    serve_federated_sim(&universe, &tenants, &engine, policy.as_ref(), fcfg)
+    Session::serve_federated(&universe, &tenants, &engine, fcfg.clone())
+        .sim()
+        .run(policy.as_ref())
 }
 
 /// Acceptance: `--shards 1` preserves single-node serve semantics. The
@@ -56,10 +60,14 @@ fn one_shard_serving_matches_single_node_serve() {
     let engine = SimEngine::new(ClusterConfig::default());
     let policy = PolicyKind::FastPf.build();
 
-    let (single_report, single_run) =
-        serve_sim(&universe, &tenants, &engine, policy.as_ref(), &cfg);
+    let (single_report, single_run) = Session::serve(&universe, &tenants, &engine)
+        .config(cfg.clone())
+        .sim()
+        .run(policy.as_ref());
     let fcfg = ServeFederationConfig::new(cfg, 1);
-    let fed = serve_federated_sim(&universe, &tenants, &engine, policy.as_ref(), &fcfg);
+    let fed = Session::serve_federated(&universe, &tenants, &engine, fcfg)
+        .sim()
+        .run(policy.as_ref());
 
     // Simulated outcomes are identical, query by query.
     let fed_run = &fed.cluster.run;
@@ -222,7 +230,7 @@ fn drain_with_queued_backlog_conserves_every_query() {
     let mut cfg = base_cfg();
     cfg.rate_per_sec = 100.0;
     cfg.duration_secs = 4.0;
-    cfg.batch_secs = 0.5; // ~50 arrivals queued at every cut
+    cfg.common.batch_secs = 0.5; // ~50 arrivals queued at every cut
     let mut fcfg = ServeFederationConfig::new(cfg, 2);
     fcfg.auto = Some(AutoMembership {
         lo_qps: 90.0, // both shards always "idle": drain fires ASAP

@@ -3,8 +3,9 @@
 //! metrics. These check cross-module invariants no unit test sees.
 
 use robus::alloc::PolicyKind;
-use robus::coordinator::loop_::{Coordinator, CoordinatorConfig, RunResult};
+use robus::coordinator::loop_::{CommonConfig, CoordinatorConfig, RunResult};
 use robus::domain::tenant::TenantSet;
+use robus::session::Session;
 use robus::sim::cluster::ClusterConfig;
 use robus::sim::engine::SimEngine;
 use robus::workload::generator::WorkloadGenerator;
@@ -15,16 +16,18 @@ fn run(kind: PolicyKind, universe: &Universe, specs: Vec<TenantSpec>, batches: u
     let tenants = TenantSet::equal(specs.len());
     let engine = SimEngine::new(ClusterConfig::default());
     let config = CoordinatorConfig {
-        batch_secs: 40.0,
+        common: CommonConfig {
+            batch_secs: 40.0,
+            seed,
+            ..CommonConfig::default()
+        },
         n_batches: batches,
-        stateful_gamma: None,
-        seed,
-        warm_start: false,
     };
-    let coord = Coordinator::new(universe, tenants, engine, config);
     let mut gen = WorkloadGenerator::new(specs, universe, seed);
     let policy = kind.build();
-    coord.run(&mut gen, policy.as_ref())
+    Session::replay(universe, tenants, engine)
+        .config(config)
+        .run(&mut gen, policy.as_ref())
 }
 
 fn sales_specs(n: usize) -> Vec<TenantSpec> {

@@ -14,12 +14,13 @@
 //!    never what is simulated.
 
 use robus::alloc::PolicyKind;
-use robus::cluster::{ClusterResult, FederationConfig, ServeFederationConfig};
-use robus::cluster::{serve_federated_sim, FederatedServeReport};
+use robus::cluster::{ClusterResult, FederatedServeReport, FederationConfig, ServeFederationConfig};
+use robus::coordinator::loop_::CommonConfig;
 use robus::coordinator::ServeConfig;
 use robus::domain::tenant::TenantSet;
 use robus::experiments::runner::run_federated;
 use robus::experiments::{ExperimentSetup, UniverseKind};
+use robus::session::Session;
 use robus::sim::{ClusterConfig, SimEngine};
 use robus::workload::spec::{AccessSpec, TenantSpec};
 use robus::workload::{AdmissionPolicy, Universe};
@@ -42,6 +43,7 @@ fn scale_setup() -> ExperimentSetup {
         stateful_gamma: None,
         seed: 4242,
         warm_start: false,
+        tiers: None,
     }
 }
 
@@ -113,15 +115,17 @@ fn replay_64_shards_invariant_to_worker_count() {
 
 fn serve_scale(workers: Option<usize>) -> FederatedServeReport {
     let cfg = ServeConfig {
+        common: CommonConfig {
+            batch_secs: 0.25,
+            seed: 77,
+            warm_start: true,
+            ..CommonConfig::default()
+        },
         duration_secs: 0.75,
         rate_per_sec: 4000.0,
         n_tenants: 256,
-        batch_secs: 0.25,
         queue_capacity: 8192,
         admission: AdmissionPolicy::Drop,
-        stateful_gamma: None,
-        seed: 77,
-        warm_start: true,
         verbose: false,
     };
     let mut fcfg = ServeFederationConfig::new(cfg, SHARDS);
@@ -130,7 +134,9 @@ fn serve_scale(workers: Option<usize>) -> FederatedServeReport {
     let tenants = TenantSet::equal(fcfg.serve.n_tenants);
     let engine = SimEngine::new(ClusterConfig::default());
     let policy = PolicyKind::FastPf.build();
-    serve_federated_sim(&universe, &tenants, &engine, policy.as_ref(), &fcfg)
+    Session::serve_federated(&universe, &tenants, &engine, fcfg)
+        .sim()
+        .run(policy.as_ref())
 }
 
 #[test]

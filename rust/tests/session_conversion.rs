@@ -1,0 +1,383 @@
+//! Conversion pins for the Session API migration (ISSUE 10): every
+//! legacy entry point that became a thin `#[deprecated]` delegate must
+//! produce results **bit-identical** to the Session construction the
+//! deprecation note names. This is the contract that lets callers
+//! migrate mechanically: old call → new call, nothing re-tuned.
+//!
+//! The SimClock drivers (replay serial/pipelined, sim-serve, federated
+//! replay, federated sim-serve) are pinned exactly, simulated quantity
+//! by simulated quantity. The real-clock drivers (`serve`,
+//! `serve_with`, `serve_federated`, `serve_federated_with`) are
+//! nondeterministic by nature — batch cuts land on a host timer — so
+//! bit-identity is not defined for them; they are pinned on their
+//! conservation ledger and config plumbing instead.
+
+#![allow(deprecated)]
+
+use robus::alloc::{Policy, PolicyKind};
+use robus::cluster::{
+    serve_federated, serve_federated_sim, serve_federated_sim_with, serve_federated_with,
+    FederationConfig, ServeFederationConfig, ShardedCoordinator,
+};
+use robus::coordinator::loop_::{CommonConfig, Coordinator, CoordinatorConfig, RunResult};
+use robus::coordinator::service::{serve, serve_sim, serve_sim_with, serve_with, AdmissionPolicy};
+use robus::coordinator::{ServeConfig, ServeReport};
+use robus::domain::tenant::TenantSet;
+use robus::session::Session;
+use robus::sim::{ClusterConfig, SimEngine};
+use robus::telemetry::Telemetry;
+use robus::workload::generator::WorkloadGenerator;
+use robus::workload::spec::{AccessSpec, TenantSpec};
+use robus::workload::Universe;
+
+fn specs(n: usize) -> Vec<TenantSpec> {
+    (0..n)
+        .map(|i| TenantSpec::new(AccessSpec::g(1 + i % 4), 20.0))
+        .collect()
+}
+
+fn replay_cfg() -> CoordinatorConfig {
+    CoordinatorConfig {
+        common: CommonConfig {
+            batch_secs: 40.0,
+            seed: 11,
+            ..CommonConfig::default()
+        },
+        n_batches: 5,
+    }
+}
+
+fn serve_cfg() -> ServeConfig {
+    ServeConfig {
+        common: CommonConfig {
+            batch_secs: 0.25,
+            seed: 19,
+            warm_start: true,
+            ..CommonConfig::default()
+        },
+        duration_secs: 1.5,
+        rate_per_sec: 400.0,
+        n_tenants: 3,
+        queue_capacity: 16_384,
+        admission: AdmissionPolicy::Drop,
+        verbose: false,
+    }
+}
+
+fn assert_runs_identical(label: &str, a: &RunResult, b: &RunResult) {
+    assert!(!a.outcomes.is_empty(), "{label}: degenerate run proves nothing");
+    assert_eq!(a.outcomes.len(), b.outcomes.len(), "{label}");
+    for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+        assert_eq!(x.id, y.id, "{label}");
+        assert_eq!(x.tenant, y.tenant, "{label}");
+        assert_eq!(x.arrival, y.arrival, "{label}");
+        assert_eq!(x.start, y.start, "{label}");
+        assert_eq!(x.finish, y.finish, "{label}");
+        assert_eq!(x.from_cache, y.from_cache, "{label}");
+    }
+    assert_eq!(a.batches.len(), b.batches.len(), "{label}");
+    for (x, y) in a.batches.iter().zip(&b.batches) {
+        assert_eq!(x.config, y.config, "{label}");
+        assert_eq!(x.ssd, y.ssd, "{label}");
+        assert_eq!(x.delta, y.delta, "{label}");
+        assert_eq!(x.cache_utilization, y.cache_utilization, "{label}");
+        assert_eq!(x.exec_start, y.exec_start, "{label}");
+        assert_eq!(x.exec_end, y.exec_end, "{label}");
+    }
+    assert_eq!(a.end_time, b.end_time, "{label}");
+}
+
+/// Simulated (host-independent) fields of a serve report.
+fn assert_reports_identical(label: &str, a: &ServeReport, b: &ServeReport) {
+    assert!(a.completed > 0, "{label}: nothing served proves nothing");
+    assert_eq!(a.batches, b.batches, "{label}");
+    assert_eq!(a.admitted, b.admitted, "{label}");
+    assert_eq!(a.rejected, b.rejected, "{label}");
+    assert_eq!(a.completed, b.completed, "{label}");
+    assert_eq!(a.per_tenant_completed, b.per_tenant_completed, "{label}");
+    assert_eq!(a.max_batch, b.max_batch, "{label}");
+    assert_eq!(a.peak_queue_depth, b.peak_queue_depth, "{label}");
+    assert_eq!(a.hit_ratio, b.hit_ratio, "{label}");
+    assert_eq!(a.avg_cache_utilization, b.avg_cache_utilization, "{label}");
+    assert_eq!(a.throughput_fairness, b.throughput_fairness, "{label}");
+}
+
+/// `Coordinator::run` / `run_with` → `Session::replay(..).run(..)`.
+#[test]
+fn replay_serial_delegates_pin() {
+    let universe = Universe::sales_only();
+    let engine = SimEngine::new(ClusterConfig::default());
+    let policy: Box<dyn Policy> = PolicyKind::FastPf.build();
+    let coordinator =
+        Coordinator::new(&universe, TenantSet::equal(3), engine, replay_cfg());
+
+    let mut gen = WorkloadGenerator::new(specs(3), &universe, 11);
+    let old = coordinator.run(&mut gen, policy.as_ref());
+
+    let tel = Telemetry::off();
+    let mut gen = WorkloadGenerator::new(specs(3), &universe, 11);
+    let old_tel = coordinator.run_with(&mut gen, policy.as_ref(), &tel);
+
+    let mut gen = WorkloadGenerator::new(specs(3), &universe, 11);
+    let new = Session::replay(
+        &universe,
+        TenantSet::equal(3),
+        SimEngine::new(ClusterConfig::default()),
+    )
+    .config(replay_cfg())
+    .run(&mut gen, policy.as_ref());
+
+    let mut gen = WorkloadGenerator::new(specs(3), &universe, 11);
+    let new_tel = Session::replay(
+        &universe,
+        TenantSet::equal(3),
+        SimEngine::new(ClusterConfig::default()),
+    )
+    .config(replay_cfg())
+    .telemetry(&tel)
+    .run(&mut gen, policy.as_ref());
+
+    assert_runs_identical("run → Session::replay.run", &old, &new);
+    assert_runs_identical("run_with → Session::replay.telemetry.run", &old_tel, &new_tel);
+}
+
+/// `Coordinator::run_pipelined` / `run_pipelined_with` →
+/// `Session::replay(..).pipelined(depth).run(..)`.
+#[test]
+fn replay_pipelined_delegates_pin() {
+    let universe = Universe::sales_only();
+    let policy: Box<dyn Policy> = PolicyKind::FastPf.build();
+    let coordinator = Coordinator::new(
+        &universe,
+        TenantSet::equal(3),
+        SimEngine::new(ClusterConfig::default()),
+        replay_cfg(),
+    );
+
+    let mut gen = WorkloadGenerator::new(specs(3), &universe, 11);
+    let old = coordinator.run_pipelined(&mut gen, policy.as_ref(), 2);
+
+    let tel = Telemetry::off();
+    let mut gen = WorkloadGenerator::new(specs(3), &universe, 11);
+    let old_tel = coordinator.run_pipelined_with(&mut gen, policy.as_ref(), 2, &tel);
+
+    let mut gen = WorkloadGenerator::new(specs(3), &universe, 11);
+    let new = Session::replay(
+        &universe,
+        TenantSet::equal(3),
+        SimEngine::new(ClusterConfig::default()),
+    )
+    .config(replay_cfg())
+    .pipelined(2)
+    .run(&mut gen, policy.as_ref());
+
+    let mut gen = WorkloadGenerator::new(specs(3), &universe, 11);
+    let new_tel = Session::replay(
+        &universe,
+        TenantSet::equal(3),
+        SimEngine::new(ClusterConfig::default()),
+    )
+    .config(replay_cfg())
+    .pipelined(2)
+    .telemetry(&tel)
+    .run(&mut gen, policy.as_ref());
+
+    assert_runs_identical("run_pipelined → Session.pipelined.run", &old, &new);
+    assert_runs_identical(
+        "run_pipelined_with → Session.pipelined.telemetry.run",
+        &old_tel,
+        &new_tel,
+    );
+}
+
+/// `serve_sim` / `serve_sim_with` → `Session::serve(..).sim().run(..)`.
+#[test]
+fn serve_sim_delegates_pin() {
+    let universe = Universe::sales_only();
+    let tenants = TenantSet::equal(3);
+    let engine = SimEngine::new(ClusterConfig::default());
+    let policy: Box<dyn Policy> = PolicyKind::FastPf.build();
+    let cfg = serve_cfg();
+
+    let (old_report, old_run) = serve_sim(&universe, &tenants, &engine, policy.as_ref(), &cfg);
+    let tel = Telemetry::off();
+    let (old_report_tel, old_run_tel) =
+        serve_sim_with(&universe, &tenants, &engine, policy.as_ref(), &cfg, &tel);
+
+    let (new_report, new_run) = Session::serve(&universe, &tenants, &engine)
+        .config(cfg.clone())
+        .sim()
+        .run(policy.as_ref());
+    let (new_report_tel, new_run_tel) = Session::serve(&universe, &tenants, &engine)
+        .config(cfg.clone())
+        .telemetry(&tel)
+        .sim()
+        .run(policy.as_ref());
+
+    assert_runs_identical("serve_sim → Session.serve.sim.run", &old_run, &new_run);
+    assert_reports_identical("serve_sim report", &old_report, &new_report);
+    assert_runs_identical("serve_sim_with", &old_run_tel, &new_run_tel);
+    assert_reports_identical("serve_sim_with report", &old_report_tel, &new_report_tel);
+}
+
+/// `ShardedCoordinator::run` / `run_with` →
+/// `Session::federated(..).run(..)`.
+#[test]
+fn federated_replay_delegates_pin() {
+    let universe = Universe::sales_only();
+    let policy: Box<dyn Policy> = PolicyKind::FastPf.build();
+    let fed = FederationConfig::with_shards(2);
+
+    let sharded = ShardedCoordinator::new(
+        &universe,
+        TenantSet::equal(3),
+        SimEngine::new(ClusterConfig::default()),
+        replay_cfg(),
+        fed.clone(),
+    );
+    let mut gen = WorkloadGenerator::new(specs(3), &universe, 11);
+    let old = sharded.run(&mut gen, policy.as_ref());
+    let tel = Telemetry::off();
+    let mut gen = WorkloadGenerator::new(specs(3), &universe, 11);
+    let old_tel = sharded.run_with(&mut gen, policy.as_ref(), &tel);
+
+    let mut gen = WorkloadGenerator::new(specs(3), &universe, 11);
+    let new = Session::federated(
+        &universe,
+        TenantSet::equal(3),
+        SimEngine::new(ClusterConfig::default()),
+    )
+    .config(replay_cfg())
+    .federation(fed.clone())
+    .run(&mut gen, policy.as_ref());
+
+    let mut gen = WorkloadGenerator::new(specs(3), &universe, 11);
+    let new_tel = Session::federated(
+        &universe,
+        TenantSet::equal(3),
+        SimEngine::new(ClusterConfig::default()),
+    )
+    .config(replay_cfg())
+    .federation(fed)
+    .telemetry(&tel)
+    .run(&mut gen, policy.as_ref());
+
+    assert_runs_identical("ShardedCoordinator::run → Session.federated.run", &old.run, &new.run);
+    assert_eq!(old.per_shard.len(), new.per_shard.len());
+    assert_runs_identical("ShardedCoordinator::run_with", &old_tel.run, &new_tel.run);
+}
+
+/// `serve_federated_sim` / `serve_federated_sim_with` →
+/// `Session::serve_federated(..).sim().run(..)`.
+#[test]
+fn serve_federated_sim_delegates_pin() {
+    let universe = Universe::sales_only();
+    let tenants = TenantSet::equal(3);
+    let engine = SimEngine::new(ClusterConfig::default());
+    let policy: Box<dyn Policy> = PolicyKind::FastPf.build();
+    let fcfg = ServeFederationConfig::new(serve_cfg(), 2);
+
+    let old = serve_federated_sim(&universe, &tenants, &engine, policy.as_ref(), &fcfg);
+    let tel = Telemetry::off();
+    let old_tel =
+        serve_federated_sim_with(&universe, &tenants, &engine, policy.as_ref(), &fcfg, &tel);
+
+    let new = Session::serve_federated(&universe, &tenants, &engine, fcfg.clone())
+        .sim()
+        .run(policy.as_ref());
+    let new_tel = Session::serve_federated(&universe, &tenants, &engine, fcfg)
+        .telemetry(&tel)
+        .sim()
+        .run(policy.as_ref());
+
+    assert_runs_identical("serve_federated_sim", &old.cluster.run, &new.cluster.run);
+    assert_reports_identical("serve_federated_sim report", &old.serve, &new.serve);
+    assert_eq!(old.initial_shards, new.initial_shards);
+    assert_runs_identical("serve_federated_sim_with", &old_tel.cluster.run, &new_tel.cluster.run);
+    assert_reports_identical("serve_federated_sim_with report", &old_tel.serve, &new_tel.serve);
+}
+
+/// Real-clock `serve` / `serve_with` → `Session::serve(..).run(..)`.
+/// Batch boundaries land on a host timer, so these are pinned on the
+/// conservation ledger and plumbing, not bits.
+#[test]
+fn serve_real_clock_delegates_pin() {
+    let universe = Universe::sales_only();
+    let tenants = TenantSet::equal(2);
+    let engine = SimEngine::new(ClusterConfig::default());
+    let policy: Box<dyn Policy> = PolicyKind::FastPf.build();
+    let cfg = ServeConfig {
+        duration_secs: 0.4,
+        rate_per_sec: 200.0,
+        n_tenants: 2,
+        ..serve_cfg()
+    };
+
+    let tel = Telemetry::off();
+    let old = serve(&universe, &tenants, &engine, policy.as_ref(), &cfg);
+    let old_tel = serve_with(&universe, &tenants, &engine, policy.as_ref(), &cfg, &tel);
+    let new = Session::serve(&universe, &tenants, &engine)
+        .config(cfg.clone())
+        .run(policy.as_ref());
+    let new_tel = Session::serve(&universe, &tenants, &engine)
+        .config(cfg)
+        .telemetry(&tel)
+        .run(policy.as_ref());
+
+    for (label, r) in [
+        ("serve", &old),
+        ("serve_with", &old_tel),
+        ("Session.serve.run", &new),
+        ("Session.serve.telemetry.run", &new_tel),
+    ] {
+        assert_eq!(r.completed, r.admitted, "{label}: drained ledger conserves");
+        assert_eq!(r.per_tenant_completed.len(), 2, "{label}");
+        assert_eq!(
+            r.per_tenant_completed.iter().sum::<u64>(),
+            r.completed,
+            "{label}"
+        );
+    }
+}
+
+/// Real-clock `serve_federated` / `serve_federated_with` →
+/// `Session::serve_federated(..).run(..)`: conservation + plumbing.
+#[test]
+fn serve_federated_real_clock_delegates_pin() {
+    let universe = Universe::sales_only();
+    let tenants = TenantSet::equal(2);
+    let engine = SimEngine::new(ClusterConfig::default());
+    let policy: Box<dyn Policy> = PolicyKind::FastPf.build();
+    let fcfg = ServeFederationConfig::new(
+        ServeConfig {
+            duration_secs: 0.4,
+            rate_per_sec: 200.0,
+            n_tenants: 2,
+            ..serve_cfg()
+        },
+        2,
+    );
+
+    let tel = Telemetry::off();
+    let old = serve_federated(&universe, &tenants, &engine, policy.as_ref(), &fcfg);
+    let old_tel =
+        serve_federated_with(&universe, &tenants, &engine, policy.as_ref(), &fcfg, &tel);
+    let new = Session::serve_federated(&universe, &tenants, &engine, fcfg.clone())
+        .run(policy.as_ref());
+    let new_tel = Session::serve_federated(&universe, &tenants, &engine, fcfg)
+        .telemetry(&tel)
+        .run(policy.as_ref());
+
+    for (label, r) in [
+        ("serve_federated", &old),
+        ("serve_federated_with", &old_tel),
+        ("Session.serve_federated.run", &new),
+        ("Session.serve_federated.telemetry.run", &new_tel),
+    ] {
+        assert_eq!(
+            r.serve.completed, r.serve.admitted,
+            "{label}: drained ledger conserves"
+        );
+        assert_eq!(r.initial_shards, 2, "{label}");
+    }
+}

@@ -11,13 +11,12 @@
 //! the writer itself (`src/telemetry/trace.rs`).
 
 use robus::alloc::PolicyKind;
-use robus::cluster::{
-    serve_federated_sim, serve_federated_sim_with, AutoMembership, ServeFederationConfig,
-};
-use robus::coordinator::loop_::{Coordinator, CoordinatorConfig, RunResult};
+use robus::cluster::{AutoMembership, ServeFederationConfig};
+use robus::coordinator::loop_::{CommonConfig, CoordinatorConfig, RunResult};
 use robus::coordinator::service::AdmissionPolicy;
 use robus::coordinator::ServeConfig;
 use robus::domain::tenant::TenantSet;
+use robus::session::Session;
 use robus::sim::{ClusterConfig, SimEngine};
 use robus::telemetry::{Histogram, Telemetry};
 use robus::util::rng::Pcg64;
@@ -46,19 +45,24 @@ fn replay(pipelined: bool, tel: &Telemetry) -> RunResult {
     let universe = Universe::sales_only();
     let engine = SimEngine::new(ClusterConfig::default());
     let cfg = CoordinatorConfig {
-        batch_secs: 40.0,
+        common: CommonConfig {
+            batch_secs: 40.0,
+            stateful_gamma: Some(2.0),
+            seed: 42,
+            warm_start: true,
+            ..CommonConfig::default()
+        },
         n_batches: 8,
-        stateful_gamma: Some(2.0),
-        seed: 42,
-        warm_start: true,
     };
-    let coordinator = Coordinator::new(&universe, TenantSet::equal(4), engine, cfg);
     let mut gen = WorkloadGenerator::new(specs(4), &universe, 42);
     let policy = PolicyKind::FastPf.build();
+    let sess = Session::replay(&universe, TenantSet::equal(4), engine)
+        .config(cfg)
+        .telemetry(tel);
     if pipelined {
-        coordinator.run_pipelined_with(&mut gen, policy.as_ref(), 2, tel)
+        sess.pipelined(2).run(&mut gen, policy.as_ref())
     } else {
-        coordinator.run_with(&mut gen, policy.as_ref(), tel)
+        sess.run(&mut gen, policy.as_ref())
     }
 }
 
@@ -118,16 +122,18 @@ fn pipelined_replay_bit_identical_with_telemetry() {
 #[test]
 fn federated_8shard_replay_bit_identical_with_telemetry() {
     let cfg = ServeConfig {
+        common: CommonConfig {
+            batch_secs: 0.25,
+            seed: 23,
+            warm_start: true,
+            ..CommonConfig::default()
+        },
         duration_secs: 2.0,
         rate_per_sec: 800.0,
         n_tenants: 4,
-        batch_secs: 0.25,
         queue_capacity: 16_384,
         admission: AdmissionPolicy::Drop,
-        stateful_gamma: None,
-        seed: 23,
         verbose: false,
-        warm_start: true,
     };
     let mut fcfg = ServeFederationConfig::new(cfg, 8);
     fcfg.auto = Some(AutoMembership {
@@ -145,9 +151,14 @@ fn federated_8shard_replay_bit_identical_with_telemetry() {
     let engine = SimEngine::new(ClusterConfig::default());
     let policy = PolicyKind::FastPf.build();
 
-    let off = serve_federated_sim(&universe, &tenants, &engine, policy.as_ref(), &fcfg);
+    let off = Session::serve_federated(&universe, &tenants, &engine, fcfg.clone())
+        .sim()
+        .run(policy.as_ref());
     let mut tel = full_telemetry();
-    let on = serve_federated_sim_with(&universe, &tenants, &engine, policy.as_ref(), &fcfg, &tel);
+    let on = Session::serve_federated(&universe, &tenants, &engine, fcfg)
+        .telemetry(&tel)
+        .sim()
+        .run(policy.as_ref());
     tel.shutdown();
 
     assert_bit_identical(&off.cluster.run, &on.cluster.run);

@@ -1,0 +1,384 @@
+//! The tentpole guarantee of the tiered cache (ISSUE 10): an SSD
+//! capacity of **zero** is not "a small SSD" — it is bit-identical to
+//! the pre-tier single-tier path. `TierSpec::single(budget)` with the
+//! engine's own cache budget must replay exactly — same sampled
+//! configurations, same cache transitions, same query outcomes — as
+//! `tiers: None`, across the §5.3 experiment grid on every driver
+//! (serial, pipelined, 1-shard federated).
+//!
+//! Also here: the demotion-before-drop byte-accounting conservation
+//! invariants (every inter-tier byte shows up in exactly one
+//! `CacheDelta` category, planes stay disjoint and within budget), and
+//! the tier-aware warm-start shape check (a tier-budget re-split voids
+//! carried solver state).
+
+use robus::alloc::{BatchSignature, ConfigMask, Policy, PolicyKind};
+use robus::cache::{CacheManager, TierAssignment, TierBudgets, TierCostModel, TierSpec};
+use robus::cluster::{FederationConfig, MembershipPlan};
+use robus::coordinator::loop_::RunResult;
+use robus::domain::dataset::DatasetCatalog;
+use robus::domain::query::{Query, QueryId};
+use robus::domain::tenant::TenantSet;
+use robus::domain::utility::{BatchUtilities, TierPlan};
+use robus::domain::view::{ViewCatalog, ViewId, ViewKind};
+use robus::experiments::runner::{
+    run_federated, run_with_policies_pipelined, run_with_policies_serial,
+};
+use robus::experiments::setups::{self, ExperimentSetup};
+use robus::sim::ClusterConfig;
+
+/// The single-tier budget every runner engine uses
+/// (`SimEngine::new(ClusterConfig::default())`).
+fn engine_budget() -> u64 {
+    ClusterConfig::default().cache_budget
+}
+
+fn policy_set() -> Vec<Box<dyn Policy>> {
+    robus::experiments::runner::default_policies()
+        .into_iter()
+        .map(|k| k.build())
+        .collect()
+}
+
+/// Full bitwise equality of two runs, down to the per-batch tier planes
+/// and cache deltas. No tolerance anywhere.
+fn assert_bit_identical(label: &str, a: &RunResult, b: &RunResult) {
+    assert!(!a.outcomes.is_empty(), "{label}: degenerate run proves nothing");
+    assert_eq!(a.outcomes.len(), b.outcomes.len(), "{label}");
+    for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+        assert_eq!(x.id, y.id, "{label}");
+        assert_eq!(x.tenant, y.tenant, "{label}");
+        assert_eq!(x.arrival, y.arrival, "{label}");
+        assert_eq!(x.start, y.start, "{label}");
+        assert_eq!(x.finish, y.finish, "{label}");
+        assert_eq!(x.from_cache, y.from_cache, "{label}");
+    }
+    assert_eq!(a.batches.len(), b.batches.len(), "{label}");
+    for (x, y) in a.batches.iter().zip(&b.batches) {
+        assert_eq!(x.config, y.config, "{label} batch {}", x.index);
+        assert_eq!(x.ssd, y.ssd, "{label} batch {}", x.index);
+        assert_eq!(x.delta, y.delta, "{label} batch {}", x.index);
+        assert_eq!(x.cache_utilization, y.cache_utilization, "{label}");
+        assert_eq!(x.exec_start, y.exec_start, "{label}");
+        assert_eq!(x.exec_end, y.exec_end, "{label}");
+    }
+    assert_eq!(a.end_time, b.end_time, "{label}");
+}
+
+/// In SSD-0 mode the tier plane must never materialize: empty SSD masks,
+/// zero inter-tier bytes.
+fn assert_tier_plane_empty(label: &str, r: &RunResult) {
+    for b in &r.batches {
+        assert!(b.ssd.ones().next().is_none(), "{label}: SSD plane non-empty");
+        assert!(b.delta.demoted.is_empty(), "{label}: demotion in SSD-0 mode");
+        assert!(b.delta.promoted.is_empty(), "{label}: promotion in SSD-0 mode");
+        assert!(b.delta.ssd_loaded.is_empty(), "{label}: SSD load in SSD-0 mode");
+    }
+    assert_eq!(r.summary.bytes_demoted, 0, "{label}");
+    assert_eq!(r.summary.bytes_promoted, 0, "{label}");
+    assert_eq!(r.summary.bytes_ssd_loaded, 0, "{label}");
+}
+
+fn ssd0(setup: &ExperimentSetup) -> ExperimentSetup {
+    setup
+        .clone()
+        .with_tiers(Some(TierSpec::single(engine_budget())))
+}
+
+/// Serial driver, full policy set, all four §5.3 Sales setups.
+#[test]
+fn ssd0_serial_bit_identical_across_grid() {
+    for setup in setups::data_sharing_sales() {
+        let setup = setup.quick(6);
+        let legacy = run_with_policies_serial(&setup, &policy_set());
+        let tiered = run_with_policies_serial(&ssd0(&setup), &policy_set());
+        assert_eq!(legacy.runs.len(), tiered.runs.len());
+        for (l, t) in legacy.runs.iter().zip(&tiered.runs) {
+            assert_eq!(l.policy, t.policy);
+            let label = format!("{}/{} serial", setup.name, l.policy);
+            assert_bit_identical(&label, l, t);
+            assert_tier_plane_empty(&label, t);
+        }
+    }
+}
+
+/// Pipelined driver (depth 2): the planner's tier mirror must not
+/// perturb the overlap schedule.
+#[test]
+fn ssd0_pipelined_bit_identical() {
+    for setup in setups::data_sharing_sales() {
+        let setup = setup.quick(6);
+        let legacy = run_with_policies_pipelined(&setup, &policy_set(), 2);
+        let tiered = run_with_policies_pipelined(&ssd0(&setup), &policy_set(), 2);
+        for (l, t) in legacy.runs.iter().zip(&tiered.runs) {
+            let label = format!("{}/{} pipelined", setup.name, l.policy);
+            assert_bit_identical(&label, l, t);
+            assert_tier_plane_empty(&label, t);
+        }
+    }
+}
+
+/// 1-shard federation: the shard's tier-budget split of a single-tier
+/// spec is the spec itself, so the merged run replays bit-identically.
+#[test]
+fn ssd0_federated_one_shard_bit_identical() {
+    let fed = FederationConfig::with_shards(1);
+    for setup in setups::data_sharing_sales() {
+        let setup = setup.quick(6);
+        let policy: Box<dyn Policy> = PolicyKind::FastPf.build();
+        let legacy = run_federated(&setup, &fed, policy.as_ref());
+        let tiered = run_federated(&ssd0(&setup), &fed, policy.as_ref());
+        let label = format!("{} federated-1", setup.name);
+        assert_bit_identical(&label, &legacy.run, &tiered.run);
+        assert_tier_plane_empty(&label, &tiered.run);
+    }
+}
+
+/// Deterministic demotion-before-drop at the `CacheManager` level:
+/// dropped RAM residents pack into spare SSD capacity in ascending
+/// view-id order, every byte lands in exactly one delta category, and
+/// the planes stay disjoint and within budget.
+#[test]
+fn demotion_before_drop_byte_conservation() {
+    let sizes = vec![100u64, 100, 100, 100];
+    let spec = TierSpec {
+        budgets: TierBudgets { ram: 200, ssd: 200 },
+        cost: TierCostModel::default(),
+    };
+    let mut cache = CacheManager::new_tiered(spec, sizes.clone());
+    let mask = |bits: [bool; 4]| ConfigMask::from_bools(&bits);
+
+    // Batch 1: load views 0 and 1 into RAM.
+    let d = cache.update_tiered(&TierAssignment {
+        ram: mask([true, true, false, false]),
+        ssd: mask([false, false, false, false]),
+    });
+    assert_eq!(d.loaded, vec![0, 1]);
+    assert_eq!(d.bytes_loaded, 200);
+    assert!(d.demoted.is_empty() && d.evicted.is_empty());
+
+    // Batch 2: the solver keeps only view 2 in RAM and names no SSD
+    // plane. Views 0 and 1 leave RAM; both fit in the empty SSD tier,
+    // so *neither* is dropped — eviction is demotion first.
+    let d = cache.update_tiered(&TierAssignment {
+        ram: mask([false, false, true, false]),
+        ssd: mask([false, false, false, false]),
+    });
+    assert_eq!(d.loaded, vec![2]);
+    assert_eq!(d.demoted, vec![0, 1]);
+    assert_eq!(d.bytes_demoted, 200);
+    assert!(d.evicted.is_empty(), "demotion must preempt the drop");
+    assert_eq!(cache.ssd_used_bytes(), 200);
+    assert_eq!(cache.tier_of(0), Some(robus::cache::Tier::Ssd));
+
+    // Batch 3: view 0 comes back to RAM — a promotion, not a load; view
+    // 2 stays in RAM, view 1 stays on SSD. Nothing leaves residency.
+    let d = cache.update_tiered(&TierAssignment {
+        ram: mask([true, false, true, false]),
+        ssd: mask([false, true, false, false]),
+    });
+    assert_eq!(d.promoted, vec![0]);
+    assert_eq!(d.bytes_promoted, 100);
+    assert!(d.loaded.is_empty());
+    assert!(d.evicted.is_empty());
+    assert_eq!(cache.tier_of(0), Some(robus::cache::Tier::Ram));
+    assert_eq!(cache.tier_of(1), Some(robus::cache::Tier::Ssd));
+
+    // Overflow: a fresh cache with SSD room for one view demotes the
+    // lowest id and genuinely evicts the rest.
+    let spec = TierSpec {
+        budgets: TierBudgets { ram: 200, ssd: 100 },
+        cost: TierCostModel::default(),
+    };
+    let mut cache = CacheManager::new_tiered(spec, sizes);
+    cache.update_tiered(&TierAssignment {
+        ram: mask([true, true, false, false]),
+        ssd: mask([false, false, false, false]),
+    });
+    let d = cache.update_tiered(&TierAssignment {
+        ram: mask([false, false, true, true]),
+        ssd: mask([false, false, false, false]),
+    });
+    assert_eq!(d.demoted, vec![0], "ascending-id fill takes view 0");
+    assert_eq!(d.evicted, vec![1], "no SSD room left for view 1");
+    assert_eq!(d.bytes_demoted, 100);
+    assert_eq!(d.bytes_evicted, 100);
+}
+
+/// End-to-end tiered replay: reconstruct both tier planes batch by
+/// batch from the recorded deltas and check every conservation
+/// invariant — transitions act only on resident views, the rebuilt RAM
+/// plane equals the recorded configuration, the solver's SSD plane is a
+/// subset of the resolved one, budgets hold, and the streaming summary
+/// equals the per-batch sums.
+#[test]
+fn tiered_replay_conserves_bytes_and_planes() {
+    let budgets = TierBudgets {
+        ram: engine_budget() / 8,
+        ssd: engine_budget(),
+    };
+    let setup = setups::data_sharing_sales()[1]
+        .clone()
+        .quick(8)
+        .with_tiers(Some(TierSpec {
+            budgets,
+            cost: TierCostModel::default(),
+        }));
+    let sizes: Vec<u64> = {
+        let u = robus::workload::Universe::sales_only();
+        u.views.iter().map(|v| v.cached_bytes).collect()
+    };
+    let out = run_with_policies_serial(&setup, &[PolicyKind::FastPf.build()]);
+    let run = &out.runs[0];
+    assert!(!run.batches.is_empty());
+
+    let n = sizes.len();
+    let mut ram = ConfigMask::empty(n);
+    let mut ssd = ConfigMask::empty(n);
+    let bytes_of = |views: &[usize]| -> u64 { views.iter().map(|&v| sizes[v]).sum() };
+    let (mut demoted_total, mut promoted_total, mut ssd_loaded_total) = (0u64, 0u64, 0u64);
+    for b in &run.batches {
+        let d = &b.delta;
+        // Per-category byte sums must match the view sizes exactly.
+        assert_eq!(d.bytes_loaded, bytes_of(&d.loaded));
+        assert_eq!(d.bytes_evicted, bytes_of(&d.evicted));
+        assert_eq!(d.bytes_ssd_loaded, bytes_of(&d.ssd_loaded));
+        assert_eq!(d.bytes_demoted, bytes_of(&d.demoted));
+        assert_eq!(d.bytes_promoted, bytes_of(&d.promoted));
+        // Transitions act on the tiers they claim to act on.
+        for &v in &d.loaded {
+            assert!(!ram.get(v) && !ssd.get(v), "load of a resident view");
+            ram.set(v, true);
+        }
+        for &v in &d.ssd_loaded {
+            assert!(!ram.get(v) && !ssd.get(v), "SSD load of a resident view");
+            ssd.set(v, true);
+        }
+        for &v in &d.demoted {
+            assert!(ram.get(v), "demotion of a non-RAM view");
+            ram.set(v, false);
+            ssd.set(v, true);
+        }
+        for &v in &d.promoted {
+            assert!(ssd.get(v), "promotion of a non-SSD view");
+            ssd.set(v, false);
+            ram.set(v, true);
+        }
+        for &v in &d.evicted {
+            assert!(ram.get(v) || ssd.get(v), "eviction of a non-resident view");
+            ram.set(v, false);
+            ssd.set(v, false);
+        }
+        // The rebuilt RAM plane is the recorded configuration; the
+        // solver's SSD plane is contained in the resolved one (the
+        // demotion fill only ever adds); planes stay disjoint.
+        assert_eq!(ram, b.config, "batch {}", b.index);
+        assert!(!ram.intersects(&ssd), "batch {}", b.index);
+        for v in b.ssd.ones() {
+            assert!(ssd.get(v), "batch {}: solver SSD view {v} not resident", b.index);
+        }
+        // Budgets hold on both tiers.
+        let ram_bytes: u64 = ram.ones().map(|v| sizes[v]).sum();
+        let ssd_bytes: u64 = ssd.ones().map(|v| sizes[v]).sum();
+        assert!(ram_bytes <= budgets.ram, "batch {}: RAM over budget", b.index);
+        assert!(ssd_bytes <= budgets.ssd, "batch {}: SSD over budget", b.index);
+        demoted_total += d.bytes_demoted;
+        promoted_total += d.bytes_promoted;
+        ssd_loaded_total += d.bytes_ssd_loaded;
+    }
+    assert_eq!(run.summary.bytes_demoted, demoted_total);
+    assert_eq!(run.summary.bytes_promoted, promoted_total);
+    assert_eq!(run.summary.bytes_ssd_loaded, ssd_loaded_total);
+}
+
+/// A tier-budget re-split is a *shape* change for warm-started solves:
+/// `BatchSignature::same_shape` goes false when the SSD budget moves
+/// (total/N′ after a membership event), when the discount moves, or
+/// when tiering turns on at all — so carried optima priced under the
+/// old plan can never be reused.
+#[test]
+fn warm_start_signature_voids_on_tier_resplit() {
+    let mut ds = DatasetCatalog::new();
+    let mut vc = ViewCatalog::new();
+    for v in 0..3 {
+        let d = ds.add(&format!("d{v}"), 100);
+        vc.add(&format!("v{v}"), d, ViewKind::BaseTable, 100, 100);
+    }
+    let mut ts = TenantSet::new();
+    let t0 = ts.add("a", 1.0);
+    let t1 = ts.add("b", 1.0);
+    let queries = vec![
+        Query {
+            id: QueryId(1),
+            tenant: t0,
+            arrival: 0.0,
+            template: "qa".into(),
+            required_views: vec![ViewId(0)],
+            bytes_read: 10,
+            compute_cost: 0.0,
+        },
+        Query {
+            id: QueryId(2),
+            tenant: t1,
+            arrival: 0.0,
+            template: "qb".into(),
+            required_views: vec![ViewId(1), ViewId(2)],
+            bytes_read: 10,
+            compute_cost: 0.0,
+        },
+    ];
+    let batch = |tier: Option<TierPlan>| {
+        BatchUtilities::build(&ts, &vc, 200.0, &queries, None).with_tier(tier)
+    };
+    let plan = |ssd_budget: f64, discount: f64| TierPlan { ssd_budget, discount };
+
+    let single = BatchSignature::of(&batch(None));
+    let tiered = BatchSignature::of(&batch(Some(plan(4000.0, 0.8))));
+    let resplit = BatchSignature::of(&batch(Some(plan(2000.0, 0.8))));
+    let repriced = BatchSignature::of(&batch(Some(plan(4000.0, 0.5))));
+    let same = BatchSignature::of(&batch(Some(plan(4000.0, 0.8))));
+
+    assert!(!single.same_shape(&tiered), "turning tiering on is a shape change");
+    assert!(!tiered.same_shape(&resplit), "SSD re-split must void carried state");
+    assert!(!tiered.same_shape(&repriced), "cost-model change must void carried state");
+    assert!(tiered.same_shape(&same), "identical plan carries state");
+    // The view structure is tier-independent: only the plan bits moved.
+    assert_eq!(single.view_sigs, tiered.view_sigs);
+}
+
+/// Elastic federation under tiering: a live shard add re-splits both
+/// tier budgets mid-run with warm-started solves carried per shard. The
+/// run must stay fully deterministic (two identical invocations are
+/// bit-identical) and keep the tier accounting conserved globally.
+#[test]
+fn tiered_federation_resplit_is_deterministic() {
+    let mut setup = setups::data_sharing_sales()[1].clone().quick(8).with_tiers(Some(
+        TierSpec {
+            budgets: TierBudgets {
+                ram: engine_budget() / 8,
+                ssd: engine_budget(),
+            },
+            cost: TierCostModel::default(),
+        },
+    ));
+    setup.warm_start = true;
+    let mut fed = FederationConfig::with_shards(2);
+    fed.membership = MembershipPlan::parse("add@3").expect("static plan parses");
+    fed.warm_start = true;
+
+    let policy: Box<dyn Policy> = PolicyKind::FastPf.build();
+    let a = run_federated(&setup, &fed, policy.as_ref());
+    let b = run_federated(&setup, &fed, policy.as_ref());
+    assert_bit_identical("tiered resplit", &a.run, &b.run);
+    assert_eq!(a.membership_events().len(), 1, "the add must fire");
+    // The merged run still accounts inter-tier traffic coherently:
+    // nothing was promoted that was never demoted or SSD-loaded.
+    let s = &a.run.summary;
+    assert!(
+        s.bytes_promoted <= s.bytes_demoted + s.bytes_ssd_loaded,
+        "promoted {} > demoted {} + ssd_loaded {}",
+        s.bytes_promoted,
+        s.bytes_demoted,
+        s.bytes_ssd_loaded,
+    );
+}

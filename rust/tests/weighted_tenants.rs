@@ -3,9 +3,10 @@
 //! the Equation-5 fairness normalization.
 
 use robus::alloc::{Policy, PolicyKind};
-use robus::coordinator::loop_::{Coordinator, CoordinatorConfig};
+use robus::coordinator::loop_::{CommonConfig, CoordinatorConfig};
 use robus::coordinator::metrics::fairness_index;
 use robus::domain::tenant::TenantSet;
+use robus::session::Session;
 use robus::sim::cluster::ClusterConfig;
 use robus::sim::engine::SimEngine;
 use robus::workload::generator::WorkloadGenerator;
@@ -20,13 +21,13 @@ fn weighted_run(kind: PolicyKind, weights: &[f64], seed: u64) -> robus::coordina
     }
     let engine = SimEngine::new(ClusterConfig::default());
     let config = CoordinatorConfig {
-        batch_secs: 40.0,
+        common: CommonConfig {
+            batch_secs: 40.0,
+            seed,
+            ..CommonConfig::default()
+        },
         n_batches: 10,
-        stateful_gamma: None,
-        seed,
-        warm_start: false,
     };
-    let coord = Coordinator::new(&universe, tenants, engine, config);
     let specs: Vec<TenantSpec> = (0..weights.len())
         .map(|i| {
             TenantSpec::new(AccessSpec::g(1 + i), 15.0).with_window(WindowSpec {
@@ -38,7 +39,9 @@ fn weighted_run(kind: PolicyKind, weights: &[f64], seed: u64) -> robus::coordina
         .collect();
     let mut gen = WorkloadGenerator::new(specs, &universe, seed);
     let policy = kind.build();
-    coord.run(&mut gen, policy.as_ref())
+    Session::replay(&universe, tenants, engine)
+        .config(config)
+        .run(&mut gen, policy.as_ref())
 }
 
 /// Weighted runs complete and produce weight-aware fairness indices in

@@ -68,6 +68,13 @@ SPEC = {
             ("warm/cold solve p50 ratio",
              ["warm_start", "p50_warm_over_cold"],
              "lower", "noisy", 0.25),
+            # Tiered retention (RAM+20×SSD vs RAM-only at equal total
+            # bytes, fully simulated → deterministic): the generous
+            # floor only trips when the tiered path collapses — e.g.
+            # SSD residents stop counting as hits at all.
+            ("tiered RAM+SSD/RAM-only throughput",
+             ["tiered", "ram_ssd_over_ram_only"],
+             "higher", "ratio", 0.25),
         ],
     },
     "BENCH_coordinator.json": {
@@ -119,6 +126,12 @@ SPEC = {
             ("federated serving conservation",
              ["federated_serving", "conserved"],
              "true", "bool", 0.0),
+            # 4-shard tiered retention — same contract as the solver
+            # bench's figure, but through the federation's per-shard
+            # tier-budget split and the sharded demotion path.
+            ("tiered 4-shard RAM+SSD/RAM-only throughput",
+             ["tiered", "ram_ssd_over_ram_only"],
+             "higher", "ratio", 0.25),
         ],
     },
 }
